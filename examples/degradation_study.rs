@@ -1,0 +1,56 @@
+//! Mini Figure 2: congestion risk of every engine across degradation
+//! levels on a medium PGFT (same harness shape as the full bench, sized to
+//! finish in seconds).
+//!
+//!     cargo run --release --example degradation_study -- [--nodes 648]
+
+use dmodc::analysis::CongestionAnalyzer;
+use dmodc::prelude::*;
+use dmodc::routing::{route_unchecked, validity};
+use dmodc::util::cli::Args;
+use dmodc::util::table::Table;
+
+fn main() {
+    let p = Args::new("degradation_study", "mini Figure 2")
+        .flag("pgft", "16,9,12;1,4,6;1,1,1", "PGFT parameters (1728 nodes, blocking 4)")
+        .flag("seed", "42", "seed")
+        .flag("rp-samples", "50", "RP samples per point")
+        .switch("scrambled-uuids", "use fabrication-scrambled UUIDs instead of install-order")
+        .parse();
+    // Install-order UUIDs by default: the paper aligns the shift ordering
+    // with Ftree's internal (UUID) order, which on a production fabric
+    // follows physical install order — this is what makes the SP
+    // comparison "fair" (§4).
+    let mut params = PgftParams::parse(p.get("pgft")).expect("pgft");
+    if !p.get_bool("scrambled-uuids") {
+        params = params.with_uuid_mode(dmodc::topology::pgft::UuidMode::Sequential);
+    }
+    let topo = params.build();
+    println!(
+        "topology: {} nodes / {} switches / {} cables",
+        topo.nodes.len(),
+        topo.switches.len(),
+        topo.num_cables()
+    );
+
+    let mut tab = Table::new(&["removed sw", "algo", "valid", "A2A", "RP", "SP"]);
+    let mut rng = Rng::new(p.get_u64("seed"));
+    for amount in [0usize, 2, 8, 24, 48, 96] {
+        let degraded = degrade::remove_random_switches(&topo, &mut rng, amount);
+        for algo in Algo::PAPER {
+            let lft = route_unchecked(algo, &degraded);
+            let valid = validity::check(&degraded, &lft).is_ok();
+            let an = CongestionAnalyzer::new(&degraded, &lft);
+            tab.row(vec![
+                amount.to_string(),
+                algo.name().to_string(),
+                valid.to_string(),
+                an.all_to_all().to_string(),
+                an.random_perm_median(p.get_usize("rp-samples"), 1).to_string(),
+                an.shift_max().to_string(),
+            ]);
+        }
+    }
+    print!("{}", tab.render());
+    println!("(lower is better; the full harness is `cargo bench --bench fig2_congestion`)");
+}

@@ -1,0 +1,67 @@
+//! Runtime offload: run the congestion analysis through the AOT-compiled
+//! XLA artifact (authored in JAX/Pallas at build time, executed via PJRT
+//! from rust) and compare results + throughput against the native engine.
+//!
+//!     make artifacts && cargo run --release --example offload_analysis
+
+use dmodc::analysis::CongestionAnalyzer;
+use dmodc::prelude::*;
+use dmodc::routing::route_unchecked;
+use dmodc::runtime::{AnalysisExecutor, ArtifactRegistry};
+use dmodc::util::table::{fmt_duration, Table};
+use std::time::Instant;
+
+fn main() {
+    let reg = ArtifactRegistry::default_location();
+    if reg.specs.is_empty() {
+        eprintln!("no artifacts found — run `make artifacts` first");
+        std::process::exit(1);
+    }
+    println!("registry: {} artifacts in {}", reg.specs.len(), reg.dir.display());
+
+    let topo = rlft::build(648, 36);
+    let lft = route_unchecked(Algo::Dmodc, &topo);
+    let an = CongestionAnalyzer::new(&topo, &lft);
+    let n = topo.nodes.len();
+
+    // Workload: 128 random permutations.
+    let mut rng = Rng::new(99);
+    let perms: Vec<Vec<u32>> = (0..128).map(|_| rng.permutation(n)).collect();
+
+    // Native baseline.
+    let t0 = Instant::now();
+    let native: Vec<u64> = perms.iter().map(|p| an.perm_max_load(p)).collect();
+    let native_dt = t0.elapsed().as_secs_f64();
+
+    let mut tab = Table::new(&["backend", "total", "per perm", "parity"]);
+    tab.row(vec![
+        "native".into(),
+        fmt_duration(native_dt),
+        fmt_duration(native_dt / perms.len() as f64),
+        "-".into(),
+    ]);
+
+    for variant in ["jnp", "pallas"] {
+        match AnalysisExecutor::bind(&reg, variant, &topo, an.paths()) {
+            Ok(Some(exe)) => {
+                // Warm once (compile happens at bind; first execute warms).
+                let _ = exe.run(&perms[..1]).unwrap();
+                let t0 = Instant::now();
+                let got = exe.run(&perms).unwrap();
+                let dt = t0.elapsed().as_secs_f64();
+                let parity = got == native;
+                tab.row(vec![
+                    format!("artifact/{variant}"),
+                    fmt_duration(dt),
+                    fmt_duration(dt / perms.len() as f64),
+                    if parity { "exact".into() } else { "MISMATCH".into() },
+                ]);
+                assert!(parity, "{variant} artifact diverged from native engine");
+            }
+            Ok(None) => println!("no {variant} artifact matches this topology"),
+            Err(e) => println!("{variant}: bind failed: {e:#}"),
+        }
+    }
+    print!("{}", tab.render());
+    println!("python is build-time only: this binary never imported it.");
+}

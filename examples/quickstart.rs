@@ -1,0 +1,45 @@
+//! Quickstart: build a PGFT, route it with Dmodc, validate, analyze.
+//!
+//!     cargo run --release --example quickstart
+
+use dmodc::analysis::CongestionAnalyzer;
+use dmodc::prelude::*;
+use dmodc::routing::validity;
+
+fn main() {
+    // The paper's Figure 1 example: PGFT(3; 2,2,3; 1,2,2; 1,2,1).
+    let topo = PgftParams::fig1().build();
+    println!(
+        "PGFT(3; 2,2,3; 1,2,2; 1,2,1): {} nodes, {} switches, {} cables",
+        topo.nodes.len(),
+        topo.switches.len(),
+        topo.num_cables()
+    );
+
+    // Route with the paper's algorithm and check the validity condition.
+    let lft = route(Algo::Dmodc, &topo).expect("intact PGFT always routes");
+    let stats = validity::stats(&topo, &lft);
+    println!(
+        "dmodc: {} routes, mean {:.2} hops, up*/down* shaped: {}",
+        stats.routes,
+        stats.mean_hops(),
+        stats.downup_turns == 0
+    );
+
+    // Static congestion-risk analysis (paper §4).
+    let analyzer = CongestionAnalyzer::new(&topo, &lft);
+    println!("A2A congestion risk: {}", analyzer.all_to_all());
+    println!("RP  congestion risk: {}", analyzer.random_perm_median(200, 42));
+    println!("SP  congestion risk: {}", analyzer.shift_max());
+
+    // Break something and watch Dmodc reroute around it.
+    let mut rng = Rng::new(7);
+    let degraded_topo = degrade::remove_random_links(&topo, &mut rng, 3);
+    let lft2 = route(Algo::Dmodc, &degraded_topo).expect("still connected");
+    let analyzer2 = CongestionAnalyzer::new(&degraded_topo, &lft2);
+    println!(
+        "after losing 3 cables: A2A {} SP {}",
+        analyzer2.all_to_all(),
+        analyzer2.shift_max()
+    );
+}

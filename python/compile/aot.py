@@ -1,0 +1,92 @@
+"""AOT lowering: JAX graphs -> HLO text artifacts + registry.
+
+Run once at build time (`make artifacts`); the rust runtime loads the HLO
+text through the PJRT C API and python never appears on the request path.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts are shape-specialized. The registry (registry.tsv) maps
+(n, l, h, p_pad, b, variant) -> file so the rust side can pick a matching
+module; topologies with no matching artifact fall back to the native
+engine (DESIGN.md §2).
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import make_fn, round_up
+from .kernels.congestion import TP
+
+# (name, n_nodes, n_leaves, h_pad, b) — dimensioned to match the rust-side
+# topologies used by examples and the runtime-parity tests:
+#   small72 : PgftParams::small()  = PGFT(3; 4,6,3; 1,2,2; 1,2,1)
+#             18 leaves x 4 nodes, 240 directed ports, max path 5 hops.
+#   rlft648 : rlft::build(648, 36) = 2-level RLFT, 36 leaves x 18 nodes,
+#             1944 directed ports, max path 3 hops.
+# h_pad leaves room for degraded detours; p_pad rounds the reference port
+# count up to the kernel's port-tile multiple.
+CONFIGS = [
+    {"name": "small72", "n": 72, "l": 18, "h": 8, "p_ref": 240, "b": 16},
+    {"name": "rlft648", "n": 648, "l": 36, "h": 8, "p_ref": 1944, "b": 64},
+]
+
+VARIANTS = ["jnp", "pallas"]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_config(cfg: dict, variant: str) -> str:
+    p_pad = round_up(cfg["p_ref"], TP)
+    fn = make_fn(variant, p_pad)
+    paths = jax.ShapeDtypeStruct((cfg["l"], cfg["n"], cfg["h"]), jnp.int32)
+    src_leaf = jax.ShapeDtypeStruct((cfg["n"],), jnp.int32)
+    perms = jax.ShapeDtypeStruct((cfg["b"], cfg["n"]), jnp.int32)
+    lowered = jax.jit(fn).lower(paths, src_leaf, perms)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--variants", default=",".join(VARIANTS))
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    rows = []
+    for cfg in CONFIGS:
+        p_pad = round_up(cfg["p_ref"], TP)
+        for variant in args.variants.split(","):
+            name = f"perm_{variant}_{cfg['name']}"
+            fname = f"{name}.hlo.txt"
+            text = lower_config(cfg, variant)
+            path = os.path.join(args.out_dir, fname)
+            with open(path, "w") as f:
+                f.write(text)
+            rows.append(
+                (name, fname, variant, cfg["n"], cfg["l"], cfg["h"], p_pad, cfg["b"])
+            )
+            print(f"wrote {path} ({len(text)} chars)")
+
+    reg = os.path.join(args.out_dir, "registry.tsv")
+    with open(reg, "w") as f:
+        f.write("name\tfile\tvariant\tn\tl\th\tp_pad\tb\n")
+        for r in rows:
+            f.write("\t".join(str(x) for x in r) + "\n")
+    print(f"wrote {reg} ({len(rows)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

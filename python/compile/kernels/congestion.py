@@ -1,0 +1,83 @@
+"""L1 Pallas kernel: per-permutation port-load histogram.
+
+The congestion hot-loop is a histogram (scatter-add of port loads), an
+irregular memory-bound op on CPU/GPU. The TPU adaptation recasts it as a
+**one-hot expansion + matmul-shaped accumulation**: flow-port indices are
+tiled into VMEM blocks, expanded to a ``(TF, TP)`` one-hot tile, and
+accumulated into a ``(1, TP)`` port-range block with a ``(1, TF) @ (TF, TP)``
+product — the classic MXU-friendly histogram/embedding-bag formulation.
+The BlockSpec grid expresses the HBM->VMEM schedule a CUDA version would
+express with threadblock-privatized shared-memory histograms (see
+DESIGN.md §Hardware-Adaptation).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; real-TPU efficiency is estimated analytically in DESIGN.md.
+Invalid / padded slots are encoded as ``-1`` and never match a port column.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Port-range tile (accumulator block held in VMEM) and flow tile.
+TP = 128
+TF = 512
+
+
+def _hist_kernel(idx_ref, loads_ref, *, tp: int):
+    """Grid = (batch, port_tile, flow_tile); flow_tile is the reduction dim."""
+    pt = pl.program_id(1)
+    ft = pl.program_id(2)
+
+    @pl.when(ft == 0)
+    def _init():
+        loads_ref[...] = jnp.zeros_like(loads_ref)
+
+    idx = idx_ref[...]  # (1, TF) int32 flow-port indices (-1 = masked)
+    base = pt * tp
+    cols = base + jax.lax.broadcasted_iota(jnp.int32, (1, tp), 1)  # (1, TP)
+    onehot = (idx[0, :, None] == cols[0, None, :]).astype(jnp.float32)  # (TF, TP)
+    ones = jnp.ones((1, idx.shape[1]), jnp.float32)
+    # (1, TF) @ (TF, TP) — the MXU-shaped accumulation.
+    loads_ref[...] += ones @ onehot
+
+
+def port_histogram(flow_ports: jax.Array, p_pad: int) -> jax.Array:
+    """Per-batch port-load histogram.
+
+    Args:
+      flow_ports: ``(B, F)`` int32, each row the flattened port ids touched
+        by one permutation's flows; ``-1`` entries are ignored. ``F`` must
+        be a multiple of ``TF``.
+      p_pad: padded port-space size, a multiple of ``TP``.
+
+    Returns:
+      ``(B, p_pad)`` float32 loads (integer-valued; exact below 2^24).
+    """
+    b, f = flow_ports.shape
+    if f % TF != 0:
+        raise ValueError(f"F={f} must be a multiple of TF={TF}")
+    if p_pad % TP != 0:
+        raise ValueError(f"p_pad={p_pad} must be a multiple of TP={TP}")
+    grid = (b, p_pad // TP, f // TF)
+    return pl.pallas_call(
+        functools.partial(_hist_kernel, tp=TP),
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, TF), lambda bi, pt, ft: (bi, ft))],
+        out_specs=pl.BlockSpec((1, TP), lambda bi, pt, ft: (bi, pt)),
+        out_shape=jax.ShapeDtypeStruct((b, p_pad), jnp.float32),
+        interpret=True,
+    )(flow_ports)
+
+
+def vmem_footprint_bytes() -> int:
+    """Analytic VMEM footprint of one grid step (DESIGN.md §Perf): the
+    int32 flow tile, the f32 one-hot tile, and the f32 accumulator block."""
+    return TF * 4 + TF * TP * 4 + TP * 4
+
+
+def mxu_flops_per_step() -> int:
+    """MACs of the (1,TF)@(TF,TP) accumulation per grid step."""
+    return TF * TP

@@ -1,0 +1,55 @@
+"""Pure-numpy oracle for the congestion kernels.
+
+This is the correctness ground truth the pytest suite checks the Pallas
+kernel and the lowered model graphs against. Everything here is written for
+clarity, not speed.
+"""
+
+import numpy as np
+
+
+def port_histogram_ref(flow_ports: np.ndarray, p_pad: int) -> np.ndarray:
+    """Reference for kernels.congestion.port_histogram: (B, F) -> (B, P)."""
+    flow_ports = np.asarray(flow_ports)
+    b = flow_ports.shape[0]
+    out = np.zeros((b, p_pad), np.float32)
+    for i in range(b):
+        idx = flow_ports[i]
+        idx = idx[(idx >= 0) & (idx < p_pad)]
+        out[i] = np.bincount(idx, minlength=p_pad).astype(np.float32)
+    return out
+
+
+def flow_ports_ref(paths: np.ndarray, src_leaf: np.ndarray, perms: np.ndarray,
+                   f_pad: int) -> np.ndarray:
+    """Reference flow-port gather: paths (L, N, H) int32 (-1 padded),
+    src_leaf (N,), perms (B, N) -> (B, f_pad) int32, -1 padded, with
+    fixed-point flows masked out."""
+    paths = np.asarray(paths)
+    perms = np.asarray(perms)
+    _, n, _ = paths.shape
+    b = perms.shape[0]
+    out = np.full((b, f_pad), -1, np.int32)
+    for i in range(b):
+        fp = paths[src_leaf, perms[i]]  # (N, H)
+        mask = perms[i] != np.arange(n)
+        fp = np.where(mask[:, None], fp, -1)
+        flat = fp.reshape(-1)
+        out[i, : flat.size] = flat
+    return out
+
+
+def perm_max_load_ref(paths: np.ndarray, src_leaf: np.ndarray,
+                      perms: np.ndarray, p_pad: int) -> np.ndarray:
+    """End-to-end reference: max port load per permutation, (B,) int32.
+
+    Matches the rust-side convention that the tensor omits the terminal
+    node port (load 1 per flow): results are clamped to >= 1 whenever the
+    permutation has any non-fixed-point."""
+    perms = np.asarray(perms)
+    n, h = np.asarray(paths).shape[1:]
+    fp = flow_ports_ref(paths, src_leaf, perms, n * h)
+    hist = port_histogram_ref(fp, p_pad)
+    maxima = hist.max(axis=1).astype(np.int32)
+    any_flow = (perms != np.arange(n)).any(axis=1)
+    return np.maximum(maxima, any_flow.astype(np.int32))

@@ -1,0 +1,99 @@
+"""L2 JAX graph: batched-permutation congestion analysis.
+
+Given the path-port tensor ``P[l, d, h]`` produced by the rust coordinator
+(destination-based routing ⇒ one path per (source-leaf, destination)), the
+graph gathers each permutation's flow paths, histograms port loads through
+the L1 Pallas kernel, and reduces the per-permutation max load — the
+``min(#srcs, #dsts)`` congestion-risk metric specialized to permutations.
+
+Two variants are lowered to AOT artifacts:
+* ``pallas`` — calls :func:`kernels.congestion.port_histogram` (the one-hot
+  matmul kernel, interpret-mode);
+* ``jnp``    — a scatter-add formulation, the fusion-friendly pure-XLA
+  expression of the same computation.
+
+Shapes are static per artifact: (L, N, H, P_pad, B); see aot.py's registry.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.congestion import TF, port_histogram
+
+
+def _pad_flows(flat: jax.Array, f_pad: int) -> jax.Array:
+    """Pad the flattened flow-port axis to ``f_pad`` with -1."""
+    f = flat.shape[-1]
+    if f == f_pad:
+        return flat
+    return jnp.pad(flat, ((0, 0), (0, f_pad - f)), constant_values=-1)
+
+
+def flow_ports(paths: jax.Array, src_leaf: jax.Array, perms: jax.Array,
+               f_pad: int) -> jax.Array:
+    """Gather flow paths for each permutation: (B, f_pad) int32, -1 padded.
+
+    Fixed points (``perm[s] == s``: no traffic) are masked to -1.
+    """
+    paths = jnp.asarray(paths)
+    src_leaf = jnp.asarray(src_leaf)
+    perms = jnp.asarray(perms)
+    n = paths.shape[1]
+
+    def one(perm):
+        fp = paths[src_leaf, perm]  # (N, H) gather
+        mask = perm != jnp.arange(n, dtype=perm.dtype)
+        return jnp.where(mask[:, None], fp, -1).reshape(-1)
+
+    return _pad_flows(jax.vmap(one)(perms), f_pad)
+
+
+def round_up(x: int, to: int) -> int:
+    return (x + to - 1) // to * to
+
+
+def _clamp_any_flow(maxima, perms):
+    """Flows whose stored port list is empty (the rust tensor trims the
+    terminal node port) still put load 1 on that port: clamp each batch
+    entry to >= 1 whenever the permutation has any non-fixed-point."""
+    n = perms.shape[1]
+    any_flow = jnp.any(perms != jnp.arange(n, dtype=perms.dtype), axis=1)
+    return jnp.maximum(maxima, any_flow.astype(maxima.dtype))
+
+
+def perm_max_load_pallas(paths, src_leaf, perms, *, p_pad: int):
+    """Max port load per permutation via the Pallas histogram kernel."""
+    n, h = paths.shape[1], paths.shape[2]
+    f_pad = round_up(n * h, TF)
+    fp = flow_ports(paths, src_leaf, perms, f_pad)
+    loads = port_histogram(fp, p_pad)
+    maxima = jnp.max(loads, axis=1).astype(jnp.int32)
+    return _clamp_any_flow(maxima, jnp.asarray(perms))
+
+
+def perm_max_load_jnp(paths, src_leaf, perms, *, p_pad: int):
+    """Same computation as a pure-XLA scatter-add (fusion reference)."""
+    n, h = paths.shape[1], paths.shape[2]
+    fp = flow_ports(paths, src_leaf, perms, n * h)
+
+    def one(row):
+        valid = row >= 0
+        idx = jnp.where(valid, row, 0)
+        loads = jnp.zeros((p_pad,), jnp.float32).at[idx].add(
+            valid.astype(jnp.float32)
+        )
+        return jnp.max(loads)
+
+    maxima = jax.vmap(one)(fp).astype(jnp.int32)
+    return _clamp_any_flow(maxima, jnp.asarray(perms))
+
+
+def make_fn(variant: str, p_pad: int):
+    """Bind an artifact entry point for lowering (returns a 1-tuple, the
+    convention the rust loader unwraps with ``to_tuple1``)."""
+    inner = {"pallas": perm_max_load_pallas, "jnp": perm_max_load_jnp}[variant]
+
+    def fn(paths, src_leaf, perms):
+        return (inner(paths, src_leaf, perms, p_pad=p_pad),)
+
+    return fn

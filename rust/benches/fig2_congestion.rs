@@ -1,0 +1,133 @@
+//! Figure 2 harness: maximum congestion risk under random topology
+//! degradation, for every engine × pattern × equipment kind.
+//!
+//! The paper degrades an 8640-node blocking-4 PGFT with hundreds of
+//! log-uniform throws and reports A2A / RP(1000-perm median) / SP(max over
+//! all shifts) in log-log scale. Default scale here is a 1728-node
+//! blocking-4 PGFT with fewer throws so `cargo bench` finishes in minutes;
+//! environment knobs reproduce the full figure:
+//!
+//!   FIG2_FULL=1        use PGFT(3; 24,15,24; 1,6,8; 1,1,1) (8640 nodes)
+//!   FIG2_THROWS=200    throws per equipment kind
+//!   FIG2_RP=1000       RP samples
+//!   FIG2_SEED=42
+//!
+//! Output: one row per (kind, throw, algo) plus an octave-binned summary
+//! (geometric means — the log-log reading of the paper's plot), and CSVs
+//! under bench_results/.
+
+use dmodc::analysis::CongestionAnalyzer;
+use dmodc::prelude::*;
+use dmodc::routing::{route_unchecked, validity};
+use dmodc::util::rng::log_uniform_amount;
+use dmodc::util::table::Table;
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let full = std::env::var("FIG2_FULL").is_ok();
+    let mut params = if full {
+        PgftParams::paper_8640()
+    } else {
+        PgftParams::parse("16,9,12;1,4,6;1,1,1").unwrap()
+    };
+    // Install-order UUIDs: aligns the shift ordering with Ftree's internal
+    // order, the paper's fairness condition for SP (FIG2_SCRAMBLED=1 for
+    // fabrication-scrambled UUIDs).
+    if std::env::var("FIG2_SCRAMBLED").is_err() {
+        params = params.with_uuid_mode(dmodc::topology::pgft::UuidMode::Sequential);
+    }
+    let throws = env_usize("FIG2_THROWS", if full { 100 } else { 24 });
+    let rp_samples = env_usize("FIG2_RP", if full { 1000 } else { 100 });
+    let seed = env_usize("FIG2_SEED", 42) as u64;
+    let topo = params.build();
+    println!(
+        "fig2: {} nodes, {} switches, {} cables; {throws} throws/kind, RP={rp_samples}",
+        topo.nodes.len(),
+        topo.switches.len(),
+        topo.num_cables()
+    );
+
+    let mut rows = Table::new(&[
+        "kind", "removed", "algo", "valid", "A2A", "RP", "SP",
+    ]);
+    // (kind, octave, algo) -> (sum of ln(risk), count) per pattern.
+    let mut summary: std::collections::BTreeMap<(String, u32, &'static str), ([f64; 3], usize)> =
+        std::collections::BTreeMap::new();
+
+    let mut rng = Rng::new(seed);
+    for kind in [Equipment::Switches, Equipment::Links] {
+        let kind_name = format!("{kind:?}").to_lowercase();
+        let max = match kind {
+            Equipment::Switches => degrade::removable_switches(&topo).len(),
+            Equipment::Links => degrade::cables(&topo).len(),
+        };
+        for _ in 0..throws {
+            let amount = log_uniform_amount(&mut rng, max);
+            let degraded = match kind {
+                Equipment::Switches => degrade::remove_random_switches(&topo, &mut rng, amount),
+                Equipment::Links => degrade::remove_random_links(&topo, &mut rng, amount),
+            };
+            for algo in Algo::PAPER {
+                let lft = route_unchecked(algo, &degraded);
+                let valid = validity::check(&degraded, &lft).is_ok();
+                if !valid {
+                    rows.row(vec![
+                        kind_name.clone(),
+                        amount.to_string(),
+                        algo.name().into(),
+                        "false".into(),
+                        "-".into(),
+                        "-".into(),
+                        "-".into(),
+                    ]);
+                    continue;
+                }
+                let an = CongestionAnalyzer::new(&degraded, &lft);
+                let a2a = an.all_to_all();
+                let rp = an.random_perm_median(rp_samples, seed ^ amount as u64);
+                let sp = an.shift_max();
+                rows.row(vec![
+                    kind_name.clone(),
+                    amount.to_string(),
+                    algo.name().into(),
+                    "true".into(),
+                    a2a.to_string(),
+                    rp.to_string(),
+                    sp.to_string(),
+                ]);
+                let octave = (amount as f64).log2().max(0.0).floor() as u32;
+                let e = summary
+                    .entry((kind_name.clone(), octave, algo.name()))
+                    .or_insert(([0.0; 3], 0));
+                for (slot, v) in e.0.iter_mut().zip([a2a, rp, sp]) {
+                    *slot += (v.max(1) as f64).ln();
+                }
+                e.1 += 1;
+            }
+        }
+    }
+    let _ = rows.write_csv("bench_results/fig2.csv");
+    print!("{}", rows.render());
+
+    let mut sum_tab = Table::new(&[
+        "kind", "removed≈", "algo", "gm A2A", "gm RP", "gm SP", "n",
+    ]);
+    for ((kind, octave, algo), (lns, count)) in &summary {
+        let gm = |i: usize| format!("{:.1}", (lns[i] / *count as f64).exp());
+        sum_tab.row(vec![
+            kind.clone(),
+            format!("2^{octave}"),
+            algo.to_string(),
+            gm(0),
+            gm(1),
+            gm(2),
+            count.to_string(),
+        ]);
+    }
+    let _ = sum_tab.write_csv("bench_results/fig2_summary.csv");
+    print!("{}", sum_tab.render());
+    println!("rows → bench_results/fig2.csv, summary → bench_results/fig2_summary.csv");
+}

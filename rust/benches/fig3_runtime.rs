@@ -1,0 +1,61 @@
+//! Figure 3 harness: full routing-algorithm runtime vs cluster size.
+//!
+//! The paper sweeps RLFT topologies up to many tens of thousands of nodes
+//! on a Xeon E5-2680v3 and shows Dmodc 1–2 orders of magnitude faster than
+//! the OpenSM engines, with SSSP slowest. We regenerate the same series
+//! (absolute numbers shift with the host, orderings should not; the
+//! RLFT construction's non-monotonic switch counts also reproduce the
+//! "local erraticness" note).
+//!
+//!   FIG3_MAX=20736       largest node count
+//!   FIG3_MAX_SLOW=5184   cap for the O(N·E log V)-ish engines
+//!   FIG3_RADIX=36        switch radix
+//!   BENCH_ITERS=3        timing repetitions
+
+use dmodc::prelude::*;
+use dmodc::routing::route_unchecked;
+use dmodc::util::table::{fmt_duration, Table};
+use dmodc::util::time::bench;
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let max = env_usize("FIG3_MAX", 20_736);
+    let max_slow = env_usize("FIG3_MAX_SLOW", 5_184);
+    let radix = env_usize("FIG3_RADIX", 36) as u32;
+    let sizes: Vec<usize> = [72, 162, 324, 648, 1296, 2592, 5184, 10368, 20736, 41472]
+        .into_iter()
+        .filter(|&n| n <= max)
+        .collect();
+
+    let mut tab = Table::new(&[
+        "nodes", "switches", "dmodc", "ftree", "updn", "minhop", "sssp",
+    ]);
+    let mut csv = Table::new(&["nodes", "switches", "algo", "seconds"]);
+    for &n in &sizes {
+        let topo = rlft::build(n, radix);
+        let mut cells = vec![n.to_string(), topo.switches.len().to_string()];
+        for algo in [Algo::Dmodc, Algo::Ftree, Algo::Updn, Algo::MinHop, Algo::Sssp] {
+            let slow = matches!(algo, Algo::Ftree | Algo::Updn | Algo::MinHop | Algo::Sssp);
+            if slow && n > max_slow {
+                cells.push("-".into());
+                continue;
+            }
+            let s = bench(0, 3, || route_unchecked(algo, &topo));
+            cells.push(fmt_duration(s.median));
+            csv.row(vec![
+                n.to_string(),
+                topo.switches.len().to_string(),
+                algo.name().into(),
+                format!("{:.6}", s.median),
+            ]);
+        }
+        tab.row(cells);
+        println!("… {n} nodes done");
+    }
+    let _ = csv.write_csv("bench_results/fig3.csv");
+    print!("{}", tab.render());
+    println!("(median of 3; '-' = skipped above FIG3_MAX_SLOW; CSV → bench_results/fig3.csv)");
+}

@@ -1,0 +1,129 @@
+//! Hot-path micro/meso benches (PERF-L3 in DESIGN.md): the pieces the
+//! performance pass profiles and optimizes.
+//!
+//!   HOTPATH_FULL=1   benchmark at the full 8640-node scale
+//!   BENCH_ITERS=n    repetitions per measurement
+
+use dmodc::analysis::congestion::PermEngine;
+use dmodc::analysis::paths::PathTensor;
+use dmodc::analysis::{a2a, CongestionAnalyzer};
+use dmodc::fabric::{events, FabricManager, ManagerConfig};
+use dmodc::prelude::*;
+use dmodc::routing::dmodc::Router;
+use dmodc::routing::{common, route_unchecked};
+use dmodc::runtime::{AnalysisExecutor, ArtifactRegistry};
+use dmodc::util::table::{fmt_duration, Table};
+use dmodc::util::time::bench;
+
+fn main() {
+    let full = std::env::var("HOTPATH_FULL").is_ok();
+    let params = if full {
+        PgftParams::paper_8640()
+    } else {
+        PgftParams::parse("16,9,12;1,4,6;1,1,1").unwrap()
+    };
+    let topo = params.build();
+    println!(
+        "hotpath on {} nodes / {} switches (threads={})",
+        topo.nodes.len(),
+        topo.switches.len(),
+        dmodc::util::par::num_threads()
+    );
+    let mut tab = Table::new(&["stage", "median", "min"]);
+    let mut add = |name: &str, s: dmodc::util::time::Sample| {
+        tab.row(vec![
+            name.to_string(),
+            fmt_duration(s.median),
+            fmt_duration(s.min),
+        ]);
+    };
+
+    // Dmodc pipeline stages.
+    add("dmodc: prep (groups)", bench(1, 5, || common::Prep::new(&topo)));
+    let prep = common::Prep::new(&topo);
+    add(
+        "dmodc: costs+dividers (Alg 1)",
+        bench(1, 5, || common::costs(&topo, &prep, common::DividerReduction::Max)),
+    );
+    let router = Router::new(&topo, Default::default());
+    add(
+        "dmodc: NIDs (Alg 2)",
+        bench(1, 5, || {
+            dmodc::routing::dmodc::topological_nids(&topo, &router.prep, &router.costs)
+        }),
+    );
+    add("dmodc: routes (eqs 1-4)", bench(1, 5, || router.lft(&topo)));
+    add("dmodc: full reroute", bench(1, 5, || route_unchecked(Algo::Dmodc, &topo)));
+
+    // Analysis stages.
+    let lft = route_unchecked(Algo::Dmodc, &topo);
+    add("analysis: path tensor", bench(1, 5, || PathTensor::build(&topo, &lft)));
+    let pt = PathTensor::build(&topo, &lft);
+    let engine = PermEngine::new(&topo, &pt);
+    let n = topo.nodes.len();
+    add(
+        "analysis: 100 random perms",
+        bench(1, 3, || engine.random_perm_median(100, 1)),
+    );
+    add(
+        "analysis: SP all shifts",
+        bench(0, 3, || engine.shift_series().len()),
+    );
+    add("analysis: A2A exact", bench(0, 3, || a2a::all_to_all(&topo, &pt)));
+
+    // Fabric manager end-to-end reaction (one switch fault).
+    let victim = topo
+        .switches
+        .iter()
+        .find(|s| s.level == 2)
+        .map(|s| s.uuid)
+        .unwrap();
+    let mut mgr = FabricManager::new(topo.clone(), ManagerConfig::default());
+    add(
+        "fabric: fault reaction e2e",
+        bench(1, 3, || {
+            mgr.apply(&events::Event {
+                at_ms: 1,
+                kind: events::EventKind::SwitchDown(victim),
+            });
+            mgr.apply(&events::Event {
+                at_ms: 2,
+                kind: events::EventKind::SwitchUp(victim),
+            })
+            .reroute_secs
+        }),
+    );
+
+    // AOT artifact dispatch (648-node registry shape), when available.
+    let reg = ArtifactRegistry::default_location();
+    if !reg.specs.is_empty() && !full {
+        let t648 = rlft::build(648, 36);
+        let l648 = route_unchecked(Algo::Dmodc, &t648);
+        let an = CongestionAnalyzer::new(&t648, &l648);
+        for variant in ["jnp", "pallas"] {
+            if let Ok(Some(exe)) = AnalysisExecutor::bind(&reg, variant, &t648, an.paths()) {
+                let mut rng = Rng::new(3);
+                let perms: Vec<Vec<u32>> =
+                    (0..exe.spec().b).map(|_| rng.permutation(648)).collect();
+                let _ = exe.run(&perms[..1]); // warm
+                add(
+                    &format!("runtime: {variant} artifact batch({})", exe.spec().b),
+                    bench(0, 3, || exe.run(&perms).unwrap().len()),
+                );
+            }
+        }
+        add(
+            "runtime: native batch(64) @648",
+            bench(0, 3, || {
+                let mut rng = Rng::new(3);
+                (0..64)
+                    .map(|_| an.perm_max_load(&rng.permutation(648)))
+                    .max()
+            }),
+        );
+    }
+
+    let _ = n;
+    let _ = tab.write_csv("bench_results/hotpath.csv");
+    print!("{}", tab.render());
+}

@@ -1,0 +1,180 @@
+//! Exact all-to-all congestion risk.
+//!
+//! A2A is the one pattern where `min(#srcs, #dsts)` differs from plain port
+//! load: a port carries flows from many sources to many destinations and
+//! the metric needs *distinct* counts ([15]'s network-caused congestion
+//! approximation). Distinctness is tracked at (port, leaf) granularity —
+//! destination-based routing means all nodes of a leaf share each path —
+//! with an exact correction for the only subtle case: a (port, leaf) pair
+//! whose flows all target a single destination `d` must not count `d`
+//! itself as a source when `d` lives on that leaf.
+
+use super::paths::{PathTensor, NO_PORT};
+use crate::topology::Topology;
+
+/// The paper's A2A metric: `max_p min(#srcs(p), #dsts(p))`.
+pub fn all_to_all(topo: &Topology, paths: &PathTensor) -> u64 {
+    let np = topo.num_ports();
+    let nl = paths.num_leaves;
+    let nn = paths.num_nodes;
+    // Per-(port, leaf): 0 = untouched, 1 = single destination (in
+    // `last_d`), 2 = two or more distinct destinations.
+    let mut cnt2 = vec![0u8; np * nl];
+    let mut last_d = vec![0u32; np * nl];
+    // Per-port distinct destination count, with a visit stamp per dst.
+    let mut dst_cnt = vec![0u32; np];
+    let mut stamp = vec![u32::MAX; np];
+
+    let mut nodes_per_leaf = vec![0u64; nl];
+    for n in &topo.nodes {
+        nodes_per_leaf[paths.leaf_index[n.leaf as usize] as usize] += 1;
+    }
+    let dst_leaf: Vec<u32> = topo
+        .nodes
+        .iter()
+        .map(|n| paths.leaf_index[n.leaf as usize])
+        .collect();
+
+    for d in 0..nn as u32 {
+        let ld = dst_leaf[d as usize];
+        for li in 0..nl as u32 {
+            let srcs_here =
+                nodes_per_leaf[li as usize] - u64::from(li == ld);
+            if srcs_here == 0 {
+                continue;
+            }
+            for &p in paths.path(li, d) {
+                if p == NO_PORT {
+                    break;
+                }
+                let pi = p as usize;
+                let idx = pi * nl + li as usize;
+                match cnt2[idx] {
+                    0 => {
+                        cnt2[idx] = 1;
+                        last_d[idx] = d;
+                    }
+                    1 if last_d[idx] != d => cnt2[idx] = 2,
+                    _ => {}
+                }
+                if stamp[pi] != d {
+                    stamp[pi] = d;
+                    dst_cnt[pi] += 1;
+                }
+            }
+        }
+    }
+
+    // The trimmed terminal node ports contribute min(#srcs, 1) = 1 each.
+    let mut best = u64::from(nn >= 2);
+    for p in 0..np {
+        if dst_cnt[p] == 0 {
+            continue;
+        }
+        let mut srcs = 0u64;
+        for li in 0..nl {
+            let idx = p * nl + li;
+            srcs += match cnt2[idx] {
+                0 => 0,
+                2 => nodes_per_leaf[li],
+                _ => {
+                    // Single destination: exclude it from its own leaf.
+                    let d = last_d[idx];
+                    nodes_per_leaf[li] - u64::from(dst_leaf[d as usize] == li as u32)
+                }
+            };
+        }
+        best = best.max(srcs.min(dst_cnt[p] as u64));
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::routing::dmodc;
+    use crate::topology::pgft::PgftParams;
+    use crate::topology::{Builder, fab_uuid};
+
+    #[test]
+    fn two_leaves_one_spine_exact() {
+        // 2 leaves × 2 nodes, single spine with one link per leaf: the
+        // leaf→spine link carries flows from 2 srcs to 2 dsts → min = 2.
+        let mut b = Builder::new();
+        let l0 = b.add_switch(fab_uuid(1, 0), 0);
+        let l1 = b.add_switch(fab_uuid(1, 1), 0);
+        let s = b.add_switch(fab_uuid(2, 0), 1);
+        b.connect(l0, s, 1);
+        b.connect(l1, s, 1);
+        for i in 0..2 {
+            b.attach_node(l0, fab_uuid(9, i));
+        }
+        for i in 2..4 {
+            b.attach_node(l1, fab_uuid(9, i));
+        }
+        let t = b.finish();
+        let lft = dmodc::route(&t, &Default::default());
+        let pt = PathTensor::build(&t, &lft);
+        assert_eq!(all_to_all(&t, &pt), 2);
+    }
+
+    #[test]
+    fn single_leaf_risk_is_one() {
+        // All nodes on one switch: each flow only crosses the destination's
+        // node port, where #dsts = 1 → metric 1.
+        let mut b = Builder::new();
+        let l = b.add_switch(1, 0);
+        for i in 0..5 {
+            b.attach_node(l, fab_uuid(9, i));
+        }
+        let t = b.finish();
+        let lft = dmodc::route(&t, &Default::default());
+        let pt = PathTensor::build(&t, &lft);
+        assert_eq!(all_to_all(&t, &pt), 1);
+    }
+
+    #[test]
+    fn full_pgft_risk_bounded_by_blocking() {
+        // fig1 is 1:1-provisioned at the leaf level (4 uplinks, 2 nodes);
+        // A2A risk must stay well below the node count.
+        let t = PgftParams::fig1().build();
+        let lft = dmodc::route(&t, &Default::default());
+        let pt = PathTensor::build(&t, &lft);
+        let risk = all_to_all(&t, &pt);
+        assert!(risk >= 1);
+        assert!(risk < t.nodes.len() as u64 / 2, "risk {risk}");
+    }
+
+    #[test]
+    fn matches_bruteforce_on_tiny() {
+        // Brute-force reference: enumerate all flows, count distinct
+        // srcs/dsts per port.
+        use std::collections::HashSet;
+        let t = PgftParams::fig1().build();
+        let lft = dmodc::route(&t, &Default::default());
+        let pt = PathTensor::build(&t, &lft);
+        let nn = t.nodes.len() as u32;
+        let mut srcs: Vec<HashSet<u32>> = vec![HashSet::new(); t.num_ports()];
+        let mut dsts: Vec<HashSet<u32>> = vec![HashSet::new(); t.num_ports()];
+        for s in 0..nn {
+            for d in 0..nn {
+                if s == d {
+                    continue;
+                }
+                let li = pt.leaf_index[t.nodes[s as usize].leaf as usize];
+                for &p in pt.path(li, d) {
+                    if p == NO_PORT {
+                        break;
+                    }
+                    srcs[p as usize].insert(s);
+                    dsts[p as usize].insert(d);
+                }
+            }
+        }
+        let brute = (0..t.num_ports())
+            .map(|p| srcs[p].len().min(dsts[p].len()) as u64)
+            .max()
+            .unwrap();
+        assert_eq!(all_to_all(&t, &pt), brute);
+    }
+}

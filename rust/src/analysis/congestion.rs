@@ -1,0 +1,198 @@
+//! Permutation congestion engine.
+//!
+//! For permutation patterns every flow has a distinct source and a distinct
+//! destination, so the paper's `min(#srcs, #dsts)` per port equals the
+//! number of flows crossing the port — the *max port load*. This module
+//! computes per-permutation max loads from the [`PathTensor`], in parallel
+//! across permutations.
+
+use super::paths::{PathTensor, NO_PORT};
+use crate::topology::Topology;
+use crate::util::par::parallel_map;
+use crate::util::rng::Rng;
+
+/// Shared immutable state for permutation evaluations.
+pub struct PermEngine<'p> {
+    paths: &'p PathTensor,
+    /// node -> leaf index in the tensor.
+    src_leaf: Vec<u32>,
+    num_ports: usize,
+}
+
+impl<'p> PermEngine<'p> {
+    pub fn new(topo: &Topology, paths: &'p PathTensor) -> Self {
+        let src_leaf = topo
+            .nodes
+            .iter()
+            .map(|n| paths.leaf_index[n.leaf as usize])
+            .collect();
+        Self {
+            paths,
+            src_leaf,
+            num_ports: topo.num_ports(),
+        }
+    }
+
+    /// Max port load under flows `(i, dst(i))`, skipping fixed points.
+    /// `loads` is a scratch buffer (reused across calls).
+    ///
+    /// Perf note (EXPERIMENTS.md §Perf): counters are u16 — a permutation
+    /// puts at most N < 65536 flows on a port, and the halved footprint
+    /// keeps the whole histogram in L1 for fabrics up to ~16k directed
+    /// ports, which dominates the all-shifts SP scan.
+    pub fn max_load_fn(&self, dst: impl Fn(usize) -> u32, loads: &mut Vec<u16>) -> u64 {
+        loads.clear();
+        loads.resize(self.num_ports, 0);
+        let n = self.paths.num_nodes;
+        debug_assert!(n < u16::MAX as usize);
+        let mut max = 0u16;
+        let mut any_flow = false;
+        for s in 0..n {
+            let d = dst(s);
+            if d as usize == s {
+                continue;
+            }
+            any_flow = true;
+            let row = self.paths.path(self.src_leaf[s], d);
+            for &p in row {
+                if p == NO_PORT {
+                    break;
+                }
+                let l = &mut loads[p as usize];
+                *l += 1;
+                if *l > max {
+                    max = *l;
+                }
+            }
+        }
+        // The trimmed terminal node port carries load exactly 1 per flow.
+        if any_flow {
+            max = max.max(1);
+        }
+        max as u64
+    }
+
+    /// Max port load for an explicit destination vector.
+    pub fn max_load(&self, dsts: &[u32], loads: &mut Vec<u16>) -> u64 {
+        assert_eq!(dsts.len(), self.paths.num_nodes);
+        self.max_load_fn(|s| dsts[s], loads)
+    }
+
+    /// Median of per-permutation max loads over `samples` random
+    /// permutations (the paper's RP metric, 1000 samples).
+    pub fn random_perm_median(&self, samples: usize, seed: u64) -> u64 {
+        let n = self.paths.num_nodes;
+        let mut maxima = parallel_map(samples, |i| {
+            let mut rng = Rng::new(seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+            let perm = rng.permutation(n);
+            let mut loads = Vec::new();
+            self.max_load(&perm, &mut loads)
+        });
+        maxima.sort_unstable();
+        maxima[maxima.len() / 2]
+    }
+
+    /// Per-shift max loads for all `N-1` cyclic shifts (SP series).
+    pub fn shift_series(&self) -> Vec<u64> {
+        let n = self.paths.num_nodes;
+        parallel_map(n - 1, |ki| {
+            let k = ki + 1;
+            let mut loads = Vec::new();
+            self.max_load_fn(|s| ((s + k) % n) as u32, &mut loads)
+        })
+    }
+
+    /// The paper's SP metric: maximum over all shifts.
+    pub fn shift_max(&self) -> u64 {
+        self.shift_series().into_iter().max().unwrap_or(0)
+    }
+
+    /// SP over an explicit node ordering: position `i` holds node
+    /// `order[i]`, and shift-`k` sends `order[i] → order[(i+k) mod n]`.
+    /// Used to evaluate how shift-friendly a *published* NID ordering is
+    /// (the paper: "shift patterns which respect such an ordering").
+    pub fn shift_max_ordered(&self, order: &[u32]) -> u64 {
+        let n = self.paths.num_nodes;
+        assert_eq!(order.len(), n);
+        let mut pos = vec![0u32; n];
+        for (i, &node) in order.iter().enumerate() {
+            pos[node as usize] = i as u32;
+        }
+        (0..n - 1)
+            .map(|ki| {
+                let k = ki + 1;
+                let mut loads = Vec::new();
+                self.max_load_fn(
+                    |s| order[(pos[s] as usize + k) % n] as u32,
+                    &mut loads,
+                )
+            })
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::routing::dmodc;
+    use crate::topology::pgft::PgftParams;
+
+    fn engine(t: &Topology) -> (PathTensor, Vec<u32>) {
+        let lft = dmodc::route(t, &Default::default());
+        let pt = PathTensor::build(t, &lft);
+        let src_leaf = t
+            .nodes
+            .iter()
+            .map(|n| pt.leaf_index[n.leaf as usize])
+            .collect();
+        (pt, src_leaf)
+    }
+
+    #[test]
+    fn identity_perm_is_zero() {
+        let t = PgftParams::fig1().build();
+        let (pt, _) = engine(&t);
+        let e = PermEngine::new(&t, &pt);
+        let mut loads = Vec::new();
+        let ident: Vec<u32> = (0..t.nodes.len() as u32).collect();
+        assert_eq!(e.max_load(&ident, &mut loads), 0);
+    }
+
+    #[test]
+    fn single_flow_load_one() {
+        let t = PgftParams::fig1().build();
+        let (pt, _) = engine(&t);
+        let e = PermEngine::new(&t, &pt);
+        let mut dst: Vec<u32> = (0..t.nodes.len() as u32).collect();
+        dst.swap(0, 11); // one exchanged pair, everything else fixed
+        let mut loads = Vec::new();
+        assert_eq!(e.max_load(&dst, &mut loads), 1);
+    }
+
+    #[test]
+    fn shift_on_intact_pgft_is_optimal() {
+        // Dmodc on an intact PGFT must be non-blocking for shifts that
+        // respect the topological order when the tree is fully provisioned.
+        // fig1 has w2*p2 = 4 uplinks for m1*... = 2 nodes per leaf: enough
+        // capacity, so per-shift max load should be 1 for intra... — at
+        // minimum, the SP max must be small and never exceed the leaf size.
+        let t = PgftParams::fig1().build();
+        let (pt, _) = engine(&t);
+        let e = PermEngine::new(&t, &pt);
+        let series = e.shift_series();
+        assert_eq!(series.len(), t.nodes.len() - 1);
+        let max = *series.iter().max().unwrap();
+        assert!(max <= 2, "SP max load on intact fig1 should be ≤ 2, got {max}");
+    }
+
+    #[test]
+    fn rp_median_deterministic_by_seed() {
+        let t = PgftParams::fig1().build();
+        let (pt, _) = engine(&t);
+        let e = PermEngine::new(&t, &pt);
+        let a = e.random_perm_median(51, 7);
+        let b = e.random_perm_median(51, 7);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,137 @@
+//! Static congestion-risk analysis of forwarding tables (paper §4).
+//!
+//! The metric ([15]) counts, per directed port, `min(#srcs, #dsts)` over
+//! the flows of a communication pattern that cross it, and reports the
+//! maximum over ports. "Such simplified performance models faithfully
+//! reflect comparative behaviour, though the absolute values measured are
+//! not good estimators of real throughput" — exactly how we use it.
+
+pub mod a2a;
+pub mod congestion;
+pub mod paths;
+pub mod patterns;
+
+use crate::routing::Lft;
+use crate::topology::Topology;
+use congestion::PermEngine;
+use paths::PathTensor;
+use patterns::Pattern;
+
+/// Facade bundling the path tensor with the pattern engines.
+pub struct CongestionAnalyzer<'a> {
+    topo: &'a Topology,
+    paths: PathTensor,
+}
+
+impl<'a> CongestionAnalyzer<'a> {
+    /// Build the analyzer (traces every (leaf, destination) route once).
+    pub fn new(topo: &'a Topology, lft: &Lft) -> Self {
+        Self {
+            topo,
+            paths: PathTensor::build(topo, lft),
+        }
+    }
+
+    /// Routes that failed to trace (should be 0 on a valid routing).
+    pub fn broken_routes(&self) -> usize {
+        self.paths.broken_routes
+    }
+
+    /// The underlying path tensor (input of the AOT analysis artifact).
+    pub fn paths(&self) -> &PathTensor {
+        &self.paths
+    }
+
+    /// Exact A2A congestion risk.
+    pub fn all_to_all(&self) -> u64 {
+        a2a::all_to_all(self.topo, &self.paths)
+    }
+
+    /// Max port load of one explicit permutation.
+    pub fn perm_max_load(&self, dsts: &[u32]) -> u64 {
+        let e = PermEngine::new(self.topo, &self.paths);
+        let mut loads = Vec::new();
+        e.max_load(dsts, &mut loads)
+    }
+
+    /// Median max-load over random permutations (paper RP).
+    pub fn random_perm_median(&self, samples: usize, seed: u64) -> u64 {
+        PermEngine::new(self.topo, &self.paths).random_perm_median(samples, seed)
+    }
+
+    /// Max max-load over all cyclic shifts (paper SP).
+    pub fn shift_max(&self) -> u64 {
+        PermEngine::new(self.topo, &self.paths).shift_max()
+    }
+
+    /// Per-shift series (for plotting / the SP artifact parity tests).
+    pub fn shift_series(&self) -> Vec<u64> {
+        PermEngine::new(self.topo, &self.paths).shift_series()
+    }
+
+    /// SP over an explicit published node ordering (see
+    /// [`PermEngine::shift_max_ordered`]).
+    pub fn shift_max_ordered(&self, order: &[u32]) -> u64 {
+        PermEngine::new(self.topo, &self.paths).shift_max_ordered(order)
+    }
+
+    /// Evaluate a [`Pattern`] with the paper's reduction (A2A: exact value,
+    /// RP: median of maxima, SP: max over shifts).
+    pub fn evaluate(&self, pattern: Pattern, seed: u64) -> u64 {
+        match pattern {
+            Pattern::AllToAll => self.all_to_all(),
+            Pattern::RandomPermutation { samples } => {
+                self.random_perm_median(samples, seed)
+            }
+            Pattern::ShiftPermutation => self.shift_max(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::routing::{route_unchecked, Algo};
+    use crate::topology::pgft::PgftParams;
+
+    #[test]
+    fn facade_consistency() {
+        let t = PgftParams::fig1().build();
+        let lft = route_unchecked(Algo::Dmodc, &t);
+        let an = CongestionAnalyzer::new(&t, &lft);
+        assert_eq!(an.broken_routes(), 0);
+        assert_eq!(an.evaluate(Pattern::AllToAll, 0), an.all_to_all());
+        assert_eq!(
+            an.evaluate(Pattern::ShiftPermutation, 0),
+            an.shift_max()
+        );
+        assert_eq!(
+            an.evaluate(Pattern::RandomPermutation { samples: 11 }, 3),
+            an.random_perm_median(11, 3)
+        );
+    }
+
+    #[test]
+    fn all_algorithms_analyzable() {
+        let t = PgftParams::fig1().build();
+        for algo in Algo::ALL {
+            let lft = route_unchecked(algo, &t);
+            let an = CongestionAnalyzer::new(&t, &lft);
+            assert_eq!(an.broken_routes(), 0, "{}", algo.name());
+            assert!(an.all_to_all() >= 1, "{}", algo.name());
+            assert!(an.shift_max() >= 1, "{}", algo.name());
+        }
+    }
+
+    #[test]
+    fn sp_at_least_rp_at_least_one_on_blocking_tree() {
+        // On a blocking PGFT (small(): 4 nodes, 2 up-groups per leaf) the
+        // SP max must be >= any single permutation's load lower bound.
+        let t = PgftParams::small().build();
+        let lft = route_unchecked(Algo::Dmodc, &t);
+        let an = CongestionAnalyzer::new(&t, &lft);
+        let sp = an.shift_max();
+        let rp = an.random_perm_median(31, 1);
+        assert!(sp >= 1 && rp >= 1);
+    }
+}

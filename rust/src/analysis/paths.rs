@@ -1,0 +1,215 @@
+//! Path-port tensor: for every (source leaf, destination node) flow, the
+//! sequence of global directed-port ids its route traverses.
+//!
+//! Because routing is destination-based, every node on a leaf shares the
+//! same switch-path to a destination — so `leaves × nodes` paths describe
+//! *all* `nodes × nodes` flows. The tensor is the shared substrate of the
+//! native congestion engine and the AOT-compiled analysis artifacts (it is
+//! exactly the `P[l, d, h]` input of the L2 JAX graph).
+//!
+//! Perf note (EXPERIMENTS.md §Perf): the terminal leaf→node port is *not*
+//! stored. It can never host the maximum congestion risk — a node port
+//! carries exactly one destination, so `min(#srcs, #dsts) = 1` there, and
+//! for permutations its load is 1 — and dropping it removes ~20 % of the
+//! tensor traffic that dominates the all-shifts SP scan. The engines
+//! clamp their result to ≥ 1 whenever any flow exists, which is exactly
+//! the contribution the node port would have made.
+
+use crate::routing::{Lft, NO_ROUTE};
+use crate::topology::{NodeId, PortTarget, SwitchId, Topology};
+use crate::util::par::parallel_for_mut;
+
+/// Padding value for unused hop slots.
+pub const NO_PORT: u32 = u32::MAX;
+
+/// Dense `[leaves × nodes × max_hops]` tensor of port ids, `NO_PORT`-padded.
+pub struct PathTensor {
+    data: Vec<u32>,
+    pub num_leaves: usize,
+    pub num_nodes: usize,
+    pub max_hops: usize,
+    /// leaf switch id -> leaf index used in this tensor.
+    pub leaf_index: Vec<u32>,
+    /// leaf index -> leaf switch id.
+    pub leaves: Vec<SwitchId>,
+    /// Number of (leaf, dst) routes that failed to trace (no route/loop).
+    pub broken_routes: usize,
+}
+
+impl PathTensor {
+    /// Trace every (leaf, destination) route of `lft` (parallel over
+    /// leaves), writing straight into the final tensor.
+    ///
+    /// Perf note: the first attempt uses the tight intact-PGFT width
+    /// `2·levels` (up + down, node port trimmed) so the NO_PORT padding
+    /// fill is minimal; the rare degraded routings with longer detours
+    /// fall back to the loop-bound width.
+    pub fn build(topo: &Topology, lft: &Lft) -> Self {
+        let tight = (2 * topo.num_levels as usize).max(1);
+        let cap = 4 * topo.num_levels as usize + 4;
+        Self::build_width(topo, lft, tight, cap)
+            .unwrap_or_else(|| {
+                Self::build_width(topo, lft, cap, cap)
+                    .expect("loop-bound width fits every non-loop path")
+            })
+    }
+
+    /// One build attempt with fixed row stride `width`; `None` when some
+    /// non-loop path exceeds it (paths beyond `loop_bound` hops are route
+    /// loops and count as broken instead).
+    fn build_width(
+        topo: &Topology,
+        lft: &Lft,
+        width: usize,
+        loop_bound: usize,
+    ) -> Option<Self> {
+        let leaves = topo.leaf_switches();
+        let nl = leaves.len();
+        let nn = topo.nodes.len();
+        let mut leaf_index = vec![u32::MAX; topo.switches.len()];
+        for (i, &l) in leaves.iter().enumerate() {
+            leaf_index[l as usize] = i as u32;
+        }
+        let mut data = vec![NO_PORT; nl * nn * width];
+        struct LeafOut<'a> {
+            chunk: &'a mut [u32],
+            broken: usize,
+            overflow: bool,
+            max_h: usize,
+        }
+        let mut rows: Vec<LeafOut> = data
+            .chunks_mut((nn * width).max(1))
+            .map(|chunk| LeafOut {
+                chunk,
+                broken: 0,
+                overflow: false,
+                max_h: 0,
+            })
+            .collect();
+        parallel_for_mut(&mut rows, |li, out| {
+            let leaf = leaves[li];
+            let mut buf = Vec::with_capacity(width + 1);
+            for d in 0..nn as NodeId {
+                buf.clear();
+                let mut sw = leaf;
+                let ok = loop {
+                    let port = lft.get(sw, d);
+                    if port == NO_ROUTE {
+                        break false;
+                    }
+                    buf.push(topo.port_id(sw, port));
+                    match topo.switches[sw as usize].ports[port as usize] {
+                        PortTarget::Node { node } => break node == d,
+                        PortTarget::Switch { sw: next, .. } => sw = next,
+                    }
+                    if buf.len() > loop_bound + 1 {
+                        break false; // route loop: broken, not overflow
+                    }
+                };
+                if ok {
+                    buf.pop(); // trim the terminal node port
+                    if buf.len() > width {
+                        out.overflow = true;
+                    } else {
+                        out.chunk[d as usize * width..d as usize * width + buf.len()]
+                            .copy_from_slice(&buf);
+                        out.max_h = out.max_h.max(buf.len());
+                    }
+                } else {
+                    out.broken += 1;
+                }
+            }
+        });
+        let overflow = rows.iter().any(|r| r.overflow);
+        let broken_routes = rows.iter().map(|r| r.broken).sum();
+        let max_h = rows.iter().map(|r| r.max_h).max().unwrap_or(0).max(1);
+        drop(rows);
+        if overflow {
+            return None;
+        }
+        // Compact to the observed stride: the all-shifts SP scan streams
+        // the whole tensor thousands of times, so every padding column
+        // costs real bandwidth.
+        if max_h < width {
+            let mut tight = vec![NO_PORT; nl * nn * max_h];
+            for row in 0..nl * nn {
+                tight[row * max_h..(row + 1) * max_h]
+                    .copy_from_slice(&data[row * width..row * width + max_h]);
+            }
+            data = tight;
+        }
+        Some(Self {
+            data,
+            num_leaves: nl,
+            num_nodes: nn,
+            max_hops: max_h.min(width),
+            leaf_index,
+            leaves,
+            broken_routes,
+        })
+    }
+
+    /// Ports of the route from leaf-index `li` to destination `d`
+    /// (`NO_PORT`-terminated slice of length `max_hops`).
+    #[inline]
+    pub fn path(&self, li: u32, d: NodeId) -> &[u32] {
+        let off = (li as usize * self.num_nodes + d as usize) * self.max_hops;
+        &self.data[off..off + self.max_hops]
+    }
+
+    /// Raw tensor (row-major `[leaf][dst][hop]`) — fed to the AOT artifact.
+    pub fn raw(&self) -> &[u32] {
+        &self.data
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::routing::{dmodc, trace};
+    use crate::topology::pgft::PgftParams;
+
+    #[test]
+    fn tensor_matches_trace_minus_node_port() {
+        let t = PgftParams::fig1().build();
+        let lft = dmodc::route(&t, &Default::default());
+        let pt = PathTensor::build(&t, &lft);
+        assert_eq!(pt.broken_routes, 0);
+        for s in 0..t.nodes.len() as u32 {
+            for d in 0..t.nodes.len() as u32 {
+                if s == d {
+                    continue;
+                }
+                let li = pt.leaf_index[t.nodes[s as usize].leaf as usize];
+                let mut expected = trace(&t, &lft, s, d).unwrap();
+                expected.pop(); // the tensor trims the terminal node port
+                let row = pt.path(li, d);
+                let got: Vec<u32> =
+                    row.iter().take_while(|&&p| p != NO_PORT).copied().collect();
+                assert_eq!(got, expected, "s={s} d={d}");
+            }
+        }
+    }
+
+    #[test]
+    fn max_hops_tight() {
+        let t = PgftParams::fig1().build();
+        let lft = dmodc::route(&t, &Default::default());
+        let pt = PathTensor::build(&t, &lft);
+        // Longest route in fig1: up 2, down 2 (terminal node port trimmed).
+        assert_eq!(pt.max_hops, 4);
+    }
+
+    #[test]
+    fn broken_routes_counted() {
+        let t = PgftParams::fig1().build();
+        let mut lft = dmodc::route(&t, &Default::default());
+        let leaf = t.leaf_switches()[0];
+        let d = (0..t.nodes.len() as u32)
+            .find(|&n| t.nodes[n as usize].leaf != leaf)
+            .unwrap();
+        lft.set(leaf, d, crate::routing::NO_ROUTE);
+        let pt = PathTensor::build(&t, &lft);
+        assert_eq!(pt.broken_routes, 1);
+    }
+}

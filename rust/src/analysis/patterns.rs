@@ -1,0 +1,84 @@
+//! Communication patterns of the paper's static analysis (§4):
+//! all-to-all (A2A), random permutation (RP), shift permutation (SP).
+
+use crate::util::rng::Rng;
+
+/// Pattern selector with the paper's sampling parameters.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Pattern {
+    /// Every ordered pair communicates; single exact metric.
+    AllToAll,
+    /// `samples` uniform random permutations; the *median* of the per-
+    /// permutation maxima is reported (paper: 1000).
+    RandomPermutation { samples: usize },
+    /// All `N-1` cyclic shifts over the fabric's contiguous node order; the
+    /// *maximum* over shifts is reported.
+    ShiftPermutation,
+}
+
+impl Pattern {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Pattern::AllToAll => "A2A",
+            Pattern::RandomPermutation { .. } => "RP",
+            Pattern::ShiftPermutation => "SP",
+        }
+    }
+
+    /// The paper's three patterns with its sampling parameters.
+    pub fn paper() -> [Pattern; 3] {
+        [
+            Pattern::AllToAll,
+            Pattern::RandomPermutation { samples: 1000 },
+            Pattern::ShiftPermutation,
+        ]
+    }
+}
+
+/// Destination vector of shift-by-`k`: `i → (i + k) mod n`.
+///
+/// Shifts are over the *construction* node order (pod-contiguous), which is
+/// the ordering OpenSM's Ftree follows internally — the paper uses the same
+/// order "for quality comparison to be fair".
+pub fn shift_perm(n: usize, k: usize, out: &mut Vec<u32>) {
+    out.clear();
+    out.extend((0..n).map(|i| ((i + k) % n) as u32));
+}
+
+/// A uniform random permutation destination vector.
+pub fn random_perm(n: usize, rng: &mut Rng) -> Vec<u32> {
+    rng.permutation(n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shift_is_permutation_without_fixed_points() {
+        let mut out = Vec::new();
+        for k in 1..8 {
+            shift_perm(8, k, &mut out);
+            let mut seen = vec![false; 8];
+            for (i, &d) in out.iter().enumerate() {
+                assert_ne!(i as u32, d, "shift {k} must have no fixed point");
+                assert!(!seen[d as usize]);
+                seen[d as usize] = true;
+            }
+        }
+    }
+
+    #[test]
+    fn shift_zero_is_identity() {
+        let mut out = Vec::new();
+        shift_perm(5, 0, &mut out);
+        assert_eq!(out, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn names() {
+        assert_eq!(Pattern::AllToAll.name(), "A2A");
+        assert_eq!(Pattern::RandomPermutation { samples: 3 }.name(), "RP");
+        assert_eq!(Pattern::ShiftPermutation.name(), "SP");
+    }
+}

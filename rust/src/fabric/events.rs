@@ -1,0 +1,193 @@
+//! Fault / recovery event streams for the fabric manager.
+//!
+//! Equipment is identified by stable hardware identifiers (switch UUIDs and
+//! cable endpoints) so events remain meaningful across re-materializations
+//! of the degraded topology. Streams can be scripted (tests) or generated
+//! randomly (the fault-storm example and benches), including the scenario
+//! the paper highlights: entire-islet reboots causing thousands of
+//! simultaneous changes.
+
+use crate::topology::degrade;
+use crate::topology::{SwitchId, Topology};
+use crate::util::rng::Rng;
+use std::collections::HashSet;
+
+/// A cable identified by its endpoint UUIDs and parallel-link ordinal.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct CableId {
+    pub a: u64,
+    pub b: u64,
+    pub ordinal: u16,
+}
+
+/// What happened on the fabric.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    SwitchDown(u64),
+    SwitchUp(u64),
+    LinkDown(CableId),
+    LinkUp(CableId),
+    /// A whole islet (set of switches) going down/up at once.
+    IsletDown(Vec<u64>),
+    IsletUp(Vec<u64>),
+}
+
+/// A timestamped event.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Event {
+    pub at_ms: u64,
+    pub kind: EventKind,
+}
+
+/// Enumerate all cables of a topology as [`CableId`]s (canonical: lower
+/// UUID first, ordinal numbering parallel cables between the same pair).
+pub fn cable_ids(topo: &Topology) -> Vec<(CableId, (SwitchId, u16))> {
+    let mut per_pair: std::collections::HashMap<(u64, u64), u16> =
+        std::collections::HashMap::new();
+    degrade::cables(topo)
+        .into_iter()
+        .map(|(s, p)| {
+            let r = match topo.switches[s as usize].ports[p as usize] {
+                crate::topology::PortTarget::Switch { sw, .. } => sw,
+                _ => unreachable!("cables() returns switch links"),
+            };
+            let (ua, ub) = (
+                topo.switches[s as usize].uuid,
+                topo.switches[r as usize].uuid,
+            );
+            let key = (ua.min(ub), ua.max(ub));
+            let ord = per_pair.entry(key).or_insert(0);
+            let id = CableId {
+                a: key.0,
+                b: key.1,
+                ordinal: *ord,
+            };
+            *ord += 1;
+            (id, (s, p))
+        })
+        .collect()
+}
+
+/// Random fault/recovery schedule over `reference`.
+///
+/// Generates `n_events` events spaced `gap_ms` apart: a mix of single
+/// switch/link faults, recoveries of previously-failed equipment, and
+/// occasional islet reboots (down followed by up `islet_outage_ms` later).
+pub fn random_schedule(
+    reference: &Topology,
+    rng: &mut Rng,
+    n_events: usize,
+    gap_ms: u64,
+    islet_every: usize,
+) -> Vec<Event> {
+    let switch_uuids: Vec<u64> = degrade::removable_switches(reference)
+        .iter()
+        .map(|&s| reference.switches[s as usize].uuid)
+        .collect();
+    let cables: Vec<CableId> = cable_ids(reference).into_iter().map(|(c, _)| c).collect();
+    let leaves = reference.leaf_switches();
+
+    let mut down_switches: Vec<u64> = Vec::new();
+    let mut down_cables: Vec<CableId> = Vec::new();
+    let mut events = Vec::with_capacity(n_events);
+    let mut t = 0u64;
+    for i in 0..n_events {
+        t += gap_ms;
+        let kind = if islet_every > 0 && i % islet_every == islet_every - 1 && leaves.len() >= 2 {
+            // Islet reboot: the leaf-descendant closure of a random level-1
+            // switch (a physical pod slice) — always a non-empty islet.
+            let mids: Vec<SwitchId> = (0..reference.switches.len() as SwitchId)
+                .filter(|&s| reference.switches[s as usize].level == 1)
+                .collect();
+            let set: HashSet<SwitchId> = if mids.is_empty() {
+                leaves.iter().copied().collect()
+            } else {
+                let m = mids[rng.gen_range(mids.len())];
+                reference.switches[m as usize]
+                    .ports
+                    .iter()
+                    .filter_map(|p| match p {
+                        crate::topology::PortTarget::Switch { sw, .. }
+                            if reference.switches[*sw as usize].level == 0 =>
+                        {
+                            Some(*sw)
+                        }
+                        _ => None,
+                    })
+                    .collect()
+            };
+            let islet: Vec<u64> = degrade::islet_switches(reference, &set)
+                .iter()
+                .map(|&s| reference.switches[s as usize].uuid)
+                .collect();
+            if islet.is_empty() {
+                EventKind::SwitchDown(switch_uuids[rng.gen_range(switch_uuids.len())])
+            } else if rng.gen_range(2) == 0 {
+                EventKind::IsletDown(islet)
+            } else {
+                EventKind::IsletUp(islet)
+            }
+        } else {
+            // Recovery-biased mix (repairs land faster than new faults
+            // accumulate, so the fabric hovers around light degradation).
+            match rng.gen_range(6) {
+                0 | 1 if !down_switches.is_empty() => {
+                    let j = rng.gen_range(down_switches.len());
+                    EventKind::SwitchUp(down_switches.swap_remove(j))
+                }
+                2 | 3 if !down_cables.is_empty() => {
+                    let j = rng.gen_range(down_cables.len());
+                    EventKind::LinkUp(down_cables.swap_remove(j))
+                }
+                k if k % 2 == 0 => {
+                    let u = switch_uuids[rng.gen_range(switch_uuids.len())];
+                    EventKind::SwitchDown(u)
+                }
+                _ => {
+                    let c = cables[rng.gen_range(cables.len())];
+                    EventKind::LinkDown(c)
+                }
+            }
+        };
+        match &kind {
+            EventKind::SwitchDown(u) => down_switches.push(*u),
+            EventKind::LinkDown(c) => down_cables.push(*c),
+            _ => {}
+        }
+        events.push(Event { at_ms: t, kind });
+    }
+    events
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::pgft::PgftParams;
+
+    #[test]
+    fn cable_ids_unique_and_complete() {
+        let t = PgftParams::fig1().build();
+        let ids = cable_ids(&t);
+        assert_eq!(ids.len(), t.num_cables());
+        let set: HashSet<CableId> = ids.iter().map(|(c, _)| *c).collect();
+        assert_eq!(set.len(), ids.len(), "cable ids must be unique");
+        for (c, _) in &ids {
+            assert!(c.a <= c.b);
+        }
+    }
+
+    #[test]
+    fn schedule_is_timestamped_and_reproducible() {
+        let t = PgftParams::small().build();
+        let mut r1 = Rng::new(9);
+        let mut r2 = Rng::new(9);
+        let a = random_schedule(&t, &mut r1, 50, 10, 12);
+        let b = random_schedule(&t, &mut r2, 50, 10, 12);
+        assert_eq!(a, b);
+        assert!(a.windows(2).all(|w| w[0].at_ms < w[1].at_ms));
+        // Contains at least one islet event.
+        assert!(a
+            .iter()
+            .any(|e| matches!(e.kind, EventKind::IsletDown(_) | EventKind::IsletUp(_))));
+    }
+}

@@ -1,0 +1,155 @@
+//! Per-switch forwarding-table store with upload-delta accounting.
+//!
+//! The paper notes "no effort has been made to minimize size of updates to
+//! be uploaded to switches" — Dmodc recomputes everything. The store
+//! quantifies what that costs: after each reroute it diffs the new tables
+//! against what each (surviving) switch currently holds and models the
+//! upload as InfiniBand-style LFT blocks (64 entries per MAD block; a block
+//! is uploaded iff any entry in it changed).
+
+use crate::routing::Lft;
+use crate::topology::Topology;
+use std::collections::HashMap;
+
+/// Entries per LFT upload block (InfiniBand LinearForwardingTable MAD).
+pub const BLOCK_ENTRIES: usize = 64;
+
+/// Upload accounting for one reroute.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct UploadStats {
+    /// Switches whose table changed at all.
+    pub switches_touched: usize,
+    /// Individual LFT entries that changed.
+    pub entries_changed: usize,
+    /// Upload size in blocks (changed blocks only).
+    pub blocks_delta: usize,
+    /// Upload size in blocks for a naive full push of every table.
+    pub blocks_full: usize,
+}
+
+/// The fabric's current tables, keyed by switch UUID (stable across
+/// degradation-driven re-materializations).
+#[derive(Default)]
+pub struct LftStore {
+    tables: HashMap<u64, Vec<u16>>,
+}
+
+impl LftStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Diff `lft` against the stored tables, replace them, and return the
+    /// upload accounting. Switches absent from `topo` keep their stale
+    /// tables (they are down; nothing to upload).
+    pub fn commit(&mut self, topo: &Topology, lft: &Lft) -> UploadStats {
+        let n = lft.num_nodes();
+        let blocks_per_table = n.div_ceil(BLOCK_ENTRIES);
+        let mut st = UploadStats {
+            blocks_full: blocks_per_table * topo.switches.len(),
+            ..Default::default()
+        };
+        for (s, sw) in topo.switches.iter().enumerate() {
+            let row = &lft.raw()[s * n..(s + 1) * n];
+            match self.tables.get_mut(&sw.uuid) {
+                Some(old) if old.len() == n => {
+                    let mut changed = 0usize;
+                    let mut blocks = 0usize;
+                    for b in 0..blocks_per_table {
+                        let lo = b * BLOCK_ENTRIES;
+                        let hi = (lo + BLOCK_ENTRIES).min(n);
+                        let c = old[lo..hi]
+                            .iter()
+                            .zip(&row[lo..hi])
+                            .filter(|(a, b)| a != b)
+                            .count();
+                        if c > 0 {
+                            blocks += 1;
+                            changed += c;
+                        }
+                    }
+                    if changed > 0 {
+                        st.switches_touched += 1;
+                        st.entries_changed += changed;
+                        st.blocks_delta += blocks;
+                        old.copy_from_slice(row);
+                    }
+                }
+                _ => {
+                    // New (or resized) switch: full upload.
+                    st.switches_touched += 1;
+                    st.entries_changed += n;
+                    st.blocks_delta += blocks_per_table;
+                    self.tables.insert(sw.uuid, row.to_vec());
+                }
+            }
+        }
+        st
+    }
+
+    /// Number of switches with stored tables.
+    pub fn len(&self) -> usize {
+        self.tables.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tables.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::routing::{route_unchecked, Algo};
+    use crate::topology::pgft::PgftParams;
+
+    #[test]
+    fn first_commit_is_full_upload() {
+        let t = PgftParams::fig1().build();
+        let lft = route_unchecked(Algo::Dmodc, &t);
+        let mut store = LftStore::new();
+        let st = store.commit(&t, &lft);
+        assert_eq!(st.switches_touched, t.switches.len());
+        assert_eq!(st.blocks_delta, st.blocks_full);
+        assert_eq!(store.len(), t.switches.len());
+    }
+
+    #[test]
+    fn identical_commit_uploads_nothing() {
+        let t = PgftParams::fig1().build();
+        let lft = route_unchecked(Algo::Dmodc, &t);
+        let mut store = LftStore::new();
+        store.commit(&t, &lft);
+        let st = store.commit(&t, &lft);
+        assert_eq!(st, UploadStats { blocks_full: st.blocks_full, ..Default::default() });
+    }
+
+    #[test]
+    fn localized_change_uploads_few_blocks() {
+        let t = PgftParams::fig1().build();
+        let lft = route_unchecked(Algo::Dmodc, &t);
+        let mut store = LftStore::new();
+        store.commit(&t, &lft);
+        let mut lft2 = lft.clone();
+        lft2.set(0, 3, 63); // one entry
+        let st = store.commit(&t, &lft2);
+        assert_eq!(st.switches_touched, 1);
+        assert_eq!(st.entries_changed, 1);
+        assert_eq!(st.blocks_delta, 1);
+    }
+
+    #[test]
+    fn delta_tracks_real_reroute() {
+        use crate::topology::degrade;
+        use crate::util::rng::Rng;
+        let t = PgftParams::small().build();
+        let mut store = LftStore::new();
+        store.commit(&t, &route_unchecked(Algo::Dmodc, &t));
+        let mut rng = Rng::new(3);
+        let d = degrade::remove_random_links(&t, &mut rng, 2);
+        let st = store.commit(&d, &route_unchecked(Algo::Dmodc, &d));
+        // Some switches change, but not necessarily all.
+        assert!(st.switches_touched > 0);
+        assert!(st.blocks_delta <= st.blocks_full);
+    }
+}

@@ -1,0 +1,377 @@
+//! The centralized fabric manager: consume fault/recovery events, rebuild
+//! the degraded topology, recompute all forwarding tables from scratch with
+//! the configured engine (Dmodc by default — the paper's design point:
+//! complete rerouting is fast enough to beat partial-rerouting complexity),
+//! validate, and account the table upload.
+//!
+//! Two driving modes:
+//! * [`FabricManager::process`] — synchronous, event by event (tests,
+//!   benches, deterministic experiments);
+//! * [`FabricManager::run_stream`] — a thread+channel event loop (the
+//!   fault-storm example): events arrive on an `mpsc` channel, reaction
+//!   reports leave on another.
+
+use super::events::{cable_ids, CableId, Event, EventKind};
+use super::lft_store::{LftStore, UploadStats};
+use super::metrics::{Histogram, Metrics};
+use crate::routing::dmodc::Router;
+use crate::routing::{route_unchecked, validity, Algo, Lft};
+use crate::topology::{degrade, PortTarget, SwitchId, Topology};
+use std::collections::{HashMap, HashSet};
+use std::sync::mpsc::{Receiver, Sender};
+use std::time::Instant;
+
+/// Manager configuration.
+#[derive(Clone, Debug)]
+pub struct ManagerConfig {
+    pub algo: Algo,
+    /// Run the paper's validity pass after each reroute.
+    pub validate: bool,
+}
+
+impl Default for ManagerConfig {
+    fn default() -> Self {
+        Self {
+            algo: Algo::Dmodc,
+            validate: true,
+        }
+    }
+}
+
+/// Per-event reaction report.
+#[derive(Clone, Debug)]
+pub struct ManagerReport {
+    pub event_idx: usize,
+    /// Wall-clock reroute latency (topology rebuild + routing), seconds.
+    pub reroute_secs: f64,
+    pub valid: bool,
+    pub upload: UploadStats,
+    pub switches_alive: usize,
+    pub cables_alive: usize,
+}
+
+/// Centralized fabric manager state.
+pub struct FabricManager {
+    reference: Topology,
+    cfg: ManagerConfig,
+    dead_switches: HashSet<SwitchId>,
+    dead_cables: HashSet<(SwitchId, u16)>,
+    uuid_to_switch: HashMap<u64, SwitchId>,
+    cable_to_port: HashMap<CableId, (SwitchId, u16)>,
+    store: LftStore,
+    pub metrics: Metrics,
+    pub reroute_hist: Histogram,
+    current: Option<(Topology, Lft)>,
+    events_seen: usize,
+}
+
+impl FabricManager {
+    /// Create a manager over the intact reference topology and compute the
+    /// initial tables.
+    pub fn new(reference: Topology, cfg: ManagerConfig) -> Self {
+        let uuid_to_switch = reference
+            .switches
+            .iter()
+            .enumerate()
+            .map(|(i, s)| (s.uuid, i as SwitchId))
+            .collect();
+        let cable_to_port = cable_ids(&reference).into_iter().collect();
+        let mut mgr = Self {
+            reference,
+            cfg,
+            dead_switches: HashSet::new(),
+            dead_cables: HashSet::new(),
+            uuid_to_switch,
+            cable_to_port,
+            store: LftStore::new(),
+            metrics: Metrics::default(),
+            reroute_hist: Histogram::latency_ms(),
+            current: None,
+            events_seen: 0,
+        };
+        mgr.reroute();
+        mgr
+    }
+
+    /// Current degraded topology + tables.
+    pub fn current(&self) -> (&Topology, &Lft) {
+        let (t, l) = self.current.as_ref().expect("rerouted at construction");
+        (t, l)
+    }
+
+    fn mark(&mut self, kind: &EventKind) {
+        match kind {
+            EventKind::SwitchDown(u) => {
+                if let Some(&s) = self.uuid_to_switch.get(u) {
+                    if self.dead_switches.insert(s) {
+                        self.metrics.equipment_down += 1;
+                    }
+                }
+            }
+            EventKind::SwitchUp(u) => {
+                if let Some(&s) = self.uuid_to_switch.get(u) {
+                    if self.dead_switches.remove(&s) {
+                        self.metrics.equipment_up += 1;
+                    }
+                }
+            }
+            EventKind::LinkDown(c) => {
+                if let Some(&p) = self.cable_to_port.get(c) {
+                    if self.dead_cables.insert(p) {
+                        self.metrics.equipment_down += 1;
+                    }
+                }
+            }
+            EventKind::LinkUp(c) => {
+                if let Some(&p) = self.cable_to_port.get(c) {
+                    if self.dead_cables.remove(&p) {
+                        self.metrics.equipment_up += 1;
+                    }
+                }
+            }
+            EventKind::IsletDown(us) => {
+                for u in us {
+                    self.mark(&EventKind::SwitchDown(*u));
+                }
+            }
+            EventKind::IsletUp(us) => {
+                for u in us {
+                    self.mark(&EventKind::SwitchUp(*u));
+                }
+            }
+        }
+    }
+
+    /// Full reroute of the current degraded state. Returns the report.
+    fn reroute(&mut self) -> ManagerReport {
+        let t0 = Instant::now();
+        let topo = degrade::apply(&self.reference, &self.dead_switches, &self.dead_cables);
+        let lft = route_unchecked(self.cfg.algo, &topo);
+        let reroute_secs = t0.elapsed().as_secs_f64();
+
+        let valid = if self.cfg.validate {
+            validity::check(&topo, &lft).is_ok()
+        } else {
+            true
+        };
+        if !valid {
+            self.metrics.invalid_states += 1;
+        }
+        let upload = self.store.commit(&topo, &lft);
+        self.metrics.reroutes += 1;
+        self.metrics.entries_changed += upload.entries_changed as u64;
+        self.metrics.blocks_uploaded += upload.blocks_delta as u64;
+        self.reroute_hist.record(reroute_secs * 1e3);
+        let report = ManagerReport {
+            event_idx: self.events_seen,
+            reroute_secs,
+            valid,
+            upload,
+            switches_alive: topo.switches.len(),
+            cables_alive: topo.num_cables(),
+        };
+        self.current = Some((topo, lft));
+        report
+    }
+
+    /// Apply one event (synchronous): update state, reroute, report.
+    pub fn apply(&mut self, event: &Event) -> ManagerReport {
+        self.events_seen += 1;
+        self.metrics.events += 1;
+        self.mark(&event.kind);
+        self.reroute()
+    }
+
+    /// Apply a whole scripted schedule, returning every report.
+    pub fn process(&mut self, events: &[Event]) -> Vec<ManagerReport> {
+        events.iter().map(|e| self.apply(e)).collect()
+    }
+
+    /// Event-loop mode: consume events from `rx` until it closes, emitting
+    /// a report per event on `tx`. Runs on the calling thread (spawn it).
+    pub fn run_stream(&mut self, rx: Receiver<Event>, tx: Sender<ManagerReport>) {
+        while let Ok(ev) = rx.recv() {
+            let report = self.apply(&ev);
+            if tx.send(report).is_err() {
+                break;
+            }
+        }
+    }
+
+    /// Force a full reroute of the current state (e.g. to rebalance after a
+    /// series of [`FabricManager::fast_patch`] mitigations).
+    pub fn reroute_now(&mut self) -> ManagerReport {
+        self.reroute()
+    }
+
+    /// **Fast local mitigation** (extension of the paper's §5 discussion):
+    /// instead of a full reroute, rewrite only the LFT entries that egress
+    /// through the dying cable, using Dmodc's *alternative output ports*
+    /// `P_{s,d}` (equation (2)). Returns `None` — caller must fall back to
+    /// a full [`FabricManager::apply`] — when any affected entry has no
+    /// surviving alternative, or when the manager is not running Dmodc.
+    ///
+    /// The patched tables remain valid (alternatives lead strictly closer
+    /// to the destination) but lose Dmodc's arithmetic balance, exactly
+    /// the trade-off the paper attributes to partial-rerouting schemes; a
+    /// later [`FabricManager::reroute_now`] restores balance.
+    pub fn fast_patch(&mut self, cable: &CableId) -> Option<PatchReport> {
+        if self.cfg.algo != Algo::Dmodc {
+            return None;
+        }
+        let t0 = Instant::now();
+        let (topo, lft) = self.current.as_mut().expect("initialized");
+        // Locate the cable endpoints in the *current* materialized topology.
+        let (sw_a, port_a) = cable_ids(topo)
+            .into_iter()
+            .find(|(c, _)| c == cable)
+            .map(|(_, p)| p)?;
+        let (sw_b, port_b) = match topo.switches[sw_a as usize].ports[port_a as usize] {
+            PortTarget::Switch { sw, rport } => (sw, rport),
+            _ => return None,
+        };
+        let router = Router::new(topo, Default::default());
+        let mut patches: Vec<(SwitchId, u32, u16)> = Vec::new();
+        for &(sw, dead_port) in &[(sw_a, port_a), (sw_b, port_b)] {
+            for d in 0..topo.nodes.len() as u32 {
+                if lft.get(sw, d) != dead_port {
+                    continue;
+                }
+                let alt = router
+                    .alternatives(topo, sw, d)
+                    .into_iter()
+                    .find(|&p| p != dead_port)?;
+                patches.push((sw, d, alt));
+            }
+        }
+        for &(sw, d, p) in &patches {
+            lft.set(sw, d, p);
+        }
+        let lft_snapshot = lft.clone();
+        // Record the cable as dead so the next full reroute accounts for it.
+        if let Some(&p) = self.cable_to_port.get(cable) {
+            self.dead_cables.insert(p);
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        self.metrics.fast_patches += 1;
+        let topo_ref = &self.current.as_ref().unwrap().0;
+        let upload = self.store.commit(topo_ref, &lft_snapshot);
+        Some(PatchReport {
+            entries_patched: patches.len(),
+            patch_secs: secs,
+            upload,
+        })
+    }
+}
+
+/// Report of one [`FabricManager::fast_patch`] mitigation.
+#[derive(Clone, Debug)]
+pub struct PatchReport {
+    pub entries_patched: usize,
+    pub patch_secs: f64,
+    pub upload: UploadStats,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::pgft::PgftParams;
+
+    fn uuid_of_level(t: &Topology, level: u8) -> u64 {
+        t.switches
+            .iter()
+            .find(|s| s.level == level)
+            .map(|s| s.uuid)
+            .unwrap()
+    }
+
+    #[test]
+    fn fault_then_recovery_restores_tables() {
+        let t = PgftParams::fig1().build();
+        let mut mgr = FabricManager::new(t.clone(), ManagerConfig::default());
+        let (t0, l0) = mgr.current();
+        let baseline = l0.raw().to_vec();
+        let baseline_switches = t0.switches.len();
+
+        let victim = uuid_of_level(&t, 2);
+        let r1 = mgr.apply(&Event {
+            at_ms: 1,
+            kind: EventKind::SwitchDown(victim),
+        });
+        assert!(r1.valid, "fig1 survives one top switch");
+        assert_eq!(r1.switches_alive, baseline_switches - 1);
+        assert!(r1.upload.switches_touched > 0);
+
+        let r2 = mgr.apply(&Event {
+            at_ms: 2,
+            kind: EventKind::SwitchUp(victim),
+        });
+        assert!(r2.valid);
+        assert_eq!(r2.switches_alive, baseline_switches);
+        // Dmodc is deterministic and history-free: recovery must restore
+        // the exact original tables (unlike Ftrnd_diff, per the paper).
+        let (_, l2) = mgr.current();
+        assert_eq!(l2.raw(), &baseline[..]);
+    }
+
+    #[test]
+    fn islet_reboot_processes() {
+        let t = PgftParams::small().build();
+        let leaves: HashSet<SwitchId> = t.leaf_switches()[0..3].iter().copied().collect();
+        let islet: Vec<u64> = degrade::islet_switches(&t, &leaves)
+            .iter()
+            .map(|&s| t.switches[s as usize].uuid)
+            .collect();
+        let mut mgr = FabricManager::new(t, ManagerConfig::default());
+        let down = mgr.apply(&Event {
+            at_ms: 1,
+            kind: EventKind::IsletDown(islet.clone()),
+        });
+        let up = mgr.apply(&Event {
+            at_ms: 2,
+            kind: EventKind::IsletUp(islet),
+        });
+        assert!(up.switches_alive > down.switches_alive || down.switches_alive == up.switches_alive);
+        assert_eq!(mgr.metrics.events, 2);
+    }
+
+    #[test]
+    fn stream_mode_delivers_reports() {
+        use std::sync::mpsc::channel;
+        let t = PgftParams::fig1().build();
+        let victim = uuid_of_level(&t, 1);
+        let (etx, erx) = channel();
+        let (rtx, rrx) = channel();
+        let mut mgr = FabricManager::new(t, ManagerConfig::default());
+        let h = std::thread::spawn(move || {
+            mgr.run_stream(erx, rtx);
+            mgr.metrics.events
+        });
+        etx.send(Event {
+            at_ms: 1,
+            kind: EventKind::SwitchDown(victim),
+        })
+        .unwrap();
+        etx.send(Event {
+            at_ms: 2,
+            kind: EventKind::SwitchUp(victim),
+        })
+        .unwrap();
+        drop(etx);
+        let reports: Vec<ManagerReport> = rrx.iter().collect();
+        assert_eq!(reports.len(), 2);
+        assert_eq!(h.join().unwrap(), 2);
+    }
+
+    #[test]
+    fn unknown_equipment_ignored() {
+        let t = PgftParams::fig1().build();
+        let mut mgr = FabricManager::new(t, ManagerConfig::default());
+        let r = mgr.apply(&Event {
+            at_ms: 1,
+            kind: EventKind::SwitchDown(0xDEAD_BEEF),
+        });
+        assert!(r.valid);
+        assert_eq!(mgr.metrics.equipment_down, 0);
+    }
+}

@@ -1,0 +1,151 @@
+//! Fabric-manager metrics: counters and latency histograms.
+
+use std::fmt::Write as _;
+
+/// Fixed-boundary latency histogram (milliseconds).
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    sum: f64,
+    max: f64,
+    n: u64,
+}
+
+impl Histogram {
+    /// Log-spaced reroute-latency buckets: 1ms .. ~33s.
+    pub fn latency_ms() -> Self {
+        let bounds: Vec<f64> = (0..16).map(|i| 1.0 * 2f64.powi(i)).collect();
+        let counts = vec![0; bounds.len() + 1];
+        Self {
+            bounds,
+            counts,
+            sum: 0.0,
+            max: 0.0,
+            n: 0,
+        }
+    }
+
+    pub fn record(&mut self, v: f64) {
+        let idx = self
+            .bounds
+            .iter()
+            .position(|&b| v <= b)
+            .unwrap_or(self.bounds.len());
+        self.counts[idx] += 1;
+        self.sum += v;
+        self.max = self.max.max(v);
+        self.n += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Approximate quantile from bucket boundaries.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        let target = (q * self.n as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return if i < self.bounds.len() {
+                    self.bounds[i]
+                } else {
+                    self.max
+                };
+            }
+        }
+        self.max
+    }
+
+    pub fn render(&self, label: &str) -> String {
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "{label}: n={} mean={:.2}ms p50≤{:.0}ms p99≤{:.0}ms max={:.2}ms",
+            self.n,
+            self.mean(),
+            self.quantile(0.5),
+            self.quantile(0.99),
+            self.max
+        );
+        s
+    }
+}
+
+/// Aggregate fabric-manager counters.
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    pub events: u64,
+    pub reroutes: u64,
+    pub fast_patches: u64,
+    pub invalid_states: u64,
+    pub entries_changed: u64,
+    pub blocks_uploaded: u64,
+    pub equipment_down: u64,
+    pub equipment_up: u64,
+}
+
+impl Metrics {
+    pub fn render(&self) -> String {
+        format!(
+            "events={} reroutes={} fast_patches={} invalid={} entries_changed={} blocks_uploaded={} down={} up={}",
+            self.events,
+            self.reroutes,
+            self.fast_patches,
+            self.invalid_states,
+            self.entries_changed,
+            self.blocks_uploaded,
+            self.equipment_down,
+            self.equipment_up
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_stats() {
+        let mut h = Histogram::latency_ms();
+        for v in [0.5, 1.0, 2.0, 4.0, 100.0] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert!((h.mean() - 21.5).abs() < 1e-9);
+        assert_eq!(h.max(), 100.0);
+        assert!(h.quantile(0.5) <= 4.0);
+        assert!(h.quantile(1.0) >= 100.0 - 1e-9);
+    }
+
+    #[test]
+    fn render_contains_fields() {
+        let mut h = Histogram::latency_ms();
+        h.record(3.0);
+        let s = h.render("reroute");
+        assert!(s.contains("reroute"));
+        assert!(s.contains("n=1"));
+        let m = Metrics {
+            events: 2,
+            ..Default::default()
+        };
+        assert!(m.render().contains("events=2"));
+    }
+}

@@ -1,0 +1,9 @@
+//! Centralized fabric manager (L3 coordinator). See [`manager`].
+
+pub mod events;
+pub mod lft_store;
+pub mod manager;
+pub mod metrics;
+
+pub use events::{Event, EventKind};
+pub use manager::{FabricManager, ManagerConfig, ManagerReport};

@@ -1,0 +1,41 @@
+//! # Dmodc — fault-resilient routing for fat-tree networks
+//!
+//! A reproduction of *"High-Quality Fault-Resiliency in Fat-Tree Networks"*
+//! (Gliksberg et al., HOTI'19): the Dmodc closed-form routing algorithm for
+//! Parallel Generalized Fat-Trees, the OpenSM baseline engines it is
+//! evaluated against (Ftree, UPDN, MinHop, SSSP, Dmodk), the static
+//! congestion-risk analysis used for Figure 2, the RLFT runtime sweep of
+//! Figure 3, and a centralized fabric manager that reroutes on fault events.
+//!
+//! Layering (see DESIGN.md): this crate is the L3 rust coordinator; the
+//! congestion-analysis hot loop is additionally available as an AOT-compiled
+//! XLA artifact (authored in JAX/Pallas at build time) executed through
+//! [`runtime`] — python is never on the request path.
+//!
+//! ```no_run
+//! use dmodc::prelude::*;
+//!
+//! let topo = PgftParams::fig1().build();
+//! let lft = route(Algo::Dmodc, &topo).expect("valid PGFT");
+//! let risk = CongestionAnalyzer::new(&topo, &lft).all_to_all();
+//! println!("A2A max congestion risk: {risk}");
+//! ```
+
+pub mod analysis;
+pub mod fabric;
+pub mod routing;
+pub mod runtime;
+pub mod topology;
+pub mod util;
+
+/// Convenient re-exports for examples and downstream users.
+pub mod prelude {
+    pub use crate::analysis::patterns::Pattern;
+    pub use crate::analysis::CongestionAnalyzer;
+    pub use crate::routing::{route, Algo, Lft};
+    pub use crate::topology::degrade::{self, Equipment};
+    pub use crate::topology::pgft::PgftParams;
+    pub use crate::topology::rlft;
+    pub use crate::topology::{Builder, NodeId, SwitchId, Topology};
+    pub use crate::util::rng::Rng;
+}

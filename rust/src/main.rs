@@ -1,0 +1,216 @@
+//! `dmodc-fm` — the Dmodc fabric-manager CLI.
+//!
+//! Subcommands:
+//!   topo      describe a PGFT/RLFT topology
+//!   route     route a topology and report validity + route-shape stats
+//!   degrade   one log-uniform degradation throw: route + analyze
+//!   analyze   congestion risk (A2A / RP / SP) for one engine
+//!   fabric    drive the fabric manager through a random fault schedule
+//!
+//! Examples:
+//!   dmodc-fm topo --pgft "24,15,24;1,6,8;1,1,1"
+//!   dmodc-fm route --nodes 648 --algo dmodc
+//!   dmodc-fm analyze --nodes 648 --algo ftree --rp-samples 200
+//!   dmodc-fm degrade --pgft "4,6,3;1,2,2;1,2,1" --kind links --seed 7
+//!   dmodc-fm fabric --nodes 648 --events 40
+
+use dmodc::analysis::CongestionAnalyzer;
+use dmodc::fabric::{events, FabricManager, ManagerConfig};
+use dmodc::prelude::*;
+use dmodc::routing::{route_unchecked, validity};
+use dmodc::util::cli::Args;
+use dmodc::util::table::{fmt_duration, Table};
+use std::time::Instant;
+
+fn build_topo(p: &dmodc::util::cli::Parsed) -> Topology {
+    let pgft = p.get("pgft");
+    if !pgft.is_empty() {
+        let params = PgftParams::parse(pgft).unwrap_or_else(|e| {
+            eprintln!("bad --pgft: {e}");
+            std::process::exit(2);
+        });
+        params.build()
+    } else {
+        rlft::build(p.get_usize("nodes"), p.get_u64("radix") as u32)
+    }
+}
+
+fn common_flags(args: Args) -> Args {
+    args.flag("pgft", "", "PGFT params \"m1,..;w1,..;p1,..\" (overrides --nodes)")
+        .flag("nodes", "648", "RLFT node count when --pgft is not given")
+        .flag("radix", "36", "RLFT switch radix")
+        .flag("seed", "42", "random seed")
+}
+
+fn cmd_topo() {
+    let p = common_flags(Args::new("dmodc-fm topo", "describe a topology")).parse_skip(1);
+    let t = build_topo(&p);
+    let mut by_level = vec![0usize; t.num_levels as usize];
+    for s in &t.switches {
+        by_level[s.level as usize] += 1;
+    }
+    println!(
+        "nodes={} switches={} cables={} ports={} levels={}",
+        t.nodes.len(),
+        t.switches.len(),
+        t.num_cables(),
+        t.num_ports(),
+        t.num_levels
+    );
+    for (l, c) in by_level.iter().enumerate() {
+        println!("  level {l}: {c} switches");
+    }
+}
+
+fn cmd_route() {
+    let p = common_flags(Args::new("dmodc-fm route", "route and validate"))
+        .flag("algo", "dmodc", "routing engine (dmodc|dmodk|ftree|updn|minhop|sssp)")
+        .flag("dump", "", "write the LFTs to this file (paper §4 analysis format)")
+        .parse_skip(1);
+    let t = build_topo(&p);
+    let algo = Algo::parse(p.get("algo")).unwrap();
+    let t0 = Instant::now();
+    let lft = route_unchecked(algo, &t);
+    let dt = t0.elapsed().as_secs_f64();
+    if !p.get("dump").is_empty() {
+        dmodc::routing::dump::dump_to_file(&t, &lft, p.get("dump")).expect("write dump");
+        println!("wrote LFT dump to {}", p.get("dump"));
+    }
+    let valid = validity::check(&t, &lft);
+    let st = validity::stats(&t, &lft);
+    println!(
+        "algo={} runtime={} valid={} routes={} unreachable={} mean_hops={:.2} max_hops={} downup_turns={}",
+        algo.name(),
+        fmt_duration(dt),
+        valid.is_ok(),
+        st.routes,
+        st.unreachable,
+        st.mean_hops(),
+        st.max_hops,
+        st.downup_turns
+    );
+    if let Err(e) = valid {
+        println!("validity: {e}");
+    }
+}
+
+fn cmd_analyze() {
+    let p = common_flags(Args::new("dmodc-fm analyze", "congestion-risk analysis"))
+        .flag("algo", "dmodc", "routing engine")
+        .flag("rp-samples", "1000", "random permutations for RP")
+        .parse_skip(1);
+    let t = build_topo(&p);
+    let algo = Algo::parse(p.get("algo")).unwrap();
+    let lft = route_unchecked(algo, &t);
+    let an = CongestionAnalyzer::new(&t, &lft);
+    let seed = p.get_u64("seed");
+    let mut tab = Table::new(&["pattern", "max congestion risk", "time"]);
+    for pat in [
+        Pattern::AllToAll,
+        Pattern::RandomPermutation {
+            samples: p.get_usize("rp-samples"),
+        },
+        Pattern::ShiftPermutation,
+    ] {
+        let t0 = Instant::now();
+        let v = an.evaluate(pat, seed);
+        tab.row(vec![
+            pat.name().to_string(),
+            v.to_string(),
+            fmt_duration(t0.elapsed().as_secs_f64()),
+        ]);
+    }
+    println!("algo={} broken_routes={}", algo.name(), an.broken_routes());
+    print!("{}", tab.render());
+}
+
+fn cmd_degrade() {
+    let p = common_flags(Args::new("dmodc-fm degrade", "one degradation throw"))
+        .flag("algo", "dmodc", "routing engine")
+        .flag("kind", "switches", "equipment kind (switches|links)")
+        .flag("rp-samples", "100", "random permutations for RP")
+        .parse_skip(1);
+    let t = build_topo(&p);
+    let algo = Algo::parse(p.get("algo")).unwrap();
+    let kind = Equipment::parse(p.get("kind")).unwrap();
+    let mut rng = Rng::new(p.get_u64("seed"));
+    let (amount, dt) = degrade::log_uniform_throw(&t, &mut rng, kind);
+    let lft = route_unchecked(algo, &dt);
+    let valid = validity::check(&dt, &lft).is_ok();
+    let an = CongestionAnalyzer::new(&dt, &lft);
+    println!(
+        "removed {amount} {:?}; valid={valid} A2A={} RP={} SP={}",
+        kind,
+        an.all_to_all(),
+        an.random_perm_median(p.get_usize("rp-samples"), p.get_u64("seed")),
+        an.shift_max()
+    );
+}
+
+fn cmd_fabric() {
+    let p = common_flags(Args::new("dmodc-fm fabric", "fault-event storm"))
+        .flag("algo", "dmodc", "routing engine")
+        .flag("events", "25", "number of fault/recovery events")
+        .flag("islet-every", "10", "islet reboot every k-th event (0 = never)")
+        .parse_skip(1);
+    let t = build_topo(&p);
+    let mut rng = Rng::new(p.get_u64("seed"));
+    let schedule = events::random_schedule(
+        &t,
+        &mut rng,
+        p.get_usize("events"),
+        100,
+        p.get_usize("islet-every"),
+    );
+    let mut mgr = FabricManager::new(
+        t,
+        ManagerConfig {
+            algo: Algo::parse(p.get("algo")).unwrap(),
+            validate: true,
+        },
+    );
+    let reports = mgr.process(&schedule);
+    let mut tab = Table::new(&["event", "reroute", "valid", "entries Δ", "blocks Δ", "alive sw"]);
+    for (e, r) in schedule.iter().zip(&reports) {
+        tab.row(vec![
+            format!("{:?}", kind_name(&e.kind)),
+            fmt_duration(r.reroute_secs),
+            r.valid.to_string(),
+            r.upload.entries_changed.to_string(),
+            r.upload.blocks_delta.to_string(),
+            r.switches_alive.to_string(),
+        ]);
+    }
+    print!("{}", tab.render());
+    println!("{}", mgr.metrics.render());
+    print!("{}", mgr.reroute_hist.render("reroute latency"));
+}
+
+fn kind_name(k: &events::EventKind) -> String {
+    match k {
+        events::EventKind::SwitchDown(_) => "switch-down".into(),
+        events::EventKind::SwitchUp(_) => "switch-up".into(),
+        events::EventKind::LinkDown(_) => "link-down".into(),
+        events::EventKind::LinkUp(_) => "link-up".into(),
+        events::EventKind::IsletDown(v) => format!("islet-down({})", v.len()),
+        events::EventKind::IsletUp(v) => format!("islet-up({})", v.len()),
+    }
+}
+
+fn main() {
+    let sub = std::env::args().nth(1).unwrap_or_default();
+    match sub.as_str() {
+        "topo" => cmd_topo(),
+        "route" => cmd_route(),
+        "analyze" => cmd_analyze(),
+        "degrade" => cmd_degrade(),
+        "fabric" => cmd_fabric(),
+        other => {
+            eprintln!(
+                "usage: dmodc-fm <topo|route|analyze|degrade|fabric> [flags]\n\
+                 unknown subcommand {other:?}; try `dmodc-fm route --help`"
+            );
+            std::process::exit(2);
+        }
+    }
+}

@@ -1,0 +1,343 @@
+//! Shared routing preprocessing: ranks, port groups, and the cost/divider
+//! sweeps of the paper's Algorithm 1.
+
+use crate::topology::{NodeId, PortTarget, SwitchId, Topology};
+
+/// Unreachable cost sentinel.
+pub const INF: u16 = u16::MAX;
+
+/// A port group: all ports of a switch linked to the same remote switch
+/// (the paper prepares these sorted by remote UUID "to help with
+/// same-destination route coalescing").
+#[derive(Clone, Debug)]
+pub struct Group {
+    pub remote: SwitchId,
+    /// Local port indices, ascending.
+    pub ports: Vec<u16>,
+    /// True if `remote` is at a higher level (uplink group).
+    pub up: bool,
+}
+
+/// Preprocessed view of a topology shared by the routing engines.
+pub struct Prep {
+    /// Leaf switches, ascending id.
+    pub leaves: Vec<SwitchId>,
+    /// switch id -> index into `leaves` (or `u32::MAX`).
+    pub leaf_index: Vec<u32>,
+    /// Per switch: port groups sorted by remote switch UUID.
+    pub groups: Vec<Vec<Group>>,
+    /// Per switch: number of uplink groups (`#{s' ⊃ s}` in the paper).
+    pub up_groups: Vec<u32>,
+    /// Switch ids sorted by ascending level (stable by id).
+    pub by_level_up: Vec<SwitchId>,
+}
+
+impl Prep {
+    pub fn new(topo: &Topology) -> Self {
+        let ns = topo.switches.len();
+        let leaves = topo.leaf_switches();
+        let mut leaf_index = vec![u32::MAX; ns];
+        for (i, &l) in leaves.iter().enumerate() {
+            leaf_index[l as usize] = i as u32;
+        }
+        let mut groups: Vec<Vec<Group>> = Vec::with_capacity(ns);
+        for (s, sw) in topo.switches.iter().enumerate() {
+            let mut gs: Vec<Group> = Vec::new();
+            for (pi, p) in sw.ports.iter().enumerate() {
+                if let PortTarget::Switch { sw: r, .. } = *p {
+                    match gs.iter_mut().find(|g| g.remote == r) {
+                        Some(g) => g.ports.push(pi as u16),
+                        None => gs.push(Group {
+                            remote: r,
+                            ports: vec![pi as u16],
+                            up: topo.switches[r as usize].level
+                                > topo.switches[s].level,
+                        }),
+                    }
+                }
+            }
+            gs.sort_by_key(|g| topo.switches[g.remote as usize].uuid);
+            groups.push(gs);
+        }
+        let up_groups = groups
+            .iter()
+            .map(|gs| gs.iter().filter(|g| g.up).count() as u32)
+            .collect();
+        let mut by_level_up: Vec<SwitchId> = (0..ns as SwitchId).collect();
+        by_level_up.sort_by_key(|&s| (topo.switches[s as usize].level, s));
+        Self {
+            leaves,
+            leaf_index,
+            groups,
+            up_groups,
+            by_level_up,
+        }
+    }
+}
+
+/// Divider reduction choice of Algorithm 1 (the paper uses `Max`; the
+/// `FirstPath` variant is the alternative it reports as showing "little to
+/// no change" — kept for the ablation bench).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DividerReduction {
+    Max,
+    FirstPath,
+}
+
+/// Output of the paper's Algorithm 1 plus the pure-down costs needed by
+/// UPDN-style engines.
+pub struct Costs {
+    /// `c[s * num_leaves + li]`: min hops from switch `s` to leaf
+    /// `leaves[li]` under up*/down* restriction.
+    pub cost: Vec<u16>,
+    /// Same layout, but down-moves only (the state after the upward sweep).
+    pub down_cost: Vec<u16>,
+    /// Divider Π per switch.
+    pub divider: Vec<u64>,
+    pub num_leaves: usize,
+}
+
+impl Costs {
+    #[inline]
+    pub fn cost(&self, s: SwitchId, leaf_idx: u32) -> u16 {
+        self.cost[s as usize * self.num_leaves + leaf_idx as usize]
+    }
+
+    #[inline]
+    pub fn down(&self, s: SwitchId, leaf_idx: u32) -> u16 {
+        self.down_cost[s as usize * self.num_leaves + leaf_idx as usize]
+    }
+}
+
+/// Algorithm 1: compute costs and dividers.
+///
+/// Upward sweep (switches in ascending level): relax each switch's
+/// up-neighbors with `c+1` (yielding pure-down costs) and propagate
+/// dividers `π = Π_s · #upgroups(s)` with the chosen reduction. Downward
+/// sweep (descending level): relax down-neighbors with `c+1`, adding
+/// up*/down* paths.
+pub fn costs(topo: &Topology, prep: &Prep, reduction: DividerReduction) -> Costs {
+    let ns = topo.switches.len();
+    let nl = prep.leaves.len();
+    let mut cost = vec![INF; ns * nl];
+    let mut divider = vec![1u64; ns];
+    let mut divider_set = vec![false; ns];
+    for (li, &l) in prep.leaves.iter().enumerate() {
+        cost[l as usize * nl + li] = 0;
+    }
+    // Upward sweep.
+    for &s in &prep.by_level_up {
+        let su = s as usize;
+        let pi = divider[su] * prep.up_groups[su].max(1) as u64;
+        for g in &prep.groups[su] {
+            if !g.up {
+                continue;
+            }
+            let r = g.remote as usize;
+            // Cost relaxation toward the up-neighbor.
+            for li in 0..nl {
+                let via = cost[su * nl + li].saturating_add(1);
+                if via < cost[r * nl + li] {
+                    cost[r * nl + li] = via;
+                }
+            }
+            // Divider reduction.
+            match reduction {
+                DividerReduction::Max => {
+                    if pi > divider[r] {
+                        divider[r] = pi;
+                    }
+                }
+                DividerReduction::FirstPath => {
+                    if !divider_set[r] {
+                        divider[r] = pi;
+                        divider_set[r] = true;
+                    }
+                }
+            }
+        }
+    }
+    let down_cost = cost.clone();
+    // Downward sweep.
+    for &s in prep.by_level_up.iter().rev() {
+        let su = s as usize;
+        for g in &prep.groups[su] {
+            if g.up {
+                continue;
+            }
+            let r = g.remote as usize;
+            for li in 0..nl {
+                let via = cost[su * nl + li].saturating_add(1);
+                if via < cost[r * nl + li] {
+                    cost[r * nl + li] = via;
+                }
+            }
+        }
+    }
+    Costs {
+        cost,
+        down_cost,
+        divider,
+        num_leaves: nl,
+    }
+}
+
+/// Plain BFS hop distances from `from` to every switch (undirected,
+/// ignoring levels) — the MinHop metric.
+pub fn bfs_dist(topo: &Topology, from: SwitchId) -> Vec<u16> {
+    let ns = topo.switches.len();
+    let mut dist = vec![INF; ns];
+    let mut queue = std::collections::VecDeque::new();
+    dist[from as usize] = 0;
+    queue.push_back(from);
+    while let Some(s) = queue.pop_front() {
+        let d = dist[s as usize];
+        for p in &topo.switches[s as usize].ports {
+            if let PortTarget::Switch { sw: r, .. } = *p {
+                if dist[r as usize] == INF {
+                    dist[r as usize] = d + 1;
+                    queue.push_back(r);
+                }
+            }
+        }
+    }
+    dist
+}
+
+/// Derive ranks (levels) from scratch, as the paper's preprocessing does:
+/// leaf switches (those with attached nodes) are level 0 and every other
+/// switch gets its undirected BFS distance to the nearest leaf. On intact
+/// and moderately-degraded PGFTs this equals the constructed level; it is
+/// used by tests and by generic (non-PGFT) inputs.
+pub fn derive_ranks(topo: &Topology) -> Vec<u8> {
+    let ns = topo.switches.len();
+    let mut rank = vec![u8::MAX; ns];
+    let mut queue = std::collections::VecDeque::new();
+    for (s, sw) in topo.switches.iter().enumerate() {
+        if sw.ports.iter().any(|p| matches!(p, PortTarget::Node { .. })) {
+            rank[s] = 0;
+            queue.push_back(s as SwitchId);
+        }
+    }
+    while let Some(s) = queue.pop_front() {
+        let r = rank[s as usize];
+        for p in &topo.switches[s as usize].ports {
+            if let PortTarget::Switch { sw: n, .. } = *p {
+                if rank[n as usize] == u8::MAX {
+                    rank[n as usize] = r + 1;
+                    queue.push_back(n);
+                }
+            }
+        }
+    }
+    rank
+}
+
+/// The destination's leaf switch λ_d.
+#[inline]
+pub fn leaf_of(topo: &Topology, d: NodeId) -> SwitchId {
+    topo.nodes[d as usize].leaf
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::pgft::PgftParams;
+
+    #[test]
+    fn fig1_costs_structure() {
+        let t = PgftParams::fig1().build();
+        let prep = Prep::new(&t);
+        let c = costs(&t, &prep, DividerReduction::Max);
+        // Leaf to itself: 0; leaf to any other leaf: 2 (shared mid) or 4.
+        for (li, &l) in prep.leaves.iter().enumerate() {
+            for (lj, &l2) in prep.leaves.iter().enumerate() {
+                let v = c.cost(l, lj as u32);
+                if li == lj {
+                    assert_eq!(v, 0);
+                } else {
+                    assert!(v == 2 || v == 4, "leaf {l}->{l2} cost {v}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fig1_dividers() {
+        let t = PgftParams::fig1().build();
+        let prep = Prep::new(&t);
+        let c = costs(&t, &prep, DividerReduction::Max);
+        for (s, sw) in t.switches.iter().enumerate() {
+            let expect = match sw.level {
+                0 => 1,
+                1 => 2, // leaf up-groups = w2 = 2
+                2 => 4, // 2 * w3 = 2*2
+                _ => unreachable!(),
+            };
+            assert_eq!(c.divider[s], expect, "switch {s} level {}", sw.level);
+        }
+    }
+
+    #[test]
+    fn down_cost_is_infinite_upward() {
+        let t = PgftParams::fig1().build();
+        let prep = Prep::new(&t);
+        let c = costs(&t, &prep, DividerReduction::Max);
+        // From a leaf, pure-down cost to a different leaf is INF.
+        let l0 = prep.leaves[0];
+        assert_eq!(c.down(l0, 1), INF);
+        assert_eq!(c.down(l0, 0), 0);
+    }
+
+    #[test]
+    fn cost_upper_bounds_down_cost() {
+        let t = PgftParams::small().build();
+        let prep = Prep::new(&t);
+        let c = costs(&t, &prep, DividerReduction::Max);
+        for s in 0..t.switches.len() {
+            for li in 0..prep.leaves.len() {
+                assert!(c.cost[s * prep.leaves.len() + li] <= c.down_cost[s * prep.leaves.len() + li]);
+            }
+        }
+    }
+
+    #[test]
+    fn groups_sorted_by_uuid_and_parallel_coalesced() {
+        let t = PgftParams::fig1().build();
+        let prep = Prep::new(&t);
+        for (s, gs) in prep.groups.iter().enumerate() {
+            for w in gs.windows(2) {
+                assert!(
+                    t.switches[w[0].remote as usize].uuid
+                        < t.switches[w[1].remote as usize].uuid
+                );
+            }
+            // In fig1 leaves have p2 = 2 parallel links per up neighbor.
+            if t.switches[s].level == 0 {
+                for g in gs {
+                    assert_eq!(g.ports.len(), 2);
+                    assert!(g.up);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn derive_ranks_matches_constructed() {
+        let t = PgftParams::small().build();
+        let ranks = derive_ranks(&t);
+        for (s, sw) in t.switches.iter().enumerate() {
+            assert_eq!(ranks[s], sw.level, "switch {s}");
+        }
+    }
+
+    #[test]
+    fn bfs_dist_sane() {
+        let t = PgftParams::fig1().build();
+        let l0 = t.leaf_switches()[0];
+        let d = bfs_dist(&t, l0);
+        assert_eq!(d[l0 as usize], 0);
+        // Everything reachable within 4 hops in fig1.
+        assert!(d.iter().all(|&x| x <= 4));
+    }
+}

@@ -1,0 +1,439 @@
+//! **Dmodc** — the paper's contribution: closed-form fault-resilient
+//! deterministic routing for (possibly degraded) PGFTs.
+//!
+//! Pipeline (Section 3):
+//! 1. *Rank* — leaf switches are the lowest level (constructed levels,
+//!    cross-checked by [`common::derive_ranks`] in tests).
+//! 2. *Port groups* — ports grouped by remote switch, sorted by UUID
+//!    ([`common::Prep`]).
+//! 3. *Cost & divider* — Algorithm 1 ([`common::costs`]): up*/down*
+//!    restricted hop costs `c_{s,l}` to every leaf, and dividers `Π_s`
+//!    propagated as the max (or first-path, for the ablation) of
+//!    `Π_child · #upgroups(child)`.
+//! 4. *Topological NIDs* — Algorithm 2 ([`topological_nids`]): cluster
+//!    leaves by proximity starting from the lowest UUID, numbering their
+//!    nodes contiguously in port-rank order.
+//! 5. *Routes* — equations (1)–(4) ([`route`]): at switch `s` for
+//!    destination `d`, among the UUID-ordered port groups strictly closer
+//!    to λ_d, pick group `⌊t_d/Π_s⌋ mod #C` and within it port
+//!    `⌊t_d/(Π_s·#C)⌋ mod #g`, computed in parallel with switch-level
+//!    granularity.
+
+use super::common::{self, Costs, DividerReduction, Prep, INF};
+use super::Lft;
+use crate::topology::{NodeId, PortTarget, Topology};
+use crate::util::par::parallel_for_mut;
+
+/// How node identifiers are assigned before the modulo arithmetic.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NidOrder {
+    /// Algorithm 2: contiguous per proximity cluster (the paper).
+    Topological,
+    /// Plain leaf-UUID order without clustering — the ablation showing why
+    /// Algorithm 2 matters for shift patterns.
+    UuidFlat,
+}
+
+/// Tunable knobs (defaults reproduce the paper).
+#[derive(Clone, Copy, Debug)]
+pub struct Options {
+    pub reduction: DividerReduction,
+    pub nid_order: NidOrder,
+}
+
+impl Default for Options {
+    fn default() -> Self {
+        Self {
+            reduction: DividerReduction::Max,
+            nid_order: NidOrder::Topological,
+        }
+    }
+}
+
+/// Algorithm 2: topological node identifiers.
+///
+/// Starting from the lowest-UUID unnumbered leaf `l`, the cluster of
+/// remaining leaves within `μ = min_{l'} c_{l,l'}` hops (which always
+/// includes `l` itself) is numbered leaf by leaf, nodes in port-rank order.
+pub fn topological_nids(topo: &Topology, prep: &Prep, costs: &Costs) -> Vec<u64> {
+    let mut nids = vec![0u64; topo.nodes.len()];
+    // X: leaf indices (into prep.leaves) sorted by switch UUID.
+    let mut x: Vec<u32> = (0..prep.leaves.len() as u32).collect();
+    x.sort_by_key(|&li| topo.switches[prep.leaves[li as usize] as usize].uuid);
+    let mut t = 0u64;
+    while !x.is_empty() {
+        let l = x[0];
+        let lsw = prep.leaves[l as usize];
+        let mu = x
+            .iter()
+            .skip(1)
+            .map(|&li| costs.cost(lsw, li))
+            .min()
+            .unwrap_or(INF);
+        // Number every remaining leaf within mu, in X (UUID) order.
+        let mut rest = Vec::with_capacity(x.len());
+        for &li in &x {
+            if costs.cost(lsw, li) <= mu {
+                for n in topo.nodes_of_leaf(prep.leaves[li as usize]) {
+                    nids[n as usize] = t;
+                    t += 1;
+                }
+            } else {
+                rest.push(li);
+            }
+        }
+        x = rest;
+    }
+    nids
+}
+
+/// Flat UUID-ordered NIDs (ablation variant).
+fn uuid_flat_nids(topo: &Topology, prep: &Prep) -> Vec<u64> {
+    let mut order: Vec<u32> = (0..prep.leaves.len() as u32).collect();
+    order.sort_by_key(|&li| topo.switches[prep.leaves[li as usize] as usize].uuid);
+    let mut nids = vec![0u64; topo.nodes.len()];
+    let mut t = 0u64;
+    for &li in &order {
+        for n in topo.nodes_of_leaf(prep.leaves[li as usize]) {
+            nids[n as usize] = t;
+            t += 1;
+        }
+    }
+    nids
+}
+
+/// Precomputed Dmodc state, exposing the intermediate products for tests,
+/// the fabric manager, and the ablation benches.
+pub struct Router {
+    pub prep: Prep,
+    pub costs: Costs,
+    pub nids: Vec<u64>,
+    pub opts: Options,
+}
+
+impl Router {
+    pub fn new(topo: &Topology, opts: Options) -> Self {
+        let prep = Prep::new(topo);
+        let costs = common::costs(topo, &prep, opts.reduction);
+        let nids = match opts.nid_order {
+            NidOrder::Topological => topological_nids(topo, &prep, &costs),
+            NidOrder::UuidFlat => uuid_flat_nids(topo, &prep),
+        };
+        Self {
+            prep,
+            costs,
+            nids,
+            opts,
+        }
+    }
+
+    /// Equation (1): indices (into `prep.groups[s]`) of the port groups of
+    /// `s` strictly closer to leaf-index `li`. Groups are already
+    /// UUID-ordered, so the selection preserves the paper's ordering.
+    pub fn closer_groups(&self, s: u32, li: u32) -> Vec<u16> {
+        let mut out = Vec::new();
+        self.closer_groups_into(s, li, &mut out);
+        out
+    }
+
+    /// Allocation-free variant of [`Router::closer_groups`] for the hot
+    /// loop (the buffer is reused across the ~switches × leaves calls).
+    pub fn closer_groups_into(&self, s: u32, li: u32, out: &mut Vec<u16>) {
+        out.clear();
+        let here = self.costs.cost(s, li);
+        for (i, g) in self.prep.groups[s as usize].iter().enumerate() {
+            if self.costs.cost(g.remote, li) < here {
+                out.push(i as u16);
+            }
+        }
+    }
+
+    /// Equations (3)+(4) for one destination, given its `closer_groups` —
+    /// the direct closed form (the hot loop in [`Router::lft`] uses an
+    /// incremental strength-reduced equivalent; tests assert they agree).
+    #[inline]
+    pub fn select_port(&self, s: u32, c: &[u16], t_d: u64) -> u16 {
+        let pi = self.costs.divider[s as usize].max(1);
+        let nc = c.len() as u64;
+        let gi = c[((t_d / pi) % nc) as usize];
+        let g = &self.prep.groups[s as usize][gi as usize];
+        let np = g.ports.len() as u64;
+        g.ports[((t_d / (pi * nc)) % np) as usize]
+    }
+
+    /// Equation (2): the alternative output ports `P_{s,d}` — every port of
+    /// every group leading closer to λ_d (adaptive-fallback candidates).
+    pub fn alternatives(&self, topo: &Topology, s: u32, d: NodeId) -> Vec<u16> {
+        let li = self.prep.leaf_index[topo.nodes[d as usize].leaf as usize];
+        self.closer_groups(s, li)
+            .iter()
+            .flat_map(|&gi| self.prep.groups[s as usize][gi as usize].ports.clone())
+            .collect()
+    }
+
+    /// Compute the full LFT (parallel over switches).
+    ///
+    /// Hot-path note (EXPERIMENTS.md §Perf): destinations are visited
+    /// leaf by leaf. Within one leaf the topological NIDs are contiguous
+    /// (Algorithm 2 numbers a leaf's nodes consecutively), so the modulo
+    /// chain of equations (3)–(4) is strength-reduced to incremental
+    /// counters — two u64 divisions per (switch, leaf) instead of per
+    /// (switch, destination).
+    pub fn lft(&self, topo: &Topology) -> Lft {
+        // Nodes grouped per leaf in port-rank order (= NID order per leaf).
+        let per_leaf: Vec<Vec<NodeId>> = self
+            .prep
+            .leaves
+            .iter()
+            .map(|&l| topo.nodes_of_leaf(l))
+            .collect();
+        let mut lft = Lft::new(topo.switches.len(), topo.nodes.len());
+        let mut rows = lft.rows_mut();
+        parallel_for_mut(&mut rows, |s, row| {
+            let sw = &topo.switches[s];
+            // Destinations directly linked: route straight out the port.
+            for (pi, p) in sw.ports.iter().enumerate() {
+                if let PortTarget::Node { node } = *p {
+                    row[node as usize] = pi as u16;
+                }
+            }
+            let pi_div = self.costs.divider[s].max(1);
+            let groups = &self.prep.groups[s];
+            let mut c = Vec::with_capacity(groups.len());
+            for (li, nodes) in per_leaf.iter().enumerate() {
+                let li = li as u32;
+                if self.prep.leaves[li as usize] == s as u32 {
+                    continue; // own leaf: direct ports already set
+                }
+                if self.costs.cost(s as u32, li) == INF {
+                    continue; // unreachable: leave NO_ROUTE
+                }
+                self.closer_groups_into(s as u32, li, &mut c);
+                if c.is_empty() {
+                    continue;
+                }
+                let nc = c.len() as u64;
+                // Incremental eq (3)+(4) state for t = nids[first node].
+                let t0 = self.nids[nodes[0] as usize];
+                debug_assert!(nodes
+                    .iter()
+                    .enumerate()
+                    .all(|(k, &n)| self.nids[n as usize] == t0 + k as u64));
+                let mut r_pi = t0 % pi_div; // t mod Π
+                let q = t0 / pi_div; // ⌊t/Π⌋
+                let mut gi_sel = (q % nc) as usize; // eq (3) index = q mod #C
+                let mut q2 = q / nc; // ⌊t/(Π·#C)⌋
+                for &d in nodes {
+                    let g = &groups[c[gi_sel] as usize];
+                    let np = g.ports.len() as u64;
+                    row[d as usize] = g.ports[(q2 % np) as usize];
+                    // Advance t by one: q increments when r_pi wraps, q2
+                    // increments when gi_sel (q mod #C) wraps.
+                    r_pi += 1;
+                    if r_pi == pi_div {
+                        r_pi = 0;
+                        gi_sel += 1;
+                        if gi_sel == nc as usize {
+                            gi_sel = 0;
+                            q2 += 1;
+                        }
+                    }
+                }
+            }
+        });
+        drop(rows);
+        lft
+    }
+}
+
+/// One-shot routing entry point.
+pub fn route(topo: &Topology, opts: &Options) -> Lft {
+    Router::new(topo, *opts).lft(topo)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::routing::{trace, validity};
+    use crate::topology::pgft::PgftParams;
+
+    #[test]
+    fn full_fig1_routes_all_pairs() {
+        let t = PgftParams::fig1().build();
+        let lft = route(&t, &Options::default());
+        validity::check(&t, &lft).expect("fig1 must route");
+        for s in 0..t.nodes.len() as u32 {
+            for d in 0..t.nodes.len() as u32 {
+                if s != d {
+                    let path = trace(&t, &lft, s, d).expect("path exists");
+                    assert!(path.len() <= 2 * 3 + 1);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn nids_are_a_permutation_and_leaf_contiguous() {
+        let t = PgftParams::small().build();
+        let r = Router::new(&t, Options::default());
+        let mut sorted = r.nids.clone();
+        sorted.sort_unstable();
+        let expect: Vec<u64> = (0..t.nodes.len() as u64).collect();
+        assert_eq!(sorted, expect);
+        // Nodes of one leaf get contiguous NIDs in port order.
+        for &l in &t.leaf_switches() {
+            let ns = t.nodes_of_leaf(l);
+            let base = r.nids[ns[0] as usize];
+            for (k, &n) in ns.iter().enumerate() {
+                assert_eq!(r.nids[n as usize], base + k as u64);
+            }
+        }
+    }
+
+    #[test]
+    fn full_pgft_balances_leaf_uplinks() {
+        // On an intact PGFT, destinations behind other leaves must spread
+        // across all uplink ports of a leaf switch (the Dmodk guarantee).
+        let t = PgftParams::fig1().build();
+        let r = Router::new(&t, Options::default());
+        let lft = r.lft(&t);
+        let leaf = t.leaf_switches()[0];
+        let nup = t.switches[leaf as usize]
+            .ports
+            .iter()
+            .filter(|p| matches!(p, PortTarget::Switch { .. }))
+            .count();
+        let mut used = vec![0usize; t.switches[leaf as usize].ports.len()];
+        for d in 0..t.nodes.len() as u32 {
+            if t.nodes[d as usize].leaf != leaf {
+                used[lft.get(leaf, d) as usize] += 1;
+            }
+        }
+        let remote: Vec<usize> = used
+            .iter()
+            .enumerate()
+            .filter(|(p, _)| {
+                matches!(
+                    t.switches[leaf as usize].ports[*p],
+                    PortTarget::Switch { .. }
+                )
+            })
+            .map(|(_, &c)| c)
+            .collect();
+        assert_eq!(remote.len(), nup);
+        let (min, max) = (
+            *remote.iter().min().unwrap(),
+            *remote.iter().max().unwrap(),
+        );
+        // 10 remote destinations over 4 uplink ports: at most off-by-one
+        // imbalance per the modulo rule.
+        assert!(max - min <= 1, "uplink loads {remote:?}");
+    }
+
+    #[test]
+    fn alternatives_superset_of_choice() {
+        let t = PgftParams::fig1().build();
+        let r = Router::new(&t, Options::default());
+        let lft = r.lft(&t);
+        for s in 0..t.switches.len() as u32 {
+            for d in 0..t.nodes.len() as u32 {
+                if t.nodes[d as usize].leaf == s {
+                    continue;
+                }
+                let alts = r.alternatives(&t, s, d);
+                let chosen = lft.get(s, d);
+                if chosen != crate::routing::NO_ROUTE {
+                    assert!(alts.contains(&chosen), "s={s} d={d}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn degraded_still_routes_when_connected() {
+        use crate::topology::degrade;
+        use crate::util::rng::Rng;
+        let t = PgftParams::small().build();
+        let mut rng = Rng::new(21);
+        for _ in 0..10 {
+            let d = degrade::remove_random_links(&t, &mut rng, 4);
+            let lft = route(&d, &Options::default());
+            // If the validity condition holds, every pair must trace.
+            if validity::check(&d, &lft).is_ok() {
+                for s in [0u32, 5, 17] {
+                    for dst in [1u32, 9, 23] {
+                        if s != dst {
+                            assert!(trace(&d, &lft, s, dst).is_some());
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn uuid_flat_nids_also_permutation() {
+        let t = PgftParams::small().build();
+        let r = Router::new(
+            &t,
+            Options {
+                nid_order: NidOrder::UuidFlat,
+                ..Options::default()
+            },
+        );
+        let mut sorted = r.nids.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..t.nodes.len() as u64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn incremental_loop_matches_closed_form() {
+        // The strength-reduced hot loop must agree with the literal
+        // equations (3)-(4) on every (switch, destination) pair, including
+        // under degradation.
+        use crate::topology::degrade;
+        use crate::util::rng::Rng;
+        let base = PgftParams::small().build();
+        let mut rng = Rng::new(17);
+        for round in 0..4 {
+            let t = if round == 0 {
+                base.clone()
+            } else {
+                degrade::remove_random_links(&base, &mut rng, 4 * round)
+            };
+            let r = Router::new(&t, Options::default());
+            let lft = r.lft(&t);
+            for s in 0..t.switches.len() as u32 {
+                for (d, node) in t.nodes.iter().enumerate() {
+                    if node.leaf == s {
+                        continue;
+                    }
+                    let li = r.prep.leaf_index[node.leaf as usize];
+                    if r.costs.cost(s, li) == crate::routing::common::INF {
+                        continue;
+                    }
+                    let c = r.closer_groups(s, li);
+                    let want = if c.is_empty() {
+                        crate::routing::NO_ROUTE
+                    } else {
+                        r.select_port(s, &c, r.nids[d])
+                    };
+                    assert_eq!(lft.get(s, d as u32), want, "s={s} d={d} round={round}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn first_path_reduction_routes() {
+        let t = PgftParams::fig1().build();
+        let lft = route(
+            &t,
+            &Options {
+                reduction: DividerReduction::FirstPath,
+                ..Options::default()
+            },
+        );
+        validity::check(&t, &lft).expect("first-path variant must route");
+    }
+}

@@ -1,0 +1,63 @@
+//! **Dmodk** — the classical closed-form routing for *complete* PGFTs that
+//! Dmodc generalizes (Zahavi's D-mod-k).
+//!
+//! Dmodk assumes the intact PGFT's arithmetic structure: node identifiers
+//! are the topologically-contiguous construction order and dividers are the
+//! static products of the tree's upward arities. Dmodc recovers exactly
+//! this behaviour on an intact fabric while tolerating degradation; Dmodk
+//! is kept as the reference the equivalence tests and ablations compare
+//! against (it has no fault story: on a degraded PGFT its static arithmetic
+//! may select dead ports, which the implementation maps to the dynamic
+//! cost-based group set like Dmodc — the difference is purely the NID
+//! assignment and static dividers).
+
+use super::common::{self, DividerReduction, Prep};
+use super::dmodc::{Options, Router};
+use super::Lft;
+use crate::topology::Topology;
+
+/// Route with construction-order NIDs and Algorithm-1 dividers (which on an
+/// intact PGFT equal the static `Π w` products).
+pub fn route(topo: &Topology) -> Lft {
+    let opts = Options::default();
+    let prep = Prep::new(topo);
+    let costs = common::costs(topo, &prep, DividerReduction::Max);
+    // Construction order: node ids are already topologically contiguous
+    // (the PGFT builder attaches nodes in digit order).
+    let nids = (0..topo.nodes.len() as u64).collect();
+    let router = Router {
+        prep,
+        costs,
+        nids,
+        opts,
+    };
+    router.lft(topo)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::routing::validity;
+    use crate::topology::pgft::PgftParams;
+
+    #[test]
+    fn intact_pgft_valid() {
+        let t = PgftParams::fig1().build();
+        let lft = route(&t);
+        validity::check(&t, &lft).unwrap();
+        assert_eq!(validity::stats(&t, &lft).downup_turns, 0);
+    }
+
+    #[test]
+    fn balances_like_dmodc_on_intact_pgft() {
+        // Same per-port load distribution as Dmodc on the intact fabric
+        // (NID *assignment* differs, but the load multiset must match).
+        use crate::analysis::CongestionAnalyzer;
+        let t = PgftParams::fig1().build();
+        let k = route(&t);
+        let c = crate::routing::dmodc::route(&t, &Default::default());
+        let ak = CongestionAnalyzer::new(&t, &k).all_to_all();
+        let ac = CongestionAnalyzer::new(&t, &c).all_to_all();
+        assert_eq!(ak, ac, "dmodk and dmodc A2A risk must match on intact PGFT");
+    }
+}

@@ -1,0 +1,197 @@
+//! Linear-forwarding-table dump/load (paper §4: "linear forwarding tables
+//! are dumped for analysis").
+//!
+//! A stable, human-greppable text format so external tooling (or a later
+//! session) can analyze tables produced by any engine:
+//!
+//! ```text
+//! # dmodc-lft v1
+//! # switches <S> nodes <N>
+//! switch <idx> uuid <hex> level <l> ports <P>
+//! <dst> <port>           (one per routed destination; NO_ROUTE omitted)
+//! ...
+//! ```
+
+use super::{Lft, NO_ROUTE};
+use crate::topology::Topology;
+use std::fmt::Write as _;
+use std::io::{BufRead, BufReader, Read};
+
+/// Serialize tables (with enough topology identity to re-bind them).
+pub fn dump(topo: &Topology, lft: &Lft) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "# dmodc-lft v1");
+    let _ = writeln!(
+        out,
+        "# switches {} nodes {}",
+        topo.switches.len(),
+        topo.nodes.len()
+    );
+    for (s, sw) in topo.switches.iter().enumerate() {
+        let _ = writeln!(
+            out,
+            "switch {} uuid {:016x} level {} ports {}",
+            s,
+            sw.uuid,
+            sw.level,
+            sw.ports.len()
+        );
+        for d in 0..topo.nodes.len() as u32 {
+            let p = lft.get(s as u32, d);
+            if p != NO_ROUTE {
+                let _ = writeln!(out, "{d} {p}");
+            }
+        }
+    }
+    out
+}
+
+/// Write a dump to a file, creating parent directories.
+pub fn dump_to_file(
+    topo: &Topology,
+    lft: &Lft,
+    path: &str,
+) -> std::io::Result<()> {
+    if let Some(parent) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, dump(topo, lft))
+}
+
+/// Parse a dump back into an [`Lft`], validating the header against the
+/// given topology (switch count, node count, per-switch UUID).
+pub fn load(topo: &Topology, reader: impl Read) -> Result<Lft, String> {
+    let mut lft = Lft::new(topo.switches.len(), topo.nodes.len());
+    let mut current: Option<u32> = None;
+    for (lineno, line) in BufReader::new(reader).lines().enumerate() {
+        let line = line.map_err(|e| format!("line {}: {e}", lineno + 1))?;
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# switches ") {
+            let mut it = rest.split_whitespace();
+            let s: usize = it.next().and_then(|v| v.parse().ok()).ok_or("bad header")?;
+            let nodes_kw = it.next();
+            let n: usize = it.next().and_then(|v| v.parse().ok()).ok_or("bad header")?;
+            if nodes_kw != Some("nodes") || s != topo.switches.len() || n != topo.nodes.len()
+            {
+                return Err(format!(
+                    "dump is for a different fabric ({s} switches / {n} nodes, \
+                     topology has {} / {})",
+                    topo.switches.len(),
+                    topo.nodes.len()
+                ));
+            }
+            continue;
+        }
+        if line.starts_with('#') {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("switch ") {
+            let f: Vec<&str> = rest.split_whitespace().collect();
+            if f.len() != 7 || f[1] != "uuid" || f[3] != "level" || f[5] != "ports" {
+                return Err(format!("line {}: malformed switch header", lineno + 1));
+            }
+            let idx: u32 = f[0].parse().map_err(|_| "bad switch idx")?;
+            let uuid = u64::from_str_radix(f[2], 16).map_err(|_| "bad uuid")?;
+            let sw = topo
+                .switches
+                .get(idx as usize)
+                .ok_or_else(|| format!("switch {idx} out of range"))?;
+            if sw.uuid != uuid {
+                return Err(format!(
+                    "switch {idx}: uuid mismatch ({uuid:016x} vs {:016x})",
+                    sw.uuid
+                ));
+            }
+            current = Some(idx);
+            continue;
+        }
+        // Route line: "<dst> <port>".
+        let sw = current.ok_or_else(|| format!("line {}: route before switch", lineno + 1))?;
+        let mut it = line.split_whitespace();
+        let d: u32 = it
+            .next()
+            .and_then(|v| v.parse().ok())
+            .ok_or_else(|| format!("line {}: bad dst", lineno + 1))?;
+        let p: u16 = it
+            .next()
+            .and_then(|v| v.parse().ok())
+            .ok_or_else(|| format!("line {}: bad port", lineno + 1))?;
+        if d as usize >= topo.nodes.len() {
+            return Err(format!("line {}: dst {d} out of range", lineno + 1));
+        }
+        if p as usize >= topo.switches[sw as usize].ports.len() {
+            return Err(format!("line {}: port {p} out of range", lineno + 1));
+        }
+        lft.set(sw, d, p);
+    }
+    Ok(lft)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::routing::{route_unchecked, Algo};
+    use crate::topology::pgft::PgftParams;
+
+    #[test]
+    fn roundtrip_all_engines() {
+        let t = PgftParams::fig1().build();
+        for algo in Algo::ALL {
+            let lft = route_unchecked(algo, &t);
+            let text = dump(&t, &lft);
+            let back = load(&t, text.as_bytes()).unwrap();
+            assert_eq!(lft.raw(), back.raw(), "{}", algo.name());
+        }
+    }
+
+    #[test]
+    fn rejects_wrong_fabric() {
+        let t = PgftParams::fig1().build();
+        let other = PgftParams::small().build();
+        let lft = route_unchecked(Algo::Dmodc, &t);
+        let text = dump(&t, &lft);
+        assert!(load(&other, text.as_bytes()).is_err());
+    }
+
+    #[test]
+    fn rejects_uuid_mismatch() {
+        use crate::topology::pgft::UuidMode;
+        let t = PgftParams::fig1().build();
+        let seq = PgftParams::fig1().with_uuid_mode(UuidMode::Sequential).build();
+        let lft = route_unchecked(Algo::Dmodc, &t);
+        assert!(load(&seq, dump(&t, &lft).as_bytes()).is_err());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let t = PgftParams::fig1().build();
+        assert!(load(&t, "switch zero uuid xx".as_bytes()).is_err());
+        assert!(load(&t, "5 3".as_bytes()).is_err(), "route before switch");
+        // Port out of range.
+        let lft = route_unchecked(Algo::Dmodc, &t);
+        let text = dump(&t, &lft) + "switch 0 uuid ";
+        let _ = text; // malformed trailing header:
+        let bad = format!(
+            "# switches {} nodes {}\nswitch 0 uuid {:016x} level 0 ports {}\n0 999\n",
+            t.switches.len(),
+            t.nodes.len(),
+            t.switches[0].uuid,
+            t.switches[0].ports.len()
+        );
+        assert!(load(&t, bad.as_bytes()).is_err());
+    }
+
+    #[test]
+    fn partial_tables_preserved() {
+        // NO_ROUTE entries are omitted from the dump and stay NO_ROUTE.
+        let t = PgftParams::fig1().build();
+        let mut lft = route_unchecked(Algo::Dmodc, &t);
+        lft.set(0, 3, crate::routing::NO_ROUTE);
+        let back = load(&t, dump(&t, &lft).as_bytes()).unwrap();
+        assert_eq!(back.get(0, 3), crate::routing::NO_ROUTE);
+        assert_eq!(lft.raw(), back.raw());
+    }
+}

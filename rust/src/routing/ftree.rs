@@ -1,0 +1,156 @@
+//! OpenSM-style **Ftree** routing (Zahavi's optimized fat-tree engine).
+//!
+//! Destinations are routed one by one (leaves in UUID order, nodes in port
+//! order — the internal ordering the paper's shift analysis aligns with).
+//! For each destination: a *wave* climbs from the destination's leaf,
+//! assigning the down-going route on every switch that can reach an
+//! already-routed switch below, choosing the least-subscribed down port
+//! (per-port counters persist across destinations, which is what spreads
+//! consecutive destinations across parallel spines). Switches not reached
+//! by the wave (non-ancestors under degradation) then route *up* toward a
+//! routed up-neighbor, balanced by separate up-port counters.
+
+use super::common::Prep;
+use super::{Lft, NO_ROUTE};
+use crate::topology::{SwitchId, Topology};
+
+pub fn route(topo: &Topology) -> Lft {
+    let prep = Prep::new(topo);
+    let ns = topo.switches.len();
+    let mut lft = Lft::new(ns, topo.nodes.len());
+    let mut down_load = vec![0u32; topo.num_ports()];
+    let mut up_load = vec![0u32; topo.num_ports()];
+
+    // Destination order: leaves by UUID, nodes in port-rank order.
+    let mut leaves = prep.leaves.clone();
+    leaves.sort_by_key(|&l| topo.switches[l as usize].uuid);
+
+    // Switches per level (descending for the up-routing pass).
+    let max_level = topo.num_levels;
+    let mut by_level: Vec<Vec<SwitchId>> = vec![Vec::new(); max_level as usize];
+    for s in 0..ns as SwitchId {
+        by_level[topo.switches[s as usize].level as usize].push(s);
+    }
+    // Stable UUID order inside each level (OpenSM iterates by GUID).
+    for lvl in &mut by_level {
+        lvl.sort_by_key(|&s| topo.switches[s as usize].uuid);
+    }
+
+    let mut routed = vec![false; ns];
+    for &leaf in &leaves {
+        for d in topo.nodes_of_leaf(leaf) {
+            routed.fill(false);
+            routed[leaf as usize] = true;
+            lft.set(leaf, d, topo.nodes[d as usize].leaf_port);
+
+            // Wave upward: level k switches route down toward any routed
+            // lower switch.
+            for k in 1..max_level as usize {
+                for &s in &by_level[k] {
+                    let su = s as usize;
+                    let mut best: Option<(u32, usize, u16)> = None;
+                    for (gi, g) in prep.groups[su].iter().enumerate() {
+                        if g.up || !routed[g.remote as usize] {
+                            continue;
+                        }
+                        for &p in &g.ports {
+                            let pid = topo.port_id(s, p) as usize;
+                            let key = (down_load[pid], gi, p);
+                            if best.map_or(true, |b| key < b) {
+                                best = Some(key);
+                            }
+                        }
+                    }
+                    if let Some((_, _, port)) = best {
+                        lft.set(s, d, port);
+                        down_load[topo.port_id(s, port) as usize] += 1;
+                        routed[su] = true;
+                    }
+                }
+            }
+            // Up-routing pass for non-ancestors, upper levels first so a
+            // lower switch can chain through an already-up-routed one.
+            for k in (0..max_level as usize - 1).rev() {
+                for &s in &by_level[k] {
+                    let su = s as usize;
+                    if routed[su] {
+                        continue;
+                    }
+                    let mut best: Option<(u32, usize, u16)> = None;
+                    for (gi, g) in prep.groups[su].iter().enumerate() {
+                        if !g.up || !routed[g.remote as usize] {
+                            continue;
+                        }
+                        for &p in &g.ports {
+                            let pid = topo.port_id(s, p) as usize;
+                            let key = (up_load[pid], gi, p);
+                            if best.map_or(true, |b| key < b) {
+                                best = Some(key);
+                            }
+                        }
+                    }
+                    if let Some((_, _, port)) = best {
+                        lft.set(s, d, port);
+                        up_load[topo.port_id(s, port) as usize] += 1;
+                        routed[su] = true;
+                    }
+                }
+            }
+        }
+    }
+    let _ = NO_ROUTE; // unrouted entries remain NO_ROUTE by construction
+    lft
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::routing::validity;
+    use crate::topology::pgft::PgftParams;
+
+    #[test]
+    fn intact_pgft_valid_and_updown() {
+        let t = PgftParams::fig1().build();
+        let lft = route(&t);
+        validity::check(&t, &lft).unwrap();
+        let st = validity::stats(&t, &lft);
+        assert_eq!(st.downup_turns, 0, "ftree is up*/down* by construction");
+        assert!(validity::channel_dependency_acyclic(&t, &lft));
+    }
+
+    #[test]
+    fn down_ports_spread_consecutive_destinations() {
+        // On an intact PGFT the per-port counters must spread the nodes of
+        // one remote leaf across distinct spine down-ports (the property
+        // that makes Ftree shift-optimal).
+        let t = PgftParams::fig1().build();
+        let lft = route(&t);
+        // Pick a top switch and check its down-port usage is balanced.
+        let top = (0..t.switches.len() as u32)
+            .find(|&s| t.switches[s as usize].level == 2)
+            .unwrap();
+        let mut counts = std::collections::HashMap::new();
+        for d in 0..t.nodes.len() as u32 {
+            let p = lft.get(top, d);
+            if p != NO_ROUTE {
+                *counts.entry(p).or_insert(0usize) += 1;
+            }
+        }
+        let max = counts.values().max().copied().unwrap_or(0);
+        let min = counts.values().min().copied().unwrap_or(0);
+        assert!(max - min <= 2, "top-switch down-port imbalance: {counts:?}");
+    }
+
+    #[test]
+    fn degraded_keeps_updown() {
+        use crate::topology::degrade;
+        use crate::util::rng::Rng;
+        let t = PgftParams::small().build();
+        let mut rng = Rng::new(7);
+        for _ in 0..10 {
+            let dt = degrade::remove_random_switches(&t, &mut rng, 3);
+            let lft = route(&dt);
+            assert_eq!(validity::stats(&dt, &lft).downup_turns, 0);
+        }
+    }
+}

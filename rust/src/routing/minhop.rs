@@ -1,0 +1,118 @@
+//! OpenSM-style **MinHop** routing: unrestricted shortest paths balanced by
+//! global port-load counters (lowest load, then remote UUID, then port).
+//!
+//! MinHop ignores up/down shapes entirely — on an intact PGFT its routes
+//! coincide with UPDN's (shortest paths in a fat-tree are up*/down*), which
+//! is why the paper reports the two as visually identical; under heavy
+//! degradation it may pick paths with down→up turns (and therefore is not
+//! deadlock-free without extra virtual lanes, which the paper's analysis
+//! deliberately ignores).
+
+use super::common::Prep;
+use super::{Lft, NO_ROUTE};
+use crate::topology::Topology;
+use std::collections::VecDeque;
+
+pub fn route(topo: &Topology) -> Lft {
+    let prep = Prep::new(topo);
+    let ns = topo.switches.len();
+    let mut lft = Lft::new(ns, topo.nodes.len());
+    let mut load = vec![0u32; topo.num_ports()];
+
+    let mut dist = vec![u32::MAX; ns];
+    for d in 0..topo.nodes.len() as u32 {
+        let node = topo.nodes[d as usize];
+        let leaf = node.leaf;
+        dist.fill(u32::MAX);
+        dist[leaf as usize] = 0;
+        lft.set(leaf, d, node.leaf_port);
+        let mut queue = VecDeque::new();
+        queue.push_back(leaf);
+        let mut order: Vec<u32> = vec![leaf];
+        while let Some(s) = queue.pop_front() {
+            for g in &prep.groups[s as usize] {
+                if dist[g.remote as usize] == u32::MAX {
+                    dist[g.remote as usize] = dist[s as usize] + 1;
+                    queue.push_back(g.remote);
+                    order.push(g.remote);
+                }
+            }
+        }
+        // Assign egress ports in settle order (skip the leaf itself).
+        for &s in order.iter().skip(1) {
+            let su = s as usize;
+            let mut best: Option<(u32, usize, u16)> = None;
+            for (gi, g) in prep.groups[su].iter().enumerate() {
+                if dist[g.remote as usize] + 1 != dist[su] {
+                    continue;
+                }
+                for &p in &g.ports {
+                    let pid = topo.port_id(s, p) as usize;
+                    let key = (load[pid], gi, p);
+                    if best.map_or(true, |b| key < b) {
+                        best = Some(key);
+                    }
+                }
+            }
+            if let Some((_, _, port)) = best {
+                lft.set(s, d, port);
+                load[topo.port_id(s, port) as usize] += 1;
+            } else {
+                lft.set(s, d, NO_ROUTE);
+            }
+        }
+    }
+    lft
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::routing::validity;
+    use crate::topology::pgft::PgftParams;
+
+    #[test]
+    fn intact_pgft_valid_and_updown() {
+        let t = PgftParams::fig1().build();
+        let lft = route(&t);
+        validity::check(&t, &lft).unwrap();
+        // Shortest paths in an intact fat-tree are up*/down*.
+        assert_eq!(validity::stats(&t, &lft).downup_turns, 0);
+    }
+
+    #[test]
+    fn survives_heavy_link_loss() {
+        use crate::topology::degrade;
+        use crate::util::rng::Rng;
+        let t = PgftParams::small().build();
+        let mut rng = Rng::new(44);
+        let dt = degrade::remove_random_links(&t, &mut rng, 12);
+        let lft = route(&dt);
+        // MinHop routes whatever is connected; stats must be consistent.
+        let st = validity::stats(&dt, &lft);
+        assert_eq!(st.routes + st.unreachable, {
+            let leaves = dt.leaf_switches().len();
+            leaves * dt.nodes.len() - dt.nodes.len()
+        });
+    }
+
+    #[test]
+    fn shortest_hop_counts() {
+        let t = PgftParams::fig1().build();
+        let lft = route(&t);
+        // Same-leaf pairs: 1 hop (the node port); mid-distance 3; far 5.
+        for s in 0..t.nodes.len() as u32 {
+            for d in 0..t.nodes.len() as u32 {
+                if s == d {
+                    continue;
+                }
+                let path = crate::routing::trace(&t, &lft, s, d).unwrap();
+                if t.nodes[s as usize].leaf == t.nodes[d as usize].leaf {
+                    assert_eq!(path.len(), 1);
+                } else {
+                    assert!(path.len() == 3 || path.len() == 5, "len {}", path.len());
+                }
+            }
+        }
+    }
+}

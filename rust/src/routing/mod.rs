@@ -1,0 +1,232 @@
+//! Routing engines and forwarding-table machinery.
+//!
+//! [`Lft`] is the linear forwarding table a centralized fabric manager
+//! uploads to every switch: `output port = lft[(switch, destination node)]`.
+//! All engines are deterministic and oblivious (no traffic knowledge):
+//!
+//! * [`dmodc`] — **the paper's contribution**: closed-form modulo routing
+//!   for degraded PGFTs (Algorithms 1–2, equations (1)–(4)).
+//! * [`dmodk`] — the non-degraded PGFT baseline Dmodc generalizes.
+//! * [`ftree`] — OpenSM's fat-tree engine (per-destination balancing).
+//! * [`updn`] — OpenSM UPDN: up*/down* restricted shortest paths.
+//! * [`minhop`] — OpenSM MinHop: unrestricted shortest paths.
+//! * [`sssp`] — load-adaptive single-source shortest-path routing
+//!   (OpenSM's (DF)SSSP without virtual-lane assignment, as in the paper).
+
+pub mod common;
+pub mod dmodc;
+pub mod dmodk;
+pub mod dump;
+pub mod ftree;
+pub mod minhop;
+pub mod sssp;
+pub mod updn;
+pub mod validity;
+
+use crate::topology::{NodeId, PortTarget, SwitchId, Topology};
+
+/// Sentinel output port for "destination unreachable from this switch".
+pub const NO_ROUTE: u16 = u16::MAX;
+
+/// Linear forwarding tables for a whole fabric: row per switch, column per
+/// destination node.
+#[derive(Clone, Debug)]
+pub struct Lft {
+    ports: Vec<u16>,
+    num_nodes: usize,
+}
+
+impl Lft {
+    pub fn new(num_switches: usize, num_nodes: usize) -> Self {
+        Self {
+            ports: vec![NO_ROUTE; num_switches * num_nodes],
+            num_nodes,
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, sw: SwitchId, dst: NodeId) -> u16 {
+        self.ports[sw as usize * self.num_nodes + dst as usize]
+    }
+
+    #[inline]
+    pub fn set(&mut self, sw: SwitchId, dst: NodeId, port: u16) {
+        self.ports[sw as usize * self.num_nodes + dst as usize] = port;
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.num_nodes
+    }
+
+    pub fn num_switches(&self) -> usize {
+        if self.num_nodes == 0 {
+            0
+        } else {
+            self.ports.len() / self.num_nodes
+        }
+    }
+
+    /// Mutable row for one switch (used by parallel route computation).
+    pub fn row_mut(&mut self, sw: SwitchId) -> &mut [u16] {
+        let n = self.num_nodes;
+        &mut self.ports[sw as usize * n..(sw as usize + 1) * n]
+    }
+
+    /// Raw table access (row-major switch × destination).
+    pub fn raw(&self) -> &[u16] {
+        &self.ports
+    }
+
+    /// Split into per-switch rows for parallel writers.
+    pub fn rows_mut(&mut self) -> Vec<&mut [u16]> {
+        self.ports.chunks_mut(self.num_nodes.max(1)).collect()
+    }
+
+    /// Number of table entries that differ from `other` (same shape
+    /// required) — the upload-delta metric used by the fabric manager.
+    pub fn delta(&self, other: &Lft) -> usize {
+        assert_eq!(self.ports.len(), other.ports.len());
+        self.ports
+            .iter()
+            .zip(&other.ports)
+            .filter(|(a, b)| a != b)
+            .count()
+    }
+}
+
+/// Routing engine selector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Algo {
+    Dmodc,
+    Dmodk,
+    Ftree,
+    Updn,
+    MinHop,
+    Sssp,
+}
+
+impl Algo {
+    pub const ALL: [Algo; 6] = [
+        Algo::Dmodc,
+        Algo::Dmodk,
+        Algo::Ftree,
+        Algo::Updn,
+        Algo::MinHop,
+        Algo::Sssp,
+    ];
+
+    /// The algorithms compared in the paper's Figure 2/3.
+    pub const PAPER: [Algo; 5] = [
+        Algo::Dmodc,
+        Algo::Ftree,
+        Algo::Updn,
+        Algo::MinHop,
+        Algo::Sssp,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algo::Dmodc => "dmodc",
+            Algo::Dmodk => "dmodk",
+            Algo::Ftree => "ftree",
+            Algo::Updn => "updn",
+            Algo::MinHop => "minhop",
+            Algo::Sssp => "sssp",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Algo, String> {
+        Algo::ALL
+            .iter()
+            .copied()
+            .find(|a| a.name() == s)
+            .ok_or_else(|| format!("unknown algorithm {s:?}"))
+    }
+}
+
+/// Route `topo` with the chosen engine. Returns an error if any node pair
+/// is unroutable (the paper's validity condition); the partially-filled
+/// table is still available through [`route_unchecked`].
+pub fn route(algo: Algo, topo: &Topology) -> Result<Lft, String> {
+    let lft = route_unchecked(algo, topo);
+    validity::check(topo, &lft)?;
+    Ok(lft)
+}
+
+/// Route without the validity pass (callers that expect degraded-to-invalid
+/// topologies and want the table anyway).
+pub fn route_unchecked(algo: Algo, topo: &Topology) -> Lft {
+    match algo {
+        Algo::Dmodc => dmodc::route(topo, &dmodc::Options::default()),
+        Algo::Dmodk => dmodk::route(topo),
+        Algo::Ftree => ftree::route(topo),
+        Algo::Updn => updn::route(topo),
+        Algo::MinHop => minhop::route(topo),
+        Algo::Sssp => sssp::route(topo),
+    }
+}
+
+/// Trace the route of `(src, dst)` through `lft`, returning the sequence of
+/// global directed-port ids traversed (switch egress ports, including the
+/// final leaf→node port). `None` when the route is incomplete or loops.
+pub fn trace(topo: &Topology, lft: &Lft, src: NodeId, dst: NodeId) -> Option<Vec<u32>> {
+    let mut ports = Vec::with_capacity(2 * topo.num_levels as usize + 1);
+    let mut sw = topo.nodes[src as usize].leaf;
+    let max_hops = 4 * topo.num_levels as usize + 4;
+    loop {
+        let port = lft.get(sw, dst);
+        if port == NO_ROUTE {
+            return None;
+        }
+        ports.push(topo.port_id(sw, port));
+        match topo.switches[sw as usize].ports[port as usize] {
+            PortTarget::Node { node } if node == dst => return Some(ports),
+            PortTarget::Node { .. } => return None, // routed into the wrong node
+            PortTarget::Switch { sw: next, .. } => sw = next,
+        }
+        if ports.len() > max_hops {
+            return None; // loop
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lft_get_set_delta() {
+        let mut a = Lft::new(3, 4);
+        assert_eq!(a.get(1, 2), NO_ROUTE);
+        a.set(1, 2, 7);
+        assert_eq!(a.get(1, 2), 7);
+        let mut b = a.clone();
+        assert_eq!(a.delta(&b), 0);
+        b.set(0, 0, 3);
+        b.set(2, 3, 4);
+        assert_eq!(a.delta(&b), 2);
+    }
+
+    #[test]
+    fn algo_parse_roundtrip() {
+        for a in Algo::ALL {
+            assert_eq!(Algo::parse(a.name()).unwrap(), a);
+        }
+        assert!(Algo::parse("nope").is_err());
+    }
+
+    #[test]
+    fn rows_mut_partitions() {
+        let mut a = Lft::new(4, 5);
+        {
+            let rows = a.rows_mut();
+            assert_eq!(rows.len(), 4);
+            for (i, r) in rows.into_iter().enumerate() {
+                r[0] = i as u16;
+            }
+        }
+        for sw in 0..4 {
+            assert_eq!(a.get(sw, 0), sw as u16);
+        }
+    }
+}

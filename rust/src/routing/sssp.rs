@@ -1,0 +1,140 @@
+//! Load-adaptive **SSSP** routing (Hoefler's scheme, OpenSM's (DF)SSSP
+//! without the virtual-lane assignment — the paper's analysis explicitly
+//! ignores virtual channels).
+//!
+//! Destinations are routed one by one: a Dijkstra from the destination's
+//! leaf over edge weights `1 + load(port)` picks, for every switch, the
+//! cheapest egress; afterwards the load of every used port is increased by
+//! the number of source *nodes* whose route crosses it, so later
+//! destinations avoid hot links. Topology-agnostic: no level or up/down
+//! information is used at all, which is what makes it the most robust
+//! baseline under massive degradation (and among the slowest — Figure 3).
+
+use super::common::Prep;
+use super::{Lft, NO_ROUTE};
+use crate::topology::Topology;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+pub fn route(topo: &Topology) -> Lft {
+    let prep = Prep::new(topo);
+    let ns = topo.switches.len();
+    let mut lft = Lft::new(ns, topo.nodes.len());
+    let mut load = vec![0u64; topo.num_ports()];
+
+    // Nodes attached per switch (route-usage accumulation weights).
+    let mut nodes_on = vec![0u64; ns];
+    for n in &topo.nodes {
+        nodes_on[n.leaf as usize] += 1;
+    }
+
+    let mut dist = vec![u64::MAX; ns];
+    let mut egress = vec![NO_ROUTE; ns];
+    for d in 0..topo.nodes.len() as u32 {
+        let node = topo.nodes[d as usize];
+        let leaf = node.leaf;
+        dist.fill(u64::MAX);
+        egress.fill(NO_ROUTE);
+        dist[leaf as usize] = 0;
+        lft.set(leaf, d, node.leaf_port);
+
+        let mut heap: BinaryHeap<Reverse<(u64, u32)>> = BinaryHeap::new();
+        heap.push(Reverse((0, leaf)));
+        let mut order: Vec<u32> = Vec::with_capacity(ns);
+        while let Some(Reverse((dv, s))) = heap.pop() {
+            if dv > dist[s as usize] {
+                continue;
+            }
+            order.push(s);
+            // Relax: a neighbor r would route *into* s through r's port.
+            for g in &prep.groups[s as usize] {
+                let r = g.remote;
+                // r's ports toward s are the mirror of g; find r's cheapest.
+                for &p_here in &g.ports {
+                    // The remote end of (s, p_here):
+                    if let crate::topology::PortTarget::Switch { rport, .. } =
+                        topo.switches[s as usize].ports[p_here as usize]
+                    {
+                        let pid_r = topo.port_id(r, rport) as usize;
+                        let w = 1 + load[pid_r];
+                        let nd = dv + w;
+                        if nd < dist[r as usize] {
+                            dist[r as usize] = nd;
+                            egress[r as usize] = rport;
+                            heap.push(Reverse((nd, r)));
+                        }
+                    }
+                }
+            }
+        }
+        // Accumulate per-port usage: process switches farthest-first and
+        // push source-node counts down the parent pointers.
+        let mut acc = vec![0u64; ns];
+        for (s, &cnt) in nodes_on.iter().enumerate() {
+            acc[s] = cnt;
+        }
+        acc[leaf as usize] = acc[leaf as usize].saturating_sub(1); // d itself
+        for &s in order.iter().rev() {
+            let su = s as usize;
+            if s == leaf || egress[su] == NO_ROUTE {
+                continue;
+            }
+            lft.set(s, d, egress[su]);
+            if acc[su] > 0 {
+                load[topo.port_id(s, egress[su]) as usize] += acc[su];
+                if let crate::topology::PortTarget::Switch { sw: next, .. } =
+                    topo.switches[su].ports[egress[su] as usize]
+                {
+                    acc[next as usize] += acc[su];
+                }
+            }
+        }
+    }
+    lft
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::routing::validity;
+    use crate::topology::pgft::PgftParams;
+
+    #[test]
+    fn intact_pgft_valid() {
+        let t = PgftParams::fig1().build();
+        let lft = route(&t);
+        validity::check(&t, &lft).unwrap();
+    }
+
+    #[test]
+    fn robust_under_massive_degradation() {
+        use crate::topology::degrade;
+        use crate::util::rng::Rng;
+        let t = PgftParams::small().build();
+        let mut rng = Rng::new(55);
+        // Remove half of all cables; SSSP must still route every pair that
+        // remains connected (validity may fail, but traces must not loop).
+        let dt = degrade::remove_random_links(&t, &mut rng, t.num_cables() / 2);
+        let lft = route(&dt);
+        let st = validity::stats(&dt, &lft);
+        assert_eq!(
+            st.routes + st.unreachable,
+            dt.leaf_switches().len() * dt.nodes.len() - dt.nodes.len()
+        );
+    }
+
+    #[test]
+    fn load_spreading_differs_from_single_path() {
+        // With per-destination load updates, consecutive destinations on
+        // the same remote leaf should not all share one spine.
+        let t = PgftParams::fig1().build();
+        let lft = route(&t);
+        let leaf = t.leaf_switches()[0];
+        let remote: Vec<u32> = (0..t.nodes.len() as u32)
+            .filter(|&d| t.nodes[d as usize].leaf != leaf)
+            .collect();
+        let ports: std::collections::HashSet<u16> =
+            remote.iter().map(|&d| lft.get(leaf, d)).collect();
+        assert!(ports.len() > 1, "SSSP should spread uplinks");
+    }
+}

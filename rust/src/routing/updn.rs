@@ -1,0 +1,138 @@
+//! OpenSM-style **UPDN** routing: destination-based shortest paths
+//! restricted to up*/down* shapes, balanced by global port-load counters.
+//!
+//! Per destination, switches are settled in BFS order from the
+//! destination's leaf over a two-phase state space: a switch may always
+//! step **up** into a settled switch, but may only step **down** into a
+//! switch whose own chosen route is pure-down (this keeps the *realized*
+//! destination-based paths up*/down*-shaped, which a naive per-phase BFS
+//! does not guarantee under degradation). Ties are broken by lowest port
+//! load, then remote UUID, then port index — mirroring OpenSM's
+//! counter-based balancing with GUID tie-breaks.
+
+use super::common::Prep;
+use super::{Lft, NO_ROUTE};
+use crate::topology::Topology;
+use std::collections::VecDeque;
+
+pub fn route(topo: &Topology) -> Lft {
+    let prep = Prep::new(topo);
+    let ns = topo.switches.len();
+    let mut lft = Lft::new(ns, topo.nodes.len());
+    let mut load = vec![0u32; topo.num_ports()];
+
+    let mut dist = vec![u32::MAX; ns];
+    let mut pure = vec![false; ns];
+    let mut routed_port = vec![NO_ROUTE; ns];
+
+    for d in 0..topo.nodes.len() as u32 {
+        let node = topo.nodes[d as usize];
+        let leaf = node.leaf;
+        dist.fill(u32::MAX);
+        pure.fill(false);
+        routed_port.fill(NO_ROUTE);
+
+        dist[leaf as usize] = 0;
+        pure[leaf as usize] = true;
+        routed_port[leaf as usize] = node.leaf_port;
+        let mut queue = VecDeque::new();
+        queue.push_back(leaf);
+
+        while let Some(s) = queue.pop_front() {
+            let su = s as usize;
+            if s != leaf {
+                // Choose the egress port among usable settled neighbors at
+                // distance dist[s]-1.
+                let mut best: Option<(bool, u32, usize, u16)> = None; // (is_up, load, group idx, port)
+                for (gi, g) in prep.groups[su].iter().enumerate() {
+                    let r = g.remote as usize;
+                    if dist[r] != dist[su] - 1 {
+                        continue;
+                    }
+                    // Stepping down requires the target to continue purely
+                    // downward; stepping up is always legal.
+                    if !g.up && !pure[r] {
+                        continue;
+                    }
+                    for &p in &g.ports {
+                        let pid = topo.port_id(s, p) as usize;
+                        let key = (g.up, load[pid], gi, p);
+                        if best.map_or(true, |b| key < b) {
+                            best = Some(key);
+                        }
+                    }
+                }
+                let (is_up, _, _, port) = best.expect("settled switch must have a candidate");
+                routed_port[su] = port;
+                pure[su] = !is_up;
+                load[topo.port_id(s, port) as usize] += 1;
+            }
+            // Relax neighbors: r can use s if r→s is an up step (always) or
+            // a down step into a pure-down switch.
+            for g in &prep.groups[su] {
+                let r = g.remote;
+                if dist[r as usize] != u32::MAX {
+                    continue;
+                }
+                let r_to_s_up = topo.switches[su].level > topo.switches[r as usize].level;
+                if r_to_s_up || pure[su] {
+                    dist[r as usize] = dist[su] + 1;
+                    queue.push_back(r);
+                }
+            }
+        }
+        for s in 0..ns as u32 {
+            if routed_port[s as usize] != NO_ROUTE {
+                lft.set(s, d, routed_port[s as usize]);
+            }
+        }
+    }
+    lft
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::routing::validity;
+    use crate::topology::pgft::PgftParams;
+
+    #[test]
+    fn intact_pgft_valid() {
+        let t = PgftParams::fig1().build();
+        let lft = route(&t);
+        validity::check(&t, &lft).unwrap();
+        let st = validity::stats(&t, &lft);
+        assert_eq!(st.downup_turns, 0, "UPDN must be up*/down*");
+        assert!(validity::channel_dependency_acyclic(&t, &lft));
+    }
+
+    #[test]
+    fn stays_updown_under_degradation() {
+        use crate::topology::degrade;
+        use crate::util::rng::Rng;
+        let t = PgftParams::small().build();
+        let mut rng = Rng::new(33);
+        for _ in 0..15 {
+            let dt = degrade::remove_random_links(&t, &mut rng, 6);
+            let lft = route(&dt);
+            let st = validity::stats(&dt, &lft);
+            assert_eq!(st.downup_turns, 0, "UPDN must never turn down→up");
+        }
+    }
+
+    #[test]
+    fn balances_across_uplinks() {
+        let t = PgftParams::fig1().build();
+        let lft = route(&t);
+        let leaf = t.leaf_switches()[0];
+        let mut counts = std::collections::HashMap::new();
+        for d in 0..t.nodes.len() as u32 {
+            if t.nodes[d as usize].leaf != leaf {
+                *counts.entry(lft.get(leaf, d)).or_insert(0usize) += 1;
+            }
+        }
+        // 10 remote destinations over 4 uplink ports.
+        assert!(counts.len() >= 4, "should use all uplinks, got {counts:?}");
+        assert!(counts.values().all(|&c| c <= 4), "imbalance: {counts:?}");
+    }
+}

@@ -1,0 +1,263 @@
+//! Routing validity and deadlock-freedom checks (paper §4 "Validity").
+//!
+//! * [`check`] — the paper's condition: routing is valid for a degraded
+//!   PGFT iff every leaf-pair cost is finite (every node pair has an
+//!   up*/down* path), plus a full trace pass verifying the LFT actually
+//!   delivers every (source-leaf, destination) flow.
+//! * [`RouteStats`] — hop and up/down-shape statistics over all routes
+//!   (down→up turns are reported; the up*/down* restriction is what
+//!   guarantees deadlock-freedom in degraded PGFTs per [9]).
+//! * [`channel_dependency_acyclic`] — an explicit channel-dependency-graph
+//!   cycle check, the textbook deadlock-freedom criterion, for tests.
+
+use super::common::{self, DividerReduction, Prep, INF};
+use super::{Lft, NO_ROUTE};
+use crate::topology::{PortTarget, Topology};
+
+/// The paper's validity pass. Errors name the first offending pair.
+pub fn check(topo: &Topology, lft: &Lft) -> Result<(), String> {
+    let prep = Prep::new(topo);
+    let costs = common::costs(topo, &prep, DividerReduction::Max);
+    for (li, &l) in prep.leaves.iter().enumerate() {
+        for lj in 0..prep.leaves.len() {
+            if costs.cost(l, lj as u32) == INF {
+                return Err(format!(
+                    "leaf pair ({l}, {}) has no up*/down* path",
+                    prep.leaves[lj]
+                ));
+            }
+        }
+        let _ = li;
+    }
+    // Trace every (source leaf, destination node) flow through the tables.
+    let max_hops = 4 * topo.num_levels as usize + 4;
+    for &l in &prep.leaves {
+        for d in 0..topo.nodes.len() as u32 {
+            let mut sw = l;
+            let mut hops = 0usize;
+            loop {
+                let port = lft.get(sw, d);
+                if port == NO_ROUTE {
+                    return Err(format!("switch {sw} has no route to node {d}"));
+                }
+                match topo.switches[sw as usize].ports[port as usize] {
+                    PortTarget::Node { node } if node == d => break,
+                    PortTarget::Node { node } => {
+                        return Err(format!(
+                            "switch {sw} routes node {d} into wrong node {node}"
+                        ))
+                    }
+                    PortTarget::Switch { sw: next, .. } => sw = next,
+                }
+                hops += 1;
+                if hops > max_hops {
+                    return Err(format!("route loop for destination {d} via leaf {l}"));
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Shape statistics over all (source-leaf, destination) routes.
+#[derive(Clone, Debug, Default)]
+pub struct RouteStats {
+    pub routes: usize,
+    pub unreachable: usize,
+    pub max_hops: usize,
+    pub total_hops: usize,
+    /// Routes containing a down→up turn (not up*/down*-shaped).
+    pub downup_turns: usize,
+}
+
+impl RouteStats {
+    pub fn mean_hops(&self) -> f64 {
+        if self.routes == 0 {
+            0.0
+        } else {
+            self.total_hops as f64 / self.routes as f64
+        }
+    }
+}
+
+/// Collect [`RouteStats`] for `lft`.
+pub fn stats(topo: &Topology, lft: &Lft) -> RouteStats {
+    let mut st = RouteStats::default();
+    let max_hops = 4 * topo.num_levels as usize + 4;
+    for l in topo.leaf_switches() {
+        for d in 0..topo.nodes.len() as u32 {
+            if topo.nodes[d as usize].leaf == l {
+                continue;
+            }
+            let mut sw = l;
+            let mut hops = 0usize;
+            let mut went_down = false;
+            let mut turned = false;
+            let ok = loop {
+                let port = lft.get(sw, d);
+                if port == NO_ROUTE {
+                    break false;
+                }
+                match topo.switches[sw as usize].ports[port as usize] {
+                    PortTarget::Node { node } => break node == d,
+                    PortTarget::Switch { sw: next, .. } => {
+                        let up = topo.switches[next as usize].level
+                            > topo.switches[sw as usize].level;
+                        if up && went_down {
+                            turned = true;
+                        }
+                        if !up {
+                            went_down = true;
+                        }
+                        sw = next;
+                    }
+                }
+                hops += 1;
+                if hops > max_hops {
+                    break false;
+                }
+            };
+            if ok {
+                st.routes += 1;
+                st.max_hops = st.max_hops.max(hops + 1);
+                st.total_hops += hops + 1;
+                if turned {
+                    st.downup_turns += 1;
+                }
+            } else {
+                st.unreachable += 1;
+            }
+        }
+    }
+    st
+}
+
+/// Build the channel-dependency graph induced by all (leaf, destination)
+/// routes and test it for cycles — the Dally–Seitz deadlock-freedom
+/// criterion. Quadratic-ish; intended for tests and small topologies.
+pub fn channel_dependency_acyclic(topo: &Topology, lft: &Lft) -> bool {
+    use std::collections::HashSet;
+    let np = topo.num_ports();
+    let mut edges: Vec<HashSet<u32>> = vec![HashSet::new(); np];
+    let max_hops = 4 * topo.num_levels as usize + 4;
+    for l in topo.leaf_switches() {
+        for d in 0..topo.nodes.len() as u32 {
+            let mut sw = l;
+            let mut prev: Option<u32> = None;
+            let mut hops = 0;
+            loop {
+                let port = lft.get(sw, d);
+                if port == NO_ROUTE {
+                    break;
+                }
+                let pid = topo.port_id(sw, port);
+                if let Some(p) = prev {
+                    edges[p as usize].insert(pid);
+                }
+                prev = Some(pid);
+                match topo.switches[sw as usize].ports[port as usize] {
+                    PortTarget::Node { .. } => break,
+                    PortTarget::Switch { sw: next, .. } => sw = next,
+                }
+                hops += 1;
+                if hops > max_hops {
+                    break;
+                }
+            }
+        }
+    }
+    // Iterative three-color DFS for cycle detection.
+    let mut color = vec![0u8; np]; // 0 white, 1 grey, 2 black
+    for start in 0..np as u32 {
+        if color[start as usize] != 0 {
+            continue;
+        }
+        let mut stack: Vec<(u32, Vec<u32>)> = vec![(
+            start,
+            edges[start as usize].iter().copied().collect(),
+        )];
+        color[start as usize] = 1;
+        while let Some((node, pending)) = stack.last_mut() {
+            if let Some(next) = pending.pop() {
+                match color[next as usize] {
+                    0 => {
+                        color[next as usize] = 1;
+                        let succ = edges[next as usize].iter().copied().collect();
+                        stack.push((next, succ));
+                    }
+                    1 => return false, // grey → cycle
+                    _ => {}
+                }
+            } else {
+                color[*node as usize] = 2;
+                stack.pop();
+            }
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::routing::dmodc;
+    use crate::topology::degrade;
+    use crate::topology::pgft::PgftParams;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn intact_pgft_valid_and_deadlock_free() {
+        let t = PgftParams::fig1().build();
+        let lft = dmodc::route(&t, &dmodc::Options::default());
+        check(&t, &lft).unwrap();
+        let st = stats(&t, &lft);
+        assert_eq!(st.unreachable, 0);
+        assert_eq!(st.downup_turns, 0, "intact PGFT must be pure up*/down*");
+        assert!(channel_dependency_acyclic(&t, &lft));
+    }
+
+    #[test]
+    fn detects_missing_routes() {
+        let t = PgftParams::fig1().build();
+        let mut lft = dmodc::route(&t, &dmodc::Options::default());
+        lft.set(0, 5, NO_ROUTE);
+        assert!(check(&t, &lft).is_err());
+    }
+
+    #[test]
+    fn detects_loops() {
+        let t = PgftParams::fig1().build();
+        let mut lft = dmodc::route(&t, &dmodc::Options::default());
+        // Create a 2-cycle between a leaf and its first up-switch for some
+        // destination on another leaf.
+        let leaf = t.leaf_switches()[0];
+        let d = (0..t.nodes.len() as u32)
+            .find(|&n| t.nodes[n as usize].leaf != leaf)
+            .unwrap();
+        let up_port = lft.get(leaf, d);
+        if let PortTarget::Switch { sw: up, rport } =
+            t.switches[leaf as usize].ports[up_port as usize]
+        {
+            lft.set(up, d, rport); // bounce straight back
+        }
+        assert!(check(&t, &lft).is_err());
+    }
+
+    #[test]
+    fn disconnected_leaf_pair_reported() {
+        // Remove enough switches that some leaf pair disconnects, then the
+        // cost condition must fire.
+        let t = PgftParams::fig1().build();
+        let mut rng = Rng::new(5);
+        let mut saw_invalid = false;
+        for _ in 0..40 {
+            let d = degrade::remove_random_switches(&t, &mut rng, 8);
+            let lft = dmodc::route(&d, &dmodc::Options::default());
+            if check(&d, &lft).is_err() {
+                saw_invalid = true;
+                break;
+            }
+        }
+        assert!(saw_invalid, "removing 8/10 non-leaf switches should disconnect at least once");
+    }
+}

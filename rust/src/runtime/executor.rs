@@ -1,0 +1,139 @@
+//! AOT-artifact executor: compile an HLO-text module on the PJRT CPU
+//! client once, then run batched-permutation congestion analyses from the
+//! rust hot path (no python anywhere).
+//!
+//! Artifact calling convention (see python/compile/aot.py):
+//!   inputs : paths i32[L, N, H] (-1 padded), src_leaf i32[N],
+//!            perms i32[B, N]
+//!   output : 1-tuple of i32[B] — max port load per permutation.
+
+use super::registry::{ArtifactRegistry, ArtifactSpec};
+use crate::analysis::paths::{PathTensor, NO_PORT};
+use crate::topology::Topology;
+use anyhow::{anyhow, Context, Result};
+
+/// A compiled analysis artifact bound to one topology's dimensions.
+pub struct AnalysisExecutor {
+    exe: xla::PjRtLoadedExecutable,
+    spec: ArtifactSpec,
+    /// paths literal, already padded to the artifact's (L, N, H).
+    paths: xla::Literal,
+    src_leaf: xla::Literal,
+}
+
+impl AnalysisExecutor {
+    /// Try to bind `topo`+`paths` to a matching artifact. Returns
+    /// `Ok(None)` when no artifact fits (callers use the native engine).
+    pub fn bind(
+        registry: &ArtifactRegistry,
+        variant: &str,
+        topo: &Topology,
+        paths: &PathTensor,
+    ) -> Result<Option<AnalysisExecutor>> {
+        let spec = match registry.find(
+            variant,
+            paths.num_nodes,
+            paths.num_leaves,
+            paths.max_hops,
+            topo.num_ports(),
+        ) {
+            Some(s) => s.clone(),
+            None => return Ok(None),
+        };
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let proto = xla::HloModuleProto::from_text_file(
+            registry
+                .path_of(&spec)
+                .to_str()
+                .ok_or_else(|| anyhow!("non-utf8 artifact path"))?,
+        )
+        .context("parse HLO text")?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).context("compile artifact")?;
+
+        // Re-pad the tensor: [L, N, max_hops] -> [L, N, spec.h], NO_PORT→-1.
+        let (l, n, h_src, h_dst) = (
+            paths.num_leaves,
+            paths.num_nodes,
+            paths.max_hops,
+            spec.h,
+        );
+        let mut padded = vec![-1i32; l * n * h_dst];
+        let raw = paths.raw();
+        for row in 0..l * n {
+            for h in 0..h_src.min(h_dst) {
+                let v = raw[row * h_src + h];
+                padded[row * h_dst + h] = if v == NO_PORT { -1 } else { v as i32 };
+            }
+        }
+        let paths_lit = xla::Literal::vec1(&padded)
+            .reshape(&[l as i64, n as i64, h_dst as i64])
+            .context("reshape paths")?;
+
+        let src_leaf: Vec<i32> = topo
+            .nodes
+            .iter()
+            .map(|nd| paths.leaf_index[nd.leaf as usize] as i32)
+            .collect();
+        let src_leaf_lit = xla::Literal::vec1(&src_leaf)
+            .reshape(&[n as i64])
+            .context("reshape src_leaf")?;
+
+        Ok(Some(AnalysisExecutor {
+            exe,
+            spec,
+            paths: paths_lit,
+            src_leaf: src_leaf_lit,
+        }))
+    }
+
+    pub fn spec(&self) -> &ArtifactSpec {
+        &self.spec
+    }
+
+    /// Run one batch of ≤ `spec.b` permutations; shorter batches are padded
+    /// with identity permutations (max load 0) that are dropped from the
+    /// result.
+    pub fn run_batch(&self, perms: &[Vec<u32>]) -> Result<Vec<u64>> {
+        let (b, n) = (self.spec.b, self.spec.n);
+        if perms.len() > b {
+            return Err(anyhow!("batch of {} exceeds artifact b={}", perms.len(), b));
+        }
+        let mut flat = vec![0i32; b * n];
+        for (i, p) in perms.iter().enumerate() {
+            if p.len() != n {
+                return Err(anyhow!("perm length {} != n {}", p.len(), n));
+            }
+            for (j, &d) in p.iter().enumerate() {
+                flat[i * n + j] = d as i32;
+            }
+        }
+        // Identity padding rows.
+        for i in perms.len()..b {
+            for j in 0..n {
+                flat[i * n + j] = j as i32;
+            }
+        }
+        let perms_lit = xla::Literal::vec1(&flat).reshape(&[b as i64, n as i64])?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[
+                self.paths.clone(),
+                self.src_leaf.clone(),
+                perms_lit,
+            ])?[0][0]
+            .to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        let values = out.to_vec::<i32>()?;
+        Ok(values[..perms.len()].iter().map(|&v| v as u64).collect())
+    }
+
+    /// Run an arbitrary number of permutations (chunked into batches).
+    pub fn run(&self, perms: &[Vec<u32>]) -> Result<Vec<u64>> {
+        let mut out = Vec::with_capacity(perms.len());
+        for chunk in perms.chunks(self.spec.b) {
+            out.extend(self.run_batch(chunk)?);
+        }
+        Ok(out)
+    }
+}

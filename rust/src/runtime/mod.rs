@@ -1,0 +1,8 @@
+//! PJRT runtime: load AOT-compiled analysis artifacts (HLO text authored by
+//! the build-time JAX/Pallas layer) and execute them from rust.
+
+pub mod executor;
+pub mod registry;
+
+pub use executor::AnalysisExecutor;
+pub use registry::{ArtifactRegistry, ArtifactSpec};

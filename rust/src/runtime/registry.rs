@@ -1,0 +1,150 @@
+//! Artifact registry: the build-time AOT pass (`make artifacts`, python)
+//! emits shape-specialized HLO-text modules plus a `registry.tsv` index;
+//! this module parses the index and matches topologies to artifacts.
+
+use std::path::{Path, PathBuf};
+
+/// One AOT artifact's static shape contract.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    /// `jnp` (scatter-add XLA graph) or `pallas` (one-hot matmul kernel).
+    pub variant: String,
+    /// Exact node count.
+    pub n: usize,
+    /// Exact leaf count.
+    pub l: usize,
+    /// Padded hop capacity (path tensors with more hops don't fit).
+    pub h: usize,
+    /// Padded port-space size (must be ≥ the topology's port count).
+    pub p_pad: usize,
+    /// Permutation batch size per dispatch.
+    pub b: usize,
+}
+
+/// Parsed `registry.tsv`.
+#[derive(Clone, Debug, Default)]
+pub struct ArtifactRegistry {
+    pub dir: PathBuf,
+    pub specs: Vec<ArtifactSpec>,
+}
+
+impl ArtifactRegistry {
+    /// Load `<dir>/registry.tsv`. Missing registry → empty (callers fall
+    /// back to the native engine).
+    pub fn load(dir: impl AsRef<Path>) -> Self {
+        let dir = dir.as_ref().to_path_buf();
+        let text = match std::fs::read_to_string(dir.join("registry.tsv")) {
+            Ok(t) => t,
+            Err(_) => {
+                return Self {
+                    dir,
+                    specs: Vec::new(),
+                }
+            }
+        };
+        let specs = Self::parse(&text);
+        Self { dir, specs }
+    }
+
+    /// Default location: `$DMODC_ARTIFACTS` or `./artifacts`.
+    pub fn default_location() -> Self {
+        let dir =
+            std::env::var("DMODC_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+        Self::load(dir)
+    }
+
+    fn parse(text: &str) -> Vec<ArtifactSpec> {
+        let mut out = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            if i == 0 || line.trim().is_empty() {
+                continue; // header
+            }
+            let f: Vec<&str> = line.split('\t').collect();
+            if f.len() != 8 {
+                continue;
+            }
+            let parse = |s: &str| s.parse::<usize>().ok();
+            if let (Some(n), Some(l), Some(h), Some(p_pad), Some(b)) =
+                (parse(f[3]), parse(f[4]), parse(f[5]), parse(f[6]), parse(f[7]))
+            {
+                out.push(ArtifactSpec {
+                    name: f[0].to_string(),
+                    file: f[1].to_string(),
+                    variant: f[2].to_string(),
+                    n,
+                    l,
+                    h,
+                    p_pad,
+                    b,
+                });
+            }
+        }
+        out
+    }
+
+    /// Find an artifact matching a workload: exact node/leaf counts, hop
+    /// capacity ≥ `max_hops`, port capacity ≥ `num_ports`.
+    pub fn find(
+        &self,
+        variant: &str,
+        n: usize,
+        l: usize,
+        max_hops: usize,
+        num_ports: usize,
+    ) -> Option<&ArtifactSpec> {
+        self.specs.iter().find(|s| {
+            s.variant == variant
+                && s.n == n
+                && s.l == l
+                && s.h >= max_hops
+                && s.p_pad >= num_ports
+        })
+    }
+
+    pub fn path_of(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "name\tfile\tvariant\tn\tl\th\tp_pad\tb\n\
+        perm_jnp_x\tperm_jnp_x.hlo.txt\tjnp\t72\t18\t8\t256\t16\n\
+        perm_pallas_x\tperm_pallas_x.hlo.txt\tpallas\t72\t18\t8\t256\t16\n";
+
+    #[test]
+    fn parses_rows() {
+        let specs = ArtifactRegistry::parse(SAMPLE);
+        assert_eq!(specs.len(), 2);
+        assert_eq!(specs[0].n, 72);
+        assert_eq!(specs[1].variant, "pallas");
+    }
+
+    #[test]
+    fn find_respects_capacity() {
+        let reg = ArtifactRegistry {
+            dir: PathBuf::from("/tmp"),
+            specs: ArtifactRegistry::parse(SAMPLE),
+        };
+        assert!(reg.find("jnp", 72, 18, 5, 240).is_some());
+        assert!(reg.find("jnp", 72, 18, 9, 240).is_none(), "hop overflow");
+        assert!(reg.find("jnp", 72, 18, 5, 300).is_none(), "port overflow");
+        assert!(reg.find("jnp", 73, 18, 5, 240).is_none(), "wrong n");
+    }
+
+    #[test]
+    fn missing_registry_is_empty() {
+        let reg = ArtifactRegistry::load("/nonexistent/nowhere");
+        assert!(reg.specs.is_empty());
+    }
+
+    #[test]
+    fn malformed_lines_skipped() {
+        let specs = ArtifactRegistry::parse("header\ngarbage line\na\tb\tc\n");
+        assert!(specs.is_empty());
+    }
+}

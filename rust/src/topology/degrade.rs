@@ -1,0 +1,274 @@
+//! Topology degradation: random removal of switches and links (the paper's
+//! fault model) plus islet (pod) removal for fabric-manager event streams.
+//!
+//! The paper draws the amount of equipment to remove from a shifted
+//! log-uniform distribution `a = floor(2^(m·u()) − 1)` and removes that many
+//! pieces uniformly at random, then routes the resulting topology from
+//! scratch. Compute nodes never fail (the traffic patterns need a constant
+//! node set), so switch removal is restricted to switches and link removal
+//! to switch-switch cables; leaf switches are likewise kept alive by
+//! default so that every node remains attached (a dead leaf would simply
+//! invalidate every throw involving its nodes).
+
+use super::{Builder, PortTarget, SwitchId, Topology};
+use crate::util::rng::{log_uniform_amount, Rng};
+use std::collections::HashSet;
+
+/// Which equipment class a degradation throw removes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Equipment {
+    Switches,
+    Links,
+}
+
+impl Equipment {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "switches" | "switch" | "sw" => Ok(Equipment::Switches),
+            "links" | "link" | "ln" => Ok(Equipment::Links),
+            other => Err(format!("unknown equipment kind {other:?}")),
+        }
+    }
+}
+
+/// Rebuild a topology keeping only switches not in `dead_switches` and
+/// cables not in `dead_cables` (canonical endpoint: lower (switch, port)).
+/// Node ids, switch UUIDs and levels are preserved; switch ids compact.
+pub fn apply(
+    t: &Topology,
+    dead_switches: &HashSet<SwitchId>,
+    dead_cables: &HashSet<(SwitchId, u16)>,
+) -> Topology {
+    let mut b = Builder::new();
+    let mut map: Vec<Option<SwitchId>> = vec![None; t.switches.len()];
+    for (id, sw) in t.switches.iter().enumerate() {
+        let id = id as SwitchId;
+        if !dead_switches.contains(&id) {
+            map[id as usize] = Some(b.add_switch(sw.uuid, sw.level));
+        }
+    }
+    // Re-add surviving cables in canonical original-port order.
+    for (a, sw) in t.switches.iter().enumerate() {
+        let a = a as SwitchId;
+        if map[a as usize].is_none() {
+            continue;
+        }
+        for (pa, port) in sw.ports.iter().enumerate() {
+            if let PortTarget::Switch { sw: bid, rport } = *port {
+                // Canonical end: count each cable once.
+                if (bid, rport) < (a, pa as u16) {
+                    continue;
+                }
+                if map[bid as usize].is_none() {
+                    continue;
+                }
+                if dead_cables.contains(&(a, pa as u16)) {
+                    continue;
+                }
+                b.connect(map[a as usize].unwrap(), map[bid as usize].unwrap(), 1);
+            }
+        }
+    }
+    // Re-attach nodes in original NodeId order (preserves per-leaf port-rank
+    // order and keeps NodeIds stable).
+    for n in &t.nodes {
+        let leaf = map[n.leaf as usize]
+            .expect("leaf switches must not be removed (node would detach)");
+        b.attach_node(leaf, n.uuid);
+    }
+    b.finish()
+}
+
+/// All cables (switch-switch links), canonical endpoints.
+pub fn cables(t: &Topology) -> Vec<(SwitchId, u16)> {
+    let mut out = Vec::new();
+    for (a, sw) in t.switches.iter().enumerate() {
+        let a = a as SwitchId;
+        for (pa, port) in sw.ports.iter().enumerate() {
+            if let PortTarget::Switch { sw: bid, rport } = *port {
+                if (a, pa as u16) <= (bid, rport) {
+                    out.push((a, pa as u16));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Switches eligible for removal (non-leaf).
+pub fn removable_switches(t: &Topology) -> Vec<SwitchId> {
+    (0..t.switches.len() as SwitchId)
+        .filter(|&s| t.switches[s as usize].level > 0)
+        .collect()
+}
+
+/// Remove `count` random non-leaf switches.
+pub fn remove_random_switches(t: &Topology, rng: &mut Rng, count: usize) -> Topology {
+    let cand = removable_switches(t);
+    let count = count.min(cand.len());
+    let picks = rng.sample_distinct(cand.len(), count);
+    let dead: HashSet<SwitchId> = picks.iter().map(|&i| cand[i as usize]).collect();
+    apply(t, &dead, &HashSet::new())
+}
+
+/// Remove `count` random switch-switch cables.
+pub fn remove_random_links(t: &Topology, rng: &mut Rng, count: usize) -> Topology {
+    let all = cables(t);
+    let count = count.min(all.len());
+    let picks = rng.sample_distinct(all.len(), count);
+    let dead: HashSet<(SwitchId, u16)> = picks.iter().map(|&i| all[i as usize]).collect();
+    apply(t, &HashSet::new(), &dead)
+}
+
+/// One degradation throw with the paper's log-uniform magnitude over the
+/// eligible equipment count. Returns `(amount_removed, degraded_topology)`.
+pub fn log_uniform_throw(t: &Topology, rng: &mut Rng, kind: Equipment) -> (usize, Topology) {
+    match kind {
+        Equipment::Switches => {
+            let n = removable_switches(t).len();
+            let a = log_uniform_amount(rng, n);
+            (a, remove_random_switches(t, rng, a))
+        }
+        Equipment::Links => {
+            let n = cables(t).len();
+            let a = log_uniform_amount(rng, n);
+            (a, remove_random_links(t, rng, a))
+        }
+    }
+}
+
+/// Islet (pod) extraction: the set of *non-leaf* switches all of whose leaf
+/// descendants (following down-links only) fall within `leaves`
+/// (a contiguous range models a physical islet). Used by fabric-manager
+/// "islet reboot" events — the scenario the paper calls out as causing
+/// thousands of simultaneous changes.
+pub fn islet_switches(t: &Topology, leaves: &HashSet<SwitchId>) -> Vec<SwitchId> {
+    let n = t.switches.len();
+    // leaf_desc[s] = (descends_into_range, descends_outside_range)
+    let mut inside = vec![false; n];
+    let mut outside = vec![false; n];
+    for (s, sw) in t.switches.iter().enumerate() {
+        if sw.level == 0 {
+            if leaves.contains(&(s as SwitchId)) {
+                inside[s] = true;
+            } else {
+                outside[s] = true;
+            }
+        }
+    }
+    // Propagate upward level by level.
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_unstable_by_key(|&s| t.switches[s].level);
+    for &s in &order {
+        if t.switches[s].level == 0 {
+            continue;
+        }
+        for p in &t.switches[s].ports {
+            if let PortTarget::Switch { sw: r, .. } = *p {
+                let r = r as usize;
+                if t.switches[r].level < t.switches[s].level {
+                    inside[s] |= inside[r];
+                    outside[s] |= outside[r];
+                }
+            }
+        }
+    }
+    (0..n as SwitchId)
+        .filter(|&s| {
+            t.switches[s as usize].level > 0 && inside[s as usize] && !outside[s as usize]
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::pgft::PgftParams;
+
+    #[test]
+    fn apply_identity_preserves_everything() {
+        let t = PgftParams::fig1().build();
+        let d = apply(&t, &HashSet::new(), &HashSet::new());
+        assert_eq!(d.switches.len(), t.switches.len());
+        assert_eq!(d.nodes.len(), t.nodes.len());
+        assert_eq!(d.num_cables(), t.num_cables());
+        // UUIDs preserved, in order.
+        for (a, b) in t.switches.iter().zip(&d.switches) {
+            assert_eq!(a.uuid, b.uuid);
+            assert_eq!(a.level, b.level);
+        }
+    }
+
+    #[test]
+    fn remove_switches_reduces_and_validates() {
+        let t = PgftParams::small().build();
+        let mut rng = Rng::new(1);
+        let d = remove_random_switches(&t, &mut rng, 3);
+        assert_eq!(d.switches.len(), t.switches.len() - 3);
+        assert_eq!(d.nodes.len(), t.nodes.len());
+        assert!(d.check_invariants().is_ok());
+        // No leaf was removed.
+        assert_eq!(d.leaf_switches().len(), t.leaf_switches().len());
+    }
+
+    #[test]
+    fn remove_links_reduces_cables() {
+        let t = PgftParams::small().build();
+        let mut rng = Rng::new(2);
+        let before = t.num_cables();
+        let d = remove_random_links(&t, &mut rng, 5);
+        assert_eq!(d.num_cables(), before - 5);
+        assert_eq!(d.switches.len(), t.switches.len());
+        assert!(d.check_invariants().is_ok());
+    }
+
+    #[test]
+    fn node_ids_stable_under_degradation() {
+        let t = PgftParams::small().build();
+        let mut rng = Rng::new(3);
+        let d = remove_random_switches(&t, &mut rng, 2);
+        for (a, b) in t.nodes.iter().zip(&d.nodes) {
+            assert_eq!(a.uuid, b.uuid);
+        }
+    }
+
+    #[test]
+    fn log_uniform_throw_bounds() {
+        let t = PgftParams::small().build();
+        let mut rng = Rng::new(4);
+        for _ in 0..20 {
+            let (a, d) = log_uniform_throw(&t, &mut rng, Equipment::Switches);
+            assert!(a <= removable_switches(&t).len());
+            assert_eq!(d.switches.len(), t.switches.len() - a);
+        }
+        for _ in 0..20 {
+            let (a, d) = log_uniform_throw(&t, &mut rng, Equipment::Links);
+            assert_eq!(d.num_cables(), t.num_cables() - a);
+        }
+    }
+
+    #[test]
+    fn islet_of_all_leaves_is_all_nonleaf() {
+        let t = PgftParams::fig1().build();
+        let leaves: HashSet<SwitchId> = t.leaf_switches().into_iter().collect();
+        let islet = islet_switches(&t, &leaves);
+        let nonleaf = removable_switches(&t);
+        assert_eq!(islet.len(), nonleaf.len());
+    }
+
+    #[test]
+    fn islet_of_single_leaf_is_empty_in_fig1() {
+        // In fig1 every mid switch serves two leaves, so a single leaf's
+        // islet contains no switch.
+        let t = PgftParams::fig1().build();
+        let mut leaves = HashSet::new();
+        leaves.insert(t.leaf_switches()[0]);
+        assert!(islet_switches(&t, &leaves).is_empty());
+    }
+
+    #[test]
+    fn cable_enumeration_counts_once() {
+        let t = PgftParams::fig1().build();
+        assert_eq!(cables(&t).len(), t.num_cables());
+    }
+}

@@ -1,0 +1,380 @@
+//! Fabric topology model: switches, nodes, bidirectional links, ports.
+//!
+//! The model targets Parallel Generalized Fat-Trees (PGFTs, [`pgft`]) and
+//! their degraded variants ([`degrade`]) but is a general multigraph of
+//! switches with attached compute nodes, so topology-agnostic engines
+//! (MinHop, SSSP) run on anything.
+//!
+//! Conventions:
+//! * Every switch owns an ordered list of **ports**. Port `i` of switch `a`
+//!   either connects to port `j` of switch `b` (and `b.ports[j]` points back
+//!   at `(a, i)`) or to a node.
+//! * Nodes are single-homed (PGFT property: one leaf switch per node).
+//! * Switch **UUIDs** model hardware-fabrication identifiers: they are
+//!   stable across degradation and re-construction, and every tie-break in
+//!   the routing engines is by UUID, exactly as the paper prescribes.
+//! * Levels: 0 = leaf switches, increasing upward. (The paper's PGFT
+//!   notation counts nodes as level 0; we keep switch levels only and
+//!   attach nodes to level-0 switches.)
+
+pub mod degrade;
+pub mod pgft;
+pub mod rlft;
+
+pub type SwitchId = u32;
+pub type NodeId = u32;
+
+/// What a switch port connects to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PortTarget {
+    /// Connects to `rport` of switch `sw`.
+    Switch { sw: SwitchId, rport: u16 },
+    /// Connects to a compute node (leaf switches only).
+    Node { node: NodeId },
+}
+
+/// A switch and its ports.
+#[derive(Clone, Debug)]
+pub struct Switch {
+    /// Stable hardware identifier (survives degradation / rebuilds).
+    pub uuid: u64,
+    /// Tree level: 0 for leaf switches.
+    pub level: u8,
+    /// Ordered ports.
+    pub ports: Vec<PortTarget>,
+}
+
+/// A compute node attached to one leaf switch.
+#[derive(Clone, Copy, Debug)]
+pub struct Node {
+    /// Stable node identifier (e.g. the HCA GUID).
+    pub uuid: u64,
+    /// The only leaf switch this node hangs off (λ_n in the paper).
+    pub leaf: SwitchId,
+    /// Port index on `leaf` that reaches this node.
+    pub leaf_port: u16,
+}
+
+/// An immutable fabric topology.
+#[derive(Clone, Debug, Default)]
+pub struct Topology {
+    pub switches: Vec<Switch>,
+    pub nodes: Vec<Node>,
+    /// Number of switch levels present (max level + 1).
+    pub num_levels: u8,
+    /// Prefix sums of per-switch port counts: global directed-port id of
+    /// `(sw, port)` is `port_offsets[sw] + port`. Built by `finish()`.
+    pub port_offsets: Vec<u32>,
+}
+
+impl Topology {
+    /// Total number of directed ports (one per switch-port; both ends of a
+    /// switch-switch cable are distinct directed ports).
+    pub fn num_ports(&self) -> usize {
+        *self.port_offsets.last().unwrap_or(&0) as usize
+    }
+
+    /// Global directed-port id of `(sw, port)`.
+    #[inline]
+    pub fn port_id(&self, sw: SwitchId, port: u16) -> u32 {
+        self.port_offsets[sw as usize] + port as u32
+    }
+
+    /// Inverse of [`Topology::port_id`].
+    pub fn port_of_id(&self, pid: u32) -> (SwitchId, u16) {
+        let sw = match self.port_offsets.binary_search(&pid) {
+            Ok(mut i) => {
+                // Skip switches with zero ports that share the offset.
+                while i + 1 < self.port_offsets.len() && self.port_offsets[i + 1] == pid {
+                    i += 1;
+                }
+                i
+            }
+            Err(i) => i - 1,
+        };
+        (sw as SwitchId, (pid - self.port_offsets[sw]) as u16)
+    }
+
+    /// Leaf switches (level 0 with attached nodes), ascending id.
+    pub fn leaf_switches(&self) -> Vec<SwitchId> {
+        (0..self.switches.len() as SwitchId)
+            .filter(|&s| self.switches[s as usize].level == 0)
+            .collect()
+    }
+
+    /// Nodes attached to `leaf` in port-rank order (ascending port index).
+    pub fn nodes_of_leaf(&self, leaf: SwitchId) -> Vec<NodeId> {
+        let mut out: Vec<(u16, NodeId)> = self.switches[leaf as usize]
+            .ports
+            .iter()
+            .enumerate()
+            .filter_map(|(i, p)| match p {
+                PortTarget::Node { node } => Some((i as u16, *node)),
+                _ => None,
+            })
+            .collect();
+        out.sort_unstable();
+        out.into_iter().map(|(_, n)| n).collect()
+    }
+
+    /// Count of switch-switch cables (each counted once).
+    pub fn num_cables(&self) -> usize {
+        self.switches
+            .iter()
+            .enumerate()
+            .map(|(a, sw)| {
+                sw.ports
+                    .iter()
+                    .filter(|p| match p {
+                        PortTarget::Switch { sw: b, .. } => (*b as usize) > a
+                            || ((*b as usize) == a),
+                        _ => false,
+                    })
+                    .count()
+            })
+            .sum()
+    }
+
+    /// Check structural invariants; returns an error string on violation.
+    /// Used by tests and the degradation pipeline.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        for (a, sw) in self.switches.iter().enumerate() {
+            for (i, p) in sw.ports.iter().enumerate() {
+                match *p {
+                    PortTarget::Switch { sw: b, rport } => {
+                        let bs = self
+                            .switches
+                            .get(b as usize)
+                            .ok_or_else(|| format!("switch {a} port {i}: dangling to {b}"))?;
+                        match bs.ports.get(rport as usize) {
+                            Some(PortTarget::Switch { sw: a2, rport: i2 })
+                                if *a2 as usize == a && *i2 as usize == i => {}
+                            other => {
+                                return Err(format!(
+                                    "asymmetric link {a}.{i} -> {b}.{rport}, reverse is {other:?}"
+                                ))
+                            }
+                        }
+                        if bs.level == sw.level {
+                            return Err(format!(
+                                "same-level link between {a} (lvl {}) and {b}",
+                                sw.level
+                            ));
+                        }
+                    }
+                    PortTarget::Node { node } => {
+                        let n = self
+                            .nodes
+                            .get(node as usize)
+                            .ok_or_else(|| format!("switch {a} port {i}: dangling node {node}"))?;
+                        if n.leaf as usize != a || n.leaf_port as usize != i {
+                            return Err(format!(
+                                "node {node} backref mismatch: node says ({},{}), port is ({a},{i})",
+                                n.leaf, n.leaf_port
+                            ));
+                        }
+                        if sw.level != 0 {
+                            return Err(format!("node attached to non-leaf switch {a}"));
+                        }
+                    }
+                }
+            }
+        }
+        for (nid, n) in self.nodes.iter().enumerate() {
+            match self
+                .switches
+                .get(n.leaf as usize)
+                .and_then(|s| s.ports.get(n.leaf_port as usize))
+            {
+                Some(PortTarget::Node { node }) if *node as usize == nid => {}
+                other => {
+                    return Err(format!(
+                        "node {nid} leaf port does not point back (found {other:?})"
+                    ))
+                }
+            }
+        }
+        // UUID uniqueness.
+        let mut uuids: Vec<u64> = self.switches.iter().map(|s| s.uuid).collect();
+        uuids.sort_unstable();
+        if uuids.windows(2).any(|w| w[0] == w[1]) {
+            return Err("duplicate switch UUIDs".into());
+        }
+        Ok(())
+    }
+}
+
+/// Mutable builder; call [`Builder::finish`] to obtain a checked
+/// [`Topology`].
+#[derive(Default)]
+pub struct Builder {
+    switches: Vec<Switch>,
+    nodes: Vec<Node>,
+}
+
+impl Builder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add a switch, returning its id.
+    pub fn add_switch(&mut self, uuid: u64, level: u8) -> SwitchId {
+        let id = self.switches.len() as SwitchId;
+        self.switches.push(Switch {
+            uuid,
+            level,
+            ports: Vec::new(),
+        });
+        id
+    }
+
+    /// Connect `a` and `b` with `parallel` cables (adds ports both sides).
+    pub fn connect(&mut self, a: SwitchId, b: SwitchId, parallel: u32) {
+        assert_ne!(a, b, "self-links are not allowed");
+        for _ in 0..parallel {
+            let pa = self.switches[a as usize].ports.len() as u16;
+            let pb = self.switches[b as usize].ports.len() as u16;
+            self.switches[a as usize]
+                .ports
+                .push(PortTarget::Switch { sw: b, rport: pb });
+            self.switches[b as usize]
+                .ports
+                .push(PortTarget::Switch { sw: a, rport: pa });
+        }
+    }
+
+    /// Attach a new node with the given uuid to leaf switch `leaf`.
+    pub fn attach_node(&mut self, leaf: SwitchId, uuid: u64) -> NodeId {
+        let nid = self.nodes.len() as NodeId;
+        let port = self.switches[leaf as usize].ports.len() as u16;
+        self.switches[leaf as usize]
+            .ports
+            .push(PortTarget::Node { node: nid });
+        self.nodes.push(Node {
+            uuid,
+            leaf,
+            leaf_port: port,
+        });
+        nid
+    }
+
+    /// Finalize: compute port offsets + levels and validate invariants.
+    pub fn finish(self) -> Topology {
+        let mut t = Topology {
+            num_levels: self
+                .switches
+                .iter()
+                .map(|s| s.level + 1)
+                .max()
+                .unwrap_or(0),
+            switches: self.switches,
+            nodes: self.nodes,
+            port_offsets: Vec::new(),
+        };
+        let mut off = 0u32;
+        t.port_offsets = Vec::with_capacity(t.switches.len() + 1);
+        for s in &t.switches {
+            t.port_offsets.push(off);
+            off += s.ports.len() as u32;
+        }
+        t.port_offsets.push(off);
+        if let Err(e) = t.check_invariants() {
+            panic!("topology invariant violation: {e}");
+        }
+        t
+    }
+}
+
+/// Deterministically scrambled UUID for construction: models arbitrary
+/// fabrication-time identifiers while staying reproducible.
+pub fn fab_uuid(class: u64, index: u64) -> u64 {
+    let mut x = class
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add(index)
+        .wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x ^= x >> 31;
+    x = x.wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^= x >> 29;
+    // Avoid the (astronomically unlikely) zero to keep UUIDs truthy.
+    x | 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Topology {
+        // Two leaves, one spine, 2 nodes per leaf.
+        let mut b = Builder::new();
+        let l0 = b.add_switch(fab_uuid(0, 0), 0);
+        let l1 = b.add_switch(fab_uuid(0, 1), 0);
+        let s = b.add_switch(fab_uuid(1, 0), 1);
+        b.connect(l0, s, 1);
+        b.connect(l1, s, 2);
+        for i in 0..2 {
+            b.attach_node(l0, fab_uuid(9, i));
+            b.attach_node(l1, fab_uuid(9, 2 + i));
+        }
+        b.finish()
+    }
+
+    #[test]
+    fn builder_roundtrip() {
+        let t = tiny();
+        assert_eq!(t.switches.len(), 3);
+        assert_eq!(t.nodes.len(), 4);
+        assert_eq!(t.num_levels, 2);
+        // l0: 1 up + 2 nodes; l1: 2 up + 2 nodes; s: 3 down.
+        assert_eq!(t.switches[0].ports.len(), 3);
+        assert_eq!(t.switches[1].ports.len(), 4);
+        assert_eq!(t.switches[2].ports.len(), 3);
+        assert_eq!(t.num_ports(), 10);
+    }
+
+    #[test]
+    fn port_id_roundtrip() {
+        let t = tiny();
+        for sw in 0..t.switches.len() as SwitchId {
+            for p in 0..t.switches[sw as usize].ports.len() as u16 {
+                let pid = t.port_id(sw, p);
+                assert_eq!(t.port_of_id(pid), (sw, p));
+            }
+        }
+    }
+
+    #[test]
+    fn nodes_of_leaf_in_port_order() {
+        let t = tiny();
+        assert_eq!(t.nodes_of_leaf(0), vec![0, 2]);
+        assert_eq!(t.nodes_of_leaf(1), vec![1, 3]);
+    }
+
+    #[test]
+    fn invariants_hold() {
+        assert!(tiny().check_invariants().is_ok());
+    }
+
+    #[test]
+    fn parallel_links_counted() {
+        let t = tiny();
+        assert_eq!(t.num_cables(), 3); // 1 + 2 parallel
+    }
+
+    #[test]
+    #[should_panic(expected = "self-links")]
+    fn self_link_rejected() {
+        let mut b = Builder::new();
+        let s = b.add_switch(1, 0);
+        b.connect(s, s, 1);
+    }
+
+    #[test]
+    fn fab_uuid_distinct() {
+        let mut seen = std::collections::HashSet::new();
+        for c in 0..4u64 {
+            for i in 0..1000u64 {
+                assert!(seen.insert(fab_uuid(c, i)));
+            }
+        }
+    }
+}

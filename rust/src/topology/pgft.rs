@@ -1,0 +1,325 @@
+//! Parallel Generalized Fat-Tree (PGFT) construction.
+//!
+//! `PGFT(h; m_1..m_h; w_1..w_h; p_1..p_h)` following Zahavi's notation:
+//! levels 0..h where level 0 are compute nodes and levels 1..h switches.
+//! An element at level `l-1` with digit tuple `(d_1..d_h)` connects to the
+//! level-`l` switches agreeing on every digit except position `l`, with
+//! `p_l` parallel links per pair. Digit `i` of a level-`l` element has radix
+//! `w_i` for `i ≤ l` and `m_i` for `i > l`; consequently level `l` holds
+//! `Π_{i≤l} w_i · Π_{i>l} m_i` elements.
+//!
+//! In the [`Topology`] produced here, switch level = PGFT level − 1 (leaf
+//! switches are level 0) and nodes are attached to leaf switches
+//! (`m_1` each). The paper requires single-homed nodes (`λ_n` unique), so
+//! `w_1 = p_1 = 1` is enforced.
+
+use super::{fab_uuid, Builder, SwitchId, Topology};
+
+/// How switch UUIDs are assigned (UUID order drives every tie-break in the
+/// routing engines; `Scrambled` models real fabrication ids, `Sequential`
+/// exists for the NID-ordering ablation).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UuidMode {
+    Scrambled,
+    Sequential,
+}
+
+/// PGFT shape parameters.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PgftParams {
+    pub h: usize,
+    pub m: Vec<u32>,
+    pub w: Vec<u32>,
+    pub p: Vec<u32>,
+    pub uuid_mode: UuidMode,
+}
+
+impl PgftParams {
+    pub fn new(m: Vec<u32>, w: Vec<u32>, p: Vec<u32>) -> Self {
+        let h = m.len();
+        assert!(h >= 1, "PGFT needs at least one level");
+        assert_eq!(w.len(), h, "w must have h entries");
+        assert_eq!(p.len(), h, "p must have h entries");
+        assert!(
+            m.iter().chain(&w).chain(&p).all(|&x| x >= 1),
+            "all PGFT parameters must be >= 1"
+        );
+        assert_eq!(w[0], 1, "nodes must be single-homed (w_1 = 1)");
+        assert_eq!(p[0], 1, "nodes must be single-homed (p_1 = 1)");
+        Self {
+            h,
+            m,
+            w,
+            p,
+            uuid_mode: UuidMode::Scrambled,
+        }
+    }
+
+    pub fn with_uuid_mode(mut self, mode: UuidMode) -> Self {
+        self.uuid_mode = mode;
+        self
+    }
+
+    /// Parse `"m1,m2,..;w1,..;p1,.."` e.g. `"2,2,3;1,2,2;1,2,1"`.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let parts: Vec<&str> = s.split(';').collect();
+        if parts.len() != 3 {
+            return Err(format!("expected 3 ';'-separated lists, got {}", parts.len()));
+        }
+        let parse_list = |p: &str| -> Result<Vec<u32>, String> {
+            p.split(',')
+                .map(|x| x.trim().parse::<u32>().map_err(|e| format!("bad int {x:?}: {e}")))
+                .collect()
+        };
+        let m = parse_list(parts[0])?;
+        let w = parse_list(parts[1])?;
+        let p = parse_list(parts[2])?;
+        if w.len() != m.len() || p.len() != m.len() {
+            return Err("m, w, p must have the same length".into());
+        }
+        if w[0] != 1 || p[0] != 1 {
+            return Err("w_1 and p_1 must be 1 (single-homed nodes)".into());
+        }
+        Ok(Self::new(m, w, p))
+    }
+
+    /// The paper's Figure 1 example: `PGFT(3; 2,2,3; 1,2,2; 1,2,1)`
+    /// (12 nodes, 6 leaf switches, 6 mid, 4 top).
+    pub fn fig1() -> Self {
+        Self::new(vec![2, 2, 3], vec![1, 2, 2], vec![1, 2, 1])
+    }
+
+    /// The Figure-2 testbed: an 8640-node PGFT with leaf blocking factor 4
+    /// (24 nodes / 6 uplink-groups per leaf): `PGFT(3; 24,15,24; 1,6,8; 1,1,1)`.
+    /// 360 leaves + 144 mid + 48 top = 552 switches.
+    pub fn paper_8640() -> Self {
+        Self::new(vec![24, 15, 24], vec![1, 6, 8], vec![1, 1, 1])
+    }
+
+    /// A small non-trivial PGFT for tests/examples (~72 nodes, parallel
+    /// links, 3 levels).
+    pub fn small() -> Self {
+        Self::new(vec![4, 6, 3], vec![1, 2, 2], vec![1, 2, 1])
+    }
+
+    /// Total node count `Π m_i`.
+    pub fn num_nodes(&self) -> usize {
+        self.m.iter().map(|&x| x as usize).product()
+    }
+
+    /// Number of elements at PGFT level `l` (0 = nodes).
+    pub fn elems_at(&self, l: usize) -> usize {
+        let mut n = 1usize;
+        for i in 0..self.h {
+            n *= if i < l { self.w[i] as usize } else { self.m[i] as usize };
+        }
+        n
+    }
+
+    /// Total switch count (levels 1..=h).
+    pub fn num_switches(&self) -> usize {
+        (1..=self.h).map(|l| self.elems_at(l)).sum()
+    }
+
+    /// Radix of digit position `i` (0-based) for an element at level `l`.
+    #[inline]
+    fn radix(&self, l: usize, i: usize) -> usize {
+        if i < l {
+            self.w[i] as usize
+        } else {
+            self.m[i] as usize
+        }
+    }
+
+    /// Decompose `index` into the digit tuple of a level-`l` element.
+    fn digits(&self, l: usize, mut index: usize, out: &mut [usize]) {
+        for i in 0..self.h {
+            let r = self.radix(l, i);
+            out[i] = index % r;
+            index /= r;
+        }
+        debug_assert_eq!(index, 0);
+    }
+
+    /// Recompose digits into an index for a level-`l` element.
+    fn index_of(&self, l: usize, digits: &[usize]) -> usize {
+        let mut idx = 0usize;
+        let mut stride = 1usize;
+        for i in 0..self.h {
+            let r = self.radix(l, i);
+            debug_assert!(digits[i] < r);
+            idx += digits[i] * stride;
+            stride *= r;
+        }
+        idx
+    }
+
+    /// Build the topology.
+    pub fn build(&self) -> Topology {
+        let mut b = Builder::new();
+        // Create switches level by level; ids[l][j] is the SwitchId of the
+        // j-th element at PGFT level l+1.
+        let mut ids: Vec<Vec<SwitchId>> = Vec::with_capacity(self.h);
+        for l in 1..=self.h {
+            let count = self.elems_at(l);
+            let mut level_ids = Vec::with_capacity(count);
+            for j in 0..count {
+                let uuid = match self.uuid_mode {
+                    UuidMode::Scrambled => fab_uuid(l as u64, j as u64),
+                    UuidMode::Sequential => ((l as u64) << 32) | (j as u64 + 1),
+                };
+                level_ids.push(b.add_switch(uuid, (l - 1) as u8));
+            }
+            ids.push(level_ids);
+        }
+        // Switch-switch links: for each level l in 2..=h connect level-l
+        // switch to its m_l children at level l-1 with p_l parallel links.
+        let mut dg = vec![0usize; self.h];
+        for l in 2..=self.h {
+            for j in 0..self.elems_at(l) {
+                self.digits(l, j, &mut dg);
+                let saved = dg[l - 1];
+                for c in 0..self.m[l - 1] as usize {
+                    dg[l - 1] = c;
+                    let child = self.index_of(l - 1, &dg);
+                    b.connect(ids[l - 2][child], ids[l - 1][j], self.p[l - 1]);
+                }
+                dg[l - 1] = saved;
+            }
+        }
+        // Nodes: each leaf switch (level 1, index j) hosts m_1 nodes; node
+        // digit tuple = leaf digits with digit 1 ranging over m_1. Attach in
+        // digit order so "port rank order" equals topological node order.
+        for j in 0..self.elems_at(1) {
+            self.digits(1, j, &mut dg);
+            for c in 0..self.m[0] as usize {
+                dg[0] = c;
+                let nidx = self.index_of(0, &dg) as u64;
+                b.attach_node(ids[0][j], fab_uuid(0xE0DE, nidx));
+            }
+            dg[0] = 0;
+        }
+        b.finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::PortTarget;
+
+    #[test]
+    fn fig1_counts() {
+        let p = PgftParams::fig1();
+        assert_eq!(p.num_nodes(), 12);
+        assert_eq!(p.elems_at(1), 6); // leaf switches
+        assert_eq!(p.elems_at(2), 6);
+        assert_eq!(p.elems_at(3), 4);
+        let t = p.build();
+        assert_eq!(t.nodes.len(), 12);
+        assert_eq!(t.switches.len(), 16);
+        assert_eq!(t.num_levels, 3);
+    }
+
+    #[test]
+    fn fig1_port_counts() {
+        let t = PgftParams::fig1().build();
+        for sw in &t.switches {
+            let (down, up, node): (usize, usize, usize) =
+                sw.ports.iter().fold((0, 0, 0), |(d, u, n), p| match p {
+                    PortTarget::Switch { sw: r, .. } => {
+                        if t.switches[*r as usize].level > sw.level {
+                            (d, u + 1, n)
+                        } else {
+                            (d + 1, u, n)
+                        }
+                    }
+                    PortTarget::Node { .. } => (d, u, n + 1),
+                });
+            match sw.level {
+                // leaf: 2 nodes, w2*p2 = 4 uplinks
+                0 => {
+                    assert_eq!(node, 2);
+                    assert_eq!(up, 4);
+                    assert_eq!(down, 0);
+                }
+                // mid: m2*p2 = 4 down, w3*p3 = 2 up
+                1 => {
+                    assert_eq!(down, 4);
+                    assert_eq!(up, 2);
+                }
+                // top: m3*p3 = 3 down
+                2 => {
+                    assert_eq!(down, 3);
+                    assert_eq!(up, 0);
+                }
+                _ => unreachable!(),
+            }
+        }
+    }
+
+    #[test]
+    fn paper_8640_counts() {
+        let p = PgftParams::paper_8640();
+        assert_eq!(p.num_nodes(), 8640);
+        assert_eq!(p.elems_at(1), 360);
+        assert_eq!(p.elems_at(2), 144);
+        assert_eq!(p.elems_at(3), 48);
+        // Leaf blocking factor: 24 nodes / (w2*p2 = 6 uplinks) = 4.
+    }
+
+    #[test]
+    fn paper_8640_builds_valid() {
+        let t = PgftParams::paper_8640().build();
+        assert_eq!(t.nodes.len(), 8640);
+        assert_eq!(t.switches.len(), 552);
+        assert!(t.check_invariants().is_ok());
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        let p = PgftParams::parse("2,2,3;1,2,2;1,2,1").unwrap();
+        assert_eq!(p, PgftParams::fig1());
+        assert!(PgftParams::parse("2,2;1,2,2;1,2,1").is_err());
+        assert!(PgftParams::parse("2,2,3;2,2,2;1,2,1").is_err());
+        assert!(PgftParams::parse("garbage").is_err());
+    }
+
+    #[test]
+    fn digits_roundtrip() {
+        let p = PgftParams::fig1();
+        for l in 0..=p.h {
+            let mut dg = vec![0usize; p.h];
+            for j in 0..p.elems_at(l) {
+                p.digits(l, j, &mut dg);
+                assert_eq!(p.index_of(l, &dg), j);
+            }
+        }
+    }
+
+    #[test]
+    fn node_single_homing() {
+        let t = PgftParams::small().build();
+        for n in &t.nodes {
+            assert_eq!(t.switches[n.leaf as usize].level, 0);
+        }
+        // All nodes distributed evenly: m_1 per leaf.
+        for &leaf in &t.leaf_switches() {
+            assert_eq!(t.nodes_of_leaf(leaf).len(), 4);
+        }
+    }
+
+    #[test]
+    fn sequential_uuid_mode() {
+        let t = PgftParams::fig1()
+            .with_uuid_mode(UuidMode::Sequential)
+            .build();
+        let mut uuids: Vec<u64> = t.switches.iter().map(|s| s.uuid).collect();
+        let mut sorted = uuids.clone();
+        sorted.sort_unstable();
+        // Sequential mode: construction order == UUID order.
+        assert_eq!(uuids, sorted);
+        uuids.dedup();
+        assert_eq!(uuids.len(), t.switches.len());
+    }
+}

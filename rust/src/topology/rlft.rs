@@ -1,0 +1,179 @@
+//! Real-Life Fat-Tree (RLFT) construction: build the smallest practical
+//! PGFT of a given switch radix that hosts a requested number of nodes.
+//!
+//! This mirrors the construction the paper uses for its runtime sweep
+//! (Figure 3), including the property it calls out: the switch count is
+//! **not monotonic** in the requested node count, because capacity comes in
+//! pod-sized quanta and empty equipment is trimmed.
+//!
+//! Shape: full-bisection-per-level PGFT with `d = r/2` nodes per leaf and
+//! `r/2`-way spreading at every level, topped by however many pods the
+//! request needs:
+//!   h=1: one switch, up to `r` nodes;
+//!   h=2: `PGFT(2; r/2, L; 1, r/2; 1, 1)` — up to `r²/2` nodes;
+//!   h=3: `PGFT(3; r/2, r/2, P; 1, r/2, r/2; 1,1,1)` — up to `r³/4`;
+//!   h=4: one more level, up to `r⁴/8`.
+//! After building the covering PGFT, surplus tail nodes are removed, then
+//! switches with no remaining node descendants are trimmed.
+
+use super::degrade::apply;
+use super::pgft::PgftParams;
+use super::{Builder, PortTarget, SwitchId, Topology};
+use std::collections::HashSet;
+
+/// Build an RLFT hosting exactly `n` nodes using switches of radix `r`.
+pub fn build(n: usize, r: u32) -> Topology {
+    assert!(n >= 1, "need at least one node");
+    assert!(r >= 4 && r % 2 == 0, "radix must be even and >= 4");
+    let half = (r / 2) as usize;
+    if n <= r as usize {
+        // Single leaf switch.
+        let mut b = Builder::new();
+        let s = b.add_switch(super::fab_uuid(1, 0), 0);
+        for i in 0..n {
+            b.attach_node(s, super::fab_uuid(0xE0DE, i as u64));
+        }
+        return b.finish();
+    }
+    // Find the smallest height whose capacity covers n, then size the top
+    // level to the minimum number of pods.
+    let mut h = 2usize;
+    let mut cap = half * r as usize; // h=2 capacity
+    while cap < n {
+        h += 1;
+        cap *= half;
+        assert!(h <= 6, "request exceeds supported RLFT capacity");
+    }
+    // A "pod" is one unit the top level multiplexes: m = (half, .., half,
+    // top), so each pod carries half^(h-1) nodes and the top level needs
+    // `top = ceil(n / pod)` down-ports (≤ r by the capacity loop above).
+    let pod_nodes = half.pow((h - 1) as u32);
+    let top = n.div_ceil(pod_nodes);
+    let mut m = vec![half as u32; h];
+    m[h - 1] = top as u32;
+    let mut w = vec![half as u32; h];
+    w[0] = 1;
+    let p = vec![1u32; h];
+    let full = PgftParams::new(m, w, p).build();
+
+    // Trim surplus nodes from the tail, then prune node-less switches.
+    trim_to(&full, n)
+}
+
+/// Keep only the first `n` nodes of `t`, then drop switches that no longer
+/// have any node descendant (empty leaves and fully-orphaned spines).
+fn trim_to(t: &Topology, n: usize) -> Topology {
+    assert!(n <= t.nodes.len());
+    // Rebuild without the surplus nodes.
+    let mut b = Builder::new();
+    for sw in &t.switches {
+        b.add_switch(sw.uuid, sw.level);
+    }
+    for (a, sw) in t.switches.iter().enumerate() {
+        for (pa, port) in sw.ports.iter().enumerate() {
+            if let PortTarget::Switch { sw: bid, rport } = *port {
+                if (bid, rport) > (a as SwitchId, pa as u16) {
+                    b.connect(a as SwitchId, bid, 1);
+                }
+            }
+        }
+    }
+    for node in t.nodes.iter().take(n) {
+        b.attach_node(node.leaf, node.uuid);
+    }
+    let full = b.finish();
+
+    // Prune switches with no node descendants (level by level upward).
+    let ns = full.switches.len();
+    let mut has_desc = vec![false; ns];
+    for node in &full.nodes {
+        has_desc[node.leaf as usize] = true;
+    }
+    let mut order: Vec<usize> = (0..ns).collect();
+    order.sort_unstable_by_key(|&s| full.switches[s].level);
+    for &s in &order {
+        if full.switches[s].level == 0 {
+            continue;
+        }
+        for p in &full.switches[s].ports {
+            if let PortTarget::Switch { sw: r, .. } = *p {
+                if full.switches[r as usize].level < full.switches[s].level {
+                    has_desc[s] |= has_desc[r as usize];
+                }
+            }
+        }
+    }
+    let dead: HashSet<SwitchId> = (0..ns as SwitchId)
+        .filter(|&s| !has_desc[s as usize])
+        .collect();
+    apply(&full, &dead, &HashSet::new())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_node_counts() {
+        for &n in &[1usize, 8, 36, 37, 100, 648, 649, 1000, 2000] {
+            let t = build(n, 36);
+            assert_eq!(t.nodes.len(), n, "requested {n}");
+            assert!(t.check_invariants().is_ok());
+        }
+    }
+
+    #[test]
+    fn small_request_single_switch() {
+        let t = build(20, 36);
+        assert_eq!(t.switches.len(), 1);
+        assert_eq!(t.nodes.len(), 20);
+    }
+
+    #[test]
+    fn two_level_shape() {
+        // 100 nodes with radix 36: leaves of 18 nodes → 6 leaves; 18 spines.
+        let t = build(100, 36);
+        assert_eq!(t.num_levels, 2);
+        let leaves = t.leaf_switches();
+        assert_eq!(leaves.len(), 6);
+        // Last leaf partially filled: 100 - 5*18 = 10 nodes.
+        assert_eq!(t.nodes_of_leaf(*leaves.last().unwrap()).len(), 10);
+    }
+
+    #[test]
+    fn three_level_when_needed() {
+        let t = build(1000, 36);
+        assert_eq!(t.num_levels, 3);
+        assert_eq!(t.nodes.len(), 1000);
+    }
+
+    #[test]
+    fn switch_count_non_monotonic() {
+        // Crossing the 2-level capacity boundary (648 for r=36) jumps to a
+        // 3-level tree; trimmed pods then shrink again — the paper's
+        // "local erraticness".
+        let s648 = build(648, 36).switches.len();
+        let s649 = build(649, 36).switches.len();
+        assert!(s649 > s648);
+        let counts: Vec<usize> = (600..700).step_by(10).map(|n| build(n, 36).switches.len()).collect();
+        // Not monotonically increasing overall.
+        assert!(counts.windows(2).any(|w| w[1] > w[0]));
+    }
+
+    #[test]
+    fn no_empty_switches() {
+        let t = build(700, 36);
+        // Every leaf has at least one node.
+        for &l in &t.leaf_switches() {
+            assert!(!t.nodes_of_leaf(l).is_empty());
+        }
+    }
+
+    #[test]
+    fn large_request_four_levels() {
+        let t = build(30_000, 48);
+        assert_eq!(t.nodes.len(), 30_000);
+        assert!(t.num_levels >= 3);
+        assert!(t.check_invariants().is_ok());
+    }
+}

@@ -1,0 +1,244 @@
+//! Tiny declarative CLI flag parser (the registry has no `clap`).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, positional
+//! arguments, and auto-generated `--help`. Enough for the `dmodc-fm` binary,
+//! the examples, and the bench harnesses.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+#[derive(Clone)]
+struct FlagSpec {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_bool: bool,
+}
+
+/// Declarative argument parser.
+pub struct Args {
+    program: String,
+    about: String,
+    specs: Vec<FlagSpec>,
+    values: BTreeMap<String, String>,
+    positionals: Vec<String>,
+}
+
+impl Args {
+    pub fn new(program: &str, about: &str) -> Self {
+        Self {
+            program: program.to_string(),
+            about: about.to_string(),
+            specs: Vec::new(),
+            values: BTreeMap::new(),
+            positionals: Vec::new(),
+        }
+    }
+
+    /// Declare a value flag with a default.
+    pub fn flag(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.specs.push(FlagSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: Some(default.to_string()),
+            is_bool: false,
+        });
+        self
+    }
+
+    /// Declare a boolean switch (false unless present).
+    pub fn switch(mut self, name: &str, help: &str) -> Self {
+        self.specs.push(FlagSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_bool: true,
+        });
+        self
+    }
+
+    fn usage(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}\n", self.program, self.about);
+        let _ = writeln!(s, "USAGE: {} [FLAGS] [ARGS]\n\nFLAGS:", self.program);
+        for spec in &self.specs {
+            let d = match (&spec.default, spec.is_bool) {
+                (Some(d), _) => format!(" [default: {d}]"),
+                (None, true) => " [switch]".to_string(),
+                _ => String::new(),
+            };
+            let _ = writeln!(s, "  --{:<18} {}{}", spec.name, spec.help, d);
+        }
+        let _ = writeln!(s, "  --{:<18} {}", "help", "print this message");
+        s
+    }
+
+    /// Parse from an explicit token list (testable) — returns Err on unknown
+    /// flags or a help request (with the usage text as the message).
+    pub fn parse_from(mut self, tokens: &[String]) -> Result<Parsed, String> {
+        let mut it = tokens.iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if body == "help" {
+                    return Err(self.usage());
+                }
+                let (name, inline_val) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| format!("unknown flag --{name}\n\n{}", self.usage()))?
+                    .clone();
+                let value = if spec.is_bool {
+                    inline_val.unwrap_or_else(|| "true".to_string())
+                } else if let Some(v) = inline_val {
+                    v
+                } else {
+                    it.next()
+                        .ok_or_else(|| format!("flag --{name} expects a value"))?
+                        .clone()
+                };
+                self.values.insert(name, value);
+            } else {
+                self.positionals.push(tok.clone());
+            }
+        }
+        // Fill defaults.
+        for spec in &self.specs {
+            if !self.values.contains_key(&spec.name) {
+                if let Some(d) = &spec.default {
+                    self.values.insert(spec.name.clone(), d.clone());
+                } else if spec.is_bool {
+                    self.values.insert(spec.name.clone(), "false".to_string());
+                }
+            }
+        }
+        Ok(Parsed {
+            values: self.values,
+            positionals: self.positionals,
+        })
+    }
+
+    /// Parse from `std::env::args()`, printing usage and exiting on error.
+    pub fn parse(self) -> Parsed {
+        let tokens: Vec<String> = std::env::args().skip(1).collect();
+        match self.parse_from(&tokens) {
+            Ok(p) => p,
+            Err(msg) => {
+                eprintln!("{msg}");
+                std::process::exit(2);
+            }
+        }
+    }
+
+    /// Parse from env args, skipping the first `skip` tokens (subcommand).
+    pub fn parse_skip(self, skip: usize) -> Parsed {
+        let tokens: Vec<String> = std::env::args().skip(1 + skip).collect();
+        match self.parse_from(&tokens) {
+            Ok(p) => p,
+            Err(msg) => {
+                eprintln!("{msg}");
+                std::process::exit(2);
+            }
+        }
+    }
+}
+
+/// Parsed flag values.
+pub struct Parsed {
+    values: BTreeMap<String, String>,
+    positionals: Vec<String>,
+}
+
+impl Parsed {
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("flag --{name} was not declared"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> usize {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("flag --{name} expects an integer, got {:?}", self.get(name)))
+    }
+
+    pub fn get_u64(&self, name: &str) -> u64 {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("flag --{name} expects an integer, got {:?}", self.get(name)))
+    }
+
+    pub fn get_f64(&self, name: &str) -> f64 {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("flag --{name} expects a float, got {:?}", self.get(name)))
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        self.get(name) == "true"
+    }
+
+    pub fn positionals(&self) -> &[String] {
+        &self.positionals
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_values_and_defaults() {
+        let p = Args::new("t", "test")
+            .flag("nodes", "100", "node count")
+            .flag("seed", "42", "seed")
+            .switch("verbose", "chatty")
+            .parse_from(&toks(&["--nodes", "648", "--verbose"]))
+            .unwrap();
+        assert_eq!(p.get_usize("nodes"), 648);
+        assert_eq!(p.get_u64("seed"), 42);
+        assert!(p.get_bool("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax_and_positionals() {
+        let p = Args::new("t", "test")
+            .flag("algo", "dmodc", "algorithm")
+            .parse_from(&toks(&["run", "--algo=ftree", "extra"]))
+            .unwrap();
+        assert_eq!(p.get("algo"), "ftree");
+        assert_eq!(p.positionals(), &["run".to_string(), "extra".to_string()]);
+    }
+
+    #[test]
+    fn unknown_flag_errors() {
+        let r = Args::new("t", "test").parse_from(&toks(&["--nope"]));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn help_is_error_with_usage() {
+        let r = Args::new("t", "test")
+            .flag("x", "1", "an x")
+            .parse_from(&toks(&["--help"]));
+        let msg = r.err().unwrap();
+        assert!(msg.contains("USAGE"));
+        assert!(msg.contains("--x"));
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        let r = Args::new("t", "test")
+            .flag("x", "1", "an x")
+            .parse_from(&toks(&["--x"]));
+        assert!(r.err().unwrap().contains("expects a value"));
+    }
+}

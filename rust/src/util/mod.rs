@@ -1,0 +1,10 @@
+//! Substrate utilities built in-tree because the offline registry only
+//! carries the `xla` crate closure: RNG, parallel-for, CLI parsing,
+//! property testing, tables/CSV, and bench timing. See DESIGN.md §3.
+
+pub mod cli;
+pub mod par;
+pub mod prop;
+pub mod rng;
+pub mod table;
+pub mod time;

@@ -1,0 +1,207 @@
+//! Minimal parallel-for substrate (the registry has no `rayon`).
+//!
+//! The paper's production implementation spreads cost/divider/NID/route
+//! computation "over POSIX threads fetching work with a switch-level
+//! granularity". We mirror that: a scoped worker pool where workers claim
+//! chunks of an index range through an atomic cursor (self-balancing for
+//! irregular per-item cost, exactly like a pthread work queue).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use: `DMODC_THREADS` env override, else
+/// available parallelism, else 4.
+pub fn num_threads() -> usize {
+    if let Ok(v) = std::env::var("DMODC_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Parallel for over `0..n`: `body(i)` for every i, unordered, on
+/// `num_threads()` scoped threads. `body` must be `Sync` (shared read state;
+/// use interior mutability or per-index disjoint writes for output).
+pub fn parallel_for<F>(n: usize, body: F)
+where
+    F: Fn(usize) + Sync,
+{
+    parallel_for_chunked(n, 1, |i| body(i));
+}
+
+/// Like [`parallel_for`] but workers claim `chunk`-sized blocks from the
+/// cursor to amortize contention for cheap bodies.
+pub fn parallel_for_chunked<F>(n: usize, chunk: usize, body: F)
+where
+    F: Fn(usize) + Sync,
+{
+    let threads = num_threads().min(n.max(1));
+    if threads <= 1 || n <= chunk {
+        for i in 0..n {
+            body(i);
+        }
+        return;
+    }
+    let chunk = chunk.max(1);
+    let cursor = AtomicUsize::new(0);
+    let body = &body;
+    let cursor = &cursor;
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(move || loop {
+                let start = cursor.fetch_add(chunk, Ordering::Relaxed);
+                if start >= n {
+                    break;
+                }
+                let end = (start + chunk).min(n);
+                for i in start..end {
+                    body(i);
+                }
+            });
+        }
+    });
+}
+
+/// Parallel map over `0..n` producing a `Vec<T>` in index order.
+/// Output slots are disjoint so plain unsafe-free writes via `UnsafeCell`
+/// wrapper are replaced with a simpler approach: pre-size with `Option<T>`
+/// guarded by disjoint indices through a raw pointer wrapper.
+pub fn parallel_map<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    struct SendPtr<T>(*mut T);
+    unsafe impl<T> Send for SendPtr<T> {}
+    unsafe impl<T> Sync for SendPtr<T> {}
+
+    let mut out: Vec<T> = Vec::with_capacity(n);
+    let ptr = SendPtr(out.as_mut_ptr());
+    let ptr = &ptr;
+    parallel_for_chunked(n, 8, |i| {
+        let v = f(i);
+        // SAFETY: each index i is visited exactly once across all workers
+        // (atomic cursor hands out disjoint ranges), slots are within the
+        // reserved capacity, and we set the length only after the scope
+        // joins all threads.
+        unsafe {
+            std::ptr::write(ptr.0.add(i), v);
+        }
+    });
+    // SAFETY: all n slots were initialized above.
+    unsafe {
+        out.set_len(n);
+    }
+    out
+}
+
+/// Parallel mutation over a slice of `Send` items: each worker claims
+/// indices through the shared cursor and receives `&mut items[i]` — indices
+/// are handed out disjointly, so the mutable accesses never alias. Used to
+/// fill per-switch LFT rows in parallel (the paper's "POSIX threads fetching
+/// work with a switch-level granularity").
+pub fn parallel_for_mut<T, F>(items: &mut [T], f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut T) + Sync,
+{
+    struct SendPtr<T>(*mut T);
+    unsafe impl<T> Send for SendPtr<T> {}
+    unsafe impl<T> Sync for SendPtr<T> {}
+
+    let n = items.len();
+    let threads = num_threads().min(n.max(1));
+    if threads <= 1 {
+        for (i, item) in items.iter_mut().enumerate() {
+            f(i, item);
+        }
+        return;
+    }
+    let ptr = SendPtr(items.as_mut_ptr());
+    let ptr = &ptr;
+    let f = &f;
+    let cursor = AtomicUsize::new(0);
+    let cursor = &cursor;
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(move || loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                // SAFETY: the atomic cursor yields each index exactly once,
+                // so no two workers hold a reference to the same element.
+                let item = unsafe { &mut *ptr.0.add(i) };
+                f(i, item);
+            });
+        }
+    });
+}
+
+/// Run `k` independent closures on up to `k` threads, returning their
+/// results in order. Used for coarse-grained task parallelism (e.g. running
+/// several routing engines concurrently in benches).
+pub fn join_all<T, F>(tasks: Vec<F>) -> Vec<T>
+where
+    T: Send,
+    F: FnOnce() -> T + Send,
+{
+    let n = tasks.len();
+    let mut results: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(n);
+        for t in tasks {
+            handles.push(scope.spawn(t));
+        }
+        for (slot, h) in results.iter_mut().zip(handles) {
+            *slot = Some(h.join().expect("parallel task panicked"));
+        }
+    });
+    results.into_iter().map(|o| o.unwrap()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    #[test]
+    fn parallel_for_visits_all_once() {
+        let n = 10_000;
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        parallel_for(n, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn parallel_map_ordered() {
+        let v = parallel_map(5000, |i| i * i);
+        for (i, x) in v.iter().enumerate() {
+            assert_eq!(*x, i * i);
+        }
+    }
+
+    #[test]
+    fn parallel_map_empty_and_one() {
+        assert!(parallel_map(0, |i| i).is_empty());
+        assert_eq!(parallel_map(1, |i| i + 7), vec![7]);
+    }
+
+    #[test]
+    fn join_all_ordered() {
+        let tasks: Vec<Box<dyn FnOnce() -> usize + Send>> =
+            (0..8usize).map(|i| Box::new(move || i * 3) as _).collect();
+        assert_eq!(join_all(tasks), vec![0, 3, 6, 9, 12, 15, 18, 21]);
+    }
+
+    #[test]
+    fn chunked_sums_match() {
+        let total = AtomicU64::new(0);
+        parallel_for_chunked(1000, 37, |i| {
+            total.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 999 * 1000 / 2);
+    }
+}

@@ -1,0 +1,151 @@
+//! Property-based testing substrate (the registry has no `proptest`).
+//!
+//! A seeded runner that draws random cases from user generators, checks a
+//! property, and on failure performs greedy input shrinking through the
+//! generator's own size parameter. Deliberately small: the generators the
+//! routing/coordinator invariant tests need are topology dimensions, seeds,
+//! and fault sets.
+
+use super::rng::Rng;
+
+/// Outcome of one property evaluation.
+pub enum Check {
+    Pass,
+    Fail(String),
+}
+
+impl Check {
+    pub fn from_bool(ok: bool, msg: &str) -> Check {
+        if ok {
+            Check::Pass
+        } else {
+            Check::Fail(msg.to_string())
+        }
+    }
+}
+
+/// Configuration for a property run.
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink_steps: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        // PROP_CASES / PROP_SEED env overrides let CI dial effort up/down.
+        let cases = std::env::var("PROP_CASES")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(48);
+        let seed = std::env::var("PROP_SEED")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(0xD0D0_CAFE);
+        Self {
+            cases,
+            seed,
+            max_shrink_steps: 64,
+        }
+    }
+}
+
+/// Run `property` on `cases` inputs drawn by `gen`. `gen` receives an RNG
+/// and a size hint in `[0,1]` that grows over the run (small cases first).
+/// `shrink` proposes smaller variants of a failing input (may be empty).
+pub fn check<T: Clone + std::fmt::Debug>(
+    name: &str,
+    cfg: Config,
+    gen: impl Fn(&mut Rng, f64) -> T,
+    shrink: impl Fn(&T) -> Vec<T>,
+    property: impl Fn(&T) -> Check,
+) {
+    let mut rng = Rng::new(cfg.seed ^ fxhash(name));
+    for case in 0..cfg.cases {
+        let size = (case + 1) as f64 / cfg.cases as f64;
+        let input = gen(&mut rng, size);
+        if let Check::Fail(msg) = property(&input) {
+            // Greedy shrink: repeatedly take the first shrunk candidate that
+            // still fails, up to max_shrink_steps.
+            let mut best = input.clone();
+            let mut best_msg = msg;
+            let mut steps = 0;
+            'outer: while steps < cfg.max_shrink_steps {
+                for cand in shrink(&best) {
+                    steps += 1;
+                    if let Check::Fail(m) = property(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        continue 'outer;
+                    }
+                    if steps >= cfg.max_shrink_steps {
+                        break;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property {name} failed (case {case}, seed {:#x}):\n  input: {:?}\n  reason: {}",
+                cfg.seed, best, best_msg
+            );
+        }
+    }
+}
+
+/// FNV-1a hash of a str — gives each named property its own stream.
+fn fxhash(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(
+            "add-commutes",
+            Config::default(),
+            |r, _| (r.gen_range(1000) as i64, r.gen_range(1000) as i64),
+            |_| vec![],
+            |&(a, b)| Check::from_bool(a + b == b + a, "addition must commute"),
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property always-fails failed")]
+    fn failing_property_panics() {
+        check(
+            "always-fails",
+            Config {
+                cases: 3,
+                ..Config::default()
+            },
+            |r, _| r.gen_range(10),
+            |_| vec![],
+            |_| Check::Fail("nope".into()),
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "input: 10")]
+    fn shrinks_to_boundary() {
+        // Property "x < 10" fails for x >= 10; shrinking by decrement should
+        // land exactly on the boundary value 10.
+        check(
+            "shrinks",
+            Config {
+                cases: 200,
+                ..Config::default()
+            },
+            |r, size| (r.gen_range(100) as f64 * size) as u64 + 50,
+            |&x| if x > 0 { vec![x - 1] } else { vec![] },
+            |&x| Check::from_bool(x < 10, "x must be < 10"),
+        );
+    }
+}

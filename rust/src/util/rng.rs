@@ -1,0 +1,242 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The offline crate registry does not provide `rand`, so we implement the
+//! generators the reproduction needs: SplitMix64 (seeding / cheap streams)
+//! and Xoshiro256++ (bulk draws: degradation throws, random permutations).
+//! Both are well-studied, public-domain generators; statistical quality is
+//! far beyond what the experiments require, and determinism-by-seed gives us
+//! reproducible experiment logs.
+
+/// SplitMix64: tiny, fast, used to expand a `u64` seed into generator state.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// Xoshiro256++ — the workhorse generator.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    /// Seed from a single `u64` via SplitMix64 (the canonical seeding recipe).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        let mut s = [0u64; 4];
+        for w in s.iter_mut() {
+            *w = sm.next_u64();
+        }
+        // All-zero state is invalid (fixed point); SplitMix64 cannot produce
+        // four zero outputs from any seed, but guard anyway.
+        if s == [0, 0, 0, 0] {
+            s[0] = 0x1;
+        }
+        Self { s }
+    }
+
+    /// Derive an independent stream (used to hand one RNG per worker thread).
+    pub fn fork(&mut self, stream: u64) -> Rng {
+        Rng::new(self.next_u64() ^ stream.wrapping_mul(0xA076_1D64_78BD_642F))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = (self.s[0].wrapping_add(self.s[3]))
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in `[0, 1)` with 53-bit precision.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in `[0, bound)` (Lemire's unbiased method).
+    #[inline]
+    pub fn gen_range(&mut self, bound: usize) -> usize {
+        assert!(bound > 0, "gen_range bound must be positive");
+        let bound = bound as u64;
+        let mut x = self.next_u64();
+        let mut m = (x as u128).wrapping_mul(bound as u128);
+        let mut l = m as u64;
+        if l < bound {
+            let t = bound.wrapping_neg() % bound;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128).wrapping_mul(bound as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as usize
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.gen_range(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// A uniformly random permutation of `0..n`.
+    pub fn permutation(&mut self, n: usize) -> Vec<u32> {
+        let mut p: Vec<u32> = (0..n as u32).collect();
+        self.shuffle(&mut p);
+        p
+    }
+
+    /// Sample `k` distinct indices from `0..n` (partial Fisher–Yates).
+    pub fn sample_distinct(&mut self, n: usize, k: usize) -> Vec<u32> {
+        assert!(k <= n);
+        let mut idx: Vec<u32> = (0..n as u32).collect();
+        for i in 0..k {
+            let j = i + self.gen_range(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+}
+
+/// The paper's degradation magnitude: `a = floor(2^(m*u()) - 1)` with
+/// `u() ∈ [0,1)` uniform, giving a shifted log-uniform draw over
+/// `[0, 2^m - 1]`. `m` is chosen so that `2^m` covers the equipment count:
+/// we use `m = log2(count+1)` so the maximum draw never exceeds `count`.
+pub fn log_uniform_amount(rng: &mut Rng, count: usize) -> usize {
+    if count == 0 {
+        return 0;
+    }
+    let m = ((count + 1) as f64).log2();
+    let a = (2f64.powf(m * rng.next_f64()) - 1.0).floor() as usize;
+    a.min(count)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_by_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn gen_range_in_bounds_and_covers() {
+        let mut r = Rng::new(7);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let v = r.gen_range(10);
+            assert!(v < 10);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn f64_unit_interval() {
+        let mut r = Rng::new(3);
+        for _ in 0..1000 {
+            let v = r.next_f64();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn permutation_is_permutation() {
+        let mut r = Rng::new(11);
+        let p = r.permutation(257);
+        let mut seen = vec![false; 257];
+        for &v in &p {
+            assert!(!seen[v as usize]);
+            seen[v as usize] = true;
+        }
+    }
+
+    #[test]
+    fn sample_distinct_distinct() {
+        let mut r = Rng::new(5);
+        let s = r.sample_distinct(100, 40);
+        let mut sorted = s.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 40);
+        assert!(s.iter().all(|&v| v < 100));
+    }
+
+    #[test]
+    fn log_uniform_bounds() {
+        let mut r = Rng::new(9);
+        for _ in 0..2000 {
+            let a = log_uniform_amount(&mut r, 512);
+            assert!(a <= 512);
+        }
+        // Zero must be reachable (the paper includes non-degraded throws).
+        let mut r = Rng::new(10);
+        assert!((0..2000).any(|_| log_uniform_amount(&mut r, 512) == 0));
+    }
+
+    #[test]
+    fn log_uniform_spans_scales() {
+        // Log-uniform: roughly equal mass per octave.
+        let mut r = Rng::new(13);
+        let mut small = 0usize; // [0, 8)
+        let mut large = 0usize; // [64, 512]
+        for _ in 0..4000 {
+            let a = log_uniform_amount(&mut r, 511);
+            if a < 8 {
+                small += 1;
+            }
+            if a >= 64 {
+                large += 1;
+            }
+        }
+        assert!(small > 800, "small draws {small}");
+        assert!(large > 800, "large draws {large}");
+    }
+
+    #[test]
+    fn fork_streams_decorrelated() {
+        let mut root = Rng::new(42);
+        let mut a = root.fork(0);
+        let mut b = root.fork(1);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 4);
+    }
+}

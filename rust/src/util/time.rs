@@ -1,0 +1,85 @@
+//! Benchmark timing substrate (the registry has no `criterion`).
+//!
+//! Warmup + repeated measurement with median/min/mean reporting. Benches are
+//! `harness = false` binaries that use [`bench`] and print [`Table`]s, so
+//! `cargo bench` works end to end.
+
+use std::time::Instant;
+
+/// One benchmark measurement summary (seconds).
+#[derive(Clone, Copy, Debug)]
+pub struct Sample {
+    pub median: f64,
+    pub mean: f64,
+    pub min: f64,
+    pub max: f64,
+    pub iters: usize,
+}
+
+impl Sample {
+    pub fn fmt_median(&self) -> String {
+        super::table::fmt_duration(self.median)
+    }
+}
+
+/// Time `f` once.
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (f64, T) {
+    let t0 = Instant::now();
+    let out = f();
+    (t0.elapsed().as_secs_f64(), out)
+}
+
+/// Benchmark `f`: `warmup` unmeasured runs then `iters` measured runs.
+/// Returns summary stats. `BENCH_ITERS` env overrides `iters` (min 1).
+pub fn bench<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> Sample {
+    let iters = std::env::var("BENCH_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(iters)
+        .max(1);
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = times[times.len() / 2];
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    Sample {
+        median,
+        mean,
+        min: times[0],
+        max: *times.last().unwrap(),
+        iters,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_stats() {
+        let s = bench(1, 5, || {
+            let mut acc = 0u64;
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(s.min <= s.median && s.median <= s.max);
+        assert!(s.min > 0.0);
+        assert_eq!(s.iters, 5);
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (dt, v) = time_once(|| 42);
+        assert_eq!(v, 42);
+        assert!(dt >= 0.0);
+    }
+}

@@ -1,0 +1,133 @@
+//! Cross-checks of the congestion analysis against brute-force references
+//! and across equivalent formulations.
+
+use dmodc::analysis::paths::{PathTensor, NO_PORT};
+use dmodc::analysis::CongestionAnalyzer;
+use dmodc::prelude::*;
+use dmodc::routing::route_unchecked;
+use std::collections::HashSet;
+
+/// Brute force: enumerate pattern flows, count min(#srcs,#dsts) per port.
+fn brute_force_metric(t: &Topology, pt: &PathTensor, flows: &[(u32, u32)]) -> u64 {
+    let mut srcs: Vec<HashSet<u32>> = vec![HashSet::new(); t.num_ports()];
+    let mut dsts: Vec<HashSet<u32>> = vec![HashSet::new(); t.num_ports()];
+    for &(s, d) in flows {
+        if s == d {
+            continue;
+        }
+        let li = pt.leaf_index[t.nodes[s as usize].leaf as usize];
+        for &p in pt.path(li, d) {
+            if p == NO_PORT {
+                break;
+            }
+            srcs[p as usize].insert(s);
+            dsts[p as usize].insert(d);
+        }
+    }
+    (0..t.num_ports())
+        .map(|p| srcs[p].len().min(dsts[p].len()) as u64)
+        .max()
+        .unwrap_or(0)
+}
+
+fn all_pairs(n: usize) -> Vec<(u32, u32)> {
+    let mut v = Vec::with_capacity(n * n);
+    for s in 0..n as u32 {
+        for d in 0..n as u32 {
+            if s != d {
+                v.push((s, d));
+            }
+        }
+    }
+    v
+}
+
+#[test]
+fn a2a_matches_bruteforce_all_algos_fig1() {
+    let t = PgftParams::fig1().build();
+    for algo in Algo::ALL {
+        let lft = route_unchecked(algo, &t);
+        let an = CongestionAnalyzer::new(&t, &lft);
+        let brute = brute_force_metric(&t, an.paths(), &all_pairs(t.nodes.len()));
+        assert_eq!(an.all_to_all(), brute, "{}", algo.name());
+    }
+}
+
+#[test]
+fn a2a_matches_bruteforce_degraded() {
+    let t = PgftParams::small().build();
+    let mut rng = Rng::new(99);
+    for _ in 0..5 {
+        let dt = degrade::remove_random_links(&t, &mut rng, 6);
+        let lft = route_unchecked(Algo::Dmodc, &dt);
+        let an = CongestionAnalyzer::new(&dt, &lft);
+        let brute = brute_force_metric(&dt, an.paths(), &all_pairs(dt.nodes.len()));
+        assert_eq!(an.all_to_all(), brute);
+    }
+}
+
+#[test]
+fn perm_load_matches_bruteforce() {
+    let t = PgftParams::small().build();
+    let lft = route_unchecked(Algo::Ftree, &t);
+    let an = CongestionAnalyzer::new(&t, &lft);
+    let mut rng = Rng::new(5);
+    for _ in 0..10 {
+        let perm = rng.permutation(t.nodes.len());
+        let flows: Vec<(u32, u32)> = perm
+            .iter()
+            .enumerate()
+            .map(|(s, &d)| (s as u32, d))
+            .collect();
+        // For permutations min(#srcs,#dsts) == port load.
+        let brute = brute_force_metric(&t, an.paths(), &flows);
+        assert_eq!(an.perm_max_load(&perm), brute);
+    }
+}
+
+#[test]
+fn shift_series_matches_explicit_perms() {
+    let t = rlft::build(100, 36);
+    let lft = route_unchecked(Algo::Dmodc, &t);
+    let an = CongestionAnalyzer::new(&t, &lft);
+    let series = an.shift_series();
+    let n = t.nodes.len();
+    for (ki, &v) in series.iter().enumerate().step_by(17) {
+        let k = ki + 1;
+        let perm: Vec<u32> = (0..n).map(|i| ((i + k) % n) as u32).collect();
+        assert_eq!(an.perm_max_load(&perm), v, "shift {k}");
+    }
+}
+
+#[test]
+fn rp_median_is_a_median() {
+    let t = PgftParams::fig1().build();
+    let lft = route_unchecked(Algo::Updn, &t);
+    let an = CongestionAnalyzer::new(&t, &lft);
+    let med = an.random_perm_median(101, 12);
+    // Median must be between the min and max of individual samples.
+    let mut lo = u64::MAX;
+    let mut hi = 0;
+    for i in 0..101u64 {
+        let mut rng = Rng::new(12 ^ i.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let perm = rng.permutation(t.nodes.len());
+        let v = an.perm_max_load(&perm);
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    assert!(med >= lo && med <= hi, "median {med} outside [{lo},{hi}]");
+}
+
+#[test]
+fn broken_routes_reduce_flow_coverage_not_panic() {
+    let t = PgftParams::small().build();
+    let mut rng = Rng::new(321);
+    // Heavy degradation: some flows will be unroutable.
+    let dt = degrade::remove_random_switches(&t, &mut rng, 7);
+    let lft = route_unchecked(Algo::Dmodc, &dt);
+    let an = CongestionAnalyzer::new(&dt, &lft);
+    // Whatever the state, the three metrics evaluate.
+    let _ = an.all_to_all();
+    let _ = an.random_perm_median(11, 0);
+    let _ = an.shift_max();
+}

@@ -1,0 +1,230 @@
+//! End-to-end fabric-manager tests: event streams, reroute correctness,
+//! upload accounting, islet storms.
+
+use dmodc::fabric::{events, FabricManager, ManagerConfig};
+use dmodc::prelude::*;
+use dmodc::routing::validity;
+
+#[test]
+fn storm_keeps_fabric_consistent() {
+    let t = PgftParams::small().build();
+    let mut rng = Rng::new(2024);
+    let schedule = events::random_schedule(&t, &mut rng, 60, 10, 15);
+    let mut mgr = FabricManager::new(t, ManagerConfig::default());
+    let reports = mgr.process(&schedule);
+    assert_eq!(reports.len(), 60);
+    for r in &reports {
+        // Every reroute either validates or the state is genuinely
+        // disconnected — re-check externally.
+        let (topo, lft) = mgr.current();
+        let _ = (topo, lft);
+        assert!(r.reroute_secs < 10.0, "reroute too slow");
+    }
+    // Final state must be internally consistent.
+    let (topo, lft) = mgr.current();
+    let st = validity::stats(topo, lft);
+    assert_eq!(st.routes + st.unreachable, topo.leaf_switches().len() * topo.nodes.len() - topo.nodes.len());
+    assert_eq!(mgr.metrics.events, 60);
+    assert_eq!(mgr.metrics.reroutes, 61); // +1 initial
+}
+
+#[test]
+fn full_storm_then_full_recovery_restores_baseline() {
+    let t = PgftParams::small().build();
+    let mut mgr = FabricManager::new(t.clone(), ManagerConfig::default());
+    let baseline = mgr.current().1.raw().to_vec();
+
+    // Take down three spines, then bring them back in a different order.
+    let spines: Vec<u64> = t
+        .switches
+        .iter()
+        .filter(|s| s.level > 0)
+        .take(3)
+        .map(|s| s.uuid)
+        .collect();
+    let mut at = 0;
+    for &u in &spines {
+        at += 1;
+        mgr.apply(&events::Event {
+            at_ms: at,
+            kind: events::EventKind::SwitchDown(u),
+        });
+    }
+    for &u in spines.iter().rev() {
+        at += 1;
+        mgr.apply(&events::Event {
+            at_ms: at,
+            kind: events::EventKind::SwitchUp(u),
+        });
+    }
+    assert_eq!(
+        mgr.current().1.raw(),
+        &baseline[..],
+        "Dmodc must return to the original routing after recovery (unlike Ftrnd_diff)"
+    );
+}
+
+#[test]
+fn upload_delta_smaller_than_full_for_single_fault() {
+    let t = rlft::build(324, 36);
+    let cable = events::cable_ids(&t)[0].0;
+    let mut mgr = FabricManager::new(t, ManagerConfig::default());
+    let r = mgr.apply(&events::Event {
+        at_ms: 1,
+        kind: events::EventKind::LinkDown(cable),
+    });
+    assert!(r.valid);
+    assert!(
+        r.upload.blocks_delta < r.upload.blocks_full / 2,
+        "single-link fault should touch a minority of blocks: {:?}",
+        r.upload
+    );
+}
+
+#[test]
+fn islet_reboot_storm_is_handled() {
+    let t = PgftParams::small().build();
+    let leaves: std::collections::HashSet<SwitchId> =
+        t.leaf_switches()[0..6].iter().copied().collect();
+    let islet: Vec<u64> = degrade::islet_switches(&t, &leaves)
+        .iter()
+        .map(|&s| t.switches[s as usize].uuid)
+        .collect();
+    assert!(!islet.is_empty(), "test topology must have a pod islet");
+    let mut mgr = FabricManager::new(t, ManagerConfig::default());
+    let down = mgr.apply(&events::Event {
+        at_ms: 1,
+        kind: events::EventKind::IsletDown(islet.clone()),
+    });
+    assert_eq!(
+        mgr.metrics.equipment_down,
+        islet.len() as u64,
+        "all islet switches marked down"
+    );
+    let up = mgr.apply(&events::Event {
+        at_ms: 2,
+        kind: events::EventKind::IsletUp(islet.clone()),
+    });
+    assert_eq!(up.switches_alive, down.switches_alive + islet.len());
+    assert!(up.valid);
+}
+
+#[test]
+fn manager_with_all_engines() {
+    // Any engine can back the manager; reroutes must complete and the
+    // store accounting must stay consistent.
+    let t = PgftParams::fig1().build();
+    let victim = t
+        .switches
+        .iter()
+        .find(|s| s.level == 2)
+        .map(|s| s.uuid)
+        .unwrap();
+    for algo in [Algo::Dmodc, Algo::Ftree, Algo::Updn, Algo::MinHop, Algo::Sssp] {
+        let mut mgr = FabricManager::new(
+            t.clone(),
+            ManagerConfig {
+                algo,
+                validate: true,
+            },
+        );
+        let r1 = mgr.apply(&events::Event {
+            at_ms: 1,
+            kind: events::EventKind::SwitchDown(victim),
+        });
+        assert!(r1.valid, "{}", algo.name());
+        let r2 = mgr.apply(&events::Event {
+            at_ms: 2,
+            kind: events::EventKind::SwitchUp(victim),
+        });
+        assert!(r2.valid, "{}", algo.name());
+    }
+}
+
+#[test]
+fn fast_patch_mitigates_link_fault() {
+    // The §5 extension: patch only the entries crossing a dying cable via
+    // the eq-(2) alternative ports; routing must remain valid and the
+    // upload delta must be far smaller than a full push. Use a PGFT with
+    // parallel links (p2 = 2) so *both* cable endpoints have a surviving
+    // alternative (in a p=1 two-level tree the spine's down-route has
+    // none and fast_patch correctly refuses — see the fallback test).
+    let t = PgftParams::small().build();
+    let cable = events::cable_ids(&t)
+        .into_iter()
+        .find(|(c, _)| c.ordinal == 1)
+        .map(|(c, _)| c)
+        .expect("small() has parallel cable pairs");
+    let mut mgr = FabricManager::new(t, ManagerConfig::default());
+    let patch = mgr.fast_patch(&cable).expect("parallel link provides alternatives");
+    assert!(patch.entries_patched > 0);
+    let (topo, lft) = mgr.current();
+    // Patched tables still deliver every flow (the dead cable is still
+    // physically present in the materialized topology; routes just avoid
+    // it — trace-level validity must hold).
+    assert!(validity::check(topo, lft).is_ok());
+    // No route uses the dead cable anymore.
+    let (ids, _): (Vec<_>, Vec<_>) = events::cable_ids(topo).into_iter().unzip();
+    let idx = ids.iter().position(|c| *c == cable).unwrap();
+    let (sw, port) = events::cable_ids(topo)[idx].1;
+    for d in 0..lft.num_nodes() as u32 {
+        assert_ne!(lft.get(sw, d), port, "dst {d} still uses the dead cable");
+    }
+    assert!(
+        patch.upload.blocks_delta < patch.upload.blocks_full / 4,
+        "patch should be local: {:?}",
+        patch.upload
+    );
+    assert_eq!(mgr.metrics.fast_patches, 1);
+    // A later full reroute restores Dmodc balance and accounts the cable.
+    let r = mgr.reroute_now();
+    assert!(r.valid);
+    assert_eq!(r.cables_alive, events::cable_ids(mgr.current().0).len());
+}
+
+#[test]
+fn fast_patch_falls_back_when_no_alternative() {
+    // A 2-leaf / 1-spine fabric has a single path per pair: no alternative
+    // ports, so fast_patch must return None (caller does a full reroute).
+    use dmodc::topology::{fab_uuid, Builder};
+    let mut b = Builder::new();
+    let l0 = b.add_switch(fab_uuid(1, 0), 0);
+    let l1 = b.add_switch(fab_uuid(1, 1), 0);
+    let s = b.add_switch(fab_uuid(2, 0), 1);
+    b.connect(l0, s, 1);
+    b.connect(l1, s, 1);
+    for i in 0..2 {
+        b.attach_node(l0, fab_uuid(9, i));
+        b.attach_node(l1, fab_uuid(9, 10 + i));
+    }
+    let t = b.finish();
+    let cable = events::cable_ids(&t)[0].0;
+    let mut mgr = FabricManager::new(t, ManagerConfig::default());
+    assert!(mgr.fast_patch(&cable).is_none());
+}
+
+#[test]
+fn stream_mode_under_concurrent_producer() {
+    use std::sync::mpsc::channel;
+    let t = PgftParams::small().build();
+    let mut rng = Rng::new(77);
+    let schedule = events::random_schedule(&t, &mut rng, 25, 1, 8);
+    let (etx, erx) = channel();
+    let (rtx, rrx) = channel();
+    let mut mgr = FabricManager::new(t, ManagerConfig::default());
+    let consumer = std::thread::spawn(move || {
+        mgr.run_stream(erx, rtx);
+        (mgr.metrics.events, mgr.reroute_hist.count())
+    });
+    let producer = std::thread::spawn(move || {
+        for e in schedule {
+            etx.send(e).unwrap();
+        }
+    });
+    producer.join().unwrap();
+    let reports: Vec<_> = rrx.iter().collect();
+    let (events_seen, reroutes) = consumer.join().unwrap();
+    assert_eq!(reports.len(), 25);
+    assert_eq!(events_seen, 25);
+    assert_eq!(reroutes, 26); // +1 initial
+}

@@ -1,0 +1,162 @@
+//! Cross-module integration tests: topology → routing → analysis.
+
+use dmodc::analysis::CongestionAnalyzer;
+use dmodc::prelude::*;
+use dmodc::routing::{route_unchecked, trace, validity};
+
+#[test]
+fn fig1_all_engines_route_and_validate() {
+    let t = PgftParams::fig1().build();
+    for algo in Algo::ALL {
+        let lft = route(algo, &t).unwrap_or_else(|e| panic!("{}: {e}", algo.name()));
+        let st = validity::stats(&t, &lft);
+        assert_eq!(st.unreachable, 0, "{}", algo.name());
+        assert_eq!(st.downup_turns, 0, "{} must be up*/down* on intact PGFT", algo.name());
+        assert!(
+            validity::channel_dependency_acyclic(&t, &lft),
+            "{} deadlock",
+            algo.name()
+        );
+    }
+}
+
+#[test]
+fn paper_8640_smoke_dmodc() {
+    let t = PgftParams::paper_8640().build();
+    let lft = route(Algo::Dmodc, &t).expect("paper topology must route");
+    // Spot-check traces across pods.
+    for (s, d) in [(0u32, 8639u32), (4321, 1234), (17, 8000)] {
+        let p = trace(&t, &lft, s, d).expect("trace");
+        assert!(p.len() <= 7);
+    }
+}
+
+#[test]
+fn rlft_sizes_route_with_dmodc() {
+    for n in [36usize, 100, 648, 700, 1296] {
+        let t = rlft::build(n, 36);
+        let lft = route(Algo::Dmodc, &t)
+            .unwrap_or_else(|e| panic!("rlft({n}) must route: {e}"));
+        assert_eq!(lft.num_nodes(), n);
+    }
+}
+
+#[test]
+fn degradation_sweep_consistency() {
+    // For increasing degradation, routing either stays valid or the
+    // validity checker reports the exact leaf-pair disconnect; analysis
+    // must never panic either way.
+    let t = PgftParams::small().build();
+    let mut rng = Rng::new(1234);
+    let mut invalid_seen = 0;
+    for step in 0..30 {
+        let (amount, dt) = degrade::log_uniform_throw(&t, &mut rng, Equipment::Switches);
+        let lft = route_unchecked(Algo::Dmodc, &dt);
+        let valid = validity::check(&dt, &lft).is_ok();
+        let an = CongestionAnalyzer::new(&dt, &lft);
+        if valid {
+            assert_eq!(an.broken_routes(), 0, "step {step} amount {amount}");
+            assert!(an.all_to_all() >= 1);
+        } else {
+            invalid_seen += 1;
+        }
+    }
+    // The log-uniform throws must exercise both regimes.
+    assert!(invalid_seen > 0, "some throws should disconnect");
+    assert!(invalid_seen < 30, "some throws should stay valid");
+}
+
+#[test]
+fn dmodc_beats_or_matches_baselines_on_intact_sp() {
+    // The headline qualitative claim of Figure 2 at degradation 0: Dmodc's
+    // SP risk is minimal (≤ every baseline's).
+    let t = rlft::build(324, 36);
+    let dmodc_lft = route_unchecked(Algo::Dmodc, &t);
+    let sp_dmodc = CongestionAnalyzer::new(&t, &dmodc_lft).shift_max();
+    for algo in [Algo::Updn, Algo::MinHop, Algo::Sssp, Algo::Ftree] {
+        let lft = route_unchecked(algo, &t);
+        let sp = CongestionAnalyzer::new(&t, &lft).shift_max();
+        assert!(
+            sp_dmodc <= sp,
+            "dmodc SP {sp_dmodc} should be ≤ {} SP {sp}",
+            algo.name()
+        );
+    }
+}
+
+#[test]
+fn updn_equals_minhop_on_intact_pgft() {
+    // The paper: "UPDN and MinHop provide visually identical results … in a
+    // full PGFT they are equivalent". Their congestion metrics must match.
+    let t = PgftParams::small().build();
+    let u = route_unchecked(Algo::Updn, &t);
+    let m = route_unchecked(Algo::MinHop, &t);
+    let au = CongestionAnalyzer::new(&t, &u);
+    let am = CongestionAnalyzer::new(&t, &m);
+    assert_eq!(au.all_to_all(), am.all_to_all());
+    assert_eq!(au.shift_max(), am.shift_max());
+}
+
+#[test]
+fn analyzer_deterministic_across_rebuilds() {
+    let t = rlft::build(200, 36);
+    let lft = route_unchecked(Algo::Dmodc, &t);
+    let a = CongestionAnalyzer::new(&t, &lft);
+    let b = CongestionAnalyzer::new(&t, &lft);
+    assert_eq!(a.all_to_all(), b.all_to_all());
+    assert_eq!(a.shift_series(), b.shift_series());
+    assert_eq!(a.random_perm_median(64, 9), b.random_perm_median(64, 9));
+}
+
+#[test]
+fn dmodc_routes_non_pgft_fat_tree_like_topology() {
+    // Paper §5: "Dmodc is also applicable to non-PGFT fat-tree-like
+    // topologies but with lower quality load balancing." Build an
+    // irregular two-level tree (unequal leaf sizes, missing links, a
+    // half-connected spine) and verify Dmodc still produces valid routes.
+    use dmodc::topology::{fab_uuid, Builder};
+    let mut b = Builder::new();
+    let leaves: Vec<_> = (0..5).map(|i| b.add_switch(fab_uuid(1, i), 0)).collect();
+    let spines: Vec<_> = (0..3).map(|i| b.add_switch(fab_uuid(2, i), 1)).collect();
+    // Irregular connectivity: leaf i connects to spines i%3 and (i+1)%3
+    // (mixed parallel-link counts); leaf 4 gets spines 0 and 1 with a
+    // single cable each. Every leaf pair shares at least one spine, so an
+    // up*/down* path exists, but the shape is not a PGFT.
+    for (i, &l) in leaves.iter().enumerate() {
+        if i == 4 {
+            b.connect(l, spines[0], 1);
+            b.connect(l, spines[1], 1);
+        } else {
+            b.connect(l, spines[i % 3], 1);
+            b.connect(l, spines[(i + 1) % 3], 2); // parallel pair
+        }
+    }
+    // Unequal leaf populations.
+    let mut uid = 0;
+    for (i, &l) in leaves.iter().enumerate() {
+        for _ in 0..(i + 1) {
+            b.attach_node(l, fab_uuid(9, uid));
+            uid += 1;
+        }
+    }
+    let t = b.finish();
+    let lft = route(Algo::Dmodc, &t).expect("fat-tree-like topology routes");
+    let st = validity::stats(&t, &lft);
+    assert_eq!(st.unreachable, 0);
+    let an = CongestionAnalyzer::new(&t, &lft);
+    assert!(an.all_to_all() >= 1);
+}
+
+#[test]
+fn dmodc_recovery_is_exact() {
+    // Degrade, reroute, recover, reroute: tables identical to initial.
+    use std::collections::HashSet;
+    let t = PgftParams::small().build();
+    let base = route_unchecked(Algo::Dmodc, &t);
+    let mut rng = Rng::new(7);
+    let dt = degrade::remove_random_links(&t, &mut rng, 5);
+    let _mid = route_unchecked(Algo::Dmodc, &dt);
+    let recovered = degrade::apply(&t, &HashSet::new(), &HashSet::new());
+    let after = route_unchecked(Algo::Dmodc, &recovered);
+    assert_eq!(base.raw(), after.raw());
+}

@@ -1,0 +1,235 @@
+//! Property-based tests over random PGFT shapes and random degradations
+//! (util::prop — the in-tree proptest substrate).
+
+use dmodc::prelude::*;
+use dmodc::routing::{common, dmodc as dmodc_algo, route_unchecked, validity};
+use dmodc::util::prop::{check, Check, Config};
+
+/// Random small PGFT parameters scaled by the size hint.
+fn gen_pgft(rng: &mut Rng, size: f64) -> PgftParams {
+    let s = |lo: usize, hi: usize, rng: &mut Rng| {
+        lo + rng.gen_range(((hi - lo) as f64 * size) as usize + 1)
+    };
+    let levels = 2 + rng.gen_range(2); // 2 or 3
+    let mut m = vec![s(2, 4, rng) as u32];
+    let mut w = vec![1u32];
+    let mut p = vec![1u32];
+    for _ in 1..levels {
+        m.push(s(2, 4, rng) as u32);
+        w.push(s(1, 3, rng) as u32);
+        p.push(s(1, 2, rng) as u32);
+    }
+    PgftParams::new(m, w, p)
+}
+
+/// A degradation scenario: a topology shape + seed + fault counts.
+#[derive(Clone, Debug)]
+struct Scenario {
+    params: PgftParams,
+    seed: u64,
+    kill_switches: usize,
+    kill_links: usize,
+}
+
+fn gen_scenario(rng: &mut Rng, size: f64) -> Scenario {
+    let params = gen_pgft(rng, size);
+    Scenario {
+        params,
+        seed: rng.next_u64(),
+        kill_switches: rng.gen_range(4),
+        kill_links: rng.gen_range(6),
+    }
+}
+
+fn shrink_scenario(s: &Scenario) -> Vec<Scenario> {
+    let mut out = Vec::new();
+    if s.kill_switches > 0 {
+        out.push(Scenario {
+            kill_switches: s.kill_switches - 1,
+            ..s.clone()
+        });
+    }
+    if s.kill_links > 0 {
+        out.push(Scenario {
+            kill_links: s.kill_links - 1,
+            ..s.clone()
+        });
+    }
+    out
+}
+
+fn degraded(s: &Scenario) -> Topology {
+    let t = s.params.build();
+    let mut rng = Rng::new(s.seed);
+    let t = degrade::remove_random_switches(&t, &mut rng, s.kill_switches);
+    degrade::remove_random_links(&t, &mut rng, s.kill_links)
+}
+
+#[test]
+fn prop_valid_routing_has_no_broken_flows() {
+    check(
+        "valid-routing-delivers",
+        Config::default(),
+        gen_scenario,
+        shrink_scenario,
+        |s| {
+            let t = degraded(s);
+            for algo in [Algo::Dmodc, Algo::Ftree, Algo::Updn, Algo::MinHop, Algo::Sssp] {
+                let lft = route_unchecked(algo, &t);
+                if validity::check(&t, &lft).is_ok() {
+                    let st = validity::stats(&t, &lft);
+                    if st.unreachable != 0 {
+                        return Check::Fail(format!(
+                            "{}: validity OK but {} unreachable flows",
+                            algo.name(),
+                            st.unreachable
+                        ));
+                    }
+                }
+            }
+            Check::Pass
+        },
+    );
+}
+
+#[test]
+fn prop_dmodc_nids_are_permutation() {
+    check(
+        "dmodc-nids-permutation",
+        Config::default(),
+        gen_scenario,
+        shrink_scenario,
+        |s| {
+            let t = degraded(s);
+            let r = dmodc_algo::Router::new(&t, Default::default());
+            let mut nids = r.nids.clone();
+            nids.sort_unstable();
+            let want: Vec<u64> = (0..t.nodes.len() as u64).collect();
+            Check::from_bool(nids == want, "NIDs must be a permutation of 0..N")
+        },
+    );
+}
+
+#[test]
+fn prop_updn_ftree_stay_updown_under_degradation() {
+    check(
+        "updn-ftree-updown",
+        Config::default(),
+        gen_scenario,
+        shrink_scenario,
+        |s| {
+            let t = degraded(s);
+            for algo in [Algo::Updn, Algo::Ftree] {
+                let lft = route_unchecked(algo, &t);
+                let st = validity::stats(&t, &lft);
+                if st.downup_turns != 0 {
+                    return Check::Fail(format!(
+                        "{}: {} down→up turns",
+                        algo.name(),
+                        st.downup_turns
+                    ));
+                }
+            }
+            Check::Pass
+        },
+    );
+}
+
+#[test]
+fn prop_routing_is_deterministic() {
+    check(
+        "routing-deterministic",
+        Config::default(),
+        gen_scenario,
+        shrink_scenario,
+        |s| {
+            let t = degraded(s);
+            for algo in Algo::ALL {
+                let a = route_unchecked(algo, &t);
+                let b = route_unchecked(algo, &t);
+                if a.raw() != b.raw() {
+                    return Check::Fail(format!("{} is nondeterministic", algo.name()));
+                }
+            }
+            Check::Pass
+        },
+    );
+}
+
+#[test]
+fn prop_leaf_costs_symmetric() {
+    // Up*/down* costs between leaves are symmetric (path reversal maps
+    // up*down* to up*down*).
+    check(
+        "leaf-cost-symmetry",
+        Config::default(),
+        gen_scenario,
+        shrink_scenario,
+        |s| {
+            let t = degraded(s);
+            let prep = common::Prep::new(&t);
+            let c = common::costs(&t, &prep, common::DividerReduction::Max);
+            for (i, &li) in prep.leaves.iter().enumerate() {
+                for (j, &lj) in prep.leaves.iter().enumerate() {
+                    if c.cost(li, j as u32) != c.cost(lj, i as u32) {
+                        return Check::Fail(format!(
+                            "cost({li},{lj})={} != cost({lj},{li})={}",
+                            c.cost(li, j as u32),
+                            c.cost(lj, i as u32)
+                        ));
+                    }
+                }
+            }
+            Check::Pass
+        },
+    );
+}
+
+#[test]
+fn prop_degradation_preserves_nodes_and_uuids() {
+    check(
+        "degrade-preserves-identity",
+        Config::default(),
+        gen_scenario,
+        shrink_scenario,
+        |s| {
+            let full = s.params.build();
+            let t = degraded(s);
+            if t.nodes.len() != full.nodes.len() {
+                return Check::Fail("node count changed".into());
+            }
+            for (a, b) in full.nodes.iter().zip(&t.nodes) {
+                if a.uuid != b.uuid {
+                    return Check::Fail("node uuid changed".into());
+                }
+            }
+            Check::from_bool(
+                t.check_invariants().is_ok(),
+                "degraded topology invariants",
+            )
+        },
+    );
+}
+
+#[test]
+fn prop_trace_lengths_bounded_when_valid() {
+    check(
+        "trace-length-bound",
+        Config::default(),
+        gen_scenario,
+        shrink_scenario,
+        |s| {
+            let t = degraded(s);
+            let lft = route_unchecked(Algo::Dmodc, &t);
+            if validity::check(&t, &lft).is_err() {
+                return Check::Pass; // disconnected throw
+            }
+            let st = validity::stats(&t, &lft);
+            let bound = 4 * t.num_levels as usize + 4;
+            Check::from_bool(
+                st.max_hops <= bound,
+                &format!("max_hops {} exceeds bound {bound}", st.max_hops),
+            )
+        },
+    );
+}

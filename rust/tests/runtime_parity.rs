@@ -1,0 +1,100 @@
+//! Runtime parity: the AOT-compiled analysis artifacts (JAX/Pallas lowered
+//! to HLO text at build time) must return bit-identical max-load counts to
+//! the native rust engine.
+//!
+//! Requires `make artifacts`; tests skip (with a loud message) when the
+//! registry is absent so `cargo test` still works in a fresh checkout.
+
+use dmodc::analysis::CongestionAnalyzer;
+use dmodc::prelude::*;
+use dmodc::routing::route_unchecked;
+use dmodc::runtime::{AnalysisExecutor, ArtifactRegistry};
+
+fn registry() -> Option<ArtifactRegistry> {
+    let reg = ArtifactRegistry::default_location();
+    if reg.specs.is_empty() {
+        eprintln!("SKIP: no artifacts (run `make artifacts` first)");
+        None
+    } else {
+        Some(reg)
+    }
+}
+
+fn parity_case(variant: &str, topo: &Topology) {
+    let Some(reg) = registry() else { return };
+    let lft = route_unchecked(Algo::Dmodc, topo);
+    let an = CongestionAnalyzer::new(topo, &lft);
+    let exe = AnalysisExecutor::bind(&reg, variant, topo, an.paths())
+        .expect("bind artifact")
+        .unwrap_or_else(|| panic!("no {variant} artifact for n={}", topo.nodes.len()));
+
+    let n = topo.nodes.len();
+    // Shift batch parity.
+    let shifts: Vec<Vec<u32>> = (1..17.min(n))
+        .map(|k| (0..n).map(|i| ((i + k) % n) as u32).collect())
+        .collect();
+    let got = exe.run(&shifts).expect("run artifact");
+    for (i, (&g, perm)) in got.iter().zip(&shifts).enumerate() {
+        assert_eq!(g, an.perm_max_load(perm), "{variant} shift {}", i + 1);
+    }
+    // Random permutation parity.
+    let mut rng = Rng::new(4242);
+    let perms: Vec<Vec<u32>> = (0..8).map(|_| rng.permutation(n)).collect();
+    let got = exe.run(&perms).expect("run artifact");
+    for (g, perm) in got.iter().zip(&perms) {
+        assert_eq!(*g, an.perm_max_load(perm), "{variant} random perm");
+    }
+}
+
+#[test]
+fn jnp_artifact_parity_small72() {
+    parity_case("jnp", &PgftParams::small().build());
+}
+
+#[test]
+fn pallas_artifact_parity_small72() {
+    parity_case("pallas", &PgftParams::small().build());
+}
+
+#[test]
+fn jnp_artifact_parity_rlft648() {
+    parity_case("jnp", &rlft::build(648, 36));
+}
+
+#[test]
+fn pallas_artifact_parity_rlft648() {
+    parity_case("pallas", &rlft::build(648, 36));
+}
+
+#[test]
+fn artifact_parity_under_degradation() {
+    // Degraded topologies have fewer ports and possibly longer paths; the
+    // padded artifact must still agree exactly when it binds.
+    let Some(reg) = registry() else { return };
+    let t = rlft::build(648, 36);
+    let mut rng = Rng::new(7);
+    let dt = degrade::remove_random_links(&t, &mut rng, 30);
+    let lft = route_unchecked(Algo::Dmodc, &dt);
+    let an = CongestionAnalyzer::new(&dt, &lft);
+    match AnalysisExecutor::bind(&reg, "jnp", &dt, an.paths()).expect("bind") {
+        None => eprintln!("SKIP: degraded paths exceed artifact capacity"),
+        Some(exe) => {
+            let n = dt.nodes.len();
+            let perms: Vec<Vec<u32>> = (0..6).map(|_| rng.permutation(n)).collect();
+            let got = exe.run(&perms).expect("run");
+            for (g, perm) in got.iter().zip(&perms) {
+                assert_eq!(*g, an.perm_max_load(perm));
+            }
+        }
+    }
+}
+
+#[test]
+fn bind_rejects_mismatched_topology() {
+    let Some(reg) = registry() else { return };
+    let t = rlft::build(100, 36); // no artifact for n=100
+    let lft = route_unchecked(Algo::Dmodc, &t);
+    let an = CongestionAnalyzer::new(&t, &lft);
+    let exe = AnalysisExecutor::bind(&reg, "jnp", &t, an.paths()).expect("bind");
+    assert!(exe.is_none(), "must fall back to native for unknown shapes");
+}
