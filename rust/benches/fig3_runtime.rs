@@ -7,18 +7,47 @@
 //! RLFT construction's non-monotonic switch counts also reproduce the
 //! "local erraticness" note).
 //!
+//! Beyond the paper's engines, two extra columns track the hot-path work
+//! (EXPERIMENTS.md §Perf): `dmodc-seed` replays the pre-optimization
+//! pipeline (fresh allocations, **serial** Algorithm 1, the seed's
+//! already-parallel strength-reduced fill) — the honest baseline for the
+//! ≥2× acceptance gate — and `dmodc-ws` is the steady-state workspace
+//! reroute (buffers reused, parallel Algorithm 1). seed/ws is the speedup
+//! of this optimization pass.
+//!
 //!   FIG3_MAX=20736       largest node count
 //!   FIG3_MAX_SLOW=5184   cap for the O(N·E log V)-ish engines
 //!   FIG3_RADIX=36        switch radix
 //!   BENCH_ITERS=3        timing repetitions
+//!   DMODC_THREADS=n      worker threads (default: all cores)
 
 use dmodc::prelude::*;
-use dmodc::routing::route_unchecked;
+use dmodc::routing::common::{self, DividerReduction, Prep};
+use dmodc::routing::dmodc::{topological_nids, Options, Router};
+use dmodc::routing::{route_unchecked, Lft, RerouteWorkspace};
 use dmodc::util::table::{fmt_duration, Table};
 use dmodc::util::time::bench;
 
 fn env_usize(name: &str, default: usize) -> usize {
     std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// The seed pipeline, stage for stage: freshly allocated `Prep`, serial
+/// push-based Algorithm 1, Algorithm 2, and the seed's parallel
+/// strength-reduced row fill. (Not `route_reference`, whose literal
+/// per-destination equations are deliberately naive — benchmarking that
+/// would overstate the optimization.)
+fn seed_pipeline(topo: &Topology) -> Lft {
+    let prep = Prep::new(topo);
+    let costs = common::costs_serial(topo, &prep, DividerReduction::Max);
+    let nids = topological_nids(topo, &prep, &costs);
+    let router = Router {
+        prep,
+        costs,
+        nids,
+        opts: Options::default(),
+    };
+    router.lft(topo)
 }
 
 fn main() {
@@ -29,9 +58,10 @@ fn main() {
         .into_iter()
         .filter(|&n| n <= max)
         .collect();
+    println!("threads = {}", dmodc::util::par::num_threads());
 
     let mut tab = Table::new(&[
-        "nodes", "switches", "dmodc", "ftree", "updn", "minhop", "sssp",
+        "nodes", "switches", "dmodc", "dmodc-seed", "dmodc-ws", "ftree", "updn", "minhop", "sssp",
     ]);
     let mut csv = Table::new(&["nodes", "switches", "algo", "seconds"]);
     for &n in &sizes {
@@ -51,6 +81,32 @@ fn main() {
                 algo.name().into(),
                 format!("{:.6}", s.median),
             ]);
+            if algo == Algo::Dmodc {
+                // Seed-pipeline baseline.
+                let r = bench(0, 3, || seed_pipeline(&topo));
+                cells.push(fmt_duration(r.median));
+                csv.row(vec![
+                    n.to_string(),
+                    topo.switches.len().to_string(),
+                    "dmodc-seed".into(),
+                    format!("{:.6}", r.median),
+                ]);
+                // Steady-state workspace reroute.
+                let mut ws = RerouteWorkspace::default();
+                let mut out = Lft::default();
+                ws.reroute_into(&topo, &mut out); // warm
+                let w = bench(0, 3, || {
+                    ws.reroute_into(&topo, &mut out);
+                    out.raw()[0]
+                });
+                cells.push(fmt_duration(w.median));
+                csv.row(vec![
+                    n.to_string(),
+                    topo.switches.len().to_string(),
+                    "dmodc-ws".into(),
+                    format!("{:.6}", w.median),
+                ]);
+            }
         }
         tab.row(cells);
         println!("… {n} nodes done");

@@ -42,8 +42,14 @@ fn main() {
     add("dmodc: prep (groups)", bench(1, 5, || common::Prep::new(&topo)));
     let prep = common::Prep::new(&topo);
     add(
-        "dmodc: costs+dividers (Alg 1)",
+        "dmodc: costs+dividers (Alg 1, parallel)",
         bench(1, 5, || common::costs(&topo, &prep, common::DividerReduction::Max)),
+    );
+    add(
+        "dmodc: costs+dividers (Alg 1, serial ref)",
+        bench(1, 5, || {
+            common::costs_serial(&topo, &prep, common::DividerReduction::Max)
+        }),
     );
     let router = Router::new(&topo, Default::default());
     add(
@@ -54,6 +60,25 @@ fn main() {
     );
     add("dmodc: routes (eqs 1-4)", bench(1, 5, || router.lft(&topo)));
     add("dmodc: full reroute", bench(1, 5, || route_unchecked(Algo::Dmodc, &topo)));
+    add(
+        "dmodc: full reroute (literal-eqs reference)",
+        bench(1, 3, || {
+            dmodc::routing::dmodc::route_reference(&topo, &Default::default())
+        }),
+    );
+    {
+        // Steady-state workspace reroute: buffers reused across events.
+        let mut ws = dmodc::routing::RerouteWorkspace::default();
+        let mut out = dmodc::routing::Lft::default();
+        ws.reroute_into(&topo, &mut out); // warm
+        add(
+            "dmodc: workspace steady-state reroute",
+            bench(1, 5, || {
+                ws.reroute_into(&topo, &mut out);
+                out.raw()[0]
+            }),
+        );
+    }
 
     // Analysis stages.
     let lft = route_unchecked(Algo::Dmodc, &topo);

@@ -1,0 +1,123 @@
+//! CI bench smoke: median full-reroute latency on a mid-size PGFT at 1 and
+//! N worker threads, written to `BENCH_reroute.json` so the perf
+//! trajectory is tracked across PRs (see `.github/workflows/ci.yml` and
+//! EXPERIMENTS.md §Perf).
+//!
+//! Measured quantity: one steady-state fault reaction — in-place degraded
+//! topology materialization plus the full Dmodc pipeline
+//! (prep → Algorithm 1 → Algorithm 2 → route fill) out of a persistent
+//! `RerouteWorkspace`, alternating a spine fault with recovery so both the
+//! degraded and intact shapes stay warm. `seed_baseline_median_s` times
+//! the pre-optimization pipeline (fresh allocations + serial Algorithm 1 +
+//! the seed's parallel strength-reduced fill) on the intact topology for
+//! the speedup baseline.
+//!
+//!   REROUTE_PGFT="24,15,24;1,6,8;1,1,1"   topology (default: 8640 nodes)
+//!   BENCH_ITERS=5                          repetitions per measurement
+//!   BENCH_REROUTE_OUT=BENCH_reroute.json   output path
+
+use dmodc::prelude::*;
+use dmodc::routing::common::{self, DividerReduction, Prep};
+use dmodc::routing::dmodc::{topological_nids, Options, Router};
+use dmodc::routing::{Lft, RerouteWorkspace};
+use dmodc::util::par;
+use dmodc::util::time::bench;
+use std::collections::HashSet;
+
+/// The seed pipeline, stage for stage (see fig3_runtime.rs for rationale).
+fn seed_pipeline(topo: &Topology) -> Lft {
+    let prep = Prep::new(topo);
+    let costs = common::costs_serial(topo, &prep, DividerReduction::Max);
+    let nids = topological_nids(topo, &prep, &costs);
+    let router = Router {
+        prep,
+        costs,
+        nids,
+        opts: Options::default(),
+    };
+    router.lft(topo)
+}
+
+fn median_reroute_secs(topo: &Topology, threads: usize) -> (f64, f64) {
+    par::set_threads(Some(threads));
+    let spine = topo
+        .switches
+        .iter()
+        .enumerate()
+        .rev()
+        .find(|(_, s)| s.level > 0)
+        .map(|(i, _)| i as SwitchId)
+        .expect("topology has a spine");
+    let fault: HashSet<SwitchId> = [spine].into_iter().collect();
+    let recover: HashSet<SwitchId> = HashSet::new();
+    let no_cables: HashSet<(SwitchId, u16)> = HashSet::new();
+    let mut ws = RerouteWorkspace::default();
+    let mut degraded = Topology::default();
+    let mut out = Lft::default();
+    // Warm both shapes (and the worker pool / per-worker scratch).
+    for dead in [&fault, &recover, &fault, &recover] {
+        ws.materialize(topo, dead, &no_cables, &mut degraded);
+        ws.reroute_into(&degraded, &mut out);
+    }
+    let mut flip = false;
+    let s = bench(1, 5, || {
+        flip = !flip;
+        let dead = if flip { &fault } else { &recover };
+        ws.materialize(topo, dead, &no_cables, &mut degraded);
+        ws.reroute_into(&degraded, &mut out);
+        out.raw()[0]
+    });
+    par::set_threads(None);
+    (s.median, s.min)
+}
+
+fn main() {
+    let spec = std::env::var("REROUTE_PGFT").unwrap_or_else(|_| "24,15,24;1,6,8;1,1,1".into());
+    let params = PgftParams::parse(&spec).expect("REROUTE_PGFT");
+    let topo = params.build();
+    let host_threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let n_threads = par::num_threads().max(2);
+    println!(
+        "reroute smoke on {} nodes / {} switches (host threads {host_threads})",
+        topo.nodes.len(),
+        topo.switches.len()
+    );
+
+    let reference = bench(1, 3, || seed_pipeline(&topo));
+    let (m1, min1) = median_reroute_secs(&topo, 1);
+    let (mn, minn) = median_reroute_secs(&topo, n_threads);
+
+    let json = format!(
+        concat!(
+            "{{\n",
+            "  \"schema\": \"bench_reroute/v1\",\n",
+            "  \"topology\": \"PGFT({spec})\",\n",
+            "  \"nodes\": {nodes},\n",
+            "  \"switches\": {switches},\n",
+            "  \"host_threads\": {host},\n",
+            "  \"seed_baseline_median_s\": {refm:.6},\n",
+            "  \"threads_1\": {{ \"median_s\": {m1:.6}, \"min_s\": {min1:.6} }},\n",
+            "  \"threads_n\": {{ \"n\": {nt}, \"median_s\": {mn:.6}, \"min_s\": {minn:.6} }},\n",
+            "  \"speedup_n_vs_1\": {sp1:.3},\n",
+            "  \"speedup_n_vs_seed_baseline\": {spr:.3}\n",
+            "}}\n"
+        ),
+        spec = spec,
+        nodes = topo.nodes.len(),
+        switches = topo.switches.len(),
+        host = host_threads,
+        refm = reference.median,
+        m1 = m1,
+        min1 = min1,
+        nt = n_threads,
+        mn = mn,
+        minn = minn,
+        sp1 = m1 / mn.max(1e-12),
+        spr = reference.median / mn.max(1e-12),
+    );
+    let out_path =
+        std::env::var("BENCH_REROUTE_OUT").unwrap_or_else(|_| "BENCH_reroute.json".into());
+    std::fs::write(&out_path, &json).expect("write BENCH_reroute.json");
+    print!("{json}");
+    println!("→ {out_path}");
+}

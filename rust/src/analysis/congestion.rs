@@ -10,6 +10,16 @@ use super::paths::{PathTensor, NO_PORT};
 use crate::topology::Topology;
 use crate::util::par::parallel_map;
 use crate::util::rng::Rng;
+use std::cell::RefCell;
+
+thread_local! {
+    /// Per-worker port-load histogram, reused across permutation
+    /// evaluations (`max_load_fn` resizes it to the engine's port count on
+    /// every call, so sharing it between engines is safe). The pool's
+    /// workers persist, so the all-shifts scans allocate it once per
+    /// worker instead of once per shift.
+    static LOADS: RefCell<Vec<u16>> = const { RefCell::new(Vec::new()) };
+}
 
 /// Shared immutable state for permutation evaluations.
 pub struct PermEngine<'p> {
@@ -85,8 +95,7 @@ impl<'p> PermEngine<'p> {
         let mut maxima = parallel_map(samples, |i| {
             let mut rng = Rng::new(seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
             let perm = rng.permutation(n);
-            let mut loads = Vec::new();
-            self.max_load(&perm, &mut loads)
+            LOADS.with(|l| self.max_load(&perm, &mut l.borrow_mut()))
         });
         maxima.sort_unstable();
         maxima[maxima.len() / 2]
@@ -95,10 +104,9 @@ impl<'p> PermEngine<'p> {
     /// Per-shift max loads for all `N-1` cyclic shifts (SP series).
     pub fn shift_series(&self) -> Vec<u64> {
         let n = self.paths.num_nodes;
-        parallel_map(n - 1, |ki| {
+        parallel_map(n.saturating_sub(1), |ki| {
             let k = ki + 1;
-            let mut loads = Vec::new();
-            self.max_load_fn(|s| ((s + k) % n) as u32, &mut loads)
+            LOADS.with(|l| self.max_load_fn(|s| ((s + k) % n) as u32, &mut l.borrow_mut()))
         })
     }
 
@@ -111,6 +119,8 @@ impl<'p> PermEngine<'p> {
     /// `order[i]`, and shift-`k` sends `order[i] → order[(i+k) mod n]`.
     /// Used to evaluate how shift-friendly a *published* NID ordering is
     /// (the paper: "shift patterns which respect such an ordering").
+    /// Parallel over shifts like [`PermEngine::shift_series`], with the
+    /// same per-worker `loads` scratch.
     pub fn shift_max_ordered(&self, order: &[u32]) -> u64 {
         let n = self.paths.num_nodes;
         assert_eq!(order.len(), n);
@@ -118,17 +128,19 @@ impl<'p> PermEngine<'p> {
         for (i, &node) in order.iter().enumerate() {
             pos[node as usize] = i as u32;
         }
-        (0..n - 1)
-            .map(|ki| {
-                let k = ki + 1;
-                let mut loads = Vec::new();
+        let pos = &pos;
+        parallel_map(n.saturating_sub(1), |ki| {
+            let k = ki + 1;
+            LOADS.with(|l| {
                 self.max_load_fn(
-                    |s| order[(pos[s] as usize + k) % n] as u32,
-                    &mut loads,
+                    |s| order[(pos[s] as usize + k) % n],
+                    &mut l.borrow_mut(),
                 )
             })
-            .max()
-            .unwrap_or(0)
+        })
+        .into_iter()
+        .max()
+        .unwrap_or(0)
     }
 }
 
@@ -184,6 +196,18 @@ mod tests {
         assert_eq!(series.len(), t.nodes.len() - 1);
         let max = *series.iter().max().unwrap();
         assert!(max <= 2, "SP max load on intact fig1 should be ≤ 2, got {max}");
+    }
+
+    #[test]
+    fn shift_max_ordered_identity_matches_shift_series() {
+        // With the identity ordering, shift-k sends s → (s+k) mod n, which
+        // is exactly the plain shift series — the parallel ordered scan
+        // must agree with its maximum.
+        let t = PgftParams::small().build();
+        let (pt, _) = engine(&t);
+        let e = PermEngine::new(&t, &pt);
+        let ident: Vec<u32> = (0..t.nodes.len() as u32).collect();
+        assert_eq!(e.shift_max_ordered(&ident), e.shift_max());
     }
 
     #[test]

@@ -14,9 +14,8 @@
 use super::events::{cable_ids, CableId, Event, EventKind};
 use super::lft_store::{LftStore, UploadStats};
 use super::metrics::{Histogram, Metrics};
-use crate::routing::dmodc::Router;
-use crate::routing::{route_unchecked, validity, Algo, Lft};
-use crate::topology::{degrade, PortTarget, SwitchId, Topology};
+use crate::routing::{route_unchecked, validity, Algo, Lft, RerouteWorkspace};
+use crate::topology::{PortTarget, SwitchId, Topology};
 use std::collections::{HashMap, HashSet};
 use std::sync::mpsc::{Receiver, Sender};
 use std::time::Instant;
@@ -61,7 +60,19 @@ pub struct FabricManager {
     store: LftStore,
     pub metrics: Metrics,
     pub reroute_hist: Histogram,
-    current: Option<(Topology, Lft)>,
+    /// Persistent pipeline buffers: degraded-topology scratch, CSR prep,
+    /// cost/divider buffers, NIDs — reused across events so steady-state
+    /// rerouting is allocation-free in the routing pipeline (Dmodc).
+    workspace: RerouteWorkspace,
+    /// Current degraded topology, rebuilt in place per event.
+    current_topo: Topology,
+    /// Current tables, refilled in place per event.
+    current_lft: Lft,
+    /// Ports of `current_topo` whose cable died via [`FabricManager::fast_patch`]
+    /// since the last full reroute (the materialized topology still contains
+    /// them; later patches must not select them as alternatives). Cleared on
+    /// every reroute — the coordinates are only valid for this materialization.
+    patched_dead_ports: HashSet<(SwitchId, u16)>,
     events_seen: usize,
 }
 
@@ -86,7 +97,10 @@ impl FabricManager {
             store: LftStore::new(),
             metrics: Metrics::default(),
             reroute_hist: Histogram::latency_ms(),
-            current: None,
+            workspace: RerouteWorkspace::default(),
+            current_topo: Topology::default(),
+            current_lft: Lft::default(),
+            patched_dead_ports: HashSet::new(),
             events_seen: 0,
         };
         mgr.reroute();
@@ -95,8 +109,7 @@ impl FabricManager {
 
     /// Current degraded topology + tables.
     pub fn current(&self) -> (&Topology, &Lft) {
-        let (t, l) = self.current.as_ref().expect("rerouted at construction");
-        (t, l)
+        (&self.current_topo, &self.current_lft)
     }
 
     fn mark(&mut self, kind: &EventKind) {
@@ -143,35 +156,55 @@ impl FabricManager {
     }
 
     /// Full reroute of the current degraded state. Returns the report.
+    ///
+    /// Hot path (EXPERIMENTS.md §Perf): the degraded topology is rebuilt
+    /// in place and, for Dmodc, the whole pipeline runs out of the
+    /// persistent [`RerouteWorkspace`] — steady-state fault storms do no
+    /// heap allocation in the routing pipeline, and the validity pass
+    /// reuses the costs Algorithm 1 just produced.
     fn reroute(&mut self) -> ManagerReport {
         let t0 = Instant::now();
-        let topo = degrade::apply(&self.reference, &self.dead_switches, &self.dead_cables);
-        let lft = route_unchecked(self.cfg.algo, &topo);
+        self.workspace.materialize(
+            &self.reference,
+            &self.dead_switches,
+            &self.dead_cables,
+            &mut self.current_topo,
+        );
+        self.patched_dead_ports.clear();
+        let dmodc_path = self.cfg.algo == Algo::Dmodc;
+        if dmodc_path {
+            self.workspace
+                .reroute_into(&self.current_topo, &mut self.current_lft);
+        } else {
+            self.current_lft = route_unchecked(self.cfg.algo, &self.current_topo);
+        }
         let reroute_secs = t0.elapsed().as_secs_f64();
 
-        let valid = if self.cfg.validate {
-            validity::check(&topo, &lft).is_ok()
-        } else {
+        let valid = if !self.cfg.validate {
             true
+        } else if dmodc_path {
+            self.workspace
+                .validate(&self.current_topo, &self.current_lft)
+                .is_ok()
+        } else {
+            validity::check(&self.current_topo, &self.current_lft).is_ok()
         };
         if !valid {
             self.metrics.invalid_states += 1;
         }
-        let upload = self.store.commit(&topo, &lft);
+        let upload = self.store.commit(&self.current_topo, &self.current_lft);
         self.metrics.reroutes += 1;
         self.metrics.entries_changed += upload.entries_changed as u64;
         self.metrics.blocks_uploaded += upload.blocks_delta as u64;
         self.reroute_hist.record(reroute_secs * 1e3);
-        let report = ManagerReport {
+        ManagerReport {
             event_idx: self.events_seen,
             reroute_secs,
             valid,
             upload,
-            switches_alive: topo.switches.len(),
-            cables_alive: topo.num_cables(),
-        };
-        self.current = Some((topo, lft));
-        report
+            switches_alive: self.current_topo.switches.len(),
+            cables_alive: self.current_topo.num_cables(),
+        }
     }
 
     /// Apply one event (synchronous): update state, reroute, report.
@@ -220,7 +253,7 @@ impl FabricManager {
             return None;
         }
         let t0 = Instant::now();
-        let (topo, lft) = self.current.as_mut().expect("initialized");
+        let topo = &self.current_topo;
         // Locate the cable endpoints in the *current* materialized topology.
         let (sw_a, port_a) = cable_ids(topo)
             .into_iter()
@@ -230,32 +263,39 @@ impl FabricManager {
             PortTarget::Switch { sw, rport } => (sw, rport),
             _ => return None,
         };
-        let router = Router::new(topo, Default::default());
+        // The workspace's prep/costs still describe the *materialized*
+        // topology (fast patches don't rematerialize it), so the eq-(2)
+        // alternatives come for free — no fresh Router build. But that
+        // topology also still contains any cable a *previous* fast_patch
+        // declared dead, so alternatives are filtered against
+        // `patched_dead_ports` too: without this, patching cable Y could
+        // route entries straight into already-dead cable X.
+        let mut alts: Vec<u16> = Vec::new();
         let mut patches: Vec<(SwitchId, u32, u16)> = Vec::new();
         for &(sw, dead_port) in &[(sw_a, port_a), (sw_b, port_b)] {
             for d in 0..topo.nodes.len() as u32 {
-                if lft.get(sw, d) != dead_port {
+                if self.current_lft.get(sw, d) != dead_port {
                     continue;
                 }
-                let alt = router
-                    .alternatives(topo, sw, d)
-                    .into_iter()
-                    .find(|&p| p != dead_port)?;
+                self.workspace.alternatives_into(topo, sw, d, &mut alts);
+                let alt = alts.iter().copied().find(|&p| {
+                    p != dead_port && !self.patched_dead_ports.contains(&(sw, p))
+                })?;
                 patches.push((sw, d, alt));
             }
         }
         for &(sw, d, p) in &patches {
-            lft.set(sw, d, p);
+            self.current_lft.set(sw, d, p);
         }
-        let lft_snapshot = lft.clone();
+        self.patched_dead_ports.insert((sw_a, port_a));
+        self.patched_dead_ports.insert((sw_b, port_b));
         // Record the cable as dead so the next full reroute accounts for it.
         if let Some(&p) = self.cable_to_port.get(cable) {
             self.dead_cables.insert(p);
         }
         let secs = t0.elapsed().as_secs_f64();
         self.metrics.fast_patches += 1;
-        let topo_ref = &self.current.as_ref().unwrap().0;
-        let upload = self.store.commit(topo_ref, &lft_snapshot);
+        let upload = self.store.commit(&self.current_topo, &self.current_lft);
         Some(PatchReport {
             entries_patched: patches.len(),
             patch_secs: secs,
@@ -275,6 +315,7 @@ pub struct PatchReport {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::topology::degrade;
     use crate::topology::pgft::PgftParams;
 
     fn uuid_of_level(t: &Topology, level: u8) -> u64 {

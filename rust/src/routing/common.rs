@@ -1,79 +1,287 @@
 //! Shared routing preprocessing: ranks, port groups, and the cost/divider
 //! sweeps of the paper's Algorithm 1.
+//!
+//! Data layout (EXPERIMENTS.md §Perf): port groups live in a CSR-style flat
+//! layout — `group_offsets` indexes a switch's groups, `port_offsets`
+//! indexes each group's ports in one flat `ports` array — instead of the
+//! original `Vec<Vec<Group>>`-of-`Vec<u16>` nesting. The routing hot loops
+//! stream these arrays O(switches × leaves) times per reroute; the flat
+//! layout removes two pointer chases per group visit and lets
+//! [`Prep::build_into`] rebuild the whole structure without allocating in
+//! the fault-storm steady state.
+//!
+//! Algorithm 1 ([`costs`]) is parallelized level-synchronously: all
+//! switches within one level are independent, so each level is one
+//! parallel step over `by_level_up` (see `costs_into`); the sweeps *pull*
+//! from neighbor rows finalized in earlier levels, which keeps the result
+//! bit-identical to the serial push formulation retained in
+//! [`costs_serial`].
 
 use crate::topology::{NodeId, PortTarget, SwitchId, Topology};
+use crate::util::par::{parallel_for_chunked, SharedMut};
 
 /// Unreachable cost sentinel.
 pub const INF: u16 = u16::MAX;
 
-/// A port group: all ports of a switch linked to the same remote switch
-/// (the paper prepares these sorted by remote UUID "to help with
-/// same-destination route coalescing").
-#[derive(Clone, Debug)]
-pub struct Group {
+/// Leaf-index tile width for the cost-row relaxations: the write row tile
+/// (u16 × 1024 = 2 KiB) stays L1-resident while every neighbor row streams
+/// through it once per level.
+const COST_TILE: usize = 1024;
+
+/// A borrowed view of one port group: all ports of a switch linked to the
+/// same remote switch (the paper prepares these sorted by remote UUID "to
+/// help with same-destination route coalescing").
+#[derive(Clone, Copy, Debug)]
+pub struct GroupRef<'a> {
     pub remote: SwitchId,
-    /// Local port indices, ascending.
-    pub ports: Vec<u16>,
     /// True if `remote` is at a higher level (uplink group).
     pub up: bool,
+    /// Local port indices, ascending.
+    pub ports: &'a [u16],
 }
 
 /// Preprocessed view of a topology shared by the routing engines.
+///
+/// Rebuildable in place via [`Prep::build_into`] (allocation-free once the
+/// buffers have grown to the topology's size).
+#[derive(Default)]
 pub struct Prep {
     /// Leaf switches, ascending id.
     pub leaves: Vec<SwitchId>,
     /// switch id -> index into `leaves` (or `u32::MAX`).
     pub leaf_index: Vec<u32>,
-    /// Per switch: port groups sorted by remote switch UUID.
-    pub groups: Vec<Vec<Group>>,
+    /// CSR: groups of switch `s` are `group_offsets[s]..group_offsets[s+1]`
+    /// into `group_remote` / `group_up` / `port_offsets`.
+    pub group_offsets: Vec<u32>,
+    /// Remote switch of each group, UUID-sorted within a switch.
+    pub group_remote: Vec<SwitchId>,
+    /// Uplink flag of each group.
+    pub group_up: Vec<bool>,
+    /// CSR: ports of group `g` are `port_offsets[g]..port_offsets[g+1]`
+    /// into `ports`.
+    pub port_offsets: Vec<u32>,
+    /// Flat local port indices, ascending within each group.
+    pub ports: Vec<u16>,
     /// Per switch: number of uplink groups (`#{s' ⊃ s}` in the paper).
     pub up_groups: Vec<u32>,
     /// Switch ids sorted by ascending level (stable by id).
     pub by_level_up: Vec<SwitchId>,
+    /// Level `l` spans `by_level_up[level_offsets[l]..level_offsets[l+1]]`.
+    pub level_offsets: Vec<u32>,
+    /// CSR: nodes of leaf-index `li` (port-rank order) are
+    /// `leaf_node_offsets[li]..leaf_node_offsets[li+1]` into `leaf_nodes`.
+    pub leaf_node_offsets: Vec<u32>,
+    pub leaf_nodes: Vec<NodeId>,
+}
+
+/// Reusable staging buffers for [`Prep::build_into`].
+#[derive(Default)]
+pub struct PrepScratch {
+    remotes: Vec<SwitchId>,
+    port_lists: Vec<Vec<u16>>,
+    order: Vec<u32>,
+    cursor: Vec<u32>,
 }
 
 impl Prep {
     pub fn new(topo: &Topology) -> Self {
+        let mut out = Prep::default();
+        let mut scratch = PrepScratch::default();
+        Prep::build_into(topo, &mut out, &mut scratch);
+        out
+    }
+
+    /// Rebuild `out` for `topo`, reusing every buffer (and `scratch`)
+    /// from previous builds — zero heap allocation in steady state.
+    pub fn build_into(topo: &Topology, out: &mut Prep, scratch: &mut PrepScratch) {
         let ns = topo.switches.len();
-        let leaves = topo.leaf_switches();
-        let mut leaf_index = vec![u32::MAX; ns];
-        for (i, &l) in leaves.iter().enumerate() {
-            leaf_index[l as usize] = i as u32;
+
+        out.leaves.clear();
+        out.leaves
+            .extend((0..ns as SwitchId).filter(|&s| topo.switches[s as usize].level == 0));
+        out.leaf_index.clear();
+        out.leaf_index.resize(ns, u32::MAX);
+        for (i, &l) in out.leaves.iter().enumerate() {
+            out.leaf_index[l as usize] = i as u32;
         }
-        let mut groups: Vec<Vec<Group>> = Vec::with_capacity(ns);
+
+        out.group_offsets.clear();
+        out.group_remote.clear();
+        out.group_up.clear();
+        out.port_offsets.clear();
+        out.ports.clear();
+        out.up_groups.clear();
+        out.group_offsets.push(0);
+        out.port_offsets.push(0);
         for (s, sw) in topo.switches.iter().enumerate() {
-            let mut gs: Vec<Group> = Vec::new();
+            // Stage this switch's groups in first-encounter port order.
+            scratch.remotes.clear();
+            let mut ng = 0usize;
             for (pi, p) in sw.ports.iter().enumerate() {
                 if let PortTarget::Switch { sw: r, .. } = *p {
-                    match gs.iter_mut().find(|g| g.remote == r) {
-                        Some(g) => g.ports.push(pi as u16),
-                        None => gs.push(Group {
-                            remote: r,
-                            ports: vec![pi as u16],
-                            up: topo.switches[r as usize].level
-                                > topo.switches[s].level,
-                        }),
+                    if let Some(g) = scratch.remotes.iter().position(|&x| x == r) {
+                        scratch.port_lists[g].push(pi as u16);
+                    } else {
+                        if scratch.port_lists.len() == ng {
+                            scratch.port_lists.push(Vec::new());
+                        }
+                        scratch.port_lists[ng].clear();
+                        scratch.port_lists[ng].push(pi as u16);
+                        scratch.remotes.push(r);
+                        ng += 1;
                     }
                 }
             }
-            gs.sort_by_key(|g| topo.switches[g.remote as usize].uuid);
-            groups.push(gs);
+            // Emit in remote-UUID order (UUIDs are unique, so this equals
+            // the original stable sort).
+            scratch.order.clear();
+            scratch.order.extend(0..ng as u32);
+            scratch
+                .order
+                .sort_unstable_by_key(|&g| topo.switches[scratch.remotes[g as usize] as usize].uuid);
+            let mut upg = 0u32;
+            for &g in &scratch.order {
+                let r = scratch.remotes[g as usize];
+                // Same-level links are rejected by `check_invariants`, but
+                // `Topology` fields are public — enforce the precondition
+                // here because the level-synchronous sweeps of `costs_into`
+                // rely on every link crossing levels (their per-level
+                // write-disjointness argument is unsound otherwise).
+                assert_ne!(
+                    topo.switches[r as usize].level,
+                    topo.switches[s].level,
+                    "same-level link between switches {s} and {r} (invalid topology)"
+                );
+                let up = topo.switches[r as usize].level > topo.switches[s].level;
+                if up {
+                    upg += 1;
+                }
+                out.group_remote.push(r);
+                out.group_up.push(up);
+                out.ports.extend_from_slice(&scratch.port_lists[g as usize]);
+                out.port_offsets.push(out.ports.len() as u32);
+            }
+            out.group_offsets.push(out.group_remote.len() as u32);
+            out.up_groups.push(upg);
         }
-        let up_groups = groups
-            .iter()
-            .map(|gs| gs.iter().filter(|g| g.up).count() as u32)
-            .collect();
-        let mut by_level_up: Vec<SwitchId> = (0..ns as SwitchId).collect();
-        by_level_up.sort_by_key(|&s| (topo.switches[s as usize].level, s));
-        Self {
-            leaves,
-            leaf_index,
-            groups,
-            up_groups,
-            by_level_up,
+
+        // by_level_up + level_offsets via counting sort (stable by id).
+        let nlv = topo.num_levels as usize;
+        out.level_offsets.clear();
+        out.level_offsets.resize(nlv + 1, 0);
+        for sw in &topo.switches {
+            out.level_offsets[sw.level as usize + 1] += 1;
+        }
+        for l in 0..nlv {
+            out.level_offsets[l + 1] += out.level_offsets[l];
+        }
+        out.by_level_up.clear();
+        out.by_level_up.resize(ns, 0);
+        scratch.cursor.clear();
+        scratch
+            .cursor
+            .extend_from_slice(&out.level_offsets[..nlv]);
+        for (s, sw) in topo.switches.iter().enumerate() {
+            let c = &mut scratch.cursor[sw.level as usize];
+            out.by_level_up[*c as usize] = s as SwitchId;
+            *c += 1;
+        }
+
+        // Per-leaf node lists (port-rank order — ports iterate ascending).
+        out.leaf_node_offsets.clear();
+        out.leaf_nodes.clear();
+        out.leaf_node_offsets.push(0);
+        for &l in &out.leaves {
+            for p in &topo.switches[l as usize].ports {
+                if let PortTarget::Node { node } = *p {
+                    out.leaf_nodes.push(node);
+                }
+            }
+            out.leaf_node_offsets.push(out.leaf_nodes.len() as u32);
         }
     }
+
+    /// Number of port groups of switch `s`.
+    #[inline]
+    pub fn num_groups(&self, s: usize) -> usize {
+        (self.group_offsets[s + 1] - self.group_offsets[s]) as usize
+    }
+
+    /// The `gi`-th (UUID-ordered) group of switch `s`.
+    #[inline]
+    pub fn group(&self, s: usize, gi: usize) -> GroupRef<'_> {
+        self.group_at(self.group_offsets[s] as usize + gi)
+    }
+
+    #[inline]
+    fn group_at(&self, g: usize) -> GroupRef<'_> {
+        GroupRef {
+            remote: self.group_remote[g],
+            up: self.group_up[g],
+            ports: &self.ports
+                [self.port_offsets[g] as usize..self.port_offsets[g + 1] as usize],
+        }
+    }
+
+    /// Iterate the UUID-ordered groups of switch `s`.
+    #[inline]
+    pub fn groups(&self, s: usize) -> GroupIter<'_> {
+        GroupIter {
+            prep: self,
+            g: self.group_offsets[s] as usize,
+            end: self.group_offsets[s + 1] as usize,
+        }
+    }
+
+    /// Switches of one level, ascending id.
+    #[inline]
+    pub fn level_span(&self, lvl: usize) -> &[SwitchId] {
+        &self.by_level_up
+            [self.level_offsets[lvl] as usize..self.level_offsets[lvl + 1] as usize]
+    }
+
+    /// Number of levels covered by `level_offsets`.
+    #[inline]
+    pub fn num_levels(&self) -> usize {
+        self.level_offsets.len().saturating_sub(1)
+    }
+
+    /// Nodes of leaf-index `li` in port-rank order (= per-leaf NID order).
+    #[inline]
+    pub fn nodes_of_leaf_idx(&self, li: u32) -> &[NodeId] {
+        &self.leaf_nodes[self.leaf_node_offsets[li as usize] as usize
+            ..self.leaf_node_offsets[li as usize + 1] as usize]
+    }
 }
+
+/// Iterator over a switch's port groups.
+pub struct GroupIter<'a> {
+    prep: &'a Prep,
+    g: usize,
+    end: usize,
+}
+
+impl<'a> Iterator for GroupIter<'a> {
+    type Item = GroupRef<'a>;
+
+    #[inline]
+    fn next(&mut self) -> Option<GroupRef<'a>> {
+        if self.g == self.end {
+            return None;
+        }
+        let out = self.prep.group_at(self.g);
+        self.g += 1;
+        Some(out)
+    }
+
+    #[inline]
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let n = self.end - self.g;
+        (n, Some(n))
+    }
+}
+
+impl ExactSizeIterator for GroupIter<'_> {}
 
 /// Divider reduction choice of Algorithm 1 (the paper uses `Max`; the
 /// `FirstPath` variant is the alternative it reports as showing "little to
@@ -86,6 +294,7 @@ pub enum DividerReduction {
 
 /// Output of the paper's Algorithm 1 plus the pure-down costs needed by
 /// UPDN-style engines.
+#[derive(Default)]
 pub struct Costs {
     /// `c[s * num_leaves + li]`: min hops from switch `s` to leaf
     /// `leaves[li]` under up*/down* restriction.
@@ -109,14 +318,160 @@ impl Costs {
     }
 }
 
-/// Algorithm 1: compute costs and dividers.
-///
-/// Upward sweep (switches in ascending level): relax each switch's
-/// up-neighbors with `c+1` (yielding pure-down costs) and propagate
-/// dividers `π = Π_s · #upgroups(s)` with the chosen reduction. Downward
-/// sweep (descending level): relax down-neighbors with `c+1`, adding
-/// up*/down* paths.
+/// Algorithm 1: compute costs and dividers (parallel; see [`costs_into`]).
 pub fn costs(topo: &Topology, prep: &Prep, reduction: DividerReduction) -> Costs {
+    let mut out = Costs::default();
+    costs_into(topo, prep, reduction, &mut out);
+    out
+}
+
+/// Algorithm 1 into reused buffers, parallelized level-synchronously.
+///
+/// The serial formulation *pushes* relaxations from each switch (ascending
+/// level) into its up-neighbors. Here each level is one parallel step in
+/// which every switch of that level *pulls* from its down-neighbors —
+/// whose rows were finalized in earlier steps — so tasks write only their
+/// own cost row and divider slot (no write races) and `min`/`max` being
+/// order-independent keeps the result bit-identical to [`costs_serial`]
+/// for both [`DividerReduction`] variants at every thread count. The
+/// downward sweep mirrors this, descending, pulling from up-neighbors.
+///
+/// Row relaxations are blocked into [`COST_TILE`]-wide leaf tiles so the
+/// O(switches × leaves) sweeps stream neighbor rows through an L1-resident
+/// write tile instead of thrashing the write row on every pass.
+pub fn costs_into(topo: &Topology, prep: &Prep, reduction: DividerReduction, out: &mut Costs) {
+    let ns = topo.switches.len();
+    let nl = prep.leaves.len();
+    out.num_leaves = nl;
+    out.cost.clear();
+    out.cost.resize(ns * nl, INF);
+    out.divider.clear();
+    out.divider.resize(ns, 1);
+    for (li, &l) in prep.leaves.iter().enumerate() {
+        out.cost[l as usize * nl + li] = 0;
+    }
+    let nlv = prep.num_levels();
+
+    // Upward sweep: level-synchronous pull from down-neighbors.
+    {
+        let cost = SharedMut::new(&mut out.cost);
+        let divider = SharedMut::new(&mut out.divider);
+        let cost = &cost;
+        let divider = &divider;
+        for lvl in 1..nlv {
+            let span = prep.level_span(lvl);
+            parallel_for_chunked(span.len(), 1, |i| {
+                let r = span[i] as usize;
+                // SAFETY: this task exclusively writes row r and
+                // divider[r]; every read targets a strictly lower level,
+                // finalized by the per-level barrier.
+                let row = unsafe { cost.slice_mut(r * nl, nl) };
+                // Divider reduction over down-neighbors s:
+                // contribution π = Π_s · #upgroups(s).
+                let mut pi = 1u64;
+                match reduction {
+                    DividerReduction::Max => {
+                        for g in prep.groups(r) {
+                            if g.up {
+                                continue;
+                            }
+                            let s = g.remote as usize;
+                            let contrib = unsafe { *divider.get(s) }
+                                * prep.up_groups[s].max(1) as u64;
+                            if contrib > pi {
+                                pi = contrib;
+                            }
+                        }
+                    }
+                    DividerReduction::FirstPath => {
+                        // The serial sweep's first writer is the
+                        // down-neighbor earliest in (level, id) order.
+                        let mut first: Option<(u8, SwitchId)> = None;
+                        for g in prep.groups(r) {
+                            if g.up {
+                                continue;
+                            }
+                            let key =
+                                (topo.switches[g.remote as usize].level, g.remote);
+                            if first.map_or(true, |f| key < f) {
+                                first = Some(key);
+                                let s = g.remote as usize;
+                                pi = unsafe { *divider.get(s) }
+                                    * prep.up_groups[s].max(1) as u64;
+                            }
+                        }
+                    }
+                }
+                unsafe {
+                    *divider.get_mut(r) = pi;
+                }
+                // Cost relaxation, leaf-tile blocked.
+                let mut t0 = 0;
+                while t0 < nl {
+                    let t1 = (t0 + COST_TILE).min(nl);
+                    for g in prep.groups(r) {
+                        if g.up {
+                            continue;
+                        }
+                        let src = unsafe {
+                            cost.slice(g.remote as usize * nl + t0, t1 - t0)
+                        };
+                        for (d, &s) in row[t0..t1].iter_mut().zip(src) {
+                            let via = s.saturating_add(1);
+                            if via < *d {
+                                *d = via;
+                            }
+                        }
+                    }
+                    t0 = t1;
+                }
+            });
+        }
+    }
+
+    out.down_cost.clear();
+    out.down_cost.extend_from_slice(&out.cost);
+
+    // Downward sweep: level-synchronous pull from up-neighbors.
+    {
+        let cost = SharedMut::new(&mut out.cost);
+        let cost = &cost;
+        for lvl in (0..nlv.saturating_sub(1)).rev() {
+            let span = prep.level_span(lvl);
+            parallel_for_chunked(span.len(), 1, |i| {
+                let r = span[i] as usize;
+                // SAFETY: exclusive write of row r; reads target strictly
+                // higher levels, finalized by the per-level barrier.
+                let row = unsafe { cost.slice_mut(r * nl, nl) };
+                let mut t0 = 0;
+                while t0 < nl {
+                    let t1 = (t0 + COST_TILE).min(nl);
+                    for g in prep.groups(r) {
+                        if !g.up {
+                            continue;
+                        }
+                        let src = unsafe {
+                            cost.slice(g.remote as usize * nl + t0, t1 - t0)
+                        };
+                        for (d, &s) in row[t0..t1].iter_mut().zip(src) {
+                            let via = s.saturating_add(1);
+                            if via < *d {
+                                *d = via;
+                            }
+                        }
+                    }
+                    t0 = t1;
+                }
+            });
+        }
+    }
+}
+
+/// The original serial push-based Algorithm 1, retained verbatim as the
+/// reference implementation for the equivalence suite
+/// (`tests/equivalence.rs` asserts [`costs`] is bit-identical to this on
+/// intact and degraded topologies at every thread count).
+pub fn costs_serial(topo: &Topology, prep: &Prep, reduction: DividerReduction) -> Costs {
     let ns = topo.switches.len();
     let nl = prep.leaves.len();
     let mut cost = vec![INF; ns * nl];
@@ -129,7 +484,7 @@ pub fn costs(topo: &Topology, prep: &Prep, reduction: DividerReduction) -> Costs
     for &s in &prep.by_level_up {
         let su = s as usize;
         let pi = divider[su] * prep.up_groups[su].max(1) as u64;
-        for g in &prep.groups[su] {
+        for g in prep.groups(su) {
             if !g.up {
                 continue;
             }
@@ -161,7 +516,7 @@ pub fn costs(topo: &Topology, prep: &Prep, reduction: DividerReduction) -> Costs
     // Downward sweep.
     for &s in prep.by_level_up.iter().rev() {
         let su = s as usize;
-        for g in &prep.groups[su] {
+        for g in prep.groups(su) {
             if g.up {
                 continue;
             }
@@ -302,10 +657,27 @@ mod tests {
     }
 
     #[test]
+    fn parallel_costs_match_serial_reference() {
+        for params in [PgftParams::fig1(), PgftParams::small()] {
+            let t = params.build();
+            let prep = Prep::new(&t);
+            for reduction in [DividerReduction::Max, DividerReduction::FirstPath] {
+                let par = costs(&t, &prep, reduction);
+                let ser = costs_serial(&t, &prep, reduction);
+                assert_eq!(par.cost, ser.cost, "{reduction:?} cost");
+                assert_eq!(par.down_cost, ser.down_cost, "{reduction:?} down");
+                assert_eq!(par.divider, ser.divider, "{reduction:?} divider");
+            }
+        }
+    }
+
+    #[test]
     fn groups_sorted_by_uuid_and_parallel_coalesced() {
         let t = PgftParams::fig1().build();
         let prep = Prep::new(&t);
-        for (s, gs) in prep.groups.iter().enumerate() {
+        for s in 0..t.switches.len() {
+            let gs: Vec<GroupRef<'_>> = prep.groups(s).collect();
+            assert_eq!(gs.len(), prep.num_groups(s));
             for w in gs.windows(2) {
                 assert!(
                     t.switches[w[0].remote as usize].uuid
@@ -314,11 +686,60 @@ mod tests {
             }
             // In fig1 leaves have p2 = 2 parallel links per up neighbor.
             if t.switches[s].level == 0 {
-                for g in gs {
+                for g in &gs {
                     assert_eq!(g.ports.len(), 2);
                     assert!(g.up);
                 }
             }
+        }
+    }
+
+    #[test]
+    fn build_into_reuses_buffers_consistently() {
+        // Rebuilding into the same Prep across different topologies must
+        // leave no stale state behind.
+        let a = PgftParams::fig1().build();
+        let b = PgftParams::small().build();
+        let mut scratch = PrepScratch::default();
+        let mut p = Prep::default();
+        Prep::build_into(&b, &mut p, &mut scratch);
+        Prep::build_into(&a, &mut p, &mut scratch);
+        let fresh = Prep::new(&a);
+        assert_eq!(p.leaves, fresh.leaves);
+        assert_eq!(p.leaf_index, fresh.leaf_index);
+        assert_eq!(p.group_offsets, fresh.group_offsets);
+        assert_eq!(p.group_remote, fresh.group_remote);
+        assert_eq!(p.group_up, fresh.group_up);
+        assert_eq!(p.port_offsets, fresh.port_offsets);
+        assert_eq!(p.ports, fresh.ports);
+        assert_eq!(p.up_groups, fresh.up_groups);
+        assert_eq!(p.by_level_up, fresh.by_level_up);
+        assert_eq!(p.level_offsets, fresh.level_offsets);
+        assert_eq!(p.leaf_node_offsets, fresh.leaf_node_offsets);
+        assert_eq!(p.leaf_nodes, fresh.leaf_nodes);
+    }
+
+    #[test]
+    fn level_spans_partition_switches() {
+        let t = PgftParams::small().build();
+        let prep = Prep::new(&t);
+        let mut seen = vec![false; t.switches.len()];
+        for lvl in 0..prep.num_levels() {
+            for &s in prep.level_span(lvl) {
+                assert_eq!(t.switches[s as usize].level as usize, lvl);
+                assert!(!seen[s as usize]);
+                seen[s as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&x| x));
+    }
+
+    #[test]
+    fn leaf_nodes_csr_matches_topology() {
+        let t = PgftParams::small().build();
+        let prep = Prep::new(&t);
+        for (li, &l) in prep.leaves.iter().enumerate() {
+            assert_eq!(prep.nodes_of_leaf_idx(li as u32), &t.nodes_of_leaf(l)[..]);
         }
     }
 

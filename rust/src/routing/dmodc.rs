@@ -5,11 +5,11 @@
 //! 1. *Rank* — leaf switches are the lowest level (constructed levels,
 //!    cross-checked by [`common::derive_ranks`] in tests).
 //! 2. *Port groups* — ports grouped by remote switch, sorted by UUID
-//!    ([`common::Prep`]).
+//!    ([`common::Prep`], CSR-flattened — EXPERIMENTS.md §Perf).
 //! 3. *Cost & divider* — Algorithm 1 ([`common::costs`]): up*/down*
 //!    restricted hop costs `c_{s,l}` to every leaf, and dividers `Π_s`
 //!    propagated as the max (or first-path, for the ablation) of
-//!    `Π_child · #upgroups(child)`.
+//!    `Π_child · #upgroups(child)`, computed level-by-level in parallel.
 //! 4. *Topological NIDs* — Algorithm 2 ([`topological_nids`]): cluster
 //!    leaves by proximity starting from the lowest UUID, numbering their
 //!    nodes contiguously in port-rank order.
@@ -18,11 +18,18 @@
 //!    to λ_d, pick group `⌊t_d/Π_s⌋ mod #C` and within it port
 //!    `⌊t_d/(Π_s·#C)⌋ mod #g`, computed in parallel with switch-level
 //!    granularity.
+//!
+//! The steady-state reroute entry point is
+//! [`RerouteWorkspace`](crate::routing::RerouteWorkspace), which runs this
+//! pipeline into reused buffers (zero heap allocation after warm-up);
+//! [`route_reference`] retains the original serial formulation for the
+//! equivalence suite.
 
 use super::common::{self, Costs, DividerReduction, Prep, INF};
 use super::Lft;
 use crate::topology::{NodeId, PortTarget, Topology};
-use crate::util::par::parallel_for_mut;
+use crate::util::par::parallel_for_rows;
+use std::cell::RefCell;
 
 /// How node identifiers are assigned before the modulo arithmetic.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -50,16 +57,42 @@ impl Default for Options {
     }
 }
 
+/// Reusable buffers for the NID assignment passes.
+#[derive(Default)]
+pub struct NidScratch {
+    x: Vec<u32>,
+    rest: Vec<u32>,
+}
+
 /// Algorithm 2: topological node identifiers.
 ///
 /// Starting from the lowest-UUID unnumbered leaf `l`, the cluster of
 /// remaining leaves within `μ = min_{l'} c_{l,l'}` hops (which always
 /// includes `l` itself) is numbered leaf by leaf, nodes in port-rank order.
 pub fn topological_nids(topo: &Topology, prep: &Prep, costs: &Costs) -> Vec<u64> {
-    let mut nids = vec![0u64; topo.nodes.len()];
+    let mut nids = Vec::new();
+    let mut scratch = NidScratch::default();
+    topological_nids_into(topo, prep, costs, &mut nids, &mut scratch);
+    nids
+}
+
+/// [`topological_nids`] into reused buffers (allocation-free in steady
+/// state).
+pub fn topological_nids_into(
+    topo: &Topology,
+    prep: &Prep,
+    costs: &Costs,
+    nids: &mut Vec<u64>,
+    scratch: &mut NidScratch,
+) {
+    nids.clear();
+    nids.resize(topo.nodes.len(), 0);
     // X: leaf indices (into prep.leaves) sorted by switch UUID.
-    let mut x: Vec<u32> = (0..prep.leaves.len() as u32).collect();
-    x.sort_by_key(|&li| topo.switches[prep.leaves[li as usize] as usize].uuid);
+    let x = &mut scratch.x;
+    let rest = &mut scratch.rest;
+    x.clear();
+    x.extend(0..prep.leaves.len() as u32);
+    x.sort_unstable_by_key(|&li| topo.switches[prep.leaves[li as usize] as usize].uuid);
     let mut t = 0u64;
     while !x.is_empty() {
         let l = x[0];
@@ -71,10 +104,10 @@ pub fn topological_nids(topo: &Topology, prep: &Prep, costs: &Costs) -> Vec<u64>
             .min()
             .unwrap_or(INF);
         // Number every remaining leaf within mu, in X (UUID) order.
-        let mut rest = Vec::with_capacity(x.len());
-        for &li in &x {
+        rest.clear();
+        for &li in x.iter() {
             if costs.cost(lsw, li) <= mu {
-                for n in topo.nodes_of_leaf(prep.leaves[li as usize]) {
+                for &n in prep.nodes_of_leaf_idx(li) {
                     nids[n as usize] = t;
                     t += 1;
                 }
@@ -82,24 +115,161 @@ pub fn topological_nids(topo: &Topology, prep: &Prep, costs: &Costs) -> Vec<u64>
                 rest.push(li);
             }
         }
-        x = rest;
+        std::mem::swap(x, rest);
     }
-    nids
 }
 
 /// Flat UUID-ordered NIDs (ablation variant).
 fn uuid_flat_nids(topo: &Topology, prep: &Prep) -> Vec<u64> {
-    let mut order: Vec<u32> = (0..prep.leaves.len() as u32).collect();
-    order.sort_by_key(|&li| topo.switches[prep.leaves[li as usize] as usize].uuid);
-    let mut nids = vec![0u64; topo.nodes.len()];
+    let mut nids = Vec::new();
+    let mut scratch = NidScratch::default();
+    uuid_flat_nids_into(topo, prep, &mut nids, &mut scratch);
+    nids
+}
+
+/// [`NidOrder::UuidFlat`] assignment into reused buffers.
+pub(crate) fn uuid_flat_nids_into(
+    topo: &Topology,
+    prep: &Prep,
+    nids: &mut Vec<u64>,
+    scratch: &mut NidScratch,
+) {
+    let order = &mut scratch.x;
+    order.clear();
+    order.extend(0..prep.leaves.len() as u32);
+    order.sort_unstable_by_key(|&li| topo.switches[prep.leaves[li as usize] as usize].uuid);
+    nids.clear();
+    nids.resize(topo.nodes.len(), 0);
     let mut t = 0u64;
-    for &li in &order {
-        for n in topo.nodes_of_leaf(prep.leaves[li as usize]) {
+    for &li in order.iter() {
+        for &n in prep.nodes_of_leaf_idx(li) {
             nids[n as usize] = t;
             t += 1;
         }
     }
-    nids
+}
+
+/// Equation (1): collect into `out` the indices (into the UUID-ordered
+/// groups of `s`) of the port groups strictly closer to leaf-index `li`.
+#[inline]
+pub fn closer_groups_into(prep: &Prep, costs: &Costs, s: u32, li: u32, out: &mut Vec<u16>) {
+    out.clear();
+    let here = costs.cost(s, li);
+    for (i, g) in prep.groups(s as usize).enumerate() {
+        if costs.cost(g.remote, li) < here {
+            out.push(i as u16);
+        }
+    }
+}
+
+/// Equations (3)+(4) for one destination, given its closer groups `c` —
+/// the direct closed form (the hot loop in [`fill_rows`] uses an
+/// incremental strength-reduced equivalent; tests assert they agree).
+#[inline]
+pub fn select_port(prep: &Prep, costs: &Costs, s: u32, c: &[u16], t_d: u64) -> u16 {
+    let pi = costs.divider[s as usize].max(1);
+    let nc = c.len() as u64;
+    let g = prep.group(s as usize, c[((t_d / pi) % nc) as usize] as usize);
+    let np = g.ports.len() as u64;
+    g.ports[((t_d / (pi * nc)) % np) as usize]
+}
+
+/// Equation (2): append to `out` the alternative output ports `P_{s,d}` —
+/// every port of every group leading closer to λ_d (adaptive-fallback
+/// candidates), without per-call allocation.
+pub fn alternatives_into(
+    topo: &Topology,
+    prep: &Prep,
+    costs: &Costs,
+    s: u32,
+    d: NodeId,
+    out: &mut Vec<u16>,
+) {
+    out.clear();
+    let li = prep.leaf_index[topo.nodes[d as usize].leaf as usize];
+    let here = costs.cost(s, li);
+    for g in prep.groups(s as usize) {
+        if costs.cost(g.remote, li) < here {
+            out.extend_from_slice(g.ports);
+        }
+    }
+}
+
+thread_local! {
+    /// Per-worker closer-groups buffer for the route fill (reused across
+    /// the ~switches × leaves iterations; the pool's workers persist, so
+    /// steady-state reroutes never allocate it again). 256 covers any
+    /// realistic switch radix.
+    static CLOSER: RefCell<Vec<u16>> = RefCell::new(Vec::with_capacity(256));
+}
+
+/// Fill every LFT row from the pipeline products (parallel over switches).
+///
+/// Hot-path note (EXPERIMENTS.md §Perf): destinations are visited
+/// leaf by leaf. Within one leaf the topological NIDs are contiguous
+/// (Algorithm 2 numbers a leaf's nodes consecutively), so the modulo
+/// chain of equations (3)–(4) is strength-reduced to incremental
+/// counters — two u64 divisions per (switch, leaf) instead of per
+/// (switch, destination).
+pub(crate) fn fill_rows(topo: &Topology, prep: &Prep, costs: &Costs, nids: &[u64], lft: &mut Lft) {
+    let nn = topo.nodes.len();
+    let nl = prep.leaves.len();
+    parallel_for_rows(lft.raw_mut(), nn, |s, row| {
+        CLOSER.with(|cell| {
+            let c = &mut *cell.borrow_mut();
+            let sw = &topo.switches[s];
+            // Destinations directly linked: route straight out the port.
+            for (pi, p) in sw.ports.iter().enumerate() {
+                if let PortTarget::Node { node } = *p {
+                    row[node as usize] = pi as u16;
+                }
+            }
+            let pi_div = costs.divider[s].max(1);
+            for li in 0..nl as u32 {
+                if prep.leaves[li as usize] == s as u32 {
+                    continue; // own leaf: direct ports already set
+                }
+                if costs.cost(s as u32, li) == INF {
+                    continue; // unreachable: leave NO_ROUTE
+                }
+                closer_groups_into(prep, costs, s as u32, li, c);
+                if c.is_empty() {
+                    continue;
+                }
+                let nodes = prep.nodes_of_leaf_idx(li);
+                if nodes.is_empty() {
+                    continue;
+                }
+                let nc = c.len() as u64;
+                // Incremental eq (3)+(4) state for t = nids[first node].
+                let t0 = nids[nodes[0] as usize];
+                debug_assert!(nodes
+                    .iter()
+                    .enumerate()
+                    .all(|(k, &n)| nids[n as usize] == t0 + k as u64));
+                let mut r_pi = t0 % pi_div; // t mod Π
+                let q = t0 / pi_div; // ⌊t/Π⌋
+                let mut gi_sel = (q % nc) as usize; // eq (3) index = q mod #C
+                let mut q2 = q / nc; // ⌊t/(Π·#C)⌋
+                for &d in nodes {
+                    let g = prep.group(s, c[gi_sel] as usize);
+                    let np = g.ports.len() as u64;
+                    row[d as usize] = g.ports[(q2 % np) as usize];
+                    // Advance t by one: q increments when r_pi wraps, q2
+                    // increments when gi_sel (q mod #C) wraps.
+                    r_pi += 1;
+                    if r_pi == pi_div {
+                        r_pi = 0;
+                        gi_sel += 1;
+                        if gi_sel == nc as usize {
+                            gi_sel = 0;
+                            q2 += 1;
+                        }
+                    }
+                }
+            }
+        });
+    });
 }
 
 /// Precomputed Dmodc state, exposing the intermediate products for tests,
@@ -127,7 +297,7 @@ impl Router {
         }
     }
 
-    /// Equation (1): indices (into `prep.groups[s]`) of the port groups of
+    /// Equation (1): indices (into the groups of `s`) of the port groups of
     /// `s` strictly closer to leaf-index `li`. Groups are already
     /// UUID-ordered, so the selection preserves the paper's ordering.
     pub fn closer_groups(&self, s: u32, li: u32) -> Vec<u16> {
@@ -139,109 +309,34 @@ impl Router {
     /// Allocation-free variant of [`Router::closer_groups`] for the hot
     /// loop (the buffer is reused across the ~switches × leaves calls).
     pub fn closer_groups_into(&self, s: u32, li: u32, out: &mut Vec<u16>) {
-        out.clear();
-        let here = self.costs.cost(s, li);
-        for (i, g) in self.prep.groups[s as usize].iter().enumerate() {
-            if self.costs.cost(g.remote, li) < here {
-                out.push(i as u16);
-            }
-        }
+        closer_groups_into(&self.prep, &self.costs, s, li, out);
     }
 
-    /// Equations (3)+(4) for one destination, given its `closer_groups` —
-    /// the direct closed form (the hot loop in [`Router::lft`] uses an
-    /// incremental strength-reduced equivalent; tests assert they agree).
+    /// Equations (3)+(4) for one destination, given its `closer_groups`.
     #[inline]
     pub fn select_port(&self, s: u32, c: &[u16], t_d: u64) -> u16 {
-        let pi = self.costs.divider[s as usize].max(1);
-        let nc = c.len() as u64;
-        let gi = c[((t_d / pi) % nc) as usize];
-        let g = &self.prep.groups[s as usize][gi as usize];
-        let np = g.ports.len() as u64;
-        g.ports[((t_d / (pi * nc)) % np) as usize]
+        select_port(&self.prep, &self.costs, s, c, t_d)
     }
 
     /// Equation (2): the alternative output ports `P_{s,d}` — every port of
     /// every group leading closer to λ_d (adaptive-fallback candidates).
     pub fn alternatives(&self, topo: &Topology, s: u32, d: NodeId) -> Vec<u16> {
-        let li = self.prep.leaf_index[topo.nodes[d as usize].leaf as usize];
-        self.closer_groups(s, li)
-            .iter()
-            .flat_map(|&gi| self.prep.groups[s as usize][gi as usize].ports.clone())
-            .collect()
+        let mut out = Vec::new();
+        self.alternatives_into(topo, s, d, &mut out);
+        out
+    }
+
+    /// [`Router::alternatives`] into a caller buffer — no per-call
+    /// allocation (this sits on the fast-mitigation path of
+    /// `FabricManager::fast_patch`).
+    pub fn alternatives_into(&self, topo: &Topology, s: u32, d: NodeId, out: &mut Vec<u16>) {
+        alternatives_into(topo, &self.prep, &self.costs, s, d, out);
     }
 
     /// Compute the full LFT (parallel over switches).
-    ///
-    /// Hot-path note (EXPERIMENTS.md §Perf): destinations are visited
-    /// leaf by leaf. Within one leaf the topological NIDs are contiguous
-    /// (Algorithm 2 numbers a leaf's nodes consecutively), so the modulo
-    /// chain of equations (3)–(4) is strength-reduced to incremental
-    /// counters — two u64 divisions per (switch, leaf) instead of per
-    /// (switch, destination).
     pub fn lft(&self, topo: &Topology) -> Lft {
-        // Nodes grouped per leaf in port-rank order (= NID order per leaf).
-        let per_leaf: Vec<Vec<NodeId>> = self
-            .prep
-            .leaves
-            .iter()
-            .map(|&l| topo.nodes_of_leaf(l))
-            .collect();
         let mut lft = Lft::new(topo.switches.len(), topo.nodes.len());
-        let mut rows = lft.rows_mut();
-        parallel_for_mut(&mut rows, |s, row| {
-            let sw = &topo.switches[s];
-            // Destinations directly linked: route straight out the port.
-            for (pi, p) in sw.ports.iter().enumerate() {
-                if let PortTarget::Node { node } = *p {
-                    row[node as usize] = pi as u16;
-                }
-            }
-            let pi_div = self.costs.divider[s].max(1);
-            let groups = &self.prep.groups[s];
-            let mut c = Vec::with_capacity(groups.len());
-            for (li, nodes) in per_leaf.iter().enumerate() {
-                let li = li as u32;
-                if self.prep.leaves[li as usize] == s as u32 {
-                    continue; // own leaf: direct ports already set
-                }
-                if self.costs.cost(s as u32, li) == INF {
-                    continue; // unreachable: leave NO_ROUTE
-                }
-                self.closer_groups_into(s as u32, li, &mut c);
-                if c.is_empty() {
-                    continue;
-                }
-                let nc = c.len() as u64;
-                // Incremental eq (3)+(4) state for t = nids[first node].
-                let t0 = self.nids[nodes[0] as usize];
-                debug_assert!(nodes
-                    .iter()
-                    .enumerate()
-                    .all(|(k, &n)| self.nids[n as usize] == t0 + k as u64));
-                let mut r_pi = t0 % pi_div; // t mod Π
-                let q = t0 / pi_div; // ⌊t/Π⌋
-                let mut gi_sel = (q % nc) as usize; // eq (3) index = q mod #C
-                let mut q2 = q / nc; // ⌊t/(Π·#C)⌋
-                for &d in nodes {
-                    let g = &groups[c[gi_sel] as usize];
-                    let np = g.ports.len() as u64;
-                    row[d as usize] = g.ports[(q2 % np) as usize];
-                    // Advance t by one: q increments when r_pi wraps, q2
-                    // increments when gi_sel (q mod #C) wraps.
-                    r_pi += 1;
-                    if r_pi == pi_div {
-                        r_pi = 0;
-                        gi_sel += 1;
-                        if gi_sel == nc as usize {
-                            gi_sel = 0;
-                            q2 += 1;
-                        }
-                    }
-                }
-            }
-        });
-        drop(rows);
+        fill_rows(topo, &self.prep, &self.costs, &self.nids, &mut lft);
         lft
     }
 }
@@ -249,6 +344,49 @@ impl Router {
 /// One-shot routing entry point.
 pub fn route(topo: &Topology, opts: &Options) -> Lft {
     Router::new(topo, *opts).lft(topo)
+}
+
+/// Retained reference implementation: serial push-based Algorithm 1
+/// ([`common::costs_serial`]) followed by the *literal* equations (1)–(4)
+/// per destination — no parallelism, no strength reduction, no buffer
+/// reuse. The equivalence suite asserts the optimized pipeline (and the
+/// workspace path) produce bit-identical LFTs to this on intact and
+/// degraded topologies at every thread count.
+pub fn route_reference(topo: &Topology, opts: &Options) -> Lft {
+    let prep = Prep::new(topo);
+    let costs = common::costs_serial(topo, &prep, opts.reduction);
+    let nids = match opts.nid_order {
+        NidOrder::Topological => topological_nids(topo, &prep, &costs),
+        NidOrder::UuidFlat => uuid_flat_nids(topo, &prep),
+    };
+    let mut lft = Lft::new(topo.switches.len(), topo.nodes.len());
+    let mut c = Vec::new();
+    for s in 0..topo.switches.len() {
+        for (pi, p) in topo.switches[s].ports.iter().enumerate() {
+            if let PortTarget::Node { node } = *p {
+                lft.set(s as u32, node, pi as u16);
+            }
+        }
+        for (d, node) in topo.nodes.iter().enumerate() {
+            if node.leaf == s as u32 {
+                continue;
+            }
+            let li = prep.leaf_index[node.leaf as usize];
+            if costs.cost(s as u32, li) == INF {
+                continue;
+            }
+            closer_groups_into(&prep, &costs, s as u32, li, &mut c);
+            if c.is_empty() {
+                continue;
+            }
+            lft.set(
+                s as u32,
+                d as u32,
+                select_port(&prep, &costs, s as u32, &c, nids[d]),
+            );
+        }
+    }
+    lft
 }
 
 #[cfg(test)]
@@ -420,6 +558,32 @@ mod tests {
                     };
                     assert_eq!(lft.get(s, d as u32), want, "s={s} d={d} round={round}");
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn optimized_route_matches_reference() {
+        use crate::topology::degrade;
+        use crate::util::rng::Rng;
+        let base = PgftParams::small().build();
+        let mut rng = Rng::new(91);
+        for round in 0..3 {
+            let t = if round == 0 {
+                base.clone()
+            } else {
+                degrade::remove_random_links(&base, &mut rng, 3 * round)
+            };
+            for opts in [
+                Options::default(),
+                Options {
+                    reduction: DividerReduction::FirstPath,
+                    nid_order: NidOrder::UuidFlat,
+                },
+            ] {
+                let fast = route(&t, &opts);
+                let reference = route_reference(&t, &opts);
+                assert_eq!(fast.raw(), reference.raw(), "round={round} {opts:?}");
             }
         }
     }

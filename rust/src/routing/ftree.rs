@@ -49,11 +49,11 @@ pub fn route(topo: &Topology) -> Lft {
                 for &s in &by_level[k] {
                     let su = s as usize;
                     let mut best: Option<(u32, usize, u16)> = None;
-                    for (gi, g) in prep.groups[su].iter().enumerate() {
+                    for (gi, g) in prep.groups(su).enumerate() {
                         if g.up || !routed[g.remote as usize] {
                             continue;
                         }
-                        for &p in &g.ports {
+                        for &p in g.ports {
                             let pid = topo.port_id(s, p) as usize;
                             let key = (down_load[pid], gi, p);
                             if best.map_or(true, |b| key < b) {
@@ -77,11 +77,11 @@ pub fn route(topo: &Topology) -> Lft {
                         continue;
                     }
                     let mut best: Option<(u32, usize, u16)> = None;
-                    for (gi, g) in prep.groups[su].iter().enumerate() {
+                    for (gi, g) in prep.groups(su).enumerate() {
                         if !g.up || !routed[g.remote as usize] {
                             continue;
                         }
-                        for &p in &g.ports {
+                        for &p in g.ports {
                             let pid = topo.port_id(s, p) as usize;
                             let key = (up_load[pid], gi, p);
                             if best.map_or(true, |b| key < b) {

@@ -30,7 +30,7 @@ pub fn route(topo: &Topology) -> Lft {
         queue.push_back(leaf);
         let mut order: Vec<u32> = vec![leaf];
         while let Some(s) = queue.pop_front() {
-            for g in &prep.groups[s as usize] {
+            for g in prep.groups(s as usize) {
                 if dist[g.remote as usize] == u32::MAX {
                     dist[g.remote as usize] = dist[s as usize] + 1;
                     queue.push_back(g.remote);
@@ -42,11 +42,11 @@ pub fn route(topo: &Topology) -> Lft {
         for &s in order.iter().skip(1) {
             let su = s as usize;
             let mut best: Option<(u32, usize, u16)> = None;
-            for (gi, g) in prep.groups[su].iter().enumerate() {
+            for (gi, g) in prep.groups(su).enumerate() {
                 if dist[g.remote as usize] + 1 != dist[su] {
                     continue;
                 }
-                for &p in &g.ports {
+                for &p in g.ports {
                     let pid = topo.port_id(s, p) as usize;
                     let key = (load[pid], gi, p);
                     if best.map_or(true, |b| key < b) {

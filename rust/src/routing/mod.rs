@@ -22,6 +22,9 @@ pub mod minhop;
 pub mod sssp;
 pub mod updn;
 pub mod validity;
+pub mod workspace;
+
+pub use workspace::RerouteWorkspace;
 
 use crate::topology::{NodeId, PortTarget, SwitchId, Topology};
 
@@ -42,6 +45,15 @@ impl Lft {
             ports: vec![NO_ROUTE; num_switches * num_nodes],
             num_nodes,
         }
+    }
+
+    /// Re-shape in place to `num_switches × num_nodes`, resetting every
+    /// entry to [`NO_ROUTE`] — no allocation once capacity has converged
+    /// (the workspace reroute path).
+    pub fn reset(&mut self, num_switches: usize, num_nodes: usize) {
+        self.num_nodes = num_nodes;
+        self.ports.clear();
+        self.ports.resize(num_switches * num_nodes, NO_ROUTE);
     }
 
     #[inline]
@@ -77,6 +89,11 @@ impl Lft {
         &self.ports
     }
 
+    /// Mutable raw access for the parallel row fill.
+    pub(crate) fn raw_mut(&mut self) -> &mut [u16] {
+        &mut self.ports
+    }
+
     /// Split into per-switch rows for parallel writers.
     pub fn rows_mut(&mut self) -> Vec<&mut [u16]> {
         self.ports.chunks_mut(self.num_nodes.max(1)).collect()
@@ -91,6 +108,12 @@ impl Lft {
             .zip(&other.ports)
             .filter(|(a, b)| a != b)
             .count()
+    }
+}
+
+impl Default for Lft {
+    fn default() -> Self {
+        Lft::new(0, 0)
     }
 }
 

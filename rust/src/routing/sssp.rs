@@ -47,10 +47,10 @@ pub fn route(topo: &Topology) -> Lft {
             }
             order.push(s);
             // Relax: a neighbor r would route *into* s through r's port.
-            for g in &prep.groups[s as usize] {
+            for g in prep.groups(s as usize) {
                 let r = g.remote;
                 // r's ports toward s are the mirror of g; find r's cheapest.
-                for &p_here in &g.ports {
+                for &p_here in g.ports {
                     // The remote end of (s, p_here):
                     if let crate::topology::PortTarget::Switch { rport, .. } =
                         topo.switches[s as usize].ports[p_here as usize]

@@ -44,7 +44,7 @@ pub fn route(topo: &Topology) -> Lft {
                 // Choose the egress port among usable settled neighbors at
                 // distance dist[s]-1.
                 let mut best: Option<(bool, u32, usize, u16)> = None; // (is_up, load, group idx, port)
-                for (gi, g) in prep.groups[su].iter().enumerate() {
+                for (gi, g) in prep.groups(su).enumerate() {
                     let r = g.remote as usize;
                     if dist[r] != dist[su] - 1 {
                         continue;
@@ -54,7 +54,7 @@ pub fn route(topo: &Topology) -> Lft {
                     if !g.up && !pure[r] {
                         continue;
                     }
-                    for &p in &g.ports {
+                    for &p in g.ports {
                         let pid = topo.port_id(s, p) as usize;
                         let key = (g.up, load[pid], gi, p);
                         if best.map_or(true, |b| key < b) {
@@ -69,7 +69,7 @@ pub fn route(topo: &Topology) -> Lft {
             }
             // Relax neighbors: r can use s if r→s is an up step (always) or
             // a down step into a pure-down switch.
-            for g in &prep.groups[su] {
+            for g in prep.groups(su) {
                 let r = g.remote;
                 if dist[r as usize] != u32::MAX {
                     continue;

@@ -18,6 +18,16 @@ use crate::topology::{PortTarget, Topology};
 pub fn check(topo: &Topology, lft: &Lft) -> Result<(), String> {
     let prep = Prep::new(topo);
     let costs = common::costs(topo, &prep, DividerReduction::Max);
+    check_with(topo, lft, &prep, &costs)
+}
+
+/// [`check`] against already-computed preprocessing — the reroute hot path
+/// (`RerouteWorkspace::validate`) reuses the `Prep`/`Costs` the routing
+/// pass just produced instead of rebuilding them, which roughly halves the
+/// validated reaction latency. `costs` may come from either
+/// [`DividerReduction`]: the pass only reads cost finiteness, which both
+/// reductions share.
+pub fn check_with(topo: &Topology, lft: &Lft, prep: &Prep, costs: &common::Costs) -> Result<(), String> {
     for (li, &l) in prep.leaves.iter().enumerate() {
         for lj in 0..prep.leaves.len() {
             if costs.cost(l, lj as u32) == INF {

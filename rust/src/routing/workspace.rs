@@ -1,0 +1,178 @@
+//! Persistent reroute workspace: the Dmodc pipeline into reused buffers.
+//!
+//! The paper's headline runtime claim — complete rerouting of tens of
+//! thousands of nodes "in less than a second" — assumes the fabric
+//! manager's reaction path does no cold-start work per event. The original
+//! `FabricManager::reroute` rebuilt everything from freshly allocated
+//! memory on every fault; this workspace owns every intermediate product
+//! of the pipeline (degraded-topology scratch, CSR `Prep`, cost/divider
+//! buffers, the NID array) and refills the caller's topology and LFT
+//! buffers in place, so that steady-state fault-storm rerouting performs
+//! **zero heap allocation** in the routing pipeline
+//! (asserted by `tests/equivalence.rs` with a counting allocator; see
+//! EXPERIMENTS.md §Perf).
+//!
+//! Produced LFTs are bit-identical to [`dmodc::route_reference`] — the
+//! equivalence suite checks intact and degraded topologies, every
+//! thread count, and repeated reuse (event → recovery → event).
+
+use super::common::{self, Costs, Prep, PrepScratch};
+use super::dmodc::{self, NidOrder, NidScratch, Options};
+use super::{validity, Lft};
+use crate::topology::degrade::{self, DegradeScratch};
+use crate::topology::{NodeId, SwitchId, Topology};
+use std::collections::HashSet;
+
+/// Reusable state for repeated full reroutes (owned by `FabricManager`).
+pub struct RerouteWorkspace {
+    pub opts: Options,
+    /// Preprocessing of the *last rerouted* topology.
+    pub prep: Prep,
+    /// Algorithm-1 products for the last rerouted topology.
+    pub costs: Costs,
+    /// Algorithm-2 NIDs for the last rerouted topology.
+    pub nids: Vec<u64>,
+    prep_scratch: PrepScratch,
+    nid_scratch: NidScratch,
+    degrade_scratch: DegradeScratch,
+}
+
+impl RerouteWorkspace {
+    pub fn new(opts: Options) -> Self {
+        Self {
+            opts,
+            prep: Prep::default(),
+            costs: Costs::default(),
+            nids: Vec::new(),
+            prep_scratch: PrepScratch::default(),
+            nid_scratch: NidScratch::default(),
+            degrade_scratch: DegradeScratch::default(),
+        }
+    }
+
+    /// Rebuild the degraded topology in place (`degrade::apply_into`
+    /// semantics — bit-identical to `degrade::apply`), reusing the
+    /// workspace's degradation scratch.
+    pub fn materialize(
+        &mut self,
+        reference: &Topology,
+        dead_switches: &HashSet<SwitchId>,
+        dead_cables: &HashSet<(SwitchId, u16)>,
+        out: &mut Topology,
+    ) {
+        degrade::apply_into(
+            reference,
+            dead_switches,
+            dead_cables,
+            out,
+            &mut self.degrade_scratch,
+        );
+    }
+
+    /// Run the full Dmodc pipeline for `topo` into `out`, reusing every
+    /// buffer. After this call `prep`/`costs`/`nids` describe `topo`
+    /// (used by [`RerouteWorkspace::validate`] and
+    /// [`RerouteWorkspace::alternatives_into`]).
+    pub fn reroute_into(&mut self, topo: &Topology, out: &mut Lft) {
+        Prep::build_into(topo, &mut self.prep, &mut self.prep_scratch);
+        common::costs_into(topo, &self.prep, self.opts.reduction, &mut self.costs);
+        match self.opts.nid_order {
+            NidOrder::Topological => dmodc::topological_nids_into(
+                topo,
+                &self.prep,
+                &self.costs,
+                &mut self.nids,
+                &mut self.nid_scratch,
+            ),
+            NidOrder::UuidFlat => dmodc::uuid_flat_nids_into(
+                topo,
+                &self.prep,
+                &mut self.nids,
+                &mut self.nid_scratch,
+            ),
+        }
+        out.reset(topo.switches.len(), topo.nodes.len());
+        dmodc::fill_rows(topo, &self.prep, &self.costs, &self.nids, out);
+    }
+
+    /// The paper's validity pass for `topo`/`lft`, reusing the costs
+    /// already computed by the last [`RerouteWorkspace::reroute_into`]
+    /// instead of rebuilding `Prep` + Algorithm 1 from scratch (which
+    /// roughly doubled the reaction latency when validation was on).
+    pub fn validate(&self, topo: &Topology, lft: &Lft) -> Result<(), String> {
+        validity::check_with(topo, lft, &self.prep, &self.costs)
+    }
+
+    /// Equation-(2) alternative ports against the last rerouted topology,
+    /// into a caller buffer (the fast-mitigation path).
+    pub fn alternatives_into(
+        &self,
+        topo: &Topology,
+        s: u32,
+        d: NodeId,
+        out: &mut Vec<u16>,
+    ) {
+        dmodc::alternatives_into(topo, &self.prep, &self.costs, s, d, out);
+    }
+}
+
+impl Default for RerouteWorkspace {
+    fn default() -> Self {
+        Self::new(Options::default())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::routing::dmodc::route_reference;
+    use crate::topology::pgft::PgftParams;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn workspace_reroute_matches_reference_across_reuse() {
+        let t = PgftParams::small().build();
+        let mut rng = Rng::new(5);
+        let mut ws = RerouteWorkspace::default();
+        let mut out = Lft::new(0, 0);
+        // Alternate intact / degraded to exercise buffer shrink + regrow.
+        for round in 0..4 {
+            let topo = if round % 2 == 0 {
+                t.clone()
+            } else {
+                crate::topology::degrade::remove_random_links(&t, &mut rng, 3 + round)
+            };
+            ws.reroute_into(&topo, &mut out);
+            let reference = route_reference(&topo, &Options::default());
+            assert_eq!(out.raw(), reference.raw(), "round {round}");
+            assert!(ws.validate(&topo, &out).is_ok(), "round {round}");
+        }
+    }
+
+    #[test]
+    fn materialize_matches_apply() {
+        use std::collections::HashSet;
+        let t = PgftParams::small().build();
+        let dead_sw: HashSet<u32> = [t.leaf_switches().len() as u32 + 1].into_iter().collect();
+        let mut dead_cb = HashSet::new();
+        dead_cb.insert(crate::topology::degrade::cables(&t)[4]);
+        let mut ws = RerouteWorkspace::default();
+        let mut got = Topology::default();
+        ws.materialize(&t, &dead_sw, &dead_cb, &mut got);
+        let want = crate::topology::degrade::apply(&t, &dead_sw, &dead_cb);
+        assert_eq!(got.nodes.len(), want.nodes.len());
+        assert_eq!(got.switches.len(), want.switches.len());
+        assert_eq!(got.num_levels, want.num_levels);
+        assert_eq!(got.port_offsets, want.port_offsets);
+        for (a, b) in got.switches.iter().zip(&want.switches) {
+            assert_eq!(a.uuid, b.uuid);
+            assert_eq!(a.level, b.level);
+            assert_eq!(a.ports, b.ports);
+        }
+        for (a, b) in got.nodes.iter().zip(&want.nodes) {
+            assert_eq!(a.uuid, b.uuid);
+            assert_eq!(a.leaf, b.leaf);
+            assert_eq!(a.leaf_port, b.leaf_port);
+        }
+    }
+}

@@ -10,7 +10,7 @@
 //! default so that every node remains attached (a dead leaf would simply
 //! invalidate every throw involving its nodes).
 
-use super::{Builder, PortTarget, SwitchId, Topology};
+use super::{Builder, Node, PortTarget, Switch, SwitchId, Topology};
 use crate::util::rng::{log_uniform_amount, Rng};
 use std::collections::HashSet;
 
@@ -77,6 +77,128 @@ pub fn apply(
         b.attach_node(leaf, n.uuid);
     }
     b.finish()
+}
+
+/// Reusable buffers for [`apply_into`].
+#[derive(Default)]
+pub struct DegradeScratch {
+    /// old switch id -> compact new id, or `SwitchId::MAX`.
+    map: Vec<SwitchId>,
+    /// Recycled per-switch port vectors (retain capacity across events).
+    pool: Vec<Vec<PortTarget>>,
+}
+
+/// In-place variant of [`apply`] for the reroute hot path: rebuilds `out`
+/// from `t` minus the dead equipment, reusing `out`'s and `scratch`'s
+/// buffers so a fault-storm steady state (event → recovery → event)
+/// performs no heap allocation once capacities have converged.
+///
+/// Produces a topology bit-identical to [`apply`] — same compact switch
+/// ids, same port order (cables in canonical original-port order, then
+/// nodes in original NodeId order), same `num_levels`/`port_offsets` —
+/// which `rust/src/routing/workspace.rs` tests assert. The full invariant
+/// pass of `Builder::finish` is skipped here; [`apply`] remains the
+/// checked reference construction.
+pub fn apply_into(
+    t: &Topology,
+    dead_switches: &HashSet<SwitchId>,
+    dead_cables: &HashSet<(SwitchId, u16)>,
+    out: &mut Topology,
+    scratch: &mut DegradeScratch,
+) {
+    const NONE: SwitchId = SwitchId::MAX;
+    scratch.map.clear();
+    scratch.map.resize(t.switches.len(), NONE);
+    let mut alive = 0usize;
+    for id in 0..t.switches.len() {
+        if !dead_switches.contains(&(id as SwitchId)) {
+            scratch.map[id] = alive as SwitchId;
+            alive += 1;
+        }
+    }
+    // Resize the switch list, recycling port buffers through the pool.
+    while out.switches.len() > alive {
+        let sw = out.switches.pop().unwrap();
+        scratch.pool.push(sw.ports);
+    }
+    while out.switches.len() < alive {
+        out.switches.push(Switch {
+            uuid: 0,
+            level: 0,
+            ports: scratch.pool.pop().unwrap_or_default(),
+        });
+    }
+    {
+        let mut k = 0usize;
+        for (id, sw) in t.switches.iter().enumerate() {
+            if scratch.map[id] != NONE {
+                let o = &mut out.switches[k];
+                o.uuid = sw.uuid;
+                o.level = sw.level;
+                o.ports.clear();
+                k += 1;
+            }
+        }
+    }
+    // Surviving cables in canonical original-port order, appending to both
+    // endpoints exactly like `Builder::connect` does in `apply`.
+    for (a, sw) in t.switches.iter().enumerate() {
+        let na = scratch.map[a];
+        if na == NONE {
+            continue;
+        }
+        for (pa, port) in sw.ports.iter().enumerate() {
+            if let PortTarget::Switch { sw: bid, rport } = *port {
+                // Canonical end: count each cable once.
+                if (bid, rport) < (a as SwitchId, pa as u16) {
+                    continue;
+                }
+                let nb = scratch.map[bid as usize];
+                if nb == NONE {
+                    continue;
+                }
+                if dead_cables.contains(&(a as SwitchId, pa as u16)) {
+                    continue;
+                }
+                let pa2 = out.switches[na as usize].ports.len() as u16;
+                let pb2 = out.switches[nb as usize].ports.len() as u16;
+                out.switches[na as usize]
+                    .ports
+                    .push(PortTarget::Switch { sw: nb, rport: pb2 });
+                out.switches[nb as usize]
+                    .ports
+                    .push(PortTarget::Switch { sw: na, rport: pa2 });
+            }
+        }
+    }
+    // Nodes in original NodeId order (preserves per-leaf port-rank order
+    // and keeps NodeIds stable).
+    out.nodes.clear();
+    for n in &t.nodes {
+        let leaf = scratch.map[n.leaf as usize];
+        assert!(
+            leaf != NONE,
+            "leaf switches must not be removed (node would detach)"
+        );
+        let port = out.switches[leaf as usize].ports.len() as u16;
+        out.switches[leaf as usize].ports.push(PortTarget::Node {
+            node: out.nodes.len() as super::NodeId,
+        });
+        out.nodes.push(Node {
+            uuid: n.uuid,
+            leaf,
+            leaf_port: port,
+        });
+    }
+    // Levels and port offsets, as in `Builder::finish`.
+    out.num_levels = out.switches.iter().map(|s| s.level + 1).max().unwrap_or(0);
+    out.port_offsets.clear();
+    let mut off = 0u32;
+    for s in &out.switches {
+        out.port_offsets.push(off);
+        off += s.ports.len() as u32;
+    }
+    out.port_offsets.push(off);
 }
 
 /// All cables (switch-switch links), canonical endpoints.
@@ -264,6 +386,47 @@ mod tests {
         let mut leaves = HashSet::new();
         leaves.insert(t.leaf_switches()[0]);
         assert!(islet_switches(&t, &leaves).is_empty());
+    }
+
+    #[test]
+    fn apply_into_bit_identical_to_apply_across_reuse() {
+        let t = PgftParams::small().build();
+        let mut rng = Rng::new(11);
+        let mut out = Topology::default();
+        let mut scratch = DegradeScratch::default();
+        let all_cables = cables(&t);
+        let removable = removable_switches(&t);
+        for round in 0..12 {
+            // Oscillating fault sets exercise shrink and regrow paths.
+            let nsw = (round * 7) % 4;
+            let ncb = (round * 5) % 6;
+            let dead_sw: HashSet<SwitchId> = rng
+                .sample_distinct(removable.len(), nsw)
+                .iter()
+                .map(|&i| removable[i as usize])
+                .collect();
+            let dead_cb: HashSet<(SwitchId, u16)> = rng
+                .sample_distinct(all_cables.len(), ncb)
+                .iter()
+                .map(|&i| all_cables[i as usize])
+                .collect();
+            let want = apply(&t, &dead_sw, &dead_cb);
+            apply_into(&t, &dead_sw, &dead_cb, &mut out, &mut scratch);
+            assert_eq!(out.num_levels, want.num_levels, "round {round}");
+            assert_eq!(out.port_offsets, want.port_offsets, "round {round}");
+            assert_eq!(out.switches.len(), want.switches.len());
+            for (a, b) in out.switches.iter().zip(&want.switches) {
+                assert_eq!((a.uuid, a.level, &a.ports), (b.uuid, b.level, &b.ports));
+            }
+            assert_eq!(out.nodes.len(), want.nodes.len());
+            for (a, b) in out.nodes.iter().zip(&want.nodes) {
+                assert_eq!(
+                    (a.uuid, a.leaf, a.leaf_port),
+                    (b.uuid, b.leaf, b.leaf_port)
+                );
+            }
+            assert!(out.check_invariants().is_ok(), "round {round}");
+        }
     }
 
     #[test]

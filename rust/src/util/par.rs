@@ -1,32 +1,253 @@
-//! Minimal parallel-for substrate (the registry has no `rayon`).
+//! Parallel-for substrate on a persistent worker pool (the registry has no
+//! `rayon`).
 //!
 //! The paper's production implementation spreads cost/divider/NID/route
 //! computation "over POSIX threads fetching work with a switch-level
-//! granularity". We mirror that: a scoped worker pool where workers claim
-//! chunks of an index range through an atomic cursor (self-balancing for
-//! irregular per-item cost, exactly like a pthread work queue).
+//! granularity". We mirror that: workers claim chunks of an index range
+//! through an atomic cursor (self-balancing for irregular per-item cost,
+//! exactly like a pthread work queue).
+//!
+//! Unlike the original scoped-thread version, workers are spawned **once**
+//! and parked on a condvar between jobs (EXPERIMENTS.md §Perf): a fault-storm
+//! steady state issues thousands of parallel regions per second, and
+//! per-region `thread::spawn` costs both latency and heap allocations —
+//! with the pool, dispatching a region is allocation-free, which is what
+//! makes the reroute hot path's zero-allocation invariant testable.
+//!
+//! Concurrency rules:
+//! * Parallel regions are serialized by a submit lock; concurrent callers
+//!   queue up (correct, just not overlapped).
+//! * Nested regions (a body calling `parallel_for` again) run inline and
+//!   serial on the calling thread — never a deadlock.
+//! * A body must not block on *another* thread entering a parallel region
+//!   (that other thread would wait for this region's slots).
 
+use std::cell::Cell;
+use std::marker::PhantomData;
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex, MutexGuard, OnceLock};
 
-/// Number of worker threads to use: `DMODC_THREADS` env override, else
-/// available parallelism, else 4.
-pub fn num_threads() -> usize {
-    if let Ok(v) = std::env::var("DMODC_THREADS") {
-        if let Ok(n) = v.parse::<usize>() {
-            return n.max(1);
-        }
-    }
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+/// Runtime thread-count override (0 = none). Takes precedence over the
+/// `DMODC_THREADS` environment variable; used by benches and the
+/// equivalence tests to sweep thread counts without re-exec.
+static THREAD_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// Override the worker count at runtime (`None` restores env/default).
+pub fn set_threads(n: Option<usize>) {
+    THREAD_OVERRIDE.store(n.map_or(0, |v| v.max(1)), Ordering::SeqCst);
 }
 
-/// Parallel for over `0..n`: `body(i)` for every i, unordered, on
-/// `num_threads()` scoped threads. `body` must be `Sync` (shared read state;
-/// use interior mutability or per-index disjoint writes for output).
+/// Number of worker threads to use: [`set_threads`] override, else the
+/// `DMODC_THREADS` env var (read once at first use — `std::env::var`
+/// allocates, and this is called on the allocation-free hot path), else
+/// available parallelism, else 4.
+pub fn num_threads() -> usize {
+    let o = THREAD_OVERRIDE.load(Ordering::Relaxed);
+    if o != 0 {
+        return o;
+    }
+    static FROM_ENV: OnceLock<usize> = OnceLock::new();
+    *FROM_ENV.get_or_init(|| {
+        if let Ok(v) = std::env::var("DMODC_THREADS") {
+            if let Ok(n) = v.parse::<usize>() {
+                return n.max(1);
+            }
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Persistent pool
+// ---------------------------------------------------------------------------
+
+/// Type-erased job: `run(data)` is the monomorphized chunk-claiming loop,
+/// `data` points at a `Ctx` on the submitting thread's stack. Valid only
+/// between publication and the submitter's completion wait.
+#[derive(Clone, Copy)]
+struct JobPtr {
+    data: *const (),
+    run: unsafe fn(*const ()),
+}
+unsafe impl Send for JobPtr {}
+
+struct Slot {
+    /// Job sequence number; bumped once per published job so each worker
+    /// claims a given job at most once.
+    seq: u64,
+    job: Option<JobPtr>,
+    /// Worker slots still claimable for the current job.
+    tickets: usize,
+    /// Workers currently executing the current job.
+    running: usize,
+    /// Pool threads spawned so far.
+    spawned: usize,
+    /// A worker's body panicked (propagated to the submitter).
+    panicked: bool,
+}
+
+struct Shared {
+    slot: Mutex<Slot>,
+    work: Condvar,
+    done: Condvar,
+}
+
+fn shared() -> &'static Shared {
+    static S: OnceLock<Shared> = OnceLock::new();
+    S.get_or_init(|| Shared {
+        slot: Mutex::new(Slot {
+            seq: 0,
+            job: None,
+            tickets: 0,
+            running: 0,
+            spawned: 0,
+            panicked: false,
+        }),
+        work: Condvar::new(),
+        done: Condvar::new(),
+    })
+}
+
+/// Serializes parallel regions across submitting threads.
+fn submit_lock() -> MutexGuard<'static, ()> {
+    static L: OnceLock<Mutex<()>> = OnceLock::new();
+    let m = L.get_or_init(|| Mutex::new(()));
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+thread_local! {
+    /// True inside a parallel region (submitter during its own portion,
+    /// pool workers always): nested regions run inline and serial.
+    static IN_PARALLEL: Cell<bool> = const { Cell::new(false) };
+}
+
+/// True when the current thread is already inside a parallel region.
+pub fn in_parallel_region() -> bool {
+    IN_PARALLEL.with(|c| c.get())
+}
+
+fn worker_loop(sh: &'static Shared) {
+    IN_PARALLEL.with(|c| c.set(true));
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut g = sh.slot.lock().unwrap_or_else(|e| e.into_inner());
+            loop {
+                if g.seq != seen {
+                    seen = g.seq;
+                    if g.job.is_some() && g.tickets > 0 {
+                        g.tickets -= 1;
+                        g.running += 1;
+                        break g.job.unwrap();
+                    }
+                }
+                g = sh.work.wait(g).unwrap_or_else(|e| e.into_inner());
+            }
+        };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| unsafe {
+            (job.run)(job.data)
+        }));
+        let mut g = sh.slot.lock().unwrap_or_else(|e| e.into_inner());
+        if result.is_err() {
+            g.panicked = true;
+        }
+        g.running -= 1;
+        if g.running == 0 {
+            sh.done.notify_all();
+        }
+    }
+}
+
+/// Clears the published job and waits for all claimed slots to finish —
+/// runs on unwind too, so a panicking submitter body never leaves workers
+/// holding a pointer into its dead stack frame.
+struct ActiveJob {
+    sh: &'static Shared,
+}
+
+impl Drop for ActiveJob {
+    fn drop(&mut self) {
+        let mut g = self.sh.slot.lock().unwrap_or_else(|e| e.into_inner());
+        g.job = None;
+        g.tickets = 0;
+        while g.running > 0 {
+            g = self.sh.done.wait(g).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+}
+
+/// Marks the submitting thread as inside a parallel region for the scope.
+struct EnterParallel {
+    was: bool,
+}
+
+impl EnterParallel {
+    fn new() -> Self {
+        let was = IN_PARALLEL.with(|c| c.replace(true));
+        Self { was }
+    }
+}
+
+impl Drop for EnterParallel {
+    fn drop(&mut self) {
+        let was = self.was;
+        IN_PARALLEL.with(|c| c.set(was));
+    }
+}
+
+/// Run `run(data)` on the calling thread plus up to `extra` pool workers;
+/// returns after every participant finished. Allocation-free once the pool
+/// has grown to `extra` workers.
+fn run_pooled(extra: usize, run: unsafe fn(*const ()), data: *const ()) {
+    if extra == 0 {
+        let _flag = EnterParallel::new();
+        unsafe { run(data) };
+        return;
+    }
+    let sh = shared();
+    let _submit = submit_lock();
+    {
+        let mut g = sh.slot.lock().unwrap_or_else(|e| e.into_inner());
+        g.panicked = false;
+        while g.spawned < extra {
+            let b = std::thread::Builder::new().name("dmodc-par".into());
+            match b.spawn(move || worker_loop(sh)) {
+                Ok(_) => g.spawned += 1,
+                Err(_) => break, // fewer workers; the region still completes
+            }
+        }
+        g.seq = g.seq.wrapping_add(1);
+        g.job = Some(JobPtr { data, run });
+        g.tickets = extra;
+        sh.work.notify_all();
+    }
+    let guard = ActiveJob { sh };
+    {
+        let _flag = EnterParallel::new();
+        unsafe { run(data) };
+    }
+    drop(guard);
+    let panicked = {
+        let g = sh.slot.lock().unwrap_or_else(|e| e.into_inner());
+        g.panicked
+    };
+    if panicked {
+        panic!("parallel worker panicked");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Public parallel-for family
+// ---------------------------------------------------------------------------
+
+/// Parallel for over `0..n`: `body(i)` for every i, unordered, on up to
+/// [`num_threads`] threads (caller + pool). `body` must be `Sync` (shared
+/// read state; use per-index disjoint writes for output).
 pub fn parallel_for<F>(n: usize, body: F)
 where
     F: Fn(usize) + Sync,
 {
-    parallel_for_chunked(n, 1, |i| body(i));
+    parallel_for_chunked(n, 1, body);
 }
 
 /// Like [`parallel_for`] but workers claim `chunk`-sized blocks from the
@@ -35,37 +256,49 @@ pub fn parallel_for_chunked<F>(n: usize, chunk: usize, body: F)
 where
     F: Fn(usize) + Sync,
 {
+    let chunk = chunk.max(1);
     let threads = num_threads().min(n.max(1));
-    if threads <= 1 || n <= chunk {
+    if threads <= 1 || n <= chunk || in_parallel_region() {
         for i in 0..n {
             body(i);
         }
         return;
     }
-    let chunk = chunk.max(1);
-    let cursor = AtomicUsize::new(0);
-    let body = &body;
-    let cursor = &cursor;
-    std::thread::scope(|scope| {
-        for _ in 0..threads {
-            scope.spawn(move || loop {
-                let start = cursor.fetch_add(chunk, Ordering::Relaxed);
-                if start >= n {
-                    break;
-                }
-                let end = (start + chunk).min(n);
-                for i in start..end {
-                    body(i);
-                }
-            });
+
+    struct Ctx<'a, F> {
+        cursor: AtomicUsize,
+        n: usize,
+        chunk: usize,
+        body: &'a F,
+    }
+    unsafe fn drain<F: Fn(usize) + Sync>(p: *const ()) {
+        let ctx = &*(p as *const Ctx<'_, F>);
+        loop {
+            let start = ctx.cursor.fetch_add(ctx.chunk, Ordering::Relaxed);
+            if start >= ctx.n {
+                break;
+            }
+            let end = (start + ctx.chunk).min(ctx.n);
+            for i in start..end {
+                (ctx.body)(i);
+            }
         }
-    });
+    }
+
+    let ctx = Ctx {
+        cursor: AtomicUsize::new(0),
+        n,
+        chunk,
+        body: &body,
+    };
+    run_pooled(
+        threads - 1,
+        drain::<F>,
+        &ctx as *const Ctx<'_, F> as *const (),
+    );
 }
 
 /// Parallel map over `0..n` producing a `Vec<T>` in index order.
-/// Output slots are disjoint so plain unsafe-free writes via `UnsafeCell`
-/// wrapper are replaced with a simpler approach: pre-size with `Option<T>`
-/// guarded by disjoint indices through a raw pointer wrapper.
 pub fn parallel_map<T, F>(n: usize, f: F) -> Vec<T>
 where
     T: Send,
@@ -82,8 +315,8 @@ where
         let v = f(i);
         // SAFETY: each index i is visited exactly once across all workers
         // (atomic cursor hands out disjoint ranges), slots are within the
-        // reserved capacity, and we set the length only after the scope
-        // joins all threads.
+        // reserved capacity, and we set the length only after the region
+        // completes.
         unsafe {
             std::ptr::write(ptr.0.add(i), v);
         }
@@ -95,52 +328,50 @@ where
     out
 }
 
-/// Parallel mutation over a slice of `Send` items: each worker claims
-/// indices through the shared cursor and receives `&mut items[i]` — indices
-/// are handed out disjointly, so the mutable accesses never alias. Used to
-/// fill per-switch LFT rows in parallel (the paper's "POSIX threads fetching
-/// work with a switch-level granularity").
+/// Parallel mutation over a slice of `Send` items: each claimed index
+/// yields `&mut items[i]` — indices are handed out disjointly, so the
+/// mutable accesses never alias.
 pub fn parallel_for_mut<T, F>(items: &mut [T], f: F)
 where
     T: Send,
     F: Fn(usize, &mut T) + Sync,
 {
-    struct SendPtr<T>(*mut T);
-    unsafe impl<T> Send for SendPtr<T> {}
-    unsafe impl<T> Sync for SendPtr<T> {}
+    let shared = SharedMut::new(items);
+    let shared = &shared;
+    parallel_for_chunked(shared.len(), 1, |i| {
+        // SAFETY: index i is claimed exactly once across all workers.
+        let item = unsafe { shared.get_mut(i) };
+        f(i, item);
+    });
+}
 
-    let n = items.len();
-    let threads = num_threads().min(n.max(1));
-    if threads <= 1 {
-        for (i, item) in items.iter_mut().enumerate() {
-            f(i, item);
-        }
+/// Parallel mutation over consecutive `width`-sized rows of `data`:
+/// `f(row_index, &mut row)`. Row granularity matches the paper's "POSIX
+/// threads fetching work with a switch-level granularity" and avoids the
+/// `Vec<&mut [T]>` the old `rows_mut()` pattern allocated per call.
+pub fn parallel_for_rows<T, F>(data: &mut [T], width: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    if width == 0 || data.is_empty() {
         return;
     }
-    let ptr = SendPtr(items.as_mut_ptr());
-    let ptr = &ptr;
-    let f = &f;
-    let cursor = AtomicUsize::new(0);
-    let cursor = &cursor;
-    std::thread::scope(|scope| {
-        for _ in 0..threads {
-            scope.spawn(move || loop {
-                let i = cursor.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                // SAFETY: the atomic cursor yields each index exactly once,
-                // so no two workers hold a reference to the same element.
-                let item = unsafe { &mut *ptr.0.add(i) };
-                f(i, item);
-            });
-        }
+    let rows = data.len() / width;
+    debug_assert_eq!(rows * width, data.len(), "data must be whole rows");
+    let shared = SharedMut::new(data);
+    let shared = &shared;
+    parallel_for_chunked(rows, 1, |r| {
+        // SAFETY: rows are disjoint and each row index is claimed once.
+        let row = unsafe { shared.slice_mut(r * width, width) };
+        f(r, row);
     });
 }
 
 /// Run `k` independent closures on up to `k` threads, returning their
 /// results in order. Used for coarse-grained task parallelism (e.g. running
-/// several routing engines concurrently in benches).
+/// several routing engines concurrently in benches). Uses scoped threads,
+/// not the pool: the tasks may themselves open parallel regions.
 pub fn join_all<T, F>(tasks: Vec<F>) -> Vec<T>
 where
     T: Send,
@@ -158,6 +389,69 @@ where
         }
     });
     results.into_iter().map(|o| o.unwrap()).collect()
+}
+
+/// Shared mutable view over a slice for algorithms whose tasks write
+/// provably disjoint regions (per-switch cost rows, per-switch LFT rows).
+/// All accessors are `unsafe`: the *caller* guarantees that no two live
+/// references overlap and that writes never race with reads of the same
+/// element (e.g. the level-synchronous sweeps of Algorithm 1 only read
+/// rows finalized in earlier levels).
+pub struct SharedMut<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _marker: PhantomData<&'a mut [T]>,
+}
+
+unsafe impl<T: Send> Send for SharedMut<'_, T> {}
+unsafe impl<T: Send> Sync for SharedMut<'_, T> {}
+
+impl<'a, T> SharedMut<'a, T> {
+    pub fn new(data: &'a mut [T]) -> Self {
+        Self {
+            ptr: data.as_mut_ptr(),
+            len: data.len(),
+            _marker: PhantomData,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// SAFETY: `[start, start+len)` must be in bounds and not concurrently
+    /// accessed through any other reference.
+    #[inline]
+    pub unsafe fn slice_mut(&self, start: usize, len: usize) -> &'a mut [T] {
+        debug_assert!(start + len <= self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(start), len)
+    }
+
+    /// SAFETY: `[start, start+len)` must be in bounds and not concurrently
+    /// written.
+    #[inline]
+    pub unsafe fn slice(&self, start: usize, len: usize) -> &'a [T] {
+        debug_assert!(start + len <= self.len);
+        std::slice::from_raw_parts(self.ptr.add(start), len)
+    }
+
+    /// SAFETY: element `i` must be in bounds and not concurrently accessed.
+    #[inline]
+    pub unsafe fn get_mut(&self, i: usize) -> &'a mut T {
+        debug_assert!(i < self.len);
+        &mut *self.ptr.add(i)
+    }
+
+    /// SAFETY: element `i` must be in bounds and not concurrently written.
+    #[inline]
+    pub unsafe fn get(&self, i: usize) -> &'a T {
+        debug_assert!(i < self.len);
+        &*self.ptr.add(i)
+    }
 }
 
 #[cfg(test)]
@@ -203,5 +497,73 @@ mod tests {
             total.fetch_add(i as u64, Ordering::Relaxed);
         });
         assert_eq!(total.load(Ordering::Relaxed), 999 * 1000 / 2);
+    }
+
+    #[test]
+    fn nested_regions_run_inline() {
+        // A body opening another region must not deadlock; all inner
+        // iterations still execute exactly once.
+        let n = 64;
+        let hits: Vec<AtomicU64> = (0..n * n).map(|_| AtomicU64::new(0)).collect();
+        parallel_for(n, |i| {
+            parallel_for(n, |j| {
+                hits[i * n + j].fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn concurrent_submitters_serialize() {
+        let results = join_all(
+            (0..4u64)
+                .map(|k| {
+                    move || {
+                        let total = AtomicU64::new(0);
+                        parallel_for(500, |i| {
+                            total.fetch_add(i as u64 + k, Ordering::Relaxed);
+                        });
+                        total.load(Ordering::Relaxed)
+                    }
+                })
+                .collect::<Vec<_>>(),
+        );
+        for (k, r) in results.into_iter().enumerate() {
+            assert_eq!(r, 499 * 500 / 2 + 500 * k as u64);
+        }
+    }
+
+    #[test]
+    fn parallel_for_rows_disjoint() {
+        let mut data = vec![0u32; 12 * 7];
+        parallel_for_rows(&mut data, 7, |r, row| {
+            for (i, x) in row.iter_mut().enumerate() {
+                *x = (r * 100 + i) as u32;
+            }
+        });
+        for r in 0..12 {
+            for i in 0..7 {
+                assert_eq!(data[r * 7 + i], (r * 100 + i) as u32);
+            }
+        }
+    }
+
+    #[test]
+    fn set_threads_override_applies() {
+        set_threads(Some(1));
+        assert_eq!(num_threads(), 1);
+        set_threads(Some(3));
+        assert_eq!(num_threads(), 3);
+        set_threads(None);
+        assert!(num_threads() >= 1);
+    }
+
+    #[test]
+    fn parallel_for_mut_each_once() {
+        let mut v = vec![0u64; 4096];
+        parallel_for_mut(&mut v, |i, x| *x += i as u64 + 1);
+        for (i, x) in v.iter().enumerate() {
+            assert_eq!(*x, i as u64 + 1);
+        }
     }
 }

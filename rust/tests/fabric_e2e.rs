@@ -183,6 +183,47 @@ fn fast_patch_mitigates_link_fault() {
 }
 
 #[test]
+fn consecutive_fast_patches_avoid_earlier_dead_cables() {
+    // Two fast patches between full reroutes: the second must treat the
+    // first cable as dead even though the materialized topology still
+    // contains it. Using the two parallel cables of one leaf↔mid pair,
+    // the second patch has no surviving down-side alternative once its
+    // sibling is dead — it must refuse (previously it could silently
+    // route entries back into the first dead cable) and the tables must
+    // keep avoiding the first dead cable.
+    let t = PgftParams::small().build();
+    let ids = events::cable_ids(&t);
+    let c1 = ids
+        .iter()
+        .find(|(c, _)| c.ordinal == 1)
+        .map(|(c, _)| *c)
+        .expect("small() has parallel cable pairs");
+    let c0 = ids
+        .iter()
+        .find(|(c, _)| c.ordinal == 0 && c.a == c1.a && c.b == c1.b)
+        .map(|(c, _)| *c)
+        .unwrap();
+    let mut mgr = FabricManager::new(t, ManagerConfig::default());
+    assert!(mgr.fast_patch(&c1).is_some());
+    assert!(
+        mgr.fast_patch(&c0).is_none(),
+        "sibling patch must refuse instead of using the dead sibling cable"
+    );
+    let (topo, lft) = mgr.current();
+    let (sw, port) = events::cable_ids(topo)
+        .into_iter()
+        .find(|(c, _)| *c == c1)
+        .unwrap()
+        .1;
+    for d in 0..lft.num_nodes() as u32 {
+        assert_ne!(lft.get(sw, d), port, "dst {d} routed into the dead cable");
+    }
+    assert!(validity::check(topo, lft).is_ok());
+    // A full reroute clears the patch bookkeeping and recovers balance.
+    assert!(mgr.reroute_now().valid);
+}
+
+#[test]
 fn fast_patch_falls_back_when_no_alternative() {
     // A 2-leaf / 1-spine fabric has a single path per pair: no alternative
     // ports, so fast_patch must return None (caller does a full reroute).
