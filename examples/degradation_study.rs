@@ -6,7 +6,7 @@
 
 use dmodc::analysis::CongestionAnalyzer;
 use dmodc::prelude::*;
-use dmodc::routing::{route_unchecked, validity};
+use dmodc::routing::registry;
 use dmodc::util::cli::Args;
 use dmodc::util::table::Table;
 
@@ -35,15 +35,20 @@ fn main() {
 
     let mut tab = Table::new(&["removed sw", "algo", "valid", "A2A", "RP", "SP"]);
     let mut rng = Rng::new(p.get_u64("seed"));
+    // One persistent engine per algorithm: workspaces stay warm across
+    // all degradation levels (the RoutingEngine redesign's reuse path).
+    let mut engines: Vec<Box<dyn RoutingEngine>> =
+        Algo::PAPER.iter().map(|&a| registry::create(a)).collect();
+    let mut lft = Lft::default();
     for amount in [0usize, 2, 8, 24, 48, 96] {
         let degraded = degrade::remove_random_switches(&topo, &mut rng, amount);
-        for algo in Algo::PAPER {
-            let lft = route_unchecked(algo, &degraded);
-            let valid = validity::check(&degraded, &lft).is_ok();
+        for engine in engines.iter_mut() {
+            engine.route_into(&degraded, &mut lft);
+            let valid = engine.validate(&degraded, &lft).is_ok();
             let an = CongestionAnalyzer::new(&degraded, &lft);
             tab.row(vec![
                 amount.to_string(),
-                algo.name().to_string(),
+                engine.name().to_string(),
                 valid.to_string(),
                 an.all_to_all().to_string(),
                 an.random_perm_median(p.get_usize("rp-samples"), 1).to_string(),

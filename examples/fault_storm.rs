@@ -23,6 +23,7 @@ fn main() {
         .flag("events", "30", "number of events")
         .flag("seed", "7", "seed")
         .flag("islet-every", "8", "islet reboot cadence")
+        .flag("algo", "dmodc", "routing engine backing the manager")
         .parse();
     let params = if p.get_bool("full") {
         PgftParams::paper_8640()
@@ -48,7 +49,17 @@ fn main() {
 
     let (etx, erx) = channel();
     let (rtx, rrx) = channel();
-    let mut mgr = FabricManager::new(topo, ManagerConfig::default());
+    // Any registered engine can back the manager; every one reroutes out
+    // of a persistent workspace (see DESIGN.md).
+    let algo: Algo = p.get_parsed("algo");
+    println!("engine: {algo}");
+    let mut mgr = FabricManager::new(
+        topo,
+        ManagerConfig {
+            algo,
+            validate: true,
+        },
+    );
     let manager_thread = std::thread::spawn(move || {
         mgr.run_stream(erx, rtx);
         mgr

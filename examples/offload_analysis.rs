@@ -6,7 +6,7 @@
 
 use dmodc::analysis::CongestionAnalyzer;
 use dmodc::prelude::*;
-use dmodc::routing::route_unchecked;
+use dmodc::routing::registry;
 use dmodc::runtime::{AnalysisExecutor, ArtifactRegistry};
 use dmodc::util::table::{fmt_duration, Table};
 use std::time::Instant;
@@ -20,7 +20,10 @@ fn main() {
     println!("registry: {} artifacts in {}", reg.specs.len(), reg.dir.display());
 
     let topo = rlft::build(648, 36);
-    let lft = route_unchecked(Algo::Dmodc, &topo);
+    // Engines resolve by name, like AOT artifacts do in their registry.
+    let lft = registry::create_by_name("dmodc")
+        .expect("registered engine")
+        .route_once(&topo);
     let an = CongestionAnalyzer::new(&topo, &lft);
     let n = topo.nodes.len();
 

@@ -4,7 +4,7 @@
 
 use dmodc::analysis::CongestionAnalyzer;
 use dmodc::prelude::*;
-use dmodc::routing::validity;
+use dmodc::routing::{registry, validity};
 
 fn main() {
     // The paper's Figure 1 example: PGFT(3; 2,2,3; 1,2,2; 1,2,1).
@@ -32,10 +32,16 @@ fn main() {
     println!("RP  congestion risk: {}", analyzer.random_perm_median(200, 42));
     println!("SP  congestion risk: {}", analyzer.shift_max());
 
-    // Break something and watch Dmodc reroute around it.
+    // Break something and watch Dmodc reroute around it — through the
+    // stateful engine API this time: one engine reused across reroutes
+    // keeps every pipeline buffer warm (the fabric manager's hot path),
+    // and its validate() reuses the costs the reroute just computed.
+    let mut engine = registry::create(Algo::Dmodc);
     let mut rng = Rng::new(7);
     let degraded_topo = degrade::remove_random_links(&topo, &mut rng, 3);
-    let lft2 = route(Algo::Dmodc, &degraded_topo).expect("still connected");
+    let mut lft2 = Lft::default();
+    engine.route_into(&degraded_topo, &mut lft2);
+    engine.validate(&degraded_topo, &lft2).expect("still connected");
     let analyzer2 = CongestionAnalyzer::new(&degraded_topo, &lft2);
     println!(
         "after losing 3 cables: A2A {} SP {}",

@@ -44,7 +44,14 @@ fn main() {
         topo.nodes.len(),
         topo.switches.len()
     );
-    let mut red_tab = Table::new(&["degradation", "reduction", "gm A2A", "gm RP", "gm SP", "identical LFTs"]);
+    let mut red_tab = Table::new(&[
+        "degradation",
+        "reduction",
+        "gm A2A",
+        "gm RP",
+        "gm SP",
+        "identical LFTs",
+    ]);
     for (label, amount) in [("intact", 0usize), ("light (8 sw)", 8), ("moderate (20 sw)", 20)] {
         let mut lns = [[0.0f64; 3]; 2];
         let mut count = 0usize;
@@ -107,7 +114,11 @@ fn main() {
         .with_uuid_mode(UuidMode::Scrambled)
         .build();
     println!("\nABL-NID on a fabrication-scrambled fabric (UUID order ≠ physical):");
-    let mut nid_tab = Table::new(&["NID assignment", "SP over published order", "SP over physical order"]);
+    let mut nid_tab = Table::new(&[
+        "NID assignment",
+        "SP over published order",
+        "SP over physical order",
+    ]);
     for (name, nid_order) in [
         ("Algorithm 2 (paper)", NidOrder::Topological),
         ("flat UUID order", NidOrder::UuidFlat),

@@ -15,6 +15,13 @@
 //! reroute (buffers reused, parallel Algorithm 1). seed/ws is the speedup
 //! of this optimization pass.
 //!
+//! Since the `RoutingEngine` redesign, every *benched* engine (the
+//! paper's five — Dmodk is not part of Figure 3) also gets a
+//! steady-state measurement through a persistent registry-constructed
+//! engine (CSV rows `<algo>-ws`): cold-start construction vs
+//! workspace-reusing reroute, the gap the trait exists to close for the
+//! baseline engines.
+//!
 //!   FIG3_MAX=20736       largest node count
 //!   FIG3_MAX_SLOW=5184   cap for the O(N·E log V)-ish engines
 //!   FIG3_RADIX=36        switch radix
@@ -24,7 +31,7 @@
 use dmodc::prelude::*;
 use dmodc::routing::common::{self, DividerReduction, Prep};
 use dmodc::routing::dmodc::{topological_nids, Options, Router};
-use dmodc::routing::{route_unchecked, Lft, RerouteWorkspace};
+use dmodc::routing::{registry, route_unchecked, Lft};
 use dmodc::util::table::{fmt_duration, Table};
 use dmodc::util::time::bench;
 
@@ -81,6 +88,21 @@ fn main() {
                 algo.name().into(),
                 format!("{:.6}", s.median),
             ]);
+            // Steady-state reroute through a persistent engine (workspace
+            // reused across calls) — CSV row `<algo>-ws` for every engine.
+            let mut eng = registry::create(algo);
+            let mut out = Lft::default();
+            eng.route_into(&topo, &mut out); // warm
+            let w = bench(0, 3, || {
+                eng.route_into(&topo, &mut out);
+                out.raw()[0]
+            });
+            csv.row(vec![
+                n.to_string(),
+                topo.switches.len().to_string(),
+                format!("{algo}-ws"),
+                format!("{:.6}", w.median),
+            ]);
             if algo == Algo::Dmodc {
                 // Seed-pipeline baseline.
                 let r = bench(0, 3, || seed_pipeline(&topo));
@@ -91,21 +113,7 @@ fn main() {
                     "dmodc-seed".into(),
                     format!("{:.6}", r.median),
                 ]);
-                // Steady-state workspace reroute.
-                let mut ws = RerouteWorkspace::default();
-                let mut out = Lft::default();
-                ws.reroute_into(&topo, &mut out); // warm
-                let w = bench(0, 3, || {
-                    ws.reroute_into(&topo, &mut out);
-                    out.raw()[0]
-                });
                 cells.push(fmt_duration(w.median));
-                csv.row(vec![
-                    n.to_string(),
-                    topo.switches.len().to_string(),
-                    "dmodc-ws".into(),
-                    format!("{:.6}", w.median),
-                ]);
             }
         }
         tab.row(cells);

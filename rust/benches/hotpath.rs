@@ -80,6 +80,21 @@ fn main() {
         );
     }
 
+    // Steady-state engine reroutes: every registered engine out of its
+    // persistent workspace (the RoutingEngine redesign's hot path).
+    for spec in dmodc::routing::registry::specs() {
+        let mut eng = spec.build();
+        let mut out = dmodc::routing::Lft::default();
+        eng.route_into(&topo, &mut out); // warm
+        add(
+            &format!("engine: {} steady-state reroute", spec.name),
+            bench(0, 3, || {
+                eng.route_into(&topo, &mut out);
+                out.raw()[0]
+            }),
+        );
+    }
+
     // Analysis stages.
     let lft = route_unchecked(Algo::Dmodc, &topo);
     add("analysis: path tensor", bench(1, 5, || PathTensor::build(&topo, &lft)));

@@ -39,33 +39,43 @@ pub struct Event {
     pub kind: EventKind,
 }
 
+/// Visit every cable of `topo` as ([`CableId`], canonical `(switch,
+/// port)` endpoint). Canonical endpoints and iteration order come from
+/// [`degrade::cables`] — the same enumeration `degrade::apply` matches
+/// dead cables against — and per-UUID-pair ordinals are assigned here in
+/// that encounter order. The single source of [`CableId`] assignment:
+/// [`cable_ids`] and the fabric manager's cable→current-port reverse map
+/// both consume it, so they can never drift apart.
+pub fn for_each_cable(topo: &Topology, mut f: impl FnMut(CableId, (SwitchId, u16))) {
+    let mut per_pair: std::collections::HashMap<(u64, u64), u16> =
+        std::collections::HashMap::new();
+    for (s, p) in degrade::cables(topo) {
+        let r = match topo.switches[s as usize].ports[p as usize] {
+            crate::topology::PortTarget::Switch { sw, .. } => sw,
+            _ => unreachable!("cables() returns switch links"),
+        };
+        let (ua, ub) = (
+            topo.switches[s as usize].uuid,
+            topo.switches[r as usize].uuid,
+        );
+        let key = (ua.min(ub), ua.max(ub));
+        let ord = per_pair.entry(key).or_insert(0);
+        let id = CableId {
+            a: key.0,
+            b: key.1,
+            ordinal: *ord,
+        };
+        *ord += 1;
+        f(id, (s, p));
+    }
+}
+
 /// Enumerate all cables of a topology as [`CableId`]s (canonical: lower
 /// UUID first, ordinal numbering parallel cables between the same pair).
 pub fn cable_ids(topo: &Topology) -> Vec<(CableId, (SwitchId, u16))> {
-    let mut per_pair: std::collections::HashMap<(u64, u64), u16> =
-        std::collections::HashMap::new();
-    degrade::cables(topo)
-        .into_iter()
-        .map(|(s, p)| {
-            let r = match topo.switches[s as usize].ports[p as usize] {
-                crate::topology::PortTarget::Switch { sw, .. } => sw,
-                _ => unreachable!("cables() returns switch links"),
-            };
-            let (ua, ub) = (
-                topo.switches[s as usize].uuid,
-                topo.switches[r as usize].uuid,
-            );
-            let key = (ua.min(ub), ua.max(ub));
-            let ord = per_pair.entry(key).or_insert(0);
-            let id = CableId {
-                a: key.0,
-                b: key.1,
-                ordinal: *ord,
-            };
-            *ord += 1;
-            (id, (s, p))
-        })
-        .collect()
+    let mut out = Vec::new();
+    for_each_cable(topo, |id, endpoint| out.push((id, endpoint)));
+    out
 }
 
 /// Random fault/recovery schedule over `reference`.

@@ -17,10 +17,16 @@
 use dmodc::analysis::CongestionAnalyzer;
 use dmodc::fabric::{events, FabricManager, ManagerConfig};
 use dmodc::prelude::*;
-use dmodc::routing::{route_unchecked, validity};
+use dmodc::routing::{registry, validity};
 use dmodc::util::cli::Args;
 use dmodc::util::table::{fmt_duration, Table};
 use std::time::Instant;
+
+/// `--algo` help text listing every registered engine.
+fn algo_help() -> String {
+    let names: Vec<&str> = registry::specs().iter().map(|s| s.name).collect();
+    format!("routing engine ({})", names.join("|"))
+}
 
 fn build_topo(p: &dmodc::util::cli::Parsed) -> Topology {
     let pgft = p.get("pgft");
@@ -64,23 +70,25 @@ fn cmd_topo() {
 
 fn cmd_route() {
     let p = common_flags(Args::new("dmodc-fm route", "route and validate"))
-        .flag("algo", "dmodc", "routing engine (dmodc|dmodk|ftree|updn|minhop|sssp)")
+        .flag("algo", "dmodc", &algo_help())
         .flag("dump", "", "write the LFTs to this file (paper §4 analysis format)")
         .parse_skip(1);
     let t = build_topo(&p);
-    let algo = Algo::parse(p.get("algo")).unwrap();
+    let algo: Algo = p.get_parsed("algo");
+    let mut engine = registry::create(algo);
     let t0 = Instant::now();
-    let lft = route_unchecked(algo, &t);
+    let lft = engine.route_once(&t);
     let dt = t0.elapsed().as_secs_f64();
     if !p.get("dump").is_empty() {
         dmodc::routing::dump::dump_to_file(&t, &lft, p.get("dump")).expect("write dump");
         println!("wrote LFT dump to {}", p.get("dump"));
     }
-    let valid = validity::check(&t, &lft);
+    // Engine-level validation reuses just-computed costs where available.
+    let valid = engine.validate(&t, &lft);
     let st = validity::stats(&t, &lft);
     println!(
-        "algo={} runtime={} valid={} routes={} unreachable={} mean_hops={:.2} max_hops={} downup_turns={}",
-        algo.name(),
+        "algo={algo} runtime={} valid={} routes={} unreachable={} \
+         mean_hops={:.2} max_hops={} downup_turns={}",
         fmt_duration(dt),
         valid.is_ok(),
         st.routes,
@@ -96,12 +104,12 @@ fn cmd_route() {
 
 fn cmd_analyze() {
     let p = common_flags(Args::new("dmodc-fm analyze", "congestion-risk analysis"))
-        .flag("algo", "dmodc", "routing engine")
+        .flag("algo", "dmodc", &algo_help())
         .flag("rp-samples", "1000", "random permutations for RP")
         .parse_skip(1);
     let t = build_topo(&p);
-    let algo = Algo::parse(p.get("algo")).unwrap();
-    let lft = route_unchecked(algo, &t);
+    let algo: Algo = p.get_parsed("algo");
+    let lft = registry::create(algo).route_once(&t);
     let an = CongestionAnalyzer::new(&t, &lft);
     let seed = p.get_u64("seed");
     let mut tab = Table::new(&["pattern", "max congestion risk", "time"]);
@@ -120,22 +128,22 @@ fn cmd_analyze() {
             fmt_duration(t0.elapsed().as_secs_f64()),
         ]);
     }
-    println!("algo={} broken_routes={}", algo.name(), an.broken_routes());
+    println!("algo={algo} broken_routes={}", an.broken_routes());
     print!("{}", tab.render());
 }
 
 fn cmd_degrade() {
     let p = common_flags(Args::new("dmodc-fm degrade", "one degradation throw"))
-        .flag("algo", "dmodc", "routing engine")
+        .flag("algo", "dmodc", &algo_help())
         .flag("kind", "switches", "equipment kind (switches|links)")
         .flag("rp-samples", "100", "random permutations for RP")
         .parse_skip(1);
     let t = build_topo(&p);
-    let algo = Algo::parse(p.get("algo")).unwrap();
+    let algo: Algo = p.get_parsed("algo");
     let kind = Equipment::parse(p.get("kind")).unwrap();
     let mut rng = Rng::new(p.get_u64("seed"));
     let (amount, dt) = degrade::log_uniform_throw(&t, &mut rng, kind);
-    let lft = route_unchecked(algo, &dt);
+    let lft = registry::create(algo).route_once(&dt);
     let valid = validity::check(&dt, &lft).is_ok();
     let an = CongestionAnalyzer::new(&dt, &lft);
     println!(
@@ -149,7 +157,7 @@ fn cmd_degrade() {
 
 fn cmd_fabric() {
     let p = common_flags(Args::new("dmodc-fm fabric", "fault-event storm"))
-        .flag("algo", "dmodc", "routing engine")
+        .flag("algo", "dmodc", &algo_help())
         .flag("events", "25", "number of fault/recovery events")
         .flag("islet-every", "10", "islet reboot every k-th event (0 = never)")
         .parse_skip(1);
@@ -165,7 +173,7 @@ fn cmd_fabric() {
     let mut mgr = FabricManager::new(
         t,
         ManagerConfig {
-            algo: Algo::parse(p.get("algo")).unwrap(),
+            algo: p.get_parsed("algo"),
             validate: true,
         },
     );

@@ -136,9 +136,9 @@ impl Prep {
             // the original stable sort).
             scratch.order.clear();
             scratch.order.extend(0..ng as u32);
-            scratch
-                .order
-                .sort_unstable_by_key(|&g| topo.switches[scratch.remotes[g as usize] as usize].uuid);
+            scratch.order.sort_unstable_by_key(|&g| {
+                topo.switches[scratch.remotes[g as usize] as usize].uuid
+            });
             let mut upg = 0u32;
             for &g in &scratch.order {
                 let r = scratch.remotes[g as usize];
@@ -393,7 +393,7 @@ pub fn costs_into(topo: &Topology, prep: &Prep, reduction: DividerReduction, out
                             }
                             let key =
                                 (topo.switches[g.remote as usize].level, g.remote);
-                            if first.map_or(true, |f| key < f) {
+                            if first.is_none_or(|f| key < f) {
                                 first = Some(key);
                                 let s = g.remote as usize;
                                 pi = unsafe { *divider.get(s) }
@@ -649,9 +649,10 @@ mod tests {
         let t = PgftParams::small().build();
         let prep = Prep::new(&t);
         let c = costs(&t, &prep, DividerReduction::Max);
+        let nl = prep.leaves.len();
         for s in 0..t.switches.len() {
-            for li in 0..prep.leaves.len() {
-                assert!(c.cost[s * prep.leaves.len() + li] <= c.down_cost[s * prep.leaves.len() + li]);
+            for li in 0..nl {
+                assert!(c.cost[s * nl + li] <= c.down_cost[s * nl + li]);
             }
         }
     }

@@ -26,7 +26,8 @@
 //! equivalence suite.
 
 use super::common::{self, Costs, DividerReduction, Prep, INF};
-use super::Lft;
+use super::engine::{Capabilities, RoutingEngine};
+use super::{Lft, RerouteWorkspace};
 use crate::topology::{NodeId, PortTarget, Topology};
 use crate::util::par::parallel_for_rows;
 use std::cell::RefCell;
@@ -387,6 +388,54 @@ pub fn route_reference(topo: &Topology, opts: &Options) -> Lft {
         }
     }
     lft
+}
+
+/// The stateful Dmodc [`RoutingEngine`]: the whole pipeline
+/// (prep → Algorithm 1 → Algorithm 2 → route fill) out of a persistent
+/// [`RerouteWorkspace`], allocation-free in steady state.
+pub struct Engine {
+    ws: RerouteWorkspace,
+}
+
+impl Engine {
+    /// Engine with non-default knobs (divider reduction / NID order).
+    pub fn new(opts: Options) -> Self {
+        Self {
+            ws: RerouteWorkspace::new(opts),
+        }
+    }
+}
+
+impl Default for Engine {
+    fn default() -> Self {
+        Self::new(Options::default())
+    }
+}
+
+impl RoutingEngine for Engine {
+    fn name(&self) -> &'static str {
+        "dmodc"
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        Capabilities {
+            alternative_ports: true,
+            deterministic_history_free: true,
+            reuses_costs_for_validity: true,
+        }
+    }
+
+    fn route_into(&mut self, topo: &Topology, out: &mut Lft) {
+        self.ws.reroute_into(topo, out);
+    }
+
+    fn validate(&self, topo: &Topology, lft: &Lft) -> Result<(), String> {
+        self.ws.validate(topo, lft)
+    }
+
+    fn alternatives_into(&self, topo: &Topology, s: u32, d: NodeId, out: &mut Vec<u16>) {
+        self.ws.alternatives_into(topo, s, d, out);
+    }
 }
 
 #[cfg(test)]

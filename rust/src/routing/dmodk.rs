@@ -11,27 +11,74 @@
 //! cost-based group set like Dmodc — the difference is purely the NID
 //! assignment and static dividers).
 
-use super::common::{self, DividerReduction, Prep};
-use super::dmodc::{Options, Router};
-use super::Lft;
-use crate::topology::Topology;
+use super::common::{self, Costs, DividerReduction, Prep, PrepScratch};
+use super::engine::{Capabilities, RoutingEngine};
+use super::{dmodc, validity, Lft};
+use crate::topology::{NodeId, Topology};
+
+/// Persistent buffers for repeated Dmodk reroutes: CSR prep, Algorithm-1
+/// products, and the construction-order NID array.
+#[derive(Default)]
+pub struct Workspace {
+    prep: Prep,
+    prep_scratch: PrepScratch,
+    costs: Costs,
+    nids: Vec<u64>,
+}
 
 /// Route with construction-order NIDs and Algorithm-1 dividers (which on an
-/// intact PGFT equal the static `Π w` products).
-pub fn route(topo: &Topology) -> Lft {
-    let opts = Options::default();
-    let prep = Prep::new(topo);
-    let costs = common::costs(topo, &prep, DividerReduction::Max);
+/// intact PGFT equal the static `Π w` products), into reused buffers.
+pub fn route_into(topo: &Topology, ws: &mut Workspace, out: &mut Lft) {
+    Prep::build_into(topo, &mut ws.prep, &mut ws.prep_scratch);
+    common::costs_into(topo, &ws.prep, DividerReduction::Max, &mut ws.costs);
     // Construction order: node ids are already topologically contiguous
     // (the PGFT builder attaches nodes in digit order).
-    let nids = (0..topo.nodes.len() as u64).collect();
-    let router = Router {
-        prep,
-        costs,
-        nids,
-        opts,
-    };
-    router.lft(topo)
+    ws.nids.clear();
+    ws.nids.extend(0..topo.nodes.len() as u64);
+    out.reset(topo.switches.len(), topo.nodes.len());
+    dmodc::fill_rows(topo, &ws.prep, &ws.costs, &ws.nids, out);
+}
+
+/// One-shot wrapper over [`route_into`] with a fresh [`Workspace`].
+pub fn route(topo: &Topology) -> Lft {
+    let mut ws = Workspace::default();
+    let mut out = Lft::default();
+    route_into(topo, &mut ws, &mut out);
+    out
+}
+
+/// The stateful Dmodk [`RoutingEngine`]. Shares Dmodc's cost machinery,
+/// so it also offers equation-(2) alternative ports and a cost-reusing
+/// validity pass.
+#[derive(Default)]
+pub struct Engine {
+    ws: Workspace,
+}
+
+impl RoutingEngine for Engine {
+    fn name(&self) -> &'static str {
+        "dmodk"
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        Capabilities {
+            alternative_ports: true,
+            deterministic_history_free: true,
+            reuses_costs_for_validity: true,
+        }
+    }
+
+    fn route_into(&mut self, topo: &Topology, out: &mut Lft) {
+        route_into(topo, &mut self.ws, out);
+    }
+
+    fn validate(&self, topo: &Topology, lft: &Lft) -> Result<(), String> {
+        validity::check_with(topo, lft, &self.ws.prep, &self.ws.costs)
+    }
+
+    fn alternatives_into(&self, topo: &Topology, s: u32, d: NodeId, out: &mut Vec<u16>) {
+        dmodc::alternatives_into(topo, &self.ws.prep, &self.ws.costs, s, d, out);
+    }
 }
 
 #[cfg(test)]
@@ -60,4 +107,25 @@ mod tests {
         let ac = CongestionAnalyzer::new(&t, &c).all_to_all();
         assert_eq!(ak, ac, "dmodk and dmodc A2A risk must match on intact PGFT");
     }
+
+    #[test]
+    fn validate_before_first_route_is_not_vacuous() {
+        // A cost-reusing engine that has never routed has empty cached
+        // preprocessing; validate must fall back to the from-scratch pass
+        // instead of vacuously passing everything.
+        use crate::routing::NO_ROUTE;
+        let t = PgftParams::fig1().build();
+        let mut lft = route(&t);
+        let eng = Engine::default(); // never routed
+        assert!(eng.validate(&t, &lft).is_ok());
+        lft.set(0, 5, NO_ROUTE);
+        assert!(
+            eng.validate(&t, &lft).is_err(),
+            "stale-prep validate must not report a broken table as valid"
+        );
+    }
+
+    // Engine-vs-free-function bit-identity across workspace reuse is
+    // covered for all engines by tests/equivalence.rs
+    // (engines_bit_identical_to_free_functions_across_reuse).
 }

@@ -1,0 +1,117 @@
+//! The [`RoutingEngine`] trait: one stateful object per algorithm, owning
+//! its persistent scratch so steady-state reroutes allocate nothing.
+//!
+//! The paper's evaluation methodology runs six engines (Dmodc, Dmodk,
+//! Ftree, UPDN, MinHop, SSSP) through one identical
+//! reroute → validate → analyze pipeline. This trait is that pipeline's
+//! contract (see DESIGN.md §"RoutingEngine contract"):
+//!
+//! * [`RoutingEngine::route_into`] — recompute the full LFT for `topo`
+//!   into a caller buffer, reusing the engine's workspace (BFS queues,
+//!   distance/load arrays, CSR prep, cost buffers, …). The output must be
+//!   **bit-identical** to a one-shot run on a fresh engine: workspaces
+//!   carry capacity, never state (asserted by `tests/equivalence.rs`).
+//! * [`RoutingEngine::validate`] — the paper's validity pass. Engines
+//!   whose pipeline already produced the up*/down* costs
+//!   ([`Capabilities::reuses_costs_for_validity`]) reuse them instead of
+//!   rebuilding `Prep` + Algorithm 1, which roughly halves validated
+//!   reaction latency. Only call it with the `topo`/`lft` of the most
+//!   recent [`RoutingEngine::route_into`].
+//! * [`RoutingEngine::alternatives_into`] — equation-(2) alternative
+//!   output ports for fast local mitigation, offered by engines with
+//!   [`Capabilities::alternative_ports`].
+//!
+//! Engines are constructed by name or [`Algo`](super::Algo) through
+//! [`registry`](super::registry); `route`/`route_unchecked` in
+//! [`routing`](super) remain one-shot convenience wrappers.
+
+use super::{validity, Lft};
+use crate::topology::{NodeId, Topology};
+
+/// What an engine can do beyond plain rerouting. Drives the fabric
+/// manager (fast-patch gating) and capability-driven tests instead of
+/// `algo == Algo::Dmodc` special cases.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Capabilities {
+    /// The engine exposes equation-(2)-style *alternative output ports*
+    /// for its last-routed topology, enabling
+    /// `FabricManager::fast_patch` local mitigation.
+    pub alternative_ports: bool,
+    /// Deterministic and history-free: rerouting the same topology always
+    /// yields bit-identical tables, so full recovery restores the exact
+    /// pre-fault LFTs (the property the paper contrasts with Ftrnd_diff).
+    pub deterministic_history_free: bool,
+    /// [`RoutingEngine::validate`] reuses costs computed by the last
+    /// [`RoutingEngine::route_into`] instead of rebuilding preprocessing.
+    pub reuses_costs_for_validity: bool,
+}
+
+/// A stateful routing engine over (possibly degraded) fat-tree
+/// topologies.
+///
+/// Implementations own every intermediate buffer of their pipeline; after
+/// warm-up, [`RoutingEngine::route_into`] performs zero heap allocation
+/// (the counting-allocator tests in `tests/equivalence.rs` enforce this
+/// for all in-tree engines). `Send` so a `FabricManager` holding a boxed
+/// engine can run on its event-loop thread.
+pub trait RoutingEngine: Send {
+    /// Stable engine name (the registry key, e.g. `"dmodc"`).
+    fn name(&self) -> &'static str;
+
+    /// What this engine supports beyond plain rerouting.
+    fn capabilities(&self) -> Capabilities;
+
+    /// Recompute the full LFT for `topo` into `out` (reshaped in place),
+    /// reusing the engine's workspace buffers.
+    fn route_into(&mut self, topo: &Topology, out: &mut Lft);
+
+    /// The paper's validity pass for the tables of the most recent
+    /// [`RoutingEngine::route_into`] call. The default rebuilds
+    /// preprocessing from scratch; cost-reusing engines override it.
+    fn validate(&self, topo: &Topology, lft: &Lft) -> Result<(), String> {
+        validity::check(topo, lft)
+    }
+
+    /// Equation-(2) alternative output ports `P_{s,d}` against the
+    /// last-routed topology, into a caller buffer. Engines without
+    /// [`Capabilities::alternative_ports`] leave `out` empty.
+    fn alternatives_into(&self, _topo: &Topology, _s: u32, _d: NodeId, out: &mut Vec<u16>) {
+        out.clear();
+    }
+
+    /// One-shot convenience: route `topo` into a fresh table.
+    fn route_once(&mut self, topo: &Topology) -> Lft {
+        let mut out = Lft::default();
+        self.route_into(topo, &mut out);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::routing::{registry, Algo};
+    use crate::topology::pgft::PgftParams;
+
+    #[test]
+    fn default_alternatives_are_empty() {
+        // Engines without the capability must yield no candidates (the
+        // manager treats that as "fall back to a full reroute").
+        let t = PgftParams::fig1().build();
+        let mut eng = registry::create(Algo::MinHop);
+        let _ = eng.route_once(&t);
+        let mut alts = vec![7u16; 3];
+        eng.alternatives_into(&t, 0, 1, &mut alts);
+        assert!(alts.is_empty());
+    }
+
+    #[test]
+    fn route_once_matches_route_into() {
+        let t = PgftParams::fig1().build();
+        let mut eng = registry::create(Algo::Dmodc);
+        let once = eng.route_once(&t);
+        let mut again = Lft::default();
+        eng.route_into(&t, &mut again);
+        assert_eq!(once.raw(), again.raw());
+    }
+}

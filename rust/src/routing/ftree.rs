@@ -10,43 +10,83 @@
 //! by the wave (non-ancestors under degradation) then route *up* toward a
 //! routed up-neighbor, balanced by separate up-port counters.
 
-use super::common::Prep;
+use super::common::{Prep, PrepScratch};
+use super::engine::{Capabilities, RoutingEngine};
 use super::{Lft, NO_ROUTE};
 use crate::topology::{SwitchId, Topology};
 
-pub fn route(topo: &Topology) -> Lft {
-    let prep = Prep::new(topo);
+/// Persistent buffers for repeated Ftree reroutes: CSR prep, the two
+/// port-load counter arrays, UUID-ordered leaf/level index lists, and the
+/// per-destination wave marker.
+#[derive(Default)]
+pub struct Workspace {
+    prep: Prep,
+    prep_scratch: PrepScratch,
+    down_load: Vec<u32>,
+    up_load: Vec<u32>,
+    /// Leaf switches, UUID-sorted (destination order).
+    leaves: Vec<SwitchId>,
+    /// Per level: switches UUID-sorted. Only the first `num_levels`
+    /// entries are live for the current topology; the list never shrinks
+    /// so inner buffers survive shape changes.
+    levels: Vec<Vec<SwitchId>>,
+    routed: Vec<bool>,
+}
+
+/// Ftree into reused buffers (allocation-free in steady state).
+pub fn route_into(topo: &Topology, ws: &mut Workspace, out: &mut Lft) {
+    Prep::build_into(topo, &mut ws.prep, &mut ws.prep_scratch);
+    let Workspace {
+        prep,
+        down_load,
+        up_load,
+        leaves,
+        levels,
+        routed,
+        ..
+    } = ws;
     let ns = topo.switches.len();
-    let mut lft = Lft::new(ns, topo.nodes.len());
-    let mut down_load = vec![0u32; topo.num_ports()];
-    let mut up_load = vec![0u32; topo.num_ports()];
+    out.reset(ns, topo.nodes.len());
+    down_load.clear();
+    down_load.resize(topo.num_ports(), 0);
+    up_load.clear();
+    up_load.resize(topo.num_ports(), 0);
 
-    // Destination order: leaves by UUID, nodes in port-rank order.
-    let mut leaves = prep.leaves.clone();
-    leaves.sort_by_key(|&l| topo.switches[l as usize].uuid);
+    // Destination order: leaves by UUID, nodes in port-rank order. UUIDs
+    // are unique, so the unstable sorts below are deterministic.
+    leaves.clear();
+    leaves.extend_from_slice(&prep.leaves);
+    leaves.sort_unstable_by_key(|&l| topo.switches[l as usize].uuid);
 
-    // Switches per level (descending for the up-routing pass).
-    let max_level = topo.num_levels;
-    let mut by_level: Vec<Vec<SwitchId>> = vec![Vec::new(); max_level as usize];
+    // Switches per level (descending for the up-routing pass), stable
+    // UUID order inside each level (OpenSM iterates by GUID).
+    let max_level = topo.num_levels as usize;
+    if levels.len() < max_level {
+        levels.resize_with(max_level, Vec::new);
+    }
+    for lvl in levels.iter_mut() {
+        lvl.clear();
+    }
     for s in 0..ns as SwitchId {
-        by_level[topo.switches[s as usize].level as usize].push(s);
+        levels[topo.switches[s as usize].level as usize].push(s);
     }
-    // Stable UUID order inside each level (OpenSM iterates by GUID).
-    for lvl in &mut by_level {
-        lvl.sort_by_key(|&s| topo.switches[s as usize].uuid);
+    for lvl in levels[..max_level].iter_mut() {
+        lvl.sort_unstable_by_key(|&s| topo.switches[s as usize].uuid);
     }
 
-    let mut routed = vec![false; ns];
-    for &leaf in &leaves {
-        for d in topo.nodes_of_leaf(leaf) {
+    routed.clear();
+    routed.resize(ns, false);
+    for &leaf in leaves.iter() {
+        let li = prep.leaf_index[leaf as usize];
+        for &d in prep.nodes_of_leaf_idx(li) {
             routed.fill(false);
             routed[leaf as usize] = true;
-            lft.set(leaf, d, topo.nodes[d as usize].leaf_port);
+            out.set(leaf, d, topo.nodes[d as usize].leaf_port);
 
             // Wave upward: level k switches route down toward any routed
             // lower switch.
-            for k in 1..max_level as usize {
-                for &s in &by_level[k] {
+            for k in 1..max_level {
+                for &s in &levels[k] {
                     let su = s as usize;
                     let mut best: Option<(u32, usize, u16)> = None;
                     for (gi, g) in prep.groups(su).enumerate() {
@@ -56,13 +96,13 @@ pub fn route(topo: &Topology) -> Lft {
                         for &p in g.ports {
                             let pid = topo.port_id(s, p) as usize;
                             let key = (down_load[pid], gi, p);
-                            if best.map_or(true, |b| key < b) {
+                            if best.is_none_or(|b| key < b) {
                                 best = Some(key);
                             }
                         }
                     }
                     if let Some((_, _, port)) = best {
-                        lft.set(s, d, port);
+                        out.set(s, d, port);
                         down_load[topo.port_id(s, port) as usize] += 1;
                         routed[su] = true;
                     }
@@ -70,8 +110,8 @@ pub fn route(topo: &Topology) -> Lft {
             }
             // Up-routing pass for non-ancestors, upper levels first so a
             // lower switch can chain through an already-up-routed one.
-            for k in (0..max_level as usize - 1).rev() {
-                for &s in &by_level[k] {
+            for k in (0..max_level - 1).rev() {
+                for &s in &levels[k] {
                     let su = s as usize;
                     if routed[su] {
                         continue;
@@ -84,13 +124,13 @@ pub fn route(topo: &Topology) -> Lft {
                         for &p in g.ports {
                             let pid = topo.port_id(s, p) as usize;
                             let key = (up_load[pid], gi, p);
-                            if best.map_or(true, |b| key < b) {
+                            if best.is_none_or(|b| key < b) {
                                 best = Some(key);
                             }
                         }
                     }
                     if let Some((_, _, port)) = best {
-                        lft.set(s, d, port);
+                        out.set(s, d, port);
                         up_load[topo.port_id(s, port) as usize] += 1;
                         routed[su] = true;
                     }
@@ -98,8 +138,40 @@ pub fn route(topo: &Topology) -> Lft {
             }
         }
     }
-    let _ = NO_ROUTE; // unrouted entries remain NO_ROUTE by construction
-    lft
+    // Unrouted entries remain NO_ROUTE by construction of `Lft::reset`.
+    let _ = NO_ROUTE;
+}
+
+/// One-shot wrapper over [`route_into`] with a fresh [`Workspace`].
+pub fn route(topo: &Topology) -> Lft {
+    let mut ws = Workspace::default();
+    let mut out = Lft::default();
+    route_into(topo, &mut ws, &mut out);
+    out
+}
+
+/// The stateful Ftree [`RoutingEngine`]. Port-load counters are reset per
+/// reroute, so the engine stays deterministic and history-free.
+#[derive(Default)]
+pub struct Engine {
+    ws: Workspace,
+}
+
+impl RoutingEngine for Engine {
+    fn name(&self) -> &'static str {
+        "ftree"
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        Capabilities {
+            deterministic_history_free: true,
+            ..Capabilities::default()
+        }
+    }
+
+    fn route_into(&mut self, topo: &Topology, out: &mut Lft) {
+        route_into(topo, &mut self.ws, out);
+    }
 }
 
 #[cfg(test)]
@@ -153,4 +225,8 @@ mod tests {
             assert_eq!(validity::stats(&dt, &lft).downup_turns, 0);
         }
     }
+
+    // Engine-vs-free-function bit-identity across workspace reuse is
+    // covered for all engines by tests/equivalence.rs
+    // (engines_bit_identical_to_free_functions_across_reuse).
 }

@@ -8,27 +8,52 @@
 //! deadlock-free without extra virtual lanes, which the paper's analysis
 //! deliberately ignores).
 
-use super::common::Prep;
+use super::common::{Prep, PrepScratch};
+use super::engine::{Capabilities, RoutingEngine};
 use super::{Lft, NO_ROUTE};
 use crate::topology::Topology;
 use std::collections::VecDeque;
 
-pub fn route(topo: &Topology) -> Lft {
-    let prep = Prep::new(topo);
-    let ns = topo.switches.len();
-    let mut lft = Lft::new(ns, topo.nodes.len());
-    let mut load = vec![0u32; topo.num_ports()];
+/// Persistent buffers for repeated MinHop reroutes: CSR prep, the global
+/// port-load counters, and the per-destination BFS state.
+#[derive(Default)]
+pub struct Workspace {
+    prep: Prep,
+    prep_scratch: PrepScratch,
+    load: Vec<u32>,
+    dist: Vec<u32>,
+    queue: VecDeque<u32>,
+    order: Vec<u32>,
+}
 
-    let mut dist = vec![u32::MAX; ns];
+/// MinHop into reused buffers (allocation-free in steady state).
+pub fn route_into(topo: &Topology, ws: &mut Workspace, out: &mut Lft) {
+    Prep::build_into(topo, &mut ws.prep, &mut ws.prep_scratch);
+    let Workspace {
+        prep,
+        load,
+        dist,
+        queue,
+        order,
+        ..
+    } = ws;
+    let ns = topo.switches.len();
+    out.reset(ns, topo.nodes.len());
+    load.clear();
+    load.resize(topo.num_ports(), 0);
+    dist.clear();
+    dist.resize(ns, u32::MAX);
+
     for d in 0..topo.nodes.len() as u32 {
         let node = topo.nodes[d as usize];
         let leaf = node.leaf;
         dist.fill(u32::MAX);
         dist[leaf as usize] = 0;
-        lft.set(leaf, d, node.leaf_port);
-        let mut queue = VecDeque::new();
+        out.set(leaf, d, node.leaf_port);
+        queue.clear();
         queue.push_back(leaf);
-        let mut order: Vec<u32> = vec![leaf];
+        order.clear();
+        order.push(leaf);
         while let Some(s) = queue.pop_front() {
             for g in prep.groups(s as usize) {
                 if dist[g.remote as usize] == u32::MAX {
@@ -49,20 +74,51 @@ pub fn route(topo: &Topology) -> Lft {
                 for &p in g.ports {
                     let pid = topo.port_id(s, p) as usize;
                     let key = (load[pid], gi, p);
-                    if best.map_or(true, |b| key < b) {
+                    if best.is_none_or(|b| key < b) {
                         best = Some(key);
                     }
                 }
             }
             if let Some((_, _, port)) = best {
-                lft.set(s, d, port);
+                out.set(s, d, port);
                 load[topo.port_id(s, port) as usize] += 1;
             } else {
-                lft.set(s, d, NO_ROUTE);
+                out.set(s, d, NO_ROUTE);
             }
         }
     }
-    lft
+}
+
+/// One-shot wrapper over [`route_into`] with a fresh [`Workspace`].
+pub fn route(topo: &Topology) -> Lft {
+    let mut ws = Workspace::default();
+    let mut out = Lft::default();
+    route_into(topo, &mut ws, &mut out);
+    out
+}
+
+/// The stateful MinHop [`RoutingEngine`]. Load counters are reset per
+/// reroute, so the engine stays deterministic and history-free.
+#[derive(Default)]
+pub struct Engine {
+    ws: Workspace,
+}
+
+impl RoutingEngine for Engine {
+    fn name(&self) -> &'static str {
+        "minhop"
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        Capabilities {
+            deterministic_history_free: true,
+            ..Capabilities::default()
+        }
+    }
+
+    fn route_into(&mut self, topo: &Topology, out: &mut Lft) {
+        route_into(topo, &mut self.ws, out);
+    }
 }
 
 #[cfg(test)]
@@ -115,4 +171,8 @@ mod tests {
             }
         }
     }
+
+    // Engine-vs-free-function bit-identity across workspace reuse is
+    // covered for all engines by tests/equivalence.rs
+    // (engines_bit_identical_to_free_functions_across_reuse).
 }

@@ -2,6 +2,14 @@
 //!
 //! [`Lft`] is the linear forwarding table a centralized fabric manager
 //! uploads to every switch: `output port = lft[(switch, destination node)]`.
+//! Every algorithm is a stateful [`RoutingEngine`]: an object owning its
+//! persistent workspace (CSR prep, BFS queues, distance/load arrays, cost
+//! buffers) whose [`RoutingEngine::route_into`] recomputes the full LFT
+//! with **zero heap allocation** in steady state, and whose
+//! [`RoutingEngine::validate`] reuses just-computed costs where the
+//! pipeline has them (see DESIGN.md). Engines are constructed through
+//! [`registry`] by [`Algo`] or by name; [`route`]/[`route_unchecked`]
+//! remain one-shot convenience wrappers over fresh engine construction.
 //! All engines are deterministic and oblivious (no traffic knowledge):
 //!
 //! * [`dmodc`] — **the paper's contribution**: closed-form modulo routing
@@ -17,13 +25,16 @@ pub mod common;
 pub mod dmodc;
 pub mod dmodk;
 pub mod dump;
+pub mod engine;
 pub mod ftree;
 pub mod minhop;
+pub mod registry;
 pub mod sssp;
 pub mod updn;
 pub mod validity;
 pub mod workspace;
 
+pub use engine::{Capabilities, RoutingEngine};
 pub use workspace::RerouteWorkspace;
 
 use crate::topology::{NodeId, PortTarget, SwitchId, Topology};
@@ -158,35 +169,52 @@ impl Algo {
         }
     }
 
+    /// Delegating wrapper over the [`std::str::FromStr`] impl.
     pub fn parse(s: &str) -> Result<Algo, String> {
+        s.parse()
+    }
+}
+
+impl std::fmt::Display for Algo {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for Algo {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Algo, String> {
         Algo::ALL
             .iter()
             .copied()
             .find(|a| a.name() == s)
-            .ok_or_else(|| format!("unknown algorithm {s:?}"))
+            .ok_or_else(|| {
+                let known: Vec<&str> = Algo::ALL.iter().map(|a| a.name()).collect();
+                format!("unknown algorithm {s:?} (expected one of: {})", known.join(", "))
+            })
     }
 }
 
-/// Route `topo` with the chosen engine. Returns an error if any node pair
-/// is unroutable (the paper's validity condition); the partially-filled
-/// table is still available through [`route_unchecked`].
+/// Route `topo` with a freshly constructed engine. Returns an error if any
+/// node pair is unroutable (the paper's validity condition — checked via
+/// [`RoutingEngine::validate`], so cost-reusing engines skip the rebuild);
+/// the partially-filled table is still available through
+/// [`route_unchecked`].
 pub fn route(algo: Algo, topo: &Topology) -> Result<Lft, String> {
-    let lft = route_unchecked(algo, topo);
-    validity::check(topo, &lft)?;
+    let mut engine = registry::create(algo);
+    let mut lft = Lft::default();
+    engine.route_into(topo, &mut lft);
+    engine.validate(topo, &lft)?;
     Ok(lft)
 }
 
 /// Route without the validity pass (callers that expect degraded-to-invalid
-/// topologies and want the table anyway).
+/// topologies and want the table anyway). One-shot compatibility wrapper
+/// over [`registry::create`]; hold a [`RoutingEngine`] instead when
+/// rerouting repeatedly, so the workspace is reused.
 pub fn route_unchecked(algo: Algo, topo: &Topology) -> Lft {
-    match algo {
-        Algo::Dmodc => dmodc::route(topo, &dmodc::Options::default()),
-        Algo::Dmodk => dmodk::route(topo),
-        Algo::Ftree => ftree::route(topo),
-        Algo::Updn => updn::route(topo),
-        Algo::MinHop => minhop::route(topo),
-        Algo::Sssp => sssp::route(topo),
-    }
+    registry::create(algo).route_once(topo)
 }
 
 /// Trace the route of `(src, dst)` through `lft`, returning the sequence of
@@ -234,8 +262,12 @@ mod tests {
     fn algo_parse_roundtrip() {
         for a in Algo::ALL {
             assert_eq!(Algo::parse(a.name()).unwrap(), a);
+            // Display/FromStr roundtrip (parse/name delegate to them).
+            assert_eq!(a.to_string().parse::<Algo>().unwrap(), a);
+            assert_eq!(a.to_string(), a.name());
         }
         assert!(Algo::parse("nope").is_err());
+        assert!("Dmodc".parse::<Algo>().is_err(), "names are lowercase");
     }
 
     #[test]

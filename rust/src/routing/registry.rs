@@ -1,0 +1,133 @@
+//! Engine registry: construct boxed [`RoutingEngine`]s by [`Algo`] or by
+//! name.
+//!
+//! Mirrors `runtime/registry.rs` (the AOT-artifact registry): a static
+//! table of specs that the CLI, the benches, and `FabricManager` all
+//! resolve through, so adding a seventh engine (e.g. a Nue-style
+//! deadlock-free generic router, per PAPERS.md) is one module plus one
+//! [`EngineSpec`] row — no call-site changes anywhere.
+
+use super::engine::RoutingEngine;
+use super::{dmodc, dmodk, ftree, minhop, sssp, updn, Algo};
+
+/// One registered engine: identity plus a boxed constructor.
+pub struct EngineSpec {
+    pub algo: Algo,
+    /// Registry key; equals `algo.name()` for the in-tree engines.
+    pub name: &'static str,
+    /// One-line description for CLI help and docs.
+    pub description: &'static str,
+    build: fn() -> Box<dyn RoutingEngine>,
+}
+
+impl EngineSpec {
+    /// Construct a fresh engine (cold workspace).
+    pub fn build(&self) -> Box<dyn RoutingEngine> {
+        (self.build)()
+    }
+}
+
+fn build_dmodc() -> Box<dyn RoutingEngine> {
+    Box::new(dmodc::Engine::default())
+}
+fn build_dmodk() -> Box<dyn RoutingEngine> {
+    Box::new(dmodk::Engine::default())
+}
+fn build_ftree() -> Box<dyn RoutingEngine> {
+    Box::new(ftree::Engine::default())
+}
+fn build_updn() -> Box<dyn RoutingEngine> {
+    Box::new(updn::Engine::default())
+}
+fn build_minhop() -> Box<dyn RoutingEngine> {
+    Box::new(minhop::Engine::default())
+}
+fn build_sssp() -> Box<dyn RoutingEngine> {
+    Box::new(sssp::Engine::default())
+}
+
+static SPECS: [EngineSpec; 6] = [
+    EngineSpec {
+        algo: Algo::Dmodc,
+        name: "dmodc",
+        description: "closed-form fault-resilient PGFT routing (the paper)",
+        build: build_dmodc,
+    },
+    EngineSpec {
+        algo: Algo::Dmodk,
+        name: "dmodk",
+        description: "classical D-mod-k for complete PGFTs",
+        build: build_dmodk,
+    },
+    EngineSpec {
+        algo: Algo::Ftree,
+        name: "ftree",
+        description: "OpenSM fat-tree engine (per-destination balancing)",
+        build: build_ftree,
+    },
+    EngineSpec {
+        algo: Algo::Updn,
+        name: "updn",
+        description: "OpenSM UPDN: up*/down* restricted shortest paths",
+        build: build_updn,
+    },
+    EngineSpec {
+        algo: Algo::MinHop,
+        name: "minhop",
+        description: "OpenSM MinHop: unrestricted shortest paths",
+        build: build_minhop,
+    },
+    EngineSpec {
+        algo: Algo::Sssp,
+        name: "sssp",
+        description: "load-adaptive single-source shortest-path routing",
+        build: build_sssp,
+    },
+];
+
+/// All registered engines, in [`Algo::ALL`] order.
+pub fn specs() -> &'static [EngineSpec] {
+    &SPECS
+}
+
+/// Construct the engine for `algo`.
+pub fn create(algo: Algo) -> Box<dyn RoutingEngine> {
+    SPECS
+        .iter()
+        .find(|s| s.algo == algo)
+        .expect("every Algo variant is registered")
+        .build()
+}
+
+/// Construct an engine by registry name (CLI / config surface). Names are
+/// resolved through [`Algo`]'s `FromStr` — registry keys equal
+/// `Algo::name()` (asserted by the tests below), so there is exactly one
+/// name→engine resolver.
+pub fn create_by_name(name: &str) -> Result<Box<dyn RoutingEngine>, String> {
+    name.parse::<Algo>().map(create)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_covers_every_algo_in_order() {
+        assert_eq!(SPECS.len(), Algo::ALL.len());
+        for (spec, algo) in SPECS.iter().zip(Algo::ALL) {
+            assert_eq!(spec.algo, algo);
+            assert_eq!(spec.name, algo.name(), "registry key must match Algo::name");
+            assert_eq!(spec.build().name(), spec.name);
+        }
+    }
+
+    #[test]
+    fn create_by_name_roundtrip_and_error() {
+        for algo in Algo::ALL {
+            let eng = create_by_name(algo.name()).unwrap();
+            assert_eq!(eng.name(), algo.name());
+        }
+        let err = create_by_name("nope").unwrap_err();
+        assert!(err.contains("dmodc") && err.contains("sssp"), "{err}");
+    }
+}

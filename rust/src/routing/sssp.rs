@@ -10,37 +10,69 @@
 //! information is used at all, which is what makes it the most robust
 //! baseline under massive degradation (and among the slowest — Figure 3).
 
-use super::common::Prep;
+use super::common::{Prep, PrepScratch};
+use super::engine::{Capabilities, RoutingEngine};
 use super::{Lft, NO_ROUTE};
 use crate::topology::Topology;
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
-pub fn route(topo: &Topology) -> Lft {
-    let prep = Prep::new(topo);
+/// Persistent buffers for repeated SSSP reroutes: CSR prep, the per-port
+/// load accumulators, and the per-destination Dijkstra state.
+#[derive(Default)]
+pub struct Workspace {
+    prep: Prep,
+    prep_scratch: PrepScratch,
+    load: Vec<u64>,
+    nodes_on: Vec<u64>,
+    dist: Vec<u64>,
+    egress: Vec<u16>,
+    heap: BinaryHeap<Reverse<(u64, u32)>>,
+    order: Vec<u32>,
+    acc: Vec<u64>,
+}
+
+/// SSSP into reused buffers (allocation-free in steady state).
+pub fn route_into(topo: &Topology, ws: &mut Workspace, out: &mut Lft) {
+    Prep::build_into(topo, &mut ws.prep, &mut ws.prep_scratch);
+    let Workspace {
+        prep,
+        load,
+        nodes_on,
+        dist,
+        egress,
+        heap,
+        order,
+        acc,
+        ..
+    } = ws;
     let ns = topo.switches.len();
-    let mut lft = Lft::new(ns, topo.nodes.len());
-    let mut load = vec![0u64; topo.num_ports()];
+    out.reset(ns, topo.nodes.len());
+    load.clear();
+    load.resize(topo.num_ports(), 0);
 
     // Nodes attached per switch (route-usage accumulation weights).
-    let mut nodes_on = vec![0u64; ns];
+    nodes_on.clear();
+    nodes_on.resize(ns, 0);
     for n in &topo.nodes {
         nodes_on[n.leaf as usize] += 1;
     }
 
-    let mut dist = vec![u64::MAX; ns];
-    let mut egress = vec![NO_ROUTE; ns];
+    dist.clear();
+    dist.resize(ns, u64::MAX);
+    egress.clear();
+    egress.resize(ns, NO_ROUTE);
     for d in 0..topo.nodes.len() as u32 {
         let node = topo.nodes[d as usize];
         let leaf = node.leaf;
         dist.fill(u64::MAX);
         egress.fill(NO_ROUTE);
         dist[leaf as usize] = 0;
-        lft.set(leaf, d, node.leaf_port);
+        out.set(leaf, d, node.leaf_port);
 
-        let mut heap: BinaryHeap<Reverse<(u64, u32)>> = BinaryHeap::new();
+        heap.clear();
         heap.push(Reverse((0, leaf)));
-        let mut order: Vec<u32> = Vec::with_capacity(ns);
+        order.clear();
         while let Some(Reverse((dv, s))) = heap.pop() {
             if dv > dist[s as usize] {
                 continue;
@@ -69,17 +101,15 @@ pub fn route(topo: &Topology) -> Lft {
         }
         // Accumulate per-port usage: process switches farthest-first and
         // push source-node counts down the parent pointers.
-        let mut acc = vec![0u64; ns];
-        for (s, &cnt) in nodes_on.iter().enumerate() {
-            acc[s] = cnt;
-        }
+        acc.clear();
+        acc.extend_from_slice(nodes_on);
         acc[leaf as usize] = acc[leaf as usize].saturating_sub(1); // d itself
         for &s in order.iter().rev() {
             let su = s as usize;
             if s == leaf || egress[su] == NO_ROUTE {
                 continue;
             }
-            lft.set(s, d, egress[su]);
+            out.set(s, d, egress[su]);
             if acc[su] > 0 {
                 load[topo.port_id(s, egress[su]) as usize] += acc[su];
                 if let crate::topology::PortTarget::Switch { sw: next, .. } =
@@ -90,7 +120,38 @@ pub fn route(topo: &Topology) -> Lft {
             }
         }
     }
-    lft
+}
+
+/// One-shot wrapper over [`route_into`] with a fresh [`Workspace`].
+pub fn route(topo: &Topology) -> Lft {
+    let mut ws = Workspace::default();
+    let mut out = Lft::default();
+    route_into(topo, &mut ws, &mut out);
+    out
+}
+
+/// The stateful SSSP [`RoutingEngine`]. Load accumulators are reset per
+/// reroute, so the engine stays deterministic and history-free.
+#[derive(Default)]
+pub struct Engine {
+    ws: Workspace,
+}
+
+impl RoutingEngine for Engine {
+    fn name(&self) -> &'static str {
+        "sssp"
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        Capabilities {
+            deterministic_history_free: true,
+            ..Capabilities::default()
+        }
+    }
+
+    fn route_into(&mut self, topo: &Topology, out: &mut Lft) {
+        route_into(topo, &mut self.ws, out);
+    }
 }
 
 #[cfg(test)]
@@ -137,4 +198,8 @@ mod tests {
             remote.iter().map(|&d| lft.get(leaf, d)).collect();
         assert!(ports.len() > 1, "SSSP should spread uplinks");
     }
+
+    // Engine-vs-free-function bit-identity across workspace reuse is
+    // covered for all engines by tests/equivalence.rs
+    // (engines_bit_identical_to_free_functions_across_reuse).
 }

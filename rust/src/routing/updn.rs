@@ -10,20 +10,47 @@
 //! load, then remote UUID, then port index — mirroring OpenSM's
 //! counter-based balancing with GUID tie-breaks.
 
-use super::common::Prep;
+use super::common::{Prep, PrepScratch};
+use super::engine::{Capabilities, RoutingEngine};
 use super::{Lft, NO_ROUTE};
-use crate::topology::Topology;
+use crate::topology::{SwitchId, Topology};
 use std::collections::VecDeque;
 
-pub fn route(topo: &Topology) -> Lft {
-    let prep = Prep::new(topo);
-    let ns = topo.switches.len();
-    let mut lft = Lft::new(ns, topo.nodes.len());
-    let mut load = vec![0u32; topo.num_ports()];
+/// Persistent buffers for repeated UPDN reroutes: CSR prep, the global
+/// port-load counters, and the per-destination BFS state.
+#[derive(Default)]
+pub struct Workspace {
+    prep: Prep,
+    prep_scratch: PrepScratch,
+    load: Vec<u32>,
+    dist: Vec<u32>,
+    pure: Vec<bool>,
+    routed_port: Vec<u16>,
+    queue: VecDeque<SwitchId>,
+}
 
-    let mut dist = vec![u32::MAX; ns];
-    let mut pure = vec![false; ns];
-    let mut routed_port = vec![NO_ROUTE; ns];
+/// UPDN into reused buffers (allocation-free in steady state).
+pub fn route_into(topo: &Topology, ws: &mut Workspace, out: &mut Lft) {
+    Prep::build_into(topo, &mut ws.prep, &mut ws.prep_scratch);
+    let Workspace {
+        prep,
+        load,
+        dist,
+        pure,
+        routed_port,
+        queue,
+        ..
+    } = ws;
+    let ns = topo.switches.len();
+    out.reset(ns, topo.nodes.len());
+    load.clear();
+    load.resize(topo.num_ports(), 0);
+    dist.clear();
+    dist.resize(ns, u32::MAX);
+    pure.clear();
+    pure.resize(ns, false);
+    routed_port.clear();
+    routed_port.resize(ns, NO_ROUTE);
 
     for d in 0..topo.nodes.len() as u32 {
         let node = topo.nodes[d as usize];
@@ -35,7 +62,7 @@ pub fn route(topo: &Topology) -> Lft {
         dist[leaf as usize] = 0;
         pure[leaf as usize] = true;
         routed_port[leaf as usize] = node.leaf_port;
-        let mut queue = VecDeque::new();
+        queue.clear();
         queue.push_back(leaf);
 
         while let Some(s) = queue.pop_front() {
@@ -43,7 +70,7 @@ pub fn route(topo: &Topology) -> Lft {
             if s != leaf {
                 // Choose the egress port among usable settled neighbors at
                 // distance dist[s]-1.
-                let mut best: Option<(bool, u32, usize, u16)> = None; // (is_up, load, group idx, port)
+                let mut best: Option<(bool, u32, usize, u16)> = None; // (is_up, load, group, port)
                 for (gi, g) in prep.groups(su).enumerate() {
                     let r = g.remote as usize;
                     if dist[r] != dist[su] - 1 {
@@ -57,7 +84,7 @@ pub fn route(topo: &Topology) -> Lft {
                     for &p in g.ports {
                         let pid = topo.port_id(s, p) as usize;
                         let key = (g.up, load[pid], gi, p);
-                        if best.map_or(true, |b| key < b) {
+                        if best.is_none_or(|b| key < b) {
                             best = Some(key);
                         }
                     }
@@ -83,11 +110,42 @@ pub fn route(topo: &Topology) -> Lft {
         }
         for s in 0..ns as u32 {
             if routed_port[s as usize] != NO_ROUTE {
-                lft.set(s, d, routed_port[s as usize]);
+                out.set(s, d, routed_port[s as usize]);
             }
         }
     }
-    lft
+}
+
+/// One-shot wrapper over [`route_into`] with a fresh [`Workspace`].
+pub fn route(topo: &Topology) -> Lft {
+    let mut ws = Workspace::default();
+    let mut out = Lft::default();
+    route_into(topo, &mut ws, &mut out);
+    out
+}
+
+/// The stateful UPDN [`RoutingEngine`]. Load counters are reset per
+/// reroute, so the engine stays deterministic and history-free.
+#[derive(Default)]
+pub struct Engine {
+    ws: Workspace,
+}
+
+impl RoutingEngine for Engine {
+    fn name(&self) -> &'static str {
+        "updn"
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        Capabilities {
+            deterministic_history_free: true,
+            ..Capabilities::default()
+        }
+    }
+
+    fn route_into(&mut self, topo: &Topology, out: &mut Lft) {
+        route_into(topo, &mut self.ws, out);
+    }
 }
 
 #[cfg(test)]
@@ -135,4 +193,8 @@ mod tests {
         assert!(counts.len() >= 4, "should use all uplinks, got {counts:?}");
         assert!(counts.values().all(|&c| c <= 4), "imbalance: {counts:?}");
     }
+
+    // Engine-vs-free-function bit-identity across workspace reuse is
+    // covered for all engines by tests/equivalence.rs
+    // (engines_bit_identical_to_free_functions_across_reuse).
 }

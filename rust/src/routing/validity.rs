@@ -27,7 +27,26 @@ pub fn check(topo: &Topology, lft: &Lft) -> Result<(), String> {
 /// validated reaction latency. `costs` may come from either
 /// [`DividerReduction`]: the pass only reads cost finiteness, which both
 /// reductions share.
-pub fn check_with(topo: &Topology, lft: &Lft, prep: &Prep, costs: &common::Costs) -> Result<(), String> {
+pub fn check_with(
+    topo: &Topology,
+    lft: &Lft,
+    prep: &Prep,
+    costs: &common::Costs,
+) -> Result<(), String> {
+    // Guard against stale/absent preprocessing (e.g. a cost-reusing
+    // engine validated before its first route, whose empty Prep would
+    // make every check below vacuously pass): if the cached products
+    // don't structurally describe `topo`, fall back to the from-scratch
+    // pass instead of silently reporting Ok.
+    let leaf_count = topo.switches.iter().filter(|s| s.level == 0).count();
+    let describes_topo = prep.group_offsets.len() == topo.switches.len() + 1
+        && prep.leaf_nodes.len() == topo.nodes.len()
+        && prep.leaves.len() == leaf_count
+        && costs.num_leaves == prep.leaves.len()
+        && costs.cost.len() == topo.switches.len() * prep.leaves.len();
+    if !describes_topo {
+        return check(topo, lft);
+    }
     for (li, &l) in prep.leaves.iter().enumerate() {
         for lj in 0..prep.leaves.len() {
             if costs.cost(l, lj as u32) == INF {

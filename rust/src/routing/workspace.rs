@@ -15,6 +15,10 @@
 //! Produced LFTs are bit-identical to [`dmodc::route_reference`] — the
 //! equivalence suite checks intact and degraded topologies, every
 //! thread count, and repeated reuse (event → recovery → event).
+//!
+//! [`dmodc::Engine`] wraps this workspace behind the
+//! [`RoutingEngine`](super::RoutingEngine) trait; the baseline engines
+//! own analogous per-algorithm workspaces (see `routing/engine.rs`).
 
 use super::common::{self, Costs, Prep, PrepScratch};
 use super::dmodc::{self, NidOrder, NidScratch, Options};

@@ -155,7 +155,10 @@ mod tests {
         let s648 = build(648, 36).switches.len();
         let s649 = build(649, 36).switches.len();
         assert!(s649 > s648);
-        let counts: Vec<usize> = (600..700).step_by(10).map(|n| build(n, 36).switches.len()).collect();
+        let counts: Vec<usize> = (600..700)
+            .step_by(10)
+            .map(|n| build(n, 36).switches.len())
+            .collect();
         // Not monotonically increasing overall.
         assert!(counts.windows(2).any(|w| w[1] > w[0]));
     }

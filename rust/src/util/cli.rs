@@ -163,13 +163,30 @@ impl Parsed {
     pub fn get_usize(&self, name: &str) -> usize {
         self.get(name)
             .parse()
-            .unwrap_or_else(|_| panic!("flag --{name} expects an integer, got {:?}", self.get(name)))
+            .unwrap_or_else(|_| {
+                panic!("flag --{name} expects an integer, got {:?}", self.get(name))
+            })
     }
 
     pub fn get_u64(&self, name: &str) -> u64 {
         self.get(name)
             .parse()
-            .unwrap_or_else(|_| panic!("flag --{name} expects an integer, got {:?}", self.get(name)))
+            .unwrap_or_else(|_| {
+                panic!("flag --{name} expects an integer, got {:?}", self.get(name))
+            })
+    }
+
+    /// Parse a flag through its [`std::str::FromStr`] impl (e.g.
+    /// `p.get_parsed::<Algo>("algo")`), panicking with the parse error on
+    /// bad operator input — consistent with the `get_usize` family.
+    pub fn get_parsed<T>(&self, name: &str) -> T
+    where
+        T: std::str::FromStr,
+        T::Err: std::fmt::Display,
+    {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|e| panic!("flag --{name}: {e}"))
     }
 
     pub fn get_f64(&self, name: &str) -> f64 {
@@ -216,6 +233,16 @@ mod tests {
             .unwrap();
         assert_eq!(p.get("algo"), "ftree");
         assert_eq!(p.positionals(), &["run".to_string(), "extra".to_string()]);
+    }
+
+    #[test]
+    fn get_parsed_goes_through_fromstr() {
+        let p = Args::new("t", "test")
+            .flag("ratio", "0.5", "a ratio")
+            .parse_from(&toks(&["--ratio", "0.25"]))
+            .unwrap();
+        let ratio: f64 = p.get_parsed("ratio");
+        assert_eq!(ratio, 0.25);
     }
 
     #[test]

@@ -13,13 +13,20 @@
 //! through the workspace perform **zero heap allocation** in the routing
 //! pipeline, verified with a counting global allocator.
 //!
+//! The `RoutingEngine` redesign extends both contracts to every engine:
+//! each registry-constructed engine must (a) produce bit-identical LFTs
+//! to its one-shot free-function counterpart on intact and degraded
+//! PGFTs, *across workspace reuse* (stale state from a previous topology
+//! must never leak into the next reroute), and (b) reroute without heap
+//! allocation once warm.
+//!
 //! All tests serialize on one mutex: they sweep the global worker-count
 //! override and read global allocation counters.
 
 use dmodc::prelude::*;
 use dmodc::routing::common::{self, DividerReduction, Prep};
 use dmodc::routing::dmodc::{route_reference, Options, Router};
-use dmodc::routing::{validity, Lft, RerouteWorkspace};
+use dmodc::routing::{registry, validity, Lft, RerouteWorkspace};
 use dmodc::util::par;
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::cell::Cell;
@@ -185,7 +192,8 @@ fn workspace_reuse_event_recovery_event_stays_bit_identical() {
         for (i, dead) in steps.iter().enumerate() {
             ws.materialize(&base, dead, &HashSet::new(), &mut topo);
             ws.reroute_into(&topo, &mut out);
-            let want = route_reference(&degrade::apply(&base, dead, &HashSet::new()), &Options::default());
+            let degraded = degrade::apply(&base, dead, &HashSet::new());
+            let want = route_reference(&degraded, &Options::default());
             assert_eq!(out.raw(), want.raw(), "step {i} t={threads}");
         }
     }
@@ -207,6 +215,42 @@ fn manager_storm_matches_reference_per_event() {
         assert_eq!(lft.raw(), want.raw());
     }
     par::set_threads(None);
+}
+
+/// The pre-redesign free-function entry points, per engine.
+fn free_route(algo: Algo, topo: &Topology) -> Lft {
+    use dmodc::routing as r;
+    match algo {
+        Algo::Dmodc => r::dmodc::route(topo, &Options::default()),
+        Algo::Dmodk => r::dmodk::route(topo),
+        Algo::Ftree => r::ftree::route(topo),
+        Algo::Updn => r::updn::route(topo),
+        Algo::MinHop => r::minhop::route(topo),
+        Algo::Sssp => r::sssp::route(topo),
+    }
+}
+
+#[test]
+fn engines_bit_identical_to_free_functions_across_reuse() {
+    let _g = lock();
+    for algo in Algo::ALL {
+        // ONE engine per algorithm across every scenario: a reroute must
+        // never see residue from the previous topology's buffers.
+        let mut engine = registry::create(algo);
+        let mut out = Lft::default();
+        for (name, topo) in scenario_topologies() {
+            engine.route_into(&topo, &mut out);
+            let want = free_route(algo, &topo);
+            assert_eq!(out.raw(), want.raw(), "{algo} {name}");
+            // Engine-level validation must agree with the from-scratch
+            // pass (cost-reusing engines take the shortcut).
+            assert_eq!(
+                engine.validate(&topo, &out).is_ok(),
+                validity::check(&topo, &out).is_ok(),
+                "{algo} {name} validity"
+            );
+        }
+    }
 }
 
 /// One warmed-up steady-state cycle: materialize + full reroute for each
@@ -293,5 +337,48 @@ fn steady_state_reroute_is_allocation_free_multi_thread() {
     );
     let want = route_reference(&base, &Options::default());
     assert_eq!(out.raw(), want.raw());
+    par::set_threads(None);
+}
+
+#[test]
+fn steady_state_reroutes_allocation_free_for_every_engine() {
+    // The redesign's allocation contract: once warm, `route_into` does no
+    // heap allocation for ANY registered engine (DESIGN.md, contract §3)
+    // — the registry makes it cheap to enforce all six at once.
+    let _g = lock();
+    par::set_threads(Some(1));
+    let base = PgftParams::small().build();
+    let spines = degrade::removable_switches(&base);
+    // Alternate intact / degraded shapes so buffer shrink + regrow is
+    // part of the steady state being measured.
+    let scenarios: Vec<Topology> = vec![
+        base.clone(),
+        degrade::apply(&base, &[spines[0]].into_iter().collect(), &HashSet::new()),
+        degrade::apply(
+            &base,
+            &[spines[1], spines[3]].into_iter().collect(),
+            &HashSet::new(),
+        ),
+        base.clone(),
+    ];
+    for algo in Algo::ALL {
+        let mut engine = registry::create(algo);
+        let mut out = Lft::default();
+        // Warm up: two full cycles grow every workspace buffer (and any
+        // thread-local scratch) to its steady-state size.
+        for _ in 0..2 {
+            for t in &scenarios {
+                engine.route_into(t, &mut out);
+            }
+        }
+        let before = thread_allocs();
+        for t in &scenarios {
+            engine.route_into(t, &mut out);
+        }
+        let delta = thread_allocs() - before;
+        assert_eq!(delta, 0, "{algo}: steady-state route_into must not allocate");
+        // The measured cycle still produced correct tables.
+        assert_eq!(out.raw(), free_route(algo, &base).raw(), "{algo}");
+    }
     par::set_threads(None);
 }

@@ -23,7 +23,10 @@ fn storm_keeps_fabric_consistent() {
     // Final state must be internally consistent.
     let (topo, lft) = mgr.current();
     let st = validity::stats(topo, lft);
-    assert_eq!(st.routes + st.unreachable, topo.leaf_switches().len() * topo.nodes.len() - topo.nodes.len());
+    assert_eq!(
+        st.routes + st.unreachable,
+        topo.leaf_switches().len() * topo.nodes.len() - topo.nodes.len()
+    );
     assert_eq!(mgr.metrics.events, 60);
     assert_eq!(mgr.metrics.reroutes, 61); // +1 initial
 }
@@ -110,9 +113,11 @@ fn islet_reboot_storm_is_handled() {
 }
 
 #[test]
-fn manager_with_all_engines() {
-    // Any engine can back the manager; reroutes must complete and the
-    // store accounting must stay consistent.
+fn manager_fault_recovery_under_every_engine() {
+    // Any engine can back the manager; fault and recovery reroutes must
+    // validate, and — capability-driven, not hardcoded to Dmodc — the
+    // deterministic history-free engines must restore bit-identical
+    // tables after full recovery.
     let t = PgftParams::fig1().build();
     let victim = t
         .switches
@@ -120,7 +125,7 @@ fn manager_with_all_engines() {
         .find(|s| s.level == 2)
         .map(|s| s.uuid)
         .unwrap();
-    for algo in [Algo::Dmodc, Algo::Ftree, Algo::Updn, Algo::MinHop, Algo::Sssp] {
+    for algo in Algo::ALL {
         let mut mgr = FabricManager::new(
             t.clone(),
             ManagerConfig {
@@ -128,16 +133,82 @@ fn manager_with_all_engines() {
                 validate: true,
             },
         );
+        let caps = mgr.engine().capabilities();
+        let baseline = mgr.current().1.raw().to_vec();
+        let baseline_switches = mgr.current().0.switches.len();
         let r1 = mgr.apply(&events::Event {
             at_ms: 1,
             kind: events::EventKind::SwitchDown(victim),
         });
-        assert!(r1.valid, "{}", algo.name());
+        assert!(r1.valid, "{algo}: fig1 survives one top switch");
+        assert_eq!(r1.switches_alive, baseline_switches - 1, "{algo}");
+        assert!(r1.upload.switches_touched > 0, "{algo}");
         let r2 = mgr.apply(&events::Event {
             at_ms: 2,
             kind: events::EventKind::SwitchUp(victim),
         });
-        assert!(r2.valid, "{}", algo.name());
+        assert!(r2.valid, "{algo}");
+        assert_eq!(r2.switches_alive, baseline_switches, "{algo}");
+        if caps.deterministic_history_free {
+            assert_eq!(
+                mgr.current().1.raw(),
+                &baseline[..],
+                "{algo}: deterministic history-free engines must restore \
+                 the exact pre-fault tables after recovery"
+            );
+        }
+    }
+}
+
+#[test]
+fn fast_patch_gates_on_alternative_ports_capability() {
+    // Engines without equation-(2) alternatives must refuse to patch
+    // (caller falls back to a full reroute); engines with the capability
+    // — Dmodk shares Dmodc's cost machinery — must patch successfully.
+    let t = PgftParams::small().build();
+    let cable = events::cable_ids(&t)
+        .into_iter()
+        .find(|(c, _)| c.ordinal == 1)
+        .map(|(c, _)| c)
+        .expect("small() has parallel cable pairs");
+    for algo in Algo::ALL {
+        let mut mgr = FabricManager::new(
+            t.clone(),
+            ManagerConfig {
+                algo,
+                validate: true,
+            },
+        );
+        let caps = mgr.engine().capabilities();
+        let patch = mgr.fast_patch(&cable);
+        if !caps.alternative_ports {
+            assert!(patch.is_none(), "{algo} must refuse fast_patch");
+            continue;
+        }
+        let patch = patch.unwrap_or_else(|| panic!("{algo}: parallel link has alternatives"));
+        if algo == Algo::Dmodc {
+            // Dmodc provably routes through every parallel cable of an
+            // intact PGFT; other engines' per-cable usage may vary.
+            assert!(patch.entries_patched > 0, "{algo}");
+        }
+        let (topo, lft) = mgr.current();
+        assert!(validity::check(topo, lft).is_ok(), "{algo}");
+        // No route uses the dead cable anymore — from either endpoint
+        // (fast_patch rewrites both directions).
+        let (sw_a, port_a) = events::cable_ids(topo)
+            .into_iter()
+            .find(|(c, _)| *c == cable)
+            .unwrap()
+            .1;
+        let (sw_b, port_b) = match topo.switches[sw_a as usize].ports[port_a as usize] {
+            dmodc::topology::PortTarget::Switch { sw, rport } => (sw, rport),
+            _ => unreachable!("cable endpoints are switch links"),
+        };
+        for d in 0..lft.num_nodes() as u32 {
+            assert_ne!(lft.get(sw_a, d), port_a, "{algo}: dst {d} exits A-side");
+            assert_ne!(lft.get(sw_b, d), port_b, "{algo}: dst {d} exits B-side");
+        }
+        assert!(mgr.reroute_now().valid, "{algo}");
     }
 }
 
