@@ -57,7 +57,7 @@ fn main() {
         topo,
         ManagerConfig {
             algo,
-            validate: true,
+            ..Default::default()
         },
     );
     let manager_thread = std::thread::spawn(move || {

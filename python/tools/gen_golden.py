@@ -1,0 +1,354 @@
+#!/usr/bin/env python3
+"""Independent reference implementation of the Dmodc routing pipeline,
+used to generate the golden LFT snapshots under ``rust/tests/golden/``.
+
+This is a deliberate re-implementation of the *reference* (serial,
+literal-equations) pipeline from the Rust crate — ``fab_uuid``, PGFT
+construction, cable-removal degradation, port-group preprocessing,
+Algorithm 1 (``costs_serial``), Algorithm 2 (``topological_nids``),
+equations (1)-(4) (``route_reference``) and the ``routing::dump`` text
+format — so the snapshots cross-validate the two implementations: the
+Rust test ``tests/golden_lft.rs`` compares its dump byte-for-byte
+against files produced here.
+
+Usage:  python3 python/tools/gen_golden.py [output-dir]
+        (default output dir: rust/tests/golden)
+"""
+
+import os
+import sys
+
+MASK = (1 << 64) - 1
+INF = 0xFFFF
+NO_ROUTE = 0xFFFF
+
+
+def fab_uuid(cls, idx):
+    """Port of topology::fab_uuid (splitmix-style scramble, u64 wrap)."""
+    x = (cls * 0x9E3779B97F4A7C15) & MASK
+    x = (x + idx) & MASK
+    x = (x * 0xBF58476D1CE4E5B9) & MASK
+    x ^= x >> 31
+    x = (x * 0x94D049BB133111EB) & MASK
+    x ^= x >> 29
+    return x | 1
+
+
+class Topology:
+    def __init__(self):
+        self.uuid = []   # per switch
+        self.level = []  # per switch
+        self.ports = []  # per switch: list of ('S', sw, rport) | ('N', node)
+        self.nodes = []  # (uuid, leaf, leaf_port)
+
+    def add_switch(self, uuid, level):
+        self.uuid.append(uuid)
+        self.level.append(level)
+        self.ports.append([])
+        return len(self.uuid) - 1
+
+    def connect(self, a, b, parallel):
+        for _ in range(parallel):
+            pa = len(self.ports[a])
+            pb = len(self.ports[b])
+            self.ports[a].append(("S", b, pb))
+            self.ports[b].append(("S", a, pa))
+
+    def attach_node(self, leaf, uuid):
+        nid = len(self.nodes)
+        port = len(self.ports[leaf])
+        self.ports[leaf].append(("N", nid))
+        self.nodes.append((uuid, leaf, port))
+        return nid
+
+    @property
+    def num_switches(self):
+        return len(self.uuid)
+
+
+def elems_at(m, w, l):
+    n = 1
+    for i in range(len(m)):
+        n *= w[i] if i < l else m[i]
+    return n
+
+
+def digits(m, w, l, index):
+    out = []
+    for i in range(len(m)):
+        r = w[i] if i < l else m[i]
+        out.append(index % r)
+        index //= r
+    assert index == 0
+    return out
+
+
+def index_of(m, w, l, dg):
+    idx, stride = 0, 1
+    for i in range(len(m)):
+        r = w[i] if i < l else m[i]
+        assert dg[i] < r
+        idx += dg[i] * stride
+        stride *= r
+    return idx
+
+
+def build_pgft(m, w, p):
+    """Port of topology::pgft::PgftParams::build (Scrambled UUIDs)."""
+    h = len(m)
+    t = Topology()
+    ids = []  # ids[l-1][j] = switch id of j-th element at PGFT level l
+    for l in range(1, h + 1):
+        level_ids = []
+        for j in range(elems_at(m, w, l)):
+            level_ids.append(t.add_switch(fab_uuid(l, j), l - 1))
+        ids.append(level_ids)
+    for l in range(2, h + 1):
+        for j in range(elems_at(m, w, l)):
+            dg = digits(m, w, l, j)
+            saved = dg[l - 1]
+            for c in range(m[l - 1]):
+                dg[l - 1] = c
+                child = index_of(m, w, l - 1, dg)
+                t.connect(ids[l - 2][child], ids[l - 1][j], p[l - 1])
+            dg[l - 1] = saved
+    for j in range(elems_at(m, w, 1)):
+        dg = digits(m, w, 1, j)
+        for c in range(m[0]):
+            dg[0] = c
+            nidx = index_of(m, w, 0, dg)
+            t.attach_node(ids[0][j], fab_uuid(0xE0DE, nidx))
+        dg[0] = 0
+    return t
+
+
+def cables(t):
+    """Port of topology::degrade::cables (canonical endpoints)."""
+    out = []
+    for a in range(t.num_switches):
+        for pa, port in enumerate(t.ports[a]):
+            if port[0] == "S":
+                _, b, rport = port
+                if (a, pa) <= (b, rport):
+                    out.append((a, pa))
+    return out
+
+
+def apply_dead_cables(t, dead):
+    """Port of topology::degrade::apply with no dead switches."""
+    out = Topology()
+    for s in range(t.num_switches):
+        out.add_switch(t.uuid[s], t.level[s])
+    for a in range(t.num_switches):
+        for pa, port in enumerate(t.ports[a]):
+            if port[0] != "S":
+                continue
+            _, b, rport = port
+            if (b, rport) < (a, pa):
+                continue  # canonical end: count each cable once
+            if (a, pa) in dead:
+                continue
+            out.connect(a, b, 1)
+    for uuid, leaf, _port in t.nodes:
+        out.attach_node(leaf, uuid)
+    return out
+
+
+def prep(t):
+    """Port of routing::common::Prep (leaves, UUID-ordered groups)."""
+    ns = t.num_switches
+    leaves = [s for s in range(ns) if t.level[s] == 0]
+    leaf_index = {l: i for i, l in enumerate(leaves)}
+    groups = []  # per switch: list of (remote, up, [ports])
+    up_groups = []
+    for s in range(ns):
+        remotes, port_lists = [], []
+        for pi, port in enumerate(t.ports[s]):
+            if port[0] != "S":
+                continue
+            r = port[1]
+            if r in remotes:
+                port_lists[remotes.index(r)].append(pi)
+            else:
+                remotes.append(r)
+                port_lists.append([pi])
+        order = sorted(range(len(remotes)), key=lambda g: t.uuid[remotes[g]])
+        gs = []
+        upg = 0
+        for g in order:
+            r = remotes[g]
+            assert t.level[r] != t.level[s], "same-level link"
+            up = t.level[r] > t.level[s]
+            if up:
+                upg += 1
+            gs.append((r, up, port_lists[g]))
+        groups.append(gs)
+        up_groups.append(upg)
+    by_level_up = sorted(range(ns), key=lambda s: (t.level[s], s))
+    return leaves, leaf_index, groups, up_groups, by_level_up
+
+
+def costs_serial(t, leaves, groups, up_groups, by_level_up, reduction):
+    """Port of routing::common::costs_serial (push-based Algorithm 1)."""
+    ns = t.num_switches
+    nl = len(leaves)
+    cost = [[INF] * nl for _ in range(ns)]
+    divider = [1] * ns
+    divider_set = [False] * ns
+    for li, l in enumerate(leaves):
+        cost[l][li] = 0
+    # Upward sweep.
+    for s in by_level_up:
+        pi = divider[s] * max(up_groups[s], 1)
+        for r, up, _ports in groups[s]:
+            if not up:
+                continue
+            row_s, row_r = cost[s], cost[r]
+            for li in range(nl):
+                via = min(row_s[li] + 1, INF)
+                if via < row_r[li]:
+                    row_r[li] = via
+            if reduction == "max":
+                if pi > divider[r]:
+                    divider[r] = pi
+            else:  # firstpath
+                if not divider_set[r]:
+                    divider[r] = pi
+                    divider_set[r] = True
+    # Downward sweep.
+    for s in reversed(by_level_up):
+        for r, up, _ports in groups[s]:
+            if up:
+                continue
+            row_s, row_r = cost[s], cost[r]
+            for li in range(nl):
+                via = min(row_s[li] + 1, INF)
+                if via < row_r[li]:
+                    row_r[li] = via
+    return cost, divider
+
+
+def nodes_of_leaf(t, leaf):
+    return [port[1] for port in t.ports[leaf] if port[0] == "N"]
+
+
+def topological_nids(t, leaves, cost):
+    """Port of routing::dmodc::topological_nids (Algorithm 2)."""
+    nids = [0] * len(t.nodes)
+    x = sorted(range(len(leaves)), key=lambda li: t.uuid[leaves[li]])
+    t_ctr = 0
+    while x:
+        lsw = leaves[x[0]]
+        mu = min((cost[lsw][li] for li in x[1:]), default=INF)
+        rest = []
+        for li in x:
+            if cost[lsw][li] <= mu:
+                for n in nodes_of_leaf(t, leaves[li]):
+                    nids[n] = t_ctr
+                    t_ctr += 1
+            else:
+                rest.append(li)
+        x = rest
+    return nids
+
+
+def route_reference(t, reduction):
+    """Port of routing::dmodc::route_reference (literal eqs (1)-(4))."""
+    leaves, leaf_index, groups, up_groups, by_level_up = prep(t)
+    cost, divider = costs_serial(t, leaves, groups, up_groups, by_level_up, reduction)
+    nids = topological_nids(t, leaves, cost)
+    assert sorted(nids) == list(range(len(t.nodes))), "NIDs must be a permutation"
+    ns, nn = t.num_switches, len(t.nodes)
+    lft = [[NO_ROUTE] * nn for _ in range(ns)]
+    for s in range(ns):
+        for pi, port in enumerate(t.ports[s]):
+            if port[0] == "N":
+                lft[s][port[1]] = pi
+        for d, (_uuid, leaf, _lp) in enumerate(t.nodes):
+            if leaf == s:
+                continue
+            li = leaf_index[leaf]
+            if cost[s][li] == INF:
+                continue
+            here = cost[s][li]
+            c = [i for i, (r, _up, _ports) in enumerate(groups[s]) if cost[r][li] < here]
+            if not c:
+                continue
+            pi_div = max(divider[s], 1)
+            nc = len(c)
+            t_d = nids[d]
+            g_ports = groups[s][c[(t_d // pi_div) % nc]][2]
+            lft[s][d] = g_ports[(t_d // (pi_div * nc)) % len(g_ports)]
+    return lft
+
+
+def trace_delivers(t, lft, src_leaf, d):
+    """Follow the tables from a source leaf to node d (sanity check)."""
+    sw = src_leaf
+    max_hops = 4 * (max(t.level) + 1) + 4
+    for _ in range(max_hops + 1):
+        p = lft[sw][d]
+        if p == NO_ROUTE:
+            return False
+        port = t.ports[sw][p]
+        if port[0] == "N":
+            return port[1] == d
+        sw = port[1]
+    return False
+
+
+def dump(t, lft):
+    """Port of routing::dump::dump (the `# dmodc-lft v1` text format)."""
+    out = []
+    out.append("# dmodc-lft v1")
+    out.append(f"# switches {t.num_switches} nodes {len(t.nodes)}")
+    for s in range(t.num_switches):
+        out.append(
+            f"switch {s} uuid {t.uuid[s]:016x} level {t.level[s]} "
+            f"ports {len(t.ports[s])}"
+        )
+        for d in range(len(t.nodes)):
+            if lft[s][d] != NO_ROUTE:
+                out.append(f"{d} {lft[s][d]}")
+    return "\n".join(out) + "\n"
+
+
+def scenarios():
+    """The canonical snapshot scenarios (must mirror
+    rust/tests/golden_lft.rs): each shape intact, plus one degraded
+    throw removing BOTH parallel cables of leaf 0's first uplink group
+    — a whole-group kill changes that leaf's `up_groups`, which is
+    exactly where the Max and FirstPath divider reductions diverge, so
+    the snapshots pin both down (single-cable cuts leave the two
+    reductions byte-identical on these shapes)."""
+    fig1 = build_pgft([2, 2, 3], [1, 2, 2], [1, 2, 1])
+    small = build_pgft([4, 6, 3], [1, 2, 2], [1, 2, 1])
+    out = []
+    for name, base in [("fig1", fig1), ("small", small)]:
+        out.append((f"{name}_intact", base))
+        cbs = cables(base)
+        dead = {cbs[0], cbs[1]}
+        out.append((f"{name}_group0", apply_dead_cables(base, dead)))
+    return out
+
+
+def main():
+    root = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    outdir = sys.argv[1] if len(sys.argv) > 1 else os.path.join(root, "rust", "tests", "golden")
+    os.makedirs(outdir, exist_ok=True)
+    for name, topo in scenarios():
+        for rname in ("max", "firstpath"):
+            lft = route_reference(topo, rname)
+            if name.endswith("_intact"):
+                # Sanity: every (source leaf, node) flow delivers.
+                for leaf in (s for s in range(topo.num_switches) if topo.level[s] == 0):
+                    for d in range(len(topo.nodes)):
+                        assert trace_delivers(topo, lft, leaf, d), (name, rname, leaf, d)
+            path = os.path.join(outdir, f"{name}_{rname}.lft")
+            with open(path, "w") as f:
+                f.write(dump(topo, lft))
+            print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -79,6 +79,52 @@ fn main() {
             }),
         );
     }
+    {
+        // Single-cable fault/recovery flip: full pipeline vs the delta
+        // tier (EXPERIMENTS.md §"Incremental reroute") on identical
+        // transitions — the delta rows quantify what skipping the
+        // clean LFT rows buys.
+        use std::collections::HashSet;
+        let cable = dmodc::topology::degrade::cables(&topo)[0];
+        let fault: HashSet<(SwitchId, u16)> = [cable].into_iter().collect();
+        let recover: HashSet<(SwitchId, u16)> = HashSet::new();
+        let no_sw: HashSet<SwitchId> = HashSet::new();
+        let mut ws = dmodc::routing::RerouteWorkspace::default();
+        let mut degraded = Topology::default();
+        let mut out = dmodc::routing::Lft::default();
+        let mut touched = Vec::new();
+        for dead in [&recover, &fault, &recover, &fault, &recover] {
+            ws.materialize(&topo, &no_sw, dead, &mut degraded);
+            ws.reroute_into(&degraded, &mut out); // warm both shapes
+        }
+        let mut flip = false;
+        add(
+            "dmodc: full reroute (single-cable flip)",
+            bench(1, 5, || {
+                flip = !flip;
+                let dead = if flip { &fault } else { &recover };
+                ws.materialize(&topo, &no_sw, dead, &mut degraded);
+                ws.reroute_into(&degraded, &mut out);
+                out.raw()[0]
+            }),
+        );
+        // Re-warm through the delta entry point so prev-products exist.
+        for dead in [&recover, &fault, &recover] {
+            ws.materialize(&topo, &no_sw, dead, &mut degraded);
+            ws.reroute_delta_into(&degraded, &mut out, &mut touched);
+        }
+        let mut flip = false;
+        add(
+            "dmodc: delta reroute (single-cable flip)",
+            bench(1, 5, || {
+                flip = !flip;
+                let dead = if flip { &fault } else { &recover };
+                ws.materialize(&topo, &no_sw, dead, &mut degraded);
+                ws.reroute_delta_into(&degraded, &mut out, &mut touched);
+                out.raw()[0]
+            }),
+        );
+    }
 
     // Steady-state engine reroutes: every registered engine out of its
     // persistent workspace (the RoutingEngine redesign's hot path).

@@ -3,14 +3,24 @@
 //! trajectory is tracked across PRs (see `.github/workflows/ci.yml` and
 //! EXPERIMENTS.md §Perf).
 //!
-//! Measured quantity: one steady-state fault reaction — in-place degraded
-//! topology materialization plus the full Dmodc pipeline
-//! (prep → Algorithm 1 → Algorithm 2 → route fill) out of a persistent
-//! `RerouteWorkspace`, alternating a spine fault with recovery so both the
-//! degraded and intact shapes stay warm. `seed_baseline_median_s` times
-//! the pre-optimization pipeline (fresh allocations + serial Algorithm 1 +
-//! the seed's parallel strength-reduced fill) on the intact topology for
-//! the speedup baseline.
+//! Measured quantities:
+//! * full — one steady-state fault reaction: in-place degraded topology
+//!   materialization plus the full Dmodc pipeline
+//!   (prep → Algorithm 1 → Algorithm 2 → route fill) out of a persistent
+//!   `RerouteWorkspace`, alternating a spine fault with recovery so both
+//!   the degraded and intact shapes stay warm.
+//! * delta — the same alternation for a *single cable* fault/recovery
+//!   through `reroute_delta_into` (EXPERIMENTS.md §"Incremental
+//!   reroute"): products rebuilt, dirty rows diffed, only those rows
+//!   refilled. The `delta_*` columns sit next to the full-reroute
+//!   baseline so the delta win is tracked per PR; `delta_tier_fired`
+//!   records that the measurement really exercised the incremental
+//!   tier (not a silent fallback).
+//!
+//! `seed_baseline_median_s` times the pre-optimization pipeline (fresh
+//! allocations + serial Algorithm 1 + the seed's parallel
+//! strength-reduced fill) on the intact topology for the speedup
+//! baseline.
 //!
 //!   REROUTE_PGFT="24,15,24;1,6,8;1,1,1"   topology (default: 8640 nodes)
 //!   BENCH_ITERS=5                          repetitions per measurement
@@ -71,6 +81,39 @@ fn median_reroute_secs(topo: &Topology, threads: usize) -> (f64, f64) {
     (s.median, s.min)
 }
 
+/// Single-cable fault/recovery reaction through the delta tier.
+/// Returns (median, min, delta_tier_fired_on_every_measured_step).
+fn median_delta_secs(topo: &Topology, threads: usize) -> (f64, f64, bool) {
+    par::set_threads(Some(threads));
+    // First leaf uplink cable: the canonical single-cable throw.
+    let cable = dmodc::topology::degrade::cables(topo)[0];
+    let fault: HashSet<(SwitchId, u16)> = [cable].into_iter().collect();
+    let recover: HashSet<(SwitchId, u16)> = HashSet::new();
+    let no_switches: HashSet<SwitchId> = HashSet::new();
+    let mut ws = RerouteWorkspace::default();
+    let mut degraded = Topology::default();
+    let mut out = Lft::default();
+    let mut touched = Vec::new();
+    // Warm both shapes through the delta entry point (the first call is
+    // a NoHistory full fill; subsequent flips are delta transitions).
+    for dead in [&recover, &fault, &recover, &fault, &recover] {
+        ws.materialize(topo, &no_switches, dead, &mut degraded);
+        ws.reroute_delta_into(&degraded, &mut out, &mut touched);
+    }
+    let mut flip = false;
+    let mut all_delta = true;
+    let s = bench(1, 5, || {
+        flip = !flip;
+        let dead = if flip { &fault } else { &recover };
+        ws.materialize(topo, &no_switches, dead, &mut degraded);
+        let outcome = ws.reroute_delta_into(&degraded, &mut out, &mut touched);
+        all_delta &= outcome.is_delta();
+        out.raw()[0]
+    });
+    par::set_threads(None);
+    (s.median, s.min, all_delta)
+}
+
 fn main() {
     let spec = std::env::var("REROUTE_PGFT").unwrap_or_else(|_| "24,15,24;1,6,8;1,1,1".into());
     let params = PgftParams::parse(&spec).expect("REROUTE_PGFT");
@@ -86,11 +129,13 @@ fn main() {
     let reference = bench(1, 3, || seed_pipeline(&topo));
     let (m1, min1) = median_reroute_secs(&topo, 1);
     let (mn, minn) = median_reroute_secs(&topo, n_threads);
+    let (d1, dmin1, d1_fired) = median_delta_secs(&topo, 1);
+    let (dn, dminn, dn_fired) = median_delta_secs(&topo, n_threads);
 
     let json = format!(
         concat!(
             "{{\n",
-            "  \"schema\": \"bench_reroute/v1\",\n",
+            "  \"schema\": \"bench_reroute/v2\",\n",
             "  \"topology\": \"PGFT({spec})\",\n",
             "  \"nodes\": {nodes},\n",
             "  \"switches\": {switches},\n",
@@ -98,8 +143,13 @@ fn main() {
             "  \"seed_baseline_median_s\": {refm:.6},\n",
             "  \"threads_1\": {{ \"median_s\": {m1:.6}, \"min_s\": {min1:.6} }},\n",
             "  \"threads_n\": {{ \"n\": {nt}, \"median_s\": {mn:.6}, \"min_s\": {minn:.6} }},\n",
+            "  \"delta_threads_1\": {{ \"median_s\": {d1:.6}, \"min_s\": {dmin1:.6} }},\n",
+            "  \"delta_threads_n\": {{ \"n\": {nt}, \"median_s\": {dn:.6}, \"min_s\": {dminn:.6} }},\n",
+            "  \"delta_tier_fired\": {fired},\n",
             "  \"speedup_n_vs_1\": {sp1:.3},\n",
-            "  \"speedup_n_vs_seed_baseline\": {spr:.3}\n",
+            "  \"speedup_n_vs_seed_baseline\": {spr:.3},\n",
+            "  \"delta_speedup_vs_full_t1\": {dsp1:.3},\n",
+            "  \"delta_speedup_vs_full_tn\": {dspn:.3}\n",
             "}}\n"
         ),
         spec = spec,
@@ -112,8 +162,15 @@ fn main() {
         nt = n_threads,
         mn = mn,
         minn = minn,
+        d1 = d1,
+        dmin1 = dmin1,
+        dn = dn,
+        dminn = dminn,
+        fired = d1_fired && dn_fired,
         sp1 = m1 / mn.max(1e-12),
         spr = reference.median / mn.max(1e-12),
+        dsp1 = m1 / d1.max(1e-12),
+        dspn = mn / dn.max(1e-12),
     );
     let out_path =
         std::env::var("BENCH_REROUTE_OUT").unwrap_or_else(|_| "BENCH_reroute.json".into());

@@ -6,6 +6,14 @@
 //! against what each (surviving) switch currently holds and models the
 //! upload as InfiniBand-style LFT blocks (64 entries per MAD block; a block
 //! is uploaded iff any entry in it changed).
+//!
+//! Tables are **row-versioned**: each stored switch table carries a
+//! version counter bumped whenever its content changes, so external
+//! consumers (and the tests) can tell which switches a reaction really
+//! touched. The delta reroute tier commits through
+//! [`LftStore::commit_rows`], which diffs only the rows the incremental
+//! fill refilled — the clean rows are proven unchanged, so skipping
+//! their diff is exact, not an approximation (debug builds verify).
 
 use crate::routing::Lft;
 use crate::topology::Topology;
@@ -27,16 +35,73 @@ pub struct UploadStats {
     pub blocks_full: usize,
 }
 
+/// One switch's stored table plus its change version.
+struct StoredTable {
+    ports: Vec<u16>,
+    version: u64,
+}
+
 /// The fabric's current tables, keyed by switch UUID (stable across
 /// degradation-driven re-materializations).
 #[derive(Default)]
 pub struct LftStore {
-    tables: HashMap<u64, Vec<u16>>,
+    tables: HashMap<u64, StoredTable>,
 }
 
 impl LftStore {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Diff one switch row against the stored table, updating store and
+    /// stats. `blocks_per_table` = blocks of an `n`-entry table.
+    fn commit_one(
+        &mut self,
+        uuid: u64,
+        row: &[u16],
+        blocks_per_table: usize,
+        st: &mut UploadStats,
+    ) {
+        let n = row.len();
+        match self.tables.get_mut(&uuid) {
+            Some(stored) if stored.ports.len() == n => {
+                let mut changed = 0usize;
+                let mut blocks = 0usize;
+                for b in 0..blocks_per_table {
+                    let lo = b * BLOCK_ENTRIES;
+                    let hi = (lo + BLOCK_ENTRIES).min(n);
+                    let c = stored.ports[lo..hi]
+                        .iter()
+                        .zip(&row[lo..hi])
+                        .filter(|(a, b)| a != b)
+                        .count();
+                    if c > 0 {
+                        blocks += 1;
+                        changed += c;
+                    }
+                }
+                if changed > 0 {
+                    st.switches_touched += 1;
+                    st.entries_changed += changed;
+                    st.blocks_delta += blocks;
+                    stored.ports.copy_from_slice(row);
+                    stored.version += 1;
+                }
+            }
+            _ => {
+                // New (or resized) switch: full upload.
+                st.switches_touched += 1;
+                st.entries_changed += n;
+                st.blocks_delta += blocks_per_table;
+                self.tables.insert(
+                    uuid,
+                    StoredTable {
+                        ports: row.to_vec(),
+                        version: 1,
+                    },
+                );
+            }
+        }
     }
 
     /// Diff `lft` against the stored tables, replace them, and return the
@@ -51,40 +116,54 @@ impl LftStore {
         };
         for (s, sw) in topo.switches.iter().enumerate() {
             let row = &lft.raw()[s * n..(s + 1) * n];
-            match self.tables.get_mut(&sw.uuid) {
-                Some(old) if old.len() == n => {
-                    let mut changed = 0usize;
-                    let mut blocks = 0usize;
-                    for b in 0..blocks_per_table {
-                        let lo = b * BLOCK_ENTRIES;
-                        let hi = (lo + BLOCK_ENTRIES).min(n);
-                        let c = old[lo..hi]
-                            .iter()
-                            .zip(&row[lo..hi])
-                            .filter(|(a, b)| a != b)
-                            .count();
-                        if c > 0 {
-                            blocks += 1;
-                            changed += c;
-                        }
-                    }
-                    if changed > 0 {
-                        st.switches_touched += 1;
-                        st.entries_changed += changed;
-                        st.blocks_delta += blocks;
-                        old.copy_from_slice(row);
-                    }
+            self.commit_one(sw.uuid, row, blocks_per_table, &mut st);
+        }
+        st
+    }
+
+    /// Partial commit for the delta reroute tier: diff only the switch
+    /// rows in `rows` (the rows the incremental fill refilled). The
+    /// caller guarantees every other surviving switch's table is
+    /// bit-identical to what the store already holds — the delta path's
+    /// clean-row proof — so the result equals a full [`LftStore::commit`]
+    /// (debug builds assert the skipped rows really are unchanged).
+    pub fn commit_rows(&mut self, topo: &Topology, lft: &Lft, rows: &[u32]) -> UploadStats {
+        let n = lft.num_nodes();
+        let blocks_per_table = n.div_ceil(BLOCK_ENTRIES);
+        let mut st = UploadStats {
+            blocks_full: blocks_per_table * topo.switches.len(),
+            ..Default::default()
+        };
+        for &s in rows {
+            let s = s as usize;
+            let row = &lft.raw()[s * n..(s + 1) * n];
+            self.commit_one(topo.switches[s].uuid, row, blocks_per_table, &mut st);
+        }
+        #[cfg(debug_assertions)]
+        {
+            let touched: std::collections::HashSet<u32> = rows.iter().copied().collect();
+            for (s, sw) in topo.switches.iter().enumerate() {
+                if touched.contains(&(s as u32)) {
+                    continue;
                 }
-                _ => {
-                    // New (or resized) switch: full upload.
-                    st.switches_touched += 1;
-                    st.entries_changed += n;
-                    st.blocks_delta += blocks_per_table;
-                    self.tables.insert(sw.uuid, row.to_vec());
+                if let Some(stored) = self.tables.get(&sw.uuid) {
+                    if stored.ports.len() == n {
+                        debug_assert_eq!(
+                            &stored.ports[..],
+                            &lft.raw()[s * n..(s + 1) * n],
+                            "delta commit skipped switch {s} whose table changed"
+                        );
+                    }
                 }
             }
         }
         st
+    }
+
+    /// Change version of a switch's stored table (bumped on every
+    /// content change), or `None` if the switch was never committed.
+    pub fn version(&self, uuid: u64) -> Option<u64> {
+        self.tables.get(&uuid).map(|t| t.version)
     }
 
     /// Number of switches with stored tables.
@@ -112,6 +191,9 @@ mod tests {
         assert_eq!(st.switches_touched, t.switches.len());
         assert_eq!(st.blocks_delta, st.blocks_full);
         assert_eq!(store.len(), t.switches.len());
+        for sw in &t.switches {
+            assert_eq!(store.version(sw.uuid), Some(1));
+        }
     }
 
     #[test]
@@ -122,6 +204,10 @@ mod tests {
         store.commit(&t, &lft);
         let st = store.commit(&t, &lft);
         assert_eq!(st, UploadStats { blocks_full: st.blocks_full, ..Default::default() });
+        // Versions untouched by a no-change commit.
+        for sw in &t.switches {
+            assert_eq!(store.version(sw.uuid), Some(1));
+        }
     }
 
     #[test]
@@ -136,6 +222,40 @@ mod tests {
         assert_eq!(st.switches_touched, 1);
         assert_eq!(st.entries_changed, 1);
         assert_eq!(st.blocks_delta, 1);
+        assert_eq!(store.version(t.switches[0].uuid), Some(2));
+        assert_eq!(store.version(t.switches[1].uuid), Some(1));
+    }
+
+    #[test]
+    fn commit_rows_matches_full_commit() {
+        let t = PgftParams::fig1().build();
+        let lft = route_unchecked(Algo::Dmodc, &t);
+        let mut a = LftStore::new();
+        let mut b = LftStore::new();
+        a.commit(&t, &lft);
+        b.commit(&t, &lft);
+        // Change two switches' rows, commit partially vs fully.
+        let mut lft2 = lft.clone();
+        lft2.set(0, 3, 63);
+        lft2.set(2, 5, 63);
+        let full = a.commit(&t, &lft2);
+        let part = b.commit_rows(&t, &lft2, &[0, 2]);
+        assert_eq!(full, part);
+        for sw in &t.switches {
+            assert_eq!(a.version(sw.uuid), b.version(sw.uuid), "version drift");
+        }
+    }
+
+    #[test]
+    fn commit_rows_with_unchanged_rows_is_a_noop() {
+        let t = PgftParams::fig1().build();
+        let lft = route_unchecked(Algo::Dmodc, &t);
+        let mut store = LftStore::new();
+        store.commit(&t, &lft);
+        let st = store.commit_rows(&t, &lft, &[0, 1, 2]);
+        assert_eq!(st.switches_touched, 0);
+        assert_eq!(st.entries_changed, 0);
+        assert_eq!(st.blocks_delta, 0);
     }
 
     #[test]

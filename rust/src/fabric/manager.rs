@@ -13,6 +13,19 @@
 //! [`Capabilities::alternative_ports`](crate::routing::Capabilities),
 //! not on the engine's identity.
 //!
+//! The reaction ladder has three tiers (DESIGN.md §"Three-tier
+//! reaction ladder"):
+//! 1. [`FabricManager::fast_patch`] — rewrite only the entries through
+//!    a dying cable (loses balance; caller-driven);
+//! 2. the **delta tier** — for cable fault/recovery events on engines
+//!    with [`Capabilities::incremental`](crate::routing::Capabilities),
+//!    [`RoutingEngine::reroute_delta_into`] refills only the LFT rows
+//!    the event can change, bit-identical to a full reroute, and the
+//!    upload diffs only those rows ([`LftStore::commit_rows`]);
+//! 3. full reroute — everything else, and every delta fallback.
+//! [`ManagerReport::tier`] and the `delta_*` [`Metrics`] counters
+//! record which tier actually fired per event.
+//!
 //! Two driving modes:
 //! * [`FabricManager::process`] — synchronous, event by event (tests,
 //!   benches, deterministic experiments);
@@ -23,7 +36,7 @@
 use super::events::{cable_ids, for_each_cable, CableId, Event, EventKind};
 use super::lft_store::{LftStore, UploadStats};
 use super::metrics::{Histogram, Metrics};
-use crate::routing::{registry, Algo, Lft, RoutingEngine};
+use crate::routing::{registry, Algo, DeltaOutcome, DeltaStats, Lft, RoutingEngine};
 use crate::topology::degrade::{self, DegradeScratch};
 use crate::topology::{PortTarget, SwitchId, Topology};
 use std::collections::{HashMap, HashSet};
@@ -36,6 +49,10 @@ pub struct ManagerConfig {
     pub algo: Algo,
     /// Run the paper's validity pass after each reroute.
     pub validate: bool,
+    /// Use the delta reroute tier for cable events when the engine
+    /// supports it (`Capabilities::incremental`). Off forces a full
+    /// reroute per event — the comparison baseline.
+    pub delta: bool,
 }
 
 impl Default for ManagerConfig {
@@ -43,8 +60,18 @@ impl Default for ManagerConfig {
         Self {
             algo: Algo::Dmodc,
             validate: true,
+            delta: true,
         }
     }
+}
+
+/// Which reaction tier recomputed the tables for an event.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReactionTier {
+    /// Incremental: only the dirty LFT rows were refilled.
+    Delta,
+    /// Complete recomputation (including every delta fallback).
+    Full,
 }
 
 /// Per-event reaction report.
@@ -57,6 +84,10 @@ pub struct ManagerReport {
     pub upload: UploadStats,
     pub switches_alive: usize,
     pub cables_alive: usize,
+    /// Which tier recomputed the tables.
+    pub tier: ReactionTier,
+    /// Dirty-set statistics when the delta tier fired.
+    pub delta: Option<DeltaStats>,
 }
 
 /// Centralized fabric manager state.
@@ -94,6 +125,9 @@ pub struct FabricManager {
     /// them; later patches must not select them as alternatives). Cleared on
     /// every reroute — the coordinates are only valid for this materialization.
     patched_dead_ports: HashSet<(SwitchId, u16)>,
+    /// Rows refilled by the last delta-tier reroute (reused buffer for
+    /// the partial upload commit).
+    touched_rows: Vec<u32>,
     events_seen: usize,
 }
 
@@ -139,9 +173,10 @@ impl FabricManager {
             current_cable_ports: HashMap::new(),
             cable_map_stale: true,
             patched_dead_ports: HashSet::new(),
+            touched_rows: Vec::new(),
             events_seen: 0,
         };
-        mgr.reroute();
+        mgr.reroute(false);
         mgr
     }
 
@@ -211,15 +246,20 @@ impl FabricManager {
         self.cable_map_stale = false;
     }
 
-    /// Full reroute of the current degraded state. Returns the report.
+    /// Reroute the current degraded state (delta tier when requested).
+    /// Returns the report.
     ///
     /// Hot path (EXPERIMENTS.md §Perf): the degraded topology is rebuilt
     /// in place and the whole pipeline runs out of the engine's persistent
     /// workspace — steady-state fault storms do no heap allocation in the
     /// routing pipeline for any engine, and engines with
     /// `reuses_costs_for_validity` validate against the costs their
-    /// pipeline just produced.
-    fn reroute(&mut self) -> ManagerReport {
+    /// pipeline just produced. With `try_delta`, the engine's
+    /// incremental path refills only the dirty rows and the upload
+    /// commit diffs only those (EXPERIMENTS.md §"Incremental reroute");
+    /// the engine may still fall back to a full row fill, which the
+    /// report's [`ManagerReport::tier`] records.
+    fn reroute(&mut self, try_delta: bool) -> ManagerReport {
         let t0 = Instant::now();
         degrade::apply_into(
             &self.reference,
@@ -230,9 +270,28 @@ impl FabricManager {
         );
         self.cable_map_stale = true;
         self.patched_dead_ports.clear();
-        self.engine
-            .route_into(&self.current_topo, &mut self.current_lft);
+        let outcome = if try_delta {
+            Some(self.engine.reroute_delta_into(
+                &self.current_topo,
+                &mut self.current_lft,
+                &mut self.touched_rows,
+            ))
+        } else {
+            self.engine
+                .route_into(&self.current_topo, &mut self.current_lft);
+            None
+        };
         let reroute_secs = t0.elapsed().as_secs_f64();
+        let (tier, delta) = match outcome {
+            Some(DeltaOutcome::Delta(st)) => (ReactionTier::Delta, Some(st)),
+            _ => (ReactionTier::Full, None),
+        };
+        if try_delta {
+            match tier {
+                ReactionTier::Delta => self.metrics.delta_reroutes += 1,
+                ReactionTier::Full => self.metrics.delta_fallbacks += 1,
+            }
+        }
 
         let valid = !self.cfg.validate
             || self
@@ -242,7 +301,13 @@ impl FabricManager {
         if !valid {
             self.metrics.invalid_states += 1;
         }
-        let upload = self.store.commit(&self.current_topo, &self.current_lft);
+        let upload = match tier {
+            ReactionTier::Delta => {
+                self.store
+                    .commit_rows(&self.current_topo, &self.current_lft, &self.touched_rows)
+            }
+            ReactionTier::Full => self.store.commit(&self.current_topo, &self.current_lft),
+        };
         self.metrics.reroutes += 1;
         self.metrics.entries_changed += upload.entries_changed as u64;
         self.metrics.blocks_uploaded += upload.blocks_delta as u64;
@@ -254,15 +319,27 @@ impl FabricManager {
             upload,
             switches_alive: self.current_topo.switches.len(),
             cables_alive: self.current_topo.num_cables(),
+            tier,
+            delta,
         }
     }
 
     /// Apply one event (synchronous): update state, reroute, report.
+    ///
+    /// Cable fault/recovery events take the delta tier when the engine
+    /// supports it and no [`FabricManager::fast_patch`] is outstanding
+    /// (patched tables deviate from the engine's output, so the delta
+    /// path's clean-row proof would not cover them — only a full
+    /// reroute restores the contract).
     pub fn apply(&mut self, event: &Event) -> ManagerReport {
         self.events_seen += 1;
         self.metrics.events += 1;
+        let try_delta = self.cfg.delta
+            && matches!(event.kind, EventKind::LinkDown(_) | EventKind::LinkUp(_))
+            && self.patched_dead_ports.is_empty()
+            && self.engine.capabilities().incremental;
         self.mark(&event.kind);
-        self.reroute()
+        self.reroute(try_delta)
     }
 
     /// Apply a whole scripted schedule, returning every report.
@@ -284,7 +361,7 @@ impl FabricManager {
     /// Force a full reroute of the current state (e.g. to rebalance after a
     /// series of [`FabricManager::fast_patch`] mitigations).
     pub fn reroute_now(&mut self) -> ManagerReport {
-        self.reroute()
+        self.reroute(false)
     }
 
     /// **Fast local mitigation** (extension of the paper's §5 discussion):
@@ -443,5 +520,94 @@ mod tests {
         });
         assert!(r.valid);
         assert_eq!(mgr.metrics.equipment_down, 0);
+    }
+
+    #[test]
+    fn cable_events_take_the_delta_tier() {
+        // A parallel-pair cable fault leaves costs/dividers/NIDs alone,
+        // so the delta tier fires and touches only the two endpoints.
+        let t = PgftParams::small().build();
+        let cable = cable_ids(&t)[0].0; // leaf uplink: parallel pair in small()
+        let mut mgr = FabricManager::new(t.clone(), ManagerConfig::default());
+        let down = mgr.apply(&Event {
+            at_ms: 1,
+            kind: EventKind::LinkDown(cable),
+        });
+        assert_eq!(down.tier, ReactionTier::Delta);
+        assert!(down.valid);
+        let st = down.delta.expect("delta stats on the delta tier");
+        assert_eq!(st.rows_full, 2);
+        assert_eq!(st.rows_partial, 0);
+        assert!(down.upload.switches_touched <= 2);
+        let up = mgr.apply(&Event {
+            at_ms: 2,
+            kind: EventKind::LinkUp(cable),
+        });
+        assert_eq!(up.tier, ReactionTier::Delta);
+        assert!(up.valid);
+        assert_eq!(mgr.metrics.delta_reroutes, 2);
+        assert_eq!(mgr.metrics.delta_fallbacks, 0);
+        // Recovery restored the exact pre-fault tables.
+        let baseline = FabricManager::new(t, ManagerConfig::default());
+        assert_eq!(mgr.current().1.raw(), baseline.current().1.raw());
+    }
+
+    #[test]
+    fn switch_events_stay_on_the_full_tier() {
+        let t = PgftParams::fig1().build();
+        let victim = uuid_of_level(&t, 2);
+        let mut mgr = FabricManager::new(t, ManagerConfig::default());
+        let r = mgr.apply(&Event {
+            at_ms: 1,
+            kind: EventKind::SwitchDown(victim),
+        });
+        assert_eq!(r.tier, ReactionTier::Full);
+        assert!(r.delta.is_none());
+        assert_eq!(mgr.metrics.delta_reroutes, 0);
+        assert_eq!(mgr.metrics.delta_fallbacks, 0, "delta was never attempted");
+    }
+
+    #[test]
+    fn outstanding_fast_patch_forces_full_tier() {
+        // After a fast_patch the tables deviate from the engine's
+        // output, so the next cable event must not trust the delta
+        // path's clean-row proof.
+        let t = PgftParams::small().build();
+        let ids = cable_ids(&t);
+        let mut mgr = FabricManager::new(t, ManagerConfig::default());
+        assert!(mgr.fast_patch(&ids[0].0).is_some());
+        let r = mgr.apply(&Event {
+            at_ms: 1,
+            kind: EventKind::LinkDown(ids[1].0),
+        });
+        assert_eq!(r.tier, ReactionTier::Full);
+        assert_eq!(mgr.metrics.delta_reroutes, 0);
+        // The full reroute cleared the outstanding patches: the next
+        // cable event is delta-eligible again.
+        let r = mgr.apply(&Event {
+            at_ms: 2,
+            kind: EventKind::LinkUp(ids[1].0),
+        });
+        assert_eq!(r.tier, ReactionTier::Delta);
+    }
+
+    #[test]
+    fn delta_disabled_config_forces_full_tier() {
+        let t = PgftParams::small().build();
+        let cable = cable_ids(&t)[0].0;
+        let mut mgr = FabricManager::new(
+            t,
+            ManagerConfig {
+                delta: false,
+                ..Default::default()
+            },
+        );
+        let r = mgr.apply(&Event {
+            at_ms: 1,
+            kind: EventKind::LinkDown(cable),
+        });
+        assert_eq!(r.tier, ReactionTier::Full);
+        assert_eq!(mgr.metrics.delta_reroutes, 0);
+        assert_eq!(mgr.metrics.delta_fallbacks, 0);
     }
 }

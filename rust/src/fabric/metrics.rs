@@ -94,6 +94,10 @@ impl Histogram {
 pub struct Metrics {
     pub events: u64,
     pub reroutes: u64,
+    /// Reroutes served by the incremental (delta) tier.
+    pub delta_reroutes: u64,
+    /// Delta-tier attempts that fell back to a full row fill.
+    pub delta_fallbacks: u64,
     pub fast_patches: u64,
     pub invalid_states: u64,
     pub entries_changed: u64,
@@ -105,9 +109,11 @@ pub struct Metrics {
 impl Metrics {
     pub fn render(&self) -> String {
         format!(
-            "events={} reroutes={} fast_patches={} invalid={} entries_changed={} blocks_uploaded={} down={} up={}",
+            "events={} reroutes={} delta={} delta_fallbacks={} fast_patches={} invalid={} entries_changed={} blocks_uploaded={} down={} up={}",
             self.events,
             self.reroutes,
+            self.delta_reroutes,
+            self.delta_fallbacks,
             self.fast_patches,
             self.invalid_states,
             self.entries_changed,

@@ -6,4 +6,4 @@ pub mod manager;
 pub mod metrics;
 
 pub use events::{Event, EventKind};
-pub use manager::{FabricManager, ManagerConfig, ManagerReport};
+pub use manager::{FabricManager, ManagerConfig, ManagerReport, PatchReport, ReactionTier};

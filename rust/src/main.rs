@@ -174,7 +174,7 @@ fn cmd_fabric() {
         t,
         ManagerConfig {
             algo: p.get_parsed("algo"),
-            validate: true,
+            ..Default::default()
         },
     );
     let reports = mgr.process(&schedule);

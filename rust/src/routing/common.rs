@@ -72,6 +72,11 @@ pub struct Prep {
     /// `leaf_node_offsets[li]..leaf_node_offsets[li+1]` into `leaf_nodes`.
     pub leaf_node_offsets: Vec<u32>,
     pub leaf_nodes: Vec<NodeId>,
+    /// [`Topology::fingerprint`] of the topology this `Prep` was built
+    /// for (0 = never built). Lets cached-product consumers
+    /// (`validity::check_with`) reject stale preprocessing that merely
+    /// *shapes* like the topology at hand.
+    pub topo_fingerprint: u64,
 }
 
 /// Reusable staging buffers for [`Prep::build_into`].
@@ -199,6 +204,8 @@ impl Prep {
             }
             out.leaf_node_offsets.push(out.leaf_nodes.len() as u32);
         }
+
+        out.topo_fingerprint = topo.fingerprint();
     }
 
     /// Number of port groups of switch `s`.

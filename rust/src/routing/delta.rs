@@ -1,0 +1,502 @@
+//! Incremental ("delta") rerouting support: bound which LFT rows a
+//! fault/recovery event can change, so the reroute path skips the ~99%
+//! of rows a single cable fault cannot touch.
+//!
+//! The full paper (arXiv:2211.13101) observes that most degradation
+//! throws damage only a small fraction of subtrees; reacting below
+//! full-recompute cost is where centralized fabric managers win
+//! (cf. the HyperX fault-tolerant routing line, arXiv:2404.04315).
+//! The danger of partial rerouting is silent drift from the routing
+//! function — exactly what the paper criticizes in history-dependent
+//! schemes. This module therefore makes one promise the test suite
+//! enforces everywhere (`tests/delta_diff.rs`): **the delta path is
+//! bit-identical to a from-scratch full reroute after every event.**
+//!
+//! The design keeps that promise *by construction* instead of by
+//! event-type case analysis:
+//!
+//! 1. The cheap pipeline stages (CSR [`Prep`], Algorithm-1 [`Costs`],
+//!    Algorithm-2 NIDs) are recomputed in full for the new topology —
+//!    they are a small fraction of reaction latency, and recomputing
+//!    them means every product the route fill consumes is exact.
+//! 2. The products are *diffed* against the previous reroute's
+//!    ([`PrevProducts`]). An LFT row `s` is a pure function of: the
+//!    port groups of `s`, `divider[s]`, the cost rows of `s` and of its
+//!    group remotes, the NIDs, and the per-leaf node lists. If none of
+//!    those inputs changed, the old row **is** the new row — no
+//!    recomputation, no approximation.
+//! 3. Only rows (or single (switch, destination-leaf) blocks) whose
+//!    inputs changed are refilled, through the same strength-reduced
+//!    fill the full path uses (`dmodc::fill_rows_partial`).
+//!
+//! Whenever the dirty set cannot be bounded cheaply — first call,
+//! shape change (switch/node sets differ), a leaf without uplinks on
+//! either side of the event, a NID permutation change (Algorithm-2
+//! clustering crossed a subtree boundary), or damage above the
+//! configured threshold — the path falls back to a full row fill and
+//! reports [`FallbackReason`]. The fallback *is* the full reroute: the
+//! products were already rebuilt, so nothing is wasted.
+
+use super::common::{Costs, Prep};
+use crate::topology::SwitchId;
+
+/// Knobs for the delta reroute path (owned by
+/// [`RerouteWorkspace`](super::RerouteWorkspace)).
+#[derive(Clone, Copy, Debug)]
+pub struct DeltaConfig {
+    /// Fall back to a full row fill when more than this fraction of
+    /// switch rows is dirty (the partial fill's bookkeeping would cost
+    /// more than it saves, and upload accounting degenerates to a full
+    /// diff anyway).
+    pub max_dirty_row_frac: f64,
+}
+
+impl Default for DeltaConfig {
+    fn default() -> Self {
+        Self {
+            max_dirty_row_frac: 0.5,
+        }
+    }
+}
+
+/// Why the delta path fell back to a full row fill.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FallbackReason {
+    /// The engine does not implement incremental rerouting
+    /// (`Capabilities::incremental` is false).
+    Unsupported,
+    /// No previous reroute to diff against (cold workspace, or the
+    /// caller's output buffer does not match the last products).
+    NoHistory,
+    /// Switch, leaf, or node sets differ from the previous topology —
+    /// row indices are not comparable.
+    ShapeChanged,
+    /// A leaf switch has no uplink group on one side of the event
+    /// (disconnected destinations; subtree structure unbounded).
+    IsolatedLeaf,
+    /// Algorithm-2 node identifiers changed — the clustering crossed a
+    /// subtree boundary, so every row's modulo arithmetic shifted.
+    NidsChanged,
+    /// The dirty set exceeded [`DeltaConfig::max_dirty_row_frac`].
+    Threshold,
+}
+
+/// What one delta reroute refilled.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DeltaStats {
+    /// Rows refilled completely (group structure or divider changed).
+    pub rows_full: usize,
+    /// Rows where only some destination-leaf blocks were refilled.
+    pub rows_partial: usize,
+    /// Rows proven unchanged and left untouched.
+    pub rows_clean: usize,
+    /// (switch, destination-leaf) blocks refilled inside partial rows.
+    pub dirty_blocks: usize,
+}
+
+/// Outcome of a `reroute_delta_into` call.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DeltaOutcome {
+    /// The delta path applied: only the dirty rows were refilled.
+    Delta(DeltaStats),
+    /// Every row was refilled (a full reroute), for the given reason.
+    Full(FallbackReason),
+}
+
+impl DeltaOutcome {
+    /// True when the incremental path (not the full fallback) applied.
+    pub fn is_delta(&self) -> bool {
+        matches!(self, DeltaOutcome::Delta(_))
+    }
+}
+
+/// Pipeline products of the *previous* reroute, captured before the
+/// rebuild overwrites the workspace buffers. All buffers are reused
+/// across events (capture is `clear` + `extend_from_slice` — zero heap
+/// allocation once capacities converge).
+#[derive(Default)]
+pub struct PrevProducts {
+    valid: bool,
+    had_isolated_leaf: bool,
+    num_leaves: usize,
+    leaves: Vec<SwitchId>,
+    leaf_node_offsets: Vec<u32>,
+    leaf_nodes: Vec<u32>,
+    group_offsets: Vec<u32>,
+    group_remote: Vec<SwitchId>,
+    port_offsets: Vec<u32>,
+    ports: Vec<u16>,
+    cost: Vec<u16>,
+    divider: Vec<u64>,
+    nids: Vec<u64>,
+}
+
+impl PrevProducts {
+    /// Capture the products describing the workspace's last-routed
+    /// topology.
+    pub fn capture(&mut self, prep: &Prep, costs: &Costs, nids: &[u64]) {
+        fn copy<T: Copy>(dst: &mut Vec<T>, src: &[T]) {
+            dst.clear();
+            dst.extend_from_slice(src);
+        }
+        copy(&mut self.leaves, &prep.leaves);
+        copy(&mut self.leaf_node_offsets, &prep.leaf_node_offsets);
+        copy(&mut self.leaf_nodes, &prep.leaf_nodes);
+        copy(&mut self.group_offsets, &prep.group_offsets);
+        copy(&mut self.group_remote, &prep.group_remote);
+        copy(&mut self.port_offsets, &prep.port_offsets);
+        copy(&mut self.ports, &prep.ports);
+        copy(&mut self.cost, &costs.cost);
+        copy(&mut self.divider, &costs.divider);
+        copy(&mut self.nids, nids);
+        self.num_leaves = costs.num_leaves;
+        self.had_isolated_leaf = prep
+            .leaves
+            .iter()
+            .any(|&l| prep.up_groups[l as usize] == 0);
+        self.valid = true;
+    }
+
+    /// Mark the history unusable (next delta call falls back).
+    pub fn invalidate(&mut self) {
+        self.valid = false;
+    }
+}
+
+/// Pre-fill eligibility: reasons the dirty set cannot be bounded at
+/// all. `None` means the per-row diff ([`DirtySet::compute`]) is sound.
+///
+/// Note the unit of comparison is the **row index**, not the physical
+/// switch: the route fill is a pure function of index-level products,
+/// so index-level equality is exactly what bit-identical tables need —
+/// even in the contrived case where two different dead-switch sets of
+/// equal size produce coincidentally identical products. Consumers
+/// keyed by hardware identity (the UUID-keyed upload store) must
+/// additionally gate on switch-set-preserving events, as
+/// `FabricManager` does (delta tier = cable events only).
+pub fn eligibility(
+    prev: &PrevProducts,
+    prep: &Prep,
+    costs: &Costs,
+    nids: &[u64],
+) -> Option<FallbackReason> {
+    if !prev.valid {
+        return Some(FallbackReason::NoHistory);
+    }
+    // Row indices are only comparable when the switch compaction, the
+    // leaf set, and the per-leaf node lists (ids *and* port-rank order)
+    // are identical between the two topologies.
+    if prev.group_offsets.len() != prep.group_offsets.len()
+        || prev.leaves != prep.leaves
+        || prev.leaf_node_offsets != prep.leaf_node_offsets
+        || prev.leaf_nodes != prep.leaf_nodes
+        || prev.num_leaves != costs.num_leaves
+        || prev.cost.len() != costs.cost.len()
+        || prev.divider.len() != costs.divider.len()
+    {
+        return Some(FallbackReason::ShapeChanged);
+    }
+    if prev.had_isolated_leaf
+        || prep
+            .leaves
+            .iter()
+            .any(|&l| prep.up_groups[l as usize] == 0)
+    {
+        return Some(FallbackReason::IsolatedLeaf);
+    }
+    if prev.nids[..] != nids[..] {
+        return Some(FallbackReason::NidsChanged);
+    }
+    None
+}
+
+/// The dirty set of one delta reroute: which rows need a full refill,
+/// which need only some destination-leaf blocks, and which are proven
+/// clean. Bitsets are reused across events.
+#[derive(Default)]
+pub struct DirtySet {
+    /// Leaves per row bitset word count.
+    words: usize,
+    num_rows: usize,
+    /// Per-switch "own cost row changed at leaf li" bits (ns × words).
+    cost_changed: Vec<u64>,
+    /// Per-switch dirty destination-leaf bits (ns × words): own cost
+    /// row or any group remote's cost row changed at that leaf.
+    bits: Vec<u64>,
+    /// Whole row must be refilled (groups or divider changed).
+    full: Vec<bool>,
+    /// Row has any dirty block (or is full-dirty).
+    any: Vec<bool>,
+}
+
+impl DirtySet {
+    /// Diff the new products against `prev` and derive the dirty set.
+    /// Preconditions: [`eligibility`] returned `None`.
+    pub fn compute(&mut self, prev: &PrevProducts, prep: &Prep, costs: &Costs) -> DeltaStats {
+        let ns = prep.group_offsets.len() - 1;
+        let nl = prep.leaves.len();
+        self.words = nl.div_ceil(64);
+        self.num_rows = ns;
+        self.cost_changed.clear();
+        self.cost_changed.resize(ns * self.words, 0);
+        self.bits.clear();
+        self.bits.resize(ns * self.words, 0);
+        self.full.clear();
+        self.full.resize(ns, false);
+        self.any.clear();
+        self.any.resize(ns, false);
+
+        // Pass 1: per-switch structural diff + own-cost-row diff.
+        for s in 0..ns {
+            self.full[s] = Self::groups_changed(prev, prep, s)
+                || costs.divider[s] != prev.divider[s];
+            let new_row = &costs.cost[s * nl..(s + 1) * nl];
+            let old_row = &prev.cost[s * nl..(s + 1) * nl];
+            let w0 = s * self.words;
+            for (li, (a, b)) in new_row.iter().zip(old_row).enumerate() {
+                if a != b {
+                    self.cost_changed[w0 + li / 64] |= 1u64 << (li % 64);
+                }
+            }
+        }
+
+        // Pass 2: a row is dirty at leaf li when its own cost row or
+        // any group remote's cost row changed there (equation (1)
+        // compares exactly those two cost values per group).
+        let mut stats = DeltaStats::default();
+        for s in 0..ns {
+            let w0 = s * self.words;
+            if self.full[s] {
+                self.any[s] = true;
+                stats.rows_full += 1;
+                continue;
+            }
+            let (bits, changed) = (&mut self.bits, &self.cost_changed);
+            bits[w0..w0 + self.words].copy_from_slice(&changed[w0..w0 + self.words]);
+            for g in prep.group_offsets[s] as usize..prep.group_offsets[s + 1] as usize {
+                let r = prep.group_remote[g] as usize;
+                let rw0 = r * self.words;
+                for w in 0..self.words {
+                    bits[w0 + w] |= changed[rw0 + w];
+                }
+            }
+            let blocks: u32 = bits[w0..w0 + self.words]
+                .iter()
+                .map(|w| w.count_ones())
+                .sum();
+            if blocks > 0 {
+                self.any[s] = true;
+                stats.rows_partial += 1;
+                stats.dirty_blocks += blocks as usize;
+            } else {
+                stats.rows_clean += 1;
+            }
+        }
+        stats
+    }
+
+    /// True when the port-group structure of switch `s` (remote ids,
+    /// per-group port lists, group order) differs from the previous
+    /// topology.
+    fn groups_changed(prev: &PrevProducts, prep: &Prep, s: usize) -> bool {
+        let (n0, n1) = (
+            prep.group_offsets[s] as usize,
+            prep.group_offsets[s + 1] as usize,
+        );
+        let (p0, p1) = (
+            prev.group_offsets[s] as usize,
+            prev.group_offsets[s + 1] as usize,
+        );
+        if n1 - n0 != p1 - p0 {
+            return true;
+        }
+        if prep.group_remote[n0..n1] != prev.group_remote[p0..p1] {
+            return true;
+        }
+        for (gn, gp) in (n0..n1).zip(p0..p1) {
+            let new_ports = &prep.ports
+                [prep.port_offsets[gn] as usize..prep.port_offsets[gn + 1] as usize];
+            let old_ports =
+                &prev.ports[prev.port_offsets[gp] as usize..prev.port_offsets[gp + 1] as usize];
+            if new_ports != old_ports {
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Rows touched by the delta fill (full + partial), ascending.
+    pub fn touched_rows(&self) -> impl Iterator<Item = u32> + '_ {
+        (0..self.num_rows as u32).filter(|&s| self.any[s as usize])
+    }
+
+    /// Whole-row refill needed.
+    #[inline]
+    pub fn row_full(&self, s: usize) -> bool {
+        self.full[s]
+    }
+
+    /// Any block of row `s` dirty.
+    #[inline]
+    pub fn row_any(&self, s: usize) -> bool {
+        self.any[s]
+    }
+
+    /// Dirty destination-leaf indices of a partial row, ascending.
+    pub fn cols(&self, s: usize) -> impl Iterator<Item = u32> + '_ {
+        let w0 = s * self.words;
+        self.bits[w0..w0 + self.words]
+            .iter()
+            .enumerate()
+            .flat_map(|(w, &bits)| {
+                let mut rest = bits;
+                std::iter::from_fn(move || {
+                    if rest == 0 {
+                        return None;
+                    }
+                    let b = rest.trailing_zeros();
+                    rest &= rest - 1;
+                    Some(w as u32 * 64 + b)
+                })
+            })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::routing::common;
+    use crate::topology::degrade;
+    use crate::topology::pgft::PgftParams;
+    use std::collections::HashSet;
+
+    fn products(t: &crate::topology::Topology) -> (Prep, Costs, Vec<u64>) {
+        let prep = Prep::new(t);
+        let costs = common::costs(t, &prep, common::DividerReduction::Max);
+        let nids = crate::routing::dmodc::topological_nids(t, &prep, &costs);
+        (prep, costs, nids)
+    }
+
+    #[test]
+    fn identical_topology_is_fully_clean() {
+        let t = PgftParams::fig1().build();
+        let (prep, costs, nids) = products(&t);
+        let mut prev = PrevProducts::default();
+        prev.capture(&prep, &costs, &nids);
+        assert!(eligibility(&prev, &prep, &costs, &nids).is_none());
+        let mut dirty = DirtySet::default();
+        let st = dirty.compute(&prev, &prep, &costs);
+        assert_eq!(st.rows_full, 0);
+        assert_eq!(st.rows_partial, 0);
+        assert_eq!(st.rows_clean, t.switches.len());
+        assert_eq!(dirty.touched_rows().count(), 0);
+    }
+
+    #[test]
+    fn parallel_cable_fault_dirties_exactly_the_endpoints() {
+        // fig1 leaves have 2 parallel links per mid: removing one keeps
+        // the group (costs, dividers, NIDs unchanged) and only the two
+        // endpoint switches' port lists change.
+        let t = PgftParams::fig1().build();
+        let (prep, costs, nids) = products(&t);
+        let mut prev = PrevProducts::default();
+        prev.capture(&prep, &costs, &nids);
+        let cable = degrade::cables(&t)[0]; // (leaf 0, port 0): parallel pair
+        let dead: HashSet<(u32, u16)> = [cable].into_iter().collect();
+        let d = degrade::apply(&t, &HashSet::new(), &dead);
+        let (dprep, dcosts, dnids) = products(&d);
+        assert!(eligibility(&prev, &dprep, &dcosts, &dnids).is_none());
+        let mut dirty = DirtySet::default();
+        let st = dirty.compute(&prev, &dprep, &dcosts);
+        assert_eq!(st.rows_full, 2, "both cable endpoints");
+        assert_eq!(st.rows_partial, 0);
+        assert_eq!(st.rows_clean, t.switches.len() - 2);
+    }
+
+    #[test]
+    fn no_history_and_shape_changes_fall_back() {
+        let t = PgftParams::fig1().build();
+        let (prep, costs, nids) = products(&t);
+        let prev = PrevProducts::default();
+        assert_eq!(
+            eligibility(&prev, &prep, &costs, &nids),
+            Some(FallbackReason::NoHistory)
+        );
+        let mut prev = PrevProducts::default();
+        prev.capture(&prep, &costs, &nids);
+        // Removing a spine changes the switch compaction.
+        let dead: HashSet<u32> = [t.switches.len() as u32 - 1].into_iter().collect();
+        let d = degrade::apply(&t, &dead, &HashSet::new());
+        let (dprep, dcosts, dnids) = products(&d);
+        assert_eq!(
+            eligibility(&prev, &dprep, &dcosts, &dnids),
+            Some(FallbackReason::ShapeChanged)
+        );
+    }
+
+    #[test]
+    fn isolated_leaf_falls_back_in_both_directions() {
+        let t = PgftParams::fig1().build();
+        let (prep, costs, nids) = products(&t);
+        // Kill every uplink cable of leaf 0.
+        let dead: HashSet<(u32, u16)> = degrade::cables(&t)
+            .into_iter()
+            .filter(|&(s, _)| s == t.leaf_switches()[0])
+            .collect();
+        assert!(!dead.is_empty());
+        let d = degrade::apply(&t, &HashSet::new(), &dead);
+        let (dprep, dcosts, dnids) = products(&d);
+        // Fault direction: new side has an uplink-less leaf.
+        let mut prev = PrevProducts::default();
+        prev.capture(&prep, &costs, &nids);
+        assert_eq!(
+            eligibility(&prev, &dprep, &dcosts, &dnids),
+            Some(FallbackReason::IsolatedLeaf)
+        );
+        // Recovery direction: the *previous* side had it.
+        let mut prev = PrevProducts::default();
+        prev.capture(&dprep, &dcosts, &dnids);
+        assert_eq!(
+            eligibility(&prev, &prep, &costs, &nids),
+            Some(FallbackReason::IsolatedLeaf)
+        );
+    }
+
+    #[test]
+    fn cols_iterates_set_bits_in_order() {
+        let t = PgftParams::small().build();
+        let (prep, costs, nids) = products(&t);
+        let mut prev = PrevProducts::default();
+        prev.capture(&prep, &costs, &nids);
+        // Kill the only link of a single-cable group (mid→top in small
+        // has p3 = 1): costs change, producing partial rows.
+        let mid = t
+            .switches
+            .iter()
+            .position(|s| s.level == 1)
+            .unwrap() as u32;
+        let cable = degrade::cables(&t)
+            .into_iter()
+            .find(|&(s, _)| s == mid)
+            .unwrap();
+        let dead: HashSet<(u32, u16)> = [cable].into_iter().collect();
+        let d = degrade::apply(&t, &HashSet::new(), &dead);
+        let (dprep, dcosts, dnids) = products(&d);
+        if eligibility(&prev, &dprep, &dcosts, &dnids).is_some() {
+            return; // NIDs shifted on this shape; nothing to iterate
+        }
+        let mut dirty = DirtySet::default();
+        let st = dirty.compute(&prev, &dprep, &dcosts);
+        let mut seen_blocks = 0usize;
+        for s in 0..d.switches.len() {
+            if dirty.row_full(s) || !dirty.row_any(s) {
+                continue;
+            }
+            let cols: Vec<u32> = dirty.cols(s).collect();
+            assert!(cols.windows(2).all(|w| w[0] < w[1]), "ascending");
+            assert!(cols.iter().all(|&li| (li as usize) < dprep.leaves.len()));
+            seen_blocks += cols.len();
+        }
+        assert_eq!(seen_blocks, st.dirty_blocks);
+    }
+}

@@ -204,6 +204,93 @@ thread_local! {
     static CLOSER: RefCell<Vec<u16>> = RefCell::new(Vec::with_capacity(256));
 }
 
+/// Fill the cells of one (switch, destination-leaf) block of a row:
+/// reset the block to [`NO_ROUTE`](crate::routing::NO_ROUTE), then apply
+/// equations (1)–(4) via the strength-reduced incremental loop.
+///
+/// Shared verbatim by the full fill ([`fill_rows`]) and the delta fill
+/// ([`fill_rows_partial`]) so the two paths cannot drift apart.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn fill_leaf_block(
+    prep: &Prep,
+    costs: &Costs,
+    nids: &[u64],
+    s: usize,
+    li: u32,
+    pi_div: u64,
+    c: &mut Vec<u16>,
+    row: &mut [u16],
+) {
+    let nodes = prep.nodes_of_leaf_idx(li);
+    for &d in nodes {
+        row[d as usize] = crate::routing::NO_ROUTE;
+    }
+    if costs.cost(s as u32, li) == INF {
+        return; // unreachable: leave NO_ROUTE
+    }
+    closer_groups_into(prep, costs, s as u32, li, c);
+    if c.is_empty() || nodes.is_empty() {
+        return;
+    }
+    let nc = c.len() as u64;
+    // Incremental eq (3)+(4) state for t = nids[first node].
+    let t0 = nids[nodes[0] as usize];
+    debug_assert!(nodes
+        .iter()
+        .enumerate()
+        .all(|(k, &n)| nids[n as usize] == t0 + k as u64));
+    let mut r_pi = t0 % pi_div; // t mod Π
+    let q = t0 / pi_div; // ⌊t/Π⌋
+    let mut gi_sel = (q % nc) as usize; // eq (3) index = q mod #C
+    let mut q2 = q / nc; // ⌊t/(Π·#C)⌋
+    for &d in nodes {
+        let g = prep.group(s, c[gi_sel] as usize);
+        let np = g.ports.len() as u64;
+        row[d as usize] = g.ports[(q2 % np) as usize];
+        // Advance t by one: q increments when r_pi wraps, q2
+        // increments when gi_sel (q mod #C) wraps.
+        r_pi += 1;
+        if r_pi == pi_div {
+            r_pi = 0;
+            gi_sel += 1;
+            if gi_sel == nc as usize {
+                gi_sel = 0;
+                q2 += 1;
+            }
+        }
+    }
+}
+
+/// Fill one whole LFT row: direct node ports, then every remote leaf's
+/// block. The row must already be all-`NO_ROUTE` (freshly reset, or
+/// cleared by the delta fill).
+#[inline]
+fn fill_row(
+    topo: &Topology,
+    prep: &Prep,
+    costs: &Costs,
+    nids: &[u64],
+    s: usize,
+    c: &mut Vec<u16>,
+    row: &mut [u16],
+) {
+    let sw = &topo.switches[s];
+    // Destinations directly linked: route straight out the port.
+    for (pi, p) in sw.ports.iter().enumerate() {
+        if let PortTarget::Node { node } = *p {
+            row[node as usize] = pi as u16;
+        }
+    }
+    let pi_div = costs.divider[s].max(1);
+    for li in 0..prep.leaves.len() as u32 {
+        if prep.leaves[li as usize] == s as u32 {
+            continue; // own leaf: direct ports already set
+        }
+        fill_leaf_block(prep, costs, nids, s, li, pi_div, c, row);
+    }
+}
+
 /// Fill every LFT row from the pipeline products (parallel over switches).
 ///
 /// Hot-path note (EXPERIMENTS.md §Perf): destinations are visited
@@ -214,59 +301,44 @@ thread_local! {
 /// (switch, destination).
 pub(crate) fn fill_rows(topo: &Topology, prep: &Prep, costs: &Costs, nids: &[u64], lft: &mut Lft) {
     let nn = topo.nodes.len();
-    let nl = prep.leaves.len();
     parallel_for_rows(lft.raw_mut(), nn, |s, row| {
         CLOSER.with(|cell| {
             let c = &mut *cell.borrow_mut();
-            let sw = &topo.switches[s];
-            // Destinations directly linked: route straight out the port.
-            for (pi, p) in sw.ports.iter().enumerate() {
-                if let PortTarget::Node { node } = *p {
-                    row[node as usize] = pi as u16;
-                }
-            }
-            let pi_div = costs.divider[s].max(1);
-            for li in 0..nl as u32 {
-                if prep.leaves[li as usize] == s as u32 {
-                    continue; // own leaf: direct ports already set
-                }
-                if costs.cost(s as u32, li) == INF {
-                    continue; // unreachable: leave NO_ROUTE
-                }
-                closer_groups_into(prep, costs, s as u32, li, c);
-                if c.is_empty() {
-                    continue;
-                }
-                let nodes = prep.nodes_of_leaf_idx(li);
-                if nodes.is_empty() {
-                    continue;
-                }
-                let nc = c.len() as u64;
-                // Incremental eq (3)+(4) state for t = nids[first node].
-                let t0 = nids[nodes[0] as usize];
-                debug_assert!(nodes
-                    .iter()
-                    .enumerate()
-                    .all(|(k, &n)| nids[n as usize] == t0 + k as u64));
-                let mut r_pi = t0 % pi_div; // t mod Π
-                let q = t0 / pi_div; // ⌊t/Π⌋
-                let mut gi_sel = (q % nc) as usize; // eq (3) index = q mod #C
-                let mut q2 = q / nc; // ⌊t/(Π·#C)⌋
-                for &d in nodes {
-                    let g = prep.group(s, c[gi_sel] as usize);
-                    let np = g.ports.len() as u64;
-                    row[d as usize] = g.ports[(q2 % np) as usize];
-                    // Advance t by one: q increments when r_pi wraps, q2
-                    // increments when gi_sel (q mod #C) wraps.
-                    r_pi += 1;
-                    if r_pi == pi_div {
-                        r_pi = 0;
-                        gi_sel += 1;
-                        if gi_sel == nc as usize {
-                            gi_sel = 0;
-                            q2 += 1;
-                        }
+            fill_row(topo, prep, costs, nids, s, c, row);
+        });
+    });
+}
+
+/// Delta-path row fill: refill only the rows/blocks `dirty` marks,
+/// leaving every proven-clean cell of `lft` untouched (see
+/// `routing::delta` for the soundness argument). Uses the same
+/// [`fill_row`]/[`fill_leaf_block`] helpers as [`fill_rows`], so the
+/// refilled cells are bit-identical to a full fill by shared code.
+pub(crate) fn fill_rows_partial(
+    topo: &Topology,
+    prep: &Prep,
+    costs: &Costs,
+    nids: &[u64],
+    dirty: &super::delta::DirtySet,
+    lft: &mut Lft,
+) {
+    let nn = topo.nodes.len();
+    parallel_for_rows(lft.raw_mut(), nn, |s, row| {
+        if !dirty.row_any(s) {
+            return;
+        }
+        CLOSER.with(|cell| {
+            let c = &mut *cell.borrow_mut();
+            if dirty.row_full(s) {
+                row.fill(crate::routing::NO_ROUTE);
+                fill_row(topo, prep, costs, nids, s, c, row);
+            } else {
+                let pi_div = costs.divider[s].max(1);
+                for li in dirty.cols(s) {
+                    if prep.leaves[li as usize] == s as u32 {
+                        continue; // own leaf: direct ports stay as-is
                     }
+                    fill_leaf_block(prep, costs, nids, s, li, pi_div, c, row);
                 }
             }
         });
@@ -422,11 +494,21 @@ impl RoutingEngine for Engine {
             alternative_ports: true,
             deterministic_history_free: true,
             reuses_costs_for_validity: true,
+            incremental: true,
         }
     }
 
     fn route_into(&mut self, topo: &Topology, out: &mut Lft) {
         self.ws.reroute_into(topo, out);
+    }
+
+    fn reroute_delta_into(
+        &mut self,
+        topo: &Topology,
+        out: &mut Lft,
+        touched: &mut Vec<u32>,
+    ) -> super::delta::DeltaOutcome {
+        self.ws.reroute_delta_into(topo, out, touched)
     }
 
     fn validate(&self, topo: &Topology, lft: &Lft) -> Result<(), String> {

@@ -65,6 +65,7 @@ impl RoutingEngine for Engine {
             alternative_ports: true,
             deterministic_history_free: true,
             reuses_costs_for_validity: true,
+            incremental: false,
         }
     }
 

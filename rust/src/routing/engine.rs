@@ -25,6 +25,7 @@
 //! [`registry`](super::registry); `route`/`route_unchecked` in
 //! [`routing`](super) remain one-shot convenience wrappers.
 
+use super::delta::{DeltaOutcome, FallbackReason};
 use super::{validity, Lft};
 use crate::topology::{NodeId, Topology};
 
@@ -44,6 +45,11 @@ pub struct Capabilities {
     /// [`RoutingEngine::validate`] reuses costs computed by the last
     /// [`RoutingEngine::route_into`] instead of rebuilding preprocessing.
     pub reuses_costs_for_validity: bool,
+    /// [`RoutingEngine::reroute_delta_into`] implements a real
+    /// incremental path (refilling only dirty rows, bit-identical to a
+    /// full reroute). Engines without it silently degrade to a full
+    /// reroute there.
+    pub incremental: bool,
 }
 
 /// A stateful routing engine over (possibly degraded) fat-tree
@@ -64,6 +70,26 @@ pub trait RoutingEngine: Send {
     /// Recompute the full LFT for `topo` into `out` (reshaped in place),
     /// reusing the engine's workspace buffers.
     fn route_into(&mut self, topo: &Topology, out: &mut Lft);
+
+    /// Incremental reroute: refill only the LFT rows the transition
+    /// from the engine's previously routed topology can change; must be
+    /// **bit-identical** to [`RoutingEngine::route_into`] either way.
+    /// `out` must hold this engine's most recent output (clean rows are
+    /// preserved); `touched` receives the refilled row indices for
+    /// partial upload accounting. The default is a full reroute
+    /// reported as [`FallbackReason::Unsupported`] — engines with
+    /// [`Capabilities::incremental`] override it.
+    fn reroute_delta_into(
+        &mut self,
+        topo: &Topology,
+        out: &mut Lft,
+        touched: &mut Vec<u32>,
+    ) -> DeltaOutcome {
+        self.route_into(topo, out);
+        touched.clear();
+        touched.extend(0..topo.switches.len() as u32);
+        DeltaOutcome::Full(FallbackReason::Unsupported)
+    }
 
     /// The paper's validity pass for the tables of the most recent
     /// [`RoutingEngine::route_into`] call. The default rebuilds
@@ -103,6 +129,21 @@ mod tests {
         let mut alts = vec![7u16; 3];
         eng.alternatives_into(&t, 0, 1, &mut alts);
         assert!(alts.is_empty());
+    }
+
+    #[test]
+    fn default_delta_is_a_full_reroute() {
+        // Engines without `incremental` degrade to route_into and say so.
+        let t = PgftParams::fig1().build();
+        let mut eng = registry::create(Algo::Updn);
+        assert!(!eng.capabilities().incremental);
+        let mut out = crate::routing::Lft::default();
+        let mut touched = vec![99u32];
+        let outcome = eng.reroute_delta_into(&t, &mut out, &mut touched);
+        assert_eq!(outcome, DeltaOutcome::Full(FallbackReason::Unsupported));
+        assert_eq!(touched.len(), t.switches.len());
+        let want = registry::create(Algo::Updn).route_once(&t);
+        assert_eq!(out.raw(), want.raw());
     }
 
     #[test]

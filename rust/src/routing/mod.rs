@@ -22,6 +22,7 @@
 //!   (OpenSM's (DF)SSSP without virtual-lane assignment, as in the paper).
 
 pub mod common;
+pub mod delta;
 pub mod dmodc;
 pub mod dmodk;
 pub mod dump;
@@ -34,6 +35,7 @@ pub mod updn;
 pub mod validity;
 pub mod workspace;
 
+pub use delta::{DeltaConfig, DeltaOutcome, DeltaStats, FallbackReason};
 pub use engine::{Capabilities, RoutingEngine};
 pub use workspace::RerouteWorkspace;
 

@@ -34,16 +34,22 @@ pub fn check_with(
     costs: &common::Costs,
 ) -> Result<(), String> {
     // Guard against stale/absent preprocessing (e.g. a cost-reusing
-    // engine validated before its first route, whose empty Prep would
-    // make every check below vacuously pass): if the cached products
-    // don't structurally describe `topo`, fall back to the from-scratch
-    // pass instead of silently reporting Ok.
+    // engine validated before its first route, or validated against a
+    // *different* topology after an incremental apply, whose cached
+    // finite costs would make the leaf-pair condition below vacuously
+    // pass): cheap structural checks first, then the topology
+    // fingerprint recorded at `Prep::build_into` time — which rejects
+    // stale products that merely *shape* like `topo` (same switch,
+    // leaf and node counts but different connectivity). On mismatch,
+    // fall back to the from-scratch pass instead of silently
+    // reporting Ok.
     let leaf_count = topo.switches.iter().filter(|s| s.level == 0).count();
     let describes_topo = prep.group_offsets.len() == topo.switches.len() + 1
         && prep.leaf_nodes.len() == topo.nodes.len()
         && prep.leaves.len() == leaf_count
         && costs.num_leaves == prep.leaves.len()
-        && costs.cost.len() == topo.switches.len() * prep.leaves.len();
+        && costs.cost.len() == topo.switches.len() * prep.leaves.len()
+        && prep.topo_fingerprint == topo.fingerprint();
     if !describes_topo {
         return check(topo, lft);
     }
@@ -270,6 +276,39 @@ mod tests {
             lft.set(up, d, rport); // bounce straight back
         }
         assert!(check(&t, &lft).is_err());
+    }
+
+    #[test]
+    fn check_with_rejects_stale_same_shaped_cache() {
+        // Two same-shaped 2-level fabrics: in A one mid (mA) reaches all
+        // three leaves, so every leaf-pair up*/down* cost is finite; in B
+        // the leaves form a chain (mA: l0,l2 — mB: l1,l2), so l0↔l1 has
+        // NO up*/down* path even though MinHop still delivers every flow
+        // (down→up turns). Validating B's tables against A's cached
+        // costs used to pass vacuously — every structural count matches;
+        // the fingerprint guard must force the from-scratch pass, which
+        // reports the broken leaf pair.
+        use crate::routing::{route_unchecked, Algo};
+        let (a, b) = crate::topology::same_shaped_star_and_chain();
+        let prep_a = Prep::new(&a);
+        let costs_a = common::costs(&a, &prep_a, DividerReduction::Max);
+        // Sanity: A's cached costs are all finite and B's tables deliver.
+        for li in 0..prep_a.leaves.len() {
+            for lj in 0..prep_a.leaves.len() {
+                assert_ne!(costs_a.cost(prep_a.leaves[li], lj as u32), INF);
+            }
+        }
+        let lft_b = route_unchecked(Algo::MinHop, &b);
+        assert_eq!(stats(&b, &lft_b).unreachable, 0, "MinHop delivers on B");
+        assert!(check(&b, &lft_b).is_err(), "B violates the validity condition");
+        // The regression: same-shaped stale cache must not pass.
+        assert!(
+            check_with(&b, &lft_b, &prep_a, &costs_a).is_err(),
+            "stale same-shaped cache slipped through the freshness guard"
+        );
+        // And the guard is not over-eager: fresh products still pass A.
+        let lft_a = dmodc::route(&a, &dmodc::Options::default());
+        assert!(check_with(&a, &lft_a, &prep_a, &costs_a).is_ok());
     }
 
     #[test]

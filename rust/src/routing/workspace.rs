@@ -16,11 +16,21 @@
 //! equivalence suite checks intact and degraded topologies, every
 //! thread count, and repeated reuse (event → recovery → event).
 //!
+//! On top of the full path, [`RerouteWorkspace::reroute_delta_into`]
+//! offers the *incremental* path (EXPERIMENTS.md §"Incremental
+//! reroute"): the cheap pipeline products are rebuilt and diffed
+//! against the previous event's, and only the LFT rows whose inputs
+//! changed are refilled — falling back to a full row fill whenever the
+//! dirty set cannot be bounded (see [`delta`](super::delta)). The delta
+//! path is bit-identical to a full reroute after every event
+//! (`tests/delta_diff.rs`).
+//!
 //! [`dmodc::Engine`] wraps this workspace behind the
 //! [`RoutingEngine`](super::RoutingEngine) trait; the baseline engines
 //! own analogous per-algorithm workspaces (see `routing/engine.rs`).
 
 use super::common::{self, Costs, Prep, PrepScratch};
+use super::delta::{self, DeltaConfig, DeltaOutcome, DeltaStats, FallbackReason};
 use super::dmodc::{self, NidOrder, NidScratch, Options};
 use super::{validity, Lft};
 use crate::topology::degrade::{self, DegradeScratch};
@@ -30,6 +40,8 @@ use std::collections::HashSet;
 /// Reusable state for repeated full reroutes (owned by `FabricManager`).
 pub struct RerouteWorkspace {
     pub opts: Options,
+    /// Knobs for the incremental path.
+    pub delta: DeltaConfig,
     /// Preprocessing of the *last rerouted* topology.
     pub prep: Prep,
     /// Algorithm-1 products for the last rerouted topology.
@@ -39,18 +51,29 @@ pub struct RerouteWorkspace {
     prep_scratch: PrepScratch,
     nid_scratch: NidScratch,
     degrade_scratch: DegradeScratch,
+    /// Products of the previous reroute (delta-path diff baseline).
+    prev: delta::PrevProducts,
+    /// Dirty-set scratch for the delta path.
+    dirty: delta::DirtySet,
+    /// A reroute has completed, so `prep`/`costs`/`nids` describe the
+    /// topology of the caller's current tables.
+    routed: bool,
 }
 
 impl RerouteWorkspace {
     pub fn new(opts: Options) -> Self {
         Self {
             opts,
+            delta: DeltaConfig::default(),
             prep: Prep::default(),
             costs: Costs::default(),
             nids: Vec::new(),
             prep_scratch: PrepScratch::default(),
             nid_scratch: NidScratch::default(),
             degrade_scratch: DegradeScratch::default(),
+            prev: delta::PrevProducts::default(),
+            dirty: delta::DirtySet::default(),
+            routed: false,
         }
     }
 
@@ -73,11 +96,9 @@ impl RerouteWorkspace {
         );
     }
 
-    /// Run the full Dmodc pipeline for `topo` into `out`, reusing every
-    /// buffer. After this call `prep`/`costs`/`nids` describe `topo`
-    /// (used by [`RerouteWorkspace::validate`] and
-    /// [`RerouteWorkspace::alternatives_into`]).
-    pub fn reroute_into(&mut self, topo: &Topology, out: &mut Lft) {
+    /// Rebuild `prep`/`costs`/`nids` for `topo` into the reused buffers
+    /// (the cheap pipeline stages, shared by the full and delta paths).
+    fn rebuild_products(&mut self, topo: &Topology) {
         Prep::build_into(topo, &mut self.prep, &mut self.prep_scratch);
         common::costs_into(topo, &self.prep, self.opts.reduction, &mut self.costs);
         match self.opts.nid_order {
@@ -95,8 +116,89 @@ impl RerouteWorkspace {
                 &mut self.nid_scratch,
             ),
         }
+    }
+
+    /// Run the full Dmodc pipeline for `topo` into `out`, reusing every
+    /// buffer. After this call `prep`/`costs`/`nids` describe `topo`
+    /// (used by [`RerouteWorkspace::validate`] and
+    /// [`RerouteWorkspace::alternatives_into`]).
+    pub fn reroute_into(&mut self, topo: &Topology, out: &mut Lft) {
+        self.rebuild_products(topo);
         out.reset(topo.switches.len(), topo.nodes.len());
         dmodc::fill_rows(topo, &self.prep, &self.costs, &self.nids, out);
+        self.routed = true;
+    }
+
+    /// Incremental reroute: refill only the LFT rows the transition from
+    /// the previously rerouted topology to `topo` can change, falling
+    /// back to a full row fill when the dirty set cannot be bounded
+    /// (see [`delta`](super::delta) for the rules). The result is
+    /// **bit-identical** to [`RerouteWorkspace::reroute_into`] either
+    /// way (`tests/delta_diff.rs` fuzzes this across random event
+    /// sequences and thread counts).
+    ///
+    /// Contract: `out` must hold the tables produced by this
+    /// workspace's most recent reroute (any entry point) — the delta
+    /// path preserves its clean rows. A shape mismatch is detected and
+    /// degrades to the full fill; content tampering (e.g. a fabric
+    /// manager's `fast_patch`) is not detectable here, so such callers
+    /// must request a full reroute instead.
+    ///
+    /// On the delta path, `touched` receives the refilled row indices
+    /// (ascending) for partial upload accounting; on the full path it
+    /// receives every row. The buffer is reused — no steady-state
+    /// allocation.
+    pub fn reroute_delta_into(
+        &mut self,
+        topo: &Topology,
+        out: &mut Lft,
+        touched: &mut Vec<u32>,
+    ) -> DeltaOutcome {
+        touched.clear();
+        // Capture the previous products before the rebuild overwrites
+        // them — they describe the topology `out` was routed for.
+        if self.routed
+            && out.num_switches() + 1 == self.prep.group_offsets.len()
+            && out.num_nodes() == self.prep.leaf_nodes.len()
+        {
+            self.prev.capture(&self.prep, &self.costs, &self.nids);
+        } else {
+            self.prev.invalidate();
+        }
+        self.rebuild_products(topo);
+
+        let mut reason = delta::eligibility(&self.prev, &self.prep, &self.costs, &self.nids);
+        let mut stats = DeltaStats::default();
+        if reason.is_none() {
+            stats = self.dirty.compute(&self.prev, &self.prep, &self.costs);
+            let rows_touched = stats.rows_full + stats.rows_partial;
+            if rows_touched as f64 > self.delta.max_dirty_row_frac * topo.switches.len() as f64
+            {
+                reason = Some(FallbackReason::Threshold);
+            }
+        }
+        let outcome = match reason {
+            Some(r) => {
+                out.reset(topo.switches.len(), topo.nodes.len());
+                dmodc::fill_rows(topo, &self.prep, &self.costs, &self.nids, out);
+                touched.extend(0..topo.switches.len() as u32);
+                DeltaOutcome::Full(r)
+            }
+            None => {
+                dmodc::fill_rows_partial(
+                    topo,
+                    &self.prep,
+                    &self.costs,
+                    &self.nids,
+                    &self.dirty,
+                    out,
+                );
+                touched.extend(self.dirty.touched_rows());
+                DeltaOutcome::Delta(stats)
+            }
+        };
+        self.routed = true;
+        outcome
     }
 
     /// The paper's validity pass for `topo`/`lft`, reusing the costs
@@ -151,6 +253,72 @@ mod tests {
             assert_eq!(out.raw(), reference.raw(), "round {round}");
             assert!(ws.validate(&topo, &out).is_ok(), "round {round}");
         }
+    }
+
+    #[test]
+    fn delta_reroute_first_call_is_full_and_correct() {
+        let t = PgftParams::fig1().build();
+        let mut ws = RerouteWorkspace::default();
+        let mut out = Lft::default();
+        let mut touched = Vec::new();
+        let outcome = ws.reroute_delta_into(&t, &mut out, &mut touched);
+        assert_eq!(outcome, DeltaOutcome::Full(FallbackReason::NoHistory));
+        assert_eq!(touched.len(), t.switches.len());
+        let want = route_reference(&t, &Options::default());
+        assert_eq!(out.raw(), want.raw());
+    }
+
+    #[test]
+    fn delta_reroute_parallel_cable_touches_two_rows() {
+        use crate::topology::degrade;
+        use std::collections::HashSet;
+        let t = PgftParams::fig1().build();
+        let mut ws = RerouteWorkspace::default();
+        let mut out = Lft::default();
+        let mut touched = Vec::new();
+        ws.reroute_delta_into(&t, &mut out, &mut touched);
+        // Kill one cable of a parallel pair: group survives, so costs,
+        // dividers and NIDs are untouched — only the endpoints refill.
+        let dead: HashSet<(SwitchId, u16)> =
+            [degrade::cables(&t)[0]].into_iter().collect();
+        let d = degrade::apply(&t, &HashSet::new(), &dead);
+        let outcome = ws.reroute_delta_into(&d, &mut out, &mut touched);
+        match outcome {
+            DeltaOutcome::Delta(st) => {
+                assert_eq!(st.rows_full, 2);
+                assert_eq!(st.rows_partial, 0);
+                assert_eq!(st.rows_clean, t.switches.len() - 2);
+            }
+            other => panic!("expected delta tier, got {other:?}"),
+        }
+        assert_eq!(touched.len(), 2);
+        let want = route_reference(&d, &Options::default());
+        assert_eq!(out.raw(), want.raw());
+        assert!(ws.validate(&d, &out).is_ok());
+        // Recovery is delta-eligible too and restores the exact tables.
+        let outcome = ws.reroute_delta_into(&t, &mut out, &mut touched);
+        assert!(outcome.is_delta(), "recovery outcome {outcome:?}");
+        let want = route_reference(&t, &Options::default());
+        assert_eq!(out.raw(), want.raw());
+    }
+
+    #[test]
+    fn delta_reroute_switch_fault_falls_back() {
+        use crate::topology::degrade;
+        use std::collections::HashSet;
+        let t = PgftParams::fig1().build();
+        let mut ws = RerouteWorkspace::default();
+        let mut out = Lft::default();
+        let mut touched = Vec::new();
+        ws.reroute_delta_into(&t, &mut out, &mut touched);
+        let dead: HashSet<SwitchId> =
+            [t.switches.len() as SwitchId - 1].into_iter().collect();
+        let d = degrade::apply(&t, &dead, &HashSet::new());
+        let outcome = ws.reroute_delta_into(&d, &mut out, &mut touched);
+        assert_eq!(outcome, DeltaOutcome::Full(FallbackReason::ShapeChanged));
+        assert_eq!(touched.len(), d.switches.len());
+        let want = route_reference(&d, &Options::default());
+        assert_eq!(out.raw(), want.raw());
     }
 
     #[test]

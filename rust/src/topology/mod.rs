@@ -135,6 +135,52 @@ impl Topology {
             .sum()
     }
 
+    /// Structural fingerprint: FNV-1a over the complete connectivity
+    /// (switch UUIDs, levels, every port target, node attachment).
+    /// Two topologies compare equal iff they are structurally
+    /// identical, up to hash collision. O(ports + nodes), allocation
+    /// free — cheap enough for per-call cache-freshness guards
+    /// (`routing::validity::check_with`), where it distinguishes
+    /// same-shaped topologies that pure size checks cannot.
+    pub fn fingerprint(&self) -> u64 {
+        const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const PRIME: u64 = 0x0000_0100_0000_01b3;
+        #[inline]
+        fn mix(h: u64, v: u64) -> u64 {
+            let mut h = h;
+            for b in v.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(PRIME);
+            }
+            h
+        }
+        let mut h = OFFSET;
+        h = mix(h, self.num_levels as u64);
+        h = mix(h, self.switches.len() as u64);
+        h = mix(h, self.nodes.len() as u64);
+        for sw in &self.switches {
+            h = mix(h, sw.uuid);
+            h = mix(h, sw.level as u64);
+            h = mix(h, sw.ports.len() as u64);
+            for p in &sw.ports {
+                match *p {
+                    PortTarget::Switch { sw, rport } => {
+                        h = mix(h, 1 + (((sw as u64) << 16) | rport as u64));
+                    }
+                    PortTarget::Node { node } => {
+                        h = mix(h, u64::MAX ^ node as u64);
+                    }
+                }
+            }
+        }
+        for n in &self.nodes {
+            h = mix(h, n.uuid);
+            h = mix(h, ((n.leaf as u64) << 16) | n.leaf_port as u64);
+        }
+        // Never collide with the zero an empty cache carries.
+        h | 1
+    }
+
     /// Check structural invariants; returns an error string on violation.
     /// Used by tests and the degradation pipeline.
     pub fn check_invariants(&self) -> Result<(), String> {
@@ -285,6 +331,43 @@ impl Builder {
     }
 }
 
+/// Deterministic same-shaped fixture pair for cache-staleness
+/// regressions (the `routing::validity::check_with` fingerprint guard):
+/// `star` routes all three leaves through one mid, so every leaf-pair
+/// up*/down* cost is finite; `chain` wires l0–mA–l2–mB–l1, so l0↔l1
+/// has **no** up*/down* path even though unrestricted routing still
+/// delivers every flow — and the two fabrics agree on every structural
+/// count (switches, levels, leaves, nodes, cost-table shape). Shared by
+/// the validity unit test and `tests/delta_diff.rs` so the scenario
+/// cannot drift between the two regressions.
+#[doc(hidden)]
+pub fn same_shaped_star_and_chain() -> (Topology, Topology) {
+    fn build(chain: bool) -> Topology {
+        let mut b = Builder::new();
+        let l0 = b.add_switch(fab_uuid(7, 0), 0);
+        let l1 = b.add_switch(fab_uuid(7, 1), 0);
+        let l2 = b.add_switch(fab_uuid(7, 2), 0);
+        let ma = b.add_switch(fab_uuid(8, 0), 1);
+        let mb = b.add_switch(fab_uuid(8, 1), 1);
+        if chain {
+            b.connect(l0, ma, 1);
+            b.connect(l2, ma, 1);
+            b.connect(l1, mb, 1);
+            b.connect(l2, mb, 1);
+        } else {
+            b.connect(l0, ma, 1);
+            b.connect(l1, ma, 1);
+            b.connect(l2, ma, 1);
+            b.connect(l2, mb, 1);
+        }
+        for (leaf, k) in [(l0, 0u64), (l1, 1), (l2, 2)] {
+            b.attach_node(leaf, fab_uuid(9, k));
+        }
+        b.finish()
+    }
+    (build(false), build(true))
+}
+
 /// Deterministically scrambled UUID for construction: models arbitrary
 /// fabrication-time identifiers while staying reproducible.
 pub fn fab_uuid(class: u64, index: u64) -> u64 {
@@ -366,6 +449,28 @@ mod tests {
         let mut b = Builder::new();
         let s = b.add_switch(1, 0);
         b.connect(s, s, 1);
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_same_shaped_topologies() {
+        let a = tiny();
+        assert_eq!(a.fingerprint(), tiny().fingerprint(), "deterministic");
+        assert_ne!(a.fingerprint(), 0);
+        // Same switch/node/level counts, different wiring.
+        let mut b = Builder::new();
+        let l0 = b.add_switch(fab_uuid(0, 0), 0);
+        let l1 = b.add_switch(fab_uuid(0, 1), 0);
+        let s = b.add_switch(fab_uuid(1, 0), 1);
+        b.connect(l0, s, 2); // tiny() has 1 here and 2 on l1
+        b.connect(l1, s, 1);
+        for i in 0..2 {
+            b.attach_node(l0, fab_uuid(9, i));
+            b.attach_node(l1, fab_uuid(9, 2 + i));
+        }
+        let b = b.finish();
+        assert_eq!(b.switches.len(), a.switches.len());
+        assert_eq!(b.nodes.len(), a.nodes.len());
+        assert_ne!(a.fingerprint(), b.fingerprint());
     }
 
     #[test]

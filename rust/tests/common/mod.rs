@@ -1,0 +1,24 @@
+//! Shared helpers for the integration-test binaries (not a test target
+//! itself; each `tests/*.rs` crate pulls this in with `mod common;`).
+
+use dmodc::prelude::*;
+
+/// Random small PGFT parameters scaled by the property-runner's size
+/// hint in `[0, 1]` (small cases first). Shared by the routing property
+/// suite (`routing_props.rs`) and the delta differential suite
+/// (`delta_diff.rs`) so both fuzz the same shape family.
+pub fn gen_pgft(rng: &mut Rng, size: f64) -> PgftParams {
+    let s = |lo: usize, hi: usize, rng: &mut Rng| {
+        lo + rng.gen_range(((hi - lo) as f64 * size) as usize + 1)
+    };
+    let levels = 2 + rng.gen_range(2); // 2 or 3
+    let mut m = vec![s(2, 4, rng) as u32];
+    let mut w = vec![1u32];
+    let mut p = vec![1u32];
+    for _ in 1..levels {
+        m.push(s(2, 4, rng) as u32);
+        w.push(s(1, 3, rng) as u32);
+        p.push(s(1, 2, rng) as u32);
+    }
+    PgftParams::new(m, w, p)
+}

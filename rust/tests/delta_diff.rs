@@ -1,0 +1,333 @@
+//! Differential suite for the incremental (delta) reroute path.
+//!
+//! The delta path's one promise (see `routing::delta`): after **every**
+//! event — cable or switch, fault or recovery, in any order — the
+//! tables it maintains are bit-identical to a from-scratch full reroute
+//! of the current degraded topology. This suite enforces that promise:
+//!
+//! * a property-based fuzz over random PGFT shapes × random interleaved
+//!   event sequences (reusing the shared `tests/common` generator and
+//!   the in-tree shrinking runner), for both divider reductions, swept
+//!   at 1 and 8 worker threads;
+//! * deterministic degradation edge cases: a leaf losing its last
+//!   upward parent (fully disconnected destinations), and the recovery
+//!   restoring it — asserting the validity pass reports the broken
+//!   flows and the delta tier falls back to a full reroute;
+//! * the staleness regression: after a delta apply, validating a
+//!   same-shaped but different topology must not vacuously pass off the
+//!   cached costs (the `Prep` fingerprint guard).
+//!
+//! Tests that sweep the global worker-count override serialize on one
+//! mutex (same discipline as `tests/equivalence.rs`).
+
+use dmodc::prelude::*;
+use dmodc::routing::common::DividerReduction;
+use dmodc::routing::dmodc::{route_reference, NidOrder, Options};
+use dmodc::routing::{
+    route_unchecked, validity, DeltaOutcome, FallbackReason, Lft, RerouteWorkspace,
+};
+use dmodc::util::par;
+use dmodc::util::prop::{check, Check, Config};
+use std::collections::HashSet;
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+mod common;
+use common::gen_pgft;
+
+/// Serializes tests that override the global worker count.
+fn lock() -> MutexGuard<'static, ()> {
+    static M: OnceLock<Mutex<()>> = OnceLock::new();
+    M.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+}
+
+/// A delta-differential scenario: a topology shape plus a seed driving
+/// a random interleaved fault/recovery event sequence.
+#[derive(Clone, Debug)]
+struct Scenario {
+    params: PgftParams,
+    seed: u64,
+    n_events: usize,
+}
+
+fn gen_scenario(rng: &mut Rng, size: f64) -> Scenario {
+    Scenario {
+        params: gen_pgft(rng, size),
+        seed: rng.next_u64(),
+        n_events: 1 + rng.gen_range(8),
+    }
+}
+
+fn shrink_scenario(s: &Scenario) -> Vec<Scenario> {
+    let mut out = Vec::new();
+    if s.n_events > 1 {
+        out.push(Scenario {
+            n_events: s.n_events - 1,
+            ..s.clone()
+        });
+    }
+    out
+}
+
+/// Drive one workspace through the scenario's event sequence on the
+/// delta entry point, comparing against a from-scratch full reroute
+/// after every step. Returns the number of steps served by the delta
+/// tier.
+fn run_scenario(s: &Scenario, reduction: DividerReduction) -> Result<usize, String> {
+    let base = s.params.build();
+    let cables = degrade::cables(&base);
+    let removable = degrade::removable_switches(&base);
+    let opts = Options {
+        reduction,
+        nid_order: NidOrder::Topological,
+    };
+    let mut rng = Rng::new(s.seed);
+    let mut dead_cb: HashSet<(SwitchId, u16)> = HashSet::new();
+    let mut dead_sw: HashSet<SwitchId> = HashSet::new();
+    let mut ws = RerouteWorkspace::new(opts);
+    let mut topo = Topology::default();
+    let mut lft = Lft::default();
+    let mut touched = Vec::new();
+    let mut delta_steps = 0usize;
+    for step in 0..s.n_events {
+        // Interleave: mostly cable toggles (fault if alive, recovery if
+        // dead), sometimes switch toggles — the delta path must handle
+        // arbitrary transitions, not just single-cable ones.
+        if rng.gen_range(3) < 2 || removable.is_empty() {
+            let c = cables[rng.gen_range(cables.len())];
+            if !dead_cb.remove(&c) {
+                dead_cb.insert(c);
+            }
+        } else {
+            let sw = removable[rng.gen_range(removable.len())];
+            if !dead_sw.remove(&sw) {
+                dead_sw.insert(sw);
+            }
+        }
+        ws.materialize(&base, &dead_sw, &dead_cb, &mut topo);
+        let outcome = ws.reroute_delta_into(&topo, &mut lft, &mut touched);
+        if outcome.is_delta() {
+            delta_steps += 1;
+        }
+        let want_topo = degrade::apply(&base, &dead_sw, &dead_cb);
+        let want = route_reference(&want_topo, &opts);
+        if lft.raw() != want.raw() {
+            let diff = lft
+                .raw()
+                .iter()
+                .zip(want.raw())
+                .filter(|(a, b)| a != b)
+                .count();
+            return Err(format!(
+                "step {step} ({:?}, {} dead switches, {} dead cables): \
+                 delta path diverged from full reroute in {diff} entries \
+                 (outcome {outcome:?})",
+                reduction,
+                dead_sw.len(),
+                dead_cb.len()
+            ));
+        }
+    }
+    Ok(delta_steps)
+}
+
+fn fuzz_at(threads: usize) {
+    let _g = lock();
+    par::set_threads(Some(threads));
+    for reduction in [DividerReduction::Max, DividerReduction::FirstPath] {
+        check(
+            &format!("delta-bit-identical-{reduction:?}-t{threads}"),
+            Config::default(),
+            gen_scenario,
+            shrink_scenario,
+            |s| match run_scenario(s, reduction) {
+                Ok(_) => Check::Pass,
+                Err(msg) => Check::Fail(msg),
+            },
+        );
+    }
+    par::set_threads(None);
+}
+
+#[test]
+fn delta_fuzz_bit_identical_single_thread() {
+    fuzz_at(1);
+}
+
+#[test]
+fn delta_fuzz_bit_identical_eight_threads() {
+    fuzz_at(8);
+}
+
+#[test]
+fn scripted_cable_storm_takes_delta_tier_and_matches() {
+    // A cable-only storm on the canonical shapes must actually exercise
+    // the delta tier (not just fall back) while staying bit-identical,
+    // for both divider reductions.
+    let _g = lock();
+    for params in [PgftParams::fig1(), PgftParams::small()] {
+        let base = params.build();
+        let cables = degrade::cables(&base);
+        for reduction in [DividerReduction::Max, DividerReduction::FirstPath] {
+            let opts = Options {
+                reduction,
+                nid_order: NidOrder::Topological,
+            };
+            let mut ws = RerouteWorkspace::new(opts);
+            let mut topo = Topology::default();
+            let mut lft = Lft::default();
+            let mut touched = Vec::new();
+            let mut dead_cb: HashSet<(SwitchId, u16)> = HashSet::new();
+            let mut delta_steps = 0usize;
+            // Fault three cables one by one, then recover them in
+            // reverse order.
+            let script: Vec<(SwitchId, u16)> = vec![cables[0], cables[2], cables[4]];
+            let mut steps: Vec<HashSet<(SwitchId, u16)>> = Vec::new();
+            let mut acc = HashSet::new();
+            steps.push(acc.clone());
+            for &c in &script {
+                acc.insert(c);
+                steps.push(acc.clone());
+            }
+            for &c in script.iter().rev() {
+                acc.remove(&c);
+                steps.push(acc.clone());
+            }
+            for (i, dead) in steps.iter().enumerate() {
+                dead_cb.clone_from(dead);
+                ws.materialize(&base, &HashSet::new(), &dead_cb, &mut topo);
+                let outcome = ws.reroute_delta_into(&topo, &mut lft, &mut touched);
+                if outcome.is_delta() {
+                    delta_steps += 1;
+                }
+                let want_topo = degrade::apply(&base, &HashSet::new(), &dead_cb);
+                let want = route_reference(&want_topo, &opts);
+                assert_eq!(lft.raw(), want.raw(), "step {i} {reduction:?}");
+            }
+            assert!(
+                delta_steps > 0,
+                "{reduction:?}: the storm never reached the delta tier"
+            );
+        }
+    }
+}
+
+#[test]
+fn leaf_losing_last_uplink_falls_back_and_reports_broken_flows() {
+    // Degradation edge case: a leaf switch loses its last upward
+    // parent. Its destinations become unreachable (validity must name
+    // the broken flows), the delta tier must refuse to bound the damage
+    // (IsolatedLeaf fallback) in BOTH directions of the event, and the
+    // tables must stay bit-identical to a full reroute throughout.
+    let t = PgftParams::fig1().build();
+    let leaf0 = t.leaf_switches()[0];
+    let uplinks: HashSet<(SwitchId, u16)> = degrade::cables(&t)
+        .into_iter()
+        .filter(|&(s, _)| s == leaf0)
+        .collect();
+    assert_eq!(uplinks.len(), 4, "fig1 leaves have w2*p2 = 4 uplink cables");
+    let mut ws = RerouteWorkspace::default();
+    let mut topo = Topology::default();
+    let mut lft = Lft::default();
+    let mut touched = Vec::new();
+    ws.materialize(&t, &HashSet::new(), &HashSet::new(), &mut topo);
+    ws.reroute_delta_into(&topo, &mut lft, &mut touched);
+    assert!(ws.validate(&topo, &lft).is_ok());
+
+    // Fault: all four uplinks at once.
+    ws.materialize(&t, &HashSet::new(), &uplinks, &mut topo);
+    let outcome = ws.reroute_delta_into(&topo, &mut lft, &mut touched);
+    assert_eq!(
+        outcome,
+        DeltaOutcome::Full(FallbackReason::IsolatedLeaf),
+        "an uplink-less leaf cannot be bounded by the dirty-set rule"
+    );
+    let err = ws.validate(&topo, &lft).unwrap_err();
+    assert!(
+        err.contains("no up*/down* path") || err.contains("no route"),
+        "validity must report the broken connectivity, got: {err}"
+    );
+    let st = validity::stats(&topo, &lft);
+    // 2 nodes behind leaf0: 10 outgoing flows (leaf0 → other nodes) and
+    // 10 incoming (5 other leaves × 2 nodes) are broken.
+    assert_eq!(st.unreachable, 20, "exactly the isolated leaf's flows break");
+    let want = route_reference(&topo, &Options::default());
+    assert_eq!(lft.raw(), want.raw(), "fallback is still bit-identical");
+
+    // Recovery: the previous topology had the isolated leaf, so the
+    // delta tier must fall back again — and restore the intact tables
+    // exactly.
+    ws.materialize(&t, &HashSet::new(), &HashSet::new(), &mut topo);
+    let outcome = ws.reroute_delta_into(&topo, &mut lft, &mut touched);
+    assert_eq!(outcome, DeltaOutcome::Full(FallbackReason::IsolatedLeaf));
+    assert!(ws.validate(&topo, &lft).is_ok());
+    let want = route_reference(&topo, &Options::default());
+    assert_eq!(lft.raw(), want.raw());
+}
+
+#[test]
+fn manager_reports_isolation_and_recovery_through_the_tiers() {
+    use dmodc::fabric::{events, FabricManager, ManagerConfig, ReactionTier};
+    let t = PgftParams::fig1().build();
+    let leaf0 = t.leaf_switches()[0];
+    let uplinks: Vec<events::CableId> = events::cable_ids(&t)
+        .into_iter()
+        .filter(|&(_, (s, _))| s == leaf0)
+        .map(|(c, _)| c)
+        .collect();
+    assert_eq!(uplinks.len(), 4);
+    let mut mgr = FabricManager::new(t, ManagerConfig::default());
+    let mut last = None;
+    for (i, c) in uplinks.iter().enumerate() {
+        last = Some(mgr.apply(&events::Event {
+            at_ms: i as u64 + 1,
+            kind: events::EventKind::LinkDown(*c),
+        }));
+    }
+    let last = last.unwrap();
+    assert_eq!(
+        last.tier,
+        ReactionTier::Full,
+        "isolating the leaf must fall back to the full tier"
+    );
+    assert!(!last.valid, "validity must flag the unreachable destinations");
+    assert!(mgr.metrics.delta_fallbacks >= 1);
+    // Recovery of a single uplink reconnects the leaf; the event is
+    // delta-attempted but falls back (previous side was isolated), and
+    // validity holds again.
+    let r = mgr.apply(&events::Event {
+        at_ms: 9,
+        kind: events::EventKind::LinkUp(uplinks[0]),
+    });
+    assert_eq!(r.tier, ReactionTier::Full);
+    assert!(r.valid, "one restored uplink reconnects every flow");
+}
+
+#[test]
+fn stale_cache_validate_after_delta_apply_cannot_vacuously_pass() {
+    // Regression (staleness guard): build two same-shaped 2-level
+    // fabrics — in A one mid reaches all three leaves (all up*/down*
+    // costs finite); in B the leaves form a chain through leaf l2, so
+    // l0↔l1 has no up*/down* path even though MinHop still delivers
+    // every flow via a down→up turn. After a *delta* apply of A, the
+    // workspace's cached costs structurally match B; only the topology
+    // fingerprint distinguishes them. Validation against B must fall
+    // back to the from-scratch pass and fail — not vacuously pass.
+    let (a, b) = dmodc::topology::same_shaped_star_and_chain();
+    let mut ws = RerouteWorkspace::default();
+    let mut lft = Lft::default();
+    let mut touched = Vec::new();
+    ws.reroute_delta_into(&a, &mut lft, &mut touched);
+    assert!(ws.validate(&a, &lft).is_ok(), "A itself is valid");
+    let lft_b = route_unchecked(Algo::MinHop, &b);
+    assert_eq!(
+        validity::stats(&b, &lft_b).unreachable,
+        0,
+        "MinHop delivers on B (the trace pass alone would not object)"
+    );
+    assert!(
+        ws.validate(&b, &lft_b).is_err(),
+        "stale same-shaped cached costs must not validate a different topology"
+    );
+}

@@ -382,3 +382,98 @@ fn steady_state_reroutes_allocation_free_for_every_engine() {
     }
     par::set_threads(None);
 }
+
+#[test]
+fn delta_reroutes_bit_identical_for_every_engine_across_reuse() {
+    // The incremental entry point must equal a fresh full reroute for
+    // every engine — the default implementation trivially (it *is* a
+    // full reroute), Dmodc's real delta path by the dirty-set proof —
+    // across arbitrary intact/degraded scenario transitions, at every
+    // thread count.
+    let _g = lock();
+    for threads in THREAD_COUNTS {
+        par::set_threads(Some(threads));
+        for algo in Algo::ALL {
+            let mut engine = registry::create(algo);
+            let mut out = Lft::default();
+            let mut touched = Vec::new();
+            for (name, topo) in scenario_topologies() {
+                let before = out.raw().to_vec();
+                let before_switches = out.num_switches();
+                let outcome = engine.reroute_delta_into(&topo, &mut out, &mut touched);
+                let want = free_route(algo, &topo);
+                assert_eq!(
+                    out.raw(),
+                    want.raw(),
+                    "{algo} {name} t={threads} ({outcome:?})"
+                );
+                assert!(touched.windows(2).all(|w| w[0] < w[1]), "sorted rows");
+                // Sufficiency of the dirty set — what the partial
+                // upload commit relies on: every row that differs from
+                // the previous tables must be in `touched`.
+                if before_switches == out.num_switches() && before.len() == out.raw().len() {
+                    let n = out.num_nodes().max(1);
+                    for s in 0..out.num_switches() {
+                        if before[s * n..(s + 1) * n] != out.raw()[s * n..(s + 1) * n] {
+                            assert!(
+                                touched.binary_search(&(s as u32)).is_ok(),
+                                "{algo} {name} t={threads}: changed row {s} not in touched"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+    par::set_threads(None);
+}
+
+#[test]
+fn steady_state_delta_reroute_is_allocation_free() {
+    // The delta path obeys the same allocation contract as the full
+    // path: prev-product capture, product rebuild, dirty-set diff and
+    // partial fill all run out of reused buffers once warm — including
+    // on fallback transitions.
+    let _g = lock();
+    par::set_threads(Some(1));
+    let base = PgftParams::small().build();
+    let cables = dmodc::topology::degrade::cables(&base);
+    let fault_a: HashSet<(SwitchId, u16)> = [cables[0]].into_iter().collect();
+    let fault_b: HashSet<(SwitchId, u16)> = [cables[0], cables[6]].into_iter().collect();
+    let script: Vec<HashSet<(SwitchId, u16)>> = vec![
+        fault_a.clone(),
+        fault_b,
+        fault_a,
+        HashSet::new(),
+    ];
+    let no_switches: HashSet<SwitchId> = HashSet::new();
+    let mut ws = RerouteWorkspace::default();
+    let mut topo = Topology::default();
+    let mut out = Lft::default();
+    let mut touched = Vec::new();
+    let cycle = |ws: &mut RerouteWorkspace,
+                     topo: &mut Topology,
+                     out: &mut Lft,
+                     touched: &mut Vec<u32>| {
+        for dead in &script {
+            ws.materialize(&base, &no_switches, dead, topo);
+            ws.reroute_delta_into(topo, out, touched);
+        }
+    };
+    // Warm up: two full cycles converge every buffer capacity
+    // (including the delta path's prev-product and dirty-set buffers).
+    for _ in 0..2 {
+        cycle(&mut ws, &mut topo, &mut out, &mut touched);
+    }
+    let before = thread_allocs();
+    cycle(&mut ws, &mut topo, &mut out, &mut touched);
+    let delta = thread_allocs() - before;
+    assert_eq!(
+        delta, 0,
+        "steady-state delta reroute must not allocate (single-thread)"
+    );
+    // The measured cycle still produced correct tables.
+    let want = route_reference(&base, &Options::default());
+    assert_eq!(out.raw(), want.raw());
+    par::set_threads(None);
+}

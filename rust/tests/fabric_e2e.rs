@@ -130,7 +130,7 @@ fn manager_fault_recovery_under_every_engine() {
             t.clone(),
             ManagerConfig {
                 algo,
-                validate: true,
+                ..Default::default()
             },
         );
         let caps = mgr.engine().capabilities();
@@ -176,7 +176,7 @@ fn fast_patch_gates_on_alternative_ports_capability() {
             t.clone(),
             ManagerConfig {
                 algo,
-                validate: true,
+                ..Default::default()
             },
         );
         let caps = mgr.engine().capabilities();
@@ -339,4 +339,54 @@ fn stream_mode_under_concurrent_producer() {
     assert_eq!(reports.len(), 25);
     assert_eq!(events_seen, 25);
     assert_eq!(reroutes, 26); // +1 initial
+}
+
+#[test]
+fn delta_manager_matches_full_manager_across_a_storm() {
+    // Two managers over the same schedule — one with the delta tier,
+    // one forced to full reroutes — must hold bit-identical tables and
+    // identical upload accounting after every event (partial commits
+    // diff only refilled rows, which is exact, not an approximation).
+    let t = PgftParams::small().build();
+    let mut rng = Rng::new(4242);
+    let schedule = events::random_schedule(&t, &mut rng, 40, 10, 9);
+    let mut with_delta = FabricManager::new(t.clone(), ManagerConfig::default());
+    let mut full_only = FabricManager::new(
+        t,
+        ManagerConfig {
+            delta: false,
+            ..Default::default()
+        },
+    );
+    for (i, e) in schedule.iter().enumerate() {
+        let rd = with_delta.apply(e);
+        let rf = full_only.apply(e);
+        assert_eq!(
+            with_delta.current().1.raw(),
+            full_only.current().1.raw(),
+            "event {i} ({:?}): delta tables drifted from full reroute",
+            e.kind
+        );
+        assert_eq!(rd.upload, rf.upload, "event {i}: upload accounting drifted");
+        assert_eq!(rd.valid, rf.valid, "event {i}");
+    }
+    assert_eq!(
+        with_delta.metrics.entries_changed,
+        full_only.metrics.entries_changed
+    );
+    assert_eq!(
+        with_delta.metrics.blocks_uploaded,
+        full_only.metrics.blocks_uploaded
+    );
+    assert_eq!(
+        with_delta.metrics.delta_reroutes + with_delta.metrics.delta_fallbacks,
+        schedule
+            .iter()
+            .filter(|e| matches!(
+                e.kind,
+                events::EventKind::LinkDown(_) | events::EventKind::LinkUp(_)
+            ))
+            .count() as u64,
+        "every cable event attempted the delta tier"
+    );
 }

@@ -1,0 +1,126 @@
+//! Golden LFT snapshot tests: `routing::dump` output for canonical
+//! PGFTs is checked in under `tests/golden/` and compared
+//! **byte-for-byte**, so *any* silent routing drift in a future PR —
+//! a tie-break change, a reordered sweep, an off-by-one in the modulo
+//! chain — fails loudly instead of slipping through behavioral tests.
+//!
+//! Scenarios: the paper's Figure-1 PGFT and the `small()` test shape,
+//! each intact and with one deterministic degraded throw (a fixed
+//! cable removed), under both divider reductions. The golden files
+//! were produced by the independent Python reference implementation
+//! (`python/tools/gen_golden.py`), so Rust and Python cross-validate
+//! each other; regenerate with:
+//!
+//! ```text
+//! python3 python/tools/gen_golden.py rust/tests/golden      # reference
+//! GOLDEN_REGEN=1 cargo test --test golden_lft               # from Rust
+//! ```
+//!
+//! A failure therefore means one of the two implementations moved —
+//! inspect the diff before even thinking about regenerating.
+
+use dmodc::prelude::*;
+use dmodc::routing::common::DividerReduction;
+use dmodc::routing::dmodc::{route, NidOrder, Options};
+use dmodc::routing::dump;
+use std::collections::HashSet;
+
+/// The canonical snapshot scenarios (mirrored by
+/// `python/tools/gen_golden.py`). The degraded throw removes BOTH
+/// parallel cables of leaf 0's first uplink group — a whole-group kill
+/// changes that leaf's up-group count, which is exactly where the Max
+/// and FirstPath divider reductions diverge, so the snapshots pin both
+/// down. Deterministic: fixed `degrade::cables` indices, no RNG.
+fn scenarios() -> Vec<(&'static str, Topology)> {
+    let fig1 = PgftParams::fig1().build();
+    let small = PgftParams::small().build();
+    let cut_group0 = |t: &Topology| {
+        let cbs = degrade::cables(t);
+        let dead: HashSet<(SwitchId, u16)> = [cbs[0], cbs[1]].into_iter().collect();
+        degrade::apply(t, &HashSet::new(), &dead)
+    };
+    vec![
+        ("fig1_intact", fig1.clone()),
+        ("fig1_group0", cut_group0(&fig1)),
+        ("small_intact", small.clone()),
+        ("small_group0", cut_group0(&small)),
+    ]
+}
+
+#[test]
+fn golden_lfts_byte_identical() {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/golden");
+    let regen = std::env::var("GOLDEN_REGEN").is_ok();
+    for (name, topo) in scenarios() {
+        for (rname, reduction) in [
+            ("max", DividerReduction::Max),
+            ("firstpath", DividerReduction::FirstPath),
+        ] {
+            let lft = route(
+                &topo,
+                &Options {
+                    reduction,
+                    nid_order: NidOrder::Topological,
+                },
+            );
+            let text = dump::dump(&topo, &lft);
+            let path = format!("{dir}/{name}_{rname}.lft");
+            if regen {
+                std::fs::write(&path, &text).expect("write golden");
+                continue;
+            }
+            let want = std::fs::read_to_string(&path)
+                .unwrap_or_else(|e| panic!("missing golden {path}: {e}"));
+            assert_eq!(
+                text, want,
+                "golden LFT drift in {name}_{rname} — routing output changed; \
+                 diff {path} against the new dump before touching the snapshot"
+            );
+        }
+    }
+}
+
+#[test]
+fn golden_scenarios_stay_valid() {
+    // Sanity on the snapshot inputs themselves: every scenario —
+    // including the group-kill throws — remains fully connected, so
+    // the snapshots describe complete routing functions.
+    for (name, topo) in scenarios() {
+        let lft = route(&topo, &Options::default());
+        dmodc::routing::validity::check(&topo, &lft)
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert_eq!(
+            topo.leaf_switches().len(),
+            if name.starts_with("fig1") { 6 } else { 18 },
+            "{name}"
+        );
+    }
+}
+
+#[test]
+fn golden_reductions_diverge_on_the_group_kill() {
+    // The whole point of the group-kill throw: Max and FirstPath pick
+    // different dividers there, so the snapshot pair pins down both
+    // reductions (on the intact shapes they coincide).
+    for (name, topo) in scenarios() {
+        let max = route(
+            &topo,
+            &Options {
+                reduction: DividerReduction::Max,
+                nid_order: NidOrder::Topological,
+            },
+        );
+        let fp = route(
+            &topo,
+            &Options {
+                reduction: DividerReduction::FirstPath,
+                nid_order: NidOrder::Topological,
+            },
+        );
+        if name.ends_with("_group0") {
+            assert_ne!(max.raw(), fp.raw(), "{name}: reductions should diverge");
+        } else {
+            assert_eq!(max.raw(), fp.raw(), "{name}: intact reductions coincide");
+        }
+    }
+}

@@ -2,25 +2,11 @@
 //! (util::prop — the in-tree proptest substrate).
 
 use dmodc::prelude::*;
-use dmodc::routing::{common, dmodc as dmodc_algo, route_unchecked, validity};
+use dmodc::routing::{common as routing_common, dmodc as dmodc_algo, route_unchecked, validity};
 use dmodc::util::prop::{check, Check, Config};
 
-/// Random small PGFT parameters scaled by the size hint.
-fn gen_pgft(rng: &mut Rng, size: f64) -> PgftParams {
-    let s = |lo: usize, hi: usize, rng: &mut Rng| {
-        lo + rng.gen_range(((hi - lo) as f64 * size) as usize + 1)
-    };
-    let levels = 2 + rng.gen_range(2); // 2 or 3
-    let mut m = vec![s(2, 4, rng) as u32];
-    let mut w = vec![1u32];
-    let mut p = vec![1u32];
-    for _ in 1..levels {
-        m.push(s(2, 4, rng) as u32);
-        w.push(s(1, 3, rng) as u32);
-        p.push(s(1, 2, rng) as u32);
-    }
-    PgftParams::new(m, w, p)
-}
+mod common;
+use common::gen_pgft;
 
 /// A degradation scenario: a topology shape + seed + fault counts.
 #[derive(Clone, Debug)]
@@ -167,8 +153,8 @@ fn prop_leaf_costs_symmetric() {
         shrink_scenario,
         |s| {
             let t = degraded(s);
-            let prep = common::Prep::new(&t);
-            let c = common::costs(&t, &prep, common::DividerReduction::Max);
+            let prep = routing_common::Prep::new(&t);
+            let c = routing_common::costs(&t, &prep, routing_common::DividerReduction::Max);
             for (i, &li) in prep.leaves.iter().enumerate() {
                 for (j, &lj) in prep.leaves.iter().enumerate() {
                     if c.cost(li, j as u32) != c.cost(lj, i as u32) {
