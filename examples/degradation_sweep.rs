@@ -1,0 +1,112 @@
+//! Figure 4-style degradation sweep: congestion risk vs degradation
+//! fraction for every registered engine and all three patterns, driven
+//! through the `analysis::campaign` engine (reused workspaces + tensors,
+//! parallel across samples), emitting the per-sample CSV the python
+//! plotting tools consume.
+//!
+//!     cargo run --release --example degradation_sweep -- \
+//!         [--pgft "16,9,12;1,4,6;1,1,1"] [--fractions 0,1,2,5,10] \
+//!         [--throws 5] [--csv bench_results/degradation_sweep.csv]
+
+use dmodc::analysis::campaign::{self, CampaignConfig};
+use dmodc::prelude::*;
+use dmodc::util::cli::Args;
+use dmodc::util::table::Table;
+use std::time::Instant;
+
+fn main() {
+    let p = Args::new("degradation_sweep", "Figure 4-style risk-vs-degradation sweep")
+        .flag("pgft", "16,9,12;1,4,6;1,1,1", "PGFT parameters (1728 nodes)")
+        .flag("fractions", "0,1,2,5,10", "degradation levels in % of cables")
+        .flag("kind", "links", "equipment kind (switches|links)")
+        .flag("throws", "5", "random throws per level")
+        .flag("seed", "42", "base seed")
+        .flag("rp-samples", "100", "random permutations for RP")
+        .flag("csv", "bench_results/degradation_sweep.csv", "output CSV path")
+        .parse();
+    let params = PgftParams::parse(p.get("pgft")).expect("pgft");
+    let topo = params.build();
+    let equipment = Equipment::parse(p.get("kind")).expect("kind");
+    let total = match equipment {
+        Equipment::Links => topo.num_cables(),
+        Equipment::Switches => topo.switches.len() - topo.leaf_switches().len(),
+    };
+    let fractions: Vec<f64> = p
+        .get("fractions")
+        .split(',')
+        .map(|s| s.trim().parse().expect("fraction"))
+        .collect();
+    let levels: Vec<usize> = fractions
+        .iter()
+        .map(|f| ((f / 100.0) * total as f64).round() as usize)
+        .collect();
+    let base_seed = p.get_u64("seed");
+    let cfg = CampaignConfig {
+        engines: Algo::ALL.to_vec(),
+        equipment,
+        levels,
+        seeds: (0..p.get_u64("throws")).map(|i| base_seed ^ i).collect(),
+        patterns: vec![
+            Pattern::AllToAll,
+            Pattern::RandomPermutation { samples: p.get_usize("rp-samples") },
+            Pattern::ShiftPermutation,
+        ],
+        sp_block: 0,
+        workers: 0,
+    };
+    println!(
+        "degradation sweep on {} nodes / {} {} total: levels {:?} ({} rows)",
+        topo.nodes.len(),
+        total,
+        p.get("kind"),
+        cfg.levels,
+        cfg.rows()
+    );
+    let t0 = Instant::now();
+    let rows = campaign::run(&topo, &cfg);
+    let secs = t0.elapsed().as_secs_f64();
+
+    // Risk-vs-degradation curves: median over throws per (engine, level,
+    // pattern) — the Figure 4 shape (lower is better).
+    let mut tab = Table::new(&["engine", "removed %", "A2A", "RP", "SP", "invalid"]);
+    for &algo in &cfg.engines {
+        for (li, &level) in cfg.levels.iter().enumerate() {
+            let mut cells = vec![
+                algo.to_string(),
+                format!("{:.1}", fractions[li]),
+            ];
+            for &pat in &cfg.patterns {
+                let mut vals: Vec<u64> = rows
+                    .iter()
+                    .filter(|r| r.engine == algo && r.level == level && r.pattern == pat)
+                    .map(|r| r.value)
+                    .collect();
+                vals.sort_unstable();
+                cells.push(vals.get(vals.len() / 2).copied().unwrap_or(0).to_string());
+            }
+            let invalid = rows
+                .iter()
+                .filter(|r| r.engine == algo && r.level == level && !r.valid)
+                .count()
+                / cfg.patterns.len().max(1);
+            cells.push(invalid.to_string());
+            tab.row(cells);
+        }
+    }
+    print!("{}", tab.render());
+
+    let path = p.get("csv");
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir).expect("create CSV directory");
+        }
+    }
+    campaign::write_csv(&rows, path).expect("write sweep CSV");
+    println!(
+        "{} samples in {:.2}s ({:.1} samples/s) → {}",
+        rows.len(),
+        secs,
+        rows.len() as f64 / secs.max(1e-9),
+        path
+    );
+}

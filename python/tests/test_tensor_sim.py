@@ -1,0 +1,270 @@
+"""Simulation of the incremental PathTensor rule and the shift-blocked
+SP scan against the Python reference pipeline (``gen_golden.py``).
+
+Mirrors ``rust/src/analysis/paths.rs`` (``PathTensor::update``) and
+``rust/src/analysis/congestion.rs`` (``shift_series_blocked_into``):
+
+* **Tensor rule.** A (leaf, dst) row is a pure function of the LFT rows
+  and port lists of the switches its trace consults. Given the switch
+  rows whose LFT content changed, plus every switch whose port list
+  changed (cable events renumber the global port-id space), a row whose
+  stored trace consulted only clean switches is *remapped* (old gid −
+  old offset + new offset per hop) instead of retraced — and the result
+  must be identical to a from-scratch trace after every event. This is
+  the same property ``rust/tests/analysis_diff.rs`` fuzzes in Rust;
+  running both keeps the two implementations honest about the
+  *algorithm*, not just the snapshots.
+
+* **Blocked SP.** Processing shifts in blocks of K — each tensor row
+  scattered into the histograms of the ≤K shifts it serves — must
+  return exactly the naive one-pass-per-shift series for every K.
+
+Run:  python3 python/tests/test_tensor_sim.py  (exits non-zero on drift)
+"""
+
+import importlib.util
+import os
+import random
+import sys
+
+_here = os.path.dirname(os.path.abspath(__file__))
+_spec = importlib.util.spec_from_file_location(
+    "gen_golden", os.path.join(_here, "..", "tools", "gen_golden.py")
+)
+g = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(g)
+
+NO_ROUTE = g.NO_ROUTE
+
+
+def port_offsets(t):
+    off, out = 0, []
+    for ports in t.ports:
+        out.append(off)
+        off += len(ports)
+    out.append(off)
+    return out
+
+
+def trace_row(t, lft, offs, leaf, d, loop_bound):
+    """Port of analysis::paths::trace_row (terminal node port trimmed)."""
+    buf, sw = [], leaf
+    while True:
+        p = lft[sw][d]
+        if p == NO_ROUTE:
+            return None
+        buf.append(offs[sw] + p)
+        port = t.ports[sw][p]
+        if port[0] == "N":
+            if port[1] != d:
+                return None
+            buf.pop()
+            return buf
+        sw = port[1]
+        if len(buf) > loop_bound + 1:
+            return None  # route loop
+
+
+def build_tensor(t, lft):
+    """Fresh build: {'rows': {(li, d): path or None}, 'leaves', 'offs'}."""
+    leaves = [s for s in range(t.num_switches) if t.level[s] == 0]
+    offs = port_offsets(t)
+    cap = 4 * (max(t.level) + 1) + 4
+    rows = {}
+    for li, leaf in enumerate(leaves):
+        for d in range(len(t.nodes)):
+            rows[(li, d)] = trace_row(t, lft, offs, leaf, d, cap)
+    return {"rows": rows, "leaves": leaves, "offs": offs, "t": t, "lft": lft}
+
+
+def update_tensor(old, t_new, lft_new, dirty_rows):
+    """Port of PathTensor::update's incremental path. Returns (tensor,
+    retraced_count); caller guarantees the switch/node sets match."""
+    t_old = old["t"]
+    offs_old, offs_new = old["offs"], port_offsets(t_new)
+    ns = t_new.num_switches
+    dirty_sw = set(dirty_rows)
+    for s in range(ns):
+        if t_old.ports[s] != t_new.ports[s]:
+            dirty_sw.add(s)
+    # old gid -> owning switch
+    port_sw = {}
+    for s in range(ns):
+        for gid in range(offs_old[s], offs_old[s + 1]):
+            port_sw[gid] = s
+    leaves = old["leaves"]
+    cap = 4 * (max(t_new.level) + 1) + 4
+    rows, retraced = {}, 0
+    for (li, d), path in old["rows"].items():
+        dirty = path is None  # broken rows always retrace
+        if not dirty:
+            if not path:
+                dirty = leaves[li] in dirty_sw  # own-leaf destination
+            else:
+                owners = [port_sw[gid] for gid in path]
+                dirty = any(s in dirty_sw for s in owners)
+                if not dirty:
+                    # Final consulted switch: target of the last hop.
+                    last_sw, local = owners[-1], path[-1] - offs_old[owners[-1]]
+                    tgt = t_old.ports[last_sw][local]
+                    assert tgt[0] == "S", "stored hops never target nodes"
+                    dirty = tgt[1] in dirty_sw
+        if dirty:
+            retraced += 1
+            rows[(li, d)] = trace_row(t_new, lft_new, offs_new, leaves[li], d, cap)
+        else:
+            rows[(li, d)] = [
+                gid - offs_old[port_sw[gid]] + offs_new[port_sw[gid]] for gid in path
+            ]
+    return (
+        {"rows": rows, "leaves": leaves, "offs": offs_new, "t": t_new, "lft": lft_new},
+        retraced,
+    )
+
+
+def dirty_lft_rows(prev, cur):
+    return [s for s in range(len(cur)) if prev[s] != cur[s]]
+
+
+def tensors_equal(a, b):
+    return a["rows"] == b["rows"]
+
+
+# ---------------------------------------------------------------------------
+# Shift-permutation scans
+# ---------------------------------------------------------------------------
+
+
+def src_leaf_map(t, leaves):
+    leaf_index = {l: i for i, l in enumerate(leaves)}
+    return [leaf_index[leaf] for (_u, leaf, _p) in t.nodes]
+
+
+def naive_shift_series(tensor):
+    """One full tensor pass per shift (PermEngine::shift_series_naive)."""
+    t = tensor["t"]
+    n = len(t.nodes)
+    src_leaf = src_leaf_map(t, tensor["leaves"])
+    series = []
+    for k in range(1, n):
+        loads, mx, any_flow = {}, 0, False
+        for s in range(n):
+            d = (s + k) % n
+            if d == s:
+                continue
+            any_flow = True
+            path = tensor["rows"][(src_leaf[s], d)]
+            for p in path or []:
+                loads[p] = loads.get(p, 0) + 1
+                mx = max(mx, loads[p])
+        series.append(max(mx, 1) if any_flow else mx)
+    return series
+
+
+def blocked_shift_series(tensor, block):
+    """Port of PermEngine::shift_series_blocked_into."""
+    t = tensor["t"]
+    n = len(t.nodes)
+    nl = len(tensor["leaves"])
+    src_leaf = src_leaf_map(t, tensor["leaves"])
+    shifts = max(n - 1, 0)
+    out = [0] * shifts
+    if shifts == 0:
+        return out
+    k = max(1, min(block, shifts))
+    for bi in range((shifts + k - 1) // k):
+        k0 = 1 + bi * k
+        kb = min(k, n - k0)
+        hist = [dict() for _ in range(kb)]
+        maxes = [0] * kb
+        for li in range(nl):
+            for d in range(n):
+                path = tensor["rows"][(li, d)]
+                for j in range(kb):
+                    kk = k0 + j
+                    s = d - kk if d >= kk else d + n - kk
+                    if src_leaf[s] != li:
+                        continue
+                    h = hist[j]
+                    for p in path or []:
+                        h[p] = h.get(p, 0) + 1
+                        if h[p] > maxes[j]:
+                            maxes[j] = h[p]
+        for j in range(kb):
+            out[k0 - 1 + j] = max(maxes[j], 1)  # n >= 2 here: clamp always
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Drivers
+# ---------------------------------------------------------------------------
+
+
+def run_tensor_events(base, reduction, seed, n_events):
+    rng = random.Random(seed)
+    cbs = g.cables(base)
+    dead = set()
+    prev_lft, tensor = None, None
+    incremental_steps = 0
+    for step in range(n_events + 1):
+        if step > 0:
+            c = cbs[rng.randrange(len(cbs))]
+            if c in dead:
+                dead.discard(c)
+            else:
+                dead.add(c)
+        t = g.apply_dead_cables(base, dead)
+        lft = g.route_reference(t, reduction)
+        fresh = build_tensor(t, lft)
+        if tensor is not None:
+            dirty = dirty_lft_rows(prev_lft, lft)
+            tensor, retraced = update_tensor(tensor, t, lft, dirty)
+            incremental_steps += 1
+            assert tensors_equal(tensor, fresh), (
+                f"tensor drift at step {step} ({reduction}, {len(dead)} dead cables, "
+                f"{retraced} retraced)"
+            )
+            total = len(tensor["rows"])
+            assert retraced <= total
+        else:
+            tensor = fresh
+        prev_lft = lft
+    return incremental_steps
+
+
+def run_blocked_sp(base, reduction, dead_count, seed):
+    rng = random.Random(seed)
+    cbs = g.cables(base)
+    dead = set(rng.sample(cbs, min(dead_count, len(cbs))))
+    t = g.apply_dead_cables(base, dead)
+    lft = g.route_reference(t, reduction)
+    tensor = build_tensor(t, lft)
+    naive = naive_shift_series(tensor)
+    n = len(t.nodes)
+    for k in (1, 2, 3, 5, 8, 16, max(n - 1, 1), n + 7):
+        got = blocked_shift_series(tensor, k)
+        assert got == naive, f"blocked SP drift at K={k} ({reduction}, {len(dead)} dead)"
+
+
+def main():
+    shapes = [
+        ("fig1", [2, 2, 3], [1, 2, 2], [1, 2, 1]),
+        ("small", [4, 6, 3], [1, 2, 2], [1, 2, 1]),
+        ("twolevel", [3, 4], [1, 3], [1, 2]),
+    ]
+    total_inc = 0
+    for name, m, w, p in shapes:
+        base = g.build_pgft(m, w, p)
+        for reduction in ("max", "firstpath"):
+            for seed in range(6):
+                total_inc += run_tensor_events(base, reduction, seed, n_events=6)
+        run_blocked_sp(base, "max", dead_count=0, seed=1)
+        run_blocked_sp(base, "max", dead_count=3, seed=2)
+        run_blocked_sp(base, "firstpath", dead_count=5, seed=3)
+        print(f"{name}: tensor event fuzz + blocked SP OK")
+    print(f"OK: {total_inc} incremental tensor transitions bit-identical, "
+          f"blocked SP equal to naive for all tested block sizes")
+
+
+if __name__ == "__main__":
+    main()

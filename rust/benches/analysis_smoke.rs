@@ -1,0 +1,159 @@
+//! CI bench smoke for the analysis layer, written to `BENCH_analysis.json`
+//! (schema `bench_analysis/v1`) so the analysis-perf trajectory is tracked
+//! across PRs next to `BENCH_reroute.json` (see `.github/workflows/ci.yml`
+//! and EXPERIMENTS.md §"Analysis perf").
+//!
+//! Measured quantities:
+//! * tensor_full — a from-scratch `PathTensor` rebuild out of warm
+//!   buffers (the campaign per-sample cost).
+//! * tensor_update — the incremental `PathTensor::update` reaction to a
+//!   single-cable fault/recovery flip (the risk-probe per-event cost),
+//!   with the retraced-row fraction recorded.
+//! * sp_naive vs sp_blocked — the all-shifts SP scan, one full tensor
+//!   pass per shift vs the shift-blocked scan at the auto block size;
+//!   `sp_blocked_speedup` is the headline bandwidth win.
+//! * campaign — a small {engines × levels × seeds × patterns} grid
+//!   through `analysis::campaign::run`, reported as samples/s.
+//!
+//!   ANALYSIS_PGFT="16,9,12;1,4,6;1,1,1"   topology (default: 1728 nodes)
+//!   BENCH_ANALYSIS_OUT=BENCH_analysis.json  output path
+
+use dmodc::analysis::campaign::{self, CampaignConfig};
+use dmodc::analysis::congestion::{default_block, PermEngine};
+use dmodc::analysis::paths::{PathTensor, TensorUpdate};
+use dmodc::prelude::*;
+use dmodc::routing::registry;
+use dmodc::util::time::bench;
+use std::collections::HashSet;
+use std::time::Instant;
+
+fn main() {
+    let spec = std::env::var("ANALYSIS_PGFT").unwrap_or_else(|_| "16,9,12;1,4,6;1,1,1".into());
+    let params = PgftParams::parse(&spec).expect("ANALYSIS_PGFT");
+    let topo = params.build();
+    let mut engine = registry::create(Algo::Dmodc);
+    let lft = engine.route_once(&topo);
+    println!(
+        "analysis smoke on {} nodes / {} switches / {} ports",
+        topo.nodes.len(),
+        topo.switches.len(),
+        topo.num_ports()
+    );
+
+    // --- tensor: full rebuild out of warm buffers ---
+    let mut tensor = PathTensor::build(&topo, &lft);
+    let full = bench(1, 5, || {
+        tensor.rebuild(&topo, &lft);
+        tensor.raw()[0]
+    });
+
+    // --- tensor: incremental single-cable flip ---
+    let cable = degrade::cables(&topo)[0];
+    let dead: HashSet<(SwitchId, u16)> = [cable].into_iter().collect();
+    let degraded = degrade::apply(&topo, &HashSet::new(), &dead);
+    let lft_d = engine.route_once(&degraded);
+    let dirty_fault = lft_d.changed_rows(&lft);
+    let dirty_recover = lft.changed_rows(&lft_d);
+    let rows_total = tensor.num_leaves * tensor.num_nodes;
+    // Warm both directions (the first flip establishes history).
+    tensor.update(&degraded, &lft_d, &dirty_fault);
+    tensor.update(&topo, &lft, &dirty_recover);
+    let mut flip = false;
+    let mut retraced = 0usize;
+    let mut incremental = true;
+    let update = bench(1, 5, || {
+        flip = !flip;
+        let up = if flip {
+            tensor.update(&degraded, &lft_d, &dirty_fault)
+        } else {
+            tensor.update(&topo, &lft, &dirty_recover)
+        };
+        match up {
+            TensorUpdate::Incremental(st) => retraced = st.rows_retraced,
+            TensorUpdate::Rebuilt(_) => incremental = false,
+        }
+        tensor.raw()[0]
+    });
+
+    // --- SP: naive vs shift-blocked ---
+    tensor.rebuild(&topo, &lft);
+    let pe = PermEngine::new(&topo, &tensor);
+    let block = default_block(topo.num_ports());
+    let naive = bench(1, 3, || pe.shift_series_naive());
+    let mut series = Vec::new();
+    let blocked = bench(1, 3, || {
+        pe.shift_series_blocked_into(block, &mut series);
+        series[0]
+    });
+    assert_eq!(
+        pe.shift_series_naive(),
+        series,
+        "blocked scan must equal the naive scan"
+    );
+
+    // --- campaign throughput on a small grid ---
+    let cfg = CampaignConfig {
+        engines: Algo::ALL.to_vec(),
+        equipment: Equipment::Links,
+        levels: vec![0, 2, 8],
+        seeds: vec![1, 2, 3],
+        patterns: vec![
+            Pattern::AllToAll,
+            Pattern::RandomPermutation { samples: 50 },
+            Pattern::ShiftPermutation,
+        ],
+        sp_block: 0,
+        workers: 0,
+    };
+    let t0 = Instant::now();
+    let rows = campaign::run(&topo, &cfg);
+    let campaign_secs = t0.elapsed().as_secs_f64();
+    let samples_per_s = rows.len() as f64 / campaign_secs.max(1e-9);
+
+    let json = format!(
+        concat!(
+            "{{\n",
+            "  \"schema\": \"bench_analysis/v1\",\n",
+            "  \"topology\": \"PGFT({spec})\",\n",
+            "  \"nodes\": {nodes},\n",
+            "  \"switches\": {switches},\n",
+            "  \"ports\": {ports},\n",
+            "  \"tensor_full_median_s\": {full:.6},\n",
+            "  \"tensor_update_median_s\": {update:.6},\n",
+            "  \"tensor_update_incremental\": {inc},\n",
+            "  \"tensor_rows_total\": {rows_total},\n",
+            "  \"tensor_update_rows_retraced\": {retraced},\n",
+            "  \"tensor_update_speedup\": {tsp:.3},\n",
+            "  \"sp_block\": {block},\n",
+            "  \"sp_naive_median_s\": {naive:.6},\n",
+            "  \"sp_blocked_median_s\": {blocked:.6},\n",
+            "  \"sp_blocked_speedup\": {ssp:.3},\n",
+            "  \"campaign_rows\": {crows},\n",
+            "  \"campaign_secs\": {csecs:.3},\n",
+            "  \"campaign_samples_per_s\": {cps:.2}\n",
+            "}}\n"
+        ),
+        spec = spec,
+        nodes = topo.nodes.len(),
+        switches = topo.switches.len(),
+        ports = topo.num_ports(),
+        full = full.median,
+        update = update.median,
+        inc = incremental,
+        rows_total = rows_total,
+        retraced = retraced,
+        tsp = full.median / update.median.max(1e-12),
+        block = block,
+        naive = naive.median,
+        blocked = blocked.median,
+        ssp = naive.median / blocked.median.max(1e-12),
+        crows = rows.len(),
+        csecs = campaign_secs,
+        cps = samples_per_s,
+    );
+    let out_path =
+        std::env::var("BENCH_ANALYSIS_OUT").unwrap_or_else(|_| "BENCH_analysis.json".into());
+    std::fs::write(&out_path, &json).expect("write BENCH_analysis.json");
+    print!("{json}");
+    println!("→ {out_path}");
+}

@@ -145,6 +145,32 @@ fn main() {
     let lft = route_unchecked(Algo::Dmodc, &topo);
     add("analysis: path tensor", bench(1, 5, || PathTensor::build(&topo, &lft)));
     let pt = PathTensor::build(&topo, &lft);
+    // Incremental tensor maintenance: single-cable fault/recovery flip.
+    {
+        use std::collections::HashSet;
+        let cable = dmodc::topology::degrade::cables(&topo)[0];
+        let dead: HashSet<(SwitchId, u16)> = [cable].into_iter().collect();
+        let dtopo = dmodc::topology::degrade::apply(&topo, &HashSet::new(), &dead);
+        let dlft = route_unchecked(Algo::Dmodc, &dtopo);
+        let dirty_fault = dlft.changed_rows(&lft);
+        let dirty_recover = lft.changed_rows(&dlft);
+        let mut inc = PathTensor::build(&topo, &lft);
+        inc.update(&dtopo, &dlft, &dirty_fault); // warm both directions
+        inc.update(&topo, &lft, &dirty_recover);
+        let mut flip = false;
+        add(
+            "analysis: tensor update (single-cable flip)",
+            bench(1, 5, || {
+                flip = !flip;
+                if flip {
+                    inc.update(&dtopo, &dlft, &dirty_fault)
+                } else {
+                    inc.update(&topo, &lft, &dirty_recover)
+                }
+                .is_incremental() as u64
+            }),
+        );
+    }
     let engine = PermEngine::new(&topo, &pt);
     let n = topo.nodes.len();
     add(
@@ -152,9 +178,20 @@ fn main() {
         bench(1, 3, || engine.random_perm_median(100, 1)),
     );
     add(
-        "analysis: SP all shifts",
-        bench(0, 3, || engine.shift_series().len()),
+        "analysis: SP all shifts (naive)",
+        bench(0, 3, || engine.shift_series_naive().len()),
     );
+    {
+        let block = dmodc::analysis::congestion::default_block(topo.num_ports());
+        let mut series = Vec::new();
+        add(
+            &format!("analysis: SP all shifts (blocked K={block})"),
+            bench(0, 3, || {
+                engine.shift_series_blocked_into(block, &mut series);
+                series[0]
+            }),
+        );
+    }
     add("analysis: A2A exact", bench(0, 3, || a2a::all_to_all(&topo, &pt)));
 
     // Fabric manager end-to-end reaction (one switch fault).

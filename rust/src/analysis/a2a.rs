@@ -12,34 +12,55 @@
 use super::paths::{PathTensor, NO_PORT};
 use crate::topology::Topology;
 
+/// Reused buffers for [`all_to_all_with`]: campaign and probe loops
+/// evaluate A2A once per sample, and these five arrays are the only heap
+/// state the metric needs.
+#[derive(Default)]
+pub struct A2aScratch {
+    cnt2: Vec<u8>,
+    last_d: Vec<u32>,
+    dst_cnt: Vec<u32>,
+    stamp: Vec<u32>,
+    nodes_per_leaf: Vec<u64>,
+}
+
 /// The paper's A2A metric: `max_p min(#srcs(p), #dsts(p))`.
 pub fn all_to_all(topo: &Topology, paths: &PathTensor) -> u64 {
+    all_to_all_with(topo, paths, &mut A2aScratch::default())
+}
+
+/// [`all_to_all`] out of caller-reused buffers (allocation-free once the
+/// capacities have converged — the campaign per-sample loop relies on
+/// this, see `tests/equivalence.rs`).
+pub fn all_to_all_with(topo: &Topology, paths: &PathTensor, sc: &mut A2aScratch) -> u64 {
     let np = topo.num_ports();
     let nl = paths.num_leaves;
     let nn = paths.num_nodes;
     // Per-(port, leaf): 0 = untouched, 1 = single destination (in
     // `last_d`), 2 = two or more distinct destinations.
-    let mut cnt2 = vec![0u8; np * nl];
-    let mut last_d = vec![0u32; np * nl];
+    sc.cnt2.clear();
+    sc.cnt2.resize(np * nl, 0);
+    sc.last_d.clear();
+    sc.last_d.resize(np * nl, 0);
     // Per-port distinct destination count, with a visit stamp per dst.
-    let mut dst_cnt = vec![0u32; np];
-    let mut stamp = vec![u32::MAX; np];
+    sc.dst_cnt.clear();
+    sc.dst_cnt.resize(np, 0);
+    sc.stamp.clear();
+    sc.stamp.resize(np, u32::MAX);
 
-    let mut nodes_per_leaf = vec![0u64; nl];
-    for n in &topo.nodes {
-        nodes_per_leaf[paths.leaf_index[n.leaf as usize] as usize] += 1;
+    sc.nodes_per_leaf.clear();
+    sc.nodes_per_leaf.resize(nl, 0);
+    // node → leaf index: the tensor's shared map.
+    let dst_leaf = &paths.src_leaf;
+    for &li in dst_leaf.iter() {
+        sc.nodes_per_leaf[li as usize] += 1;
     }
-    let dst_leaf: Vec<u32> = topo
-        .nodes
-        .iter()
-        .map(|n| paths.leaf_index[n.leaf as usize])
-        .collect();
 
     for d in 0..nn as u32 {
         let ld = dst_leaf[d as usize];
         for li in 0..nl as u32 {
             let srcs_here =
-                nodes_per_leaf[li as usize] - u64::from(li == ld);
+                sc.nodes_per_leaf[li as usize] - u64::from(li == ld);
             if srcs_here == 0 {
                 continue;
             }
@@ -49,17 +70,17 @@ pub fn all_to_all(topo: &Topology, paths: &PathTensor) -> u64 {
                 }
                 let pi = p as usize;
                 let idx = pi * nl + li as usize;
-                match cnt2[idx] {
+                match sc.cnt2[idx] {
                     0 => {
-                        cnt2[idx] = 1;
-                        last_d[idx] = d;
+                        sc.cnt2[idx] = 1;
+                        sc.last_d[idx] = d;
                     }
-                    1 if last_d[idx] != d => cnt2[idx] = 2,
+                    1 if sc.last_d[idx] != d => sc.cnt2[idx] = 2,
                     _ => {}
                 }
-                if stamp[pi] != d {
-                    stamp[pi] = d;
-                    dst_cnt[pi] += 1;
+                if sc.stamp[pi] != d {
+                    sc.stamp[pi] = d;
+                    sc.dst_cnt[pi] += 1;
                 }
             }
         }
@@ -68,23 +89,24 @@ pub fn all_to_all(topo: &Topology, paths: &PathTensor) -> u64 {
     // The trimmed terminal node ports contribute min(#srcs, 1) = 1 each.
     let mut best = u64::from(nn >= 2);
     for p in 0..np {
-        if dst_cnt[p] == 0 {
+        if sc.dst_cnt[p] == 0 {
             continue;
         }
         let mut srcs = 0u64;
         for li in 0..nl {
             let idx = p * nl + li;
-            srcs += match cnt2[idx] {
+            srcs += match sc.cnt2[idx] {
                 0 => 0,
-                2 => nodes_per_leaf[li],
+                2 => sc.nodes_per_leaf[li],
                 _ => {
                     // Single destination: exclude it from its own leaf.
-                    let d = last_d[idx];
-                    nodes_per_leaf[li] - u64::from(dst_leaf[d as usize] == li as u32)
+                    let d = sc.last_d[idx];
+                    sc.nodes_per_leaf[li]
+                        - u64::from(dst_leaf[d as usize] == li as u32)
                 }
             };
         }
-        best = best.max(srcs.min(dst_cnt[p] as u64));
+        best = best.max(srcs.min(sc.dst_cnt[p] as u64));
     }
     best
 }
@@ -143,6 +165,27 @@ mod tests {
         let risk = all_to_all(&t, &pt);
         assert!(risk >= 1);
         assert!(risk < t.nodes.len() as u64 / 2, "risk {risk}");
+    }
+
+    #[test]
+    fn scratch_reuse_matches_fresh_scratch() {
+        // The buffer-reusing entry point must give identical results
+        // across differently-shaped calls on one scratch.
+        let mut sc = A2aScratch::default();
+        let mut rng = crate::util::rng::Rng::new(7);
+        for params in [PgftParams::fig1(), PgftParams::small()] {
+            let base = params.build();
+            for round in 0..3 {
+                let t = if round == 0 {
+                    base.clone()
+                } else {
+                    crate::topology::degrade::remove_random_links(&base, &mut rng, round * 2)
+                };
+                let lft = dmodc::route(&t, &Default::default());
+                let pt = PathTensor::build(&t, &lft);
+                assert_eq!(all_to_all_with(&t, &pt, &mut sc), all_to_all(&t, &pt));
+            }
+        }
     }
 
     #[test]

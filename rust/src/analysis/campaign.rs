@@ -1,0 +1,458 @@
+//! Degradation-sweep campaign engine (paper §4, Figs. 4–5).
+//!
+//! The paper's headline result is congestion risk under *sweeps* of
+//! random degradation: every algorithm × every degradation level × many
+//! random throws × the three patterns (A2A / RP / SP). This module runs
+//! exactly that grid out of persistent per-worker state — one routing
+//! engine per algorithm, one [`DegradeScratch`], one [`RiskEvaluator`]
+//! (tensor + pattern scratches) per worker — so the per-sample loop
+//! performs zero steady-state heap allocation (`tests/equivalence.rs`),
+//! and streams the rows as CSV/JSON for the plotting tools.
+//!
+//! Grid semantics:
+//! * One degraded-topology throw is drawn per `(level, seed)` pair and
+//!   **shared by every engine** — the paper's methodology ("for quality
+//!   comparison to be fair") requires all algorithms to be judged on
+//!   identical damage.
+//! * Every sample is deterministic in `(equipment, level, seed)` alone:
+//!   the same grid produces bit-identical rows at any worker count
+//!   (asserted by the module tests).
+//!
+//! Parallelism: worker tasks (scoped threads via [`par::join_all`]) claim
+//! grid points from an atomic cursor and write result slots disjointly;
+//! the analysis scans inside each sample use the shared worker pool.
+
+use super::patterns::Pattern;
+use super::RiskEvaluator;
+use crate::routing::{registry, Algo, Lft, RoutingEngine};
+use crate::topology::degrade::{self, DegradeScratch, Equipment};
+use crate::topology::{SwitchId, Topology};
+use crate::util::par::{self, SharedMut};
+use crate::util::rng::Rng;
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Instant;
+
+/// One campaign grid: {engine × degradation level × seed × pattern}.
+#[derive(Clone, Debug)]
+pub struct CampaignConfig {
+    /// Engines to evaluate (every one sees the same throws).
+    pub engines: Vec<Algo>,
+    /// Equipment class removed per throw.
+    pub equipment: Equipment,
+    /// Degradation levels: pieces of equipment removed per throw.
+    pub levels: Vec<usize>,
+    /// One random throw per (level, seed).
+    pub seeds: Vec<u64>,
+    /// Patterns evaluated per sample (sharing one tensor trace).
+    pub patterns: Vec<Pattern>,
+    /// SP shift-block size; 0 selects `congestion::default_block`.
+    pub sp_block: usize,
+    /// Worker tasks; 0 = `util::par::num_threads()`.
+    pub workers: usize,
+}
+
+impl Default for CampaignConfig {
+    fn default() -> Self {
+        Self {
+            engines: Algo::ALL.to_vec(),
+            equipment: Equipment::Switches,
+            levels: vec![0, 2, 8],
+            seeds: (0..5).collect(),
+            patterns: vec![
+                Pattern::AllToAll,
+                Pattern::RandomPermutation { samples: 100 },
+                Pattern::ShiftPermutation,
+            ],
+            sp_block: 0,
+            workers: 0,
+        }
+    }
+}
+
+impl CampaignConfig {
+    /// Grid points (samples) before the per-pattern expansion.
+    pub fn points(&self) -> usize {
+        self.engines.len() * self.levels.len() * self.seeds.len()
+    }
+
+    /// Total result rows (`points × patterns`).
+    pub fn rows(&self) -> usize {
+        self.points() * self.patterns.len()
+    }
+}
+
+/// One (engine, level, seed, pattern) result row.
+#[derive(Clone, Debug)]
+pub struct SampleRow {
+    pub engine: Algo,
+    pub equipment: Equipment,
+    /// Requested degradation level (pieces to remove).
+    pub level: usize,
+    /// Pieces actually removed (= `min(level, available)`).
+    pub removed: usize,
+    pub seed: u64,
+    pub pattern: Pattern,
+    /// The pattern's congestion risk under the paper's reduction.
+    pub value: u64,
+    pub valid: bool,
+    pub broken_routes: usize,
+    /// Routing latency of the sample (shared by its pattern rows).
+    pub route_secs: f64,
+    /// Tensor trace + this pattern's evaluation latency.
+    pub analyze_secs: f64,
+}
+
+impl SampleRow {
+    /// Header matching [`SampleRow::to_csv`].
+    pub fn csv_header() -> &'static str {
+        "engine,equipment,level,removed,seed,pattern,value,valid,broken_routes,route_secs,analyze_secs"
+    }
+
+    pub fn to_csv(&self) -> String {
+        format!(
+            "{},{},{},{},{},{},{},{},{},{:.6},{:.6}",
+            self.engine,
+            equipment_name(self.equipment),
+            self.level,
+            self.removed,
+            self.seed,
+            self.pattern.name(),
+            self.value,
+            self.valid,
+            self.broken_routes,
+            self.route_secs,
+            self.analyze_secs
+        )
+    }
+
+    /// One JSON object per row (JSON-lines streaming).
+    pub fn to_json(&self) -> String {
+        format!(
+            concat!(
+                "{{\"engine\":\"{}\",\"equipment\":\"{}\",\"level\":{},",
+                "\"removed\":{},\"seed\":{},\"pattern\":\"{}\",\"value\":{},",
+                "\"valid\":{},\"broken_routes\":{},\"route_secs\":{:.6},",
+                "\"analyze_secs\":{:.6}}}"
+            ),
+            self.engine,
+            equipment_name(self.equipment),
+            self.level,
+            self.removed,
+            self.seed,
+            self.pattern.name(),
+            self.value,
+            self.valid,
+            self.broken_routes,
+            self.route_secs,
+            self.analyze_secs
+        )
+    }
+}
+
+fn equipment_name(e: Equipment) -> &'static str {
+    match e {
+        Equipment::Switches => "switches",
+        Equipment::Links => "links",
+    }
+}
+
+/// Render `rows` as a CSV document (header + one line per row).
+pub fn to_csv(rows: &[SampleRow]) -> String {
+    let mut s = String::with_capacity(64 * (rows.len() + 1));
+    s.push_str(SampleRow::csv_header());
+    s.push('\n');
+    for r in rows {
+        s.push_str(&r.to_csv());
+        s.push('\n');
+    }
+    s
+}
+
+/// Write [`to_csv`] to a file.
+pub fn write_csv(rows: &[SampleRow], path: &str) -> std::io::Result<()> {
+    std::fs::write(path, to_csv(rows))
+}
+
+/// Per-worker persistent state: engines, degradation scratch, topology
+/// and table buffers, and the risk evaluator — everything a sample needs,
+/// reused across every sample the worker claims.
+struct Worker {
+    engines: Vec<Option<Box<dyn RoutingEngine>>>,
+    scratch: DegradeScratch,
+    topo: Topology,
+    lft: Lft,
+    eval: RiskEvaluator,
+    dead_sw: HashSet<SwitchId>,
+    dead_cb: HashSet<(SwitchId, u16)>,
+    pool: Vec<u32>,
+}
+
+impl Worker {
+    fn new(cfg: &CampaignConfig) -> Self {
+        Self {
+            engines: (0..cfg.engines.len()).map(|_| None).collect(),
+            scratch: DegradeScratch::default(),
+            topo: Topology::default(),
+            lft: Lft::default(),
+            eval: RiskEvaluator::new(),
+            dead_sw: HashSet::new(),
+            dead_cb: HashSet::new(),
+            pool: Vec::new(),
+        }
+    }
+
+    /// Run grid point `(ei, li, si)`, emitting one row per pattern.
+    #[allow(clippy::too_many_arguments)]
+    fn run_point(
+        &mut self,
+        base: &Topology,
+        cfg: &CampaignConfig,
+        cables: &[(SwitchId, u16)],
+        removable: &[SwitchId],
+        ei: usize,
+        li: usize,
+        si: usize,
+        mut emit: impl FnMut(usize, SampleRow),
+    ) {
+        let level = cfg.levels[li];
+        let seed = cfg.seeds[si];
+        // The throw depends only on (equipment, level, seed): every
+        // engine is judged on identical damage, and the grid is
+        // deterministic at any worker count.
+        let mut rng = Rng::new(
+            0xCA3A_1617_D0D0_0001u64
+                ^ seed.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                ^ (level as u64).wrapping_mul(0xBF58_476D_1CE4_E5B9),
+        );
+        self.dead_sw.clear();
+        self.dead_cb.clear();
+        let removed = match cfg.equipment {
+            Equipment::Switches => {
+                rng.sample_distinct_into(removable.len(), level, &mut self.pool);
+                for &pi in &self.pool {
+                    self.dead_sw.insert(removable[pi as usize]);
+                }
+                self.pool.len()
+            }
+            Equipment::Links => {
+                rng.sample_distinct_into(cables.len(), level, &mut self.pool);
+                for &pi in &self.pool {
+                    self.dead_cb.insert(cables[pi as usize]);
+                }
+                self.pool.len()
+            }
+        };
+        degrade::apply_into(base, &self.dead_sw, &self.dead_cb, &mut self.topo, &mut self.scratch);
+        let engine =
+            self.engines[ei].get_or_insert_with(|| registry::create(cfg.engines[ei]));
+        let t0 = Instant::now();
+        engine.route_into(&self.topo, &mut self.lft);
+        let route_secs = t0.elapsed().as_secs_f64();
+        let valid = engine.validate(&self.topo, &self.lft).is_ok();
+        self.eval.sp_block = cfg.sp_block;
+        let t1 = Instant::now();
+        self.eval.rebuild(&self.topo, &self.lft);
+        let trace_secs = t1.elapsed().as_secs_f64();
+        for (pi, &pattern) in cfg.patterns.iter().enumerate() {
+            let t2 = Instant::now();
+            let value = self.eval.evaluate(&self.topo, pattern, seed);
+            emit(
+                pi,
+                SampleRow {
+                    engine: cfg.engines[ei],
+                    equipment: cfg.equipment,
+                    level,
+                    removed,
+                    seed,
+                    pattern,
+                    value,
+                    valid,
+                    broken_routes: self.eval.broken_routes(),
+                    route_secs,
+                    analyze_secs: trace_secs + t2.elapsed().as_secs_f64(),
+                },
+            );
+        }
+    }
+}
+
+/// Run the campaign grid over `base`, returning the rows in deterministic
+/// grid order (engine-major, then level, seed, pattern).
+pub fn run(base: &Topology, cfg: &CampaignConfig) -> Vec<SampleRow> {
+    let points = cfg.points();
+    let per_point = cfg.patterns.len();
+    let total = points * per_point;
+    if total == 0 {
+        return Vec::new();
+    }
+    let mut slots: Vec<Option<SampleRow>> = (0..total).map(|_| None).collect();
+    let cables = degrade::cables(base);
+    let removable = degrade::removable_switches(base);
+    let workers = if cfg.workers == 0 {
+        par::num_threads()
+    } else {
+        cfg.workers
+    }
+    .clamp(1, points);
+    let cursor = AtomicUsize::new(0);
+    {
+        let shared = SharedMut::new(&mut slots);
+        let ls = cfg.levels.len() * cfg.seeds.len();
+        let tasks: Vec<_> = (0..workers)
+            .map(|_| {
+                let (cursor, shared) = (&cursor, &shared);
+                let (cables, removable) = (&cables[..], &removable[..]);
+                move || {
+                    let mut w = Worker::new(cfg);
+                    loop {
+                        let i = cursor.fetch_add(1, Ordering::Relaxed);
+                        if i >= points {
+                            break;
+                        }
+                        let (ei, li, si) = (i / ls, (i % ls) / cfg.seeds.len(), i % cfg.seeds.len());
+                        w.run_point(base, cfg, cables, removable, ei, li, si, |pi, row| {
+                            // SAFETY: slot (i, pi) is written exactly once
+                            // (the cursor hands out each point once).
+                            unsafe { *shared.get_mut(i * per_point + pi) = Some(row) };
+                        });
+                    }
+                }
+            })
+            .collect();
+        par::join_all(tasks);
+    }
+    slots
+        .into_iter()
+        .map(|s| s.expect("every grid slot filled"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::CongestionAnalyzer;
+    use crate::routing::route_unchecked;
+    use crate::topology::pgft::PgftParams;
+
+    fn small_cfg() -> CampaignConfig {
+        CampaignConfig {
+            engines: vec![Algo::Dmodc, Algo::Ftree],
+            equipment: Equipment::Links,
+            levels: vec![0, 2],
+            seeds: vec![1, 2, 3],
+            patterns: vec![
+                Pattern::AllToAll,
+                Pattern::RandomPermutation { samples: 9 },
+                Pattern::ShiftPermutation,
+            ],
+            sp_block: 0,
+            workers: 1,
+        }
+    }
+
+    fn key(r: &SampleRow) -> (String, usize, usize, u64, &'static str, u64, bool, usize) {
+        (
+            r.engine.to_string(),
+            r.level,
+            r.removed,
+            r.seed,
+            r.pattern.name(),
+            r.value,
+            r.valid,
+            r.broken_routes,
+        )
+    }
+
+    #[test]
+    fn grid_is_complete_and_deterministic_across_worker_counts() {
+        let t = PgftParams::small().build();
+        let cfg = small_cfg();
+        let a = run(&t, &cfg);
+        assert_eq!(a.len(), cfg.rows());
+        let b = run(
+            &t,
+            &CampaignConfig {
+                workers: 4,
+                ..small_cfg()
+            },
+        );
+        assert_eq!(
+            a.iter().map(key).collect::<Vec<_>>(),
+            b.iter().map(key).collect::<Vec<_>>(),
+            "worker count must not change any result"
+        );
+    }
+
+    #[test]
+    fn engines_share_identical_throws() {
+        let t = PgftParams::small().build();
+        let cfg = small_cfg();
+        let rows = run(&t, &cfg);
+        // For a fixed (level, seed, pattern), every engine must have seen
+        // the same damage (same `removed`) — and at level 0, the same
+        // intact topology (valid, 0 removed).
+        for r in &rows {
+            if r.level == 0 {
+                assert_eq!(r.removed, 0);
+                assert!(r.valid, "{}", r.engine);
+                assert!(r.value >= 1);
+            }
+        }
+        let ls = cfg.levels.len() * cfg.seeds.len() * cfg.patterns.len();
+        let (e0, e1) = (&rows[..ls], &rows[ls..]);
+        for (a, b) in e0.iter().zip(e1) {
+            assert_eq!(a.level, b.level);
+            assert_eq!(a.seed, b.seed);
+            assert_eq!(a.removed, b.removed, "level {} seed {}", a.level, a.seed);
+        }
+    }
+
+    #[test]
+    fn level_zero_rows_match_the_facade() {
+        // The campaign's intact-sample values must equal a from-scratch
+        // CongestionAnalyzer evaluation of the same engine.
+        let t = PgftParams::small().build();
+        let cfg = small_cfg();
+        let rows = run(&t, &cfg);
+        let lft = route_unchecked(Algo::Dmodc, &t);
+        let an = CongestionAnalyzer::new(&t, &lft);
+        for r in rows.iter().filter(|r| {
+            r.engine == Algo::Dmodc && r.level == 0
+        }) {
+            assert_eq!(r.value, an.evaluate(r.pattern, r.seed), "{:?}", r.pattern);
+        }
+    }
+
+    #[test]
+    fn csv_and_json_rows_are_well_formed() {
+        let t = PgftParams::small().build();
+        let cfg = CampaignConfig {
+            engines: vec![Algo::Dmodc],
+            levels: vec![1],
+            seeds: vec![7],
+            ..small_cfg()
+        };
+        let rows = run(&t, &cfg);
+        let header_fields = SampleRow::csv_header().split(',').count();
+        for r in &rows {
+            assert_eq!(r.to_csv().split(',').count(), header_fields);
+            let j = r.to_json();
+            assert!(j.starts_with('{') && j.ends_with('}'));
+            assert!(j.contains("\"pattern\""));
+        }
+        let doc = to_csv(&rows);
+        assert_eq!(doc.lines().count(), rows.len() + 1);
+        assert!(doc.starts_with(SampleRow::csv_header()));
+    }
+
+    #[test]
+    fn empty_grid_returns_no_rows() {
+        let t = PgftParams::fig1().build();
+        let cfg = CampaignConfig {
+            engines: vec![],
+            ..small_cfg()
+        };
+        assert!(run(&t, &cfg).is_empty());
+    }
+}

@@ -5,10 +5,25 @@
 //! number of flows crossing the port — the *max port load*. This module
 //! computes per-permutation max loads from the [`PathTensor`], in parallel
 //! across permutations.
+//!
+//! ## The shift-blocked SP scan (EXPERIMENTS.md §"Analysis perf")
+//!
+//! The naive SP metric streams the whole tensor once per shift — N−1 full
+//! passes. But tensor row `(li, d)` serves the flow `s → d` of shift
+//! `k = (d − s) mod n` for **every** node `s` on leaf `li`: the row's
+//! contribution to different shifts is the same port sequence scattered
+//! into different histograms. [`PermEngine::shift_series_blocked_into`]
+//! exploits that by processing shifts in blocks of K: each worker owns K
+//! per-shift histograms and reads every tensor row **once per block**,
+//! scattering it into the histograms of the (≤ K) shifts it serves —
+//! cutting tensor bandwidth by ~K× for the same flop count. The naive
+//! scan is retained as [`PermEngine::shift_series_naive`], and the
+//! differential suite (`tests/analysis_diff.rs`) asserts exact equality
+//! for every block size.
 
 use super::paths::{PathTensor, NO_PORT};
 use crate::topology::Topology;
-use crate::util::par::parallel_map;
+use crate::util::par::{parallel_for, parallel_map, parallel_map_into, SharedMut};
 use crate::util::rng::Rng;
 use std::cell::RefCell;
 
@@ -19,26 +34,39 @@ thread_local! {
     /// workers persist, so the all-shifts scans allocate it once per
     /// worker instead of once per shift.
     static LOADS: RefCell<Vec<u16>> = const { RefCell::new(Vec::new()) };
+    /// Per-worker permutation scratch for the RP scan (one permutation
+    /// draw per sample, no per-sample `Vec`).
+    static PERM: RefCell<Vec<u32>> = const { RefCell::new(Vec::new()) };
+    /// Per-worker blocked-SP scratch: K port histograms plus the K
+    /// running per-shift maxima.
+    static BLOCK: RefCell<(Vec<u16>, Vec<u16>)> =
+        const { RefCell::new((Vec::new(), Vec::new())) };
+    /// node → ordering-position scratch for the ordered shift scan.
+    static POS: RefCell<Vec<u32>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Default shift-block size for a fabric with `num_ports` directed ports:
+/// the largest K whose K per-worker u16 histograms stay within a 256 KiB
+/// L2 budget, clamped to `[1, 64]` (EXPERIMENTS.md §"Analysis perf" has
+/// the bandwidth math and the measured sweet spot).
+pub fn default_block(num_ports: usize) -> usize {
+    (128 * 1024 / num_ports.max(1)).clamp(1, 64)
 }
 
 /// Shared immutable state for permutation evaluations.
 pub struct PermEngine<'p> {
     paths: &'p PathTensor,
-    /// node -> leaf index in the tensor.
-    src_leaf: Vec<u32>,
+    /// node -> leaf index in the tensor (borrowed from the tensor — the
+    /// one shared copy of this map).
+    src_leaf: &'p [u32],
     num_ports: usize,
 }
 
 impl<'p> PermEngine<'p> {
     pub fn new(topo: &Topology, paths: &'p PathTensor) -> Self {
-        let src_leaf = topo
-            .nodes
-            .iter()
-            .map(|n| paths.leaf_index[n.leaf as usize])
-            .collect();
         Self {
             paths,
-            src_leaf,
+            src_leaf: &paths.src_leaf,
             num_ports: topo.num_ports(),
         }
     }
@@ -91,23 +119,117 @@ impl<'p> PermEngine<'p> {
     /// Median of per-permutation max loads over `samples` random
     /// permutations (the paper's RP metric, 1000 samples).
     pub fn random_perm_median(&self, samples: usize, seed: u64) -> u64 {
+        self.random_perm_median_into(samples, seed, &mut Vec::new())
+    }
+
+    /// [`PermEngine::random_perm_median`] into a caller-reused maxima
+    /// buffer: with the per-worker permutation and load scratches, the
+    /// steady-state RP scan performs zero heap allocation
+    /// (counting-allocator test in `tests/equivalence.rs`).
+    pub fn random_perm_median_into(
+        &self,
+        samples: usize,
+        seed: u64,
+        maxima: &mut Vec<u64>,
+    ) -> u64 {
         let n = self.paths.num_nodes;
-        let mut maxima = parallel_map(samples, |i| {
+        parallel_map_into(samples, maxima, |i| {
             let mut rng = Rng::new(seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
-            let perm = rng.permutation(n);
-            LOADS.with(|l| self.max_load(&perm, &mut l.borrow_mut()))
+            PERM.with(|p| {
+                let mut perm = p.borrow_mut();
+                rng.permutation_into(n, &mut perm);
+                LOADS.with(|l| self.max_load(&perm[..], &mut l.borrow_mut()))
+            })
         });
         maxima.sort_unstable();
         maxima[maxima.len() / 2]
     }
 
-    /// Per-shift max loads for all `N-1` cyclic shifts (SP series).
+    /// Per-shift max loads for all `N-1` cyclic shifts (SP series),
+    /// through the shift-blocked scan at the default block size.
     pub fn shift_series(&self) -> Vec<u64> {
+        let mut out = Vec::new();
+        self.shift_series_blocked_into(default_block(self.num_ports), &mut out);
+        out
+    }
+
+    /// The retained naive SP scan — one full tensor pass per shift.
+    /// Reference for the differential suite and the bandwidth benches;
+    /// returns exactly what [`PermEngine::shift_series`] returns.
+    pub fn shift_series_naive(&self) -> Vec<u64> {
         let n = self.paths.num_nodes;
         parallel_map(n.saturating_sub(1), |ki| {
             let k = ki + 1;
             LOADS.with(|l| self.max_load_fn(|s| ((s + k) % n) as u32, &mut l.borrow_mut()))
         })
+    }
+
+    /// Shift-blocked SP scan: shifts are processed in blocks of `block`;
+    /// each worker owns `block` per-shift histograms and reads every
+    /// tensor row once per block, scattering it into the histograms of
+    /// the shifts the row serves (`k = (d − s) mod n` for each node `s`
+    /// on the row's leaf). Exactly equal to the naive scan for every
+    /// block size — same counts, same maxima, same ≥ 1 clamp.
+    pub fn shift_series_blocked_into(&self, block: usize, out: &mut Vec<u64>) {
+        let n = self.paths.num_nodes;
+        let shifts = n.saturating_sub(1);
+        out.clear();
+        out.resize(shifts, 0);
+        if shifts == 0 {
+            return;
+        }
+        debug_assert!(n < u16::MAX as usize);
+        let k = block.clamp(1, shifts);
+        let blocks = shifts.div_ceil(k);
+        let np = self.num_ports;
+        let nl = self.paths.num_leaves;
+        let shared = SharedMut::new(&mut out[..]);
+        let shared = &shared;
+        parallel_for(blocks, |bi| {
+            let k0 = 1 + bi * k; // first shift of this block
+            let kb = k.min(n - k0); // shifts k0 .. k0+kb
+            BLOCK.with(|cell| {
+                let mut guard = cell.borrow_mut();
+                let (hist, maxes) = &mut *guard;
+                hist.clear();
+                hist.resize(kb * np, 0);
+                maxes.clear();
+                maxes.resize(kb, 0);
+                for li in 0..nl as u32 {
+                    for d in 0..n {
+                        let row = self.paths.path(li, d as u32);
+                        for (j, m) in maxes.iter_mut().enumerate() {
+                            // Shift k0+j routes s → d for s = (d − k0 − j)
+                            // mod n; the row serves it iff s lives on li.
+                            let kk = k0 + j;
+                            let s = if d >= kk { d - kk } else { d + n - kk };
+                            if self.src_leaf[s] != li {
+                                continue;
+                            }
+                            let base = j * np;
+                            for &p in row {
+                                if p == NO_PORT {
+                                    break;
+                                }
+                                let l = &mut hist[base + p as usize];
+                                *l += 1;
+                                if *l > *m {
+                                    *m = *l;
+                                }
+                            }
+                        }
+                    }
+                }
+                // SAFETY: blocks cover disjoint shift ranges.
+                let o = unsafe { shared.slice_mut(k0 - 1, kb) };
+                for (j, &m) in maxes.iter().enumerate() {
+                    // Every shift k ∈ [1, n−1] has n fixed-point-free
+                    // flows, so the node-port clamp of the naive scan
+                    // (`any_flow → ≥ 1`) always applies here.
+                    o[j] = (m as u64).max(1);
+                }
+            });
+        });
     }
 
     /// The paper's SP metric: maximum over all shifts.
@@ -119,28 +241,32 @@ impl<'p> PermEngine<'p> {
     /// `order[i]`, and shift-`k` sends `order[i] → order[(i+k) mod n]`.
     /// Used to evaluate how shift-friendly a *published* NID ordering is
     /// (the paper: "shift patterns which respect such an ordering").
-    /// Parallel over shifts like [`PermEngine::shift_series`], with the
-    /// same per-worker `loads` scratch.
+    /// Parallel over shifts like the naive scan, with the per-worker
+    /// `loads` scratch and a reused node→position scratch.
     pub fn shift_max_ordered(&self, order: &[u32]) -> u64 {
         let n = self.paths.num_nodes;
         assert_eq!(order.len(), n);
-        let mut pos = vec![0u32; n];
-        for (i, &node) in order.iter().enumerate() {
-            pos[node as usize] = i as u32;
-        }
-        let pos = &pos;
-        parallel_map(n.saturating_sub(1), |ki| {
-            let k = ki + 1;
-            LOADS.with(|l| {
-                self.max_load_fn(
-                    |s| order[(pos[s] as usize + k) % n],
-                    &mut l.borrow_mut(),
-                )
+        POS.with(|cell| {
+            let mut guard = cell.borrow_mut();
+            guard.clear();
+            guard.resize(n, 0);
+            for (i, &node) in order.iter().enumerate() {
+                guard[node as usize] = i as u32;
+            }
+            let pos = &guard[..];
+            parallel_map(n.saturating_sub(1), |ki| {
+                let k = ki + 1;
+                LOADS.with(|l| {
+                    self.max_load_fn(
+                        |s| order[(pos[s] as usize + k) % n],
+                        &mut l.borrow_mut(),
+                    )
+                })
             })
+            .into_iter()
+            .max()
+            .unwrap_or(0)
         })
-        .into_iter()
-        .max()
-        .unwrap_or(0)
     }
 }
 
@@ -150,21 +276,15 @@ mod tests {
     use crate::routing::dmodc;
     use crate::topology::pgft::PgftParams;
 
-    fn engine(t: &Topology) -> (PathTensor, Vec<u32>) {
+    fn tensor(t: &Topology) -> PathTensor {
         let lft = dmodc::route(t, &Default::default());
-        let pt = PathTensor::build(t, &lft);
-        let src_leaf = t
-            .nodes
-            .iter()
-            .map(|n| pt.leaf_index[n.leaf as usize])
-            .collect();
-        (pt, src_leaf)
+        PathTensor::build(t, &lft)
     }
 
     #[test]
     fn identity_perm_is_zero() {
         let t = PgftParams::fig1().build();
-        let (pt, _) = engine(&t);
+        let pt = tensor(&t);
         let e = PermEngine::new(&t, &pt);
         let mut loads = Vec::new();
         let ident: Vec<u32> = (0..t.nodes.len() as u32).collect();
@@ -174,7 +294,7 @@ mod tests {
     #[test]
     fn single_flow_load_one() {
         let t = PgftParams::fig1().build();
-        let (pt, _) = engine(&t);
+        let pt = tensor(&t);
         let e = PermEngine::new(&t, &pt);
         let mut dst: Vec<u32> = (0..t.nodes.len() as u32).collect();
         dst.swap(0, 11); // one exchanged pair, everything else fixed
@@ -190,7 +310,7 @@ mod tests {
         // capacity, so per-shift max load should be 1 for intra... — at
         // minimum, the SP max must be small and never exceed the leaf size.
         let t = PgftParams::fig1().build();
-        let (pt, _) = engine(&t);
+        let pt = tensor(&t);
         let e = PermEngine::new(&t, &pt);
         let series = e.shift_series();
         assert_eq!(series.len(), t.nodes.len() - 1);
@@ -199,12 +319,36 @@ mod tests {
     }
 
     #[test]
+    fn blocked_series_matches_naive_on_canonical_shapes() {
+        for params in [PgftParams::fig1(), PgftParams::small()] {
+            let t = params.build();
+            let pt = tensor(&t);
+            let e = PermEngine::new(&t, &pt);
+            let naive = e.shift_series_naive();
+            assert_eq!(e.shift_series(), naive, "default block");
+            let mut out = Vec::new();
+            for k in [1, 2, 3, 5, 8, t.nodes.len()] {
+                e.shift_series_blocked_into(k, &mut out);
+                assert_eq!(out, naive, "block {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn default_block_is_bounded() {
+        assert_eq!(default_block(0), 64);
+        assert_eq!(default_block(1_000_000), 1);
+        assert!(default_block(16_384) >= 1);
+        assert!(default_block(16_384) <= 64);
+    }
+
+    #[test]
     fn shift_max_ordered_identity_matches_shift_series() {
         // With the identity ordering, shift-k sends s → (s+k) mod n, which
         // is exactly the plain shift series — the parallel ordered scan
         // must agree with its maximum.
         let t = PgftParams::small().build();
-        let (pt, _) = engine(&t);
+        let pt = tensor(&t);
         let e = PermEngine::new(&t, &pt);
         let ident: Vec<u32> = (0..t.nodes.len() as u32).collect();
         assert_eq!(e.shift_max_ordered(&ident), e.shift_max());
@@ -213,10 +357,13 @@ mod tests {
     #[test]
     fn rp_median_deterministic_by_seed() {
         let t = PgftParams::fig1().build();
-        let (pt, _) = engine(&t);
+        let pt = tensor(&t);
         let e = PermEngine::new(&t, &pt);
         let a = e.random_perm_median(51, 7);
         let b = e.random_perm_median(51, 7);
         assert_eq!(a, b);
+        // The buffer-reusing entry point agrees.
+        let mut maxima = Vec::new();
+        assert_eq!(e.random_perm_median_into(51, 7, &mut maxima), a);
     }
 }

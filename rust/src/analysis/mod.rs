@@ -5,8 +5,18 @@
 //! maximum over ports. "Such simplified performance models faithfully
 //! reflect comparative behaviour, though the absolute values measured are
 //! not good estimators of real throughput" — exactly how we use it.
+//!
+//! Two entry levels:
+//! * [`CongestionAnalyzer`] — one-shot facade over a freshly traced
+//!   [`PathTensor`] (CLI, benches, tests);
+//! * [`RiskEvaluator`] — the *reusable* evaluator: it owns the tensor and
+//!   every pattern scratch, supports incremental tensor maintenance
+//!   ([`PathTensor::update`]), and is what the degradation-sweep
+//!   [`campaign`] engine and the fabric manager's post-event risk probe
+//!   drive — allocation-free per sample once warm.
 
 pub mod a2a;
+pub mod campaign;
 pub mod congestion;
 pub mod paths;
 pub mod patterns;
@@ -14,7 +24,7 @@ pub mod patterns;
 use crate::routing::Lft;
 use crate::topology::Topology;
 use congestion::PermEngine;
-use paths::PathTensor;
+use paths::{PathTensor, TensorUpdate};
 use patterns::Pattern;
 
 /// Facade bundling the path tensor with the pattern engines.
@@ -88,6 +98,73 @@ impl<'a> CongestionAnalyzer<'a> {
     }
 }
 
+/// Reusable congestion-risk evaluator: owns the [`PathTensor`] and every
+/// pattern scratch, so repeated evaluation — across degradation-sweep
+/// samples or fabric-manager events — performs zero heap allocation once
+/// the buffer capacities have converged (`tests/equivalence.rs`).
+///
+/// The tensor can be maintained incrementally across events through
+/// [`RiskEvaluator::update`], which retraces only the (leaf, dst) rows
+/// whose LFT inputs changed (see [`PathTensor::update`]).
+#[derive(Default)]
+pub struct RiskEvaluator {
+    tensor: PathTensor,
+    a2a: a2a::A2aScratch,
+    maxima: Vec<u64>,
+    series: Vec<u64>,
+    /// SP shift-block size; 0 selects [`congestion::default_block`].
+    pub sp_block: usize,
+}
+
+impl RiskEvaluator {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The maintained tensor (AOT offload, diagnostics).
+    pub fn tensor(&self) -> &PathTensor {
+        &self.tensor
+    }
+
+    /// Routes of the current tensor that failed to trace.
+    pub fn broken_routes(&self) -> usize {
+        self.tensor.broken_routes
+    }
+
+    /// Full tensor rebuild for `(topo, lft)` into the reused buffers.
+    pub fn rebuild(&mut self, topo: &Topology, lft: &Lft) {
+        self.tensor.rebuild(topo, lft);
+    }
+
+    /// Incremental tensor maintenance: see [`PathTensor::update`] for the
+    /// `dirty` contract (switch rows whose LFT content changed since the
+    /// last rebuild/update).
+    pub fn update(&mut self, topo: &Topology, lft: &Lft, dirty: &[u32]) -> TensorUpdate {
+        self.tensor.update(topo, lft, dirty)
+    }
+
+    /// Evaluate `pattern` against the current tensor. `topo` must be the
+    /// topology of the last [`RiskEvaluator::rebuild`]/
+    /// [`RiskEvaluator::update`].
+    pub fn evaluate(&mut self, topo: &Topology, pattern: Pattern, seed: u64) -> u64 {
+        match pattern {
+            Pattern::AllToAll => a2a::all_to_all_with(topo, &self.tensor, &mut self.a2a),
+            Pattern::RandomPermutation { samples } => PermEngine::new(topo, &self.tensor)
+                .random_perm_median_into(samples, seed, &mut self.maxima),
+            Pattern::ShiftPermutation => {
+                let block = if self.sp_block == 0 {
+                    congestion::default_block(topo.num_ports())
+                } else {
+                    self.sp_block
+                };
+                PermEngine::new(topo, &self.tensor)
+                    .shift_series_blocked_into(block, &mut self.series);
+                self.series.iter().copied().max().unwrap_or(0)
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -108,6 +185,29 @@ mod tests {
         assert_eq!(
             an.evaluate(Pattern::RandomPermutation { samples: 11 }, 3),
             an.random_perm_median(11, 3)
+        );
+    }
+
+    #[test]
+    fn evaluator_matches_facade() {
+        let t = PgftParams::small().build();
+        let lft = route_unchecked(Algo::Dmodc, &t);
+        let an = CongestionAnalyzer::new(&t, &lft);
+        let mut ev = RiskEvaluator::new();
+        ev.rebuild(&t, &lft);
+        assert_eq!(ev.broken_routes(), an.broken_routes());
+        for pat in [
+            Pattern::AllToAll,
+            Pattern::RandomPermutation { samples: 17 },
+            Pattern::ShiftPermutation,
+        ] {
+            assert_eq!(ev.evaluate(&t, pat, 5), an.evaluate(pat, 5), "{pat:?}");
+        }
+        // A forced non-default SP block changes nothing but bandwidth.
+        ev.sp_block = 3;
+        assert_eq!(
+            ev.evaluate(&t, Pattern::ShiftPermutation, 0),
+            an.shift_max()
         );
     }
 

@@ -14,17 +14,96 @@
 //! tensor traffic that dominates the all-shifts SP scan. The engines
 //! clamp their result to ≥ 1 whenever any flow exists, which is exactly
 //! the contribution the node port would have made.
+//!
+//! ## Incremental maintenance (EXPERIMENTS.md §"Analysis perf")
+//!
+//! Degradation campaigns and the fabric manager's risk probe evaluate the
+//! tensor after *event sequences*, where most LFT rows (and therefore most
+//! paths) survive each event unchanged. [`PathTensor::update`] exploits
+//! that: given the set of switch rows whose LFT content changed (keyed off
+//! the row versions `LftStore` tracks, or a direct row diff), it retraces
+//! only the (leaf, dst) rows whose route *consulted* a changed switch, and
+//! proves every other row unchanged — the same by-construction philosophy
+//! as `routing::delta`, and the same contract: **bit-identical to a fresh
+//! [`PathTensor::build`] after every event** (fuzzed by
+//! `tests/analysis_diff.rs`).
+//!
+//! A (leaf, dst) row is a pure function of the LFT rows and port lists of
+//! the switches its trace visits. The tensor therefore snapshots the port
+//! structure of the topology it traced; on update it marks dirty every
+//! switch the caller names *plus* every switch whose port list changed
+//! (cable events renumber ports, and with them the global port-id space).
+//! Clean rows are not retraced — their stored ids are *remapped* into the
+//! new port-id space with one subtraction/addition per hop, a streaming
+//! pass that is far cheaper than the pointer-chasing retrace.
 
 use crate::routing::{Lft, NO_ROUTE};
 use crate::topology::{NodeId, PortTarget, SwitchId, Topology};
-use crate::util::par::parallel_for_mut;
+use crate::util::par::{parallel_for, SharedMut};
+use std::cell::RefCell;
 
 /// Padding value for unused hop slots.
 pub const NO_PORT: u32 = u32::MAX;
 
+/// `row_len` sentinel: the row must be retraced.
+const DIRTY: u16 = u16::MAX;
+
+thread_local! {
+    /// Per-worker route-trace buffer, reused across rows and builds (the
+    /// pool's workers persist, so steady-state rebuilds allocate nothing).
+    static TRACE: RefCell<Vec<u32>> = const { RefCell::new(Vec::new()) };
+}
+
+/// What one [`PathTensor::update`] call did.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TensorUpdate {
+    /// Only the dirty (leaf, dst) rows were retraced.
+    Incremental(TensorStats),
+    /// Every row was retraced (a full rebuild), for the given reason.
+    Rebuilt(RebuildReason),
+}
+
+impl TensorUpdate {
+    /// True when the incremental path (not a full rebuild) applied.
+    pub fn is_incremental(&self) -> bool {
+        matches!(self, TensorUpdate::Incremental(_))
+    }
+}
+
+/// Row accounting of one incremental update.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TensorStats {
+    /// (leaf, dst) rows retraced through the topology.
+    pub rows_retraced: usize,
+    /// Rows proven unchanged and only remapped into the new port space.
+    pub rows_reused: usize,
+}
+
+/// Why [`PathTensor::update`] fell back to a full rebuild.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RebuildReason {
+    /// The tensor was never built (or was explicitly invalidated).
+    NoHistory,
+    /// Switch or node sets differ from the traced topology — row
+    /// identities are not comparable.
+    ShapeChanged,
+}
+
+/// Per-leaf accumulator for the build/update passes.
+#[derive(Clone, Copy, Default)]
+struct LeafStat {
+    broken: u32,
+    retraced: u32,
+    max_h: u32,
+    overflow: bool,
+}
+
 /// Dense `[leaves × nodes × max_hops]` tensor of port ids, `NO_PORT`-padded.
+#[derive(Default)]
 pub struct PathTensor {
     data: Vec<u32>,
+    /// Ping-pong buffer for re-striding (compaction, incremental emits).
+    next: Vec<u32>,
     pub num_leaves: usize,
     pub num_nodes: usize,
     pub max_hops: usize,
@@ -32,120 +111,446 @@ pub struct PathTensor {
     pub leaf_index: Vec<u32>,
     /// leaf index -> leaf switch id.
     pub leaves: Vec<SwitchId>,
+    /// node -> leaf index (λ_n in tensor coordinates). The one shared
+    /// copy of this map: the permutation engine, the A2A engine, and the
+    /// tests all borrow it instead of rebuilding their own.
+    pub src_leaf: Vec<u32>,
     /// Number of (leaf, dst) routes that failed to trace (no route/loop).
     pub broken_routes: usize,
+    /// Per (leaf, dst) row: 1 when the route failed to trace.
+    broken: Vec<u8>,
+    // --- snapshot of the traced topology (update eligibility + remap) ---
+    snap_valid: bool,
+    snap_switches: Vec<(u64, u8)>,
+    snap_nodes: Vec<(u64, SwitchId)>,
+    snap_port_offsets: Vec<u32>,
+    snap_ports: Vec<PortTarget>,
+    // --- reused update scratch ---
+    dirty_sw: Vec<bool>,
+    /// old global port id -> owning switch.
+    port_sw: Vec<u32>,
+    /// Per row: stored path length, or [`DIRTY`].
+    row_len: Vec<u16>,
+    leaf_stat: Vec<LeafStat>,
+}
+
+/// Trace the `leaf → d` route of `lft` into `buf` (terminal node port
+/// trimmed). Returns false when the route is broken (no route, wrong
+/// destination, or a loop longer than `loop_bound`).
+fn trace_row(
+    topo: &Topology,
+    lft: &Lft,
+    leaf: SwitchId,
+    d: NodeId,
+    loop_bound: usize,
+    buf: &mut Vec<u32>,
+) -> bool {
+    buf.clear();
+    let mut sw = leaf;
+    let ok = loop {
+        let port = lft.get(sw, d);
+        if port == NO_ROUTE {
+            break false;
+        }
+        buf.push(topo.port_id(sw, port));
+        match topo.switches[sw as usize].ports[port as usize] {
+            PortTarget::Node { node } => break node == d,
+            PortTarget::Switch { sw: next, .. } => sw = next,
+        }
+        if buf.len() > loop_bound + 1 {
+            break false; // route loop: broken, not overflow
+        }
+    };
+    if ok {
+        buf.pop(); // trim the terminal node port
+    }
+    ok
 }
 
 impl PathTensor {
-    /// Trace every (leaf, destination) route of `lft` (parallel over
-    /// leaves), writing straight into the final tensor.
+    /// Trace every (leaf, destination) route of `lft` into a fresh tensor
+    /// (parallel over leaves).
+    pub fn build(topo: &Topology, lft: &Lft) -> Self {
+        let mut t = Self::default();
+        t.rebuild(topo, lft);
+        t
+    }
+
+    /// Loop-bound row width: no non-loop path can exceed it.
+    fn cap_width(topo: &Topology) -> usize {
+        4 * topo.num_levels as usize + 4
+    }
+
+    /// Full rebuild into the reused buffers (allocation-free once the
+    /// capacities have converged for the topology family).
     ///
     /// Perf note: the first attempt uses the tight intact-PGFT width
     /// `2·levels` (up + down, node port trimmed) so the NO_PORT padding
     /// fill is minimal; the rare degraded routings with longer detours
     /// fall back to the loop-bound width.
-    pub fn build(topo: &Topology, lft: &Lft) -> Self {
+    pub fn rebuild(&mut self, topo: &Topology, lft: &Lft) {
+        self.prepare_shape(topo);
         let tight = (2 * topo.num_levels as usize).max(1);
-        let cap = 4 * topo.num_levels as usize + 4;
-        Self::build_width(topo, lft, tight, cap)
-            .unwrap_or_else(|| {
-                Self::build_width(topo, lft, cap, cap)
-                    .expect("loop-bound width fits every non-loop path")
-            })
+        let cap = Self::cap_width(topo);
+        if !self.fill_all(topo, lft, tight, cap) {
+            // A non-loop path can exceed even the loop-bound width only on
+            // a malformed LFT; fail loudly rather than hand corrupt data
+            // to every downstream metric.
+            assert!(
+                self.fill_all(topo, lft, cap, cap),
+                "loop-bound width fits every non-loop path"
+            );
+        }
+        self.capture_snapshot(topo);
     }
 
-    /// One build attempt with fixed row stride `width`; `None` when some
+    /// Recompute the leaf/node indexing for `topo`.
+    fn prepare_shape(&mut self, topo: &Topology) {
+        self.leaves.clear();
+        self.leaves.extend(
+            (0..topo.switches.len() as SwitchId)
+                .filter(|&s| topo.switches[s as usize].level == 0),
+        );
+        self.leaf_index.clear();
+        self.leaf_index.resize(topo.switches.len(), u32::MAX);
+        for (i, &l) in self.leaves.iter().enumerate() {
+            self.leaf_index[l as usize] = i as u32;
+        }
+        self.src_leaf.clear();
+        let leaf_index = &self.leaf_index;
+        self.src_leaf
+            .extend(topo.nodes.iter().map(|n| leaf_index[n.leaf as usize]));
+        self.num_leaves = self.leaves.len();
+        self.num_nodes = topo.nodes.len();
+    }
+
+    /// One full-fill attempt with row stride `width`; `false` when some
     /// non-loop path exceeds it (paths beyond `loop_bound` hops are route
     /// loops and count as broken instead).
-    fn build_width(
-        topo: &Topology,
-        lft: &Lft,
-        width: usize,
-        loop_bound: usize,
-    ) -> Option<Self> {
-        let leaves = topo.leaf_switches();
-        let nl = leaves.len();
-        let nn = topo.nodes.len();
-        let mut leaf_index = vec![u32::MAX; topo.switches.len()];
-        for (i, &l) in leaves.iter().enumerate() {
-            leaf_index[l as usize] = i as u32;
+    fn fill_all(&mut self, topo: &Topology, lft: &Lft, width: usize, loop_bound: usize) -> bool {
+        let nl = self.num_leaves;
+        let nn = self.num_nodes;
+        self.data.clear();
+        self.data.resize(nl * nn * width, NO_PORT);
+        self.broken.clear();
+        self.broken.resize(nl * nn, 0);
+        self.leaf_stat.clear();
+        self.leaf_stat.resize(nl, LeafStat::default());
+        {
+            let data = SharedMut::new(&mut self.data);
+            let broken = SharedMut::new(&mut self.broken);
+            let stats = SharedMut::new(&mut self.leaf_stat);
+            let leaves = &self.leaves;
+            let (data, broken, stats) = (&data, &broken, &stats);
+            parallel_for(nl, |li| {
+                // SAFETY: each leaf index is claimed exactly once; the
+                // per-leaf slices are disjoint.
+                let chunk = unsafe { data.slice_mut(li * nn * width, nn * width) };
+                let brow = unsafe { broken.slice_mut(li * nn, nn) };
+                let st = unsafe { stats.get_mut(li) };
+                let leaf = leaves[li];
+                TRACE.with(|b| {
+                    let mut buf = b.borrow_mut();
+                    for d in 0..nn as NodeId {
+                        if trace_row(topo, lft, leaf, d, loop_bound, &mut buf) {
+                            if buf.len() > width {
+                                st.overflow = true;
+                            } else {
+                                chunk[d as usize * width..d as usize * width + buf.len()]
+                                    .copy_from_slice(&buf);
+                                st.max_h = st.max_h.max(buf.len() as u32);
+                            }
+                        } else {
+                            brow[d as usize] = 1;
+                            st.broken += 1;
+                        }
+                    }
+                });
+            });
         }
-        let mut data = vec![NO_PORT; nl * nn * width];
-        struct LeafOut<'a> {
-            chunk: &'a mut [u32],
-            broken: usize,
-            overflow: bool,
-            max_h: usize,
+        if self.leaf_stat.iter().any(|s| s.overflow) {
+            return false;
         }
-        let mut rows: Vec<LeafOut> = data
-            .chunks_mut((nn * width).max(1))
-            .map(|chunk| LeafOut {
-                chunk,
-                broken: 0,
-                overflow: false,
-                max_h: 0,
-            })
-            .collect();
-        parallel_for_mut(&mut rows, |li, out| {
-            let leaf = leaves[li];
-            let mut buf = Vec::with_capacity(width + 1);
-            for d in 0..nn as NodeId {
-                buf.clear();
-                let mut sw = leaf;
-                let ok = loop {
-                    let port = lft.get(sw, d);
-                    if port == NO_ROUTE {
-                        break false;
-                    }
-                    buf.push(topo.port_id(sw, port));
-                    match topo.switches[sw as usize].ports[port as usize] {
-                        PortTarget::Node { node } => break node == d,
-                        PortTarget::Switch { sw: next, .. } => sw = next,
-                    }
-                    if buf.len() > loop_bound + 1 {
-                        break false; // route loop: broken, not overflow
-                    }
-                };
-                if ok {
-                    buf.pop(); // trim the terminal node port
-                    if buf.len() > width {
-                        out.overflow = true;
-                    } else {
-                        out.chunk[d as usize * width..d as usize * width + buf.len()]
-                            .copy_from_slice(&buf);
-                        out.max_h = out.max_h.max(buf.len());
-                    }
-                } else {
-                    out.broken += 1;
-                }
-            }
-        });
-        let overflow = rows.iter().any(|r| r.overflow);
-        let broken_routes = rows.iter().map(|r| r.broken).sum();
-        let max_h = rows.iter().map(|r| r.max_h).max().unwrap_or(0).max(1);
-        drop(rows);
-        if overflow {
-            return None;
-        }
+        self.broken_routes = self.leaf_stat.iter().map(|s| s.broken as usize).sum();
+        let max_h = self
+            .leaf_stat
+            .iter()
+            .map(|s| s.max_h as usize)
+            .max()
+            .unwrap_or(0)
+            .max(1);
         // Compact to the observed stride: the all-shifts SP scan streams
-        // the whole tensor thousands of times, so every padding column
-        // costs real bandwidth.
+        // the whole tensor many times, so every padding column costs real
+        // bandwidth.
         if max_h < width {
-            let mut tight = vec![NO_PORT; nl * nn * max_h];
-            for row in 0..nl * nn {
-                tight[row * max_h..(row + 1) * max_h]
-                    .copy_from_slice(&data[row * width..row * width + max_h]);
-            }
-            data = tight;
+            compact_rows(&self.data, &mut self.next, nl, nn, width, max_h);
+            std::mem::swap(&mut self.data, &mut self.next);
         }
-        Some(Self {
-            data,
-            num_leaves: nl,
-            num_nodes: nn,
-            max_hops: max_h.min(width),
-            leaf_index,
-            leaves,
-            broken_routes,
+        self.max_hops = max_h.min(width);
+        true
+    }
+
+    /// Snapshot the port structure of the traced topology.
+    fn capture_snapshot(&mut self, topo: &Topology) {
+        self.snap_switches.clear();
+        self.snap_switches
+            .extend(topo.switches.iter().map(|s| (s.uuid, s.level)));
+        self.snap_nodes.clear();
+        self.snap_nodes
+            .extend(topo.nodes.iter().map(|n| (n.uuid, n.leaf)));
+        self.snap_port_offsets.clear();
+        self.snap_port_offsets
+            .extend_from_slice(&topo.port_offsets);
+        self.snap_ports.clear();
+        for s in &topo.switches {
+            self.snap_ports.extend_from_slice(&s.ports);
+        }
+        self.snap_valid = true;
+    }
+
+    /// True when `topo`'s switch and node identities match the snapshot
+    /// (row indices are comparable).
+    fn shape_matches(&self, topo: &Topology) -> bool {
+        self.snap_switches.len() == topo.switches.len()
+            && self.snap_nodes.len() == topo.nodes.len()
+            && topo
+                .switches
+                .iter()
+                .zip(&self.snap_switches)
+                .all(|(s, &(u, l))| s.uuid == u && s.level == l)
+            && topo
+                .nodes
+                .iter()
+                .zip(&self.snap_nodes)
+                .all(|(n, &(u, l))| n.uuid == u && n.leaf == l)
+    }
+
+    /// Incremental re-trace: given the switch rows whose **LFT content
+    /// changed** since this tensor was last built/updated (`dirty_rows` —
+    /// e.g. the rows whose `LftStore` version moved, or
+    /// `reroute_delta_into`'s `touched` list), retrace only the (leaf,
+    /// dst) rows whose route consulted a dirty switch, and remap every
+    /// other row into the new port-id space. **Bit-identical to a fresh
+    /// [`PathTensor::build`] of `(topo, lft)`** — switches whose port
+    /// lists changed are detected and dirtied internally, and any
+    /// switch/node-set change degrades to a full rebuild.
+    ///
+    /// Contract (mirrors `LftStore::commit_rows`): every switch row *not*
+    /// in `dirty_rows` must hold exactly the content it had when the
+    /// tensor last traced it. The differential fuzz in
+    /// `tests/analysis_diff.rs` drives this with row-diff-derived sets.
+    pub fn update(&mut self, topo: &Topology, lft: &Lft, dirty_rows: &[u32]) -> TensorUpdate {
+        if !self.snap_valid {
+            self.rebuild(topo, lft);
+            return TensorUpdate::Rebuilt(RebuildReason::NoHistory);
+        }
+        if !self.shape_matches(topo) {
+            self.rebuild(topo, lft);
+            return TensorUpdate::Rebuilt(RebuildReason::ShapeChanged);
+        }
+        debug_assert_eq!(lft.num_switches(), topo.switches.len());
+        debug_assert_eq!(lft.num_nodes(), topo.nodes.len());
+
+        let ns = topo.switches.len();
+        let nl = self.num_leaves;
+        let nn = self.num_nodes;
+
+        // Dirty switches: the caller's changed LFT rows plus every switch
+        // whose port list changed (its local port numbering — and with it
+        // the global id space — moved).
+        self.dirty_sw.clear();
+        self.dirty_sw.resize(ns, false);
+        for &s in dirty_rows {
+            if let Some(f) = self.dirty_sw.get_mut(s as usize) {
+                *f = true;
+            }
+        }
+        for (s, sw) in topo.switches.iter().enumerate() {
+            if self.dirty_sw[s] {
+                continue;
+            }
+            let lo = self.snap_port_offsets[s] as usize;
+            let hi = self.snap_port_offsets[s + 1] as usize;
+            if sw.ports.len() != hi - lo || sw.ports[..] != self.snap_ports[lo..hi] {
+                self.dirty_sw[s] = true;
+            }
+        }
+
+        // Old global port id -> owning switch (decodes stored hops).
+        let old_np = *self.snap_port_offsets.last().unwrap_or(&0) as usize;
+        self.port_sw.clear();
+        self.port_sw.resize(old_np, 0);
+        for s in 0..ns {
+            let lo = self.snap_port_offsets[s] as usize;
+            let hi = self.snap_port_offsets[s + 1] as usize;
+            self.port_sw[lo..hi].fill(s as u32);
+        }
+
+        // Pass 1 (mark): a row is clean iff its stored trace consulted
+        // only clean switches — the leaf, the owner of every stored hop,
+        // and the target switch of the last stored hop (whose LFT row
+        // supplies the trimmed terminal node port). Broken rows carry no
+        // stored trace, so they always retrace.
+        let w_old = self.max_hops;
+        self.row_len.clear();
+        self.row_len.resize(nl * nn, 0);
+        {
+            let row_len = SharedMut::new(&mut self.row_len);
+            let row_len = &row_len;
+            let data = &self.data;
+            let broken = &self.broken;
+            let dirty_sw = &self.dirty_sw;
+            let port_sw = &self.port_sw;
+            let snap_ports = &self.snap_ports;
+            let leaves = &self.leaves;
+            parallel_for(nl, |li| {
+                // SAFETY: per-leaf slices of row_len are disjoint.
+                let lens = unsafe { row_len.slice_mut(li * nn, nn) };
+                let leaf_dirty = dirty_sw[leaves[li] as usize];
+                for d in 0..nn {
+                    let idx = li * nn + d;
+                    let row = &data[idx * w_old..(idx + 1) * w_old];
+                    let mut dirty = broken[idx] != 0;
+                    let mut len = 0usize;
+                    if !dirty {
+                        if w_old == 0 || row[0] == NO_PORT {
+                            // Empty ok row: destination on this leaf —
+                            // the leaf's own LFT row was consulted.
+                            dirty = leaf_dirty;
+                        } else {
+                            for &gid in row {
+                                if gid == NO_PORT {
+                                    break;
+                                }
+                                if dirty_sw[port_sw[gid as usize] as usize] {
+                                    dirty = true;
+                                    break;
+                                }
+                                len += 1;
+                            }
+                            if !dirty {
+                                // `snap_ports` is indexed by global port
+                                // id — the last stored hop decodes
+                                // directly.
+                                let gid = row[len - 1] as usize;
+                                match snap_ports[gid] {
+                                    PortTarget::Switch { sw: tgt, .. } => {
+                                        dirty = dirty_sw[tgt as usize];
+                                    }
+                                    PortTarget::Node { .. } => {
+                                        // Stored hops never target nodes
+                                        // (the terminal port is trimmed).
+                                        debug_assert!(false, "stored hop targets a node");
+                                        dirty = true;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    lens[d] = if dirty { DIRTY } else { len as u16 };
+                }
+            });
+        }
+
+        // Pass 2 (emit): clean rows are remapped (old gid − old offset +
+        // new offset per hop), dirty rows retraced; both written to the
+        // ping-pong buffer at the trial stride. A retraced detour longer
+        // than the old stride escalates to the loop-bound width, exactly
+        // like the fresh build's two-attempt scheme.
+        let cap = Self::cap_width(topo);
+        let mut width = w_old.max(1);
+        loop {
+            self.leaf_stat.clear();
+            self.leaf_stat.resize(nl, LeafStat::default());
+            self.next.clear();
+            self.next.resize(nl * nn * width, NO_PORT);
+            {
+                let next = SharedMut::new(&mut self.next);
+                let broken = SharedMut::new(&mut self.broken);
+                let stats = SharedMut::new(&mut self.leaf_stat);
+                let (next, broken, stats) = (&next, &broken, &stats);
+                let data = &self.data;
+                let row_len = &self.row_len;
+                let port_sw = &self.port_sw;
+                let snap_port_offsets = &self.snap_port_offsets;
+                let leaves = &self.leaves;
+                parallel_for(nl, |li| {
+                    // SAFETY: per-leaf slices are disjoint.
+                    let out = unsafe { next.slice_mut(li * nn * width, nn * width) };
+                    let brow = unsafe { broken.slice_mut(li * nn, nn) };
+                    let st = unsafe { stats.get_mut(li) };
+                    let leaf = leaves[li];
+                    TRACE.with(|b| {
+                        let mut buf = b.borrow_mut();
+                        for d in 0..nn {
+                            let idx = li * nn + d;
+                            if row_len[idx] != DIRTY {
+                                let len = row_len[idx] as usize;
+                                let src = &data[idx * w_old..idx * w_old + len];
+                                let dst = &mut out[d * width..d * width + len];
+                                for (o, &gid) in dst.iter_mut().zip(src) {
+                                    let s = port_sw[gid as usize] as usize;
+                                    *o = gid - snap_port_offsets[s]
+                                        + topo.port_offsets[s];
+                                }
+                                st.max_h = st.max_h.max(len as u32);
+                                // Broken rows are always marked DIRTY in
+                                // pass 1, so clean rows never count here.
+                                debug_assert_eq!(brow[d], 0, "clean row marked broken");
+                                continue;
+                            }
+                            st.retraced += 1;
+                            if trace_row(topo, lft, leaf, d as NodeId, cap, &mut buf) {
+                                brow[d] = 0;
+                                if buf.len() > width {
+                                    st.overflow = true;
+                                } else {
+                                    out[d * width..d * width + buf.len()]
+                                        .copy_from_slice(&buf);
+                                    st.max_h = st.max_h.max(buf.len() as u32);
+                                }
+                            } else {
+                                brow[d] = 1;
+                                st.broken += 1;
+                            }
+                        }
+                    });
+                });
+            }
+            if self.leaf_stat.iter().any(|s| s.overflow) && width < cap {
+                width = cap;
+                continue;
+            }
+            break;
+        }
+        // Same loud failure as `rebuild`: overflow at the loop-bound
+        // width means a malformed LFT, never a legal detour.
+        assert!(
+            !self.leaf_stat.iter().any(|s| s.overflow),
+            "loop-bound width fits every non-loop path"
+        );
+
+        self.broken_routes = self.leaf_stat.iter().map(|s| s.broken as usize).sum();
+        let retraced: usize = self.leaf_stat.iter().map(|s| s.retraced as usize).sum();
+        let max_h = self
+            .leaf_stat
+            .iter()
+            .map(|s| s.max_h as usize)
+            .max()
+            .unwrap_or(0)
+            .max(1);
+        if max_h < width {
+            // Compact into `data` (its old content was fully consumed by
+            // the emit pass above).
+            compact_rows(&self.next, &mut self.data, nl, nn, width, max_h);
+        } else {
+            std::mem::swap(&mut self.data, &mut self.next);
+        }
+        self.max_hops = max_h;
+        self.capture_snapshot(topo);
+        TensorUpdate::Incremental(TensorStats {
+            rows_retraced: retraced,
+            rows_reused: nl * nn - retraced,
         })
     }
 
@@ -163,11 +568,39 @@ impl PathTensor {
     }
 }
 
+/// Re-stride `groups × rows_per_group` rows from `from_w` to `to_w ≤
+/// from_w` columns (rows are `NO_PORT`-padded past their path, so the
+/// prefix copy preserves every stored hop).
+fn compact_rows(
+    src: &[u32],
+    dst: &mut Vec<u32>,
+    groups: usize,
+    rows_per_group: usize,
+    from_w: usize,
+    to_w: usize,
+) {
+    dst.clear();
+    dst.resize(groups * rows_per_group * to_w, NO_PORT);
+    let shared = SharedMut::new(&mut dst[..]);
+    let shared = &shared;
+    parallel_for(groups, |g| {
+        // SAFETY: per-group slices are disjoint.
+        let out = unsafe { shared.slice_mut(g * rows_per_group * to_w, rows_per_group * to_w) };
+        for r in 0..rows_per_group {
+            let row = g * rows_per_group + r;
+            out[r * to_w..(r + 1) * to_w]
+                .copy_from_slice(&src[row * from_w..row * from_w + to_w]);
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::routing::{dmodc, trace};
+    use crate::routing::{dmodc, route_unchecked, trace, Algo};
+    use crate::topology::degrade;
     use crate::topology::pgft::PgftParams;
+    use std::collections::HashSet;
 
     #[test]
     fn tensor_matches_trace_minus_node_port() {
@@ -211,5 +644,95 @@ mod tests {
         lft.set(leaf, d, crate::routing::NO_ROUTE);
         let pt = PathTensor::build(&t, &lft);
         assert_eq!(pt.broken_routes, 1);
+    }
+
+    #[test]
+    fn src_leaf_matches_manual_map() {
+        let t = PgftParams::small().build();
+        let lft = route_unchecked(Algo::Dmodc, &t);
+        let pt = PathTensor::build(&t, &lft);
+        let manual: Vec<u32> = t
+            .nodes
+            .iter()
+            .map(|n| pt.leaf_index[n.leaf as usize])
+            .collect();
+        assert_eq!(pt.src_leaf, manual);
+    }
+
+    fn assert_tensor_eq(got: &PathTensor, want: &PathTensor, ctx: &str) {
+        assert_eq!(got.num_leaves, want.num_leaves, "{ctx}: num_leaves");
+        assert_eq!(got.num_nodes, want.num_nodes, "{ctx}: num_nodes");
+        assert_eq!(got.max_hops, want.max_hops, "{ctx}: max_hops");
+        assert_eq!(got.leaf_index, want.leaf_index, "{ctx}: leaf_index");
+        assert_eq!(got.leaves, want.leaves, "{ctx}: leaves");
+        assert_eq!(got.src_leaf, want.src_leaf, "{ctx}: src_leaf");
+        assert_eq!(got.broken_routes, want.broken_routes, "{ctx}: broken");
+        assert_eq!(got.raw(), want.raw(), "{ctx}: raw data");
+    }
+
+    /// Switch rows whose LFT content differs (the caller-side dirty set).
+    fn dirty_rows(prev: &Lft, cur: &Lft) -> Vec<u32> {
+        cur.changed_rows(prev)
+    }
+
+    #[test]
+    fn update_with_no_change_reuses_every_row() {
+        let t = PgftParams::fig1().build();
+        let lft = route_unchecked(Algo::Dmodc, &t);
+        let mut pt = PathTensor::build(&t, &lft);
+        match pt.update(&t, &lft, &[]) {
+            TensorUpdate::Incremental(st) => {
+                assert_eq!(st.rows_retraced, 0);
+                assert_eq!(st.rows_reused, pt.num_leaves * pt.num_nodes);
+            }
+            other => panic!("expected incremental, got {other:?}"),
+        }
+        assert_tensor_eq(&pt, &PathTensor::build(&t, &lft), "no-change");
+    }
+
+    #[test]
+    fn update_after_cable_event_matches_fresh_build() {
+        let t = PgftParams::fig1().build();
+        let lft = route_unchecked(Algo::Dmodc, &t);
+        let mut pt = PathTensor::build(&t, &lft);
+        // Fault one cable of a parallel pair, then recover it.
+        let dead: HashSet<(SwitchId, u16)> =
+            [degrade::cables(&t)[0]].into_iter().collect();
+        let d = degrade::apply(&t, &HashSet::new(), &dead);
+        let lft_d = route_unchecked(Algo::Dmodc, &d);
+        let up = pt.update(&d, &lft_d, &dirty_rows(&lft, &lft_d));
+        assert!(up.is_incremental(), "{up:?}");
+        assert_tensor_eq(&pt, &PathTensor::build(&d, &lft_d), "fault");
+        let up = pt.update(&t, &lft, &dirty_rows(&lft_d, &lft));
+        assert!(up.is_incremental(), "{up:?}");
+        assert_tensor_eq(&pt, &PathTensor::build(&t, &lft), "recovery");
+    }
+
+    #[test]
+    fn update_after_switch_event_rebuilds() {
+        let t = PgftParams::fig1().build();
+        let lft = route_unchecked(Algo::Dmodc, &t);
+        let mut pt = PathTensor::build(&t, &lft);
+        let dead: HashSet<SwitchId> =
+            [t.switches.len() as SwitchId - 1].into_iter().collect();
+        let d = degrade::apply(&t, &dead, &HashSet::new());
+        let lft_d = route_unchecked(Algo::Dmodc, &d);
+        assert_eq!(
+            pt.update(&d, &lft_d, &dirty_rows(&lft, &lft_d)),
+            TensorUpdate::Rebuilt(RebuildReason::ShapeChanged)
+        );
+        assert_tensor_eq(&pt, &PathTensor::build(&d, &lft_d), "switch kill");
+    }
+
+    #[test]
+    fn update_on_fresh_tensor_reports_no_history() {
+        let t = PgftParams::fig1().build();
+        let lft = route_unchecked(Algo::Dmodc, &t);
+        let mut pt = PathTensor::default();
+        assert_eq!(
+            pt.update(&t, &lft, &[]),
+            TensorUpdate::Rebuilt(RebuildReason::NoHistory)
+        );
+        assert_tensor_eq(&pt, &PathTensor::build(&t, &lft), "cold update");
     }
 }

@@ -33,6 +33,18 @@ impl Pattern {
             Pattern::ShiftPermutation,
         ]
     }
+
+    /// Parse a pattern name (`a2a` | `rp` | `sp`, case-insensitive);
+    /// `rp_samples` parameterizes the RP pattern. The CLI and campaign
+    /// surfaces share this one resolver.
+    pub fn parse(s: &str, rp_samples: usize) -> Result<Pattern, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "a2a" => Ok(Pattern::AllToAll),
+            "rp" => Ok(Pattern::RandomPermutation { samples: rp_samples }),
+            "sp" => Ok(Pattern::ShiftPermutation),
+            other => Err(format!("unknown pattern {other:?} (expected a2a|rp|sp)")),
+        }
+    }
 }
 
 /// Destination vector of shift-by-`k`: `i → (i + k) mod n`.
@@ -80,5 +92,16 @@ mod tests {
         assert_eq!(Pattern::AllToAll.name(), "A2A");
         assert_eq!(Pattern::RandomPermutation { samples: 3 }.name(), "RP");
         assert_eq!(Pattern::ShiftPermutation.name(), "SP");
+    }
+
+    #[test]
+    fn parse_roundtrip_and_error() {
+        assert_eq!(Pattern::parse("a2a", 9), Ok(Pattern::AllToAll));
+        assert_eq!(
+            Pattern::parse("RP", 9),
+            Ok(Pattern::RandomPermutation { samples: 9 })
+        );
+        assert_eq!(Pattern::parse("sp", 9), Ok(Pattern::ShiftPermutation));
+        assert!(Pattern::parse("nope", 9).is_err());
     }
 }

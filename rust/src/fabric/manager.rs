@@ -36,12 +36,38 @@
 use super::events::{cable_ids, for_each_cable, CableId, Event, EventKind};
 use super::lft_store::{LftStore, UploadStats};
 use super::metrics::{Histogram, Metrics};
+use crate::analysis::paths::TensorUpdate;
+use crate::analysis::patterns::Pattern;
+use crate::analysis::RiskEvaluator;
 use crate::routing::{registry, Algo, DeltaOutcome, DeltaStats, Lft, RoutingEngine};
 use crate::topology::degrade::{self, DegradeScratch};
 use crate::topology::{PortTarget, SwitchId, Topology};
 use std::collections::{HashMap, HashSet};
 use std::sync::mpsc::{Receiver, Sender};
 use std::time::Instant;
+
+/// Post-event congestion-risk probe configuration: which patterns to
+/// evaluate against the freshly committed tables.
+#[derive(Clone, Debug)]
+pub struct ProbeConfig {
+    /// Patterns evaluated per event (RP at its configured sample count
+    /// is expensive — the default probes A2A and SP only).
+    pub patterns: Vec<Pattern>,
+    /// Seed for RP sampling.
+    pub seed: u64,
+    /// SP shift-block size; 0 = auto.
+    pub sp_block: usize,
+}
+
+impl Default for ProbeConfig {
+    fn default() -> Self {
+        Self {
+            patterns: vec![Pattern::AllToAll, Pattern::ShiftPermutation],
+            seed: 0,
+            sp_block: 0,
+        }
+    }
+}
 
 /// Manager configuration.
 #[derive(Clone, Debug)]
@@ -53,6 +79,12 @@ pub struct ManagerConfig {
     /// supports it (`Capabilities::incremental`). Off forces a full
     /// reroute per event — the comparison baseline.
     pub delta: bool,
+    /// Optional post-event congestion-risk probe: after every reroute the
+    /// manager re-evaluates the configured patterns against the committed
+    /// tables, maintaining the path tensor *incrementally* — the dirty
+    /// rows come from the row versions [`LftStore`] already tracks, so a
+    /// delta-tier cable event retraces only the paths it touched.
+    pub probe: Option<ProbeConfig>,
 }
 
 impl Default for ManagerConfig {
@@ -61,6 +93,7 @@ impl Default for ManagerConfig {
             algo: Algo::Dmodc,
             validate: true,
             delta: true,
+            probe: None,
         }
     }
 }
@@ -88,6 +121,42 @@ pub struct ManagerReport {
     pub tier: ReactionTier,
     /// Dirty-set statistics when the delta tier fired.
     pub delta: Option<DeltaStats>,
+    /// Post-event congestion risk, when `ManagerConfig::probe` is on.
+    pub risk: Option<RiskReport>,
+}
+
+/// One risk-probe evaluation (see [`ProbeConfig`]).
+#[derive(Clone, Debug)]
+pub struct RiskReport {
+    /// `(pattern, congestion risk)` per configured pattern.
+    pub values: Vec<(Pattern, u64)>,
+    /// How the path tensor was maintained for this event.
+    pub update: TensorUpdate,
+    /// (leaf, dst) routes that failed to trace (0 on a valid routing).
+    pub broken_routes: usize,
+}
+
+/// Probe state: the reusable evaluator plus the per-switch `LftStore`
+/// version snapshot that keys the incremental tensor maintenance.
+struct RiskProbe {
+    cfg: ProbeConfig,
+    eval: RiskEvaluator,
+    /// (uuid, store version) per switch of the last probed topology.
+    versions: Vec<(u64, u64)>,
+    scratch_versions: Vec<(u64, u64)>,
+    dirty: Vec<u32>,
+}
+
+impl RiskProbe {
+    fn new(cfg: ProbeConfig) -> Self {
+        Self {
+            cfg,
+            eval: RiskEvaluator::new(),
+            versions: Vec::new(),
+            scratch_versions: Vec::new(),
+            dirty: Vec::new(),
+        }
+    }
 }
 
 /// Centralized fabric manager state.
@@ -128,6 +197,9 @@ pub struct FabricManager {
     /// Rows refilled by the last delta-tier reroute (reused buffer for
     /// the partial upload commit).
     touched_rows: Vec<u32>,
+    /// Optional post-event risk probe (tensor + scratches + version
+    /// snapshot), present iff `cfg.probe` is set.
+    probe: Option<RiskProbe>,
     events_seen: usize,
 }
 
@@ -156,6 +228,7 @@ impl FabricManager {
             .map(|(i, s)| (s.uuid, i as SwitchId))
             .collect();
         let cable_to_port = cable_ids(&reference).into_iter().collect();
+        let probe = cfg.probe.clone().map(RiskProbe::new);
         let mut mgr = Self {
             reference,
             cfg,
@@ -174,6 +247,7 @@ impl FabricManager {
             cable_map_stale: true,
             patched_dead_ports: HashSet::new(),
             touched_rows: Vec::new(),
+            probe,
             events_seen: 0,
         };
         mgr.reroute(false);
@@ -312,6 +386,7 @@ impl FabricManager {
         self.metrics.entries_changed += upload.entries_changed as u64;
         self.metrics.blocks_uploaded += upload.blocks_delta as u64;
         self.reroute_hist.record(reroute_secs * 1e3);
+        let risk = self.run_probe();
         ManagerReport {
             event_idx: self.events_seen,
             reroute_secs,
@@ -321,7 +396,58 @@ impl FabricManager {
             cables_alive: self.current_topo.num_cables(),
             tier,
             delta,
+            risk,
         }
+    }
+
+    /// Re-evaluate the configured risk patterns against the committed
+    /// tables (no-op without a probe). The tensor's dirty rows are the
+    /// switches whose [`LftStore`] version moved since the last probe —
+    /// the store bumps a version on every content change, including
+    /// `fast_patch` commits between reroutes, so the diff is exact.
+    fn run_probe(&mut self) -> Option<RiskReport> {
+        let p = self.probe.as_mut()?;
+        p.dirty.clear();
+        p.scratch_versions.clear();
+        let mut aligned = p.versions.len() == self.current_topo.switches.len();
+        for (s, sw) in self.current_topo.switches.iter().enumerate() {
+            let v = self.store.version(sw.uuid).unwrap_or(0);
+            p.scratch_versions.push((sw.uuid, v));
+            if aligned {
+                let (pu, pv) = p.versions[s];
+                if pu != sw.uuid {
+                    aligned = false;
+                } else if pv != v {
+                    p.dirty.push(s as u32);
+                }
+            }
+        }
+        std::mem::swap(&mut p.versions, &mut p.scratch_versions);
+        if !aligned {
+            // First probe or a switch-set change: no usable baseline —
+            // mark every row dirty and let the tensor decide (it degrades
+            // to a full rebuild on shape changes anyway).
+            p.dirty.clear();
+            p.dirty
+                .extend(0..self.current_topo.switches.len() as u32);
+        }
+        let update = p
+            .eval
+            .update(&self.current_topo, &self.current_lft, &p.dirty);
+        p.eval.sp_block = p.cfg.sp_block;
+        let mut values = Vec::with_capacity(p.cfg.patterns.len());
+        for &pat in &p.cfg.patterns {
+            values.push((pat, p.eval.evaluate(&self.current_topo, pat, p.cfg.seed)));
+        }
+        self.metrics.probe_updates += 1;
+        if !update.is_incremental() {
+            self.metrics.probe_rebuilds += 1;
+        }
+        Some(RiskReport {
+            values,
+            update,
+            broken_routes: p.eval.broken_routes(),
+        })
     }
 
     /// Apply one event (synchronous): update state, reroute, report.
@@ -589,6 +715,70 @@ mod tests {
             kind: EventKind::LinkUp(ids[1].0),
         });
         assert_eq!(r.tier, ReactionTier::Delta);
+    }
+
+    #[test]
+    fn probe_tracks_risk_incrementally_across_the_tiers() {
+        use crate::analysis::CongestionAnalyzer;
+        let t = PgftParams::small().build();
+        let cable = cable_ids(&t)[0].0; // parallel pair → delta tier
+        let mut mgr = FabricManager::new(
+            t.clone(),
+            ManagerConfig {
+                probe: Some(ProbeConfig::default()),
+                ..Default::default()
+            },
+        );
+        // The constructor's initial reroute already probed (cold rebuild).
+        assert_eq!(mgr.metrics.probe_updates, 1);
+        assert_eq!(mgr.metrics.probe_rebuilds, 1);
+
+        // Cable event: delta reroute tier AND incremental tensor update.
+        let r = mgr.apply(&Event {
+            at_ms: 1,
+            kind: EventKind::LinkDown(cable),
+        });
+        assert_eq!(r.tier, ReactionTier::Delta);
+        let risk = r.risk.expect("probe configured");
+        assert!(risk.update.is_incremental(), "{:?}", risk.update);
+        assert_eq!(risk.broken_routes, 0);
+        // Values must equal a from-scratch analyzer of the current state.
+        let (topo, lft) = mgr.current();
+        let an = CongestionAnalyzer::new(topo, lft);
+        for &(pat, v) in &risk.values {
+            assert_eq!(v, an.evaluate(pat, 0), "{pat:?}");
+        }
+        assert_eq!(mgr.metrics.probe_updates, 2);
+        assert_eq!(mgr.metrics.probe_rebuilds, 1, "cable event stays incremental");
+
+        // Switch event: shape change → tensor rebuild, values still exact.
+        let victim = uuid_of_level(&t, 1);
+        let r = mgr.apply(&Event {
+            at_ms: 2,
+            kind: EventKind::SwitchDown(victim),
+        });
+        let risk = r.risk.expect("probe configured");
+        assert!(!risk.update.is_incremental());
+        let (topo, lft) = mgr.current();
+        let an = CongestionAnalyzer::new(topo, lft);
+        for &(pat, v) in &risk.values {
+            assert_eq!(v, an.evaluate(pat, 0), "{pat:?}");
+        }
+        assert_eq!(mgr.metrics.probe_rebuilds, 2);
+    }
+
+    #[test]
+    fn probe_disabled_reports_nothing_and_counts_nothing() {
+        let t = PgftParams::fig1().build();
+        let victim = uuid_of_level(&t, 1);
+        let mut mgr = FabricManager::new(t, ManagerConfig::default());
+        let r = mgr.apply(&Event {
+            at_ms: 1,
+            kind: EventKind::SwitchDown(victim),
+        });
+        assert!(r.risk.is_none());
+        assert_eq!(mgr.metrics.probe_updates, 0);
+        assert_eq!(mgr.metrics.probe_rebuilds, 0);
     }
 
     #[test]

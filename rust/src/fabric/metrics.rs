@@ -104,12 +104,17 @@ pub struct Metrics {
     pub blocks_uploaded: u64,
     pub equipment_down: u64,
     pub equipment_up: u64,
+    /// Post-event risk-probe evaluations (when the probe is configured).
+    pub probe_updates: u64,
+    /// Probe evaluations whose tensor maintenance fell back to a full
+    /// rebuild (first event, switch/islet shape changes).
+    pub probe_rebuilds: u64,
 }
 
 impl Metrics {
     pub fn render(&self) -> String {
         format!(
-            "events={} reroutes={} delta={} delta_fallbacks={} fast_patches={} invalid={} entries_changed={} blocks_uploaded={} down={} up={}",
+            "events={} reroutes={} delta={} delta_fallbacks={} fast_patches={} invalid={} entries_changed={} blocks_uploaded={} down={} up={} probe={} probe_rebuilds={}",
             self.events,
             self.reroutes,
             self.delta_reroutes,
@@ -119,7 +124,9 @@ impl Metrics {
             self.entries_changed,
             self.blocks_uploaded,
             self.equipment_down,
-            self.equipment_up
+            self.equipment_up,
+            self.probe_updates,
+            self.probe_rebuilds
         )
     }
 }

@@ -6,4 +6,7 @@ pub mod manager;
 pub mod metrics;
 
 pub use events::{Event, EventKind};
-pub use manager::{FabricManager, ManagerConfig, ManagerReport, PatchReport, ReactionTier};
+pub use manager::{
+    FabricManager, ManagerConfig, ManagerReport, PatchReport, ProbeConfig, ReactionTier,
+    RiskReport,
+};

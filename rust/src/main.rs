@@ -5,6 +5,7 @@
 //!   route     route a topology and report validity + route-shape stats
 //!   degrade   one log-uniform degradation throw: route + analyze
 //!   analyze   congestion risk (A2A / RP / SP) for one engine
+//!   campaign  degradation-sweep grid: {engine × level × seed × pattern}
 //!   fabric    drive the fabric manager through a random fault schedule
 //!
 //! Examples:
@@ -12,9 +13,10 @@
 //!   dmodc-fm route --nodes 648 --algo dmodc
 //!   dmodc-fm analyze --nodes 648 --algo ftree --rp-samples 200
 //!   dmodc-fm degrade --pgft "4,6,3;1,2,2;1,2,1" --kind links --seed 7
+//!   dmodc-fm campaign --nodes 648 --levels 0,4,16 --throws 5 --csv sweep.csv
 //!   dmodc-fm fabric --nodes 648 --events 40
 
-use dmodc::analysis::CongestionAnalyzer;
+use dmodc::analysis::{campaign, CongestionAnalyzer};
 use dmodc::fabric::{events, FabricManager, ManagerConfig};
 use dmodc::prelude::*;
 use dmodc::routing::{registry, validity};
@@ -155,6 +157,117 @@ fn cmd_degrade() {
     );
 }
 
+fn cmd_campaign() {
+    let p = common_flags(Args::new(
+        "dmodc-fm campaign",
+        "degradation-sweep campaign grid (paper Figs. 4-5)",
+    ))
+    .flag("engines", "all", "comma-separated engine list, or 'all'")
+    .flag("levels", "0,2,8", "comma-separated removal amounts per throw")
+    .flag("kind", "switches", "equipment kind (switches|links)")
+    .flag("throws", "5", "random throws (seeds) per level")
+    .flag("patterns", "a2a,rp,sp", "comma-separated patterns (a2a|rp|sp)")
+    .flag("rp-samples", "100", "random permutations for RP")
+    .flag("sp-block", "0", "SP shift-block size (0 = auto)")
+    .flag("workers", "0", "campaign worker tasks (0 = thread count)")
+    .flag("csv", "", "write per-sample rows to this CSV file")
+    .switch("json", "print rows as JSON lines")
+    .parse_skip(1);
+    let t = build_topo(&p);
+    fn die(msg: String) -> ! {
+        eprintln!("{msg}");
+        std::process::exit(2);
+    }
+    let engines: Vec<Algo> = if p.get("engines") == "all" {
+        Algo::ALL.to_vec()
+    } else {
+        p.get("engines")
+            .split(',')
+            .map(|s| s.trim().parse().unwrap_or_else(|e| die(e)))
+            .collect()
+    };
+    let levels: Vec<usize> = p
+        .get("levels")
+        .split(',')
+        .map(|s| {
+            s.trim()
+                .parse()
+                .unwrap_or_else(|_| die(format!("bad --levels entry {s:?}")))
+        })
+        .collect();
+    let rp = p.get_usize("rp-samples");
+    let patterns: Vec<Pattern> = p
+        .get("patterns")
+        .split(',')
+        .map(|s| Pattern::parse(s.trim(), rp).unwrap_or_else(|e| die(e)))
+        .collect();
+    let base_seed = p.get_u64("seed");
+    let cfg = campaign::CampaignConfig {
+        engines,
+        equipment: Equipment::parse(p.get("kind")).unwrap_or_else(|e| die(e)),
+        levels,
+        seeds: (0..p.get_u64("throws")).map(|i| base_seed ^ i).collect(),
+        patterns,
+        sp_block: p.get_usize("sp-block"),
+        workers: p.get_usize("workers"),
+    };
+    println!(
+        "campaign: {} engines × {} levels × {} throws × {} patterns = {} rows on {} nodes",
+        cfg.engines.len(),
+        cfg.levels.len(),
+        cfg.seeds.len(),
+        cfg.patterns.len(),
+        cfg.rows(),
+        t.nodes.len()
+    );
+    let t0 = Instant::now();
+    let rows = campaign::run(&t, &cfg);
+    let dt = t0.elapsed().as_secs_f64();
+    if p.get_bool("json") {
+        for r in &rows {
+            println!("{}", r.to_json());
+        }
+    }
+    if !p.get("csv").is_empty() {
+        campaign::write_csv(&rows, p.get("csv")).expect("write campaign CSV");
+        println!("wrote {} rows to {}", rows.len(), p.get("csv"));
+    }
+    // Summary: median value over throws per (engine, level, pattern).
+    let mut tab = Table::new(&["engine", "level", "pattern", "median risk", "invalid"]);
+    for &algo in &cfg.engines {
+        for &level in &cfg.levels {
+            for &pat in &cfg.patterns {
+                let mut vals: Vec<u64> = rows
+                    .iter()
+                    .filter(|r| r.engine == algo && r.level == level && r.pattern == pat)
+                    .map(|r| r.value)
+                    .collect();
+                vals.sort_unstable();
+                let invalid = rows
+                    .iter()
+                    .filter(|r| {
+                        r.engine == algo && r.level == level && r.pattern == pat && !r.valid
+                    })
+                    .count();
+                tab.row(vec![
+                    algo.to_string(),
+                    level.to_string(),
+                    pat.name().to_string(),
+                    vals.get(vals.len() / 2).copied().unwrap_or(0).to_string(),
+                    invalid.to_string(),
+                ]);
+            }
+        }
+    }
+    print!("{}", tab.render());
+    println!(
+        "{} samples in {} ({:.1} samples/s)",
+        rows.len(),
+        fmt_duration(dt),
+        rows.len() as f64 / dt.max(1e-9)
+    );
+}
+
 fn cmd_fabric() {
     let p = common_flags(Args::new("dmodc-fm fabric", "fault-event storm"))
         .flag("algo", "dmodc", &algo_help())
@@ -212,10 +325,11 @@ fn main() {
         "route" => cmd_route(),
         "analyze" => cmd_analyze(),
         "degrade" => cmd_degrade(),
+        "campaign" => cmd_campaign(),
         "fabric" => cmd_fabric(),
         other => {
             eprintln!(
-                "usage: dmodc-fm <topo|route|analyze|degrade|fabric> [flags]\n\
+                "usage: dmodc-fm <topo|route|analyze|degrade|campaign|fabric> [flags]\n\
                  unknown subcommand {other:?}; try `dmodc-fm route --help`"
             );
             std::process::exit(2);

@@ -122,6 +122,22 @@ impl Lft {
             .filter(|(a, b)| a != b)
             .count()
     }
+
+    /// Switch rows whose content differs from `prev` — the caller-side
+    /// dirty set for incremental consumers
+    /// ([`PathTensor::update`](crate::analysis::paths::PathTensor::update)).
+    /// When the shapes differ every row is returned (those consumers
+    /// rebuild from scratch there anyway).
+    pub fn changed_rows(&self, prev: &Lft) -> Vec<u32> {
+        if prev.num_switches() != self.num_switches() || prev.num_nodes != self.num_nodes {
+            return (0..self.num_switches() as u32).collect();
+        }
+        let n = self.num_nodes.max(1);
+        (0..self.num_switches())
+            .filter(|&s| prev.ports[s * n..(s + 1) * n] != self.ports[s * n..(s + 1) * n])
+            .map(|s| s as u32)
+            .collect()
+    }
 }
 
 impl Default for Lft {
@@ -258,6 +274,19 @@ mod tests {
         b.set(0, 0, 3);
         b.set(2, 3, 4);
         assert_eq!(a.delta(&b), 2);
+    }
+
+    #[test]
+    fn lft_changed_rows_names_exactly_the_differing_rows() {
+        let a = Lft::new(3, 4);
+        let mut b = a.clone();
+        assert!(b.changed_rows(&a).is_empty());
+        b.set(0, 1, 5);
+        b.set(2, 0, 9);
+        assert_eq!(b.changed_rows(&a), vec![0, 2]);
+        // Shape mismatch: every row is dirty (consumers rebuild anyway).
+        let c = Lft::new(2, 4);
+        assert_eq!(b.changed_rows(&c), vec![0, 1, 2]);
     }
 
     #[test]

@@ -70,11 +70,8 @@ impl AnalysisExecutor {
             .reshape(&[l as i64, n as i64, h_dst as i64])
             .context("reshape paths")?;
 
-        let src_leaf: Vec<i32> = topo
-            .nodes
-            .iter()
-            .map(|nd| paths.leaf_index[nd.leaf as usize] as i32)
-            .collect();
+        // The tensor's shared node → leaf-index map, widened for XLA.
+        let src_leaf: Vec<i32> = paths.src_leaf.iter().map(|&li| li as i32).collect();
         let src_leaf_lit = xla::Literal::vec1(&src_leaf)
             .reshape(&[n as i64])
             .context("reshape src_leaf")?;

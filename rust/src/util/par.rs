@@ -304,11 +304,26 @@ where
     T: Send,
     F: Fn(usize) -> T + Sync,
 {
+    let mut out: Vec<T> = Vec::new();
+    parallel_map_into(n, &mut out, f);
+    out
+}
+
+/// [`parallel_map`] into a caller-reused buffer: `out` is cleared and
+/// refilled with `f(0..n)` in index order, reusing its capacity —
+/// allocation-free once the capacity converged (the analysis scans'
+/// steady-state contract).
+pub fn parallel_map_into<T, F>(n: usize, out: &mut Vec<T>, f: F)
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
     struct SendPtr<T>(*mut T);
     unsafe impl<T> Send for SendPtr<T> {}
     unsafe impl<T> Sync for SendPtr<T> {}
 
-    let mut out: Vec<T> = Vec::with_capacity(n);
+    out.clear();
+    out.reserve(n);
     let ptr = SendPtr(out.as_mut_ptr());
     let ptr = &ptr;
     parallel_for_chunked(n, 8, |i| {
@@ -325,7 +340,6 @@ where
     unsafe {
         out.set_len(n);
     }
-    out
 }
 
 /// Parallel mutation over a slice of `Send` items: each claimed index
@@ -481,6 +495,19 @@ mod tests {
     fn parallel_map_empty_and_one() {
         assert!(parallel_map(0, |i| i).is_empty());
         assert_eq!(parallel_map(1, |i| i + 7), vec![7]);
+    }
+
+    #[test]
+    fn parallel_map_into_reuses_buffer() {
+        let mut out: Vec<usize> = Vec::new();
+        parallel_map_into(100, &mut out, |i| i * 2);
+        assert_eq!(out.len(), 100);
+        assert!(out.iter().enumerate().all(|(i, &x)| x == i * 2));
+        // Shrinking refill reuses the larger capacity.
+        let cap = out.capacity();
+        parallel_map_into(10, &mut out, |i| i + 1);
+        assert_eq!(out, (1..=10).collect::<Vec<_>>());
+        assert_eq!(out.capacity(), cap);
     }
 
     #[test]

@@ -105,21 +105,40 @@ impl Rng {
 
     /// A uniformly random permutation of `0..n`.
     pub fn permutation(&mut self, n: usize) -> Vec<u32> {
-        let mut p: Vec<u32> = (0..n as u32).collect();
-        self.shuffle(&mut p);
+        let mut p = Vec::new();
+        self.permutation_into(n, &mut p);
         p
+    }
+
+    /// [`Rng::permutation`] into a caller-reused buffer (same draw
+    /// sequence, zero allocation once the capacity converged — the RP
+    /// scan's per-worker scratch relies on this).
+    pub fn permutation_into(&mut self, n: usize, out: &mut Vec<u32>) {
+        out.clear();
+        out.extend(0..n as u32);
+        self.shuffle(out);
     }
 
     /// Sample `k` distinct indices from `0..n` (partial Fisher–Yates).
     pub fn sample_distinct(&mut self, n: usize, k: usize) -> Vec<u32> {
         assert!(k <= n);
-        let mut idx: Vec<u32> = (0..n as u32).collect();
+        let mut idx = Vec::new();
+        self.sample_distinct_into(n, k, &mut idx);
+        idx
+    }
+
+    /// [`Rng::sample_distinct`] into a caller-reused buffer (same draw
+    /// sequence; `k` is clamped to `n`). The campaign engine's throw
+    /// sampling relies on the allocation-free reuse.
+    pub fn sample_distinct_into(&mut self, n: usize, k: usize, out: &mut Vec<u32>) {
+        out.clear();
+        out.extend(0..n as u32);
+        let k = k.min(n);
         for i in 0..k {
             let j = i + self.gen_range(n - i);
-            idx.swap(i, j);
+            out.swap(i, j);
         }
-        idx.truncate(k);
-        idx
+        out.truncate(k);
     }
 }
 
@@ -186,6 +205,28 @@ mod tests {
         for &v in &p {
             assert!(!seen[v as usize]);
             seen[v as usize] = true;
+        }
+    }
+
+    #[test]
+    fn sample_distinct_into_matches_sample_distinct() {
+        let mut a = Rng::new(23);
+        let mut b = Rng::new(23);
+        let mut buf = Vec::new();
+        for (n, k) in [(0usize, 0usize), (5, 0), (9, 4), (16, 16)] {
+            b.sample_distinct_into(n, k, &mut buf);
+            assert_eq!(a.sample_distinct(n, k), buf, "n={n} k={k}");
+        }
+    }
+
+    #[test]
+    fn permutation_into_matches_permutation() {
+        let mut a = Rng::new(19);
+        let mut b = Rng::new(19);
+        let mut buf = Vec::new();
+        for n in [0usize, 1, 7, 64] {
+            b.permutation_into(n, &mut buf);
+            assert_eq!(a.permutation(n), buf, "n={n}");
         }
     }
 

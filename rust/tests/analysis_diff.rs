@@ -1,0 +1,345 @@
+//! Differential suite for the incremental analysis layer.
+//!
+//! Two promises (see `analysis/paths.rs` and `analysis/congestion.rs`):
+//!
+//! * `PathTensor::update` is **bit-identical to a fresh
+//!   `PathTensor::build`** after every event — fuzzed over random PGFT
+//!   shapes × random interleaved cable/switch fault/recovery sequences
+//!   (the shared `tests/common` generator + the in-tree shrinking
+//!   runner), at 1 and 8 worker threads, with the dirty-row sets derived
+//!   exactly the way real callers derive them (LFT row diffs / store
+//!   versions);
+//! * the shift-blocked SP scan returns **exactly** the naive
+//!   `shift_series` result for every block size.
+//!
+//! Plus the trace-counter property: a single parallel-pair cable event
+//! must retrace only the (leaf, dst) rows whose stored path consulted a
+//! touched switch — asserted against a brute-force dirty set computed
+//! from the old tensor.
+
+use dmodc::analysis::congestion::PermEngine;
+use dmodc::analysis::paths::{PathTensor, NO_PORT};
+use dmodc::prelude::*;
+use dmodc::routing::{route_unchecked, Lft};
+use dmodc::util::par;
+use dmodc::util::prop::{check, Check, Config};
+use std::collections::HashSet;
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+mod common;
+use common::gen_pgft;
+
+/// Serializes tests that override the global worker count.
+fn lock() -> MutexGuard<'static, ()> {
+    static M: OnceLock<Mutex<()>> = OnceLock::new();
+    M.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+}
+
+/// A tensor-differential scenario: a topology shape plus a seed driving a
+/// random interleaved fault/recovery event sequence.
+#[derive(Clone, Debug)]
+struct Scenario {
+    params: PgftParams,
+    seed: u64,
+    n_events: usize,
+}
+
+fn gen_scenario(rng: &mut Rng, size: f64) -> Scenario {
+    Scenario {
+        params: gen_pgft(rng, size),
+        seed: rng.next_u64(),
+        n_events: 1 + rng.gen_range(8),
+    }
+}
+
+fn shrink_scenario(s: &Scenario) -> Vec<Scenario> {
+    let mut out = Vec::new();
+    if s.n_events > 1 {
+        out.push(Scenario {
+            n_events: s.n_events - 1,
+            ..s.clone()
+        });
+    }
+    out
+}
+
+/// The caller-side dirty set, exactly as real consumers derive it: the
+/// switch rows whose LFT content changed (`Lft::changed_rows`; all rows
+/// on a shape change — the tensor falls back to a rebuild there anyway).
+fn dirty_rows(prev: &Lft, cur: &Lft) -> Vec<u32> {
+    cur.changed_rows(prev)
+}
+
+fn tensors_equal(got: &PathTensor, want: &PathTensor) -> Result<(), String> {
+    if got.max_hops != want.max_hops {
+        return Err(format!("max_hops {} != {}", got.max_hops, want.max_hops));
+    }
+    if got.broken_routes != want.broken_routes {
+        return Err(format!(
+            "broken_routes {} != {}",
+            got.broken_routes, want.broken_routes
+        ));
+    }
+    if got.leaves != want.leaves || got.leaf_index != want.leaf_index {
+        return Err("leaf indexing drifted".into());
+    }
+    if got.src_leaf != want.src_leaf {
+        return Err("src_leaf drifted".into());
+    }
+    if got.raw() != want.raw() {
+        let diff = got
+            .raw()
+            .iter()
+            .zip(want.raw())
+            .filter(|(a, b)| a != b)
+            .count();
+        return Err(format!("tensor data diverged in {diff} words"));
+    }
+    Ok(())
+}
+
+/// Drive one tensor through the scenario's event sequence via `update`,
+/// comparing against a fresh `build` after every step. Returns the number
+/// of steps served by the incremental path.
+fn run_scenario(s: &Scenario) -> Result<usize, String> {
+    let base = s.params.build();
+    let cables = degrade::cables(&base);
+    let removable = degrade::removable_switches(&base);
+    let mut rng = Rng::new(s.seed);
+    let mut dead_cb: HashSet<(SwitchId, u16)> = HashSet::new();
+    let mut dead_sw: HashSet<SwitchId> = HashSet::new();
+    let mut tensor = PathTensor::default();
+    let mut prev_lft = Lft::default();
+    let mut incremental_steps = 0usize;
+    for step in 0..=s.n_events {
+        // Step 0 establishes the baseline on the intact fabric; later
+        // steps interleave mostly cable toggles with occasional switch
+        // toggles (shape changes the tensor must detect itself).
+        if step > 0 {
+            if rng.gen_range(4) < 3 || removable.is_empty() {
+                let c = cables[rng.gen_range(cables.len())];
+                if !dead_cb.remove(&c) {
+                    dead_cb.insert(c);
+                }
+            } else {
+                let sw = removable[rng.gen_range(removable.len())];
+                if !dead_sw.remove(&sw) {
+                    dead_sw.insert(sw);
+                }
+            }
+        }
+        let topo = degrade::apply(&base, &dead_sw, &dead_cb);
+        let lft = route_unchecked(Algo::Dmodc, &topo);
+        let dirty = dirty_rows(&prev_lft, &lft);
+        let update = tensor.update(&topo, &lft, &dirty);
+        if update.is_incremental() {
+            incremental_steps += 1;
+        }
+        let want = PathTensor::build(&topo, &lft);
+        tensors_equal(&tensor, &want).map_err(|e| {
+            format!(
+                "step {step} ({} dead switches, {} dead cables, {update:?}): {e}",
+                dead_sw.len(),
+                dead_cb.len()
+            )
+        })?;
+        prev_lft = lft;
+    }
+    Ok(incremental_steps)
+}
+
+fn fuzz_at(threads: usize) {
+    let _g = lock();
+    par::set_threads(Some(threads));
+    check(
+        &format!("tensor-update-bit-identical-t{threads}"),
+        Config::default(),
+        gen_scenario,
+        shrink_scenario,
+        |s| match run_scenario(s) {
+            Ok(_) => Check::Pass,
+            Err(msg) => Check::Fail(msg),
+        },
+    );
+    par::set_threads(None);
+}
+
+#[test]
+fn tensor_update_fuzz_bit_identical_single_thread() {
+    fuzz_at(1);
+}
+
+#[test]
+fn tensor_update_fuzz_bit_identical_eight_threads() {
+    fuzz_at(8);
+}
+
+#[test]
+fn cable_storms_actually_take_the_incremental_path() {
+    // A cable-only storm on the canonical shapes must exercise the
+    // incremental path (not just fall back) while staying bit-identical.
+    let _g = lock();
+    for params in [PgftParams::fig1(), PgftParams::small()] {
+        let base = params.build();
+        let cables = degrade::cables(&base);
+        let mut tensor = PathTensor::default();
+        let mut prev_lft = Lft::default();
+        let mut incremental = 0usize;
+        let script: Vec<Vec<(SwitchId, u16)>> = vec![
+            vec![],
+            vec![cables[0]],
+            vec![cables[0], cables[2]],
+            vec![cables[2]],
+            vec![],
+        ];
+        for (i, dead) in script.iter().enumerate() {
+            let dead_cb: HashSet<(SwitchId, u16)> = dead.iter().copied().collect();
+            let topo = degrade::apply(&base, &HashSet::new(), &dead_cb);
+            let lft = route_unchecked(Algo::Dmodc, &topo);
+            let update = tensor.update(&topo, &lft, &dirty_rows(&prev_lft, &lft));
+            if update.is_incremental() {
+                incremental += 1;
+            }
+            let want = PathTensor::build(&topo, &lft);
+            tensors_equal(&tensor, &want).unwrap_or_else(|e| panic!("step {i}: {e}"));
+            prev_lft = lft;
+        }
+        assert!(
+            incremental >= script.len() - 1,
+            "cable toggles keep the switch set: every step after the first \
+             must take the incremental path ({incremental})"
+        );
+    }
+}
+
+/// Brute-force dirty set: rows whose stored path consulted a touched
+/// switch (every stored hop's owner, the final hop's target, the leaf
+/// for empty rows) — the spec the trace counter must match exactly.
+fn expected_retraces(
+    old_topo: &Topology,
+    tensor: &PathTensor,
+    dirty_sw: &HashSet<SwitchId>,
+) -> usize {
+    let mut n = 0usize;
+    for li in 0..tensor.num_leaves as u32 {
+        for d in 0..tensor.num_nodes as u32 {
+            let row = tensor.path(li, d);
+            let mut dirty = false;
+            if row.is_empty() || row[0] == NO_PORT {
+                dirty = dirty_sw.contains(&tensor.leaves[li as usize]);
+            } else {
+                let mut last = None;
+                for &gid in row.iter().take_while(|&&p| p != NO_PORT) {
+                    let (sw, port) = old_topo.port_of_id(gid);
+                    if dirty_sw.contains(&sw) {
+                        dirty = true;
+                    }
+                    last = Some((sw, port));
+                }
+                if let Some((sw, port)) = last {
+                    match old_topo.switches[sw as usize].ports[port as usize] {
+                        dmodc::topology::PortTarget::Switch { sw: tgt, .. } => {
+                            dirty |= dirty_sw.contains(&tgt);
+                        }
+                        dmodc::topology::PortTarget::Node { .. } => unreachable!(),
+                    }
+                }
+            }
+            n += dirty as usize;
+        }
+    }
+    n
+}
+
+#[test]
+fn single_cable_event_retraces_exactly_the_dirty_rows() {
+    // The acceptance property: one parallel-pair cable fault must leave
+    // every path that avoids the two endpoint switches untouched, and
+    // the trace counter must equal the brute-force dirty set.
+    let _g = lock();
+    let t = PgftParams::fig1().build();
+    let lft = route_unchecked(Algo::Dmodc, &t);
+    let mut tensor = PathTensor::build(&t, &lft);
+    let cable = degrade::cables(&t)[0];
+    let dead: HashSet<(SwitchId, u16)> = [cable].into_iter().collect();
+    let d = degrade::apply(&t, &HashSet::new(), &dead);
+    let lft_d = route_unchecked(Algo::Dmodc, &d);
+    let dirty = dirty_rows(&lft, &lft_d);
+
+    // Brute-force spec: caller-dirty rows ∪ the cable's two endpoint
+    // switches (their port lists renumbered).
+    let (sw_a, port_a) = cable;
+    let sw_b = match t.switches[sw_a as usize].ports[port_a as usize] {
+        dmodc::topology::PortTarget::Switch { sw, .. } => sw,
+        _ => unreachable!("cables join switches"),
+    };
+    let mut dirty_sw: HashSet<SwitchId> = dirty.iter().copied().collect();
+    dirty_sw.insert(sw_a);
+    dirty_sw.insert(sw_b);
+    let expected = expected_retraces(&t, &tensor, &dirty_sw);
+
+    let total = tensor.num_leaves * tensor.num_nodes;
+    match tensor.update(&d, &lft_d, &dirty) {
+        dmodc::analysis::paths::TensorUpdate::Incremental(st) => {
+            assert_eq!(st.rows_retraced, expected, "trace counter");
+            assert_eq!(st.rows_reused, total - expected);
+            assert!(
+                st.rows_retraced < total,
+                "a single cable must not dirty every row"
+            );
+        }
+        other => panic!("expected incremental update, got {other:?}"),
+    }
+    tensors_equal(&tensor, &PathTensor::build(&d, &lft_d)).unwrap();
+}
+
+#[test]
+fn blocked_shift_series_matches_naive_for_every_block_size() {
+    let _g = lock();
+    let mut rng = Rng::new(0xB10C);
+    let mut cases: Vec<(String, Topology, Algo)> = vec![
+        ("fig1".into(), PgftParams::fig1().build(), Algo::Dmodc),
+        ("small".into(), PgftParams::small().build(), Algo::Ftree),
+        ("rlft".into(), rlft::build(60, 12), Algo::Updn),
+    ];
+    let base = PgftParams::small().build();
+    cases.push((
+        "small/degraded".into(),
+        degrade::remove_random_links(&base, &mut rng, 5),
+        Algo::Dmodc,
+    ));
+    for (name, topo, algo) in &cases {
+        let lft = route_unchecked(*algo, topo);
+        let pt = PathTensor::build(topo, &lft);
+        let e = PermEngine::new(topo, &pt);
+        let naive = e.shift_series_naive();
+        assert_eq!(e.shift_series(), naive, "{name}: default block");
+        let n = topo.nodes.len();
+        let mut out = Vec::new();
+        for k in [1usize, 2, 3, 4, 5, 7, 8, 13, 16, 64, n.saturating_sub(1).max(1), n + 9] {
+            e.shift_series_blocked_into(k, &mut out);
+            assert_eq!(out, naive, "{name}: block {k}");
+        }
+    }
+}
+
+#[test]
+fn blocked_series_survives_broken_routes() {
+    // Heavy degradation can leave unroutable flows (all-NO_PORT rows);
+    // the blocked scan must agree with the naive one there too.
+    let _g = lock();
+    let t = PgftParams::small().build();
+    let mut rng = Rng::new(321);
+    let dt = degrade::remove_random_switches(&t, &mut rng, 7);
+    let lft = route_unchecked(Algo::Dmodc, &dt);
+    let pt = PathTensor::build(&dt, &lft);
+    let e = PermEngine::new(&dt, &pt);
+    let naive = e.shift_series_naive();
+    let mut out = Vec::new();
+    for k in [1usize, 3, 8] {
+        e.shift_series_blocked_into(k, &mut out);
+        assert_eq!(out, naive, "block {k}");
+    }
+}

@@ -429,6 +429,102 @@ fn delta_reroutes_bit_identical_for_every_engine_across_reuse() {
 }
 
 #[test]
+fn steady_state_campaign_sample_loop_is_allocation_free() {
+    // The campaign acceptance contract: one degradation sample —
+    // materialize → route → validate → trace tensor → evaluate all three
+    // patterns — performs zero heap allocation once warm, both with full
+    // tensor rebuilds (campaign grids) and with incremental updates
+    // (fabric-manager risk probe), including the dirty-row derivation.
+    use dmodc::analysis::{patterns::Pattern, RiskEvaluator};
+    use dmodc::topology::degrade::DegradeScratch;
+    let _g = lock();
+    par::set_threads(Some(1));
+    let base = PgftParams::small().build();
+    let cables = dmodc::topology::degrade::cables(&base);
+    let script: Vec<HashSet<(SwitchId, u16)>> = vec![
+        HashSet::new(),
+        [cables[0]].into_iter().collect(),
+        [cables[0], cables[6]].into_iter().collect(),
+        HashSet::new(),
+    ];
+    let no_switches: HashSet<SwitchId> = HashSet::new();
+    let patterns = [
+        Pattern::AllToAll,
+        Pattern::RandomPermutation { samples: 16 },
+        Pattern::ShiftPermutation,
+    ];
+    let mut engine = registry::create(Algo::Dmodc);
+    let mut scratch = DegradeScratch::default();
+    let mut topo = Topology::default();
+    let mut lft = Lft::default();
+    let mut eval_full = RiskEvaluator::new();
+    let mut eval_inc = RiskEvaluator::new();
+    let mut prev_raw: Vec<u16> = Vec::new();
+    let mut dirty: Vec<u32> = Vec::new();
+    let mut sink = 0u64;
+    let mut cycle = |engine: &mut Box<dyn RoutingEngine>,
+                     scratch: &mut DegradeScratch,
+                     topo: &mut Topology,
+                     lft: &mut Lft,
+                     eval_full: &mut RiskEvaluator,
+                     eval_inc: &mut RiskEvaluator,
+                     prev_raw: &mut Vec<u16>,
+                     dirty: &mut Vec<u32>,
+                     sink: &mut u64| {
+        for dead in &script {
+            dmodc::topology::degrade::apply_into(&base, &no_switches, dead, topo, scratch);
+            engine.route_into(topo, lft);
+            let valid = engine.validate(topo, lft).is_ok();
+            assert!(valid);
+            // Full-rebuild path (campaign grids).
+            eval_full.rebuild(topo, lft);
+            for &p in &patterns {
+                *sink ^= eval_full.evaluate(topo, p, 3);
+            }
+            // Incremental path (risk probe): derive the dirty rows from
+            // the row diff — `Lft::changed_rows` inlined over reused
+            // buffers, because this loop's contract is zero allocation.
+            dirty.clear();
+            let n = lft.num_nodes().max(1);
+            if prev_raw.len() == lft.raw().len() {
+                for s in 0..lft.num_switches() {
+                    if prev_raw[s * n..(s + 1) * n] != lft.raw()[s * n..(s + 1) * n] {
+                        dirty.push(s as u32);
+                    }
+                }
+            } else {
+                dirty.extend(0..lft.num_switches() as u32);
+            }
+            prev_raw.clear();
+            prev_raw.extend_from_slice(lft.raw());
+            eval_inc.update(topo, lft, dirty);
+            for &p in &patterns {
+                *sink ^= eval_inc.evaluate(topo, p, 3);
+            }
+        }
+    };
+    // Warm up: two full cycles converge every buffer capacity (tensor
+    // ping-pong, pattern scratches, per-worker thread locals).
+    for _ in 0..2 {
+        cycle(
+            &mut engine, &mut scratch, &mut topo, &mut lft, &mut eval_full,
+            &mut eval_inc, &mut prev_raw, &mut dirty, &mut sink,
+        );
+    }
+    let before = thread_allocs();
+    cycle(
+        &mut engine, &mut scratch, &mut topo, &mut lft, &mut eval_full,
+        &mut eval_inc, &mut prev_raw, &mut dirty, &mut sink,
+    );
+    let delta = thread_allocs() - before;
+    assert_eq!(
+        delta, 0,
+        "steady-state campaign sample loop must not allocate (sink {sink})"
+    );
+    par::set_threads(None);
+}
+
+#[test]
 fn steady_state_delta_reroute_is_allocation_free() {
     // The delta path obeys the same allocation contract as the full
     // path: prev-product capture, product rebuild, dirty-set diff and
