@@ -8,7 +8,7 @@
 //!         [--pgft "16,9,12;1,4,6;1,1,1"] [--fractions 0,1,2,5,10] \
 //!         [--throws 5] [--csv bench_results/degradation_sweep.csv]
 
-use dmodc::analysis::campaign::{self, CampaignConfig};
+use dmodc::analysis::campaign::{self, CampaignConfig, Schedule};
 use dmodc::prelude::*;
 use dmodc::util::cli::Args;
 use dmodc::util::table::Table;
@@ -17,12 +17,18 @@ use std::time::Instant;
 fn main() {
     let p = Args::new("degradation_sweep", "Figure 4-style risk-vs-degradation sweep")
         .flag("pgft", "16,9,12;1,4,6;1,1,1", "PGFT parameters (1728 nodes)")
-        .flag("fractions", "0,1,2,5,10", "degradation levels in % of cables")
+        .flag("fractions", "0,0.5,1,2,5,10", "degradation levels in % of cables")
         .flag("kind", "links", "equipment kind (switches|links)")
         .flag("throws", "5", "random throws per level")
         .flag("seed", "42", "base seed")
         .flag("rp-samples", "100", "random permutations for RP")
+        .flag(
+            "schedule",
+            "independent",
+            "throw schedule: independent (paper) | nested (monotone decay)",
+        )
         .flag("csv", "bench_results/degradation_sweep.csv", "output CSV path")
+        .switch("no-fork", "disable baseline-forked sampling")
         .parse();
     let params = PgftParams::parse(p.get("pgft")).expect("pgft");
     let topo = params.build();
@@ -31,15 +37,23 @@ fn main() {
         Equipment::Links => topo.num_cables(),
         Equipment::Switches => topo.switches.len() - topo.leaf_switches().len(),
     };
-    let fractions: Vec<f64> = p
-        .get("fractions")
-        .split(',')
-        .map(|s| s.trim().parse().expect("fraction"))
-        .collect();
-    let levels: Vec<usize> = fractions
-        .iter()
-        .map(|f| ((f / 100.0) * total as f64).round() as usize)
-        .collect();
+    // Fractions that round to the same removal count would duplicate
+    // grid work and double-weight their summary rows — keep the first.
+    let mut fractions: Vec<f64> = Vec::new();
+    let mut levels: Vec<usize> = Vec::new();
+    for s in p.get("fractions").split(',') {
+        let f: f64 = s.trim().parse().expect("fraction");
+        let level = ((f / 100.0) * total as f64).round() as usize;
+        if levels.contains(&level) {
+            println!(
+                "note: {f}% rounds to {level} removed {} — already covered, skipped",
+                p.get("kind")
+            );
+        } else {
+            fractions.push(f);
+            levels.push(level);
+        }
+    }
     let base_seed = p.get_u64("seed");
     let cfg = CampaignConfig {
         engines: Algo::ALL.to_vec(),
@@ -53,18 +67,22 @@ fn main() {
         ],
         sp_block: 0,
         workers: 0,
+        schedule: Schedule::parse(p.get("schedule")).expect("schedule"),
+        fork: !p.get_bool("no-fork"),
     };
     println!(
-        "degradation sweep on {} nodes / {} {} total: levels {:?} ({} rows)",
+        "degradation sweep on {} nodes / {} {} total: levels {:?} ({} rows, {} schedule)",
         topo.nodes.len(),
         total,
         p.get("kind"),
         cfg.levels,
-        cfg.rows()
+        cfg.rows(),
+        cfg.schedule.name()
     );
     let t0 = Instant::now();
-    let rows = campaign::run(&topo, &cfg);
+    let (rows, stats) = campaign::run_with_stats(&topo, &cfg);
     let secs = t0.elapsed().as_secs_f64();
+    println!("fork stats: {}", stats.render());
 
     // Risk-vs-degradation curves: median over throws per (engine, level,
     // pattern) — the Figure 4 shape (lower is better).

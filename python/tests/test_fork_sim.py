@@ -1,0 +1,257 @@
+"""Simulation of the baseline-forked campaign sampling rule against the
+Python reference pipeline (``gen_golden.py``).
+
+Mirrors ``rust/src/routing/snapshot.rs`` + ``analysis::campaign``'s fork
+loop: every degradation-sweep sample *forks* from one shared intact
+baseline instead of recomputing from scratch —
+
+* **Route fork.** The baseline pins the intact pipeline products (Prep
+  groups, Algorithm-1 costs/dividers, Algorithm-2 NIDs) and the intact
+  LFT. Each sample restores the baseline tables, recomputes the cheap
+  products for the degraded topology, diffs them against the *baseline*
+  (not the previous sample), and refills only dirty rows/blocks —
+  exactly the `routing::delta` rule with the diff anchor swapped. The
+  result must be bit-identical to an independent from-scratch reference
+  route of the sample, for both divider reductions, with the standard
+  fallbacks (shape change, isolated leaf, NID change) still applying.
+
+* **Tensor fork.** The baseline also pins the intact path tensor; each
+  sample restores it and applies the incremental update with the
+  refilled-row set as the dirty set (a superset of the changed rows, so
+  the `PathTensor::update` contract holds). The result must equal a
+  fresh tensor build of the sample.
+
+* **Nested schedule.** Under `Schedule::Nested` a seed's cable kills at
+  level ε are the first ε entries of one per-seed draw (partial
+  Fisher–Yates has the prefix property), so kills at ε′ < ε are a
+  subset of kills at ε and consecutive levels delta incrementally —
+  the same chain the sequential delta path already serves. The chain's
+  tables and tensors must stay bit-identical to fresh computation at
+  every level.
+
+The script also certifies the acceptance scenario hard-coded in
+``rust/tests/campaign_fork.rs``: on the ``small`` PGFT at ≤1% random
+cable degradation, every throw of every seed forks cleanly (eligibility
+holds and the dirty-row fraction stays under the 0.5 threshold), so the
+Rust campaign must report zero full reroutes and zero full tensor
+builds there.
+
+Run:  python3 python/tests/test_fork_sim.py  (exits non-zero on drift)
+"""
+
+import importlib.util
+import os
+import random
+import sys
+
+_here = os.path.dirname(os.path.abspath(__file__))
+
+
+def _load(name, *rel):
+    spec = importlib.util.spec_from_file_location(name, os.path.join(_here, *rel))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+g = _load("gen_golden", "..", "tools", "gen_golden.py")
+ds = _load("test_delta_sim", "test_delta_sim.py")
+ts = _load("test_tensor_sim", "test_tensor_sim.py")
+
+INF = g.INF
+NO_ROUTE = g.NO_ROUTE
+
+
+def delta_apply_touched(t, prev, cur, lft):
+    """`test_delta_sim.delta_apply` variant that also returns the refilled
+    row indices (the `touched` list `reroute_delta_into` reports — the
+    campaign's tensor dirty set)."""
+    ns = t.num_switches
+    nl = len(cur["leaves"])
+    cost_changed = [
+        [cur["cost"][s][li] != prev["cost"][s][li] for li in range(nl)] for s in range(ns)
+    ]
+    touched = []
+    for s in range(ns):
+        full = ds.groups_changed(prev, cur, s) or cur["divider"][s] != prev["divider"][s]
+        if full:
+            ds.fill_row(t, cur, s, lft[s])
+            touched.append(s)
+            continue
+        dirty = list(cost_changed[s])
+        for r, _up, _ports in cur["groups"][s]:
+            for li in range(nl):
+                if cost_changed[r][li]:
+                    dirty[li] = True
+        if any(dirty):
+            touched.append(s)
+            for li in range(nl):
+                if dirty[li] and cur["leaves"][li] != s:
+                    ds.fill_block(cur, s, li, lft[s])
+    return touched
+
+
+def full_route(t, cur):
+    lft = [[NO_ROUTE] * len(t.nodes) for _ in range(t.num_switches)]
+    for s in range(t.num_switches):
+        ds.fill_row(t, cur, s, lft[s])
+    return lft
+
+
+class Baseline:
+    """The shared intact baseline every sample forks from."""
+
+    def __init__(self, base, reduction):
+        self.topo = base
+        self.products = ds.products(base, reduction)
+        self.lft = full_route(base, self.products)
+        self.tensor = ts.build_tensor(base, self.lft)
+
+
+def fork_sample(baseline, t, reduction, threshold=0.5):
+    """One forked sample: returns (lft, tensor, forked: bool)."""
+    cur = ds.products(t, reduction)
+    reason = ds.eligibility(baseline.products, cur)
+    if reason is not None:
+        lft = full_route(t, cur)
+        return lft, ts.build_tensor(t, lft), False
+    lft = [row[:] for row in baseline.lft]  # restore baseline tables
+    touched = delta_apply_touched(t, baseline.products, cur, lft)
+    if len(touched) > threshold * t.num_switches:
+        # Threshold fallback: the full fill over the rebuilt products.
+        lft = full_route(t, cur)
+        return lft, ts.build_tensor(t, lft), False
+    tensor, _retraced = ts.update_tensor(baseline.tensor, t, lft, touched)
+    return lft, tensor, True
+
+
+def check_sample(baseline, t, reduction, ctx):
+    lft, tensor, forked = fork_sample(baseline, t, reduction)
+    want_lft = g.route_reference(t, reduction)
+    assert lft == want_lft, f"route drift {ctx}"
+    want_tensor = ts.build_tensor(t, want_lft)
+    assert ts.tensors_equal(tensor, want_tensor), f"tensor drift {ctx}"
+    return forked
+
+
+def run_independent(m, w, p, reduction, levels, seeds):
+    base = g.build_pgft(m, w, p)
+    cbs = g.cables(base)
+    baseline = Baseline(base, reduction)
+    forked = full = 0
+    for level in levels:
+        for seed in seeds:
+            rng = random.Random((level, seed))
+            dead = set(rng.sample(cbs, min(level, len(cbs))))
+            t = g.apply_dead_cables(base, dead)
+            ctx = f"(independent, {reduction}, level={level}, seed={seed})"
+            if check_sample(baseline, t, reduction, ctx):
+                forked += 1
+            else:
+                full += 1
+    return forked, full
+
+
+def run_nested(m, w, p, reduction, levels, seeds):
+    """Nested chains: kills at level ε = first ε of a per-seed draw; the
+    chain deltas level-to-level off the previous sample, tensor included
+    (first level forks from the intact baseline)."""
+    base = g.build_pgft(m, w, p)
+    cbs = g.cables(base)
+    baseline = Baseline(base, reduction)
+    forked = full = 0
+    for seed in seeds:
+        perm = list(range(len(cbs)))
+        random.Random(seed).shuffle(perm)  # one draw per seed: prefix = kills
+        prev_products = baseline.products
+        lft = [row[:] for row in baseline.lft]
+        tensor = baseline.tensor
+        prev_level = 0
+        for level in levels:
+            assert level >= prev_level, "nested schedule wants ascending levels"
+            prev_level = level
+            dead = {cbs[i] for i in perm[: min(level, len(cbs))]}
+            t = g.apply_dead_cables(base, dead)
+            cur = ds.products(t, reduction)
+            ctx = f"(nested, {reduction}, level={level}, seed={seed})"
+            reason = ds.eligibility(prev_products, cur)
+            if reason is None:
+                touched = delta_apply_touched(t, prev_products, cur, lft)
+                tensor, _ = ts.update_tensor(tensor, t, lft, touched)
+                forked += 1
+            else:
+                lft = full_route(t, cur)
+                tensor = ts.build_tensor(t, lft)
+                full += 1
+            want = g.route_reference(t, reduction)
+            assert lft == want, f"route drift {ctx}"
+            assert ts.tensors_equal(tensor, ts.build_tensor(t, want)), f"tensor drift {ctx}"
+            prev_products = cur
+    return forked, full
+
+
+def certify_acceptance(m, w, p, name):
+    """Certify that every ≤1%-of-cables throw forks cleanly (no
+    eligibility fallback, dirty fraction < 0.5) on this shape — the
+    scenario `rust/tests/campaign_fork.rs` asserts via CampaignStats.
+    1% of this shape's cables rounds to a single cable, so the check is
+    *exhaustive*: all single-cable kills, both reductions — whatever
+    cable the Rust campaign's own RNG draws is covered."""
+    base = g.build_pgft(m, w, p)
+    cbs = g.cables(base)
+    one_pct = max(1, round(0.01 * len(cbs)))
+    assert one_pct == 1, f"{name}: exhaustive certification expects 1% = 1 cable"
+    for reduction in ("max", "firstpath"):
+        baseline = Baseline(base, reduction)
+        worst = 0.0
+        for cable in cbs:
+            t = g.apply_dead_cables(base, {cable})
+            cur = ds.products(t, reduction)
+            reason = ds.eligibility(baseline.products, cur)
+            assert reason is None, (
+                f"{name}: fallback {reason} killing cable {cable} ({reduction}) "
+                f"— acceptance scenario broken"
+            )
+            lft = [row[:] for row in baseline.lft]
+            touched = delta_apply_touched(t, baseline.products, cur, lft)
+            worst = max(worst, len(touched) / t.num_switches)
+            assert worst <= 0.5, (
+                f"{name}: dirty fraction {worst:.2f} over threshold "
+                f"killing cable {cable} ({reduction})"
+            )
+            assert lft == g.route_reference(t, reduction), "certified sample drift"
+        print(
+            f"{name} ({reduction}): all {len(cbs)} single-cable kills fork "
+            f"cleanly, worst dirty fraction {worst:.3f}"
+        )
+    return one_pct
+
+
+def main():
+    shapes = [
+        ("fig1", [2, 2, 3], [1, 2, 2], [1, 2, 1]),
+        ("small", [4, 6, 3], [1, 2, 2], [1, 2, 1]),
+        ("twolevel", [3, 4], [1, 3], [1, 2]),
+    ]
+    total_forked = total_full = 0
+    for name, m, w, p in shapes:
+        ncb = len(g.cables(g.build_pgft(m, w, p)))
+        levels = sorted({0, 1, max(1, ncb // 100), max(2, ncb // 20), ncb // 4})
+        for reduction in ("max", "firstpath"):
+            fk, fl = run_independent(m, w, p, reduction, levels, range(6))
+            total_forked += fk
+            total_full += fl
+            fk, fl = run_nested(m, w, p, reduction, levels, range(6))
+            total_forked += fk
+            total_full += fl
+        print(f"{name}: independent + nested fork fuzz OK (levels {levels})")
+    assert total_forked > 0, "the fork path was never exercised"
+    certify_acceptance([4, 6, 3], [1, 2, 2], [1, 2, 1], "small")
+    print(
+        f"OK: {total_forked} forked samples bit-identical to independent "
+        f"computation ({total_full} legitimate fallbacks)"
+    )
+
+
+if __name__ == "__main__":
+    main()

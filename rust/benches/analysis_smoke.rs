@@ -1,11 +1,11 @@
 //! CI bench smoke for the analysis layer, written to `BENCH_analysis.json`
-//! (schema `bench_analysis/v1`) so the analysis-perf trajectory is tracked
+//! (schema `bench_analysis/v2`) so the analysis-perf trajectory is tracked
 //! across PRs next to `BENCH_reroute.json` (see `.github/workflows/ci.yml`
-//! and EXPERIMENTS.md §"Analysis perf").
+//! and EXPERIMENTS.md §"Analysis perf" / §"Campaign fork perf").
 //!
 //! Measured quantities:
 //! * tensor_full — a from-scratch `PathTensor` rebuild out of warm
-//!   buffers (the campaign per-sample cost).
+//!   buffers (the fork-disabled campaign per-sample cost).
 //! * tensor_update — the incremental `PathTensor::update` reaction to a
 //!   single-cable fault/recovery flip (the risk-probe per-event cost),
 //!   with the retraced-row fraction recorded.
@@ -13,7 +13,12 @@
 //!   pass per shift vs the shift-blocked scan at the auto block size;
 //!   `sp_blocked_speedup` is the headline bandwidth win.
 //! * campaign — a small {engines × levels × seeds × patterns} grid
-//!   through `analysis::campaign::run`, reported as samples/s.
+//!   through `analysis::campaign`, with baseline forking on vs off
+//!   (`campaign_fork_speedup`, `fork_hit_rate`).
+//! * per-level fork columns (schema v2) — Dmodc-only grids pinned to one
+//!   degradation level each (0 / ~1 % / ~5 % of cables), forked vs
+//!   from-scratch samples/s and the speedup; the paper's sub-1 % sweet
+//!   spot is where the fork win peaks.
 //!
 //!   ANALYSIS_PGFT="16,9,12;1,4,6;1,1,1"   topology (default: 1728 nodes)
 //!   BENCH_ANALYSIS_OUT=BENCH_analysis.json  output path
@@ -91,8 +96,8 @@ fn main() {
         "blocked scan must equal the naive scan"
     );
 
-    // --- campaign throughput on a small grid ---
-    let cfg = CampaignConfig {
+    // --- campaign throughput on a small grid, forked vs from-scratch ---
+    let base_cfg = CampaignConfig {
         engines: Algo::ALL.to_vec(),
         equipment: Equipment::Links,
         levels: vec![0, 2, 8],
@@ -104,16 +109,72 @@ fn main() {
         ],
         sp_block: 0,
         workers: 0,
+        ..CampaignConfig::default()
     };
     let t0 = Instant::now();
-    let rows = campaign::run(&topo, &cfg);
+    let (rows, stats) = campaign::run_with_stats(&topo, &base_cfg);
     let campaign_secs = t0.elapsed().as_secs_f64();
     let samples_per_s = rows.len() as f64 / campaign_secs.max(1e-9);
+    let t0 = Instant::now();
+    let unforked_rows = campaign::run(
+        &topo,
+        &CampaignConfig {
+            fork: false,
+            ..base_cfg.clone()
+        },
+    );
+    let campaign_full_secs = t0.elapsed().as_secs_f64();
+    assert_eq!(unforked_rows.len(), rows.len());
+    let full_samples_per_s = unforked_rows.len() as f64 / campaign_full_secs.max(1e-9);
+
+    // --- per-level fork columns: Dmodc at 0 / ~1 % / ~5 % of cables ---
+    let n_cables = topo.num_cables();
+    let fork_levels: Vec<usize> = vec![0, (n_cables / 100).max(1), (n_cables / 20).max(2)];
+    let mut forked_sps = Vec::new();
+    let mut unforked_sps = Vec::new();
+    let mut level_hit_rates = Vec::new();
+    for &level in &fork_levels {
+        let cfg = CampaignConfig {
+            engines: vec![Algo::Dmodc],
+            equipment: Equipment::Links,
+            levels: vec![level],
+            seeds: (0..8).collect(),
+            patterns: vec![Pattern::AllToAll, Pattern::ShiftPermutation],
+            sp_block: 0,
+            workers: 0,
+            ..CampaignConfig::default()
+        };
+        let t0 = Instant::now();
+        let (rows_f, st) = campaign::run_with_stats(&topo, &cfg);
+        let secs_f = t0.elapsed().as_secs_f64();
+        let t0 = Instant::now();
+        let rows_u = campaign::run(
+            &topo,
+            &CampaignConfig {
+                fork: false,
+                ..cfg.clone()
+            },
+        );
+        let secs_u = t0.elapsed().as_secs_f64();
+        assert_eq!(rows_f.len(), rows_u.len());
+        forked_sps.push(rows_f.len() as f64 / secs_f.max(1e-9));
+        unforked_sps.push(rows_u.len() as f64 / secs_u.max(1e-9));
+        level_hit_rates.push(st.fork_hit_rate());
+    }
+    let fmt_vec = |v: &[f64]| {
+        let cells: Vec<String> = v.iter().map(|x| format!("{x:.3}")).collect();
+        format!("[{}]", cells.join(", "))
+    };
+    let speedups: Vec<f64> = forked_sps
+        .iter()
+        .zip(&unforked_sps)
+        .map(|(f, u)| f / u.max(1e-9))
+        .collect();
 
     let json = format!(
         concat!(
             "{{\n",
-            "  \"schema\": \"bench_analysis/v1\",\n",
+            "  \"schema\": \"bench_analysis/v2\",\n",
             "  \"topology\": \"PGFT({spec})\",\n",
             "  \"nodes\": {nodes},\n",
             "  \"switches\": {switches},\n",
@@ -130,7 +191,16 @@ fn main() {
             "  \"sp_blocked_speedup\": {ssp:.3},\n",
             "  \"campaign_rows\": {crows},\n",
             "  \"campaign_secs\": {csecs:.3},\n",
-            "  \"campaign_samples_per_s\": {cps:.2}\n",
+            "  \"campaign_samples_per_s\": {cps:.2},\n",
+            "  \"campaign_full_secs\": {cfsecs:.3},\n",
+            "  \"campaign_full_samples_per_s\": {cfps:.2},\n",
+            "  \"campaign_fork_speedup\": {cspd:.3},\n",
+            "  \"fork_hit_rate\": {fhr:.4},\n",
+            "  \"campaign_fork_levels\": {flv:?},\n",
+            "  \"campaign_fork_hit_rate_per_level\": {flh},\n",
+            "  \"campaign_forked_samples_per_s\": {ffs},\n",
+            "  \"campaign_unforked_samples_per_s\": {fus},\n",
+            "  \"campaign_fork_speedup_per_level\": {fsp}\n",
             "}}\n"
         ),
         spec = spec,
@@ -150,6 +220,15 @@ fn main() {
         crows = rows.len(),
         csecs = campaign_secs,
         cps = samples_per_s,
+        cfsecs = campaign_full_secs,
+        cfps = full_samples_per_s,
+        cspd = samples_per_s / full_samples_per_s.max(1e-9),
+        fhr = stats.fork_hit_rate(),
+        flv = fork_levels,
+        flh = fmt_vec(&level_hit_rates),
+        ffs = fmt_vec(&forked_sps),
+        fus = fmt_vec(&unforked_sps),
+        fsp = fmt_vec(&speedups),
     );
     let out_path =
         std::env::var("BENCH_ANALYSIS_OUT").unwrap_or_else(|_| "BENCH_analysis.json".into());

@@ -9,22 +9,63 @@
 //! performs zero steady-state heap allocation (`tests/equivalence.rs`),
 //! and streams the rows as CSV/JSON for the plotting tools.
 //!
-//! Grid semantics:
+//! ## Baseline-forked sampling (EXPERIMENTS.md §"Campaign fork perf")
+//!
+//! Campaign samples are *independent forks of the intact fabric*, not
+//! sequenced events — so the sequential delta machinery
+//! (`routing::delta`, `PathTensor::update`) never fired here, and every
+//! sample paid a full reroute plus a full tensor build. With
+//! [`CampaignConfig::fork`] (the default), the campaign instead freezes
+//! one shared intact **baseline per engine** — an engine-side
+//! [`Snapshot`] (pipeline products + tables) and an analysis-side
+//! [`TensorSnapshot`] — and runs every sample as
+//! degrade → restore → delta-reroute → tensor-update → metrics:
+//!
+//! * engines with [`Capabilities::forkable`](crate::routing::Capabilities)
+//!   (Dmodc) delta-reroute from the baseline, refilling only the LFT
+//!   rows the throw dirties, with the delta path's own per-sample
+//!   fallback (threshold/shape rules unchanged) degrading to a full row
+//!   fill;
+//! * every engine forks the risk tensor: the per-sample dirty rows (the
+//!   delta path's `touched` set, or an LFT row diff against the
+//!   baseline for non-forkable engines) drive an incremental
+//!   [`RiskEvaluator::update`] instead of a rebuild.
+//!
+//! Forked output is **bit-identical** to an independently computed fresh
+//! sample — `tests/campaign_fork.rs` fuzzes rows and tensors against the
+//! fork-disabled path — and [`CampaignStats`] counts forked vs full
+//! samples, so the paper's sub-1 % sweet spot is observable: there, every
+//! sample forks (zero full reroutes, zero full tensor builds).
+//!
+//! ## Grid semantics
+//!
 //! * One degraded-topology throw is drawn per `(level, seed)` pair and
 //!   **shared by every engine** — the paper's methodology ("for quality
 //!   comparison to be fair") requires all algorithms to be judged on
 //!   identical damage.
-//! * Every sample is deterministic in `(equipment, level, seed)` alone:
-//!   the same grid produces bit-identical rows at any worker count
-//!   (asserted by the module tests).
+//! * Every sample is deterministic in `(equipment, schedule, level,
+//!   seed)` alone: the same grid produces bit-identical rows at any
+//!   worker count (asserted by the module tests).
+//! * [`Schedule::Independent`] (the paper's methodology) draws each
+//!   `(level, seed)` throw independently. [`Schedule::Nested`] draws one
+//!   kill sequence per seed and takes its first ε entries at level ε —
+//!   each seed's kills at ε′ < ε are a subset of its kills at ε, a
+//!   correlated-failure scenario (progressive decay of the same fabric)
+//!   the paper's independent throws cannot express. Nested chains run
+//!   their levels in sequence on one worker, so consecutive levels delta
+//!   off each other — the level-to-level diff is as small as the
+//!   baseline diff at low ε.
 //!
 //! Parallelism: worker tasks (scoped threads via [`par::join_all`]) claim
-//! grid points from an atomic cursor and write result slots disjointly;
+//! units from an atomic cursor — one grid point (independent) or one
+//! (engine, seed) chain (nested) — and write result slots disjointly;
 //! the analysis scans inside each sample use the shared worker pool.
 
+use super::paths::{PathTensor, TensorSnapshot, TensorUpdate};
 use super::patterns::Pattern;
 use super::RiskEvaluator;
-use crate::routing::{registry, Algo, Lft, RoutingEngine};
+use crate::fabric::metrics::Histogram;
+use crate::routing::{registry, Algo, DeltaOutcome, Lft, RoutingEngine, Snapshot};
 use crate::topology::degrade::{self, DegradeScratch, Equipment};
 use crate::topology::{SwitchId, Topology};
 use crate::util::par::{self, SharedMut};
@@ -32,6 +73,39 @@ use crate::util::rng::Rng;
 use std::collections::HashSet;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::Instant;
+
+/// How the per-seed degradation throws relate across levels.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Schedule {
+    /// Each `(level, seed)` throw is drawn independently (the paper's
+    /// Fig. 4–5 methodology).
+    Independent,
+    /// One kill sequence per seed; level ε removes the sequence's first
+    /// ε entries, so a seed's kills are monotone (nested) across levels
+    /// — correlated progressive decay. The partial Fisher–Yates draw
+    /// ([`Rng::sample_distinct_into`]) has the prefix property, so the
+    /// level-ε prefix equals an independent ε-draw from the same seed.
+    Nested,
+}
+
+impl Schedule {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Schedule::Independent => "independent",
+            Schedule::Nested => "nested",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "independent" | "ind" => Ok(Schedule::Independent),
+            "nested" | "nest" => Ok(Schedule::Nested),
+            other => Err(format!(
+                "unknown schedule {other:?} (expected independent|nested)"
+            )),
+        }
+    }
+}
 
 /// One campaign grid: {engine × degradation level × seed × pattern}.
 #[derive(Clone, Debug)]
@@ -50,6 +124,13 @@ pub struct CampaignConfig {
     pub sp_block: usize,
     /// Worker tasks; 0 = `util::par::num_threads()`.
     pub workers: usize,
+    /// Throw correlation across levels (see [`Schedule`]).
+    pub schedule: Schedule,
+    /// Fork every sample from a shared intact baseline (delta reroute +
+    /// incremental tensor) instead of recomputing from scratch. Output
+    /// is bit-identical either way; disable only to measure the
+    /// from-scratch cost (`benches/analysis_smoke.rs` does).
+    pub fork: bool,
 }
 
 impl Default for CampaignConfig {
@@ -66,6 +147,8 @@ impl Default for CampaignConfig {
             ],
             sp_block: 0,
             workers: 0,
+            schedule: Schedule::Independent,
+            fork: true,
         }
     }
 }
@@ -97,6 +180,10 @@ pub struct SampleRow {
     pub value: u64,
     pub valid: bool,
     pub broken_routes: usize,
+    /// The sample was routed on the fork path (delta from a baseline;
+    /// false = full reroute: fork disabled, engine not forkable, or a
+    /// per-sample fallback). Values are bit-identical either way.
+    pub forked: bool,
     /// Routing latency of the sample (shared by its pattern rows).
     pub route_secs: f64,
     /// Tensor trace + this pattern's evaluation latency.
@@ -106,12 +193,12 @@ pub struct SampleRow {
 impl SampleRow {
     /// Header matching [`SampleRow::to_csv`].
     pub fn csv_header() -> &'static str {
-        "engine,equipment,level,removed,seed,pattern,value,valid,broken_routes,route_secs,analyze_secs"
+        "engine,equipment,level,removed,seed,pattern,value,valid,broken_routes,forked,route_secs,analyze_secs"
     }
 
     pub fn to_csv(&self) -> String {
         format!(
-            "{},{},{},{},{},{},{},{},{},{:.6},{:.6}",
+            "{},{},{},{},{},{},{},{},{},{},{:.6},{:.6}",
             self.engine,
             equipment_name(self.equipment),
             self.level,
@@ -121,6 +208,7 @@ impl SampleRow {
             self.value,
             self.valid,
             self.broken_routes,
+            self.forked,
             self.route_secs,
             self.analyze_secs
         )
@@ -132,8 +220,8 @@ impl SampleRow {
             concat!(
                 "{{\"engine\":\"{}\",\"equipment\":\"{}\",\"level\":{},",
                 "\"removed\":{},\"seed\":{},\"pattern\":\"{}\",\"value\":{},",
-                "\"valid\":{},\"broken_routes\":{},\"route_secs\":{:.6},",
-                "\"analyze_secs\":{:.6}}}"
+                "\"valid\":{},\"broken_routes\":{},\"forked\":{},",
+                "\"route_secs\":{:.6},\"analyze_secs\":{:.6}}}"
             ),
             self.engine,
             equipment_name(self.equipment),
@@ -144,6 +232,7 @@ impl SampleRow {
             self.value,
             self.valid,
             self.broken_routes,
+            self.forked,
             self.route_secs,
             self.analyze_secs
         )
@@ -174,37 +263,211 @@ pub fn write_csv(rows: &[SampleRow], path: &str) -> std::io::Result<()> {
     std::fs::write(path, to_csv(rows))
 }
 
+/// Fork accounting of one campaign run: how many samples rode the
+/// baseline-fork path vs paid full recomputation, with per-tier route
+/// latency histograms (merged across workers). Counter totals are
+/// deterministic in the grid (fallbacks are deterministic per sample);
+/// only the recorded latencies vary run to run.
+#[derive(Clone, Debug)]
+pub struct CampaignStats {
+    /// Samples executed (= `CampaignConfig::points` of the run).
+    pub samples: u64,
+    /// Samples routed by the fork path (delta from a baseline).
+    pub forked_routes: u64,
+    /// Samples routed in full (fork disabled, engine not forkable, or a
+    /// per-sample delta fallback).
+    pub full_routes: u64,
+    /// The subset of `full_routes` where a fork was *attempted* but the
+    /// delta path fell back (threshold/shape/NID rules).
+    pub route_fallbacks: u64,
+    /// Samples whose risk tensor was maintained incrementally.
+    pub forked_tensors: u64,
+    /// Samples whose risk tensor was rebuilt from scratch.
+    pub full_tensors: u64,
+    /// Route latency of fork-path samples (milliseconds).
+    pub route_ms_forked: Histogram,
+    /// Route latency of full-path samples (milliseconds).
+    pub route_ms_full: Histogram,
+}
+
+impl Default for CampaignStats {
+    fn default() -> Self {
+        Self {
+            samples: 0,
+            forked_routes: 0,
+            full_routes: 0,
+            route_fallbacks: 0,
+            forked_tensors: 0,
+            full_tensors: 0,
+            route_ms_forked: Histogram::latency_ms(),
+            route_ms_full: Histogram::latency_ms(),
+        }
+    }
+}
+
+impl CampaignStats {
+    /// Fraction of samples served by the fork route path.
+    pub fn fork_hit_rate(&self) -> f64 {
+        if self.samples == 0 {
+            0.0
+        } else {
+            self.forked_routes as f64 / self.samples as f64
+        }
+    }
+
+    /// Fraction of samples whose tensor was maintained incrementally.
+    pub fn tensor_fork_rate(&self) -> f64 {
+        if self.samples == 0 {
+            0.0
+        } else {
+            self.forked_tensors as f64 / self.samples as f64
+        }
+    }
+
+    /// Fold another worker's stats into this one.
+    pub fn merge(&mut self, other: &CampaignStats) {
+        self.samples += other.samples;
+        self.forked_routes += other.forked_routes;
+        self.full_routes += other.full_routes;
+        self.route_fallbacks += other.route_fallbacks;
+        self.forked_tensors += other.forked_tensors;
+        self.full_tensors += other.full_tensors;
+        self.route_ms_forked.merge(&other.route_ms_forked);
+        self.route_ms_full.merge(&other.route_ms_full);
+    }
+
+    pub fn render(&self) -> String {
+        format!(
+            "samples={} forked={} full={} fallbacks={} fork_hit={:.1}% \
+             tensor_forked={} tensor_full={} route_ms: forked mean={:.2} full mean={:.2}",
+            self.samples,
+            self.forked_routes,
+            self.full_routes,
+            self.route_fallbacks,
+            100.0 * self.fork_hit_rate(),
+            self.forked_tensors,
+            self.full_tensors,
+            self.route_ms_forked.mean(),
+            self.route_ms_full.mean()
+        )
+    }
+}
+
+/// The shared intact baseline of one engine: the engine-side snapshot
+/// (when the engine is forkable), the intact tables, and the frozen risk
+/// tensor. Built once per run on the main thread; workers share it via
+/// the `Arc`s inside [`Snapshot`]/[`TensorSnapshot`].
+struct Baseline {
+    /// Engine-side fork point (`None`: engine is not forkable — its
+    /// samples route in full and only the tensor forks).
+    route: Option<Snapshot>,
+    /// The intact tables (diff anchor for non-forkable engines).
+    lft: Lft,
+    /// The frozen intact risk tensor.
+    tensor: TensorSnapshot,
+}
+
+impl Baseline {
+    fn build(base: &Topology, algo: Algo) -> Self {
+        let mut engine = registry::create(algo);
+        let mut lft = Lft::default();
+        engine.route_into(base, &mut lft);
+        let route = engine.fork_snapshot(&lft);
+        let tensor = PathTensor::build(base, &lft).into_snapshot();
+        Baseline { route, lft, tensor }
+    }
+}
+
+/// Salt for the independent per-(level, seed) throws (pre-fork salt kept
+/// verbatim, so independent-schedule grids reproduce earlier runs).
+const INDEPENDENT_SALT: u64 = 0xCA3A_1617_D0D0_0001;
+/// Salt for the nested per-seed kill sequences.
+const NESTED_SALT: u64 = 0xCA3A_1617_D0D0_0002;
+
 /// Per-worker persistent state: engines, degradation scratch, topology
 /// and table buffers, and the risk evaluator — everything a sample needs,
 /// reused across every sample the worker claims.
-struct Worker {
+struct Worker<'a> {
     engines: Vec<Option<Box<dyn RoutingEngine>>>,
     scratch: DegradeScratch,
     topo: Topology,
     lft: Lft,
+    /// Previous tables of the current *nested* chain (diff anchor for
+    /// non-forkable engines past the first level; chain starts diff
+    /// against the baseline directly).
+    prev_lft: Lft,
     eval: RiskEvaluator,
     dead_sw: HashSet<SwitchId>,
     dead_cb: HashSet<(SwitchId, u16)>,
+    /// Current throw (indices into cables/removable).
     pool: Vec<u32>,
+    /// Nested schedule: the seed's full kill sequence (levels take
+    /// prefixes).
+    seed_draw: Vec<u32>,
+    /// Rows refilled by the last delta reroute / LFT row diff — the
+    /// tensor's dirty set.
+    touched: Vec<u32>,
+    stats: CampaignStats,
+    baselines: Option<&'a [Baseline]>,
 }
 
-impl Worker {
-    fn new(cfg: &CampaignConfig) -> Self {
+impl<'a> Worker<'a> {
+    fn new(cfg: &CampaignConfig, baselines: Option<&'a [Baseline]>) -> Self {
         Self {
             engines: (0..cfg.engines.len()).map(|_| None).collect(),
             scratch: DegradeScratch::default(),
             topo: Topology::default(),
             lft: Lft::default(),
+            prev_lft: Lft::default(),
             eval: RiskEvaluator::new(),
             dead_sw: HashSet::new(),
             dead_cb: HashSet::new(),
             pool: Vec::new(),
+            seed_draw: Vec::new(),
+            touched: Vec::new(),
+            stats: CampaignStats::default(),
+            baselines,
         }
     }
 
+    /// Draw the nested kill sequence for `seed` (one per chain; levels
+    /// take prefixes of it).
+    fn start_nested_chain(&mut self, cfg: &CampaignConfig, n: usize, seed: u64) {
+        let kmax = cfg.levels.iter().copied().max().unwrap_or(0).min(n);
+        let mut rng = Rng::new(NESTED_SALT ^ seed.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        rng.sample_distinct_into(n, kmax, &mut self.seed_draw);
+    }
+
+    /// Fill `pool` with the (level, seed) throw per the schedule.
+    /// Returns the number of pieces removed.
+    fn draw_throw(&mut self, cfg: &CampaignConfig, n: usize, level: usize, seed: u64) -> usize {
+        match cfg.schedule {
+            Schedule::Independent => {
+                // The throw depends only on (equipment, level, seed):
+                // every engine is judged on identical damage, and the
+                // grid is deterministic at any worker count.
+                let mut rng = Rng::new(
+                    INDEPENDENT_SALT
+                        ^ seed.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                        ^ (level as u64).wrapping_mul(0xBF58_476D_1CE4_E5B9),
+                );
+                rng.sample_distinct_into(n, level, &mut self.pool);
+            }
+            Schedule::Nested => {
+                let k = level.min(self.seed_draw.len());
+                self.pool.clear();
+                self.pool.extend_from_slice(&self.seed_draw[..k]);
+            }
+        }
+        self.pool.len()
+    }
+
     /// Run grid point `(ei, li, si)`, emitting one row per pattern.
+    /// `chain_start` marks the first sample of a fork chain: the engine
+    /// workspace, table buffer, and tensor are rewound to the baseline
+    /// (independent schedule: every sample; nested: the first level).
     #[allow(clippy::too_many_arguments)]
-    fn run_point(
+    fn run_sample(
         &mut self,
         base: &Topology,
         cfg: &CampaignConfig,
@@ -213,46 +476,106 @@ impl Worker {
         ei: usize,
         li: usize,
         si: usize,
+        chain_start: bool,
         mut emit: impl FnMut(usize, SampleRow),
     ) {
         let level = cfg.levels[li];
         let seed = cfg.seeds[si];
-        // The throw depends only on (equipment, level, seed): every
-        // engine is judged on identical damage, and the grid is
-        // deterministic at any worker count.
-        let mut rng = Rng::new(
-            0xCA3A_1617_D0D0_0001u64
-                ^ seed.wrapping_mul(0x9E37_79B9_7F4A_7C15)
-                ^ (level as u64).wrapping_mul(0xBF58_476D_1CE4_E5B9),
-        );
+        let n = match cfg.equipment {
+            Equipment::Switches => removable.len(),
+            Equipment::Links => cables.len(),
+        };
+        let removed = self.draw_throw(cfg, n, level, seed);
         self.dead_sw.clear();
         self.dead_cb.clear();
-        let removed = match cfg.equipment {
+        match cfg.equipment {
             Equipment::Switches => {
-                rng.sample_distinct_into(removable.len(), level, &mut self.pool);
                 for &pi in &self.pool {
                     self.dead_sw.insert(removable[pi as usize]);
                 }
-                self.pool.len()
             }
             Equipment::Links => {
-                rng.sample_distinct_into(cables.len(), level, &mut self.pool);
                 for &pi in &self.pool {
                     self.dead_cb.insert(cables[pi as usize]);
                 }
-                self.pool.len()
             }
-        };
+        }
         degrade::apply_into(base, &self.dead_sw, &self.dead_cb, &mut self.topo, &mut self.scratch);
+        let baseline = self.baselines.map(|b| &b[ei]);
         let engine =
             self.engines[ei].get_or_insert_with(|| registry::create(cfg.engines[ei]));
+        self.stats.samples += 1;
+        let mut forked = false;
         let t0 = Instant::now();
-        engine.route_into(&self.topo, &mut self.lft);
+        match baseline {
+            Some(Baseline {
+                route: Some(snap), ..
+            }) => {
+                // Fork path: delta from the baseline (chain start) or
+                // from this chain's previous sample (nested levels).
+                if chain_start {
+                    engine.restore_snapshot(snap, &mut self.lft);
+                }
+                let outcome =
+                    engine.reroute_delta_into(&self.topo, &mut self.lft, &mut self.touched);
+                match outcome {
+                    DeltaOutcome::Delta(_) => {
+                        forked = true;
+                        self.stats.forked_routes += 1;
+                    }
+                    DeltaOutcome::Full(_) => {
+                        self.stats.full_routes += 1;
+                        self.stats.route_fallbacks += 1;
+                    }
+                }
+            }
+            Some(b) => {
+                // Non-forkable engine: full route, but the tensor still
+                // forks — dirty rows from a diff against the chain's
+                // previous tables (the baseline itself at chain start,
+                // so the independent schedule copies nothing).
+                engine.route_into(&self.topo, &mut self.lft);
+                self.stats.full_routes += 1;
+                if chain_start {
+                    self.lft.changed_rows_into(&b.lft, &mut self.touched);
+                } else {
+                    self.lft.changed_rows_into(&self.prev_lft, &mut self.touched);
+                }
+                // Only nested chains revisit these tables (the next
+                // level diffs against them).
+                if cfg.schedule == Schedule::Nested {
+                    self.prev_lft.copy_from(&self.lft);
+                }
+            }
+            None => {
+                engine.route_into(&self.topo, &mut self.lft);
+                self.stats.full_routes += 1;
+            }
+        }
         let route_secs = t0.elapsed().as_secs_f64();
+        if forked {
+            self.stats.route_ms_forked.record(route_secs * 1e3);
+        } else {
+            self.stats.route_ms_full.record(route_secs * 1e3);
+        }
         let valid = engine.validate(&self.topo, &self.lft).is_ok();
         self.eval.sp_block = cfg.sp_block;
         let t1 = Instant::now();
-        self.eval.rebuild(&self.topo, &self.lft);
+        match baseline {
+            Some(b) => {
+                if chain_start {
+                    self.eval.restore_from(&b.tensor);
+                }
+                match self.eval.update(&self.topo, &self.lft, &self.touched) {
+                    TensorUpdate::Incremental(_) => self.stats.forked_tensors += 1,
+                    TensorUpdate::Rebuilt(_) => self.stats.full_tensors += 1,
+                }
+            }
+            None => {
+                self.eval.rebuild(&self.topo, &self.lft);
+                self.stats.full_tensors += 1;
+            }
+        }
         let trace_secs = t1.elapsed().as_secs_f64();
         for (pi, &pattern) in cfg.patterns.iter().enumerate() {
             let t2 = Instant::now();
@@ -269,6 +592,7 @@ impl Worker {
                     value,
                     valid,
                     broken_routes: self.eval.broken_routes(),
+                    forked,
                     route_secs,
                     analyze_secs: trace_secs + t2.elapsed().as_secs_f64(),
                 },
@@ -278,54 +602,110 @@ impl Worker {
 }
 
 /// Run the campaign grid over `base`, returning the rows in deterministic
-/// grid order (engine-major, then level, seed, pattern).
-pub fn run(base: &Topology, cfg: &CampaignConfig) -> Vec<SampleRow> {
+/// grid order (engine-major, then level, seed, pattern) together with the
+/// fork accounting.
+pub fn run_with_stats(base: &Topology, cfg: &CampaignConfig) -> (Vec<SampleRow>, CampaignStats) {
     let points = cfg.points();
     let per_point = cfg.patterns.len();
     let total = points * per_point;
     if total == 0 {
-        return Vec::new();
+        return (Vec::new(), CampaignStats::default());
     }
     let mut slots: Vec<Option<SampleRow>> = (0..total).map(|_| None).collect();
     let cables = degrade::cables(base);
     let removable = degrade::removable_switches(base);
+    // The shared intact baselines, one per engine (fork mode only) —
+    // independent builds, run concurrently so startup latency is the
+    // slowest engine, not the sum.
+    let baselines: Option<Vec<Baseline>> = cfg.fork.then(|| {
+        par::join_all(
+            cfg.engines
+                .iter()
+                .map(|&a| move || Baseline::build(base, a))
+                .collect(),
+        )
+    });
+    let baselines_ref = baselines.as_deref();
+    let n_equipment = match cfg.equipment {
+        Equipment::Switches => removable.len(),
+        Equipment::Links => cables.len(),
+    };
+    // Claim units: one grid point (independent), or one (engine, seed)
+    // chain whose levels run in order on one worker (nested).
+    let claims = match cfg.schedule {
+        Schedule::Independent => points,
+        Schedule::Nested => cfg.engines.len() * cfg.seeds.len(),
+    };
     let workers = if cfg.workers == 0 {
         par::num_threads()
     } else {
         cfg.workers
     }
-    .clamp(1, points);
+    .clamp(1, claims);
     let cursor = AtomicUsize::new(0);
+    let mut stats = CampaignStats::default();
     {
         let shared = SharedMut::new(&mut slots);
         let ls = cfg.levels.len() * cfg.seeds.len();
+        let ns = cfg.seeds.len();
         let tasks: Vec<_> = (0..workers)
             .map(|_| {
                 let (cursor, shared) = (&cursor, &shared);
                 let (cables, removable) = (&cables[..], &removable[..]);
-                move || {
-                    let mut w = Worker::new(cfg);
+                move || -> CampaignStats {
+                    let mut w = Worker::new(cfg, baselines_ref);
                     loop {
-                        let i = cursor.fetch_add(1, Ordering::Relaxed);
-                        if i >= points {
+                        let c = cursor.fetch_add(1, Ordering::Relaxed);
+                        if c >= claims {
                             break;
                         }
-                        let (ei, li, si) = (i / ls, (i % ls) / cfg.seeds.len(), i % cfg.seeds.len());
-                        w.run_point(base, cfg, cables, removable, ei, li, si, |pi, row| {
-                            // SAFETY: slot (i, pi) is written exactly once
-                            // (the cursor hands out each point once).
-                            unsafe { *shared.get_mut(i * per_point + pi) = Some(row) };
-                        });
+                        match cfg.schedule {
+                            Schedule::Independent => {
+                                let (ei, li, si) = (c / ls, (c % ls) / ns, c % ns);
+                                let slot0 = (ei * ls + li * ns + si) * per_point;
+                                let emit = |pi: usize, row: SampleRow| {
+                                    // SAFETY: slot (point, pi) is written
+                                    // exactly once (the cursor hands out
+                                    // each point once).
+                                    unsafe { *shared.get_mut(slot0 + pi) = Some(row) };
+                                };
+                                w.run_sample(base, cfg, cables, removable, ei, li, si, true, emit);
+                            }
+                            Schedule::Nested => {
+                                let (ei, si) = (c / ns, c % ns);
+                                w.start_nested_chain(cfg, n_equipment, cfg.seeds[si]);
+                                for li in 0..cfg.levels.len() {
+                                    let slot0 = (ei * ls + li * ns + si) * per_point;
+                                    let emit = |pi: usize, row: SampleRow| {
+                                        // SAFETY: as above — each (point,
+                                        // pi) slot is claimed by exactly
+                                        // one chain.
+                                        unsafe { *shared.get_mut(slot0 + pi) = Some(row) };
+                                    };
+                                    let start = li == 0;
+                                    w.run_sample(base, cfg, cables, removable, ei, li, si, start, emit);
+                                }
+                            }
+                        }
                     }
+                    w.stats
                 }
             })
             .collect();
-        par::join_all(tasks);
+        for worker_stats in par::join_all(tasks) {
+            stats.merge(&worker_stats);
+        }
     }
-    slots
+    let rows = slots
         .into_iter()
         .map(|s| s.expect("every grid slot filled"))
-        .collect()
+        .collect();
+    (rows, stats)
+}
+
+/// [`run_with_stats`] without the accounting (compatibility wrapper).
+pub fn run(base: &Topology, cfg: &CampaignConfig) -> Vec<SampleRow> {
+    run_with_stats(base, cfg).0
 }
 
 #[cfg(test)]
@@ -348,6 +728,8 @@ mod tests {
             ],
             sp_block: 0,
             workers: 1,
+            schedule: Schedule::Independent,
+            fork: true,
         }
     }
 
@@ -385,6 +767,40 @@ mod tests {
     }
 
     #[test]
+    fn forked_rows_bit_identical_to_fork_disabled_run() {
+        // The fork acceptance contract at module level: enabling the
+        // baseline fork changes per-sample cost, never a single value —
+        // for both schedules.
+        let t = PgftParams::small().build();
+        for schedule in [Schedule::Independent, Schedule::Nested] {
+            let forked = run(
+                &t,
+                &CampaignConfig {
+                    schedule,
+                    ..small_cfg()
+                },
+            );
+            let full = run(
+                &t,
+                &CampaignConfig {
+                    schedule,
+                    fork: false,
+                    ..small_cfg()
+                },
+            );
+            assert_eq!(
+                forked.iter().map(key).collect::<Vec<_>>(),
+                full.iter().map(key).collect::<Vec<_>>(),
+                "{schedule:?}: fork changed a result"
+            );
+            assert!(
+                full.iter().all(|r| !r.forked),
+                "fork-disabled rows must not claim the fork path"
+            );
+        }
+    }
+
+    #[test]
     fn engines_share_identical_throws() {
         let t = PgftParams::small().build();
         let cfg = small_cfg();
@@ -406,6 +822,76 @@ mod tests {
             assert_eq!(a.seed, b.seed);
             assert_eq!(a.removed, b.removed, "level {} seed {}", a.level, a.seed);
         }
+    }
+
+    #[test]
+    fn nested_schedule_kills_are_supersets_across_levels() {
+        // Nested semantics: a seed's removed count is monotone in the
+        // level, engines share throws, and the grid stays deterministic
+        // across worker counts.
+        let t = PgftParams::small().build();
+        let cfg = CampaignConfig {
+            levels: vec![0, 1, 3, 6],
+            schedule: Schedule::Nested,
+            ..small_cfg()
+        };
+        let rows = run(&t, &cfg);
+        assert_eq!(rows.len(), cfg.rows());
+        for r in &rows {
+            assert_eq!(r.removed, r.level, "small() has ≥ 6 cables");
+        }
+        let par_rows = run(
+            &t,
+            &CampaignConfig {
+                workers: 4,
+                levels: vec![0, 1, 3, 6],
+                schedule: Schedule::Nested,
+                ..small_cfg()
+            },
+        );
+        assert_eq!(
+            rows.iter().map(key).collect::<Vec<_>>(),
+            par_rows.iter().map(key).collect::<Vec<_>>(),
+        );
+    }
+
+    #[test]
+    fn stats_account_for_every_sample() {
+        let t = PgftParams::small().build();
+        let cfg = small_cfg();
+        let (rows, stats) = run_with_stats(&t, &cfg);
+        assert_eq!(rows.len(), cfg.rows());
+        assert_eq!(stats.samples as usize, cfg.points());
+        assert_eq!(stats.forked_routes + stats.full_routes, stats.samples);
+        assert_eq!(stats.forked_tensors + stats.full_tensors, stats.samples);
+        assert!(stats.route_fallbacks <= stats.full_routes);
+        assert_eq!(
+            stats.route_ms_forked.count() + stats.route_ms_full.count(),
+            stats.samples
+        );
+        // Dmodc is forkable: its samples fork unless a fallback fired;
+        // Ftree is not: its routes are all full. Either way the tensor
+        // forks for cable-only damage on both engines.
+        assert!(stats.forked_routes >= 1, "{}", stats.render());
+        assert_eq!(stats.forked_tensors, stats.samples, "{}", stats.render());
+        // Row flags agree with the counters (one sample per pattern row).
+        let forked_rows = rows.iter().filter(|r| r.forked).count();
+        assert_eq!(
+            forked_rows,
+            stats.forked_routes as usize * cfg.patterns.len()
+        );
+        // Fork disabled: everything is full, nothing forked.
+        let (_, off) = run_with_stats(
+            &t,
+            &CampaignConfig {
+                fork: false,
+                ..small_cfg()
+            },
+        );
+        assert_eq!(off.forked_routes, 0);
+        assert_eq!(off.forked_tensors, 0);
+        assert_eq!(off.full_routes, off.samples);
+        assert_eq!(off.fork_hit_rate(), 0.0);
     }
 
     #[test]
@@ -440,10 +926,19 @@ mod tests {
             let j = r.to_json();
             assert!(j.starts_with('{') && j.ends_with('}'));
             assert!(j.contains("\"pattern\""));
+            assert!(j.contains("\"forked\""));
         }
         let doc = to_csv(&rows);
         assert_eq!(doc.lines().count(), rows.len() + 1);
         assert!(doc.starts_with(SampleRow::csv_header()));
+    }
+
+    #[test]
+    fn schedule_parse_roundtrip() {
+        for s in [Schedule::Independent, Schedule::Nested] {
+            assert_eq!(Schedule::parse(s.name()).unwrap(), s);
+        }
+        assert!(Schedule::parse("sometimes").is_err());
     }
 
     #[test]

@@ -24,7 +24,7 @@ pub mod patterns;
 use crate::routing::Lft;
 use crate::topology::Topology;
 use congestion::PermEngine;
-use paths::{PathTensor, TensorUpdate};
+use paths::{PathTensor, TensorSnapshot, TensorUpdate};
 use patterns::Pattern;
 
 /// Facade bundling the path tensor with the pattern engines.
@@ -141,6 +141,19 @@ impl RiskEvaluator {
     /// last rebuild/update).
     pub fn update(&mut self, topo: &Topology, lft: &Lft, dirty: &[u32]) -> TensorUpdate {
         self.tensor.update(topo, lft, dirty)
+    }
+
+    /// Freeze the current tensor as a shared baseline (campaign fork
+    /// path) — see [`PathTensor::snapshot`].
+    pub fn snapshot(&self) -> TensorSnapshot {
+        self.tensor.snapshot()
+    }
+
+    /// Rewind the tensor to a frozen baseline, reusing buffers — see
+    /// [`PathTensor::restore_from`]. The next [`RiskEvaluator::update`]
+    /// diffs against the baseline's traced topology.
+    pub fn restore_from(&mut self, snap: &TensorSnapshot) {
+        self.tensor.restore_from(snap);
     }
 
     /// Evaluate `pattern` against the current tensor. `topo` must be the

@@ -41,6 +41,7 @@ use crate::routing::{Lft, NO_ROUTE};
 use crate::topology::{NodeId, PortTarget, SwitchId, Topology};
 use crate::util::par::{parallel_for, SharedMut};
 use std::cell::RefCell;
+use std::sync::Arc;
 
 /// Padding value for unused hop slots.
 pub const NO_PORT: u32 = u32::MAX;
@@ -99,7 +100,7 @@ struct LeafStat {
 }
 
 /// Dense `[leaves × nodes × max_hops]` tensor of port ids, `NO_PORT`-padded.
-#[derive(Default)]
+#[derive(Clone, Default)]
 pub struct PathTensor {
     data: Vec<u32>,
     /// Ping-pong buffer for re-striding (compaction, incremental emits).
@@ -207,10 +208,7 @@ impl PathTensor {
     /// Recompute the leaf/node indexing for `topo`.
     fn prepare_shape(&mut self, topo: &Topology) {
         self.leaves.clear();
-        self.leaves.extend(
-            (0..topo.switches.len() as SwitchId)
-                .filter(|&s| topo.switches[s as usize].level == 0),
-        );
+        self.leaves.extend_from_slice(topo.leaf_switches());
         self.leaf_index.clear();
         self.leaf_index.resize(topo.switches.len(), u32::MAX);
         for (i, &l) in self.leaves.iter().enumerate() {
@@ -554,6 +552,83 @@ impl PathTensor {
         })
     }
 
+    /// Freeze the tensor's current state — trace data, indexing, broken
+    /// rows, and the traced-topology snapshot `update` diffs against —
+    /// as a shared, immutable [`TensorSnapshot`]. Cloning the result is
+    /// a reference-count bump; campaign workers share one baseline
+    /// tensor per engine. The tensor must have been built (or updated)
+    /// at least once. Deep-copies the tensor (transiently including the
+    /// ping-pong scratch); prefer [`PathTensor::into_snapshot`] for
+    /// tensors built only to be frozen.
+    pub fn snapshot(&self) -> TensorSnapshot {
+        self.clone().into_snapshot()
+    }
+
+    /// [`PathTensor::snapshot`] without the deep copy: consume this
+    /// tensor, moving its buffers into the frozen state (scratch-only
+    /// buffers are shed — a missed one here costs memory, never
+    /// correctness, since [`PathTensor::restore_from`] ignores them).
+    pub fn into_snapshot(mut self) -> TensorSnapshot {
+        assert!(self.snap_valid, "snapshot requires a built tensor");
+        self.next = Vec::new();
+        self.dirty_sw = Vec::new();
+        self.port_sw = Vec::new();
+        self.row_len = Vec::new();
+        self.leaf_stat = Vec::new();
+        TensorSnapshot {
+            data: Arc::new(self),
+        }
+    }
+
+    /// Rewind this tensor to `snap`'s frozen state, reusing every buffer
+    /// (`Vec::clone_from` — zero heap allocation once capacities have
+    /// converged). After the restore, [`PathTensor::update`] diffs
+    /// against the snapshot's traced topology: the campaign fork path
+    /// runs restore → update(sample) once per sample instead of a full
+    /// rebuild. Bit-identity to a fresh build is inherited from
+    /// `update`'s own contract (`tests/campaign_fork.rs`).
+    pub fn restore_from(&mut self, snap: &TensorSnapshot) {
+        // Exhaustive destructuring on purpose: adding a `PathTensor`
+        // field without deciding its restore semantics fails to compile
+        // here instead of silently carrying the previous sample's state
+        // across a fork.
+        let PathTensor {
+            data,
+            next: _,
+            num_leaves,
+            num_nodes,
+            max_hops,
+            leaf_index,
+            leaves,
+            src_leaf,
+            broken_routes,
+            broken,
+            snap_valid,
+            snap_switches,
+            snap_nodes,
+            snap_port_offsets,
+            snap_ports,
+            dirty_sw: _,
+            port_sw: _,
+            row_len: _,
+            leaf_stat: _,
+        } = &*snap.data;
+        self.data.clone_from(data);
+        self.num_leaves = *num_leaves;
+        self.num_nodes = *num_nodes;
+        self.max_hops = *max_hops;
+        self.leaf_index.clone_from(leaf_index);
+        self.leaves.clone_from(leaves);
+        self.src_leaf.clone_from(src_leaf);
+        self.broken_routes = *broken_routes;
+        self.broken.clone_from(broken);
+        self.snap_switches.clone_from(snap_switches);
+        self.snap_nodes.clone_from(snap_nodes);
+        self.snap_port_offsets.clone_from(snap_port_offsets);
+        self.snap_ports.clone_from(snap_ports);
+        self.snap_valid = *snap_valid;
+    }
+
     /// Ports of the route from leaf-index `li` to destination `d`
     /// (`NO_PORT`-terminated slice of length `max_hops`).
     #[inline]
@@ -565,6 +640,40 @@ impl PathTensor {
     /// Raw tensor (row-major `[leaf][dst][hop]`) — fed to the AOT artifact.
     pub fn raw(&self) -> &[u32] {
         &self.data
+    }
+}
+
+/// An immutable, cheaply clonable frozen [`PathTensor`] state (trace
+/// data + indexing + the traced-topology snapshot), shared behind an
+/// `Arc` — the analysis-side baseline of the campaign fork path. Created
+/// by [`PathTensor::snapshot`]/[`PathTensor::into_snapshot`]; consumed
+/// by [`PathTensor::restore_from`].
+pub struct TensorSnapshot {
+    /// The frozen tensor itself (scratch buffers shed at freeze time).
+    data: Arc<PathTensor>,
+}
+
+impl TensorSnapshot {
+    /// Shape of the frozen tensor: `(leaves, nodes, max_hops)`.
+    pub fn shape(&self) -> (usize, usize, usize) {
+        (
+            self.data.num_leaves,
+            self.data.num_nodes,
+            self.data.max_hops,
+        )
+    }
+
+    /// Broken (leaf, dst) routes of the frozen tensor.
+    pub fn broken_routes(&self) -> usize {
+        self.data.broken_routes
+    }
+}
+
+impl Clone for TensorSnapshot {
+    fn clone(&self) -> Self {
+        Self {
+            data: Arc::clone(&self.data),
+        }
     }
 }
 
@@ -722,6 +831,38 @@ mod tests {
             TensorUpdate::Rebuilt(RebuildReason::ShapeChanged)
         );
         assert_tensor_eq(&pt, &PathTensor::build(&d, &lft_d), "switch kill");
+    }
+
+    #[test]
+    fn snapshot_restore_forks_independent_samples_bit_identically() {
+        // The campaign loop: one baseline tensor snapshot, many
+        // independent degraded samples, each restore → update. Every
+        // fork must equal a fresh build, no matter what the previous
+        // sample left in the tensor's buffers.
+        let t = PgftParams::fig1().build();
+        let lft = route_unchecked(Algo::Dmodc, &t);
+        let mut pt = PathTensor::build(&t, &lft);
+        let snap = pt.snapshot();
+        assert_eq!(snap.shape(), (pt.num_leaves, pt.num_nodes, pt.max_hops));
+        assert_eq!(snap.broken_routes(), 0);
+        let cables = degrade::cables(&t);
+        for round in 0..4 {
+            let dead: HashSet<(SwitchId, u16)> =
+                [cables[round * 3 % cables.len()]].into_iter().collect();
+            let d = degrade::apply(&t, &HashSet::new(), &dead);
+            let lft_d = route_unchecked(Algo::Dmodc, &d);
+            pt.restore_from(&snap);
+            let up = pt.update(&d, &lft_d, &lft_d.changed_rows(&lft));
+            assert!(up.is_incremental(), "round {round}: {up:?}");
+            assert_tensor_eq(&pt, &PathTensor::build(&d, &lft_d), "fork");
+        }
+        // The snapshot itself restores exactly (intact fork).
+        pt.restore_from(&snap);
+        assert_tensor_eq(&pt, &PathTensor::build(&t, &lft), "restore");
+        // The move-based freeze is equivalent to the deep-copying one.
+        let moved = PathTensor::build(&t, &lft).into_snapshot();
+        pt.restore_from(&moved);
+        assert_tensor_eq(&pt, &PathTensor::build(&t, &lft), "into_snapshot");
     }
 
     #[test]

@@ -38,6 +38,19 @@ impl Histogram {
         self.n += 1;
     }
 
+    /// Fold `other` into this histogram (same bucket boundaries
+    /// required). Used to combine per-worker campaign histograms into
+    /// one [`CampaignStats`](crate::analysis::campaign::CampaignStats).
+    pub fn merge(&mut self, other: &Histogram) {
+        assert_eq!(self.bounds, other.bounds, "histogram bounds differ");
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.sum += other.sum;
+        self.max = self.max.max(other.max);
+        self.n += other.n;
+    }
+
     pub fn count(&self) -> u64 {
         self.n
     }

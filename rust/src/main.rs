@@ -14,6 +14,7 @@
 //!   dmodc-fm analyze --nodes 648 --algo ftree --rp-samples 200
 //!   dmodc-fm degrade --pgft "4,6,3;1,2,2;1,2,1" --kind links --seed 7
 //!   dmodc-fm campaign --nodes 648 --levels 0,4,16 --throws 5 --csv sweep.csv
+//!   dmodc-fm campaign --nodes 648 --levels 0,1,2,4 --schedule nested --kind links
 //!   dmodc-fm fabric --nodes 648 --events 40
 
 use dmodc::analysis::{campaign, CongestionAnalyzer};
@@ -170,8 +171,17 @@ fn cmd_campaign() {
     .flag("rp-samples", "100", "random permutations for RP")
     .flag("sp-block", "0", "SP shift-block size (0 = auto)")
     .flag("workers", "0", "campaign worker tasks (0 = thread count)")
+    .flag(
+        "schedule",
+        "independent",
+        "throw schedule: independent (paper) | nested (monotone per-seed kills)",
+    )
     .flag("csv", "", "write per-sample rows to this CSV file")
     .switch("json", "print rows as JSON lines")
+    .switch(
+        "no-fork",
+        "disable baseline-forked sampling (recompute every sample from scratch)",
+    )
     .parse_skip(1);
     let t = build_topo(&p);
     fn die(msg: String) -> ! {
@@ -210,19 +220,25 @@ fn cmd_campaign() {
         patterns,
         sp_block: p.get_usize("sp-block"),
         workers: p.get_usize("workers"),
+        schedule: campaign::Schedule::parse(p.get("schedule")).unwrap_or_else(|e| die(e)),
+        fork: !p.get_bool("no-fork"),
     };
     println!(
-        "campaign: {} engines × {} levels × {} throws × {} patterns = {} rows on {} nodes",
+        "campaign: {} engines × {} levels × {} throws × {} patterns = {} rows on {} nodes \
+         ({} schedule, fork {})",
         cfg.engines.len(),
         cfg.levels.len(),
         cfg.seeds.len(),
         cfg.patterns.len(),
         cfg.rows(),
-        t.nodes.len()
+        t.nodes.len(),
+        cfg.schedule.name(),
+        if cfg.fork { "on" } else { "off" }
     );
     let t0 = Instant::now();
-    let rows = campaign::run(&t, &cfg);
+    let (rows, stats) = campaign::run_with_stats(&t, &cfg);
     let dt = t0.elapsed().as_secs_f64();
+    println!("fork stats: {}", stats.render());
     if p.get_bool("json") {
         for r in &rows {
             println!("{}", r.to_json());

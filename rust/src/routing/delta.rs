@@ -161,6 +161,51 @@ impl PrevProducts {
     pub fn invalidate(&mut self) {
         self.valid = false;
     }
+
+    /// Whether a capture is live (the diff has a baseline).
+    pub fn is_valid(&self) -> bool {
+        self.valid
+    }
+
+    /// Copy `other`'s captured products into this buffer set, reusing
+    /// every allocation (`Vec::clone_from`) — the snapshot-restore hot
+    /// path (`RerouteWorkspace::restore_from`) runs this once per
+    /// campaign sample, so it must be allocation-free once capacities
+    /// have converged.
+    pub fn assign_from(&mut self, other: &PrevProducts) {
+        // Exhaustive destructuring on purpose: adding a `PrevProducts`
+        // field without deciding its restore semantics fails to compile
+        // here instead of silently leaking the previous sample's state
+        // into a restored baseline.
+        let PrevProducts {
+            valid,
+            had_isolated_leaf,
+            num_leaves,
+            leaves,
+            leaf_node_offsets,
+            leaf_nodes,
+            group_offsets,
+            group_remote,
+            port_offsets,
+            ports,
+            cost,
+            divider,
+            nids,
+        } = other;
+        self.valid = *valid;
+        self.had_isolated_leaf = *had_isolated_leaf;
+        self.num_leaves = *num_leaves;
+        self.leaves.clone_from(leaves);
+        self.leaf_node_offsets.clone_from(leaf_node_offsets);
+        self.leaf_nodes.clone_from(leaf_nodes);
+        self.group_offsets.clone_from(group_offsets);
+        self.group_remote.clone_from(group_remote);
+        self.port_offsets.clone_from(port_offsets);
+        self.ports.clone_from(ports);
+        self.cost.clone_from(cost);
+        self.divider.clone_from(divider);
+        self.nids.clone_from(nids);
+    }
 }
 
 /// Pre-fill eligibility: reasons the dirty set cannot be bounded at

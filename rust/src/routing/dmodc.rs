@@ -495,6 +495,7 @@ impl RoutingEngine for Engine {
             deterministic_history_free: true,
             reuses_costs_for_validity: true,
             incremental: true,
+            forkable: true,
         }
     }
 
@@ -517,6 +518,15 @@ impl RoutingEngine for Engine {
 
     fn alternatives_into(&self, topo: &Topology, s: u32, d: NodeId, out: &mut Vec<u16>) {
         self.ws.alternatives_into(topo, s, d, out);
+    }
+
+    fn fork_snapshot(&self, lft: &Lft) -> Option<super::snapshot::Snapshot> {
+        Some(self.ws.snapshot(lft))
+    }
+
+    fn restore_snapshot(&mut self, snap: &super::snapshot::Snapshot, out: &mut Lft) -> bool {
+        self.ws.restore_from(snap, out);
+        true
     }
 }
 
@@ -550,7 +560,7 @@ mod tests {
         let expect: Vec<u64> = (0..t.nodes.len() as u64).collect();
         assert_eq!(sorted, expect);
         // Nodes of one leaf get contiguous NIDs in port order.
-        for &l in &t.leaf_switches() {
+        for &l in t.leaf_switches() {
             let ns = t.nodes_of_leaf(l);
             let base = r.nids[ns[0] as usize];
             for (k, &n) in ns.iter().enumerate() {

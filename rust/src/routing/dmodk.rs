@@ -66,6 +66,7 @@ impl RoutingEngine for Engine {
             deterministic_history_free: true,
             reuses_costs_for_validity: true,
             incremental: false,
+            forkable: false,
         }
     }
 

@@ -26,6 +26,7 @@
 //! [`routing`](super) remain one-shot convenience wrappers.
 
 use super::delta::{DeltaOutcome, FallbackReason};
+use super::snapshot::Snapshot;
 use super::{validity, Lft};
 use crate::topology::{NodeId, Topology};
 
@@ -50,6 +51,13 @@ pub struct Capabilities {
     /// full reroute). Engines without it silently degrade to a full
     /// reroute there.
     pub incremental: bool,
+    /// [`RoutingEngine::fork_snapshot`] returns a baseline
+    /// [`Snapshot`] that [`RoutingEngine::restore_snapshot`] can re-arm
+    /// any instance of this engine with, so independent samples delta
+    /// from a shared baseline (the campaign fork path). Engines without
+    /// it return `None` there and the campaign routes those samples in
+    /// full.
+    pub forkable: bool,
 }
 
 /// A stateful routing engine over (possibly degraded) fat-tree
@@ -105,6 +113,26 @@ pub trait RoutingEngine: Send {
         out.clear();
     }
 
+    /// Freeze the most recent reroute (whose output `lft` must be) as a
+    /// shared baseline [`Snapshot`] for campaign forking — see
+    /// `routing::snapshot`. Engines without [`Capabilities::forkable`]
+    /// return `None`.
+    fn fork_snapshot(&self, lft: &Lft) -> Option<Snapshot> {
+        let _ = lft;
+        None
+    }
+
+    /// Re-arm this engine so its next
+    /// [`RoutingEngine::reroute_delta_into`] diffs against `snap`'s
+    /// baseline, rewinding `out` to the baseline tables in the same
+    /// step (pass the same buffer to that delta call). Returns `false`
+    /// (and does nothing) on engines without
+    /// [`Capabilities::forkable`].
+    fn restore_snapshot(&mut self, snap: &Snapshot, out: &mut Lft) -> bool {
+        let _ = (snap, out);
+        false
+    }
+
     /// One-shot convenience: route `topo` into a fresh table.
     fn route_once(&mut self, topo: &Topology) -> Lft {
         let mut out = Lft::default();
@@ -144,6 +172,26 @@ mod tests {
         assert_eq!(touched.len(), t.switches.len());
         let want = registry::create(Algo::Updn).route_once(&t);
         assert_eq!(out.raw(), want.raw());
+    }
+
+    #[test]
+    fn fork_capability_matches_trait_behaviour() {
+        let t = PgftParams::fig1().build();
+        for algo in Algo::ALL {
+            let mut eng = registry::create(algo);
+            let lft = eng.route_once(&t);
+            let forkable = eng.capabilities().forkable;
+            assert_eq!(
+                eng.fork_snapshot(&lft).is_some(),
+                forkable,
+                "{algo}: fork_snapshot must match the advertised capability"
+            );
+            if let Some(snap) = eng.fork_snapshot(&lft) {
+                let mut out = Lft::default();
+                assert!(eng.restore_snapshot(&snap, &mut out), "{algo}");
+                assert_eq!(out.raw(), lft.raw(), "{algo}: restore rewinds the buffer");
+            }
+        }
     }
 
     #[test]

@@ -30,6 +30,7 @@ pub mod engine;
 pub mod ftree;
 pub mod minhop;
 pub mod registry;
+pub mod snapshot;
 pub mod sssp;
 pub mod updn;
 pub mod validity;
@@ -37,6 +38,7 @@ pub mod workspace;
 
 pub use delta::{DeltaConfig, DeltaOutcome, DeltaStats, FallbackReason};
 pub use engine::{Capabilities, RoutingEngine};
+pub use snapshot::Snapshot;
 pub use workspace::RerouteWorkspace;
 
 use crate::topology::{NodeId, PortTarget, SwitchId, Topology};
@@ -67,6 +69,16 @@ impl Lft {
         self.num_nodes = num_nodes;
         self.ports.clear();
         self.ports.resize(num_switches * num_nodes, NO_ROUTE);
+    }
+
+    /// Become a byte-for-byte copy of `other`, reusing this table's
+    /// buffer — no allocation once capacity has converged (the
+    /// snapshot-restore hot path runs this once per campaign sample;
+    /// the derived `Clone` would reallocate).
+    pub fn copy_from(&mut self, other: &Lft) {
+        self.num_nodes = other.num_nodes;
+        self.ports.clear();
+        self.ports.extend_from_slice(&other.ports);
     }
 
     #[inline]
@@ -129,14 +141,26 @@ impl Lft {
     /// When the shapes differ every row is returned (those consumers
     /// rebuild from scratch there anyway).
     pub fn changed_rows(&self, prev: &Lft) -> Vec<u32> {
+        let mut out = Vec::new();
+        self.changed_rows_into(prev, &mut out);
+        out
+    }
+
+    /// [`Lft::changed_rows`] into a caller-reused buffer (the campaign
+    /// sample loop derives tensor dirty sets per sample and must not
+    /// allocate in steady state).
+    pub fn changed_rows_into(&self, prev: &Lft, out: &mut Vec<u32>) {
+        out.clear();
         if prev.num_switches() != self.num_switches() || prev.num_nodes != self.num_nodes {
-            return (0..self.num_switches() as u32).collect();
+            out.extend(0..self.num_switches() as u32);
+            return;
         }
         let n = self.num_nodes.max(1);
-        (0..self.num_switches())
-            .filter(|&s| prev.ports[s * n..(s + 1) * n] != self.ports[s * n..(s + 1) * n])
-            .map(|s| s as u32)
-            .collect()
+        out.extend(
+            (0..self.num_switches())
+                .filter(|&s| prev.ports[s * n..(s + 1) * n] != self.ports[s * n..(s + 1) * n])
+                .map(|s| s as u32),
+        );
     }
 }
 

@@ -1,0 +1,173 @@
+//! Baseline snapshots: freeze a completed reroute's pipeline products so
+//! independent samples can *fork* from it instead of recomputing from
+//! scratch.
+//!
+//! The degradation-sweep campaign (paper §4, Figs. 4–5) draws hundreds of
+//! independent throws per degradation level, and in the paper's headline
+//! regime — "up to 1 % of random degradation" — every throw differs from
+//! the intact fabric by a handful of cables. The sequential delta path
+//! (`routing::delta`) cannot exploit that: it diffs against the *previous
+//! reroute*, and campaign samples are not sequenced events but independent
+//! forks of one shared baseline. A [`Snapshot`] closes that gap:
+//!
+//! * [`RerouteWorkspace::snapshot`](super::RerouteWorkspace::snapshot)
+//!   captures the products of the workspace's most recent reroute — the
+//!   CSR `Prep` structure, Algorithm-1 costs/dividers, Algorithm-2 NIDs
+//!   (as a pre-captured [`PrevProducts`] diff baseline) — together with
+//!   the LFT those products produced, behind one immutable `Arc`. Cloning
+//!   a `Snapshot` is a reference-count bump: campaign workers share one
+//!   baseline per engine instead of each holding a copy.
+//! * [`RerouteWorkspace::restore_from`](super::RerouteWorkspace::restore_from)
+//!   re-arms a workspace so its **next** `reroute_delta_into` diffs
+//!   against the snapshot instead of the previous sample. The restore is
+//!   copy-on-write in spirit: the shared buffers are copied into the
+//!   worker's reused scratch (`Vec::clone_from`, allocation-free once
+//!   capacities converge) only at the moment the worker needs a private
+//!   mutable view; the `Arc` itself is never mutated.
+//! * [`Snapshot::restore_lft_into`] rewinds a caller's table buffer to the
+//!   baseline tables, which is the delta fill's required starting state.
+//!
+//! The contract is the same bit-identity promise the delta path makes
+//! (`tests/campaign_fork.rs` fuzzes it): a forked sample — restore, then
+//! delta-reroute the degraded topology — produces tables byte-for-byte
+//! equal to an independent from-scratch reroute, for every sample, with
+//! the usual fallbacks (shape change, isolated leaf, NID change,
+//! threshold) degrading to a full row fill over the already-rebuilt
+//! products. [`PathTensor`](crate::analysis::paths::PathTensor) offers the
+//! matching analysis-side snapshot so the risk tensor forks too.
+
+use super::delta::PrevProducts;
+use super::Lft;
+use std::sync::Arc;
+
+/// An immutable, cheaply clonable baseline: the pipeline products and
+/// tables of one completed reroute (see the module docs). Created by
+/// [`RerouteWorkspace::snapshot`](super::RerouteWorkspace::snapshot) or
+/// through [`RoutingEngine::fork_snapshot`](super::RoutingEngine::fork_snapshot);
+/// consumed by `restore_from`/[`Snapshot::restore_lft_into`].
+pub struct Snapshot {
+    data: Arc<SnapshotData>,
+}
+
+struct SnapshotData {
+    /// The captured diff baseline (Prep structure, costs, dividers, NIDs).
+    products: PrevProducts,
+    /// The tables those products produced.
+    lft: Lft,
+}
+
+impl Snapshot {
+    /// Freeze `(products, lft)` as a shared baseline. `products` must be a
+    /// live capture of the pipeline state that produced `lft` — the
+    /// workspace entry point guarantees this.
+    pub(crate) fn from_parts(products: PrevProducts, lft: Lft) -> Self {
+        debug_assert!(products.is_valid(), "snapshot of an invalid capture");
+        Self {
+            data: Arc::new(SnapshotData { products, lft }),
+        }
+    }
+
+    /// The captured diff baseline.
+    pub(crate) fn products(&self) -> &PrevProducts {
+        &self.data.products
+    }
+
+    /// Switch rows of the baseline tables.
+    pub fn num_switches(&self) -> usize {
+        self.data.lft.num_switches()
+    }
+
+    /// Destination columns of the baseline tables.
+    pub fn num_nodes(&self) -> usize {
+        self.data.lft.num_nodes()
+    }
+
+    /// The baseline tables (read-only; shared across clones).
+    pub fn lft(&self) -> &Lft {
+        &self.data.lft
+    }
+
+    /// Rewind `out` to the baseline tables, reusing its buffer (no
+    /// allocation once capacity has converged). This is the required
+    /// starting state for a forked `reroute_delta_into`: the delta fill
+    /// patches dirty rows *on top of* the baseline.
+    pub fn restore_lft_into(&self, out: &mut Lft) {
+        out.copy_from(&self.data.lft);
+    }
+}
+
+impl Clone for Snapshot {
+    fn clone(&self) -> Self {
+        Self {
+            data: Arc::clone(&self.data),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::routing::dmodc::{route_reference, Options};
+    use crate::routing::{Lft, RerouteWorkspace};
+    use crate::topology::pgft::PgftParams;
+    use crate::topology::{degrade, Topology};
+    use std::collections::HashSet;
+
+    #[test]
+    fn snapshot_is_shared_and_restores_the_exact_tables() {
+        let t = PgftParams::fig1().build();
+        let mut ws = RerouteWorkspace::default();
+        let mut lft = Lft::default();
+        ws.reroute_into(&t, &mut lft);
+        let snap = ws.snapshot(&lft);
+        let clone = snap.clone();
+        assert_eq!(snap.num_switches(), t.switches.len());
+        assert_eq!(snap.num_nodes(), t.nodes.len());
+        let mut out = Lft::default();
+        clone.restore_lft_into(&mut out);
+        assert_eq!(out.raw(), lft.raw());
+        assert_eq!(snap.lft().raw(), lft.raw());
+    }
+
+    #[test]
+    fn restore_into_a_foreign_workspace_forks_correctly() {
+        // A snapshot is self-contained: a workspace that never routed the
+        // baseline can restore it and delta straight to a degraded sample.
+        let t = PgftParams::fig1().build();
+        let mut ws = RerouteWorkspace::default();
+        let mut lft = Lft::default();
+        ws.reroute_into(&t, &mut lft);
+        let snap = ws.snapshot(&lft);
+
+        let mut other = RerouteWorkspace::default();
+        let mut out = Lft::default();
+        let mut touched = Vec::new();
+        let dead: HashSet<(u32, u16)> = [degrade::cables(&t)[0]].into_iter().collect();
+        let d = degrade::apply(&t, &HashSet::new(), &dead);
+        other.restore_from(&snap, &mut out);
+        let outcome = other.reroute_delta_into(&d, &mut out, &mut touched);
+        assert!(outcome.is_delta(), "{outcome:?}");
+        let want = route_reference(&d, &Options::default());
+        assert_eq!(out.raw(), want.raw());
+        assert!(other.validate(&d, &out).is_ok());
+    }
+
+    #[test]
+    fn snapshot_survives_the_workspace_moving_on() {
+        // The Arc pins the baseline even while the source workspace keeps
+        // rerouting other topologies — campaign workers rely on this.
+        let t = PgftParams::small().build();
+        let mut ws = RerouteWorkspace::default();
+        let mut lft = Lft::default();
+        ws.reroute_into(&t, &mut lft);
+        let snap = ws.snapshot(&lft);
+        let baseline = lft.raw().to_vec();
+
+        let mut topo = Topology::default();
+        let dead_sw: HashSet<u32> =
+            [degrade::removable_switches(&t)[0]].into_iter().collect();
+        ws.materialize(&t, &dead_sw, &HashSet::new(), &mut topo);
+        ws.reroute_into(&topo, &mut lft);
+        assert_ne!(lft.raw(), &baseline[..], "the workspace really moved on");
+        assert_eq!(snap.lft().raw(), &baseline[..], "the snapshot did not");
+    }
+}

@@ -119,7 +119,7 @@ impl RouteStats {
 pub fn stats(topo: &Topology, lft: &Lft) -> RouteStats {
     let mut st = RouteStats::default();
     let max_hops = 4 * topo.num_levels as usize + 4;
-    for l in topo.leaf_switches() {
+    for &l in topo.leaf_switches() {
         for d in 0..topo.nodes.len() as u32 {
             if topo.nodes[d as usize].leaf == l {
                 continue;
@@ -175,7 +175,7 @@ pub fn channel_dependency_acyclic(topo: &Topology, lft: &Lft) -> bool {
     let np = topo.num_ports();
     let mut edges: Vec<HashSet<u32>> = vec![HashSet::new(); np];
     let max_hops = 4 * topo.num_levels as usize + 4;
-    for l in topo.leaf_switches() {
+    for &l in topo.leaf_switches() {
         for d in 0..topo.nodes.len() as u32 {
             let mut sw = l;
             let mut prev: Option<u32> = None;

@@ -25,6 +25,13 @@
 //! path is bit-identical to a full reroute after every event
 //! (`tests/delta_diff.rs`).
 //!
+//! On top of the sequential delta path, [`RerouteWorkspace::snapshot`] /
+//! [`RerouteWorkspace::restore_from`] support *baseline forking* (see
+//! `routing::snapshot`): a frozen snapshot of one reroute re-arms any
+//! workspace so the next delta call diffs against that shared baseline
+//! instead of the previous sample — the degradation-campaign hot path,
+//! where every throw is an independent fork of the intact fabric.
+//!
 //! [`dmodc::Engine`] wraps this workspace behind the
 //! [`RoutingEngine`](super::RoutingEngine) trait; the baseline engines
 //! own analogous per-algorithm workspaces (see `routing/engine.rs`).
@@ -32,6 +39,7 @@
 use super::common::{self, Costs, Prep, PrepScratch};
 use super::delta::{self, DeltaConfig, DeltaOutcome, DeltaStats, FallbackReason};
 use super::dmodc::{self, NidOrder, NidScratch, Options};
+use super::snapshot::Snapshot;
 use super::{validity, Lft};
 use crate::topology::degrade::{self, DegradeScratch};
 use crate::topology::{NodeId, SwitchId, Topology};
@@ -58,6 +66,12 @@ pub struct RerouteWorkspace {
     /// A reroute has completed, so `prep`/`costs`/`nids` describe the
     /// topology of the caller's current tables.
     routed: bool,
+    /// `prev` was restored from a [`Snapshot`] whose tables have this
+    /// `(switches, nodes)` shape; the next `reroute_delta_into` must
+    /// diff against it instead of re-capturing from the workspace
+    /// products. Consumed (and checked against the caller's buffer) by
+    /// the next delta call; cleared by any full reroute.
+    armed: Option<(usize, usize)>,
 }
 
 impl RerouteWorkspace {
@@ -74,6 +88,7 @@ impl RerouteWorkspace {
             prev: delta::PrevProducts::default(),
             dirty: delta::DirtySet::default(),
             routed: false,
+            armed: None,
         }
     }
 
@@ -127,6 +142,43 @@ impl RerouteWorkspace {
         out.reset(topo.switches.len(), topo.nodes.len());
         dmodc::fill_rows(topo, &self.prep, &self.costs, &self.nids, out);
         self.routed = true;
+        self.armed = None;
+    }
+
+    /// Freeze the products of the most recent reroute together with the
+    /// tables it produced as a shared, immutable [`Snapshot`] (see
+    /// `routing::snapshot`). `lft` must be this workspace's most recent
+    /// output (any entry point) — asserted by shape.
+    pub fn snapshot(&self, lft: &Lft) -> Snapshot {
+        assert!(self.routed, "snapshot requires a completed reroute");
+        assert!(
+            lft.num_switches() + 1 == self.prep.group_offsets.len()
+                && lft.num_nodes() == self.prep.leaf_nodes.len(),
+            "snapshot LFT must be this workspace's most recent output"
+        );
+        let mut products = delta::PrevProducts::default();
+        products.capture(&self.prep, &self.costs, &self.nids);
+        Snapshot::from_parts(products, lft.clone())
+    }
+
+    /// Re-arm this workspace so the **next** [`reroute_delta_into`]
+    /// diffs against `snap`'s baseline instead of this workspace's
+    /// previous reroute, *and* rewind `out` to the baseline tables the
+    /// delta fill will patch — the campaign fork path (degrade →
+    /// restore → delta) in one unviolatable step. Pass the same buffer
+    /// to the next delta call; a different-shaped buffer there degrades
+    /// to a full fill (`FallbackReason::NoHistory`) rather than
+    /// trusting a broken contract.
+    ///
+    /// The restore copies the shared buffers into this workspace's
+    /// reused scratch (`Vec::clone_from`) — zero heap allocation once
+    /// capacities have converged, `Arc` contents never mutated.
+    ///
+    /// [`reroute_delta_into`]: RerouteWorkspace::reroute_delta_into
+    pub fn restore_from(&mut self, snap: &Snapshot, out: &mut Lft) {
+        snap.restore_lft_into(out);
+        self.prev.assign_from(snap.products());
+        self.armed = Some((snap.num_switches(), snap.num_nodes()));
     }
 
     /// Incremental reroute: refill only the LFT rows the transition from
@@ -155,15 +207,27 @@ impl RerouteWorkspace {
         touched: &mut Vec<u32>,
     ) -> DeltaOutcome {
         touched.clear();
-        // Capture the previous products before the rebuild overwrites
-        // them — they describe the topology `out` was routed for.
-        if self.routed
-            && out.num_switches() + 1 == self.prep.group_offsets.len()
-            && out.num_nodes() == self.prep.leaf_nodes.len()
-        {
-            self.prev.capture(&self.prep, &self.costs, &self.nids);
-        } else {
-            self.prev.invalidate();
+        match self.armed.take() {
+            // Restored from a snapshot: `prev` already holds the
+            // baseline `out` was rewound to — do not recapture it.
+            Some((ns, nn)) if out.num_switches() == ns && out.num_nodes() == nn => {}
+            // Armed, but the caller's buffer does not match the
+            // baseline shape: the restore contract was violated, so the
+            // history is unusable (full fill below).
+            Some(_) => self.prev.invalidate(),
+            // Sequential path: capture the previous products before the
+            // rebuild overwrites them — they describe the topology
+            // `out` was routed for.
+            None => {
+                if self.routed
+                    && out.num_switches() + 1 == self.prep.group_offsets.len()
+                    && out.num_nodes() == self.prep.leaf_nodes.len()
+                {
+                    self.prev.capture(&self.prep, &self.costs, &self.nids);
+                } else {
+                    self.prev.invalidate();
+                }
+            }
         }
         self.rebuild_products(topo);
 
@@ -319,6 +383,79 @@ mod tests {
         assert_eq!(touched.len(), d.switches.len());
         let want = route_reference(&d, &Options::default());
         assert_eq!(out.raw(), want.raw());
+    }
+
+    #[test]
+    fn forked_samples_from_one_snapshot_match_fresh_reroutes() {
+        // The campaign loop: one baseline snapshot, many independent
+        // degraded samples, each restore → delta. Every sample must be
+        // bit-identical to a from-scratch reroute, regardless of what
+        // the previous sample did to the workspace.
+        let t = PgftParams::small().build();
+        let cables = crate::topology::degrade::cables(&t);
+        let mut ws = RerouteWorkspace::default();
+        let mut lft = Lft::default();
+        ws.reroute_into(&t, &mut lft);
+        let snap = ws.snapshot(&lft);
+        let mut touched = Vec::new();
+        let mut delta_samples = 0;
+        for round in 0..6 {
+            let dead: HashSet<(SwitchId, u16)> =
+                [cables[round * 5 % cables.len()], cables[round * 11 % cables.len()]]
+                    .into_iter()
+                    .collect();
+            let d = crate::topology::degrade::apply(&t, &HashSet::new(), &dead);
+            ws.restore_from(&snap, &mut lft);
+            let outcome = ws.reroute_delta_into(&d, &mut lft, &mut touched);
+            if outcome.is_delta() {
+                delta_samples += 1;
+            }
+            let want = route_reference(&d, &Options::default());
+            assert_eq!(lft.raw(), want.raw(), "round {round} ({outcome:?})");
+        }
+        assert!(delta_samples > 0, "the fork path never took the delta tier");
+    }
+
+    #[test]
+    fn armed_restore_with_mismatched_buffer_falls_back_correctly() {
+        // Violating the restore contract (handing the delta call a
+        // different buffer than the restored one) must not produce
+        // wrong tables — it degrades to NoHistory + full fill.
+        let t = PgftParams::fig1().build();
+        let mut ws = RerouteWorkspace::default();
+        let mut lft = Lft::default();
+        ws.reroute_into(&t, &mut lft);
+        let snap = ws.snapshot(&lft);
+        ws.restore_from(&snap, &mut lft);
+        let mut wrong = Lft::new(1, 1); // not the restored buffer
+        let mut touched = Vec::new();
+        let outcome = ws.reroute_delta_into(&t, &mut wrong, &mut touched);
+        assert_eq!(outcome, DeltaOutcome::Full(FallbackReason::NoHistory));
+        let want = route_reference(&t, &Options::default());
+        assert_eq!(wrong.raw(), want.raw());
+    }
+
+    #[test]
+    fn full_reroute_disarms_a_pending_restore() {
+        // restore_from … reroute_into … reroute_delta_into must diff
+        // against the *reroute_into* output, not the stale snapshot.
+        let t = PgftParams::fig1().build();
+        let cable = crate::topology::degrade::cables(&t)[0];
+        let dead: HashSet<(SwitchId, u16)> = [cable].into_iter().collect();
+        let d = crate::topology::degrade::apply(&t, &HashSet::new(), &dead);
+        let mut ws = RerouteWorkspace::default();
+        let mut lft = Lft::default();
+        ws.reroute_into(&t, &mut lft);
+        let snap = ws.snapshot(&lft);
+        ws.restore_from(&snap, &mut lft);
+        // A full reroute of the *degraded* topology intervenes.
+        ws.reroute_into(&d, &mut lft);
+        // The next delta (back to intact) must be correct — its baseline
+        // is the degraded reroute, not the snapshot.
+        let mut touched = Vec::new();
+        let outcome = ws.reroute_delta_into(&t, &mut lft, &mut touched);
+        let want = route_reference(&t, &Options::default());
+        assert_eq!(lft.raw(), want.raw(), "{outcome:?}");
     }
 
     #[test]

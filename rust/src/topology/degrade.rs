@@ -190,7 +190,7 @@ pub fn apply_into(
             leaf_port: port,
         });
     }
-    // Levels and port offsets, as in `Builder::finish`.
+    // Levels, port offsets and derived caches, as in `Builder::finish`.
     out.num_levels = out.switches.iter().map(|s| s.level + 1).max().unwrap_or(0);
     out.port_offsets.clear();
     let mut off = 0u32;
@@ -199,6 +199,7 @@ pub fn apply_into(
         off += s.ports.len() as u32;
     }
     out.port_offsets.push(off);
+    out.rebuild_derived_caches();
 }
 
 /// All cables (switch-switch links), canonical endpoints.
@@ -372,7 +373,7 @@ mod tests {
     #[test]
     fn islet_of_all_leaves_is_all_nonleaf() {
         let t = PgftParams::fig1().build();
-        let leaves: HashSet<SwitchId> = t.leaf_switches().into_iter().collect();
+        let leaves: HashSet<SwitchId> = t.leaf_switches().iter().copied().collect();
         let islet = islet_switches(&t, &leaves);
         let nonleaf = removable_switches(&t);
         assert_eq!(islet.len(), nonleaf.len());
@@ -424,6 +425,11 @@ mod tests {
                     (a.uuid, a.leaf, a.leaf_port),
                     (b.uuid, b.leaf, b.leaf_port)
                 );
+            }
+            // Derived caches must match the checked construction too.
+            assert_eq!(out.leaf_switches(), want.leaf_switches(), "round {round}");
+            for s in 0..out.switches.len() as SwitchId {
+                assert_eq!(out.nodes_of_leaf(s), want.nodes_of_leaf(s));
             }
             assert!(out.check_invariants().is_ok(), "round {round}");
         }

@@ -65,6 +65,16 @@ pub struct Topology {
     /// Prefix sums of per-switch port counts: global directed-port id of
     /// `(sw, port)` is `port_offsets[sw] + port`. Built by `finish()`.
     pub port_offsets: Vec<u32>,
+    /// Level-0 switches, ascending id (cache behind
+    /// [`Topology::leaf_switches`]). Built by `finish()` /
+    /// `degrade::apply_into`.
+    leaves: Vec<SwitchId>,
+    /// Prefix sums into `leaf_nodes`: nodes attached to switch `s` are
+    /// `leaf_nodes[switch_node_offsets[s]..switch_node_offsets[s + 1]]`.
+    switch_node_offsets: Vec<u32>,
+    /// Attached nodes of every switch, port-rank order (cache behind
+    /// [`Topology::nodes_of_leaf`]).
+    leaf_nodes: Vec<NodeId>,
 }
 
 impl Topology {
@@ -96,25 +106,44 @@ impl Topology {
     }
 
     /// Leaf switches (level 0 with attached nodes), ascending id.
-    pub fn leaf_switches(&self) -> Vec<SwitchId> {
-        (0..self.switches.len() as SwitchId)
-            .filter(|&s| self.switches[s as usize].level == 0)
-            .collect()
+    /// Cached at construction — O(1), no allocation (the campaign and
+    /// validity loops call this per sample).
+    pub fn leaf_switches(&self) -> &[SwitchId] {
+        &self.leaves
     }
 
-    /// Nodes attached to `leaf` in port-rank order (ascending port index).
-    pub fn nodes_of_leaf(&self, leaf: SwitchId) -> Vec<NodeId> {
-        let mut out: Vec<(u16, NodeId)> = self.switches[leaf as usize]
-            .ports
-            .iter()
-            .enumerate()
-            .filter_map(|(i, p)| match p {
-                PortTarget::Node { node } => Some((i as u16, *node)),
-                _ => None,
-            })
-            .collect();
-        out.sort_unstable();
-        out.into_iter().map(|(_, n)| n).collect()
+    /// Nodes attached to `leaf` in port-rank order (ascending port
+    /// index). Cached at construction — O(1), no allocation.
+    pub fn nodes_of_leaf(&self, leaf: SwitchId) -> &[NodeId] {
+        let (lo, hi) = (
+            self.switch_node_offsets[leaf as usize] as usize,
+            self.switch_node_offsets[leaf as usize + 1] as usize,
+        );
+        &self.leaf_nodes[lo..hi]
+    }
+
+    /// Rebuild the derived caches (`leaves`, per-switch node CSR) from
+    /// `switches`. Every constructor of a finished topology
+    /// (`Builder::finish`, `degrade::apply_into`) must call this after
+    /// the port lists are final; the buffers are reused, so repeated
+    /// in-place rebuilds allocate nothing once capacities converge.
+    pub(crate) fn rebuild_derived_caches(&mut self) {
+        let switches = &self.switches;
+        self.leaves.clear();
+        self.leaves.extend(
+            (0..switches.len() as SwitchId).filter(|&s| switches[s as usize].level == 0),
+        );
+        self.switch_node_offsets.clear();
+        self.leaf_nodes.clear();
+        for sw in &self.switches {
+            self.switch_node_offsets.push(self.leaf_nodes.len() as u32);
+            for p in &sw.ports {
+                if let PortTarget::Node { node } = p {
+                    self.leaf_nodes.push(*node);
+                }
+            }
+        }
+        self.switch_node_offsets.push(self.leaf_nodes.len() as u32);
     }
 
     /// Count of switch-switch cables (each counted once).
@@ -315,7 +344,7 @@ impl Builder {
                 .unwrap_or(0),
             switches: self.switches,
             nodes: self.nodes,
-            port_offsets: Vec::new(),
+            ..Topology::default()
         };
         let mut off = 0u32;
         t.port_offsets = Vec::with_capacity(t.switches.len() + 1);
@@ -324,6 +353,7 @@ impl Builder {
             off += s.ports.len() as u32;
         }
         t.port_offsets.push(off);
+        t.rebuild_derived_caches();
         if let Err(e) = t.check_invariants() {
             panic!("topology invariant violation: {e}");
         }
@@ -430,6 +460,75 @@ mod tests {
         let t = tiny();
         assert_eq!(t.nodes_of_leaf(0), vec![0, 2]);
         assert_eq!(t.nodes_of_leaf(1), vec![1, 3]);
+    }
+
+    #[test]
+    fn leaf_caches_match_recomputation() {
+        let t = tiny();
+        let leaves: Vec<SwitchId> = (0..t.switches.len() as SwitchId)
+            .filter(|&s| t.switches[s as usize].level == 0)
+            .collect();
+        assert_eq!(t.leaf_switches(), &leaves[..]);
+        for s in 0..t.switches.len() as SwitchId {
+            let manual: Vec<NodeId> = t.switches[s as usize]
+                .ports
+                .iter()
+                .filter_map(|p| match p {
+                    PortTarget::Node { node } => Some(*node),
+                    _ => None,
+                })
+                .collect();
+            assert_eq!(t.nodes_of_leaf(s), &manual[..], "switch {s}");
+        }
+    }
+
+    #[test]
+    fn port_of_id_skips_zero_port_switches_sharing_an_offset() {
+        // Regression for the binary-search skip loop: a switch with zero
+        // ports shares its prefix-sum offset with its successor, so
+        // `binary_search` may land on the empty switch; `port_of_id`
+        // must step past every such duplicate — including runs of them —
+        // to the switch that actually owns the port id. Zero-port
+        // switches are real states: degradation keeps a switch alive
+        // after its last cable dies.
+        let mut b = Builder::new();
+        let l0 = b.add_switch(fab_uuid(3, 0), 0);
+        let m0 = b.add_switch(fab_uuid(4, 0), 1); // will end up portless
+        let m1 = b.add_switch(fab_uuid(4, 1), 1); // will end up portless
+        let m2 = b.add_switch(fab_uuid(4, 2), 1);
+        let l1 = b.add_switch(fab_uuid(3, 1), 0);
+        b.connect(l0, m2, 1);
+        b.connect(l1, m2, 1);
+        b.connect(l0, m0, 1);
+        b.connect(l1, m1, 1);
+        b.attach_node(l0, fab_uuid(9, 0));
+        b.attach_node(l1, fab_uuid(9, 1));
+        let t = b.finish();
+        // Kill the only cables of m0 and m1: two consecutive zero-port
+        // switches whose offsets collapse onto m2's first port id.
+        let dead: std::collections::HashSet<(SwitchId, u16)> = degrade::cables(&t)
+            .into_iter()
+            .filter(|&(s, p)| {
+                matches!(
+                    t.switches[s as usize].ports[p as usize],
+                    PortTarget::Switch { sw, .. } if sw == m0 || sw == m1
+                ) || s == m0
+                    || s == m1
+            })
+            .collect();
+        let d = degrade::apply(&t, &std::collections::HashSet::new(), &dead);
+        assert!(
+            d.switches.iter().filter(|s| s.ports.is_empty()).count() >= 2,
+            "scenario must produce at least two zero-port switches"
+        );
+        // Offsets must contain duplicates (the edge under test).
+        assert!(d.port_offsets.windows(2).any(|w| w[0] == w[1]));
+        for sw in 0..d.switches.len() as SwitchId {
+            for p in 0..d.switches[sw as usize].ports.len() as u16 {
+                let pid = d.port_id(sw, p);
+                assert_eq!(d.port_of_id(pid), (sw, p), "sw {sw} port {p}");
+            }
+        }
     }
 
     #[test]

@@ -304,7 +304,7 @@ mod tests {
             assert_eq!(t.switches[n.leaf as usize].level, 0);
         }
         // All nodes distributed evenly: m_1 per leaf.
-        for &leaf in &t.leaf_switches() {
+        for &leaf in t.leaf_switches() {
             assert_eq!(t.nodes_of_leaf(leaf).len(), 4);
         }
     }

@@ -167,7 +167,7 @@ mod tests {
     fn no_empty_switches() {
         let t = build(700, 36);
         // Every leaf has at least one node.
-        for &l in &t.leaf_switches() {
+        for &l in t.leaf_switches() {
             assert!(!t.nodes_of_leaf(l).is_empty());
         }
     }

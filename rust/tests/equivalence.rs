@@ -525,6 +525,88 @@ fn steady_state_campaign_sample_loop_is_allocation_free() {
 }
 
 #[test]
+fn steady_state_forked_sample_loop_is_allocation_free() {
+    // The campaign fork acceptance contract: one steady-state forked
+    // sample — restore tables + workspace from the shared baseline
+    // snapshot, materialize the throw, delta-reroute, restore the
+    // tensor snapshot, incremental tensor update off the touched rows,
+    // evaluate all three patterns — performs zero heap allocation once
+    // warm. The snapshot restores are `clone_from`-based, so converged
+    // capacities make them pure copies.
+    use dmodc::analysis::{patterns::Pattern, RiskEvaluator};
+    use dmodc::topology::degrade::DegradeScratch;
+    let _g = lock();
+    par::set_threads(Some(1));
+    let base = PgftParams::small().build();
+    let cables = dmodc::topology::degrade::cables(&base);
+    // The shared intact baseline (built once, outside the loop).
+    let mut ws = RerouteWorkspace::default();
+    let mut lft = Lft::default();
+    ws.reroute_into(&base, &mut lft);
+    let snap = ws.snapshot(&lft);
+    let mut eval = RiskEvaluator::new();
+    eval.rebuild(&base, &lft);
+    let tsnap = eval.snapshot();
+    let no_switches: HashSet<SwitchId> = HashSet::new();
+    let script: Vec<HashSet<(SwitchId, u16)>> = vec![
+        [cables[0]].into_iter().collect(),
+        [cables[6]].into_iter().collect(),
+        [cables[3], cables[9]].into_iter().collect(),
+        HashSet::new(),
+    ];
+    let patterns = [
+        Pattern::AllToAll,
+        Pattern::RandomPermutation { samples: 16 },
+        Pattern::ShiftPermutation,
+    ];
+    let mut scratch = DegradeScratch::default();
+    let mut topo = Topology::default();
+    let mut touched: Vec<u32> = Vec::new();
+    let mut sink = 0u64;
+    let mut cycle = |ws: &mut RerouteWorkspace,
+                     eval: &mut RiskEvaluator,
+                     scratch: &mut DegradeScratch,
+                     topo: &mut Topology,
+                     lft: &mut Lft,
+                     touched: &mut Vec<u32>,
+                     sink: &mut u64| {
+        for dead in &script {
+            dmodc::topology::degrade::apply_into(&base, &no_switches, dead, topo, scratch);
+            // Fork: rewind to the baseline, delta the sample.
+            ws.restore_from(&snap, lft);
+            let outcome = ws.reroute_delta_into(topo, lft, touched);
+            assert!(outcome.is_delta(), "cable-only throws must fork");
+            assert!(ws.validate(topo, lft).is_ok());
+            // Tensor fork off the same baseline.
+            eval.restore_from(&tsnap);
+            let up = eval.update(topo, lft, touched);
+            assert!(up.is_incremental(), "{up:?}");
+            for &p in &patterns {
+                *sink ^= eval.evaluate(topo, p, 3);
+            }
+        }
+    };
+    // Warm up: two full cycles converge every buffer capacity.
+    for _ in 0..2 {
+        cycle(
+            &mut ws, &mut eval, &mut scratch, &mut topo, &mut lft, &mut touched,
+            &mut sink,
+        );
+    }
+    let before = thread_allocs();
+    cycle(
+        &mut ws, &mut eval, &mut scratch, &mut topo, &mut lft, &mut touched,
+        &mut sink,
+    );
+    let delta = thread_allocs() - before;
+    assert_eq!(
+        delta, 0,
+        "steady-state forked sample loop must not allocate (sink {sink})"
+    );
+    par::set_threads(None);
+}
+
+#[test]
 fn steady_state_delta_reroute_is_allocation_free() {
     // The delta path obeys the same allocation contract as the full
     // path: prev-product capture, product rebuild, dirty-set diff and
