@@ -9,7 +9,7 @@
 //! mirrors the paper's claim: complete rerouting of a many-thousand-node
 //! PGFT in well under a second per event.
 //!
-//!     cargo run --release --example fault_storm -- [--full]
+//!     cargo run --release --example fault_storm -- [--full | --preset huge]
 
 use dmodc::fabric::{events, FabricManager, ManagerConfig};
 use dmodc::prelude::*;
@@ -20,12 +20,20 @@ use std::sync::mpsc::channel;
 fn main() {
     let p = Args::new("fault_storm", "fabric-manager fault storm")
         .switch("full", "use the full 8640-node Figure-2 topology")
+        .flag(
+            "preset",
+            "",
+            "named PGFT preset (fig1|small|paper_8640|huge), overrides --full",
+        )
         .flag("events", "30", "number of events")
         .flag("seed", "7", "seed")
         .flag("islet-every", "8", "islet reboot cadence")
         .flag("algo", "dmodc", "routing engine backing the manager")
         .parse();
-    let params = if p.get_bool("full") {
+    let preset = p.get("preset");
+    let params = if !preset.is_empty() {
+        PgftParams::preset(preset).unwrap_or_else(|e| panic!("bad --preset: {e}"))
+    } else if p.get_bool("full") {
         PgftParams::paper_8640()
     } else {
         PgftParams::parse("16,9,12;1,4,6;1,1,1").unwrap() // 1728 nodes

@@ -1,0 +1,180 @@
+#!/usr/bin/env python3
+"""Simulation of the two-pass parallel CSR Prep build (PR 6).
+
+Mirrors rust/src/routing/common.rs::Prep::build_into:
+  serial reference = per-switch first-encounter group collection,
+  groups emitted in remote-UUID order, ports ascending within a group,
+  CSR arrays (group_offsets, group_meta=remote<<1|up, port_offsets,
+  ports, up_groups) appended switch by switch.
+  parallel candidate = pass A (per-switch counts into slot s+1, any
+  execution order) -> serial prefix sums -> pass B (each switch fills
+  its own preallocated ranges, any execution order).
+Diffs the two byte-for-byte over random leveled multigraphs with
+parallel links, level-skipping links, node ports, and empty switches,
+with pass A/B executed in random shuffled chunk orders.
+"""
+import random
+
+def gen_topo(rng):
+    ns = rng.randint(1, 14)
+    levels = [rng.randint(0, 3) for _ in range(ns)]
+    uuids = list(range(1000, 1000 + ns))
+    rng.shuffle(uuids)
+    ports = []  # per switch: list of ('node',) or ('sw', remote)
+    for s in range(ns):
+        plist = []
+        others = [r for r in range(ns) if levels[r] != levels[s]]
+        for _ in range(rng.randint(0, 10)):
+            if others and rng.random() < 0.75:
+                r = rng.choice(others)
+                # parallel links: sometimes repeat the same remote
+                reps = 1 if rng.random() < 0.7 else rng.randint(2, 3)
+                plist.extend([('sw', r)] * reps)
+            else:
+                plist.append(('node',))
+        rng.shuffle(plist)
+        ports.append(plist)
+    return {'ns': ns, 'levels': levels, 'uuids': uuids, 'ports': ports}
+
+def serial_build(t):
+    """The original serial first-encounter build."""
+    ns = t['ns']
+    group_offsets = [0]
+    port_offsets = [0]
+    group_meta, ports_out, up_groups = [], [], []
+    for s in range(ns):
+        # first-encounter group collection with per-group port lists
+        remotes, plists = [], []
+        for pi, p in enumerate(t['ports'][s]):
+            if p[0] == 'sw':
+                r = p[1]
+                if r in remotes:
+                    plists[remotes.index(r)].append(pi)
+                else:
+                    remotes.append(r)
+                    plists.append([pi])
+        order = sorted(range(len(remotes)), key=lambda g: t['uuids'][remotes[g]])
+        upg = 0
+        for g in order:
+            r = remotes[g]
+            up = t['levels'][r] > t['levels'][s]
+            if up:
+                upg += 1
+            group_meta.append((r << 1) | int(up))
+            ports_out.extend(plists[g])  # ascending by construction
+            port_offsets.append(len(ports_out))
+        group_offsets.append(len(group_meta))
+        up_groups.append(upg)
+    return group_offsets, group_meta, port_offsets, ports_out, up_groups
+
+def parallel_build(t, rng):
+    """The two-pass build with shuffled per-switch execution order."""
+    ns = t['ns']
+    # Pass A: counts into slot s+1, any order.
+    group_counts = [0] * (ns + 1)
+    port_base = [0] * (ns + 1)
+    order_a = list(range(ns)); rng.shuffle(order_a)
+    for s in order_a:
+        remotes = []
+        np = 0
+        for p in t['ports'][s]:
+            if p[0] == 'sw':
+                np += 1
+                if p[1] not in remotes:
+                    remotes.append(p[1])
+        group_counts[s + 1] = len(remotes)
+        port_base[s + 1] = np
+    # Serial prefix sums.
+    for s in range(ns):
+        group_counts[s + 1] += group_counts[s]
+        port_base[s + 1] += port_base[s]
+    total_groups, total_ports = group_counts[ns], port_base[ns]
+    group_meta = [0] * total_groups
+    port_offsets = [0] * (total_groups + 1)
+    ports_out = [0] * total_ports
+    up_groups = [0] * ns
+    # Pass B: disjoint fills, any order.
+    order_b = list(range(ns)); rng.shuffle(order_b)
+    for s in order_b:
+        remotes, counts = [], []
+        for p in t['ports'][s]:
+            if p[0] == 'sw':
+                r = p[1]
+                if r in remotes:
+                    counts[remotes.index(r)] += 1
+                else:
+                    remotes.append(r)
+                    counts.append(1)
+        ng = len(remotes)
+        order = list(range(ng))
+        order.sort(key=lambda g: t['uuids'][remotes[g]])
+        dst = [0] * ng
+        g0 = group_counts[s]
+        cursor = port_base[s]
+        upg = 0
+        for k, g in enumerate(order):
+            r = remotes[g]
+            assert t['levels'][r] != t['levels'][s]
+            up = t['levels'][r] > t['levels'][s]
+            if up:
+                upg += 1
+            dst[g] = cursor
+            cursor += counts[g]
+            group_meta[g0 + k] = (r << 1) | int(up)
+            port_offsets[g0 + k + 1] = cursor
+        for pi, p in enumerate(t['ports'][s]):
+            if p[0] == 'sw':
+                g = remotes.index(p[1])
+                ports_out[dst[g]] = pi
+                dst[g] += 1
+        up_groups[s] = upg
+    return group_counts, group_meta, port_offsets, ports_out, up_groups
+
+def main():
+    rng = random.Random(0xD0D0)
+    for case in range(3000):
+        t = gen_topo(rng)
+        ref = serial_build(t)
+        got = parallel_build(t, rng)
+        names = ['group_offsets', 'group_meta', 'port_offsets', 'ports', 'up_groups']
+        for name, a, b in zip(names, ref, got):
+            if a != b:
+                raise SystemExit(f"case {case}: {name} diverged\n  ref {a}\n  got {b}\n  topo {t}")
+        # packed-meta decode round-trip
+        for meta in ref[1]:
+            r, up = meta >> 1, bool(meta & 1)
+            assert (r << 1) | int(up) == meta
+    print("csr build: 3000 random multigraphs, parallel == serial byte-for-byte")
+
+    # --- preset / scaled arithmetic asserted by the new Rust tests ---
+    def elems_at(m, w, l):
+        n = 1
+        for i in range(len(m)):
+            n *= w[i] if i < l else m[i]
+        return n
+    m, w = [36, 27, 28], [1, 9, 14]
+    counts = [elems_at(m, w, l) for l in range(4)]
+    assert counts == [27216, 756, 252, 126], counts
+    assert sum(counts[1:]) == 1134
+    def scaled(target):
+        s = (max(target, 1) / 8640.0) ** 0.5
+        sc = lambda b: max(1, round(b * s))
+        return ([24, sc(15), sc(24)], [1, sc(6), sc(8)], [1, 1, 1])
+    assert scaled(8640) == ([24, 15, 24], [1, 6, 8], [1, 1, 1]), scaled(8640)
+    sm, sw_, sp = scaled(1000)
+    assert sm == [24, 5, 8] and sw_ == [1, 2, 3] and sp == [1, 1, 1], (sm, sw_, sp)
+    assert sm[0] * sm[1] * sm[2] == 960
+    # monotone over the curve targets
+    sizes = []
+    for tgt in [500, 2000, 8640, 27000]:
+        mm, _, _ = scaled(tgt)
+        sizes.append(mm[0] * mm[1] * mm[2])
+    assert sizes == sorted(sizes), sizes
+    # grain() values asserted in grain_bounds (threads=4)
+    def grain(n, oversub, threads=4):
+        return max(1, n // max(1, threads * max(1, oversub)))
+    assert grain(0, 8) == 1 and grain(5, 8) == 1
+    assert grain(3200, 8) == 100 and grain(3200, 0) == 800
+    print("preset/scaled/grain arithmetic: all Rust test constants confirmed")
+
+main()

@@ -175,6 +175,7 @@ fn main() {
         concat!(
             "{{\n",
             "  \"schema\": \"bench_analysis/v2\",\n",
+            "  \"status\": \"ok\",\n",
             "  \"topology\": \"PGFT({spec})\",\n",
             "  \"nodes\": {nodes},\n",
             "  \"switches\": {switches},\n",

@@ -1,38 +1,51 @@
-//! CI bench smoke: median full-reroute latency on a mid-size PGFT at 1 and
-//! N worker threads, written to `BENCH_reroute.json` so the perf
+//! CI bench smoke: the nodes-vs-latency reroute curve, written to
+//! `BENCH_reroute.json` (schema `bench_reroute/v3`) so the perf
 //! trajectory is tracked across PRs (see `.github/workflows/ci.yml` and
-//! EXPERIMENTS.md §Perf).
+//! EXPERIMENTS.md §"Paper-scale reroute").
 //!
-//! Measured quantities:
+//! Each curve entry is one PGFT preset (default fig1 → small →
+//! paper_8640 → huge) measured at 1 and 8 worker threads:
 //! * full — one steady-state fault reaction: in-place degraded topology
 //!   materialization plus the full Dmodc pipeline
 //!   (prep → Algorithm 1 → Algorithm 2 → route fill) out of a persistent
 //!   `RerouteWorkspace`, alternating a spine fault with recovery so both
-//!   the degraded and intact shapes stay warm.
+//!   the degraded and intact shapes stay warm. Per-stage wall times
+//!   (`RerouteTimings`) of the final measured reaction ride along.
 //! * delta — the same alternation for a *single cable* fault/recovery
-//!   through `reroute_delta_into` (EXPERIMENTS.md §"Incremental
-//!   reroute"): products rebuilt, dirty rows diffed, only those rows
-//!   refilled. The `delta_*` columns sit next to the full-reroute
-//!   baseline so the delta win is tracked per PR; `delta_tier_fired`
-//!   records that the measurement really exercised the incremental
-//!   tier (not a silent fallback).
+//!   through `reroute_delta_into`; `tier_fired` records that the
+//!   measurement really exercised the incremental tier.
+//! * seed_baseline_median_s — the pre-optimization pipeline (fresh
+//!   allocations + serial Algorithm 1) for the speedup baseline.
+//! * reference_identical — on presets ≤ 10k nodes, the workspace output
+//!   is compared byte-for-byte against `route_reference` at every
+//!   measured thread count (`null` when skipped for cost).
 //!
-//! `seed_baseline_median_s` times the pre-optimization pipeline (fresh
-//! allocations + serial Algorithm 1 + the seed's parallel
-//! strength-reduced fill) on the intact topology for the speedup
-//! baseline.
-//!
-//!   REROUTE_PGFT="24,15,24;1,6,8;1,1,1"   topology (default: 8640 nodes)
+//! Selection:
+//!   --preset a,b,..      named presets (fig1|small|paper_8640|huge),
+//!                        also via REROUTE_PRESETS
+//!   REROUTE_PGFT="m;w;p" adds one custom topology entry
+//!   (neither given: the full default curve)
+//! Knobs:
 //!   BENCH_ITERS=5                          repetitions per measurement
 //!   BENCH_REROUTE_OUT=BENCH_reroute.json   output path
+//!   REROUTE_CEILING_S=12.0   fail (exit 1) if the largest preset's
+//!                            max-thread full-reroute median exceeds this
 
 use dmodc::prelude::*;
 use dmodc::routing::common::{self, DividerReduction, Prep};
-use dmodc::routing::dmodc::{topological_nids, Options, Router};
-use dmodc::routing::{Lft, RerouteWorkspace};
+use dmodc::routing::dmodc::{route_reference, topological_nids, Options, Router};
+use dmodc::routing::{Lft, RerouteTimings, RerouteWorkspace};
 use dmodc::util::par;
 use dmodc::util::time::bench;
 use std::collections::HashSet;
+
+/// Measured thread counts (the work-stealing sweep of the curve).
+const THREAD_COUNTS: [usize; 2] = [1, 8];
+
+/// Above this node count: single measured iteration for the expensive
+/// serial parts and no `route_reference` comparison (covered by the
+/// `#[ignore]` equivalence tests instead).
+const BIG_NODES: usize = 10_000;
 
 /// The seed pipeline, stage for stage (see fig3_runtime.rs for rationale).
 fn seed_pipeline(topo: &Topology) -> Lft {
@@ -48,7 +61,21 @@ fn seed_pipeline(topo: &Topology) -> Lft {
     router.lft(topo)
 }
 
-fn median_reroute_secs(topo: &Topology, threads: usize) -> (f64, f64) {
+struct FullSample {
+    threads: usize,
+    median_s: f64,
+    min_s: f64,
+    stages: RerouteTimings,
+}
+
+struct DeltaSample {
+    threads: usize,
+    median_s: f64,
+    min_s: f64,
+    tier_fired: bool,
+}
+
+fn measure_full(topo: &Topology, threads: usize, iters: usize) -> FullSample {
     par::set_threads(Some(threads));
     let spine = topo
         .switches
@@ -65,25 +92,30 @@ fn median_reroute_secs(topo: &Topology, threads: usize) -> (f64, f64) {
     let mut degraded = Topology::default();
     let mut out = Lft::default();
     // Warm both shapes (and the worker pool / per-worker scratch).
-    for dead in [&fault, &recover, &fault, &recover] {
+    for dead in [&fault, &recover] {
         ws.materialize(topo, dead, &no_cables, &mut degraded);
         ws.reroute_into(&degraded, &mut out);
     }
     let mut flip = false;
-    let s = bench(1, 5, || {
+    let s = bench(1, iters, || {
         flip = !flip;
         let dead = if flip { &fault } else { &recover };
         ws.materialize(topo, dead, &no_cables, &mut degraded);
         ws.reroute_into(&degraded, &mut out);
         out.raw()[0]
     });
+    let stages = ws.timings();
     par::set_threads(None);
-    (s.median, s.min)
+    FullSample {
+        threads,
+        median_s: s.median,
+        min_s: s.min,
+        stages,
+    }
 }
 
 /// Single-cable fault/recovery reaction through the delta tier.
-/// Returns (median, min, delta_tier_fired_on_every_measured_step).
-fn median_delta_secs(topo: &Topology, threads: usize) -> (f64, f64, bool) {
+fn measure_delta(topo: &Topology, threads: usize, iters: usize) -> DeltaSample {
     par::set_threads(Some(threads));
     // First leaf uplink cable: the canonical single-cable throw.
     let cable = dmodc::topology::degrade::cables(topo)[0];
@@ -96,13 +128,13 @@ fn median_delta_secs(topo: &Topology, threads: usize) -> (f64, f64, bool) {
     let mut touched = Vec::new();
     // Warm both shapes through the delta entry point (the first call is
     // a NoHistory full fill; subsequent flips are delta transitions).
-    for dead in [&recover, &fault, &recover, &fault, &recover] {
+    for dead in [&recover, &fault, &recover] {
         ws.materialize(topo, &no_switches, dead, &mut degraded);
         ws.reroute_delta_into(&degraded, &mut out, &mut touched);
     }
     let mut flip = false;
     let mut all_delta = true;
-    let s = bench(1, 5, || {
+    let s = bench(1, iters, || {
         flip = !flip;
         let dead = if flip { &fault } else { &recover };
         ws.materialize(topo, &no_switches, dead, &mut degraded);
@@ -111,70 +143,258 @@ fn median_delta_secs(topo: &Topology, threads: usize) -> (f64, f64, bool) {
         out.raw()[0]
     });
     par::set_threads(None);
-    (s.median, s.min, all_delta)
+    DeltaSample {
+        threads,
+        median_s: s.median,
+        min_s: s.min,
+        tier_fired: all_delta,
+    }
+}
+
+/// Byte-compare the workspace output against `route_reference` at every
+/// measured thread count.
+fn reference_identical(topo: &Topology) -> bool {
+    let want = route_reference(topo, &Options::default());
+    let mut ok = true;
+    for &threads in &THREAD_COUNTS {
+        par::set_threads(Some(threads));
+        let mut ws = RerouteWorkspace::default();
+        let mut out = Lft::default();
+        ws.reroute_into(topo, &mut out);
+        ok &= out.raw() == want.raw();
+        par::set_threads(None);
+    }
+    ok
+}
+
+struct Entry {
+    name: String,
+    spec: String,
+    nodes: usize,
+    switches: usize,
+    seed_median_s: f64,
+    full: Vec<FullSample>,
+    delta: Vec<DeltaSample>,
+    reference_identical: Option<bool>,
+}
+
+fn run_entry(name: &str, params: &PgftParams) -> Entry {
+    let topo = params.build();
+    let nodes = topo.nodes.len();
+    let big = nodes > BIG_NODES;
+    let iters = if big { 3 } else { 5 };
+    println!(
+        "preset {name}: {nodes} nodes / {} switches (LFT {} MiB)",
+        topo.switches.len(),
+        topo.switches.len() * nodes * 2 / (1 << 20)
+    );
+    // The seed baseline is serial and expensive at scale: one measured
+    // run there (BENCH_ITERS still overrides).
+    let seed = if big {
+        bench(0, 1, || seed_pipeline(&topo))
+    } else {
+        bench(1, 3, || seed_pipeline(&topo))
+    };
+    let full: Vec<FullSample> = THREAD_COUNTS
+        .iter()
+        .map(|&t| measure_full(&topo, t, iters))
+        .collect();
+    let delta: Vec<DeltaSample> = THREAD_COUNTS
+        .iter()
+        .map(|&t| measure_delta(&topo, t, iters))
+        .collect();
+    let reference = if big {
+        None
+    } else {
+        Some(reference_identical(&topo))
+    };
+    for f in &full {
+        println!(
+            "  full t{}: median {:.4}s (prep {:.4} costs {:.4} nids {:.4} fill {:.4})",
+            f.threads,
+            f.median_s,
+            f.stages.prep_s,
+            f.stages.costs_s,
+            f.stages.nids_s,
+            f.stages.fill_s
+        );
+    }
+    for d in &delta {
+        println!(
+            "  delta t{}: median {:.4}s (tier_fired {})",
+            d.threads, d.median_s, d.tier_fired
+        );
+    }
+    Entry {
+        name: name.to_string(),
+        spec: params.to_string(),
+        nodes,
+        switches: topo.switches.len(),
+        seed_median_s: seed.median,
+        full,
+        delta,
+        reference_identical: reference,
+    }
+}
+
+fn entry_json(e: &Entry) -> String {
+    let full: Vec<String> = e
+        .full
+        .iter()
+        .map(|f| {
+            format!(
+                concat!(
+                    "        {{ \"threads\": {}, \"median_s\": {:.6}, \"min_s\": {:.6},\n",
+                    "          \"stages\": {{ \"prep_s\": {:.6}, \"costs_s\": {:.6}, ",
+                    "\"nids_s\": {:.6}, \"fill_s\": {:.6} }} }}"
+                ),
+                f.threads,
+                f.median_s,
+                f.min_s,
+                f.stages.prep_s,
+                f.stages.costs_s,
+                f.stages.nids_s,
+                f.stages.fill_s
+            )
+        })
+        .collect();
+    let delta: Vec<String> = e
+        .delta
+        .iter()
+        .map(|d| {
+            format!(
+                "        {{ \"threads\": {}, \"median_s\": {:.6}, \"min_s\": {:.6}, \"tier_fired\": {} }}",
+                d.threads, d.median_s, d.min_s, d.tier_fired
+            )
+        })
+        .collect();
+    let reference = match e.reference_identical {
+        Some(v) => v.to_string(),
+        None => "null".to_string(),
+    };
+    format!(
+        concat!(
+            "    {{\n",
+            "      \"preset\": \"{name}\",\n",
+            "      \"topology\": \"PGFT({spec})\",\n",
+            "      \"nodes\": {nodes},\n",
+            "      \"switches\": {switches},\n",
+            "      \"lft_bytes\": {lft},\n",
+            "      \"seed_baseline_median_s\": {seed:.6},\n",
+            "      \"full\": [\n{full}\n      ],\n",
+            "      \"delta\": [\n{delta}\n      ],\n",
+            "      \"reference_identical\": {reference}\n",
+            "    }}"
+        ),
+        name = e.name,
+        spec = e.spec,
+        nodes = e.nodes,
+        switches = e.switches,
+        lft = e.switches * e.nodes * 2,
+        seed = e.seed_median_s,
+        full = full.join(",\n"),
+        delta = delta.join(",\n"),
+        reference = reference,
+    )
+}
+
+/// `--preset a,b` / `--preset=a,b` from the post-`--` bench args.
+fn preset_arg() -> Option<String> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        if a == "--preset" {
+            return it.next().cloned();
+        }
+        if let Some(v) = a.strip_prefix("--preset=") {
+            return Some(v.to_string());
+        }
+    }
+    std::env::var("REROUTE_PRESETS").ok()
 }
 
 fn main() {
-    let spec = std::env::var("REROUTE_PGFT").unwrap_or_else(|_| "24,15,24;1,6,8;1,1,1".into());
-    let params = PgftParams::parse(&spec).expect("REROUTE_PGFT");
-    let topo = params.build();
-    let host_threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-    let n_threads = par::num_threads().max(2);
+    let mut selection: Vec<(String, PgftParams)> = Vec::new();
+    if let Some(list) = preset_arg() {
+        for name in list.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let p = PgftParams::preset(name).unwrap_or_else(|e| panic!("{e}"));
+            selection.push((name.to_string(), p));
+        }
+    }
+    if let Ok(spec) = std::env::var("REROUTE_PGFT") {
+        let p = PgftParams::parse(&spec).expect("REROUTE_PGFT");
+        selection.push(("custom".to_string(), p));
+    }
+    if selection.is_empty() {
+        for name in ["fig1", "small", "paper_8640", "huge"] {
+            selection.push((name.to_string(), PgftParams::preset(name).unwrap()));
+        }
+    }
+
+    let host_threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
     println!(
-        "reroute smoke on {} nodes / {} switches (host threads {host_threads})",
-        topo.nodes.len(),
-        topo.switches.len()
+        "reroute smoke: {} curve entries (host threads {host_threads})",
+        selection.len()
     );
 
-    let reference = bench(1, 3, || seed_pipeline(&topo));
-    let (m1, min1) = median_reroute_secs(&topo, 1);
-    let (mn, minn) = median_reroute_secs(&topo, n_threads);
-    let (d1, dmin1, d1_fired) = median_delta_secs(&topo, 1);
-    let (dn, dminn, dn_fired) = median_delta_secs(&topo, n_threads);
+    let entries: Vec<Entry> = selection
+        .iter()
+        .map(|(name, p)| run_entry(name, p))
+        .collect();
+
+    // Wall-clock ceiling: largest entry, max measured thread count.
+    let ceiling: Option<f64> = std::env::var("REROUTE_CEILING_S")
+        .ok()
+        .and_then(|v| v.parse().ok());
+    let largest = entries.iter().max_by_key(|e| e.nodes).expect("entries");
+    let largest_full = largest
+        .full
+        .iter()
+        .max_by_key(|f| f.threads)
+        .expect("full samples")
+        .median_s;
+    let ceiling_ok = ceiling.is_none_or(|c| largest_full <= c);
 
     let json = format!(
         concat!(
             "{{\n",
-            "  \"schema\": \"bench_reroute/v2\",\n",
-            "  \"topology\": \"PGFT({spec})\",\n",
-            "  \"nodes\": {nodes},\n",
-            "  \"switches\": {switches},\n",
+            "  \"schema\": \"bench_reroute/v3\",\n",
+            "  \"status\": \"ok\",\n",
             "  \"host_threads\": {host},\n",
-            "  \"seed_baseline_median_s\": {refm:.6},\n",
-            "  \"threads_1\": {{ \"median_s\": {m1:.6}, \"min_s\": {min1:.6} }},\n",
-            "  \"threads_n\": {{ \"n\": {nt}, \"median_s\": {mn:.6}, \"min_s\": {minn:.6} }},\n",
-            "  \"delta_threads_1\": {{ \"median_s\": {d1:.6}, \"min_s\": {dmin1:.6} }},\n",
-            "  \"delta_threads_n\": {{ \"n\": {nt}, \"median_s\": {dn:.6}, \"min_s\": {dminn:.6} }},\n",
-            "  \"delta_tier_fired\": {fired},\n",
-            "  \"speedup_n_vs_1\": {sp1:.3},\n",
-            "  \"speedup_n_vs_seed_baseline\": {spr:.3},\n",
-            "  \"delta_speedup_vs_full_t1\": {dsp1:.3},\n",
-            "  \"delta_speedup_vs_full_tn\": {dspn:.3}\n",
+            "  \"thread_counts\": [1, 8],\n",
+            "  \"curve\": [\n{curve}\n  ],\n",
+            "  \"ceiling_s\": {ceiling},\n",
+            "  \"ceiling_preset\": \"{cpreset}\",\n",
+            "  \"ceiling_ok\": {cok}\n",
             "}}\n"
         ),
-        spec = spec,
-        nodes = topo.nodes.len(),
-        switches = topo.switches.len(),
         host = host_threads,
-        refm = reference.median,
-        m1 = m1,
-        min1 = min1,
-        nt = n_threads,
-        mn = mn,
-        minn = minn,
-        d1 = d1,
-        dmin1 = dmin1,
-        dn = dn,
-        dminn = dminn,
-        fired = d1_fired && dn_fired,
-        sp1 = m1 / mn.max(1e-12),
-        spr = reference.median / mn.max(1e-12),
-        dsp1 = m1 / d1.max(1e-12),
-        dspn = mn / dn.max(1e-12),
+        curve = entries.iter().map(entry_json).collect::<Vec<_>>().join(",\n"),
+        ceiling = ceiling.map_or("null".to_string(), |c| format!("{c:.3}")),
+        cpreset = largest.name,
+        cok = ceiling_ok,
     );
     let out_path =
         std::env::var("BENCH_REROUTE_OUT").unwrap_or_else(|_| "BENCH_reroute.json".into());
     std::fs::write(&out_path, &json).expect("write BENCH_reroute.json");
     print!("{json}");
     println!("→ {out_path}");
+
+    if let Some(bad) = entries
+        .iter()
+        .find(|e| e.reference_identical == Some(false))
+    {
+        eprintln!("FAIL: preset {} diverged from route_reference", bad.name);
+        std::process::exit(1);
+    }
+    if !ceiling_ok {
+        eprintln!(
+            "FAIL: {} full reroute median {largest_full:.3}s exceeds REROUTE_CEILING_S {:.3}s",
+            largest.name,
+            ceiling.unwrap()
+        );
+        std::process::exit(1);
+    }
 }

@@ -39,7 +39,9 @@ use super::metrics::{Histogram, Metrics};
 use crate::analysis::paths::TensorUpdate;
 use crate::analysis::patterns::Pattern;
 use crate::analysis::RiskEvaluator;
-use crate::routing::{registry, Algo, DeltaOutcome, DeltaStats, Lft, RoutingEngine};
+use crate::routing::{
+    registry, Algo, DeltaOutcome, DeltaStats, Lft, RerouteTimings, RoutingEngine,
+};
 use crate::topology::degrade::{self, DegradeScratch};
 use crate::topology::{PortTarget, SwitchId, Topology};
 use std::collections::{HashMap, HashSet};
@@ -121,6 +123,11 @@ pub struct ManagerReport {
     pub tier: ReactionTier,
     /// Dirty-set statistics when the delta tier fired.
     pub delta: Option<DeltaStats>,
+    /// Per-stage wall times (prep/costs/nids/fill from the engine's
+    /// instrumented pipeline, `commit_s` filled in here around the table
+    /// upload). `None` for engines without
+    /// [`RoutingEngine::last_timings`](crate::routing::RoutingEngine::last_timings).
+    pub timings: Option<RerouteTimings>,
     /// Post-event congestion risk, when `ManagerConfig::probe` is on.
     pub risk: Option<RiskReport>,
 }
@@ -375,6 +382,7 @@ impl FabricManager {
         if !valid {
             self.metrics.invalid_states += 1;
         }
+        let tc = Instant::now();
         let upload = match tier {
             ReactionTier::Delta => {
                 self.store
@@ -382,6 +390,11 @@ impl FabricManager {
             }
             ReactionTier::Full => self.store.commit(&self.current_topo, &self.current_lft),
         };
+        let commit_secs = tc.elapsed().as_secs_f64();
+        let mut timings = self.engine.last_timings();
+        if let Some(t) = &mut timings {
+            t.commit_s = commit_secs;
+        }
         self.metrics.reroutes += 1;
         self.metrics.entries_changed += upload.entries_changed as u64;
         self.metrics.blocks_uploaded += upload.blocks_delta as u64;
@@ -396,6 +409,7 @@ impl FabricManager {
             cables_alive: self.current_topo.num_cables(),
             tier,
             delta,
+            timings,
             risk,
         }
     }
@@ -676,6 +690,23 @@ mod tests {
         // Recovery restored the exact pre-fault tables.
         let baseline = FabricManager::new(t, ManagerConfig::default());
         assert_eq!(mgr.current().1.raw(), baseline.current().1.raw());
+    }
+
+    #[test]
+    fn reports_carry_stage_timings() {
+        // The default (dmodc) engine instruments its pipeline; the
+        // manager adds the commit stage around the upload.
+        let t = PgftParams::fig1().build();
+        let cable = cable_ids(&t)[0].0;
+        let mut mgr = FabricManager::new(t, ManagerConfig::default());
+        let r = mgr.apply(&Event {
+            at_ms: 1,
+            kind: EventKind::LinkDown(cable),
+        });
+        let tm = r.timings.expect("dmodc reports timings");
+        assert!(tm.prep_s > 0.0 && tm.costs_s > 0.0);
+        assert!(tm.commit_s > 0.0, "manager must fill the commit stage");
+        assert!(tm.total_s() > 0.0);
     }
 
     #[test]

@@ -32,6 +32,14 @@ fn algo_help() -> String {
 }
 
 fn build_topo(p: &dmodc::util::cli::Parsed) -> Topology {
+    let preset = p.get("preset");
+    if !preset.is_empty() {
+        let params = PgftParams::preset(preset).unwrap_or_else(|e| {
+            eprintln!("bad --preset: {e}");
+            std::process::exit(2);
+        });
+        return params.build();
+    }
     let pgft = p.get("pgft");
     if !pgft.is_empty() {
         let params = PgftParams::parse(pgft).unwrap_or_else(|e| {
@@ -45,10 +53,15 @@ fn build_topo(p: &dmodc::util::cli::Parsed) -> Topology {
 }
 
 fn common_flags(args: Args) -> Args {
-    args.flag("pgft", "", "PGFT params \"m1,..;w1,..;p1,..\" (overrides --nodes)")
-        .flag("nodes", "648", "RLFT node count when --pgft is not given")
-        .flag("radix", "36", "RLFT switch radix")
-        .flag("seed", "42", "random seed")
+    args.flag(
+        "preset",
+        "",
+        "named PGFT preset (fig1|small|paper_8640|huge), overrides --pgft/--nodes",
+    )
+    .flag("pgft", "", "PGFT params \"m1,..;w1,..;p1,..\" (overrides --nodes)")
+    .flag("nodes", "648", "RLFT node count when --pgft is not given")
+    .flag("radix", "36", "RLFT switch radix")
+    .flag("seed", "42", "random seed")
 }
 
 fn cmd_topo() {

@@ -18,7 +18,8 @@
 //! [`costs_serial`].
 
 use crate::topology::{NodeId, PortTarget, SwitchId, Topology};
-use crate::util::par::{parallel_for_chunked, SharedMut};
+use crate::util::par::{grain, parallel_for_chunked, SharedMut};
+use std::cell::RefCell;
 
 /// Unreachable cost sentinel.
 pub const INF: u16 = u16::MAX;
@@ -51,12 +52,15 @@ pub struct Prep {
     /// switch id -> index into `leaves` (or `u32::MAX`).
     pub leaf_index: Vec<u32>,
     /// CSR: groups of switch `s` are `group_offsets[s]..group_offsets[s+1]`
-    /// into `group_remote` / `group_up` / `port_offsets`.
+    /// into `group_meta` / `port_offsets`.
     pub group_offsets: Vec<u32>,
-    /// Remote switch of each group, UUID-sorted within a switch.
-    pub group_remote: Vec<SwitchId>,
-    /// Uplink flag of each group.
-    pub group_up: Vec<bool>,
+    /// Per group: remote switch id and uplink flag packed as
+    /// `remote << 1 | up` (UUID-sorted within a switch). One u32 instead
+    /// of the former `Vec<SwitchId>` + `Vec<bool>` pair: the hot loops
+    /// always read both together, and the packed layout halves the bytes
+    /// streamed per group visit (decode via [`Prep::group_remote`] /
+    /// [`Prep::group_is_up`]). Switch ids stay well under 2^31.
+    pub group_meta: Vec<u32>,
     /// CSR: ports of group `g` are `port_offsets[g]..port_offsets[g+1]`
     /// into `ports`.
     pub port_offsets: Vec<u32>,
@@ -82,10 +86,35 @@ pub struct Prep {
 /// Reusable staging buffers for [`Prep::build_into`].
 #[derive(Default)]
 pub struct PrepScratch {
-    remotes: Vec<SwitchId>,
-    port_lists: Vec<Vec<u16>>,
-    order: Vec<u32>,
+    /// Per-switch first-port offset into `ports` (prefix-summed counts).
+    port_base: Vec<u32>,
     cursor: Vec<u32>,
+}
+
+/// Per-worker staging for the parallel CSR build: one switch's groups in
+/// first-encounter order before the UUID sort. Thread-local because the
+/// chunked claims hand switches to arbitrary workers; each vector is
+/// reserved to the topology-wide port bound on first touch, after which
+/// rebuilds are allocation-free on every pool thread.
+#[derive(Default)]
+struct BuildStage {
+    remotes: Vec<SwitchId>,
+    counts: Vec<u32>,
+    order: Vec<u32>,
+    dst: Vec<u32>,
+}
+
+impl BuildStage {
+    fn reserve(&mut self, max_ports: usize) {
+        self.remotes.reserve(max_ports);
+        self.counts.reserve(max_ports);
+        self.order.reserve(max_ports);
+        self.dst.reserve(max_ports);
+    }
+}
+
+thread_local! {
+    static BUILD_STAGE: RefCell<BuildStage> = RefCell::new(BuildStage::default());
 }
 
 impl Prep {
@@ -98,8 +127,18 @@ impl Prep {
 
     /// Rebuild `out` for `topo`, reusing every buffer (and `scratch`)
     /// from previous builds — zero heap allocation in steady state.
+    ///
+    /// The CSR construction runs in two parallel passes over switches with
+    /// one serial prefix sum between them: pass A counts each switch's
+    /// distinct groups and switch-link ports, the prefix sums turn the
+    /// counts into `group_offsets` / per-switch port bases, and pass B
+    /// writes each switch's `group_meta` / `port_offsets` / `ports` range.
+    /// Every output slot's position and value is a pure per-switch function
+    /// of the topology, so the result is bit-identical to a serial build
+    /// at every thread count regardless of chunk claim order.
     pub fn build_into(topo: &Topology, out: &mut Prep, scratch: &mut PrepScratch) {
         let ns = topo.switches.len();
+        let max_ports = topo.switches.iter().map(|sw| sw.ports.len()).max().unwrap_or(0);
 
         out.leaves.clear();
         out.leaves
@@ -110,64 +149,144 @@ impl Prep {
             out.leaf_index[l as usize] = i as u32;
         }
 
+        // Pass A: per-switch group/port counts into slot s+1 (disjoint).
         out.group_offsets.clear();
-        out.group_remote.clear();
-        out.group_up.clear();
-        out.port_offsets.clear();
-        out.ports.clear();
-        out.up_groups.clear();
-        out.group_offsets.push(0);
-        out.port_offsets.push(0);
-        for (s, sw) in topo.switches.iter().enumerate() {
-            // Stage this switch's groups in first-encounter port order.
-            scratch.remotes.clear();
-            let mut ng = 0usize;
-            for (pi, p) in sw.ports.iter().enumerate() {
-                if let PortTarget::Switch { sw: r, .. } = *p {
-                    if let Some(g) = scratch.remotes.iter().position(|&x| x == r) {
-                        scratch.port_lists[g].push(pi as u16);
-                    } else {
-                        if scratch.port_lists.len() == ng {
-                            scratch.port_lists.push(Vec::new());
+        out.group_offsets.resize(ns + 1, 0);
+        scratch.port_base.clear();
+        scratch.port_base.resize(ns + 1, 0);
+        {
+            let group_counts = SharedMut::new(&mut out.group_offsets);
+            let port_counts = SharedMut::new(&mut scratch.port_base);
+            let group_counts = &group_counts;
+            let port_counts = &port_counts;
+            parallel_for_chunked(ns, grain(ns, 8), |s| {
+                BUILD_STAGE.with(|st| {
+                    let st = &mut *st.borrow_mut();
+                    st.reserve(max_ports);
+                    st.remotes.clear();
+                    let mut np = 0u32;
+                    for p in &topo.switches[s].ports {
+                        if let PortTarget::Switch { sw: r, .. } = *p {
+                            np += 1;
+                            if !st.remotes.contains(&r) {
+                                st.remotes.push(r);
+                            }
                         }
-                        scratch.port_lists[ng].clear();
-                        scratch.port_lists[ng].push(pi as u16);
-                        scratch.remotes.push(r);
-                        ng += 1;
                     }
-                }
-            }
-            // Emit in remote-UUID order (UUIDs are unique, so this equals
-            // the original stable sort).
-            scratch.order.clear();
-            scratch.order.extend(0..ng as u32);
-            scratch.order.sort_unstable_by_key(|&g| {
-                topo.switches[scratch.remotes[g as usize] as usize].uuid
+                    // SAFETY: each task writes only slot s+1 of each array.
+                    unsafe {
+                        *group_counts.get_mut(s + 1) = st.remotes.len() as u32;
+                        *port_counts.get_mut(s + 1) = np;
+                    }
+                });
             });
-            let mut upg = 0u32;
-            for &g in &scratch.order {
-                let r = scratch.remotes[g as usize];
-                // Same-level links are rejected by `check_invariants`, but
-                // `Topology` fields are public — enforce the precondition
-                // here because the level-synchronous sweeps of `costs_into`
-                // rely on every link crossing levels (their per-level
-                // write-disjointness argument is unsound otherwise).
-                assert_ne!(
-                    topo.switches[r as usize].level,
-                    topo.switches[s].level,
-                    "same-level link between switches {s} and {r} (invalid topology)"
-                );
-                let up = topo.switches[r as usize].level > topo.switches[s].level;
-                if up {
-                    upg += 1;
-                }
-                out.group_remote.push(r);
-                out.group_up.push(up);
-                out.ports.extend_from_slice(&scratch.port_lists[g as usize]);
-                out.port_offsets.push(out.ports.len() as u32);
-            }
-            out.group_offsets.push(out.group_remote.len() as u32);
-            out.up_groups.push(upg);
+        }
+        for s in 0..ns {
+            out.group_offsets[s + 1] += out.group_offsets[s];
+            scratch.port_base[s + 1] += scratch.port_base[s];
+        }
+        let total_groups = out.group_offsets[ns] as usize;
+        let total_ports = scratch.port_base[ns] as usize;
+        out.group_meta.clear();
+        out.group_meta.resize(total_groups, 0);
+        out.port_offsets.clear();
+        out.port_offsets.resize(total_groups + 1, 0);
+        out.ports.clear();
+        out.ports.resize(total_ports, 0);
+        out.up_groups.clear();
+        out.up_groups.resize(ns, 0);
+
+        // Pass B: each switch fills its own (disjoint) CSR ranges.
+        {
+            let group_meta = SharedMut::new(&mut out.group_meta);
+            let port_offsets = SharedMut::new(&mut out.port_offsets);
+            let ports_out = SharedMut::new(&mut out.ports);
+            let up_groups = SharedMut::new(&mut out.up_groups);
+            let group_meta = &group_meta;
+            let port_offsets = &port_offsets;
+            let ports_out = &ports_out;
+            let up_groups = &up_groups;
+            let group_offsets = &out.group_offsets;
+            let port_base = &scratch.port_base;
+            parallel_for_chunked(ns, grain(ns, 8), |s| {
+                BUILD_STAGE.with(|st| {
+                    let st = &mut *st.borrow_mut();
+                    st.reserve(max_ports);
+                    // Stage groups in first-encounter port order.
+                    st.remotes.clear();
+                    st.counts.clear();
+                    for p in &topo.switches[s].ports {
+                        if let PortTarget::Switch { sw: r, .. } = *p {
+                            if let Some(g) = st.remotes.iter().position(|&x| x == r) {
+                                st.counts[g] += 1;
+                            } else {
+                                st.remotes.push(r);
+                                st.counts.push(1);
+                            }
+                        }
+                    }
+                    let ng = st.remotes.len();
+                    // Emit in remote-UUID order (UUIDs are unique, so this
+                    // equals the original stable sort).
+                    st.order.clear();
+                    st.order.extend(0..ng as u32);
+                    let remotes = &st.remotes;
+                    st.order.sort_unstable_by_key(|&g| {
+                        topo.switches[remotes[g as usize] as usize].uuid
+                    });
+                    st.dst.clear();
+                    st.dst.resize(ng, 0);
+                    let g0 = group_offsets[s] as usize;
+                    let mut cursor = port_base[s];
+                    let mut upg = 0u32;
+                    for (k, &g) in st.order.iter().enumerate() {
+                        let r = st.remotes[g as usize];
+                        // Same-level links are rejected by
+                        // `check_invariants`, but `Topology` fields are
+                        // public — enforce the precondition here because
+                        // the level-synchronous sweeps of `costs_into`
+                        // rely on every link crossing levels (their
+                        // per-level write-disjointness argument is unsound
+                        // otherwise).
+                        assert_ne!(
+                            topo.switches[r as usize].level,
+                            topo.switches[s].level,
+                            "same-level link between switches {s} and {r} (invalid topology)"
+                        );
+                        let up = topo.switches[r as usize].level > topo.switches[s].level;
+                        if up {
+                            upg += 1;
+                        }
+                        st.dst[g as usize] = cursor;
+                        cursor += st.counts[g as usize];
+                        // SAFETY: group slots g0..g0+ng and port_offsets
+                        // slots g0+1..=g0+ng belong to switch s alone
+                        // (slot g0 is the previous switch's final entry;
+                        // slot 0 stays the serial-initialized 0).
+                        unsafe {
+                            *group_meta.get_mut(g0 + k) = (r << 1) | up as u32;
+                            *port_offsets.get_mut(g0 + k + 1) = cursor;
+                        }
+                    }
+                    // Second port scan writes each group's ports ascending.
+                    for (pi, p) in topo.switches[s].ports.iter().enumerate() {
+                        if let PortTarget::Switch { sw: r, .. } = *p {
+                            let g = st.remotes.iter().position(|&x| x == r).unwrap();
+                            // SAFETY: this switch's port range
+                            // `port_base[s]..port_base[s+1]` is disjoint
+                            // from every other switch's.
+                            unsafe {
+                                *ports_out.get_mut(st.dst[g] as usize) = pi as u16;
+                            }
+                            st.dst[g] += 1;
+                        }
+                    }
+                    // SAFETY: slot s is this task's alone.
+                    unsafe {
+                        *up_groups.get_mut(s) = upg;
+                    }
+                });
+            });
         }
 
         // by_level_up + level_offsets via counting sort (stable by id).
@@ -220,11 +339,24 @@ impl Prep {
         self.group_at(self.group_offsets[s] as usize + gi)
     }
 
+    /// Remote switch of flat group `g` (decoded from `group_meta`).
+    #[inline]
+    pub fn group_remote(&self, g: usize) -> SwitchId {
+        self.group_meta[g] >> 1
+    }
+
+    /// Uplink flag of flat group `g` (decoded from `group_meta`).
+    #[inline]
+    pub fn group_is_up(&self, g: usize) -> bool {
+        self.group_meta[g] & 1 != 0
+    }
+
     #[inline]
     fn group_at(&self, g: usize) -> GroupRef<'_> {
+        let meta = self.group_meta[g];
         GroupRef {
-            remote: self.group_remote[g],
-            up: self.group_up[g],
+            remote: meta >> 1,
+            up: meta & 1 != 0,
             ports: &self.ports
                 [self.port_offsets[g] as usize..self.port_offsets[g + 1] as usize],
         }
@@ -367,7 +499,10 @@ pub fn costs_into(topo: &Topology, prep: &Prep, reduction: DividerReduction, out
         let divider = &divider;
         for lvl in 1..nlv {
             let span = prep.level_span(lvl);
-            parallel_for_chunked(span.len(), 1, |i| {
+            // Chunked claims (a few per worker) amortize cursor traffic at
+            // the wide levels while stragglers still steal; each item is a
+            // whole cost row, so identity is claim-order independent.
+            parallel_for_chunked(span.len(), grain(span.len(), 8), |i| {
                 let r = span[i] as usize;
                 // SAFETY: this task exclusively writes row r and
                 // divider[r]; every read targets a strictly lower level,
@@ -445,7 +580,7 @@ pub fn costs_into(topo: &Topology, prep: &Prep, reduction: DividerReduction, out
         let cost = &cost;
         for lvl in (0..nlv.saturating_sub(1)).rev() {
             let span = prep.level_span(lvl);
-            parallel_for_chunked(span.len(), 1, |i| {
+            parallel_for_chunked(span.len(), grain(span.len(), 8), |i| {
                 let r = span[i] as usize;
                 // SAFETY: exclusive write of row r; reads target strictly
                 // higher levels, finalized by the per-level barrier.
@@ -716,8 +851,7 @@ mod tests {
         assert_eq!(p.leaves, fresh.leaves);
         assert_eq!(p.leaf_index, fresh.leaf_index);
         assert_eq!(p.group_offsets, fresh.group_offsets);
-        assert_eq!(p.group_remote, fresh.group_remote);
-        assert_eq!(p.group_up, fresh.group_up);
+        assert_eq!(p.group_meta, fresh.group_meta);
         assert_eq!(p.port_offsets, fresh.port_offsets);
         assert_eq!(p.ports, fresh.ports);
         assert_eq!(p.up_groups, fresh.up_groups);
@@ -725,6 +859,38 @@ mod tests {
         assert_eq!(p.level_offsets, fresh.level_offsets);
         assert_eq!(p.leaf_node_offsets, fresh.leaf_node_offsets);
         assert_eq!(p.leaf_nodes, fresh.leaf_nodes);
+    }
+
+    #[test]
+    fn build_into_thread_invariant() {
+        // The two-pass parallel CSR build must emit byte-identical tables
+        // at every thread count (claim order never reaches the output).
+        use crate::util::par::{set_threads, thread_override_lock};
+        let _g = thread_override_lock();
+        let t = PgftParams::small().build();
+        set_threads(Some(1));
+        let serial = Prep::new(&t);
+        set_threads(Some(8));
+        let par = Prep::new(&t);
+        set_threads(None);
+        assert_eq!(par.group_offsets, serial.group_offsets);
+        assert_eq!(par.group_meta, serial.group_meta);
+        assert_eq!(par.port_offsets, serial.port_offsets);
+        assert_eq!(par.ports, serial.ports);
+        assert_eq!(par.up_groups, serial.up_groups);
+    }
+
+    #[test]
+    fn group_meta_accessors_decode() {
+        let t = PgftParams::fig1().build();
+        let prep = Prep::new(&t);
+        for s in 0..t.switches.len() {
+            for (gi, g) in prep.groups(s).enumerate() {
+                let flat = prep.group_offsets[s] as usize + gi;
+                assert_eq!(prep.group_remote(flat), g.remote);
+                assert_eq!(prep.group_is_up(flat), g.up);
+            }
+        }
     }
 
     #[test]

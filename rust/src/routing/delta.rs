@@ -123,7 +123,8 @@ pub struct PrevProducts {
     leaf_node_offsets: Vec<u32>,
     leaf_nodes: Vec<u32>,
     group_offsets: Vec<u32>,
-    group_remote: Vec<SwitchId>,
+    /// Packed `remote << 1 | up` per group, mirroring [`Prep::group_meta`].
+    group_meta: Vec<u32>,
     port_offsets: Vec<u32>,
     ports: Vec<u16>,
     cost: Vec<u16>,
@@ -143,7 +144,7 @@ impl PrevProducts {
         copy(&mut self.leaf_node_offsets, &prep.leaf_node_offsets);
         copy(&mut self.leaf_nodes, &prep.leaf_nodes);
         copy(&mut self.group_offsets, &prep.group_offsets);
-        copy(&mut self.group_remote, &prep.group_remote);
+        copy(&mut self.group_meta, &prep.group_meta);
         copy(&mut self.port_offsets, &prep.port_offsets);
         copy(&mut self.ports, &prep.ports);
         copy(&mut self.cost, &costs.cost);
@@ -185,7 +186,7 @@ impl PrevProducts {
             leaf_node_offsets,
             leaf_nodes,
             group_offsets,
-            group_remote,
+            group_meta,
             port_offsets,
             ports,
             cost,
@@ -199,7 +200,7 @@ impl PrevProducts {
         self.leaf_node_offsets.clone_from(leaf_node_offsets);
         self.leaf_nodes.clone_from(leaf_nodes);
         self.group_offsets.clone_from(group_offsets);
-        self.group_remote.clone_from(group_remote);
+        self.group_meta.clone_from(group_meta);
         self.port_offsets.clone_from(port_offsets);
         self.ports.clone_from(ports);
         self.cost.clone_from(cost);
@@ -319,7 +320,7 @@ impl DirtySet {
             let (bits, changed) = (&mut self.bits, &self.cost_changed);
             bits[w0..w0 + self.words].copy_from_slice(&changed[w0..w0 + self.words]);
             for g in prep.group_offsets[s] as usize..prep.group_offsets[s + 1] as usize {
-                let r = prep.group_remote[g] as usize;
+                let r = prep.group_remote(g) as usize;
                 let rw0 = r * self.words;
                 for w in 0..self.words {
                     bits[w0 + w] |= changed[rw0 + w];
@@ -355,7 +356,10 @@ impl DirtySet {
         if n1 - n0 != p1 - p0 {
             return true;
         }
-        if prep.group_remote[n0..n1] != prev.group_remote[p0..p1] {
+        // Packed compare covers remote ids *and* up flags; a flipped up
+        // bit at equal remote can't happen without a level change (which
+        // trips ShapeChanged first), so this is at worst conservative.
+        if prep.group_meta[n0..n1] != prev.group_meta[p0..p1] {
             return true;
         }
         for (gn, gp) in (n0..n1).zip(p0..p1) {

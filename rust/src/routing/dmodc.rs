@@ -29,7 +29,7 @@ use super::common::{self, Costs, DividerReduction, Prep, INF};
 use super::engine::{Capabilities, RoutingEngine};
 use super::{Lft, RerouteWorkspace};
 use crate::topology::{NodeId, PortTarget, Topology};
-use crate::util::par::parallel_for_rows;
+use crate::util::par::{grain, parallel_for_rows, parallel_for_rows_chunked};
 use std::cell::RefCell;
 
 /// How node identifiers are assigned before the modulo arithmetic.
@@ -301,7 +301,12 @@ fn fill_row(
 /// (switch, destination).
 pub(crate) fn fill_rows(topo: &Topology, prep: &Prep, costs: &Costs, nids: &[u64], lft: &mut Lft) {
     let nn = topo.nodes.len();
-    parallel_for_rows(lft.raw_mut(), nn, |s, row| {
+    let ns = topo.switches.len();
+    // Destination-block sharding: each cursor claim is a contiguous block
+    // of switch rows, so a worker streams one contiguous LFT byte range
+    // exactly once (the full fill is memory-bandwidth bound at paper
+    // scale — see EXPERIMENTS.md §Paper-scale reroute).
+    parallel_for_rows_chunked(lft.raw_mut(), nn, grain(ns, 8), |s, row| {
         CLOSER.with(|cell| {
             let c = &mut *cell.borrow_mut();
             fill_row(topo, prep, costs, nids, s, c, row);
@@ -527,6 +532,10 @@ impl RoutingEngine for Engine {
     fn restore_snapshot(&mut self, snap: &super::snapshot::Snapshot, out: &mut Lft) -> bool {
         self.ws.restore_from(snap, out);
         true
+    }
+
+    fn last_timings(&self) -> Option<super::RerouteTimings> {
+        Some(self.ws.timings())
     }
 }
 

@@ -133,6 +133,13 @@ pub trait RoutingEngine: Send {
         false
     }
 
+    /// Per-stage wall times of the most recent reroute (see
+    /// [`RerouteTimings`](super::RerouteTimings)). Engines that don't
+    /// instrument their pipeline return `None`.
+    fn last_timings(&self) -> Option<super::RerouteTimings> {
+        None
+    }
+
     /// One-shot convenience: route `topo` into a fresh table.
     fn route_once(&mut self, topo: &Topology) -> Lft {
         let mut out = Lft::default();

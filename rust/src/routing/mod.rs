@@ -39,7 +39,7 @@ pub mod workspace;
 pub use delta::{DeltaConfig, DeltaOutcome, DeltaStats, FallbackReason};
 pub use engine::{Capabilities, RoutingEngine};
 pub use snapshot::Snapshot;
-pub use workspace::RerouteWorkspace;
+pub use workspace::{RerouteTimings, RerouteWorkspace};
 
 use crate::topology::{NodeId, PortTarget, SwitchId, Topology};
 

@@ -44,6 +44,35 @@ use super::{validity, Lft};
 use crate::topology::degrade::{self, DegradeScratch};
 use crate::topology::{NodeId, SwitchId, Topology};
 use std::collections::HashSet;
+use std::time::Instant;
+
+/// Per-stage wall times of the most recent reroute (seconds). Makes the
+/// paper-scale profile observable instead of guessed: the routing
+/// workspace fills `prep`/`costs`/`nids`/`fill` during
+/// [`RerouteWorkspace::reroute_into`] / `reroute_delta_into`, and the
+/// fabric manager adds `commit` around its table upload
+/// (`ManagerReport::timings`). Stages not run by an event (e.g. `fill`
+/// on a clean delta, `commit` outside a manager) stay 0.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct RerouteTimings {
+    /// CSR preprocessing ([`Prep::build_into`]).
+    pub prep_s: f64,
+    /// Algorithm 1 cost/divider sweeps.
+    pub costs_s: f64,
+    /// Algorithm 2 NID assignment.
+    pub nids_s: f64,
+    /// LFT row fill (full or partial).
+    pub fill_s: f64,
+    /// Table upload/commit (filled by the fabric manager, not here).
+    pub commit_s: f64,
+}
+
+impl RerouteTimings {
+    /// Sum of all recorded stages.
+    pub fn total_s(&self) -> f64 {
+        self.prep_s + self.costs_s + self.nids_s + self.fill_s + self.commit_s
+    }
+}
 
 /// Reusable state for repeated full reroutes (owned by `FabricManager`).
 pub struct RerouteWorkspace {
@@ -72,6 +101,8 @@ pub struct RerouteWorkspace {
     /// products. Consumed (and checked against the caller's buffer) by
     /// the next delta call; cleared by any full reroute.
     armed: Option<(usize, usize)>,
+    /// Per-stage wall times of the most recent reroute.
+    timings: RerouteTimings,
 }
 
 impl RerouteWorkspace {
@@ -89,7 +120,14 @@ impl RerouteWorkspace {
             dirty: delta::DirtySet::default(),
             routed: false,
             armed: None,
+            timings: RerouteTimings::default(),
         }
+    }
+
+    /// Per-stage wall times of the most recent reroute (`commit_s` is
+    /// always 0 here — the fabric manager owns the upload stage).
+    pub fn timings(&self) -> RerouteTimings {
+        self.timings
     }
 
     /// Rebuild the degraded topology in place (`degrade::apply_into`
@@ -114,8 +152,14 @@ impl RerouteWorkspace {
     /// Rebuild `prep`/`costs`/`nids` for `topo` into the reused buffers
     /// (the cheap pipeline stages, shared by the full and delta paths).
     fn rebuild_products(&mut self, topo: &Topology) {
+        self.timings = RerouteTimings::default();
+        let t0 = Instant::now();
         Prep::build_into(topo, &mut self.prep, &mut self.prep_scratch);
+        self.timings.prep_s = t0.elapsed().as_secs_f64();
+        let t0 = Instant::now();
         common::costs_into(topo, &self.prep, self.opts.reduction, &mut self.costs);
+        self.timings.costs_s = t0.elapsed().as_secs_f64();
+        let t0 = Instant::now();
         match self.opts.nid_order {
             NidOrder::Topological => dmodc::topological_nids_into(
                 topo,
@@ -131,6 +175,7 @@ impl RerouteWorkspace {
                 &mut self.nid_scratch,
             ),
         }
+        self.timings.nids_s = t0.elapsed().as_secs_f64();
     }
 
     /// Run the full Dmodc pipeline for `topo` into `out`, reusing every
@@ -139,8 +184,10 @@ impl RerouteWorkspace {
     /// [`RerouteWorkspace::alternatives_into`]).
     pub fn reroute_into(&mut self, topo: &Topology, out: &mut Lft) {
         self.rebuild_products(topo);
+        let t0 = Instant::now();
         out.reset(topo.switches.len(), topo.nodes.len());
         dmodc::fill_rows(topo, &self.prep, &self.costs, &self.nids, out);
+        self.timings.fill_s = t0.elapsed().as_secs_f64();
         self.routed = true;
         self.armed = None;
     }
@@ -241,6 +288,7 @@ impl RerouteWorkspace {
                 reason = Some(FallbackReason::Threshold);
             }
         }
+        let t0 = Instant::now();
         let outcome = match reason {
             Some(r) => {
                 out.reset(topo.switches.len(), topo.nodes.len());
@@ -261,6 +309,7 @@ impl RerouteWorkspace {
                 DeltaOutcome::Delta(stats)
             }
         };
+        self.timings.fill_s = t0.elapsed().as_secs_f64();
         self.routed = true;
         outcome
     }
@@ -456,6 +505,23 @@ mod tests {
         let outcome = ws.reroute_delta_into(&t, &mut lft, &mut touched);
         let want = route_reference(&t, &Options::default());
         assert_eq!(lft.raw(), want.raw(), "{outcome:?}");
+    }
+
+    #[test]
+    fn timings_populated_by_both_paths() {
+        let t = PgftParams::fig1().build();
+        let mut ws = RerouteWorkspace::default();
+        assert_eq!(ws.timings(), RerouteTimings::default());
+        let mut out = Lft::default();
+        ws.reroute_into(&t, &mut out);
+        let full = ws.timings();
+        assert!(full.prep_s > 0.0 && full.costs_s > 0.0 && full.fill_s > 0.0);
+        assert_eq!(full.commit_s, 0.0);
+        assert!(full.total_s() >= full.prep_s + full.fill_s);
+        let mut touched = Vec::new();
+        ws.reroute_delta_into(&t, &mut out, &mut touched);
+        let delta = ws.timings();
+        assert!(delta.prep_s > 0.0 && delta.costs_s > 0.0);
     }
 
     #[test]

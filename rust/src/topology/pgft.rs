@@ -35,24 +35,46 @@ pub struct PgftParams {
 }
 
 impl PgftParams {
+    /// Panicking constructor for literal in-code shapes; [`PgftParams::try_new`]
+    /// is the validated equivalent every untrusted input (CLI flags, env
+    /// specs) routes through.
     pub fn new(m: Vec<u32>, w: Vec<u32>, p: Vec<u32>) -> Self {
+        Self::try_new(m, w, p).unwrap_or_else(|e| panic!("invalid PGFT parameters: {e}"))
+    }
+
+    /// Validated constructor. Rejects height-1 trees (a single leaf level
+    /// has no fabric to route), mismatched list lengths, zero entries
+    /// (`m_i = 0` describes an empty fabric; `w_i`/`p_i = 0` disconnect a
+    /// level), and multi-homed nodes (`w_1`/`p_1 ≠ 1`).
+    pub fn try_new(m: Vec<u32>, w: Vec<u32>, p: Vec<u32>) -> Result<Self, String> {
         let h = m.len();
-        assert!(h >= 1, "PGFT needs at least one level");
-        assert_eq!(w.len(), h, "w must have h entries");
-        assert_eq!(p.len(), h, "p must have h entries");
-        assert!(
-            m.iter().chain(&w).chain(&p).all(|&x| x >= 1),
-            "all PGFT parameters must be >= 1"
-        );
-        assert_eq!(w[0], 1, "nodes must be single-homed (w_1 = 1)");
-        assert_eq!(p[0], 1, "nodes must be single-homed (p_1 = 1)");
-        Self {
+        if h < 2 {
+            return Err(format!(
+                "PGFT needs at least two levels (height-1 trees have no fabric), got h = {h}"
+            ));
+        }
+        if w.len() != h || p.len() != h {
+            return Err(format!(
+                "m, w, p must have the same length (m has {h}, w has {}, p has {})",
+                w.len(),
+                p.len()
+            ));
+        }
+        for (name, list) in [("m", &m), ("w", &w), ("p", &p)] {
+            if let Some(i) = list.iter().position(|&x| x == 0) {
+                return Err(format!("all PGFT parameters must be >= 1 ({name}_{} is 0)", i + 1));
+            }
+        }
+        if w[0] != 1 || p[0] != 1 {
+            return Err("w_1 and p_1 must be 1 (single-homed nodes)".into());
+        }
+        Ok(Self {
             h,
             m,
             w,
             p,
             uuid_mode: UuidMode::Scrambled,
-        }
+        })
     }
 
     pub fn with_uuid_mode(mut self, mode: UuidMode) -> Self {
@@ -74,13 +96,22 @@ impl PgftParams {
         let m = parse_list(parts[0])?;
         let w = parse_list(parts[1])?;
         let p = parse_list(parts[2])?;
-        if w.len() != m.len() || p.len() != m.len() {
-            return Err("m, w, p must have the same length".into());
+        Self::try_new(m, w, p)
+    }
+
+    /// Look up a named preset (`fig1` | `small` | `paper_8640` | `huge`) —
+    /// the `--preset` flag of `dmodc-fm`, `fault_storm`, and
+    /// `reroute_smoke`.
+    pub fn preset(name: &str) -> Result<Self, String> {
+        match name {
+            "fig1" => Ok(Self::fig1()),
+            "small" => Ok(Self::small()),
+            "paper_8640" => Ok(Self::paper_8640()),
+            "huge" => Ok(Self::huge()),
+            other => Err(format!(
+                "unknown preset {other:?} (expected fig1, small, paper_8640, or huge)"
+            )),
         }
-        if w[0] != 1 || p[0] != 1 {
-            return Err("w_1 and p_1 must be 1 (single-homed nodes)".into());
-        }
-        Ok(Self::new(m, w, p))
     }
 
     /// The paper's Figure 1 example: `PGFT(3; 2,2,3; 1,2,2; 1,2,1)`
@@ -100,6 +131,32 @@ impl PgftParams {
     /// links, 3 levels).
     pub fn small() -> Self {
         Self::new(vec![4, 6, 3], vec![1, 2, 2], vec![1, 2, 1])
+    }
+
+    /// The paper-scale preset backing the headline sub-second claim
+    /// ("complete rerouting of topologies with tens of thousands of nodes
+    /// in less than a second"): `PGFT(3; 36,27,28; 1,9,14; 1,1,1)` —
+    /// 27,216 nodes over 756 leaf + 252 mid + 126 top = 1,134 switches,
+    /// leaf blocking factor 4 (36 nodes / 9 uplink groups per leaf, like
+    /// the Figure-2 testbed).
+    pub fn huge() -> Self {
+        Self::new(vec![36, 27, 28], vec![1, 9, 14], vec![1, 1, 1])
+    }
+
+    /// Generate a [`PgftParams::paper_8640`]-family shape with roughly
+    /// `target_nodes` nodes (the nodes-vs-latency curve generator):
+    /// leaves keep 24 nodes and a ~4 blocking factor while the
+    /// upper-level widths scale by `s = sqrt(target / 8640)` — node count
+    /// grows with `m_2 · m_3`, i.e. quadratically in `s`.
+    /// `scaled(8640)` is exactly `paper_8640()`.
+    pub fn scaled(target_nodes: usize) -> Self {
+        let s = (target_nodes.max(1) as f64 / 8640.0).sqrt();
+        let scale = |base: u32| ((base as f64 * s).round() as u32).max(1);
+        Self::new(
+            vec![24, scale(15), scale(24)],
+            vec![1, scale(6), scale(8)],
+            vec![1, 1, 1],
+        )
     }
 
     /// Total node count `Π m_i`.
@@ -203,6 +260,25 @@ impl PgftParams {
     }
 }
 
+/// Emits the [`PgftParams::parse`] grammar (`"m1,..;w1,..;p1,.."`), so
+/// `parse(&params.to_string())` round-trips any valid shape.
+impl std::fmt::Display for PgftParams {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        for (li, list) in [&self.m, &self.w, &self.p].into_iter().enumerate() {
+            if li > 0 {
+                f.write_str(";")?;
+            }
+            for (i, x) in list.iter().enumerate() {
+                if i > 0 {
+                    f.write_str(",")?;
+                }
+                write!(f, "{x}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -283,6 +359,76 @@ mod tests {
         assert!(PgftParams::parse("2,2;1,2,2;1,2,1").is_err());
         assert!(PgftParams::parse("2,2,3;2,2,2;1,2,1").is_err());
         assert!(PgftParams::parse("garbage").is_err());
+    }
+
+    #[test]
+    fn parse_rejects_degenerate_shapes() {
+        // Height-1 trees have no fabric: a lone leaf level can't route.
+        let e = PgftParams::parse("4;1;1").unwrap_err();
+        assert!(e.contains("two levels"), "unexpected error: {e}");
+        // Zero entries must be a clean Err, not an assert panic.
+        let e = PgftParams::parse("0,2,3;1,2,2;1,2,1").unwrap_err();
+        assert!(e.contains("m_1"), "unexpected error: {e}");
+        let e = PgftParams::parse("2,2,3;1,0,2;1,2,1").unwrap_err();
+        assert!(e.contains("w_2"), "unexpected error: {e}");
+        let e = PgftParams::parse("2,2,3;1,2,2;1,2,0").unwrap_err();
+        assert!(e.contains("p_3"), "unexpected error: {e}");
+        // Multi-homed nodes are out of scope (paper requires unique λ_n).
+        let e = PgftParams::parse("2,2,3;1,2,2;2,2,1").unwrap_err();
+        assert!(e.contains("single-homed"), "unexpected error: {e}");
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid PGFT parameters")]
+    fn new_panics_on_invalid() {
+        PgftParams::new(vec![0, 2], vec![1, 2], vec![1, 1]);
+    }
+
+    #[test]
+    fn display_roundtrips_through_parse() {
+        for p in [
+            PgftParams::fig1(),
+            PgftParams::small(),
+            PgftParams::paper_8640(),
+            PgftParams::huge(),
+            PgftParams::scaled(2000),
+        ] {
+            assert_eq!(PgftParams::parse(&p.to_string()).unwrap(), p);
+        }
+        assert_eq!(PgftParams::fig1().to_string(), "2,2,3;1,2,2;1,2,1");
+    }
+
+    #[test]
+    fn preset_lookup() {
+        assert_eq!(PgftParams::preset("huge").unwrap(), PgftParams::huge());
+        assert_eq!(PgftParams::preset("fig1").unwrap(), PgftParams::fig1());
+        assert!(PgftParams::preset("mega").is_err());
+    }
+
+    #[test]
+    fn huge_counts() {
+        let p = PgftParams::huge();
+        assert_eq!(p.num_nodes(), 27_216);
+        assert_eq!(p.elems_at(1), 756);
+        assert_eq!(p.elems_at(2), 252);
+        assert_eq!(p.elems_at(3), 126);
+        assert_eq!(p.num_switches(), 1134);
+        // Leaf blocking factor: 36 nodes / (w2*p2 = 9 uplinks) = 4.
+    }
+
+    #[test]
+    fn scaled_hits_paper_preset_and_orders_sizes() {
+        assert_eq!(PgftParams::scaled(8640), PgftParams::paper_8640());
+        // The curve generator is monotone across the bench targets.
+        let sizes: Vec<usize> = [500, 2000, 8640, 27_000]
+            .iter()
+            .map(|&t| PgftParams::scaled(t).num_nodes())
+            .collect();
+        for pair in sizes.windows(2) {
+            assert!(pair[0] < pair[1], "scaled() not monotone: {sizes:?}");
+        }
+        // Degenerate targets still build something valid.
+        assert!(PgftParams::scaled(0).num_nodes() >= 24);
     }
 
     #[test]

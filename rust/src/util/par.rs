@@ -37,6 +37,15 @@ pub fn set_threads(n: Option<usize>) {
     THREAD_OVERRIDE.store(n.map_or(0, |v| v.max(1)), Ordering::SeqCst);
 }
 
+/// Unit tests that touch the global [`set_threads`] override serialize on
+/// this lock (the harness runs `#[test]`s concurrently in one process).
+#[cfg(test)]
+pub(crate) fn thread_override_lock() -> MutexGuard<'static, ()> {
+    static L: OnceLock<Mutex<()>> = OnceLock::new();
+    let m = L.get_or_init(|| Mutex::new(()));
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
 /// Number of worker threads to use: [`set_threads`] override, else the
 /// `DMODC_THREADS` env var (read once at first use — `std::env::var`
 /// allocates, and this is called on the allocation-free hot path), else
@@ -250,6 +259,16 @@ where
     parallel_for_chunked(n, 1, body);
 }
 
+/// Work-stealing grain for an `n`-item region: aim for `oversub` chunks
+/// per worker so stragglers can steal from fast finishers while cursor
+/// contention stays amortized. `oversub` ≈ 4–8 suits the routing sweeps
+/// (per-item cost varies with switch radix but not by orders of
+/// magnitude); the result is always ≥ 1, and for small `n` it degrades to
+/// 1 (identical to the old per-item claims).
+pub fn grain(n: usize, oversub: usize) -> usize {
+    (n / (num_threads() * oversub.max(1)).max(1)).max(1)
+}
+
 /// Like [`parallel_for`] but workers claim `chunk`-sized blocks from the
 /// cursor to amortize contention for cheap bodies.
 pub fn parallel_for_chunked<F>(n: usize, chunk: usize, body: F)
@@ -368,6 +387,19 @@ where
     T: Send,
     F: Fn(usize, &mut [T]) + Sync,
 {
+    parallel_for_rows_chunked(data, width, 1, f);
+}
+
+/// [`parallel_for_rows`] with `chunk`-row claims: the cursor hands each
+/// worker a *contiguous* block of rows, so a claim streams one contiguous
+/// byte range of `data` exactly once (destination-block sharding for the
+/// LFT fill — sequential-write friendly, with false sharing possible only
+/// at block boundaries). `f` still receives one row at a time.
+pub fn parallel_for_rows_chunked<T, F>(data: &mut [T], width: usize, chunk: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
     if width == 0 || data.is_empty() {
         return;
     }
@@ -375,7 +407,7 @@ where
     debug_assert_eq!(rows * width, data.len(), "data must be whole rows");
     let shared = SharedMut::new(data);
     let shared = &shared;
-    parallel_for_chunked(rows, 1, |r| {
+    parallel_for_chunked(rows, chunk, |r| {
         // SAFETY: rows are disjoint and each row index is claimed once.
         let row = unsafe { shared.slice_mut(r * width, width) };
         f(r, row);
@@ -576,7 +608,37 @@ mod tests {
     }
 
     #[test]
+    fn parallel_for_rows_chunked_disjoint() {
+        // Same disjointness guarantee with multi-row claims, including a
+        // chunk that doesn't divide the row count.
+        let mut data = vec![0u32; 29 * 5];
+        parallel_for_rows_chunked(&mut data, 5, 4, |r, row| {
+            for (i, x) in row.iter_mut().enumerate() {
+                *x = (r * 100 + i) as u32;
+            }
+        });
+        for r in 0..29 {
+            for i in 0..5 {
+                assert_eq!(data[r * 5 + i], (r * 100 + i) as u32);
+            }
+        }
+    }
+
+    #[test]
+    fn grain_bounds() {
+        let _g = thread_override_lock();
+        set_threads(Some(4));
+        assert_eq!(grain(0, 8), 1);
+        assert_eq!(grain(5, 8), 1); // small n degrades to per-item claims
+        assert_eq!(grain(3200, 8), 100); // 3200 / (4 * 8)
+        assert_eq!(grain(3200, 0), 800); // oversub clamps to >= 1
+        set_threads(None);
+        assert!(grain(1_000_000, 8) >= 1);
+    }
+
+    #[test]
     fn set_threads_override_applies() {
+        let _g = thread_override_lock();
         set_threads(Some(1));
         assert_eq!(num_threads(), 1);
         set_threads(Some(3));

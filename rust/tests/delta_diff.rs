@@ -166,7 +166,15 @@ fn scripted_cable_storm_takes_delta_tier_and_matches() {
     // the delta tier (not just fall back) while staying bit-identical,
     // for both divider reductions.
     let _g = lock();
-    for params in [PgftParams::fig1(), PgftParams::small()] {
+    for params in [
+        PgftParams::fig1(),
+        PgftParams::small(),
+        // A huge()-family shape (24-node leaves, scaled-down upper
+        // levels, 960 nodes — small enough for the debug sweep and with
+        // w_2 = 2 so single-cable faults stay delta-eligible); the real
+        // preset is covered by the #[ignore] paper-scale storm below.
+        PgftParams::scaled(1000),
+    ] {
         let base = params.build();
         let cables = degrade::cables(&base);
         for reduction in [DividerReduction::Max, DividerReduction::FirstPath] {
@@ -211,6 +219,57 @@ fn scripted_cable_storm_takes_delta_tier_and_matches() {
             );
         }
     }
+}
+
+/// Paper-scale delta storm on the ~27k-node `huge()` preset: a cable
+/// fault/recovery script where every step's delta result is compared to
+/// a *second workspace's* full `reroute_into` of the same topology.
+/// (Per-step `route_reference` at this scale would dominate the CI job;
+/// the workspace full path is itself reference-checked by
+/// `equivalence::huge_pipeline_bit_identical_to_reference`.)
+#[test]
+#[ignore = "paper-scale; run in CI's release scale-bench job"]
+fn huge_cable_storm_delta_matches_full_reroute() {
+    let _g = lock();
+    let base = PgftParams::huge().build();
+    let cables = degrade::cables(&base);
+    let stride = cables.len() / 3;
+    let script: Vec<(SwitchId, u16)> = vec![cables[0], cables[stride], cables[2 * stride]];
+    let mut steps: Vec<HashSet<(SwitchId, u16)>> = Vec::new();
+    let mut acc: HashSet<(SwitchId, u16)> = HashSet::new();
+    steps.push(acc.clone());
+    for &c in &script {
+        acc.insert(c);
+        steps.push(acc.clone());
+    }
+    for &c in script.iter().rev() {
+        acc.remove(&c);
+        steps.push(acc.clone());
+    }
+    for threads in [1, 8] {
+        par::set_threads(Some(threads));
+        let mut ws = RerouteWorkspace::default();
+        let mut full_ws = RerouteWorkspace::default();
+        let mut topo = Topology::default();
+        let mut lft = Lft::default();
+        let mut want = Lft::default();
+        let mut touched = Vec::new();
+        let mut delta_steps = 0usize;
+        for (i, dead) in steps.iter().enumerate() {
+            ws.materialize(&base, &HashSet::new(), dead, &mut topo);
+            let outcome = ws.reroute_delta_into(&topo, &mut lft, &mut touched);
+            if outcome.is_delta() {
+                delta_steps += 1;
+            }
+            full_ws.reroute_into(&topo, &mut want);
+            assert_eq!(lft.raw(), want.raw(), "step {i} t={threads} ({outcome:?})");
+        }
+        assert!(
+            delta_steps > 0,
+            "t={threads}: the paper-scale storm never reached the delta tier"
+        );
+    }
+    par::set_threads(None);
 }
 
 #[test]

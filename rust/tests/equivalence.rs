@@ -94,6 +94,11 @@ fn scenario_topologies() -> Vec<(String, Topology)> {
         ("fig1", PgftParams::fig1()),
         ("small", PgftParams::small()),
         ("mid", PgftParams::parse("8,6,6;1,3,4;1,2,1").unwrap()),
+        // A huge()-family shape (24-node leaves, scaled-down upper
+        // levels, 960 nodes) kept small enough for the debug-profile
+        // sweep; the real ~27k-node preset runs in the #[ignore]
+        // release test below.
+        ("scaled", PgftParams::scaled(1000)),
     ] {
         let base = params.build();
         let mut rng = Rng::new(0xD0D0 ^ name.len() as u64);
@@ -213,6 +218,37 @@ fn manager_storm_matches_reference_per_event() {
         let (topo, lft) = mgr.current();
         let want = route_reference(topo, &Options::default());
         assert_eq!(lft.raw(), want.raw());
+    }
+    par::set_threads(None);
+}
+
+/// The paper-scale acceptance check: on the ~27k-node `huge()` preset the
+/// whole optimized pipeline (parallel `Prep` build, chunked cost sweeps,
+/// destination-block LFT fill) stays bit-identical to the serial
+/// reference, intact and under a spine fault, at 1 and 8 threads.
+/// `#[ignore]`-by-default: route_reference at this scale only fits CI's
+/// release `scale-bench` job.
+#[test]
+#[ignore = "paper-scale; run in CI's release scale-bench job"]
+fn huge_pipeline_bit_identical_to_reference() {
+    let _g = lock();
+    let base = PgftParams::huge().build();
+    let spines = degrade::removable_switches(&base);
+    let degraded = degrade::apply(&base, &[spines[0]].into_iter().collect(), &HashSet::new());
+    for (name, topo) in [("intact", &base), ("spine-fault", &degraded)] {
+        let reference = route_reference(topo, &Options::default());
+        for threads in [1, 8] {
+            par::set_threads(Some(threads));
+            let mut ws = RerouteWorkspace::default();
+            let mut out = Lft::default();
+            ws.reroute_into(topo, &mut out);
+            assert_eq!(out.raw(), reference.raw(), "huge/{name} t={threads}");
+            let t = ws.timings();
+            assert!(
+                t.prep_s > 0.0 && t.costs_s > 0.0 && t.fill_s > 0.0,
+                "huge/{name} t={threads}: stage timings must be populated, got {t:?}"
+            );
+        }
     }
     par::set_threads(None);
 }

@@ -1,0 +1,164 @@
+//! Property checks for PGFT shape arithmetic, plus the paper-scale
+//! `huge()` build (ISSUE: paper-scale reroute).
+//!
+//! The closed forms `elems_at` / `num_switches` / `num_nodes` drive every
+//! buffer size in the reroute path, so they are checked against a
+//! brute-force level enumeration (actually materialising every digit tuple
+//! and counting) on randomized params up to height 4. The `huge()` build
+//! itself is `#[ignore]`-by-default — CI's `scale-bench` release job runs
+//! it with `-- --ignored`; it is too slow for the debug-profile tier-1
+//! sweep.
+
+use dmodc::prelude::*;
+use dmodc::util::prop::{check, Check, Config};
+
+/// Draw a valid random PGFT shape of height 2..=4, with per-level radixes
+/// growing with the run's size hint (small cases first).
+fn gen_params(rng: &mut Rng, size: f64) -> PgftParams {
+    let h = 2 + rng.gen_range(3); // 2..=4
+    let hi = 1 + (5.0 * size) as usize; // radix cap 2..=6
+    let draw = |rng: &mut Rng| 1 + rng.gen_range(hi) as u32;
+    let m: Vec<u32> = (0..h).map(|_| draw(rng)).collect();
+    let mut w: Vec<u32> = (0..h).map(|_| draw(rng)).collect();
+    let mut p: Vec<u32> = (0..h).map(|_| draw(rng)).collect();
+    w[0] = 1; // single-homed nodes
+    p[0] = 1;
+    PgftParams::new(m, w, p)
+}
+
+/// Shrink by decrementing one radix at a time (towards all-ones).
+fn shrink_params(p: &PgftParams) -> Vec<PgftParams> {
+    let mut out = Vec::new();
+    for (li, list) in [&p.m, &p.w, &p.p].into_iter().enumerate() {
+        for i in 0..list.len() {
+            if list[i] > 1 && !(li > 0 && i == 0) {
+                let mut cand = p.clone();
+                match li {
+                    0 => cand.m[i] -= 1,
+                    1 => cand.w[i] -= 1,
+                    _ => cand.p[i] -= 1,
+                }
+                out.push(cand);
+            }
+        }
+    }
+    out
+}
+
+/// Count level-`l` elements the slow way: enumerate every digit tuple
+/// (digit `i` has radix `w_i` for `i < l`, `m_i` for `i >= l`) with an
+/// odometer and count how many distinct tuples exist.
+fn brute_force_elems(p: &PgftParams, l: usize) -> usize {
+    let radix = |i: usize| -> usize {
+        if i < l {
+            p.w[i] as usize
+        } else {
+            p.m[i] as usize
+        }
+    };
+    let mut digits = vec![0usize; p.h];
+    let mut count = 0usize;
+    loop {
+        count += 1;
+        // Odometer increment; overflow of the last digit ends enumeration.
+        let mut i = 0;
+        loop {
+            digits[i] += 1;
+            if digits[i] < radix(i) {
+                break;
+            }
+            digits[i] = 0;
+            i += 1;
+            if i == p.h {
+                return count;
+            }
+        }
+    }
+}
+
+#[test]
+fn closed_forms_match_brute_force_enumeration() {
+    check(
+        "pgft-closed-forms",
+        Config::default(),
+        gen_params,
+        shrink_params,
+        |p| {
+            for l in 0..=p.h {
+                let bf = brute_force_elems(p, l);
+                if p.elems_at(l) != bf {
+                    return Check::Fail(format!(
+                        "elems_at({l}) = {} but enumeration found {bf}",
+                        p.elems_at(l)
+                    ));
+                }
+            }
+            if p.num_nodes() != brute_force_elems(p, 0) {
+                return Check::Fail(format!(
+                    "num_nodes() = {} but level-0 enumeration found {}",
+                    p.num_nodes(),
+                    brute_force_elems(p, 0)
+                ));
+            }
+            let switches: usize = (1..=p.h).map(|l| brute_force_elems(p, l)).sum();
+            Check::from_bool(
+                p.num_switches() == switches,
+                &format!(
+                    "num_switches() = {} but per-level enumeration sums to {switches}",
+                    p.num_switches()
+                ),
+            )
+        },
+    );
+}
+
+#[test]
+fn counts_match_built_topology() {
+    // The closed forms must also agree with what `build()` materialises.
+    check(
+        "pgft-build-counts",
+        Config {
+            cases: 12, // build() is the expensive part; fewer cases
+            ..Config::default()
+        },
+        |rng, size| gen_params(rng, 0.6 * size), // keep builds small
+        shrink_params,
+        |p| {
+            let t = p.build();
+            if t.nodes.len() != p.num_nodes() {
+                return Check::Fail(format!(
+                    "build produced {} nodes, num_nodes() says {}",
+                    t.nodes.len(),
+                    p.num_nodes()
+                ));
+            }
+            Check::from_bool(
+                t.switches.len() == p.num_switches(),
+                &format!(
+                    "build produced {} switches, num_switches() says {}",
+                    t.switches.len(),
+                    p.num_switches()
+                ),
+            )
+        },
+    );
+}
+
+/// The ~27k-node paper-scale preset builds with the documented counts.
+/// Release-profile only (CI scale-bench job): a debug build of 1,134
+/// switches × 27,216 nodes is too slow for the tier-1 sweep.
+#[test]
+#[ignore = "paper-scale build; run in CI's release scale-bench job"]
+fn huge_builds_with_expected_counts() {
+    let p = PgftParams::huge();
+    assert_eq!(p.num_nodes(), 27_216);
+    assert_eq!(p.elems_at(1), 756, "leaf switches");
+    assert_eq!(p.elems_at(2), 252, "mid switches");
+    assert_eq!(p.elems_at(3), 126, "top switches");
+    assert_eq!(p.num_switches(), 1_134);
+
+    let t = p.build();
+    assert_eq!(t.nodes.len(), 27_216);
+    assert_eq!(t.switches.len(), 1_134);
+    t.check_invariants().expect("huge() invariants");
+}
