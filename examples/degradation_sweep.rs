@@ -12,7 +12,7 @@ use dmodc::analysis::campaign::{self, CampaignConfig, Schedule};
 use dmodc::prelude::*;
 use dmodc::util::cli::Args;
 use dmodc::util::table::Table;
-use std::time::Instant;
+use dmodc::util::time::now;
 
 fn main() {
     let p = Args::new("degradation_sweep", "Figure 4-style risk-vs-degradation sweep")
@@ -79,7 +79,7 @@ fn main() {
         cfg.rows(),
         cfg.schedule.name()
     );
-    let t0 = Instant::now();
+    let t0 = now();
     let (rows, stats) = campaign::run_with_stats(&topo, &cfg);
     let secs = t0.elapsed().as_secs_f64();
     println!("fork stats: {}", stats.render());

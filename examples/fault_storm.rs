@@ -68,15 +68,17 @@ fn main() {
             ..Default::default()
         },
     );
-    let manager_thread = std::thread::spawn(move || {
+    let manager_thread = dmodc::util::sync::thread::spawn_named("fabric-manager", move || {
         mgr.run_stream(erx, rtx);
         mgr
-    });
-    let producer = std::thread::spawn(move || {
+    })
+    .expect("spawn manager");
+    let producer = dmodc::util::sync::thread::spawn_named("event-producer", move || {
         for e in schedule {
             etx.send(e).unwrap();
         }
-    });
+    })
+    .expect("spawn producer");
 
     let mut tab = Table::new(&["#", "reroute", "valid", "entriesΔ", "blocksΔ", "alive"]);
     let mut worst = 0f64;

@@ -9,7 +9,7 @@ use dmodc::prelude::*;
 use dmodc::routing::registry;
 use dmodc::runtime::{AnalysisExecutor, ArtifactRegistry};
 use dmodc::util::table::{fmt_duration, Table};
-use std::time::Instant;
+use dmodc::util::time::now;
 
 fn main() {
     let reg = ArtifactRegistry::default_location();
@@ -32,7 +32,7 @@ fn main() {
     let perms: Vec<Vec<u32>> = (0..128).map(|_| rng.permutation(n)).collect();
 
     // Native baseline.
-    let t0 = Instant::now();
+    let t0 = now();
     let native: Vec<u64> = perms.iter().map(|p| an.perm_max_load(p)).collect();
     let native_dt = t0.elapsed().as_secs_f64();
 
@@ -49,7 +49,7 @@ fn main() {
             Ok(Some(exe)) => {
                 // Warm once (compile happens at bind; first execute warms).
                 let _ = exe.run(&perms[..1]).unwrap();
-                let t0 = Instant::now();
+                let t0 = now();
                 let got = exe.run(&perms).unwrap();
                 let dt = t0.elapsed().as_secs_f64();
                 let parity = got == native;

@@ -28,9 +28,8 @@ use dmodc::analysis::congestion::{default_block, PermEngine};
 use dmodc::analysis::paths::{PathTensor, TensorUpdate};
 use dmodc::prelude::*;
 use dmodc::routing::registry;
-use dmodc::util::time::bench;
+use dmodc::util::time::{bench, now};
 use std::collections::HashSet;
-use std::time::Instant;
 
 fn main() {
     let spec = std::env::var("ANALYSIS_PGFT").unwrap_or_else(|_| "16,9,12;1,4,6;1,1,1".into());
@@ -111,11 +110,11 @@ fn main() {
         workers: 0,
         ..CampaignConfig::default()
     };
-    let t0 = Instant::now();
+    let t0 = now();
     let (rows, stats) = campaign::run_with_stats(&topo, &base_cfg);
     let campaign_secs = t0.elapsed().as_secs_f64();
     let samples_per_s = rows.len() as f64 / campaign_secs.max(1e-9);
-    let t0 = Instant::now();
+    let t0 = now();
     let unforked_rows = campaign::run(
         &topo,
         &CampaignConfig {
@@ -144,10 +143,10 @@ fn main() {
             workers: 0,
             ..CampaignConfig::default()
         };
-        let t0 = Instant::now();
+        let t0 = now();
         let (rows_f, st) = campaign::run_with_stats(&topo, &cfg);
         let secs_f = t0.elapsed().as_secs_f64();
-        let t0 = Instant::now();
+        let t0 = now();
         let rows_u = campaign::run(
             &topo,
             &CampaignConfig {

@@ -1,0 +1,13 @@
+//! Loom harness shell: re-compiles the main crate's `util::sync` facade
+//! and `util::par` pool from their canonical sources. With
+//! `RUSTFLAGS="--cfg loom"` the facade resolves to `loom::sync`/
+//! `loom::thread`, so the models in `tests/models.rs` explore every
+//! interleaving of the exact production pool code.
+
+pub mod util {
+    #[path = "../../../src/util/sync.rs"]
+    pub mod sync;
+
+    #[path = "../../../src/util/par.rs"]
+    pub mod par;
+}

@@ -1,0 +1,127 @@
+//! Loom models for the worker-pool job-handoff lifecycle.
+//!
+//! Each model constructs a fresh instance [`Pool`] inside the iteration
+//! (loom requires all synchronization objects to be born under its
+//! scheduler) and ends with [`Pool::shutdown`] so every spawned thread
+//! terminates — loom rejects explorations that leak live threads.
+//!
+//! Run with:
+//!
+//!     RUSTFLAGS="--cfg loom" LOOM_MAX_PREEMPTIONS=3 cargo test --release
+//!
+//! What the models prove, over *every* interleaving loom explores:
+//!
+//! * `chunk_claiming_exactly_once` — the Relaxed atomic cursor hands each
+//!   index to exactly one participant (the ordering table's claim that
+//!   RMW atomicity alone suffices for disjointness);
+//! * `two_consecutive_regions_handoff` — the seq-numbered publication
+//!   protocol never double-runs or skips a job when a region is submitted
+//!   while workers are still parking from the previous one;
+//! * `nested_region_runs_inline` — a body opening another region runs it
+//!   inline on the calling thread: no deadlock, every inner index once;
+//! * `worker_panic_propagates` — a panicking body surfaces as a panic on
+//!   the submitting thread and the pool stays usable afterwards.
+
+#![cfg(loom)]
+
+use dmodc_loom::util::par::Pool;
+use loom::sync::Arc;
+use loom::sync::atomic::{AtomicUsize, Ordering};
+
+#[test]
+fn chunk_claiming_exactly_once() {
+    loom::model(|| {
+        let pool = Pool::new();
+        let n = 3;
+        let hits: Arc<Vec<AtomicUsize>> =
+            Arc::new((0..n).map(|_| AtomicUsize::new(0)).collect());
+        {
+            let hits = Arc::clone(&hits);
+            // 3 participants (submitter + 2 workers) racing a 3-index range.
+            pool.parallel_for_chunked_with(3, n, 1, move |i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "index {i} not claimed exactly once");
+        }
+        pool.shutdown();
+    });
+}
+
+#[test]
+fn two_consecutive_regions_handoff() {
+    loom::model(|| {
+        let pool = Pool::new();
+        let n = 2;
+        for round in 0..2u64 {
+            let total = Arc::new(AtomicUsize::new(0));
+            {
+                let total = Arc::clone(&total);
+                pool.parallel_for_chunked_with(2, n, 1, move |i| {
+                    total.fetch_add(i + 1, Ordering::Relaxed);
+                });
+            }
+            assert_eq!(
+                total.load(Ordering::Relaxed),
+                n * (n + 1) / 2,
+                "round {round} lost or double-ran an index"
+            );
+        }
+        pool.shutdown();
+    });
+}
+
+#[test]
+fn nested_region_runs_inline() {
+    loom::model(|| {
+        let pool = Pool::new();
+        let n = 2;
+        let hits: Arc<Vec<AtomicUsize>> =
+            Arc::new((0..n * n).map(|_| AtomicUsize::new(0)).collect());
+        {
+            let hits = Arc::clone(&hits);
+            let pool_ref = &pool;
+            pool.parallel_for_chunked_with(2, n, 1, move |i| {
+                let hits = Arc::clone(&hits);
+                // Nested region: must run inline on this thread, never
+                // touching the (busy) pool slot — a deadlock here would
+                // show up as a loom exploration that cannot terminate.
+                pool_ref.parallel_for_chunked_with(2, n, 1, move |j| {
+                    hits[i * n + j].fetch_add(1, Ordering::Relaxed);
+                });
+            });
+        }
+        for (k, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "inner index {k} not run exactly once");
+        }
+        pool.shutdown();
+    });
+}
+
+#[test]
+fn worker_panic_propagates() {
+    loom::model(|| {
+        let pool = Pool::new();
+        let n = 2;
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.parallel_for_chunked_with(2, n, 1, |i| {
+                if i == 1 {
+                    panic!("intentional model panic");
+                }
+            });
+        }));
+        assert!(r.is_err(), "a panicking body must propagate to the submitter");
+        // The pool survives the panicked region: the next region still
+        // completes and observes every index.
+        let total = Arc::new(AtomicUsize::new(0));
+        {
+            let total = Arc::clone(&total);
+            pool.parallel_for_chunked_with(2, n, 1, move |i| {
+                total.fetch_add(i + 1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(total.load(Ordering::Relaxed), n * (n + 1) / 2);
+        pool.shutdown();
+    });
+}

@@ -70,9 +70,9 @@ use crate::topology::degrade::{self, DegradeScratch, Equipment};
 use crate::topology::{SwitchId, Topology};
 use crate::util::par::{self, SharedMut};
 use crate::util::rng::Rng;
+use crate::util::sync::atomic::{AtomicUsize, Ordering};
+use crate::util::{alloc_guard, time};
 use std::collections::HashSet;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::time::Instant;
 
 /// How the per-seed degradation throws relate across levels.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -479,6 +479,7 @@ impl<'a> Worker<'a> {
         chain_start: bool,
         mut emit: impl FnMut(usize, SampleRow),
     ) {
+        let _guard = alloc_guard::region("campaign-sample");
         let level = cfg.levels[li];
         let seed = cfg.seeds[si];
         let n = match cfg.equipment {
@@ -506,7 +507,7 @@ impl<'a> Worker<'a> {
             self.engines[ei].get_or_insert_with(|| registry::create(cfg.engines[ei]));
         self.stats.samples += 1;
         let mut forked = false;
-        let t0 = Instant::now();
+        let t0 = time::now();
         match baseline {
             Some(Baseline {
                 route: Some(snap), ..
@@ -560,7 +561,7 @@ impl<'a> Worker<'a> {
         }
         let valid = engine.validate(&self.topo, &self.lft).is_ok();
         self.eval.sp_block = cfg.sp_block;
-        let t1 = Instant::now();
+        let t1 = time::now();
         match baseline {
             Some(b) => {
                 if chain_start {
@@ -578,7 +579,7 @@ impl<'a> Worker<'a> {
         }
         let trace_secs = t1.elapsed().as_secs_f64();
         for (pi, &pattern) in cfg.patterns.iter().enumerate() {
-            let t2 = Instant::now();
+            let t2 = time::now();
             let value = self.eval.evaluate(&self.topo, pattern, seed);
             emit(
                 pi,

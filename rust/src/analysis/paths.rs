@@ -190,6 +190,7 @@ impl PathTensor {
     /// fill is minimal; the rare degraded routings with longer detours
     /// fall back to the loop-bound width.
     pub fn rebuild(&mut self, topo: &Topology, lft: &Lft) {
+        let _guard = crate::util::alloc_guard::region("tensor-build");
         self.prepare_shape(topo);
         let tight = (2 * topo.num_levels as usize).max(1);
         let cap = Self::cap_width(topo);
@@ -338,6 +339,7 @@ impl PathTensor {
     /// tensor last traced it. The differential fuzz in
     /// `tests/analysis_diff.rs` drives this with row-diff-derived sets.
     pub fn update(&mut self, topo: &Topology, lft: &Lft, dirty_rows: &[u32]) -> TensorUpdate {
+        let _guard = crate::util::alloc_guard::region("tensor-update");
         if !self.snap_valid {
             self.rebuild(topo, lft);
             return TensorUpdate::Rebuilt(RebuildReason::NoHistory);

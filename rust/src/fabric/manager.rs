@@ -44,9 +44,9 @@ use crate::routing::{
 };
 use crate::topology::degrade::{self, DegradeScratch};
 use crate::topology::{PortTarget, SwitchId, Topology};
+use crate::util::{alloc_guard, time};
 use std::collections::{HashMap, HashSet};
 use std::sync::mpsc::{Receiver, Sender};
-use std::time::Instant;
 
 /// Post-event congestion-risk probe configuration: which patterns to
 /// evaluate against the freshly committed tables.
@@ -341,7 +341,11 @@ impl FabricManager {
     /// the engine may still fall back to a full row fill, which the
     /// report's [`ManagerReport::tier`] records.
     fn reroute(&mut self, try_delta: bool) -> ManagerReport {
-        let t0 = Instant::now();
+        // Guard region ends before the commit: the upload path may
+        // legitimately allocate (block diffs), as may `run_probe`. The
+        // zero-alloc contract covers degrade → route → validate.
+        let event_guard = alloc_guard::region("manager-event");
+        let t0 = time::now();
         degrade::apply_into(
             &self.reference,
             &self.dead_switches,
@@ -382,7 +386,8 @@ impl FabricManager {
         if !valid {
             self.metrics.invalid_states += 1;
         }
-        let tc = Instant::now();
+        drop(event_guard);
+        let tc = time::now();
         let upload = match tier {
             ReactionTier::Delta => {
                 self.store
@@ -520,7 +525,7 @@ impl FabricManager {
         if !self.engine.capabilities().alternative_ports {
             return None;
         }
-        let t0 = Instant::now();
+        let t0 = time::now();
         if self.cable_map_stale {
             self.rebuild_current_cable_map();
         }
@@ -630,10 +635,11 @@ mod tests {
         let (etx, erx) = channel();
         let (rtx, rrx) = channel();
         let mut mgr = FabricManager::new(t, ManagerConfig::default());
-        let h = std::thread::spawn(move || {
+        let h = crate::util::sync::thread::spawn_named("stream-test", move || {
             mgr.run_stream(erx, rtx);
             mgr.metrics.events
-        });
+        })
+        .expect("spawn stream thread");
         etx.send(Event {
             at_ms: 1,
             kind: EventKind::SwitchDown(victim),

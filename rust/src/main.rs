@@ -23,7 +23,7 @@ use dmodc::prelude::*;
 use dmodc::routing::{registry, validity};
 use dmodc::util::cli::Args;
 use dmodc::util::table::{fmt_duration, Table};
-use std::time::Instant;
+use dmodc::util::time::now;
 
 /// `--algo` help text listing every registered engine.
 fn algo_help() -> String {
@@ -92,7 +92,7 @@ fn cmd_route() {
     let t = build_topo(&p);
     let algo: Algo = p.get_parsed("algo");
     let mut engine = registry::create(algo);
-    let t0 = Instant::now();
+    let t0 = now();
     let lft = engine.route_once(&t);
     let dt = t0.elapsed().as_secs_f64();
     if !p.get("dump").is_empty() {
@@ -136,7 +136,7 @@ fn cmd_analyze() {
         },
         Pattern::ShiftPermutation,
     ] {
-        let t0 = Instant::now();
+        let t0 = now();
         let v = an.evaluate(pat, seed);
         tab.row(vec![
             pat.name().to_string(),
@@ -248,7 +248,7 @@ fn cmd_campaign() {
         cfg.schedule.name(),
         if cfg.fork { "on" } else { "off" }
     );
-    let t0 = Instant::now();
+    let t0 = now();
     let (rows, stats) = campaign::run_with_stats(&t, &cfg);
     let dt = t0.elapsed().as_secs_f64();
     println!("fork stats: {}", stats.render());

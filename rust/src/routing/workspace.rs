@@ -43,8 +43,8 @@ use super::snapshot::Snapshot;
 use super::{validity, Lft};
 use crate::topology::degrade::{self, DegradeScratch};
 use crate::topology::{NodeId, SwitchId, Topology};
+use crate::util::{alloc_guard, time};
 use std::collections::HashSet;
-use std::time::Instant;
 
 /// Per-stage wall times of the most recent reroute (seconds). Makes the
 /// paper-scale profile observable instead of guessed: the routing
@@ -153,13 +153,13 @@ impl RerouteWorkspace {
     /// (the cheap pipeline stages, shared by the full and delta paths).
     fn rebuild_products(&mut self, topo: &Topology) {
         self.timings = RerouteTimings::default();
-        let t0 = Instant::now();
+        let t0 = time::now();
         Prep::build_into(topo, &mut self.prep, &mut self.prep_scratch);
         self.timings.prep_s = t0.elapsed().as_secs_f64();
-        let t0 = Instant::now();
+        let t0 = time::now();
         common::costs_into(topo, &self.prep, self.opts.reduction, &mut self.costs);
         self.timings.costs_s = t0.elapsed().as_secs_f64();
-        let t0 = Instant::now();
+        let t0 = time::now();
         match self.opts.nid_order {
             NidOrder::Topological => dmodc::topological_nids_into(
                 topo,
@@ -183,8 +183,9 @@ impl RerouteWorkspace {
     /// (used by [`RerouteWorkspace::validate`] and
     /// [`RerouteWorkspace::alternatives_into`]).
     pub fn reroute_into(&mut self, topo: &Topology, out: &mut Lft) {
+        let _guard = alloc_guard::region("reroute-full");
         self.rebuild_products(topo);
-        let t0 = Instant::now();
+        let t0 = time::now();
         out.reset(topo.switches.len(), topo.nodes.len());
         dmodc::fill_rows(topo, &self.prep, &self.costs, &self.nids, out);
         self.timings.fill_s = t0.elapsed().as_secs_f64();
@@ -253,6 +254,7 @@ impl RerouteWorkspace {
         out: &mut Lft,
         touched: &mut Vec<u32>,
     ) -> DeltaOutcome {
+        let _guard = alloc_guard::region("reroute-delta");
         touched.clear();
         match self.armed.take() {
             // Restored from a snapshot: `prev` already holds the
@@ -288,7 +290,7 @@ impl RerouteWorkspace {
                 reason = Some(FallbackReason::Threshold);
             }
         }
-        let t0 = Instant::now();
+        let t0 = time::now();
         let outcome = match reason {
             Some(r) => {
                 out.reset(topo.switches.len(), topo.nodes.len());

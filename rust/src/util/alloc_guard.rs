@@ -1,0 +1,251 @@
+//! Scoped allocation sentinel: a counting global allocator (debug builds
+//! only) plus RAII *guard regions* around the steady-state hot paths.
+//!
+//! The zero-allocation contract (DESIGN.md §"Correctness tooling") says a
+//! warmed-up reroute/analysis cycle must not touch the heap. PRs 1–6
+//! enforced that only inside `tests/equivalence.rs`, with a private
+//! counting allocator; this module promotes the machinery so the contract
+//! is checked on *every* debug test run:
+//!
+//! - [`region`] brackets a hot path ("reroute-full", "campaign-sample",
+//!   …). Regions always *count*; they **panic** on a nonzero delta only
+//!   when the thread was [`arm`]ed when the region was entered.
+//! - [`arm`] is called by tests after their warm-up cycles (first runs
+//!   legitimately grow buffers and spawn pool workers). From then until
+//!   the `Armed` guard drops, any allocation inside a guard region on
+//!   this thread fails the test at the region boundary, naming the
+//!   region — not at some later assert on a counter delta.
+//!
+//! In release builds the allocator is not installed (`#[global_allocator]`
+//! is `#[cfg(debug_assertions)]`), counters stay at zero, and regions are
+//! two thread-local reads — the hot paths carry no measurable overhead.
+//!
+//! Enforcement is per-thread (the thread that entered the region —
+//! for parallel regions that is the submitter). Pool workers touched by
+//! a region are not armed; the multi-thread contract is still covered by
+//! the global-counter assertions in `tests/equivalence.rs`, which
+//! tolerate unrelated test-harness threads via a min-delta over cycles.
+//!
+//! A panic **must not** originate inside the allocator itself
+//! (`GlobalAlloc` is a non-unwind context), which is why violations are
+//! raised at region drop, never at allocation time.
+//!
+//! Counter orderings are `Relaxed`: they are monotonic event counters
+//! with no dependent data, read either on the counting thread itself
+//! (thread-local) or after the threads of interest quiesced (global; the
+//! joins/mutexes that quiesce them provide the visibility edge). See the
+//! ordering table in `util::par`.
+
+use crate::util::sync::atomic::{AtomicU64, Ordering};
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+/// Counting allocator: forwards to [`System`], tallying every
+/// `alloc`/`alloc_zeroed`/`realloc` (frees are not counted — the
+/// contract is "no heap traffic", and an alloc/free pair still counts
+/// once on the alloc side).
+pub struct CountingAlloc;
+
+#[cfg(debug_assertions)]
+#[global_allocator]
+static GUARD_ALLOC: CountingAlloc = CountingAlloc;
+
+static GLOBAL_ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+thread_local! {
+    static THREAD_ALLOCS: Cell<u64> = const { Cell::new(0) };
+    /// Arm depth (nested `arm()` guards stack).
+    static ARM_DEPTH: Cell<u32> = const { Cell::new(0) };
+    /// `(name, alloc delta)` of the most recently closed region on this
+    /// thread — lets self-tests observe counting without arming.
+    static LAST_REGION: Cell<Option<(&'static str, u64)>> = const { Cell::new(None) };
+}
+
+#[inline]
+fn count_one() {
+    GLOBAL_ALLOCS.fetch_add(1, Ordering::Relaxed);
+    // try_with: allocations can happen during TLS teardown, when the
+    // cell is already destroyed — skip the per-thread tally then.
+    let _ = THREAD_ALLOCS.try_with(|c| c.set(c.get() + 1));
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        count_one();
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        count_one();
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        count_one();
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+/// Allocations observed on the current thread so far (0 in release
+/// builds, where the counting allocator is not installed).
+pub fn thread_allocs() -> u64 {
+    THREAD_ALLOCS.with(|c| c.get())
+}
+
+/// Allocations observed process-wide so far (0 in release builds).
+pub fn global_allocs() -> u64 {
+    GLOBAL_ALLOCS.load(Ordering::Relaxed)
+}
+
+/// True while at least one [`arm`] guard is live on this thread.
+pub fn is_armed() -> bool {
+    ARM_DEPTH.with(|c| c.get()) > 0
+}
+
+/// `(name, alloc delta)` of the region most recently closed on this
+/// thread, if any.
+pub fn last_region() -> Option<(&'static str, u64)> {
+    LAST_REGION.with(|c| c.get())
+}
+
+/// Arm the zero-alloc contract on this thread: until the returned guard
+/// drops, a guard region that allocates panics (debug builds). Call
+/// *after* warm-up cycles — cold paths are allowed to allocate.
+#[must_use = "the contract is enforced only while the guard is live"]
+pub fn arm() -> Armed {
+    ARM_DEPTH.with(|c| c.set(c.get() + 1));
+    Armed { _priv: () }
+}
+
+/// RAII guard from [`arm`]; dropping it disarms (outermost guard wins
+/// when nested).
+pub struct Armed {
+    _priv: (),
+}
+
+impl Drop for Armed {
+    fn drop(&mut self) {
+        ARM_DEPTH.with(|c| c.set(c.get().saturating_sub(1)));
+    }
+}
+
+/// Open a guard region around a hot path. The region counts this
+/// thread's allocations until dropped; if the thread was armed when the
+/// region was *entered*, a nonzero count panics at drop (debug builds).
+#[must_use = "the region measures until it is dropped"]
+pub fn region(name: &'static str) -> Region {
+    Region {
+        name,
+        start: thread_allocs(),
+        enforce: is_armed(),
+    }
+}
+
+/// An open guard region (see [`region`]).
+pub struct Region {
+    name: &'static str,
+    start: u64,
+    /// Armed-at-entry: arming *inside* an open region deliberately does
+    /// not retroactively enforce it (its prefix was not measured under
+    /// the contract).
+    enforce: bool,
+}
+
+impl Region {
+    /// Allocations on this thread since the region opened.
+    pub fn allocs(&self) -> u64 {
+        thread_allocs() - self.start
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+}
+
+impl Drop for Region {
+    fn drop(&mut self) {
+        let delta = thread_allocs() - self.start;
+        LAST_REGION.with(|c| c.set(Some((self.name, delta))));
+        // Never panic while already unwinding (double panic aborts and
+        // would mask the original failure).
+        if self.enforce && cfg!(debug_assertions) && delta > 0 && !std::thread::panicking() {
+            panic!(
+                "alloc_guard: region `{}` allocated {} time(s) while the \
+                 zero-alloc contract was armed",
+                self.name, delta
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn regions_count_without_arming() {
+        let r = region("self-test-count");
+        let v: Vec<u64> = Vec::with_capacity(32);
+        drop(v);
+        #[cfg(debug_assertions)]
+        assert!(r.allocs() >= 1);
+        drop(r);
+        let (name, delta) = last_region().expect("region recorded");
+        assert_eq!(name, "self-test-count");
+        #[cfg(debug_assertions)]
+        assert!(delta >= 1);
+        #[cfg(not(debug_assertions))]
+        assert_eq!(delta, 0);
+    }
+
+    #[test]
+    fn arm_depth_nests() {
+        assert!(!is_armed());
+        let a = arm();
+        assert!(is_armed());
+        let b = arm();
+        drop(a);
+        assert!(is_armed(), "inner guard still live");
+        drop(b);
+        assert!(!is_armed());
+    }
+
+    #[test]
+    fn armed_clean_region_passes() {
+        let _armed = arm();
+        let r = region("self-test-clean");
+        // No allocation here.
+        std::hint::black_box(1u64 + 2);
+        drop(r);
+        assert_eq!(last_region().unwrap().1, 0);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    fn armed_dirty_region_panics_in_debug() {
+        let _armed = arm();
+        let err = std::panic::catch_unwind(|| {
+            let _r = region("self-test-dirty");
+            std::hint::black_box(Vec::<u64>::with_capacity(8));
+        })
+        .expect_err("armed allocating region must panic in debug");
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(msg.contains("self-test-dirty"), "panic names the region: {msg}");
+    }
+
+    #[test]
+    #[cfg(not(debug_assertions))]
+    fn armed_dirty_region_is_noop_in_release() {
+        let _armed = arm();
+        let _r = region("self-test-dirty-release");
+        std::hint::black_box(Vec::<u64>::with_capacity(8));
+        // No counting allocator installed: dropping must not panic.
+    }
+}

@@ -1,10 +1,14 @@
 //! Substrate utilities built in-tree because the offline registry only
 //! carries the `xla` crate closure: RNG, parallel-for, CLI parsing,
-//! property testing, tables/CSV, and bench timing. See DESIGN.md §3.
+//! property testing, tables/CSV, bench timing, the concurrency facade,
+//! and the allocation sentinel. See DESIGN.md §3 and §"Correctness
+//! tooling".
 
+pub mod alloc_guard;
 pub mod cli;
 pub mod par;
 pub mod prop;
 pub mod rng;
+pub mod sync;
 pub mod table;
 pub mod time;

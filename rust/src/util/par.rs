@@ -21,35 +21,63 @@
 //!   serial on the calling thread — never a deadlock.
 //! * A body must not block on *another* thread entering a parallel region
 //!   (that other thread would wait for this region's slots).
+//!
+//! All synchronization goes through the [`crate::util::sync`] facade, so
+//! the identical pool code is model-checked by loom (`rust/loom/`,
+//! `RUSTFLAGS="--cfg loom" cargo test --release` in that directory). The
+//! loom models cover job handoff, exactly-once chunk claiming, nested
+//! non-deadlock, and panic propagation; under loom the pool is an
+//! instance value (no process globals), which is why the global facade
+//! functions below are `#[cfg(not(loom))]`.
+//!
+//! # Memory-ordering audit
+//!
+//! Every atomic in this module, with its chosen orderings and why they
+//! are sufficient. Orderings outside this table do not exist here; the
+//! CI facade-policy step keeps raw `std::sync::atomic` out of the rest
+//! of the crate.
+//!
+//! | atomic | op → ordering | justification |
+//! |---|---|---|
+//! | `Slot` state (`seq`/`job`/`tickets`/`running`/`panicked`/`shutdown`) | mutex + condvars | Not atomics at all: every access is under `Shared::slot`. Job publication → worker claim, and worker completion → submitter wake-up, are release/acquire edges provided by the mutex; this is also the edge that makes all of a worker's *data* writes (through `Ctx`) visible to the submitter, because [`ActiveJob::drop`] re-acquires the lock and waits for `running == 0` after every worker's final unlock. |
+//! | `Ctx::cursor` | `fetch_add` → `Relaxed` | Claims only need the RMW's atomicity: each `fetch_add` returns a distinct start index, so claimed ranges are disjoint under *every* interleaving (loom model `chunk_claiming_exactly_once`). No data is published through the cursor itself — result visibility rides the slot-mutex edge above — so no acquire/release is needed. |
+//! | `THREAD_OVERRIDE` | store → `Relaxed`, load → `Relaxed` | A standalone word with no dependent data: readers act on whatever value they see, and cross-thread hand-off of an override is ordered externally (spawn/join, or `thread_override_lock` in tests). *Regression note:* until the PR-7 audit the store was `SeqCst` while the load was `Relaxed` — an asymmetry that bought nothing (a lone `SeqCst` store orders nothing for a `Relaxed` reader) and implied the value needed sequential consistency it never needed. Both sides are now deliberately `Relaxed`. |
+//! | `alloc_guard` counters | `fetch_add`/`load` → `Relaxed` | Monotonic event counters; see `util::alloc_guard`'s own docs. |
 
+use crate::util::sync::atomic::{AtomicUsize, Ordering};
+use crate::util::sync::{lock, thread, thread_local, Arc, Condvar, Mutex};
 use std::cell::Cell;
 use std::marker::PhantomData;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Condvar, Mutex, MutexGuard, OnceLock};
+#[cfg(not(loom))]
+use std::sync::OnceLock;
 
 /// Runtime thread-count override (0 = none). Takes precedence over the
 /// `DMODC_THREADS` environment variable; used by benches and the
 /// equivalence tests to sweep thread counts without re-exec.
+///
+/// Relaxed on both sides — see the module-level ordering table.
+#[cfg(not(loom))]
 static THREAD_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
 
 /// Override the worker count at runtime (`None` restores env/default).
+#[cfg(not(loom))]
 pub fn set_threads(n: Option<usize>) {
-    THREAD_OVERRIDE.store(n.map_or(0, |v| v.max(1)), Ordering::SeqCst);
+    THREAD_OVERRIDE.store(n.map_or(0, |v| v.max(1)), Ordering::Relaxed);
 }
 
 /// Unit tests that touch the global [`set_threads`] override serialize on
 /// this lock (the harness runs `#[test]`s concurrently in one process).
-#[cfg(test)]
-pub(crate) fn thread_override_lock() -> MutexGuard<'static, ()> {
+#[cfg(all(test, not(loom)))]
+pub(crate) fn thread_override_lock() -> crate::util::sync::MutexGuard<'static, ()> {
     static L: OnceLock<Mutex<()>> = OnceLock::new();
-    let m = L.get_or_init(|| Mutex::new(()));
-    m.lock().unwrap_or_else(|e| e.into_inner())
+    lock(L.get_or_init(|| Mutex::new(())))
 }
 
 /// Number of worker threads to use: [`set_threads`] override, else the
 /// `DMODC_THREADS` env var (read once at first use — `std::env::var`
 /// allocates, and this is called on the allocation-free hot path), else
 /// available parallelism, else 4.
+#[cfg(not(loom))]
 pub fn num_threads() -> usize {
     let o = THREAD_OVERRIDE.load(Ordering::Relaxed);
     if o != 0 {
@@ -89,10 +117,12 @@ struct Slot {
     tickets: usize,
     /// Workers currently executing the current job.
     running: usize,
-    /// Pool threads spawned so far.
-    spawned: usize,
     /// A worker's body panicked (propagated to the submitter).
     panicked: bool,
+    /// Pool is shutting down; workers drain and return. Only
+    /// [`Pool::shutdown`] sets this (loom models must end with every
+    /// thread terminated; long-lived std pools simply never set it).
+    shutdown: bool,
 }
 
 struct Shared {
@@ -101,33 +131,11 @@ struct Shared {
     done: Condvar,
 }
 
-fn shared() -> &'static Shared {
-    static S: OnceLock<Shared> = OnceLock::new();
-    S.get_or_init(|| Shared {
-        slot: Mutex::new(Slot {
-            seq: 0,
-            job: None,
-            tickets: 0,
-            running: 0,
-            spawned: 0,
-            panicked: false,
-        }),
-        work: Condvar::new(),
-        done: Condvar::new(),
-    })
-}
-
-/// Serializes parallel regions across submitting threads.
-fn submit_lock() -> MutexGuard<'static, ()> {
-    static L: OnceLock<Mutex<()>> = OnceLock::new();
-    let m = L.get_or_init(|| Mutex::new(()));
-    m.lock().unwrap_or_else(|e| e.into_inner())
-}
-
 thread_local! {
     /// True inside a parallel region (submitter during its own portion,
     /// pool workers always): nested regions run inline and serial.
-    static IN_PARALLEL: Cell<bool> = const { Cell::new(false) };
+    /// (Plain initializer: loom's `thread_local!` has no `const` form.)
+    static IN_PARALLEL: Cell<bool> = Cell::new(false);
 }
 
 /// True when the current thread is already inside a parallel region.
@@ -135,13 +143,16 @@ pub fn in_parallel_region() -> bool {
     IN_PARALLEL.with(|c| c.get())
 }
 
-fn worker_loop(sh: &'static Shared) {
+fn worker_loop(sh: &Shared) {
     IN_PARALLEL.with(|c| c.set(true));
     let mut seen = 0u64;
     loop {
         let job = {
-            let mut g = sh.slot.lock().unwrap_or_else(|e| e.into_inner());
+            let mut g = lock(&sh.slot);
             loop {
+                if g.shutdown {
+                    return;
+                }
                 if g.seq != seen {
                     seen = g.seq;
                     if g.job.is_some() && g.tickets > 0 {
@@ -156,7 +167,7 @@ fn worker_loop(sh: &'static Shared) {
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| unsafe {
             (job.run)(job.data)
         }));
-        let mut g = sh.slot.lock().unwrap_or_else(|e| e.into_inner());
+        let mut g = lock(&sh.slot);
         if result.is_err() {
             g.panicked = true;
         }
@@ -170,13 +181,13 @@ fn worker_loop(sh: &'static Shared) {
 /// Clears the published job and waits for all claimed slots to finish —
 /// runs on unwind too, so a panicking submitter body never leaves workers
 /// holding a pointer into its dead stack frame.
-struct ActiveJob {
-    sh: &'static Shared,
+struct ActiveJob<'a> {
+    sh: &'a Shared,
 }
 
-impl Drop for ActiveJob {
+impl Drop for ActiveJob<'_> {
     fn drop(&mut self) {
-        let mut g = self.sh.slot.lock().unwrap_or_else(|e| e.into_inner());
+        let mut g = lock(&self.sh.slot);
         g.job = None;
         g.tickets = 0;
         while g.running > 0 {
@@ -204,54 +215,172 @@ impl Drop for EnterParallel {
     }
 }
 
-/// Run `run(data)` on the calling thread plus up to `extra` pool workers;
-/// returns after every participant finished. Allocation-free once the pool
-/// has grown to `extra` workers.
-fn run_pooled(extra: usize, run: unsafe fn(*const ()), data: *const ()) {
-    if extra == 0 {
-        let _flag = EnterParallel::new();
-        unsafe { run(data) };
-        return;
-    }
-    let sh = shared();
-    let _submit = submit_lock();
-    {
-        let mut g = sh.slot.lock().unwrap_or_else(|e| e.into_inner());
-        g.panicked = false;
-        while g.spawned < extra {
-            let b = std::thread::Builder::new().name("dmodc-par".into());
-            match b.spawn(move || worker_loop(sh)) {
-                Ok(_) => g.spawned += 1,
-                Err(_) => break, // fewer workers; the region still completes
-            }
-        }
-        g.seq = g.seq.wrapping_add(1);
-        g.job = Some(JobPtr { data, run });
-        g.tickets = extra;
-        sh.work.notify_all();
-    }
-    let guard = ActiveJob { sh };
-    {
-        let _flag = EnterParallel::new();
-        unsafe { run(data) };
-    }
-    drop(guard);
-    let panicked = {
-        let g = sh.slot.lock().unwrap_or_else(|e| e.into_inner());
-        g.panicked
-    };
-    if panicked {
-        panic!("parallel worker panicked");
+/// A worker pool instance. Production code uses the process-wide pool
+/// behind the free functions below; the loom harness (and tests that
+/// want an isolated pool) construct their own so every model iteration
+/// starts from a fresh, fully-joinable state.
+pub struct Pool {
+    shared: Arc<Shared>,
+    /// Serializes parallel regions across submitting threads.
+    submit: Mutex<()>,
+    /// Worker join handles; guarded separately from `Slot` because
+    /// spawning must not hold the slot lock (loom treats spawn as a
+    /// scheduling point). Stable while a region runs: only grown under
+    /// `submit`, and [`Pool::shutdown`] takes `submit` first.
+    handles: Mutex<Vec<thread::JoinHandle<()>>>,
+}
+
+impl Default for Pool {
+    fn default() -> Self {
+        Self::new()
     }
 }
 
+impl Pool {
+    pub fn new() -> Self {
+        Self {
+            shared: Arc::new(Shared {
+                slot: Mutex::new(Slot {
+                    seq: 0,
+                    job: None,
+                    tickets: 0,
+                    running: 0,
+                    panicked: false,
+                    shutdown: false,
+                }),
+                work: Condvar::new(),
+                done: Condvar::new(),
+            }),
+            submit: Mutex::new(()),
+            handles: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Run `run(data)` on the calling thread plus up to `extra` pool
+    /// workers; returns after every participant finished. Allocation-free
+    /// once the pool has grown to `extra` workers.
+    fn run_pooled(&self, extra: usize, run: unsafe fn(*const ()), data: *const ()) {
+        if extra == 0 {
+            let _flag = EnterParallel::new();
+            unsafe { run(data) };
+            return;
+        }
+        let _submit = lock(&self.submit);
+        let workers = {
+            let mut hs = lock(&self.handles);
+            while hs.len() < extra {
+                let sh = Arc::clone(&self.shared);
+                match thread::spawn_named("dmodc-par", move || worker_loop(&sh)) {
+                    Ok(h) => hs.push(h),
+                    Err(_) => break, // fewer workers; the region still completes
+                }
+            }
+            hs.len().min(extra)
+        };
+        {
+            let mut g = lock(&self.shared.slot);
+            g.panicked = false;
+            g.seq = g.seq.wrapping_add(1);
+            g.job = Some(JobPtr { data, run });
+            g.tickets = workers;
+            self.shared.work.notify_all();
+        }
+        let guard = ActiveJob { sh: &self.shared };
+        {
+            let _flag = EnterParallel::new();
+            unsafe { run(data) };
+        }
+        drop(guard);
+        let panicked = lock(&self.shared.slot).panicked;
+        if panicked {
+            panic!("parallel worker panicked");
+        }
+    }
+
+    /// Chunked parallel-for over `0..n` on *this* pool: the calling thread
+    /// plus up to `threads - 1` workers claim `chunk`-sized blocks from an
+    /// atomic cursor. Public (rather than folded into the free functions)
+    /// so the loom harness models the exact production claim loop.
+    pub fn parallel_for_chunked_with<F>(&self, threads: usize, n: usize, chunk: usize, body: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        let chunk = chunk.max(1);
+        let threads = threads.min(n.max(1));
+        if threads <= 1 || n <= chunk || in_parallel_region() {
+            for i in 0..n {
+                body(i);
+            }
+            return;
+        }
+
+        struct Ctx<'a, F> {
+            cursor: AtomicUsize,
+            n: usize,
+            chunk: usize,
+            body: &'a F,
+        }
+        unsafe fn drain<F: Fn(usize) + Sync>(p: *const ()) {
+            let ctx = &*(p as *const Ctx<'_, F>);
+            loop {
+                // Relaxed is sufficient — see the module ordering table.
+                let start = ctx.cursor.fetch_add(ctx.chunk, Ordering::Relaxed);
+                if start >= ctx.n {
+                    break;
+                }
+                let end = (start + ctx.chunk).min(ctx.n);
+                for i in start..end {
+                    (ctx.body)(i);
+                }
+            }
+        }
+
+        let ctx = Ctx {
+            cursor: AtomicUsize::new(0),
+            n,
+            chunk,
+            body: &body,
+        };
+        self.run_pooled(
+            threads - 1,
+            drain::<F>,
+            &ctx as *const Ctx<'_, F> as *const (),
+        );
+    }
+
+    /// Stop and join every worker. Idempotent. Required by the loom
+    /// models (loom insists all threads terminate); the process-global
+    /// pool never calls it — its workers live for the process.
+    pub fn shutdown(&self) {
+        {
+            let _submit = lock(&self.submit);
+            let mut g = lock(&self.shared.slot);
+            g.shutdown = true;
+            self.shared.work.notify_all();
+        }
+        let handles = std::mem::take(&mut *lock(&self.handles));
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The process-wide pool behind the free-function API.
+#[cfg(not(loom))]
+fn global() -> &'static Pool {
+    static P: OnceLock<Pool> = OnceLock::new();
+    P.get_or_init(Pool::new)
+}
+
 // ---------------------------------------------------------------------------
-// Public parallel-for family
+// Public parallel-for family (process-global pool; not under loom, which
+// models an instance `Pool` directly)
 // ---------------------------------------------------------------------------
 
 /// Parallel for over `0..n`: `body(i)` for every i, unordered, on up to
 /// [`num_threads`] threads (caller + pool). `body` must be `Sync` (shared
 /// read state; use per-index disjoint writes for output).
+#[cfg(not(loom))]
 pub fn parallel_for<F>(n: usize, body: F)
 where
     F: Fn(usize) + Sync,
@@ -265,59 +394,23 @@ where
 /// (per-item cost varies with switch radix but not by orders of
 /// magnitude); the result is always ≥ 1, and for small `n` it degrades to
 /// 1 (identical to the old per-item claims).
+#[cfg(not(loom))]
 pub fn grain(n: usize, oversub: usize) -> usize {
     (n / (num_threads() * oversub.max(1)).max(1)).max(1)
 }
 
 /// Like [`parallel_for`] but workers claim `chunk`-sized blocks from the
 /// cursor to amortize contention for cheap bodies.
+#[cfg(not(loom))]
 pub fn parallel_for_chunked<F>(n: usize, chunk: usize, body: F)
 where
     F: Fn(usize) + Sync,
 {
-    let chunk = chunk.max(1);
-    let threads = num_threads().min(n.max(1));
-    if threads <= 1 || n <= chunk || in_parallel_region() {
-        for i in 0..n {
-            body(i);
-        }
-        return;
-    }
-
-    struct Ctx<'a, F> {
-        cursor: AtomicUsize,
-        n: usize,
-        chunk: usize,
-        body: &'a F,
-    }
-    unsafe fn drain<F: Fn(usize) + Sync>(p: *const ()) {
-        let ctx = &*(p as *const Ctx<'_, F>);
-        loop {
-            let start = ctx.cursor.fetch_add(ctx.chunk, Ordering::Relaxed);
-            if start >= ctx.n {
-                break;
-            }
-            let end = (start + ctx.chunk).min(ctx.n);
-            for i in start..end {
-                (ctx.body)(i);
-            }
-        }
-    }
-
-    let ctx = Ctx {
-        cursor: AtomicUsize::new(0),
-        n,
-        chunk,
-        body: &body,
-    };
-    run_pooled(
-        threads - 1,
-        drain::<F>,
-        &ctx as *const Ctx<'_, F> as *const (),
-    );
+    global().parallel_for_chunked_with(num_threads(), n, chunk, body);
 }
 
 /// Parallel map over `0..n` producing a `Vec<T>` in index order.
+#[cfg(not(loom))]
 pub fn parallel_map<T, F>(n: usize, f: F) -> Vec<T>
 where
     T: Send,
@@ -332,6 +425,7 @@ where
 /// refilled with `f(0..n)` in index order, reusing its capacity —
 /// allocation-free once the capacity converged (the analysis scans'
 /// steady-state contract).
+#[cfg(not(loom))]
 pub fn parallel_map_into<T, F>(n: usize, out: &mut Vec<T>, f: F)
 where
     T: Send,
@@ -364,6 +458,7 @@ where
 /// Parallel mutation over a slice of `Send` items: each claimed index
 /// yields `&mut items[i]` — indices are handed out disjointly, so the
 /// mutable accesses never alias.
+#[cfg(not(loom))]
 pub fn parallel_for_mut<T, F>(items: &mut [T], f: F)
 where
     T: Send,
@@ -382,6 +477,7 @@ where
 /// `f(row_index, &mut row)`. Row granularity matches the paper's "POSIX
 /// threads fetching work with a switch-level granularity" and avoids the
 /// `Vec<&mut [T]>` the old `rows_mut()` pattern allocated per call.
+#[cfg(not(loom))]
 pub fn parallel_for_rows<T, F>(data: &mut [T], width: usize, f: F)
 where
     T: Send,
@@ -395,6 +491,7 @@ where
 /// byte range of `data` exactly once (destination-block sharding for the
 /// LFT fill — sequential-write friendly, with false sharing possible only
 /// at block boundaries). `f` still receives one row at a time.
+#[cfg(not(loom))]
 pub fn parallel_for_rows_chunked<T, F>(data: &mut [T], width: usize, chunk: usize, f: F)
 where
     T: Send,
@@ -418,6 +515,7 @@ where
 /// results in order. Used for coarse-grained task parallelism (e.g. running
 /// several routing engines concurrently in benches). Uses scoped threads,
 /// not the pool: the tasks may themselves open parallel regions.
+#[cfg(not(loom))]
 pub fn join_all<T, F>(tasks: Vec<F>) -> Vec<T>
 where
     T: Send,
@@ -500,14 +598,24 @@ impl<'a, T> SharedMut<'a, T> {
     }
 }
 
-#[cfg(test)]
+#[cfg(all(test, not(loom)))]
 mod tests {
     use super::*;
-    use std::sync::atomic::{AtomicU64, Ordering};
+    use crate::util::sync::atomic::{AtomicU64, Ordering};
+
+    /// Miri explores every test body at ~1000× slowdown; shrink sizes
+    /// there while keeping the native sizes that shake out scheduling.
+    fn sz(native: usize, miri: usize) -> usize {
+        if cfg!(miri) {
+            miri
+        } else {
+            native
+        }
+    }
 
     #[test]
     fn parallel_for_visits_all_once() {
-        let n = 10_000;
+        let n = sz(10_000, 200);
         let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
         parallel_for(n, |i| {
             hits[i].fetch_add(1, Ordering::Relaxed);
@@ -517,7 +625,8 @@ mod tests {
 
     #[test]
     fn parallel_map_ordered() {
-        let v = parallel_map(5000, |i| i * i);
+        let n = sz(5000, 100);
+        let v = parallel_map(n, |i| i * i);
         for (i, x) in v.iter().enumerate() {
             assert_eq!(*x, i * i);
         }
@@ -551,18 +660,19 @@ mod tests {
 
     #[test]
     fn chunked_sums_match() {
+        let n = sz(1000, 120) as u64;
         let total = AtomicU64::new(0);
-        parallel_for_chunked(1000, 37, |i| {
+        parallel_for_chunked(n as usize, 37, |i| {
             total.fetch_add(i as u64, Ordering::Relaxed);
         });
-        assert_eq!(total.load(Ordering::Relaxed), 999 * 1000 / 2);
+        assert_eq!(total.load(Ordering::Relaxed), (n - 1) * n / 2);
     }
 
     #[test]
     fn nested_regions_run_inline() {
         // A body opening another region must not deadlock; all inner
         // iterations still execute exactly once.
-        let n = 64;
+        let n = sz(64, 8);
         let hits: Vec<AtomicU64> = (0..n * n).map(|_| AtomicU64::new(0)).collect();
         parallel_for(n, |i| {
             parallel_for(n, |j| {
@@ -574,12 +684,13 @@ mod tests {
 
     #[test]
     fn concurrent_submitters_serialize() {
+        let n = sz(500, 50) as u64;
         let results = join_all(
             (0..4u64)
                 .map(|k| {
                     move || {
                         let total = AtomicU64::new(0);
-                        parallel_for(500, |i| {
+                        parallel_for(n as usize, |i| {
                             total.fetch_add(i as u64 + k, Ordering::Relaxed);
                         });
                         total.load(Ordering::Relaxed)
@@ -588,7 +699,7 @@ mod tests {
                 .collect::<Vec<_>>(),
         );
         for (k, r) in results.into_iter().enumerate() {
-            assert_eq!(r, 499 * 500 / 2 + 500 * k as u64);
+            assert_eq!(r, (n - 1) * n / 2 + n * k as u64);
         }
     }
 
@@ -649,10 +760,49 @@ mod tests {
 
     #[test]
     fn parallel_for_mut_each_once() {
-        let mut v = vec![0u64; 4096];
+        let n = sz(4096, 256);
+        let mut v = vec![0u64; n];
         parallel_for_mut(&mut v, |i, x| *x += i as u64 + 1);
         for (i, x) in v.iter().enumerate() {
             assert_eq!(*x, i as u64 + 1);
         }
+    }
+
+    #[test]
+    fn private_pool_runs_regions_and_shuts_down() {
+        // An instance pool (the loom-modeled object) works standalone:
+        // run two regions, then join every worker.
+        let pool = Pool::new();
+        let n = sz(300, 40) as u64;
+        for _ in 0..2 {
+            let total = AtomicU64::new(0);
+            pool.parallel_for_chunked_with(3, n as usize, 4, |i| {
+                total.fetch_add(i as u64, Ordering::Relaxed);
+            });
+            assert_eq!(total.load(Ordering::Relaxed), (n - 1) * n / 2);
+        }
+        pool.shutdown();
+    }
+
+    #[test]
+    fn worker_panic_propagates_and_pool_survives() {
+        let pool = Pool::new();
+        let n = sz(64, 16);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.parallel_for_chunked_with(2, n, 1, |i| {
+                if i == n / 2 {
+                    panic!("intentional test panic");
+                }
+            });
+        }));
+        assert!(r.is_err());
+        // The pool survives a panicked region and runs the next one.
+        let total = AtomicU64::new(0);
+        pool.parallel_for_chunked_with(2, n, 1, |i| {
+            total.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        let n = n as u64;
+        assert_eq!(total.load(Ordering::Relaxed), (n - 1) * n / 2);
+        pool.shutdown();
     }
 }

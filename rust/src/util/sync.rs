@@ -1,0 +1,88 @@
+//! Concurrency-primitive facade: `std::sync` types in normal builds,
+//! [loom](https://docs.rs/loom) types under `--cfg loom`.
+//!
+//! Everything in the crate that synchronizes between threads — mutexes,
+//! condvars, atomics, thread-locals, thread spawning — goes through this
+//! module instead of `std` directly. That single indirection is what lets
+//! the loom harness (`rust/loom/`) compile the *production* pool code
+//! against loom's model-checked primitives and exhaustively explore its
+//! interleavings, rather than testing a parallel reimplementation.
+//!
+//! Policy (enforced by CI, see DESIGN.md §"Correctness tooling"):
+//!
+//! - no `std::sync::atomic` outside this file — a grep step in the lint
+//!   job fails on any other occurrence. (Clippy's `disallowed-types`
+//!   cannot express this rule: the lint resolves re-exports to their
+//!   final `DefId`, so it would flag every *use* of the facade too.)
+//! - no `std::thread::spawn` / `std::time::Instant::now` anywhere — both
+//!   are clippy `disallowed-methods` (see `clippy.toml`); the sanctioned
+//!   wrappers are [`thread::spawn_named`] here and `util::time::now`.
+//!
+//! `Mutex`/`Condvar` poisoning: loom's lock APIs mirror std's
+//! `LockResult`/`PoisonError` signatures, so callers can (and should)
+//! recover with `unwrap_or_else(|e| e.into_inner())` and compile
+//! unchanged under both cfgs.
+#![allow(clippy::disallowed_methods, clippy::disallowed_types)]
+
+#[cfg(loom)]
+pub use loom::sync::{Arc, Condvar, Mutex, MutexGuard};
+#[cfg(not(loom))]
+pub use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+/// Atomic types and [`Ordering`](std::sync::atomic::Ordering).
+///
+/// Under loom these are model-checked shadows; every `load`/`store`/RMW
+/// ordering the pool uses is explored against the C11 memory model. The
+/// crate-wide justification for each chosen ordering lives in the
+/// "Memory-ordering audit" table in `util::par`'s module docs.
+pub mod atomic {
+    #[cfg(loom)]
+    pub use loom::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+    #[cfg(not(loom))]
+    pub use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+}
+
+/// `thread_local!` that loom can intercept. Note loom's variant does not
+/// support `const { .. }` initializers — use plain expressions.
+#[cfg(loom)]
+pub use loom::thread_local;
+#[cfg(not(loom))]
+pub use std::thread_local;
+
+/// Thread spawning through the facade.
+pub mod thread {
+    #[cfg(loom)]
+    pub use loom::thread::JoinHandle;
+    #[cfg(not(loom))]
+    pub use std::thread::JoinHandle;
+
+    /// The one sanctioned spawn entry point (clippy bans
+    /// `std::thread::spawn` everywhere else). Names the thread so pool
+    /// workers are identifiable in debuggers and sanitizer reports; loom
+    /// has no thread names, so the name is dropped there.
+    ///
+    /// Returns `Err` only if the OS refuses to create a thread; callers
+    /// that can degrade gracefully (the pool) treat that as "fewer
+    /// workers", not a panic.
+    pub fn spawn_named<F, T>(name: &str, f: F) -> std::io::Result<JoinHandle<T>>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        #[cfg(loom)]
+        {
+            let _ = name;
+            Ok(loom::thread::spawn(f))
+        }
+        #[cfg(not(loom))]
+        {
+            std::thread::Builder::new().name(name.to_owned()).spawn(f)
+        }
+    }
+}
+
+/// Poison-tolerant lock: a panicked region must not wedge every later
+/// region behind a `PoisonError`, so all facade users lock through this.
+pub fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}

@@ -3,8 +3,21 @@
 //! Warmup + repeated measurement with median/min/mean reporting. Benches are
 //! `harness = false` binaries that use [`bench`] and print [`Table`]s, so
 //! `cargo bench` works end to end.
+//!
+//! This module is also the crate's only sanctioned reader of the
+//! monotonic clock: `std::time::Instant::now` is a clippy
+//! `disallowed-method` everywhere else (see `clippy.toml`), so every
+//! timing site goes through [`now`] / [`time_once`] / [`bench`] and
+//! stays auditable in one place.
+#![allow(clippy::disallowed_methods)]
 
 use std::time::Instant;
+
+/// Read the monotonic clock (the sanctioned `Instant::now`).
+#[inline]
+pub fn now() -> Instant {
+    Instant::now()
+}
 
 /// One benchmark measurement summary (seconds).
 #[derive(Clone, Copy, Debug)]

@@ -1,0 +1,64 @@
+//! Self-test for the allocation-guard sentinel (`util::alloc_guard`).
+//!
+//! The guard's contract has two halves, and each needs proving from an
+//! integration context (where the library's `#[global_allocator]` is the
+//! one actually counting):
+//!
+//! * **debug**: an armed guard region that allocates must panic at the
+//!   region boundary, naming the region — this is what turns every debug
+//!   test run into an enforcement pass over the hot paths;
+//! * **release**: the same code must be a free no-op — the sentinel
+//!   allocator is only installed under `cfg(debug_assertions)`, so
+//!   production builds pay nothing.
+
+use dmodc::util::alloc_guard;
+
+/// Armed region that deliberately allocates: must fail in debug builds,
+/// with the region name in the panic message.
+#[test]
+#[cfg(debug_assertions)]
+fn armed_allocating_region_panics_in_debug() {
+    let result = std::panic::catch_unwind(|| {
+        let _armed = alloc_guard::arm();
+        let region = alloc_guard::region("intentional-violation");
+        let v: Vec<u64> = Vec::with_capacity(64);
+        drop(v);
+        drop(region);
+    });
+    let err = result.expect_err("armed dirty region must panic in debug");
+    let msg = err
+        .downcast_ref::<String>()
+        .cloned()
+        .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+        .unwrap_or_default();
+    assert!(
+        msg.contains("intentional-violation"),
+        "panic must name the offending region: {msg}"
+    );
+    assert!(msg.contains("alloc_guard"), "{msg}");
+}
+
+/// The identical violation is a no-op in release builds: the counting
+/// allocator is not installed, so the region observes zero allocations
+/// and enforcement never fires.
+#[test]
+#[cfg(not(debug_assertions))]
+fn armed_allocating_region_is_noop_in_release() {
+    let _armed = alloc_guard::arm();
+    let region = alloc_guard::region("intentional-violation");
+    let v: Vec<u64> = Vec::with_capacity(64);
+    drop(v);
+    drop(region); // must not panic
+    assert_eq!(alloc_guard::thread_allocs(), 0, "release build must not count");
+}
+
+/// Unarmed regions only observe — they never enforce, in any build.
+#[test]
+fn unarmed_region_observes_without_enforcing() {
+    let region = alloc_guard::region("observe-only");
+    let v: Vec<u64> = Vec::with_capacity(64);
+    drop(v);
+    drop(region); // must not panic even in debug
+    let (name, _allocs) = alloc_guard::last_region().expect("region must be recorded");
+    assert_eq!(name, "observe-only");
+}

@@ -11,7 +11,10 @@
 //!
 //! The suite also enforces the allocation contract: steady-state reroutes
 //! through the workspace perform **zero heap allocation** in the routing
-//! pipeline, verified with a counting global allocator.
+//! pipeline, verified with the crate's counting global allocator
+//! (`dmodc::util::alloc_guard`, installed in debug builds). The measured
+//! cycles additionally run [`alloc_guard::arm`]ed, so a violation fails
+//! at the guard-region boundary naming the offending hot path.
 //!
 //! The `RoutingEngine` redesign extends both contracts to every engine:
 //! each registry-constructed engine must (a) produce bit-identical LFTs
@@ -27,54 +30,10 @@ use dmodc::prelude::*;
 use dmodc::routing::common::{self, DividerReduction, Prep};
 use dmodc::routing::dmodc::{route_reference, Options, Router};
 use dmodc::routing::{registry, validity, Lft, RerouteWorkspace};
+use dmodc::util::alloc_guard::{self, global_allocs, thread_allocs};
 use dmodc::util::par;
-use std::alloc::{GlobalAlloc, Layout, System};
-use std::cell::Cell;
 use std::collections::HashSet;
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Mutex, MutexGuard, OnceLock};
-
-// ---------------------------------------------------------------------------
-// Counting allocator
-// ---------------------------------------------------------------------------
-
-/// Counts allocations globally (all threads) and per test thread.
-struct CountingAlloc;
-
-static GLOBAL_ALLOCS: AtomicU64 = AtomicU64::new(0);
-
-thread_local! {
-    static THREAD_ALLOCS: Cell<u64> = const { Cell::new(0) };
-}
-
-unsafe impl GlobalAlloc for CountingAlloc {
-    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
-        GLOBAL_ALLOCS.fetch_add(1, Ordering::Relaxed);
-        let _ = THREAD_ALLOCS.try_with(|c| c.set(c.get() + 1));
-        System.alloc(layout)
-    }
-
-    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
-        System.dealloc(ptr, layout)
-    }
-
-    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
-        GLOBAL_ALLOCS.fetch_add(1, Ordering::Relaxed);
-        let _ = THREAD_ALLOCS.try_with(|c| c.set(c.get() + 1));
-        System.realloc(ptr, layout, new_size)
-    }
-}
-
-#[global_allocator]
-static ALLOC: CountingAlloc = CountingAlloc;
-
-fn thread_allocs() -> u64 {
-    THREAD_ALLOCS.with(|c| c.get())
-}
-
-fn global_allocs() -> u64 {
-    GLOBAL_ALLOCS.load(Ordering::Relaxed)
-}
 
 /// Serializes the tests in this binary (global thread override + global
 /// allocation counters).
@@ -325,9 +284,13 @@ fn steady_state_reroute_is_allocation_free_single_thread() {
     for _ in 0..2 {
         storm_cycle(&mut ws, &base, &script, &mut topo, &mut out);
     }
+    // Armed: an allocation inside a guard region now fails at the region
+    // boundary (naming the hot path), not just at the assert below.
+    let armed = alloc_guard::arm();
     let before = thread_allocs();
     storm_cycle(&mut ws, &base, &script, &mut topo, &mut out);
     let delta = thread_allocs() - before;
+    drop(armed);
     assert_eq!(
         delta, 0,
         "steady-state routing pipeline must not allocate (single-thread)"
@@ -361,12 +324,17 @@ fn steady_state_reroute_is_allocation_free_multi_thread() {
     // (it would immediately block on our serialization mutex, but the
     // spawn itself allocates), so measure several cycles and require the
     // *minimum* delta to be zero — the pipeline itself must be clean.
+    // Armed on the submitting thread: pool workers are not armed, but
+    // the submitter's share of every guard region must stay clean on
+    // every measured cycle (the global min-delta below covers the rest).
+    let armed = alloc_guard::arm();
     let mut min_delta = u64::MAX;
     for _ in 0..5 {
         let before = global_allocs();
         storm_cycle(&mut ws, &base, &script, &mut topo, &mut out);
         min_delta = min_delta.min(global_allocs() - before);
     }
+    drop(armed);
     assert_eq!(
         min_delta, 0,
         "steady-state routing pipeline must not allocate on any thread"
@@ -407,11 +375,13 @@ fn steady_state_reroutes_allocation_free_for_every_engine() {
                 engine.route_into(t, &mut out);
             }
         }
+        let armed = alloc_guard::arm();
         let before = thread_allocs();
         for t in &scenarios {
             engine.route_into(t, &mut out);
         }
         let delta = thread_allocs() - before;
+        drop(armed);
         assert_eq!(delta, 0, "{algo}: steady-state route_into must not allocate");
         // The measured cycle still produced correct tables.
         assert_eq!(out.raw(), free_route(algo, &base).raw(), "{algo}");
@@ -547,12 +517,14 @@ fn steady_state_campaign_sample_loop_is_allocation_free() {
             &mut eval_inc, &mut prev_raw, &mut dirty, &mut sink,
         );
     }
+    let armed = alloc_guard::arm();
     let before = thread_allocs();
     cycle(
         &mut engine, &mut scratch, &mut topo, &mut lft, &mut eval_full,
         &mut eval_inc, &mut prev_raw, &mut dirty, &mut sink,
     );
     let delta = thread_allocs() - before;
+    drop(armed);
     assert_eq!(
         delta, 0,
         "steady-state campaign sample loop must not allocate (sink {sink})"
@@ -629,12 +601,14 @@ fn steady_state_forked_sample_loop_is_allocation_free() {
             &mut sink,
         );
     }
+    let armed = alloc_guard::arm();
     let before = thread_allocs();
     cycle(
         &mut ws, &mut eval, &mut scratch, &mut topo, &mut lft, &mut touched,
         &mut sink,
     );
     let delta = thread_allocs() - before;
+    drop(armed);
     assert_eq!(
         delta, 0,
         "steady-state forked sample loop must not allocate (sink {sink})"
@@ -679,9 +653,11 @@ fn steady_state_delta_reroute_is_allocation_free() {
     for _ in 0..2 {
         cycle(&mut ws, &mut topo, &mut out, &mut touched);
     }
+    let armed = alloc_guard::arm();
     let before = thread_allocs();
     cycle(&mut ws, &mut topo, &mut out, &mut touched);
     let delta = thread_allocs() - before;
+    drop(armed);
     assert_eq!(
         delta, 0,
         "steady-state delta reroute must not allocate (single-thread)"

@@ -324,15 +324,17 @@ fn stream_mode_under_concurrent_producer() {
     let (etx, erx) = channel();
     let (rtx, rrx) = channel();
     let mut mgr = FabricManager::new(t, ManagerConfig::default());
-    let consumer = std::thread::spawn(move || {
+    let consumer = dmodc::util::sync::thread::spawn_named("stream-consumer", move || {
         mgr.run_stream(erx, rtx);
         (mgr.metrics.events, mgr.reroute_hist.count())
-    });
-    let producer = std::thread::spawn(move || {
+    })
+    .expect("spawn consumer");
+    let producer = dmodc::util::sync::thread::spawn_named("event-producer", move || {
         for e in schedule {
             etx.send(e).unwrap();
         }
-    });
+    })
+    .expect("spawn producer");
     producer.join().unwrap();
     let reports: Vec<_> = rrx.iter().collect();
     let (events_seen, reroutes) = consumer.join().unwrap();

@@ -1,0 +1,89 @@
+//! Size-reduced end-to-end suite for `cargo miri test`.
+//!
+//! Miri interprets every instruction (~1000× slower than native), so the
+//! full differential suites are out of reach. This file distills the
+//! pipeline that actually exercises the unsafe core — the raw-pointer job
+//! handoff and shared-slice writes in `util::par` — into a Figure-1-sized
+//! run: a full multi-threaded reroute checked bit-for-bit against the
+//! serial reference, a single-cable delta reroute, the validity pass, and
+//! a path-tensor rebuild/update. It also runs under plain `cargo test` as
+//! a cheap smoke check.
+//!
+//! CI runs it with `MIRIFLAGS="-Zmiri-disable-isolation"` (the pool reads
+//! `DMODC_THREADS` and names its threads) — see `.github/workflows/ci.yml`.
+
+use dmodc::analysis::paths::PathTensor;
+use dmodc::prelude::*;
+use dmodc::routing::dmodc::{route_reference, NidOrder, Options};
+use dmodc::routing::{route_unchecked, validity, Lft, RerouteWorkspace};
+use dmodc::util::par;
+use std::collections::HashSet;
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+/// Serializes tests that override the global worker count.
+fn lock() -> MutexGuard<'static, ()> {
+    static M: OnceLock<Mutex<()>> = OnceLock::new();
+    M.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+}
+
+/// Full reroute + one-cable delta reroute on fig1, two worker threads,
+/// checked against the serial reference and the validity layer.
+#[test]
+fn fig1_reroute_full_and_delta_two_threads() {
+    let _g = lock();
+    par::set_threads(Some(2));
+    let base = PgftParams::fig1().build();
+    let opts = Options {
+        reduction: dmodc::routing::common::DividerReduction::Max,
+        nid_order: NidOrder::Topological,
+    };
+    let mut ws = RerouteWorkspace::new(opts);
+    let mut topo = Topology::default();
+    let mut lft = Lft::default();
+    let mut touched = Vec::new();
+    let dead_sw: HashSet<SwitchId> = HashSet::new();
+    let mut dead_cb: HashSet<(SwitchId, u16)> = HashSet::new();
+
+    // Intact fabric: parallel full reroute must match the reference.
+    ws.materialize(&base, &dead_sw, &dead_cb, &mut topo);
+    ws.reroute_delta_into(&topo, &mut lft, &mut touched);
+    let want = route_reference(&topo, &opts);
+    assert_eq!(lft.raw(), want.raw(), "intact fig1 diverged from reference");
+    validity::check(&topo, &lft).expect("intact fig1 must validate");
+
+    // One cable fault: the delta tier must land on the same tables.
+    let cable = degrade::cables(&base)[0];
+    dead_cb.insert(cable);
+    ws.materialize(&base, &dead_sw, &dead_cb, &mut topo);
+    ws.reroute_delta_into(&topo, &mut lft, &mut touched);
+    let want = route_reference(&topo, &opts);
+    assert_eq!(lft.raw(), want.raw(), "degraded fig1 diverged from reference");
+    validity::check(&topo, &lft).expect("degraded fig1 must validate");
+    par::set_threads(None);
+}
+
+/// Path-tensor rebuild and incremental update on fig1 — the other
+/// consumer of the parallel runtime's shared-slice writes.
+#[test]
+fn fig1_tensor_build_and_update_two_threads() {
+    let _g = lock();
+    par::set_threads(Some(2));
+    let base = PgftParams::fig1().build();
+    let lft = route_unchecked(Algo::Dmodc, &base);
+    let mut tensor = PathTensor::default();
+    tensor.update(&base, &lft, &[]);
+
+    let cable = degrade::cables(&base)[0];
+    let mut dead_cb = HashSet::new();
+    dead_cb.insert(cable);
+    let topo = degrade::apply(&base, &HashSet::new(), &dead_cb);
+    let lft2 = route_unchecked(Algo::Dmodc, &topo);
+    tensor.update(&topo, &lft2, &lft2.changed_rows(&lft));
+
+    let want = PathTensor::build(&topo, &lft2);
+    assert_eq!(tensor.max_hops, want.max_hops);
+    assert_eq!(tensor.broken_routes, want.broken_routes);
+    par::set_threads(None);
+}
