@@ -1,107 +1,306 @@
-//! End-to-end driver: the fabric manager survives a fault storm on a
-//! paper-scale PGFT.
+//! End-to-end stress harness: the long-running fabric service survives a
+//! sustained fault storm on a paper-scale PGFT while readers route.
 //!
-//! A producer thread replays a randomized schedule of switch/link faults,
+//! A producer paces a randomized schedule of switch/link faults,
 //! recoveries, and whole-islet reboots (the paper's "thousands of
-//! simultaneous changes" scenario) into the manager's event loop; the
-//! manager reroutes the full fabric from scratch on every event with Dmodc
-//! and reports reaction latency and LFT upload deltas. The headline check
-//! mirrors the paper's claim: complete rerouting of a many-thousand-node
-//! PGFT in well under a second per event.
+//! simultaneous changes" scenario) into a [`FabricService`]; the service
+//! coalesces each burst into one reaction and publishes every committed
+//! generation as a checksummed epoch. Meanwhile `--readers` threads
+//! hammer the published tables with random route lookups and periodic
+//! checksum verification — the harness fails if any reader ever observes
+//! a torn epoch, or any reaction leaves the fabric invalid.
+//!
+//! The headline numbers mirror EXPERIMENTS.md §"Fault-storm latency":
+//! sustained events/s, coalesce ratio, and the p50/p99 of the true
+//! event→publication reaction latency (queue wait + window + reroute),
+//! one sample per event. With `BENCH_SERVICE_OUT=path` the same numbers
+//! are written as JSON (schema `bench_service/v1`) for the CI soak.
 //!
 //!     cargo run --release --example fault_storm -- [--full | --preset huge]
 
-use dmodc::fabric::{events, FabricManager, ManagerConfig};
+use dmodc::fabric::{events, FabricManager, FabricService, ManagerConfig, ServiceConfig};
 use dmodc::prelude::*;
 use dmodc::util::cli::Args;
+use dmodc::util::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use dmodc::util::sync::{thread::spawn_named, Arc};
 use dmodc::util::table::{fmt_duration, Table};
-use std::sync::mpsc::channel;
+use dmodc::util::time;
+use std::time::Duration;
+
+/// Per-batch rows printed before the table elides the remainder.
+const TABLE_ROWS: usize = 32;
 
 fn main() {
-    let p = Args::new("fault_storm", "fabric-manager fault storm")
+    let p = Args::new("fault_storm", "fabric-service fault storm")
         .switch("full", "use the full 8640-node Figure-2 topology")
         .flag(
             "preset",
             "",
             "named PGFT preset (fig1|small|paper_8640|huge), overrides --full",
         )
-        .flag("events", "30", "number of events")
+        .flag("events", "60", "number of events")
+        .flag("rate", "200", "producer pace in events/s (0 = blast)")
+        .flag("readers", "4", "concurrent reader threads on the published tables")
+        .flag("window-ms", "5", "coalescing window (ms, from first event of a burst)")
+        .flag("max-batch", "0", "max events per reaction (0 = unbounded)")
         .flag("seed", "7", "seed")
         .flag("islet-every", "8", "islet reboot cadence")
         .flag("algo", "dmodc", "routing engine backing the manager")
         .parse();
     let preset = p.get("preset");
-    let params = if !preset.is_empty() {
-        PgftParams::preset(preset).unwrap_or_else(|e| panic!("bad --preset: {e}"))
+    let (name, params) = if !preset.is_empty() {
+        let prm = PgftParams::preset(preset).unwrap_or_else(|e| panic!("bad --preset: {e}"));
+        (preset.to_string(), prm)
     } else if p.get_bool("full") {
-        PgftParams::paper_8640()
+        ("paper_8640".to_string(), PgftParams::paper_8640())
     } else {
-        PgftParams::parse("16,9,12;1,4,6;1,1,1").unwrap() // 1728 nodes
+        // 1728 nodes
+        ("default_1728".to_string(), PgftParams::parse("16,9,12;1,4,6;1,1,1").unwrap())
     };
     let topo = params.build();
     println!(
-        "fabric: {} nodes / {} switches / {} cables",
+        "fabric: {} nodes / {} switches / {} cables (preset {name})",
         topo.nodes.len(),
         topo.switches.len(),
         topo.num_cables()
     );
 
+    let n_events = p.get_usize("events");
+    let rate = p.get_f64("rate");
+    let n_readers = p.get_usize("readers");
     let mut rng = Rng::new(p.get_u64("seed"));
-    let schedule = events::random_schedule(
-        &topo,
-        &mut rng,
-        p.get_usize("events"),
-        50,
-        p.get_usize("islet-every"),
-    );
+    let schedule =
+        events::random_schedule(&topo, &mut rng, n_events, 50, p.get_usize("islet-every"));
 
-    let (etx, erx) = channel();
-    let (rtx, rrx) = channel();
-    // Any registered engine can back the manager; every one reroutes out
-    // of a persistent workspace (see DESIGN.md).
     let algo: Algo = p.get_parsed("algo");
-    println!("engine: {algo}");
-    let mut mgr = FabricManager::new(
-        topo,
-        ManagerConfig {
+    let cfg = ServiceConfig {
+        manager: ManagerConfig {
             algo,
             ..Default::default()
         },
+        window_ms: p.get_u64("window-ms"),
+        max_batch: p.get_usize("max-batch"),
+    };
+    println!(
+        "engine: {algo}  window: {}ms  max_batch: {}  rate: {rate}/s  readers: {n_readers}",
+        cfg.window_ms, cfg.max_batch
     );
-    let manager_thread = dmodc::util::sync::thread::spawn_named("fabric-manager", move || {
-        mgr.run_stream(erx, rtx);
-        mgr
-    })
-    .expect("spawn manager");
-    let producer = dmodc::util::sync::thread::spawn_named("event-producer", move || {
-        for e in schedule {
-            etx.send(e).unwrap();
-        }
-    })
-    .expect("spawn producer");
+    let nodes = topo.nodes.len();
+    let switches = topo.switches.len();
+    let mgr = FabricManager::new(topo, cfg.manager.clone());
+    let svc = FabricService::spawn_with(mgr, cfg.clone()).expect("spawn service");
 
-    let mut tab = Table::new(&["#", "reroute", "valid", "entriesΔ", "blocksΔ", "alive"]);
-    let mut worst = 0f64;
-    for r in rrx.iter() {
-        worst = worst.max(r.reroute_secs);
-        tab.row(vec![
-            r.event_idx.to_string(),
-            fmt_duration(r.reroute_secs),
-            r.valid.to_string(),
-            r.upload.entries_changed.to_string(),
-            r.upload.blocks_delta.to_string(),
-            r.switches_alive.to_string(),
-        ]);
+    // Reader fleet: random route lookups against whatever epoch is
+    // current, a full checksum verification every 256 reads, per-thread
+    // epoch monotonicity. Torn or regressed epochs fail the harness.
+    let stop = Arc::new(AtomicBool::new(false));
+    let torn = Arc::new(AtomicU64::new(0));
+    let mut reader_threads = Vec::new();
+    for r in 0..n_readers {
+        let reader = svc.reader();
+        let stop = Arc::clone(&stop);
+        let torn = Arc::clone(&torn);
+        let seed = p.get_u64("seed") ^ (0x9E37 + r as u64);
+        reader_threads.push(
+            spawn_named(&format!("storm-reader-{r}"), move || {
+                let mut rng = Rng::new(seed);
+                let mut reads = 0u64;
+                let mut last_epoch = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    let ep = reader.tables();
+                    if ep.epoch() < last_epoch {
+                        torn.fetch_add(1, Ordering::Relaxed);
+                    }
+                    last_epoch = ep.epoch();
+                    let sw = rng.gen_range(ep.num_switches());
+                    let dst = rng.gen_range(ep.num_nodes()) as u32;
+                    std::hint::black_box(ep.port(sw, dst));
+                    reads += 1;
+                    if reads % 256 == 0 && ep.verify().is_err() {
+                        torn.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                reads
+            })
+            .expect("spawn reader"),
+        );
     }
-    producer.join().unwrap();
-    let mgr = manager_thread.join().unwrap();
+
+    // Paced producer on this thread; reports drained inline (the report
+    // channel is unbounded, recv() below never deadlocks the loop).
+    let sender = svc.sender();
+    let gap = if rate > 0.0 {
+        Duration::from_secs_f64(1.0 / rate)
+    } else {
+        Duration::ZERO
+    };
+    let t0 = time::now();
+    let mut next_send = t0;
+    for e in &schedule {
+        if !gap.is_zero() {
+            let now = time::now();
+            let wait = next_send.saturating_duration_since(now);
+            if !wait.is_zero() {
+                std::thread::sleep(wait);
+            }
+            next_send += gap;
+        }
+        sender.send(e.clone()).expect("service hung up early");
+    }
+    drop(sender);
+
+    // Every sent event ends up in exactly one report; collect until the
+    // counts balance, then shut the loop down.
+    let mut tab = Table::new(&[
+        "batch", "events", "tier", "reaction", "valid", "entriesΔ", "alive",
+    ]);
+    let mut seen = 0usize;
+    let mut invalid = 0usize;
+    let mut elided = 0usize;
+    while seen < schedule.len() {
+        let br = svc.reports().recv().expect("service died mid-storm");
+        seen += br.events;
+        if !br.report.valid {
+            invalid += 1;
+        }
+        if br.batch_idx < TABLE_ROWS {
+            tab.row(vec![
+                br.batch_idx.to_string(),
+                br.events.to_string(),
+                format!("{:?}", br.report.tier),
+                fmt_duration(br.reaction_s),
+                br.report.valid.to_string(),
+                br.report.upload.entries_changed.to_string(),
+                br.report.switches_alive.to_string(),
+            ]);
+        } else {
+            elided += 1;
+        }
+    }
+    let storm_s = time::now().saturating_duration_since(t0).as_secs_f64();
+    let (mgr, stats) = svc.shutdown();
+    stop.store(true, Ordering::Relaxed);
+    let mut reader_reads = 0u64;
+    for h in reader_threads {
+        reader_reads += h.join().expect("reader panicked");
+    }
+    let torn = torn.load(Ordering::Relaxed);
 
     print!("{}", tab.render());
+    if elided > 0 {
+        println!("… ({elided} more batches)");
+    }
     println!("{}", mgr.metrics.render());
     print!("{}", mgr.reroute_hist.render("reroute latency"));
+    print!("{}", stats.reaction.render("reaction latency"));
+    let events_per_s = if storm_s > 0.0 {
+        stats.events as f64 / storm_s
+    } else {
+        0.0
+    };
+    let reads_per_s = if storm_s > 0.0 {
+        reader_reads as f64 / storm_s
+    } else {
+        0.0
+    };
     println!(
-        "worst-case reaction: {} — paper's bar: < 1 s for complete rerouting: {}",
-        fmt_duration(worst),
-        if worst < 1.0 { "MET" } else { "MISSED" }
+        "storm: {} events in {} → {:.1} events/s, {} reactions (coalesce ratio {:.2}, peak batch {})",
+        stats.events,
+        fmt_duration(storm_s),
+        events_per_s,
+        stats.batches,
+        stats.coalesce_ratio(),
+        stats.max_batch
     );
+    println!(
+        "readers: {n_readers} threads, {reader_reads} lookups ({reads_per_s:.0}/s), torn epochs: {torn}"
+    );
+    let p50 = stats.reaction.quantile(0.5);
+    let p99 = stats.reaction.quantile(0.99);
+    let bar = if stats.reaction.max() < 1000.0 {
+        "MET"
+    } else {
+        "MISSED"
+    };
+    println!(
+        "reaction (event→publication): p50≤{:.2}ms p99≤{:.2}ms max={:.2}ms — paper's bar: < 1 s: {}",
+        p50,
+        p99,
+        stats.reaction.max(),
+        bar
+    );
+
+    if let Ok(out_path) = std::env::var("BENCH_SERVICE_OUT") {
+        let threads = std::env::var("DMODC_THREADS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            });
+        let json = format!(
+            concat!(
+                "{{\n",
+                "  \"schema\": \"bench_service/v1\",\n",
+                "  \"status\": \"ok\",\n",
+                "  \"preset\": \"{name}\",\n",
+                "  \"topology\": \"PGFT({spec})\",\n",
+                "  \"nodes\": {nodes},\n",
+                "  \"switches\": {switches},\n",
+                "  \"threads\": {threads},\n",
+                "  \"window_ms\": {window},\n",
+                "  \"max_batch\": {max_batch},\n",
+                "  \"rate_target\": {rate:.1},\n",
+                "  \"events\": {events},\n",
+                "  \"batches\": {batches},\n",
+                "  \"events_per_s\": {eps:.2},\n",
+                "  \"coalesce_ratio\": {ratio:.4},\n",
+                "  \"peak_batch\": {peak},\n",
+                "  \"reaction_p50_ms\": {p50:.4},\n",
+                "  \"reaction_p99_ms\": {p99:.4},\n",
+                "  \"reaction_max_ms\": {pmax:.4},\n",
+                "  \"reaction_mean_ms\": {pmean:.4},\n",
+                "  \"delta_reroutes\": {dr},\n",
+                "  \"delta_fallbacks\": {df},\n",
+                "  \"delta_ineligible\": {di},\n",
+                "  \"readers\": {readers},\n",
+                "  \"reader_reads\": {reads},\n",
+                "  \"reader_reads_per_s\": {rps:.0},\n",
+                "  \"torn_reads\": {torn},\n",
+                "  \"invalid_reactions\": {invalid}\n",
+                "}}\n"
+            ),
+            name = name,
+            spec = params,
+            nodes = nodes,
+            switches = switches,
+            threads = threads,
+            window = cfg.window_ms,
+            max_batch = cfg.max_batch,
+            rate = rate,
+            events = stats.events,
+            batches = stats.batches,
+            eps = events_per_s,
+            ratio = stats.coalesce_ratio(),
+            peak = stats.max_batch,
+            p50 = p50,
+            p99 = p99,
+            pmax = stats.reaction.max(),
+            pmean = stats.reaction.mean(),
+            dr = mgr.metrics.delta_reroutes,
+            df = mgr.metrics.delta_fallbacks,
+            di = mgr.metrics.delta_ineligible,
+            readers = n_readers,
+            reads = reader_reads,
+            rps = reads_per_s,
+            torn = torn,
+            invalid = invalid,
+        );
+        std::fs::write(&out_path, &json).expect("write BENCH_service.json");
+        println!("→ {out_path}");
+    }
+
+    if torn > 0 || invalid > 0 {
+        eprintln!("FAIL: torn epochs {torn}, invalid reactions {invalid}");
+        std::process::exit(1);
+    }
 }

@@ -1,0 +1,153 @@
+"""Simulation of the fabric service's burst-coalescing claim against
+the Python reference pipeline.
+
+The service loop (``rust/src/fabric/service.rs``) coalesces an event
+burst into **one** reaction: a single delta step from the last
+materialized state straight to the burst's *net* end state, skipping
+every intermediate materialization. The claim (DESIGN.md §"Fabric
+service loop"): because the delta diff is state-vs-state — previous
+products against current products, never event-vs-event — the batched
+jump is bit-identical to applying the burst's events one at a time and
+keeping the final tables. Corollary: a burst whose effects cancel (a
+down/up flap of the same cable inside one window) dirties nothing.
+
+This mirrors what ``rust/tests/service_coalesce.rs`` fuzzes in Rust,
+minus the manager plumbing: random schedules are applied once
+per-event and once in random batch partitions, with one delta step per
+batch, and every batch end state must match a from-scratch reference
+route byte for byte. The flap corollary is asserted directly with an
+exact empty dirty set.
+
+Run:  python3 python/tests/test_coalesce_sim.py  (exits non-zero on drift)
+"""
+
+import importlib.util
+import os
+import random
+import sys
+
+_here = os.path.dirname(os.path.abspath(__file__))
+_spec = importlib.util.spec_from_file_location(
+    "test_delta_sim", os.path.join(_here, "test_delta_sim.py")
+)
+d = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(d)
+g = d.g
+NO_ROUTE = d.NO_ROUTE
+
+
+def random_events(base, seed, n_events):
+    """The same event mix as test_delta_sim.run_sequence: 2/3 cable
+    toggles, 1/3 switch toggles."""
+    cbs = g.cables(base)
+    removable = [s for s in range(base.num_switches) if base.level[s] > 0]
+    rng = random.Random(seed)
+    events = []
+    for _ in range(n_events):
+        if rng.randrange(3) < 2 or not removable:
+            events.append(("cable", cbs[rng.randrange(len(cbs))]))
+        else:
+            events.append(("switch", removable[rng.randrange(len(removable))]))
+    return events
+
+
+def full_route(topo, cur):
+    lft = [[NO_ROUTE] * len(topo.nodes) for _ in range(topo.num_switches)]
+    for s in range(topo.num_switches):
+        d.fill_row(topo, cur, s, lft[s])
+    return lft
+
+
+def react(base, dead_sw, dead_cb, prev, lft, reduction):
+    """One coalesced reaction: materialize the net state and either
+    delta-patch `lft` in place or rebuild it. Returns
+    (products, lft, tier, rows_touched)."""
+    topo = g.apply_dead(base, dead_sw, dead_cb)
+    cur = d.products(topo, reduction)
+    reason = d.eligibility(prev, cur)
+    if reason is None and lft is not None:
+        rf, rp = d.delta_apply(topo, prev, cur, lft)
+        return cur, lft, "delta", rf + rp
+    return cur, full_route(topo, cur), "full", topo.num_switches
+
+
+def run_batched(m, w, p, seed, n_events, reduction):
+    """Apply one schedule per-event and in random batches; every batch
+    end state must equal the from-scratch reference, and the two
+    applications must agree on the final tables."""
+    base = g.build_pgft(m, w, p)
+    events = random_events(base, seed, n_events)
+    split = random.Random(seed ^ 0x9E3779B97F4A7C15)
+
+    final = {}
+    stats = {"delta": 0, "full": 0, "batches": 0}
+    for mode in ("sequential", "batched"):
+        dead_cb, dead_sw = set(), set()
+        prev, lft = None, None
+        i = 0
+        while i < len(events):
+            k = 1 if mode == "sequential" else min(1 + split.randrange(5), len(events) - i)
+            for kind, x in events[i : i + k]:
+                if kind == "cable":
+                    dead_cb.symmetric_difference_update({x})
+                else:
+                    dead_sw.symmetric_difference_update({x})
+            i += k
+            prev, lft, tier, _ = react(base, dead_sw, dead_cb, prev, lft, reduction)
+            if mode == "batched":
+                stats[tier] += 1
+                stats["batches"] += 1
+                topo = g.apply_dead(base, dead_sw, dead_cb)
+                want = g.route_reference(topo, reduction)
+                assert lft == want, (
+                    f"batched reaction drifted from reference at event {i} "
+                    f"(reduction={reduction}, seed={seed})"
+                )
+        final[mode] = lft
+    assert final["batched"] == final["sequential"], (
+        f"batched final tables != sequential (reduction={reduction}, seed={seed})"
+    )
+    return stats
+
+
+def flap_cancels(m, w, p, reduction):
+    """A same-cable down+up inside one batch nets to no state change:
+    the coalesced reaction must take the delta tier and dirty nothing."""
+    base = g.build_pgft(m, w, p)
+    cable = g.cables(base)[0]
+    prev, lft, tier, _ = react(base, set(), set(), None, None, reduction)
+    assert tier == "full", "initial build is the full tier"
+    before = [row[:] for row in lft]
+    # LinkDown(cable) then LinkUp(cable) coalesced: dead sets unchanged.
+    _, lft, tier, touched = react(base, set(), set(), prev, lft, reduction)
+    assert tier == "delta", f"flap batch fell back to {tier} ({reduction})"
+    assert touched == 0, f"cancelled flap dirtied {touched} rows ({reduction})"
+    assert lft == before, f"cancelled flap changed tables ({reduction})"
+    _ = cable
+
+
+def main():
+    total = {"delta": 0, "full": 0, "batches": 0}
+    shapes = [
+        ([2, 2, 3], [1, 2, 2], [1, 2, 1]),   # fig1
+        ([4, 6, 3], [1, 2, 2], [1, 2, 1]),   # small
+        ([3, 4], [1, 2], [1, 2]),            # 2-level with parallel links
+        ([2, 3, 2], [1, 1, 2], [1, 1, 1]),   # no parallel links
+    ]
+    for m, w, p in shapes:
+        for reduction in ("max", "firstpath"):
+            flap_cancels(m, w, p, reduction)
+            for seed in range(10):
+                st = run_batched(m, w, p, seed, 12, reduction)
+                for k in total:
+                    total[k] += st[k]
+    assert total["delta"] > 0, "the coalesced delta path was never exercised"
+    assert total["batches"] < 4 * 2 * 10 * 12, "no batch ever coalesced >1 event"
+    print(
+        f"coalesce sim OK: {total['batches']} batched reactions "
+        f"({total['delta']} delta, {total['full']} full), flap-cancel exact"
+    )
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -21,10 +21,23 @@
 //!   inline on the calling thread: no deadlock, every inner index once;
 //! * `worker_panic_propagates` — a panicking body surfaces as a panic on
 //!   the submitting thread and the pool stays usable afterwards.
+//!
+//! And for the fabric service's epoch-publication surface
+//! (`util::sync::Published`, the double-buffered `Arc` swap behind
+//! `fabric::lft_store::FabricReader`):
+//!
+//! * `published_handoff_never_tears_and_is_monotonic` — a reader racing
+//!   a writer's publications only ever observes complete snapshots, and
+//!   the observed epoch sequence never goes backwards;
+//! * `published_concurrent_writers_serialize` — two racing `publish`
+//!   calls serialize on the internal writer lock: both land, the final
+//!   epoch counts both, and the final snapshot is one of the two whole
+//!   payloads.
 
 #![cfg(loom)]
 
 use dmodc_loom::util::par::Pool;
+use dmodc_loom::util::sync::Published;
 use loom::sync::Arc;
 use loom::sync::atomic::{AtomicUsize, Ordering};
 
@@ -96,6 +109,54 @@ fn nested_region_runs_inline() {
             assert_eq!(h.load(Ordering::Relaxed), 1, "inner index {k} not run exactly once");
         }
         pool.shutdown();
+    });
+}
+
+#[test]
+fn published_handoff_never_tears_and_is_monotonic() {
+    loom::model(|| {
+        // Payload invariant: every element equals the publishing epoch.
+        // A torn snapshot would mix elements of different epochs.
+        let p = Arc::new(Published::new(Arc::new(vec![0usize; 3])));
+        let reader = {
+            let p = Arc::clone(&p);
+            loom::thread::spawn(move || {
+                let mut last = 0usize;
+                for _ in 0..2 {
+                    let v = p.load();
+                    let first = v[0];
+                    assert!(
+                        v.iter().all(|&x| x == first),
+                        "torn snapshot: {v:?}"
+                    );
+                    assert!(first >= last, "epoch went backwards: {first} < {last}");
+                    last = first;
+                }
+            })
+        };
+        for e in 1..=2usize {
+            p.publish(Arc::new(vec![e; 3]));
+        }
+        reader.join().unwrap();
+    });
+}
+
+#[test]
+fn published_concurrent_writers_serialize() {
+    loom::model(|| {
+        let p = Arc::new(Published::new(Arc::new(vec![0usize; 2])));
+        let w = {
+            let p = Arc::clone(&p);
+            loom::thread::spawn(move || {
+                p.publish(Arc::new(vec![1usize; 2]));
+            })
+        };
+        p.publish(Arc::new(vec![2usize; 2]));
+        w.join().unwrap();
+        assert_eq!(p.epoch(), 2, "both publications must land");
+        let v = p.load();
+        assert!(v[0] == v[1], "torn snapshot: {v:?}");
+        assert!(v[0] == 1 || v[0] == 2, "final snapshot must be a published one");
     });
 }
 

@@ -14,9 +14,22 @@
 //! [`LftStore::commit_rows`], which diffs only the rows the incremental
 //! fill refilled — the clean rows are proven unchanged, so skipping
 //! their diff is exact, not an approximation (debug builds verify).
+//!
+//! The store is also the **publication surface** for concurrent readers:
+//! after each commit the manager calls [`LftStore::publish`], which
+//! snapshots the current tables into an immutable [`FabricEpoch`] and
+//! swaps it into a [`Published`] double buffer. Rows are `Arc`-shared
+//! between the store and published epochs — [`LftStore::commit_one`]
+//! mutates them copy-on-write, so a reader holding an old epoch keeps a
+//! consistent table while the store moves on. Every row carries an FNV
+//! checksum maintained at commit time (the commit already scans the row,
+//! so this is free of extra passes) and the epoch checksum is a fold of
+//! the row sums — O(switches), not O(switches × nodes) — letting readers
+//! and stress tests prove they never observed a torn table.
 
 use crate::routing::Lft;
 use crate::topology::Topology;
+use crate::util::sync::{Arc, Published};
 use std::collections::HashMap;
 
 /// Entries per LFT upload block (InfiniBand LinearForwardingTable MAD).
@@ -35,22 +48,206 @@ pub struct UploadStats {
     pub blocks_full: usize,
 }
 
-/// One switch's stored table plus its change version.
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+#[inline]
+fn fnv1a(h: u64, byte: u8) -> u64 {
+    (h ^ byte as u64).wrapping_mul(FNV_PRIME)
+}
+
+/// FNV-1a over a switch's identity and its full table row.
+fn row_sum(uuid: u64, ports: &[u16]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for b in uuid.to_le_bytes() {
+        h = fnv1a(h, b);
+    }
+    for &p in ports {
+        for b in p.to_le_bytes() {
+            h = fnv1a(h, b);
+        }
+    }
+    h
+}
+
+/// Order-sensitive fold of per-row checksums into the epoch checksum.
+fn fold_sums(row_sums: &[u64]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for s in row_sums {
+        for b in s.to_le_bytes() {
+            h = fnv1a(h, b);
+        }
+    }
+    h
+}
+
+/// One published generation of the fabric's forwarding state: an
+/// immutable, internally consistent snapshot of every alive switch's
+/// table. Rows are `Arc`-shared with the store; the store's
+/// copy-on-write commits guarantee they never mutate under a reader.
+pub struct FabricEpoch {
+    epoch: u64,
+    num_nodes: usize,
+    uuids: Vec<u64>,
+    rows: Vec<Arc<Vec<u16>>>,
+    row_sums: Vec<u64>,
+    checksum: u64,
+}
+
+impl FabricEpoch {
+    /// The pre-publication state: epoch 0, no switches.
+    pub fn empty() -> Self {
+        Self {
+            epoch: 0,
+            num_nodes: 0,
+            uuids: Vec::new(),
+            rows: Vec::new(),
+            row_sums: Vec::new(),
+            checksum: fold_sums(&[]),
+        }
+    }
+
+    /// Publication sequence number (starts at 1; 0 = [`empty`]).
+    ///
+    /// [`empty`]: FabricEpoch::empty
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Alive switches in this snapshot (dead switches are absent).
+    pub fn num_switches(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Destinations per table row.
+    pub fn num_nodes(&self) -> usize {
+        self.num_nodes
+    }
+
+    /// UUID of the `sw`-th alive switch.
+    pub fn uuid(&self, sw: usize) -> u64 {
+        self.uuids[sw]
+    }
+
+    /// Full table row of the `sw`-th alive switch.
+    pub fn row(&self, sw: usize) -> &[u16] {
+        &self.rows[sw]
+    }
+
+    /// Egress port at switch `sw` toward destination node `dst`.
+    pub fn port(&self, sw: usize, dst: u32) -> u16 {
+        self.rows[sw][dst as usize]
+    }
+
+    /// Re-derive every checksum from the row bytes and compare: a torn
+    /// or half-published snapshot cannot pass. Readers in the stress
+    /// harness and the TSan suite call this on every load.
+    pub fn verify(&self) -> Result<(), String> {
+        for (i, r) in self.rows.iter().enumerate() {
+            if row_sum(self.uuids[i], r) != self.row_sums[i] {
+                return Err(format!("epoch {}: switch row {i} checksum mismatch", self.epoch));
+            }
+        }
+        if fold_sums(&self.row_sums) != self.checksum {
+            return Err(format!("epoch {}: table checksum mismatch", self.epoch));
+        }
+        Ok(())
+    }
+}
+
+/// Cloneable read handle onto the store's published epochs. Any number
+/// of these can [`tables`](FabricReader::tables) concurrently with the
+/// manager committing and publishing; see [`Published`] for the
+/// guarantees (complete snapshots only, monotonic freshness).
+#[derive(Clone)]
+pub struct FabricReader {
+    inner: Arc<Published<FabricEpoch>>,
+}
+
+impl FabricReader {
+    /// The current epoch snapshot (or a newer one; never older/partial).
+    pub fn tables(&self) -> Arc<FabricEpoch> {
+        self.inner.load()
+    }
+
+    /// Current publication epoch without loading the snapshot.
+    pub fn epoch(&self) -> u64 {
+        self.inner.epoch()
+    }
+}
+
+/// One switch's stored table plus its change version and row checksum.
 struct StoredTable {
-    ports: Vec<u16>,
+    ports: Arc<Vec<u16>>,
     version: u64,
+    sum: u64,
 }
 
 /// The fabric's current tables, keyed by switch UUID (stable across
 /// degradation-driven re-materializations).
-#[derive(Default)]
 pub struct LftStore {
     tables: HashMap<u64, StoredTable>,
+    published: Arc<Published<FabricEpoch>>,
+    epoch: u64,
+}
+
+impl Default for LftStore {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl LftStore {
     pub fn new() -> Self {
-        Self::default()
+        Self {
+            tables: HashMap::new(),
+            published: Arc::new(Published::new(Arc::new(FabricEpoch::empty()))),
+            epoch: 0,
+        }
+    }
+
+    /// Snapshot the tables of every switch alive in `topo` into a fresh
+    /// [`FabricEpoch`] and publish it for concurrent readers. Caller
+    /// contract: every switch in `topo` has been committed (the manager
+    /// publishes only right after a commit). Returns the new epoch.
+    pub fn publish(&mut self, topo: &Topology) -> u64 {
+        self.epoch += 1;
+        let s = topo.switches.len();
+        let mut uuids = Vec::with_capacity(s);
+        let mut rows = Vec::with_capacity(s);
+        let mut row_sums = Vec::with_capacity(s);
+        for sw in &topo.switches {
+            let t = self
+                .tables
+                .get(&sw.uuid)
+                .expect("publish: alive switch has no committed table");
+            uuids.push(sw.uuid);
+            rows.push(Arc::clone(&t.ports));
+            row_sums.push(t.sum);
+        }
+        let checksum = fold_sums(&row_sums);
+        self.published.publish(Arc::new(FabricEpoch {
+            epoch: self.epoch,
+            num_nodes: topo.nodes.len(),
+            uuids,
+            rows,
+            row_sums,
+            checksum,
+        }));
+        self.epoch
+    }
+
+    /// Read handle for concurrent consumers; cheap to clone and `Send`.
+    pub fn reader(&self) -> FabricReader {
+        FabricReader {
+            inner: Arc::clone(&self.published),
+        }
+    }
+
+    /// Epoch of the most recent [`publish`](LftStore::publish) (0 before
+    /// the first).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
     }
 
     /// Diff one switch row against the stored table, updating store and
@@ -84,7 +281,11 @@ impl LftStore {
                     st.switches_touched += 1;
                     st.entries_changed += changed;
                     st.blocks_delta += blocks;
-                    stored.ports.copy_from_slice(row);
+                    // Copy-on-write: if a published epoch still holds
+                    // this row, `make_mut` detaches a private copy so
+                    // readers of that epoch keep a consistent table.
+                    Arc::make_mut(&mut stored.ports).copy_from_slice(row);
+                    stored.sum = row_sum(uuid, row);
                     stored.version += 1;
                 }
             }
@@ -96,8 +297,9 @@ impl LftStore {
                 self.tables.insert(
                     uuid,
                     StoredTable {
-                        ports: row.to_vec(),
+                        ports: Arc::new(row.to_vec()),
                         version: 1,
+                        sum: row_sum(uuid, row),
                     },
                 );
             }
@@ -256,6 +458,79 @@ mod tests {
         assert_eq!(st.switches_touched, 0);
         assert_eq!(st.entries_changed, 0);
         assert_eq!(st.blocks_delta, 0);
+    }
+
+    #[test]
+    fn publish_snapshots_committed_tables() {
+        let t = PgftParams::fig1().build();
+        let lft = route_unchecked(Algo::Dmodc, &t);
+        let mut store = LftStore::new();
+        let reader = store.reader();
+        assert_eq!(reader.tables().epoch(), 0, "pre-publication epoch");
+        store.commit(&t, &lft);
+        let e = store.publish(&t);
+        assert_eq!(e, 1);
+        let ep = reader.tables();
+        assert_eq!(ep.epoch(), 1);
+        assert_eq!(ep.num_switches(), t.switches.len());
+        assert_eq!(ep.num_nodes(), t.nodes.len());
+        ep.verify().expect("fresh epoch must checksum clean");
+        let n = lft.num_nodes();
+        for (s, sw) in t.switches.iter().enumerate() {
+            assert_eq!(ep.uuid(s), sw.uuid);
+            assert_eq!(ep.row(s), &lft.raw()[s * n..(s + 1) * n]);
+        }
+    }
+
+    #[test]
+    fn old_epochs_survive_later_commits_cow() {
+        let t = PgftParams::fig1().build();
+        let lft = route_unchecked(Algo::Dmodc, &t);
+        let mut store = LftStore::new();
+        store.commit(&t, &lft);
+        store.publish(&t);
+        let reader = store.reader();
+        let old = reader.tables();
+        let before: Vec<u16> = old.row(0).to_vec();
+        // Mutate switch 0's table and republish: the held epoch must
+        // keep its original bytes (copy-on-write detach) and still
+        // verify, while a fresh load sees the new state.
+        let mut lft2 = lft.clone();
+        lft2.set(0, 3, 63);
+        store.commit(&t, &lft2);
+        store.publish(&t);
+        assert_eq!(old.row(0), &before[..], "reader's epoch mutated in place");
+        old.verify().expect("old epoch must stay internally consistent");
+        let new = reader.tables();
+        assert_eq!(new.epoch(), 2);
+        assert_eq!(new.port(0, 3), 63);
+        new.verify().expect("new epoch must checksum clean");
+    }
+
+    #[test]
+    fn verify_catches_a_torn_row() {
+        let t = PgftParams::fig1().build();
+        let lft = route_unchecked(Algo::Dmodc, &t);
+        let n = lft.num_nodes();
+        let uuids: Vec<u64> = t.switches.iter().map(|s| s.uuid).collect();
+        let rows: Vec<Arc<Vec<u16>>> = (0..t.switches.len())
+            .map(|s| Arc::new(lft.raw()[s * n..(s + 1) * n].to_vec()))
+            .collect();
+        let row_sums: Vec<u64> = uuids.iter().zip(&rows).map(|(&u, r)| row_sum(u, r)).collect();
+        let checksum = fold_sums(&row_sums);
+        let mut ep = FabricEpoch {
+            epoch: 1,
+            num_nodes: n,
+            uuids,
+            rows,
+            row_sums,
+            checksum,
+        };
+        ep.verify().expect("intact hand-built epoch must pass");
+        // A row whose bytes drifted from its recorded checksum is
+        // exactly what a torn publication would look like.
+        Arc::make_mut(&mut ep.rows[0])[0] ^= 1;
+        assert!(ep.verify().is_err(), "corrupted row must fail verification");
     }
 
     #[test]

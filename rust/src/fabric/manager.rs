@@ -26,15 +26,19 @@
 //! [`ManagerReport::tier`] and the `delta_*` [`Metrics`] counters
 //! record which tier actually fired per event.
 //!
-//! Two driving modes:
+//! Three driving modes:
 //! * [`FabricManager::process`] — synchronous, event by event (tests,
 //!   benches, deterministic experiments);
-//! * [`FabricManager::run_stream`] — a thread+channel event loop (the
-//!   fault-storm example): events arrive on an `mpsc` channel, reaction
-//!   reports leave on another.
+//! * [`FabricManager::run_stream`] — a thread+channel event loop: events
+//!   arrive on an `mpsc` channel, reaction reports leave on another;
+//! * [`FabricService`](super::service::FabricService) — the long-running
+//!   service loop: coalesces event bursts into one
+//!   [`FabricManager::apply_batch`] reaction per burst and publishes
+//!   each committed table generation through the store's epoch surface
+//!   ([`FabricManager::reader`]) for concurrent readers.
 
 use super::events::{cable_ids, for_each_cable, CableId, Event, EventKind};
-use super::lft_store::{LftStore, UploadStats};
+use super::lft_store::{FabricReader, LftStore, UploadStats};
 use super::metrics::{Histogram, Metrics};
 use crate::analysis::paths::TensorUpdate;
 use crate::analysis::patterns::Pattern;
@@ -109,10 +113,15 @@ pub enum ReactionTier {
     Full,
 }
 
-/// Per-event reaction report.
+/// Per-reaction report (one event, or one coalesced batch).
 #[derive(Clone, Debug)]
 pub struct ManagerReport {
+    /// Index of the last event folded into this reaction.
     pub event_idx: usize,
+    /// Events coalesced into this reaction: 1 for [`FabricManager::apply`],
+    /// the batch size for [`FabricManager::apply_batch`], 0 for
+    /// event-less reroutes (construction, [`FabricManager::reroute_now`]).
+    pub events_coalesced: usize,
     /// Wall-clock reroute latency (topology rebuild + routing), seconds.
     pub reroute_secs: f64,
     pub valid: bool,
@@ -130,6 +139,9 @@ pub struct ManagerReport {
     pub timings: Option<RerouteTimings>,
     /// Post-event congestion risk, when `ManagerConfig::probe` is on.
     pub risk: Option<RiskReport>,
+    /// Publication epoch of the tables this reaction committed — what a
+    /// [`FabricReader`] observes once it sees this (or a later) epoch.
+    pub epoch: u64,
 }
 
 /// One risk-probe evaluation (see [`ProbeConfig`]).
@@ -174,6 +186,11 @@ pub struct FabricManager {
     dead_cables: HashSet<(SwitchId, u16)>,
     uuid_to_switch: HashMap<u64, SwitchId>,
     cable_to_port: HashMap<CableId, (SwitchId, u16)>,
+    /// Reverse of `cable_to_port`: canonical reference endpoint →
+    /// [`CableId`]. Lets [`FabricManager::rebuild_current_cable_map`]
+    /// recover which *reference* ordinals of a parallel-cable pair are
+    /// dead, so survivors keep their reference ids in the current map.
+    port_to_cable: HashMap<(SwitchId, u16), CableId>,
     store: LftStore,
     pub metrics: Metrics,
     pub reroute_hist: Histogram,
@@ -234,7 +251,9 @@ impl FabricManager {
             .enumerate()
             .map(|(i, s)| (s.uuid, i as SwitchId))
             .collect();
-        let cable_to_port = cable_ids(&reference).into_iter().collect();
+        let cable_to_port: HashMap<CableId, (SwitchId, u16)> =
+            cable_ids(&reference).into_iter().collect();
+        let port_to_cable = cable_to_port.iter().map(|(&c, &p)| (p, c)).collect();
         let probe = cfg.probe.clone().map(RiskProbe::new);
         let mut mgr = Self {
             reference,
@@ -243,6 +262,7 @@ impl FabricManager {
             dead_cables: HashSet::new(),
             uuid_to_switch,
             cable_to_port,
+            port_to_cable,
             store: LftStore::new(),
             metrics: Metrics::default(),
             reroute_hist: Histogram::latency_ms(),
@@ -271,33 +291,40 @@ impl FabricManager {
         &*self.engine
     }
 
+    /// Read handle onto the store's published LFT epochs: any number of
+    /// threads can route queries from it (and clone it further) while
+    /// this manager reroutes. See [`FabricReader`] for the guarantees.
+    pub fn reader(&self) -> FabricReader {
+        self.store.reader()
+    }
+
     fn mark(&mut self, kind: &EventKind) {
         match kind {
             EventKind::SwitchDown(u) => {
                 if let Some(&s) = self.uuid_to_switch.get(u) {
                     if self.dead_switches.insert(s) {
-                        self.metrics.equipment_down += 1;
+                        Metrics::inc(&mut self.metrics.equipment_down);
                     }
                 }
             }
             EventKind::SwitchUp(u) => {
                 if let Some(&s) = self.uuid_to_switch.get(u) {
                     if self.dead_switches.remove(&s) {
-                        self.metrics.equipment_up += 1;
+                        Metrics::inc(&mut self.metrics.equipment_up);
                     }
                 }
             }
             EventKind::LinkDown(c) => {
                 if let Some(&p) = self.cable_to_port.get(c) {
                     if self.dead_cables.insert(p) {
-                        self.metrics.equipment_down += 1;
+                        Metrics::inc(&mut self.metrics.equipment_down);
                     }
                 }
             }
             EventKind::LinkUp(c) => {
                 if let Some(&p) = self.cable_to_port.get(c) {
                     if self.dead_cables.remove(&p) {
-                        self.metrics.equipment_up += 1;
+                        Metrics::inc(&mut self.metrics.equipment_up);
                     }
                 }
             }
@@ -318,10 +345,41 @@ impl FabricManager {
     /// materialized topology, through the same `events::for_each_cable`
     /// enumeration that defines [`CableId`]s — one source of truth, so the
     /// map can never drift from `events::cable_ids`.
+    ///
+    /// `CableId::ordinal` numbers the parallel cables of a UUID pair in
+    /// *reference* enumeration order, but `for_each_cable` over the
+    /// degraded topology numbers only the survivors, compacted from 0.
+    /// Enumerating the current topology positionally would therefore
+    /// alias once a parallel sibling is dead: a lookup of the dead cable
+    /// resolves to its surviving sibling's port (the sequence
+    /// patch → recovery of a *different* cable → patch of the original
+    /// cable would "patch" a healthy cable). Each survivor's reference
+    /// ordinal is recovered by shifting its compacted ordinal past the
+    /// pair's dead reference ordinals; dead cables are then simply
+    /// absent, so a stale `fast_patch` on one returns `None`.
     fn rebuild_current_cable_map(&mut self) {
+        // Reference ordinals of currently dead cables, per UUID pair
+        // (`dead_cables` stores canonical reference endpoints — the same
+        // coordinates `port_to_cable` is keyed on).
+        let mut dead_ords: HashMap<(u64, u64), Vec<u16>> = HashMap::new();
+        for ep in &self.dead_cables {
+            if let Some(id) = self.port_to_cable.get(ep) {
+                dead_ords.entry((id.a, id.b)).or_default().push(id.ordinal);
+            }
+        }
+        for ords in dead_ords.values_mut() {
+            ords.sort_unstable();
+        }
         let map = &mut self.current_cable_ports;
         map.clear();
-        for_each_cable(&self.current_topo, |id, endpoint| {
+        for_each_cable(&self.current_topo, |mut id, endpoint| {
+            if let Some(dead) = dead_ords.get(&(id.a, id.b)) {
+                for &d in dead {
+                    if d <= id.ordinal {
+                        id.ordinal += 1;
+                    }
+                }
+            }
             map.insert(id, endpoint);
         });
         self.cable_map_stale = false;
@@ -373,9 +431,15 @@ impl FabricManager {
         };
         if try_delta {
             match tier {
-                ReactionTier::Delta => self.metrics.delta_reroutes += 1,
-                ReactionTier::Full => self.metrics.delta_fallbacks += 1,
+                ReactionTier::Delta => Metrics::inc(&mut self.metrics.delta_reroutes),
+                ReactionTier::Full => Metrics::inc(&mut self.metrics.delta_fallbacks),
             }
+        } else {
+            // Never a delta candidate (initial build, reroute_now,
+            // switch/islet events, outstanding patches, delta off) —
+            // kept distinct from delta_fallbacks, which counts
+            // *attempts* the engine bailed on.
+            Metrics::inc(&mut self.metrics.delta_ineligible);
         }
 
         let valid = !self.cfg.validate
@@ -384,7 +448,7 @@ impl FabricManager {
                 .validate(&self.current_topo, &self.current_lft)
                 .is_ok();
         if !valid {
-            self.metrics.invalid_states += 1;
+            Metrics::inc(&mut self.metrics.invalid_states);
         }
         drop(event_guard);
         let tc = time::now();
@@ -395,18 +459,23 @@ impl FabricManager {
             }
             ReactionTier::Full => self.store.commit(&self.current_topo, &self.current_lft),
         };
+        // Publish the committed generation for concurrent readers before
+        // reporting: once the report (carrying this epoch) is observable,
+        // so are the tables.
+        let epoch = self.store.publish(&self.current_topo);
         let commit_secs = tc.elapsed().as_secs_f64();
         let mut timings = self.engine.last_timings();
         if let Some(t) = &mut timings {
             t.commit_s = commit_secs;
         }
-        self.metrics.reroutes += 1;
-        self.metrics.entries_changed += upload.entries_changed as u64;
-        self.metrics.blocks_uploaded += upload.blocks_delta as u64;
+        Metrics::inc(&mut self.metrics.reroutes);
+        Metrics::add(&mut self.metrics.entries_changed, upload.entries_changed as u64);
+        Metrics::add(&mut self.metrics.blocks_uploaded, upload.blocks_delta as u64);
         self.reroute_hist.record(reroute_secs * 1e3);
         let risk = self.run_probe();
         ManagerReport {
             event_idx: self.events_seen,
+            events_coalesced: 0,
             reroute_secs,
             valid,
             upload,
@@ -416,6 +485,7 @@ impl FabricManager {
             delta,
             timings,
             risk,
+            epoch,
         }
     }
 
@@ -458,9 +528,9 @@ impl FabricManager {
         for &pat in &p.cfg.patterns {
             values.push((pat, p.eval.evaluate(&self.current_topo, pat, p.cfg.seed)));
         }
-        self.metrics.probe_updates += 1;
+        Metrics::inc(&mut self.metrics.probe_updates);
         if !update.is_incremental() {
-            self.metrics.probe_rebuilds += 1;
+            Metrics::inc(&mut self.metrics.probe_rebuilds);
         }
         Some(RiskReport {
             values,
@@ -477,14 +547,38 @@ impl FabricManager {
     /// path's clean-row proof would not cover them — only a full
     /// reroute restores the contract).
     pub fn apply(&mut self, event: &Event) -> ManagerReport {
-        self.events_seen += 1;
-        self.metrics.events += 1;
+        self.apply_batch(std::slice::from_ref(event))
+    }
+
+    /// Apply a coalesced burst of events with **one** reroute: mark every
+    /// event's state change, then recompute once against the final dead
+    /// sets. A reroute is a pure function of (reference topology, dead
+    /// sets) — and the delta tier is bit-identical to a full reroute by
+    /// the dirty-set contract — so the resulting LFT is byte-identical
+    /// to applying the events one at a time and keeping only the final
+    /// tables (the service loop's coalescing guarantee; fuzzed in
+    /// `tests/service_coalesce.rs`).
+    ///
+    /// The batch takes the delta tier iff *every* event in it is a cable
+    /// event — a switch or islet event anywhere forces the full tier for
+    /// the whole batch — under the same gates as [`FabricManager::apply`].
+    pub fn apply_batch(&mut self, events: &[Event]) -> ManagerReport {
+        let all_cables = !events.is_empty()
+            && events
+                .iter()
+                .all(|e| matches!(e.kind, EventKind::LinkDown(_) | EventKind::LinkUp(_)));
         let try_delta = self.cfg.delta
-            && matches!(event.kind, EventKind::LinkDown(_) | EventKind::LinkUp(_))
+            && all_cables
             && self.patched_dead_ports.is_empty()
             && self.engine.capabilities().incremental;
-        self.mark(&event.kind);
-        self.reroute(try_delta)
+        for e in events {
+            self.events_seen += 1;
+            Metrics::inc(&mut self.metrics.events);
+            self.mark(&e.kind);
+        }
+        let mut report = self.reroute(try_delta);
+        report.events_coalesced = events.len();
+        report
     }
 
     /// Apply a whole scripted schedule, returning every report.
@@ -494,11 +588,19 @@ impl FabricManager {
 
     /// Event-loop mode: consume events from `rx` until it closes, emitting
     /// a report per event on `tx`. Runs on the calling thread (spawn it).
+    ///
+    /// Shutdown contract: *every* event queued before the sender hung up
+    /// is applied. If the report receiver goes away mid-stream, the loop
+    /// keeps draining and applying — only the reporting stops. (It used
+    /// to exit on the first failed report send, silently dropping queued
+    /// tail events and leaving the manager's fault state diverged from
+    /// the fabric's.)
     pub fn run_stream(&mut self, rx: Receiver<Event>, tx: Sender<ManagerReport>) {
+        let mut reports_alive = true;
         while let Ok(ev) = rx.recv() {
             let report = self.apply(&ev);
-            if tx.send(report).is_err() {
-                break;
+            if reports_alive && tx.send(report).is_err() {
+                reports_alive = false;
             }
         }
     }
@@ -569,12 +671,14 @@ impl FabricManager {
             self.dead_cables.insert(p);
         }
         let secs = t0.elapsed().as_secs_f64();
-        self.metrics.fast_patches += 1;
+        Metrics::inc(&mut self.metrics.fast_patches);
         let upload = self.store.commit(&self.current_topo, &self.current_lft);
+        let epoch = self.store.publish(&self.current_topo);
         Some(PatchReport {
             entries_patched: patches.len(),
             patch_secs: secs,
             upload,
+            epoch,
         })
     }
 }
@@ -585,6 +689,8 @@ pub struct PatchReport {
     pub entries_patched: usize,
     pub patch_secs: f64,
     pub upload: UploadStats,
+    /// Publication epoch of the patched tables.
+    pub epoch: u64,
 }
 
 #[cfg(test)]
@@ -654,6 +760,192 @@ mod tests {
         let reports: Vec<ManagerReport> = rrx.iter().collect();
         assert_eq!(reports.len(), 2);
         assert_eq!(h.join().unwrap(), 2);
+    }
+
+    #[test]
+    fn run_stream_drains_queue_after_report_receiver_hangs_up() {
+        // Regression: the loop used to exit on the first failed report
+        // send, silently dropping queued tail events — the manager's
+        // fault state then diverged from the fabric's.
+        use std::sync::mpsc::channel;
+        let t = PgftParams::fig1().build();
+        let victim = uuid_of_level(&t, 1);
+        let (etx, erx) = channel();
+        let (rtx, rrx) = channel();
+        drop(rrx); // report consumer gone before the loop starts
+        for i in 0..3u64 {
+            etx.send(Event {
+                at_ms: 2 * i,
+                kind: EventKind::SwitchDown(victim),
+            })
+            .unwrap();
+            etx.send(Event {
+                at_ms: 2 * i + 1,
+                kind: EventKind::SwitchUp(victim),
+            })
+            .unwrap();
+        }
+        drop(etx);
+        let mut mgr = FabricManager::new(t.clone(), ManagerConfig::default());
+        mgr.run_stream(erx, rtx);
+        assert_eq!(mgr.metrics.events, 6, "every queued event applied");
+        // Net effect of the 3 down/up pairs is none: the state equals a
+        // fresh manager's — proof the tail events really were applied.
+        let baseline = FabricManager::new(t, ManagerConfig::default());
+        assert_eq!(mgr.current().1.raw(), baseline.current().1.raw());
+    }
+
+    #[test]
+    fn run_stream_emits_reports_for_events_queued_at_sender_hangup() {
+        // The event sender hangs up with events still queued: every one
+        // must be drained, applied, and reported (std mpsc delivers the
+        // queued messages before the disconnect error; this pins that
+        // shutdown contract).
+        use std::sync::mpsc::channel;
+        let t = PgftParams::fig1().build();
+        let victim = uuid_of_level(&t, 1);
+        let (etx, erx) = channel();
+        let (rtx, rrx) = channel();
+        for i in 0..4u64 {
+            let kind = if i % 2 == 0 {
+                EventKind::SwitchDown(victim)
+            } else {
+                EventKind::SwitchUp(victim)
+            };
+            etx.send(Event { at_ms: i, kind }).unwrap();
+        }
+        drop(etx);
+        let mut mgr = FabricManager::new(t, ManagerConfig::default());
+        mgr.run_stream(erx, rtx); // sender already gone: pure tail drain
+        let reports: Vec<ManagerReport> = rrx.try_iter().collect();
+        assert_eq!(reports.len(), 4, "a report per queued event");
+        assert_eq!(mgr.metrics.events, 4);
+    }
+
+    #[test]
+    fn switch_death_burst_coalesces_into_one_reroute() {
+        // A dying switch arrives as a burst of per-cable events. One
+        // apply_batch must issue exactly one reroute and land on tables
+        // byte-identical to applying the events one at a time.
+        let t = PgftParams::small().build();
+        let spine_uuid = uuid_of_level(&t, t.num_levels - 1);
+        let burst: Vec<Event> = cable_ids(&t)
+            .iter()
+            .filter(|(c, _)| c.a == spine_uuid || c.b == spine_uuid)
+            .enumerate()
+            .map(|(i, (c, _))| Event {
+                at_ms: i as u64,
+                kind: EventKind::LinkDown(*c),
+            })
+            .collect();
+        assert!(burst.len() > 1, "a spine death must be a real burst");
+
+        let mut seq = FabricManager::new(t.clone(), ManagerConfig::default());
+        for e in &burst {
+            seq.apply(e);
+        }
+
+        let mut bat = FabricManager::new(t, ManagerConfig::default());
+        let reroutes_before = bat.metrics.reroutes;
+        let epoch_before = bat.reader().epoch();
+        let r = bat.apply_batch(&burst);
+        assert!(r.valid);
+        assert_eq!(r.events_coalesced, burst.len());
+        assert_eq!(bat.metrics.reroutes, reroutes_before + 1, "exactly one reroute");
+        assert_eq!(bat.metrics.events, burst.len() as u64);
+        assert_eq!(r.epoch, epoch_before + 1, "one publication per reaction");
+        assert_eq!(
+            bat.current().1.raw(),
+            seq.current().1.raw(),
+            "coalesced batch must be byte-identical to sequential application"
+        );
+        // The published epoch carries exactly the committed tables.
+        let ep = bat.reader().tables();
+        assert_eq!(ep.epoch(), r.epoch);
+        ep.verify().expect("published epoch checksums clean");
+        let n = bat.current().1.num_nodes();
+        for s in 0..bat.current().0.switches.len() {
+            assert_eq!(ep.row(s), &bat.current().1.raw()[s * n..(s + 1) * n]);
+        }
+    }
+
+    #[test]
+    fn fast_patch_refuses_a_cable_that_died_before_this_materialization() {
+        // Regression for the positional cable-map aliasing: the sequence
+        // patch(X) → recovery of a *different* cable → patch(X) again.
+        // The recovery rematerializes without X, compacting the
+        // surviving parallel sibling's enumeration ordinal down to X's —
+        // the old positional map then resolved a lookup of dead X to the
+        // healthy sibling's port and "successfully" patched a live cable.
+        let t = PgftParams::small().build();
+        let ids = cable_ids(&t);
+        let c0 = ids[0].0;
+        assert_eq!(c0.ordinal, 0);
+        let c1 = CableId { ordinal: 1, ..c0 };
+        assert!(
+            ids.iter().any(|(c, _)| *c == c1),
+            "small() must have a parallel pair for this scenario"
+        );
+        let y = ids
+            .iter()
+            .map(|(c, _)| *c)
+            .find(|c| (c.a, c.b) != (c0.a, c0.b))
+            .expect("an unrelated cable");
+
+        let mut mgr = FabricManager::new(t.clone(), ManagerConfig::default());
+        mgr.apply(&Event {
+            at_ms: 1,
+            kind: EventKind::LinkDown(y),
+        });
+        assert!(mgr.fast_patch(&c0).is_some(), "c0 is alive here: patch works");
+        mgr.apply(&Event {
+            at_ms: 2,
+            kind: EventKind::LinkUp(y),
+        }); // rematerializes without c0
+        assert!(
+            mgr.fast_patch(&c0).is_none(),
+            "c0 died before this materialization: the lookup must miss, \
+             not alias the surviving sibling"
+        );
+        // The sibling keeps its reference identity and stays patchable.
+        assert!(mgr.fast_patch(&c1).is_some(), "surviving sibling patches fine");
+        assert_eq!(mgr.metrics.fast_patches, 2);
+        // With both pair cables now dead, a rebalancing reroute must
+        // agree with a manager that saw them die as plain events.
+        mgr.reroute_now();
+        let mut want = FabricManager::new(t, ManagerConfig::default());
+        want.apply(&Event {
+            at_ms: 1,
+            kind: EventKind::LinkDown(c0),
+        });
+        want.apply(&Event {
+            at_ms: 2,
+            kind: EventKind::LinkDown(c1),
+        });
+        assert_eq!(mgr.current().1.raw(), want.current().1.raw());
+    }
+
+    #[test]
+    fn delta_ineligible_counts_reroutes_that_never_attempted_delta() {
+        let t = PgftParams::small().build();
+        let cable = cable_ids(&t)[0].0;
+        let victim = uuid_of_level(&t, 1);
+        let mut mgr = FabricManager::new(t, ManagerConfig::default());
+        // The constructor's initial table build never attempts delta.
+        assert_eq!(mgr.metrics.delta_ineligible, 1);
+        mgr.apply(&Event {
+            at_ms: 1,
+            kind: EventKind::LinkDown(cable),
+        });
+        assert_eq!(mgr.metrics.delta_ineligible, 1, "delta-tier event is not ineligible");
+        mgr.apply(&Event {
+            at_ms: 2,
+            kind: EventKind::SwitchDown(victim),
+        });
+        assert_eq!(mgr.metrics.delta_ineligible, 2, "switch events never attempt delta");
+        mgr.reroute_now();
+        assert_eq!(mgr.metrics.delta_ineligible, 3);
+        assert_eq!(mgr.metrics.delta_fallbacks, 0, "no *attempt* ever fell back");
     }
 
     #[test]

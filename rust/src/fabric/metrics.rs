@@ -26,16 +26,32 @@ impl Histogram {
         }
     }
 
+    /// Log-spaced reaction-latency buckets: 10µs .. ~20s. The service
+    /// loop's event→publication reaction on small fabrics is sub-ms, so
+    /// the reroute buckets of [`latency_ms`](Histogram::latency_ms)
+    /// would collapse its whole distribution into the first bucket.
+    pub fn reaction_ms() -> Self {
+        let bounds: Vec<f64> = (0..22).map(|i| 0.01 * 2f64.powi(i)).collect();
+        let counts = vec![0; bounds.len() + 1];
+        Self {
+            bounds,
+            counts,
+            sum: 0.0,
+            max: 0.0,
+            n: 0,
+        }
+    }
+
     pub fn record(&mut self, v: f64) {
         let idx = self
             .bounds
             .iter()
             .position(|&b| v <= b)
             .unwrap_or(self.bounds.len());
-        self.counts[idx] += 1;
+        self.counts[idx] = self.counts[idx].saturating_add(1);
         self.sum += v;
         self.max = self.max.max(v);
-        self.n += 1;
+        self.n = self.n.saturating_add(1);
     }
 
     /// Fold `other` into this histogram (same bucket boundaries
@@ -103,14 +119,28 @@ impl Histogram {
 }
 
 /// Aggregate fabric-manager counters.
+///
+/// All increments go through [`Metrics::inc`]/[`Metrics::add`]
+/// (saturating): a long-running service must degrade a counter to a
+/// pinned ceiling, never wrap it to a small number mid-flight or panic
+/// a debug build on overflow.
 #[derive(Clone, Debug, Default)]
 pub struct Metrics {
     pub events: u64,
     pub reroutes: u64,
     /// Reroutes served by the incremental (delta) tier.
     pub delta_reroutes: u64,
-    /// Delta-tier attempts that fell back to a full row fill.
+    /// Delta-tier *attempts* that fell back to a full row fill — the
+    /// engine started down the incremental path and bailed (threshold,
+    /// shape change, missing history).
     pub delta_fallbacks: u64,
+    /// Reroutes that never attempted the delta tier: the initial table
+    /// build, explicit `reroute_now`, switch/islet events, reroutes
+    /// with outstanding fast patches, and delta-disabled configs.
+    /// Distinct from [`delta_fallbacks`](Metrics::delta_fallbacks):
+    /// `delta_reroutes + delta_fallbacks` counts eligible attempts,
+    /// `delta_ineligible` the reroutes that were never candidates.
+    pub delta_ineligible: u64,
     pub fast_patches: u64,
     pub invalid_states: u64,
     pub entries_changed: u64,
@@ -125,13 +155,31 @@ pub struct Metrics {
 }
 
 impl Metrics {
+    /// Saturating `+= 1` for any counter field.
+    #[inline]
+    pub fn inc(counter: &mut u64) {
+        *counter = counter.saturating_add(1);
+    }
+
+    /// Saturating `+= by` for any counter field.
+    #[inline]
+    pub fn add(counter: &mut u64, by: u64) {
+        *counter = counter.saturating_add(by);
+    }
+
+    /// Zero every counter (e.g. between stress-harness phases).
+    pub fn reset(&mut self) {
+        *self = Self::default();
+    }
+
     pub fn render(&self) -> String {
         format!(
-            "events={} reroutes={} delta={} delta_fallbacks={} fast_patches={} invalid={} entries_changed={} blocks_uploaded={} down={} up={} probe={} probe_rebuilds={}",
+            "events={} reroutes={} delta={} delta_fallbacks={} delta_ineligible={} fast_patches={} invalid={} entries_changed={} blocks_uploaded={} down={} up={} probe={} probe_rebuilds={}",
             self.events,
             self.reroutes,
             self.delta_reroutes,
             self.delta_fallbacks,
+            self.delta_ineligible,
             self.fast_patches,
             self.invalid_states,
             self.entries_changed,
@@ -170,8 +218,47 @@ mod tests {
         assert!(s.contains("n=1"));
         let m = Metrics {
             events: 2,
+            delta_ineligible: 3,
             ..Default::default()
         };
         assert!(m.render().contains("events=2"));
+        assert!(m.render().contains("delta_ineligible=3"));
+    }
+
+    #[test]
+    fn counters_saturate_instead_of_wrapping() {
+        let mut c = u64::MAX - 1;
+        Metrics::inc(&mut c);
+        assert_eq!(c, u64::MAX);
+        Metrics::inc(&mut c);
+        assert_eq!(c, u64::MAX, "increment past the ceiling must pin, not wrap");
+        Metrics::add(&mut c, 17);
+        assert_eq!(c, u64::MAX);
+    }
+
+    #[test]
+    fn reset_zeroes_everything() {
+        let mut m = Metrics {
+            events: 5,
+            reroutes: 4,
+            delta_ineligible: 2,
+            ..Default::default()
+        };
+        m.reset();
+        assert_eq!(m.events, 0);
+        assert_eq!(m.reroutes, 0);
+        assert_eq!(m.delta_ineligible, 0);
+        assert!(m.render().contains("events=0"));
+    }
+
+    #[test]
+    fn reaction_buckets_resolve_sub_ms() {
+        let mut h = Histogram::reaction_ms();
+        h.record(0.02); // 20µs
+        h.record(0.5); // 500µs
+        assert_eq!(h.count(), 2);
+        // The two samples must land in different buckets: the p-high
+        // quantile bound stays well below 1ms for the 20µs sample.
+        assert!(h.quantile(0.25) < 0.1, "sub-ms samples collapsed into one bucket");
     }
 }

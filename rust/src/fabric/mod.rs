@@ -1,12 +1,17 @@
-//! Centralized fabric manager (L3 coordinator). See [`manager`].
+//! Centralized fabric manager (L3 coordinator). See [`manager`] for the
+//! event-at-a-time core and [`service`] for the long-running coalescing
+//! service loop with epoch-published tables.
 
 pub mod events;
 pub mod lft_store;
 pub mod manager;
 pub mod metrics;
+pub mod service;
 
 pub use events::{Event, EventKind};
+pub use lft_store::{FabricEpoch, FabricReader};
 pub use manager::{
     FabricManager, ManagerConfig, ManagerReport, PatchReport, ProbeConfig, ReactionTier,
     RiskReport,
 };
+pub use service::{BatchReport, EventSender, FabricService, ServiceConfig, ServiceStats};

@@ -1,0 +1,382 @@
+//! The long-running fabric service loop: burst coalescing in front of
+//! [`FabricManager`], epoch-published tables behind it.
+//!
+//! The paper's pitch is a centralized manager that reacts to faults
+//! "with no impact to running applications". In practice a dying switch
+//! does not arrive as one event — it arrives as a burst of per-cable
+//! notifications. Reacting per event would pay a full tier decision and
+//! reroute for every cable of the burst; the service instead **coalesces**
+//! a burst into one [`FabricManager::apply_batch`] reaction, which is
+//! byte-identical to the sequential application's final tables (a
+//! reroute is a pure function of the dead sets; the delta tier is
+//! bit-identical by the dirty-set contract).
+//!
+//! **Coalescing window semantics** (DESIGN.md §"Fabric service loop"):
+//! the window opens when the first event of a burst is dequeued. The
+//! loop first drains everything already queued without blocking, then
+//! keeps absorbing events until `window_ms` has elapsed since the first
+//! dequeue (or `max_batch` is hit). The deadline is measured from the
+//! burst's *start*, so worst-case staleness is bounded: an event waits
+//! at most `window_ms` + one reroute before its tables publish.
+//! `window_ms = 0` still folds the already-queued backlog into one
+//! batch — a service that fell behind catches up in a single reaction.
+//!
+//! **Reader side**: every committed generation is published through the
+//! store's [`FabricReader`] surface. Readers route queries from complete,
+//! checksummed [`FabricEpoch`](super::lft_store::FabricEpoch) snapshots
+//! and are never blocked by a reroute in flight.
+//!
+//! **Shutdown contract**: mirrors [`FabricManager::run_stream`] — when
+//! the last [`EventSender`] drops, every event still queued is drained,
+//! applied, and (if the report receiver is alive) reported; a vanished
+//! report receiver stops reporting but never stops applying.
+
+use super::events::Event;
+use super::lft_store::FabricReader;
+use super::manager::{FabricManager, ManagerConfig, ManagerReport};
+use super::metrics::Histogram;
+use crate::topology::Topology;
+use crate::util::sync::thread::{spawn_named, JoinHandle};
+use crate::util::time;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, SendError, Sender, TryRecvError};
+use std::time::{Duration, Instant};
+
+/// Service configuration: the wrapped manager's plus the coalescing knobs.
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    pub manager: ManagerConfig,
+    /// Coalescing window in milliseconds, measured from the first event
+    /// of a burst (see the module docs). 0 = coalesce only the backlog
+    /// already queued at dequeue time.
+    pub window_ms: u64,
+    /// Maximum events folded into one reaction; 0 = unbounded.
+    pub max_batch: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self {
+            manager: ManagerConfig::default(),
+            window_ms: 2,
+            max_batch: 0,
+        }
+    }
+}
+
+/// Cloneable event-ingestion handle. Each event is stamped with its
+/// enqueue time, so the service can report true event→publication
+/// reaction latency (queue wait included, not just reroute time).
+#[derive(Clone)]
+pub struct EventSender {
+    tx: Sender<(Event, Instant)>,
+}
+
+impl EventSender {
+    /// Enqueue an event; fails only after the service loop terminated.
+    pub fn send(&self, event: Event) -> Result<(), SendError<Event>> {
+        self.tx
+            .send((event, time::now()))
+            .map_err(|SendError((ev, _))| SendError(ev))
+    }
+}
+
+/// One coalesced reaction, as reported on the service's report channel.
+#[derive(Clone, Debug)]
+pub struct BatchReport {
+    /// Reaction sequence number (0-based).
+    pub batch_idx: usize,
+    /// Events folded into this reaction.
+    pub events: usize,
+    /// Oldest-event reaction latency, seconds: first enqueue →
+    /// publication of the tables that account for it.
+    pub reaction_s: f64,
+    /// The manager's report for the single coalesced reroute (carries
+    /// the publication epoch, tier, upload accounting, timings).
+    pub report: ManagerReport,
+}
+
+/// Lifetime statistics of one service run.
+pub struct ServiceStats {
+    /// Coalesced reactions issued.
+    pub batches: u64,
+    /// Events consumed.
+    pub events: u64,
+    /// Event→publication reaction latency (ms), one sample per event —
+    /// the p50/p99 that EXPERIMENTS.md §"Fault-storm latency" reports.
+    pub reaction: Histogram,
+    /// Largest single batch (peak observed queue depth).
+    pub max_batch: usize,
+}
+
+impl ServiceStats {
+    fn new() -> Self {
+        Self {
+            batches: 0,
+            events: 0,
+            reaction: Histogram::reaction_ms(),
+            max_batch: 0,
+        }
+    }
+
+    /// Mean events per reaction; 1.0 means no burst ever coalesced.
+    pub fn coalesce_ratio(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.events as f64 / self.batches as f64
+        }
+    }
+
+    pub fn render(&self) -> String {
+        format!(
+            "batches={} events={} coalesce_ratio={:.2} max_batch={}\n{}",
+            self.batches,
+            self.events,
+            self.coalesce_ratio(),
+            self.max_batch,
+            self.reaction.render("reaction")
+        )
+    }
+}
+
+/// A running fabric service: the manager on its own thread, an event
+/// queue in front, a report channel and an epoch-publication surface out
+/// the back.
+pub struct FabricService {
+    events: EventSender,
+    reports: Receiver<BatchReport>,
+    reader: FabricReader,
+    join: JoinHandle<(FabricManager, ServiceStats)>,
+}
+
+impl FabricService {
+    /// Build the manager over `reference` (computing the initial tables
+    /// synchronously — the returned service is immediately routable) and
+    /// start the service loop on a named thread.
+    pub fn spawn(reference: Topology, cfg: ServiceConfig) -> std::io::Result<Self> {
+        let mgr = FabricManager::new(reference, cfg.manager.clone());
+        Self::spawn_with(mgr, cfg)
+    }
+
+    /// Start the loop over a caller-built manager (custom engine,
+    /// pre-applied fault state).
+    pub fn spawn_with(mgr: FabricManager, cfg: ServiceConfig) -> std::io::Result<Self> {
+        let reader = mgr.reader();
+        let (etx, erx) = channel();
+        let (rtx, rrx) = channel();
+        let join = spawn_named("fabric-service", move || run(mgr, cfg, erx, rtx))?;
+        Ok(Self {
+            events: EventSender { tx: etx },
+            reports: rrx,
+            reader,
+            join,
+        })
+    }
+
+    /// A fresh ingestion handle (cloneable; one per producer thread).
+    pub fn sender(&self) -> EventSender {
+        self.events.clone()
+    }
+
+    /// A fresh read handle onto the published epochs (cloneable; one per
+    /// reader thread).
+    pub fn reader(&self) -> FabricReader {
+        self.reader.clone()
+    }
+
+    /// The per-batch report channel.
+    pub fn reports(&self) -> &Receiver<BatchReport> {
+        &self.reports
+    }
+
+    /// Close the event queue, let the loop drain and apply everything
+    /// still queued, and return the manager plus lifetime stats.
+    pub fn shutdown(self) -> (FabricManager, ServiceStats) {
+        let FabricService {
+            events,
+            reports,
+            reader: _,
+            join,
+        } = self;
+        drop(events);
+        // Unread reports never block the drain (the loop tolerates a
+        // dead report receiver), so dropping the channel here is safe.
+        drop(reports);
+        join.join().expect("fabric-service thread panicked")
+    }
+}
+
+/// The service loop body. Separated from [`FabricService`] so tests can
+/// drive it synchronously on the calling thread.
+fn run(
+    mut mgr: FabricManager,
+    cfg: ServiceConfig,
+    rx: Receiver<(Event, Instant)>,
+    tx: Sender<BatchReport>,
+) -> (FabricManager, ServiceStats) {
+    let mut stats = ServiceStats::new();
+    let window = Duration::from_millis(cfg.window_ms);
+    let cap = if cfg.max_batch == 0 {
+        usize::MAX
+    } else {
+        cfg.max_batch
+    };
+    let mut events: Vec<Event> = Vec::new();
+    let mut stamps: Vec<Instant> = Vec::new();
+    let mut reports_alive = true;
+    let mut batch_idx = 0usize;
+    while let Ok((first, at)) = rx.recv() {
+        events.clear();
+        stamps.clear();
+        events.push(first);
+        stamps.push(at);
+        let deadline = time::now() + window;
+        'fill: while events.len() < cap {
+            // Drain the backlog without blocking first …
+            match rx.try_recv() {
+                Ok((ev, at)) => {
+                    events.push(ev);
+                    stamps.push(at);
+                    continue 'fill;
+                }
+                Err(TryRecvError::Disconnected) => break 'fill,
+                Err(TryRecvError::Empty) => {}
+            }
+            // … then wait out the remainder of the window for stragglers.
+            if cfg.window_ms == 0 {
+                break;
+            }
+            let now = time::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline.saturating_duration_since(now)) {
+                Ok((ev, at)) => {
+                    events.push(ev);
+                    stamps.push(at);
+                }
+                Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => {
+                    break 'fill;
+                }
+            }
+        }
+        let report = mgr.apply_batch(&events);
+        let done = time::now();
+        for &at in &stamps {
+            stats
+                .reaction
+                .record(done.saturating_duration_since(at).as_secs_f64() * 1e3);
+        }
+        stats.batches = stats.batches.saturating_add(1);
+        stats.events = stats.events.saturating_add(events.len() as u64);
+        stats.max_batch = stats.max_batch.max(events.len());
+        if reports_alive {
+            let br = BatchReport {
+                batch_idx,
+                events: events.len(),
+                reaction_s: done.saturating_duration_since(stamps[0]).as_secs_f64(),
+                report,
+            };
+            // Same rule as run_stream: a vanished report consumer stops
+            // reporting, never applying.
+            if tx.send(br).is_err() {
+                reports_alive = false;
+            }
+        }
+        batch_idx += 1;
+    }
+    (mgr, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::events::EventKind;
+    use crate::topology::pgft::PgftParams;
+
+    fn uuid_of_level(t: &Topology, level: u8) -> u64 {
+        t.switches
+            .iter()
+            .find(|s| s.level == level)
+            .map(|s| s.uuid)
+            .unwrap()
+    }
+
+    #[test]
+    fn service_applies_events_and_reports_batches() {
+        let t = PgftParams::fig1().build();
+        let victim = uuid_of_level(&t, 1);
+        let svc = FabricService::spawn(t, ServiceConfig::default()).expect("spawn");
+        let sender = svc.sender();
+        sender
+            .send(Event {
+                at_ms: 1,
+                kind: EventKind::SwitchDown(victim),
+            })
+            .unwrap();
+        sender
+            .send(Event {
+                at_ms: 2,
+                kind: EventKind::SwitchUp(victim),
+            })
+            .unwrap();
+        drop(sender);
+        let (mgr, stats) = svc.shutdown();
+        assert_eq!(stats.events, 2);
+        assert_eq!(mgr.metrics.events, 2);
+        assert!(stats.batches >= 1 && stats.batches <= 2);
+        assert_eq!(stats.reaction.count(), 2, "one reaction sample per event");
+        assert!(stats.coalesce_ratio() >= 1.0);
+    }
+
+    #[test]
+    fn shutdown_drains_the_queued_backlog() {
+        // Events still queued when the last sender drops must all be
+        // applied before shutdown returns — the service-level version of
+        // the run_stream tail-drain contract.
+        let t = PgftParams::fig1().build();
+        let victim = uuid_of_level(&t, 1);
+        let svc = FabricService::spawn(t, ServiceConfig::default()).expect("spawn");
+        let sender = svc.sender();
+        for i in 0..6u64 {
+            let kind = if i % 2 == 0 {
+                EventKind::SwitchDown(victim)
+            } else {
+                EventKind::SwitchUp(victim)
+            };
+            sender.send(Event { at_ms: i, kind }).unwrap();
+        }
+        drop(sender);
+        let (mgr, stats) = svc.shutdown();
+        assert_eq!(stats.events, 6, "no queued event may be dropped");
+        assert_eq!(mgr.metrics.events, 6);
+    }
+
+    #[test]
+    fn reader_observes_published_epochs() {
+        let t = PgftParams::fig1().build();
+        let victim = uuid_of_level(&t, 1);
+        let svc = FabricService::spawn(t, ServiceConfig::default()).expect("spawn");
+        let reader = svc.reader();
+        let e0 = reader.epoch();
+        assert!(e0 >= 1, "initial tables published before spawn returns");
+        reader.tables().verify().expect("initial epoch checksums clean");
+        svc.sender()
+            .send(Event {
+                at_ms: 1,
+                kind: EventKind::SwitchDown(victim),
+            })
+            .unwrap();
+        let (mgr, _) = svc.shutdown();
+        let ep = reader.tables();
+        assert!(ep.epoch() > e0, "reaction must advance the epoch");
+        ep.verify().expect("post-reaction epoch checksums clean");
+        // The final epoch is exactly the manager's committed tables.
+        let (topo, lft) = mgr.current();
+        let n = lft.num_nodes();
+        assert_eq!(ep.num_switches(), topo.switches.len());
+        for s in 0..topo.switches.len() {
+            assert_eq!(ep.row(s), &lft.raw()[s * n..(s + 1) * n]);
+        }
+    }
+}

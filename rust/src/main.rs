@@ -7,6 +7,7 @@
 //!   analyze   congestion risk (A2A / RP / SP) for one engine
 //!   campaign  degradation-sweep grid: {engine × level × seed × pattern}
 //!   fabric    drive the fabric manager through a random fault schedule
+//!             (--stream: the long-running coalescing service loop)
 //!
 //! Examples:
 //!   dmodc-fm topo --pgft "24,15,24;1,6,8;1,1,1"
@@ -18,7 +19,7 @@
 //!   dmodc-fm fabric --nodes 648 --events 40
 
 use dmodc::analysis::{campaign, CongestionAnalyzer};
-use dmodc::fabric::{events, FabricManager, ManagerConfig};
+use dmodc::fabric::{events, FabricManager, FabricService, ManagerConfig, ServiceConfig};
 use dmodc::prelude::*;
 use dmodc::routing::{registry, validity};
 use dmodc::util::cli::Args;
@@ -302,6 +303,10 @@ fn cmd_fabric() {
         .flag("algo", "dmodc", &algo_help())
         .flag("events", "25", "number of fault/recovery events")
         .flag("islet-every", "10", "islet reboot every k-th event (0 = never)")
+        .switch("stream", "drive the long-running service loop instead of one-shot")
+        .flag("window-ms", "2", "--stream: coalescing window (ms)")
+        .flag("max-batch", "0", "--stream: max events per reaction (0 = unbounded)")
+        .flag("rate", "0", "--stream: producer pace in events/s (0 = blast)")
         .parse_skip(1);
     let t = build_topo(&p);
     let mut rng = Rng::new(p.get_u64("seed"));
@@ -312,6 +317,9 @@ fn cmd_fabric() {
         100,
         p.get_usize("islet-every"),
     );
+    if p.get_bool("stream") {
+        return cmd_fabric_stream(t, schedule, &p);
+    }
     let mut mgr = FabricManager::new(
         t,
         ManagerConfig {
@@ -334,6 +342,64 @@ fn cmd_fabric() {
     print!("{}", tab.render());
     println!("{}", mgr.metrics.render());
     print!("{}", mgr.reroute_hist.render("reroute latency"));
+}
+
+/// `fabric --stream`: the same schedule through the long-running
+/// [`FabricService`] — burst coalescing, epoch publication, and true
+/// event→publication reaction latency (DESIGN.md §"Fabric service loop").
+fn cmd_fabric_stream(t: Topology, schedule: Vec<events::Event>, p: &dmodc::util::cli::Parsed) {
+    let cfg = ServiceConfig {
+        manager: ManagerConfig {
+            algo: p.get_parsed("algo"),
+            ..Default::default()
+        },
+        window_ms: p.get_u64("window-ms"),
+        max_batch: p.get_usize("max-batch"),
+    };
+    println!(
+        "service: window={}ms max_batch={} rate={}/s",
+        cfg.window_ms,
+        cfg.max_batch,
+        p.get("rate")
+    );
+    let svc = FabricService::spawn(t, cfg).expect("spawn fabric service");
+    let sender = svc.sender();
+    let rate = p.get_f64("rate");
+    let gap = if rate > 0.0 {
+        std::time::Duration::from_secs_f64(1.0 / rate)
+    } else {
+        std::time::Duration::ZERO
+    };
+    let total = schedule.len();
+    for e in schedule {
+        sender.send(e).expect("service hung up early");
+        if !gap.is_zero() {
+            std::thread::sleep(gap);
+        }
+    }
+    drop(sender);
+    let mut tab = Table::new(&[
+        "batch", "events", "tier", "reaction", "valid", "entries Δ", "alive sw",
+    ]);
+    let mut seen = 0usize;
+    while seen < total {
+        let br = svc.reports().recv().expect("service died mid-storm");
+        seen += br.events;
+        tab.row(vec![
+            br.batch_idx.to_string(),
+            br.events.to_string(),
+            format!("{:?}", br.report.tier),
+            fmt_duration(br.reaction_s),
+            br.report.valid.to_string(),
+            br.report.upload.entries_changed.to_string(),
+            br.report.switches_alive.to_string(),
+        ]);
+    }
+    let (mgr, stats) = svc.shutdown();
+    print!("{}", tab.render());
+    println!("{}", mgr.metrics.render());
+    print!("{}", mgr.reroute_hist.render("reroute latency"));
+    print!("{}", stats.render());
 }
 
 fn kind_name(k: &events::EventKind) -> String {

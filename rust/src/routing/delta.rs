@@ -36,6 +36,19 @@
 //! configured threshold — the path falls back to a full row fill and
 //! reports [`FallbackReason`]. The fallback *is* the full reroute: the
 //! products were already rebuilt, so nothing is wasted.
+//!
+//! **Batch coalescing** (the fabric service loop,
+//! `fabric::service`): the diff in step 2 is state-vs-state — previous
+//! products against current products — not event-vs-event. Nothing
+//! here inspects which events happened between the two reroutes, so a
+//! burst of N cable events coalesced into *one* reroute yields exactly
+//! the dirty set of the net state change, and the result is
+//! byte-identical to applying the N events one at a time and keeping
+//! the final tables (events whose effects cancel — a down/up flap
+//! inside one window — dirty nothing at all). That composition
+//! property is what makes the service's single-reaction-per-burst
+//! guarantee a corollary of the per-event one; `tests/service_coalesce.rs`
+//! fuzzes it end to end.
 
 use super::common::{Costs, Prep};
 use crate::topology::SwitchId;
@@ -107,6 +120,14 @@ impl DeltaOutcome {
     /// True when the incremental path (not the full fallback) applied.
     pub fn is_delta(&self) -> bool {
         matches!(self, DeltaOutcome::Delta(_))
+    }
+
+    /// Dirty-set statistics when the incremental path applied.
+    pub fn stats(&self) -> Option<DeltaStats> {
+        match self {
+            DeltaOutcome::Delta(st) => Some(*st),
+            DeltaOutcome::Full(_) => None,
+        }
     }
 }
 

@@ -86,3 +86,68 @@ pub mod thread {
 pub fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(|e| e.into_inner())
 }
+
+/// Double-buffered epoch publication: a writer repeatedly publishes
+/// complete `Arc<T>` snapshots; any number of readers [`load`] the
+/// current one without ever blocking behind a publication in flight.
+///
+/// Protocol: two slots alternate as "current" by epoch parity. The
+/// writer fills slot `(e + 1) & 1` — the one no current-epoch reader
+/// looks at — then Release-stores `epoch = e + 1`. A reader
+/// Acquire-loads the epoch and locks the slot it names. The two slot
+/// mutexes exist only for the *stale-reader* race: a reader that loaded
+/// epoch `e` just before a publication of `e + 2` locks the slot while
+/// the writer is overwriting it, and the mutex makes that hand-off a
+/// clean either/or. Readers of the current epoch never contend with the
+/// writer, and every slot always holds a complete `Arc<T>` — there is
+/// no torn state to observe.
+///
+/// Memory ordering: the Release store on `epoch` pairs with the reader's
+/// Acquire load, so the slot write for epoch `e` happens-before any
+/// reader that observed `e` locks that slot (the slot mutex
+/// independently orders the stale-reader race). Guarantee: [`load`]
+/// returns the snapshot of the epoch it sampled *or a newer one* —
+/// freshness is monotonic, never stale beyond the sampled epoch.
+///
+/// Concurrent [`publish`] calls are serialized by an internal writer
+/// lock; the epoch counter only ever increments by one under it.
+///
+/// [`load`]: Published::load
+/// [`publish`]: Published::publish
+pub struct Published<T> {
+    slots: [Mutex<Arc<T>>; 2],
+    epoch: atomic::AtomicU64,
+    writer: Mutex<()>,
+}
+
+impl<T> Published<T> {
+    /// Epoch 0, with `initial` visible to readers immediately.
+    pub fn new(initial: Arc<T>) -> Self {
+        Self {
+            slots: [Mutex::new(Arc::clone(&initial)), Mutex::new(initial)],
+            epoch: atomic::AtomicU64::new(0),
+            writer: Mutex::new(()),
+        }
+    }
+
+    /// The current publication epoch (monotonic, starts at 0).
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(atomic::Ordering::Acquire)
+    }
+
+    /// Snapshot of the current epoch — or a newer one published while
+    /// this call was in flight; never an older or partial state.
+    pub fn load(&self) -> Arc<T> {
+        let e = self.epoch.load(atomic::Ordering::Acquire);
+        Arc::clone(&lock(&self.slots[(e & 1) as usize]))
+    }
+
+    /// Publish `next` as the new current snapshot; returns its epoch.
+    pub fn publish(&self, next: Arc<T>) -> u64 {
+        let _w = lock(&self.writer);
+        let e = self.epoch.load(atomic::Ordering::Relaxed);
+        *lock(&self.slots[((e + 1) & 1) as usize]) = next;
+        self.epoch.store(e + 1, atomic::Ordering::Release);
+        e + 1
+    }
+}

@@ -1,0 +1,367 @@
+//! Differential + end-to-end suite for the fabric service loop's burst
+//! coalescing and epoch publication (DESIGN.md §"Fabric service loop").
+//!
+//! The coalescing promise: one [`FabricManager::apply_batch`] over a
+//! burst is **byte-identical** to applying the burst's events one at a
+//! time and keeping only the final tables — while issuing exactly one
+//! reroute. Enforced here by:
+//!
+//! * a property fuzz over random PGFT shapes × random event schedules ×
+//!   random batch partitions (shared `tests/common` generator + the
+//!   in-tree shrinking runner), both divider reductions, swept at 1 and
+//!   8 worker threads;
+//! * a deterministic flap-cancel check: a down/up pair of the same
+//!   cable inside one batch dirties nothing and uploads nothing;
+//! * an end-to-end storm through [`FabricService`] with concurrent
+//!   readers asserting checksum-clean (never torn), epoch-monotonic
+//!   snapshots and a final state equal to a sequential manager's. This
+//!   test is also the TSan target for the service loop (CI `tsan` job
+//!   runs this suite with `DMODC_THREADS=8`);
+//! * the fast-patch staleness regression (patch → recovery of a
+//!   different cable → patch of the original) under both divider
+//!   reductions.
+//!
+//! Tests that sweep the global worker-count override serialize on one
+//! mutex (same discipline as `tests/equivalence.rs`).
+
+use dmodc::fabric::events::{cable_ids, random_schedule, CableId};
+use dmodc::fabric::{
+    Event, EventKind, FabricManager, FabricService, ManagerConfig, ReactionTier, ServiceConfig,
+};
+use dmodc::prelude::*;
+use dmodc::routing::common::DividerReduction;
+use dmodc::routing::dmodc::{Engine as DmodcEngine, NidOrder, Options};
+use dmodc::util::par;
+use dmodc::util::prop::{check, Check, Config};
+use dmodc::util::sync::atomic::{AtomicBool, Ordering};
+use dmodc::util::sync::{thread::spawn_named, Arc};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+mod common;
+use common::gen_pgft;
+
+/// Serializes tests that override the global worker count.
+fn lock() -> MutexGuard<'static, ()> {
+    static M: OnceLock<Mutex<()>> = OnceLock::new();
+    M.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+}
+
+fn engine(reduction: DividerReduction) -> Box<DmodcEngine> {
+    Box::new(DmodcEngine::new(Options {
+        reduction,
+        nid_order: NidOrder::Topological,
+    }))
+}
+
+/// A coalescing scenario: a topology shape, a seed driving a random
+/// fault/recovery schedule, and a seed driving the batch partition.
+#[derive(Clone, Debug)]
+struct Scenario {
+    params: PgftParams,
+    seed: u64,
+    split_seed: u64,
+    n_events: usize,
+}
+
+fn gen_scenario(rng: &mut Rng, size: f64) -> Scenario {
+    Scenario {
+        params: gen_pgft(rng, size),
+        seed: rng.next_u64(),
+        split_seed: rng.next_u64(),
+        n_events: 2 + rng.gen_range(10),
+    }
+}
+
+fn shrink_scenario(s: &Scenario) -> Vec<Scenario> {
+    let mut out = Vec::new();
+    if s.n_events > 1 {
+        out.push(Scenario {
+            n_events: s.n_events - 1,
+            ..s.clone()
+        });
+    }
+    out
+}
+
+/// Apply the schedule event-by-event on one manager and in random
+/// batches on another; the final tables, event counts and the published
+/// epoch must all agree, with exactly one reroute per batch.
+fn run_scenario(s: &Scenario, reduction: DividerReduction) -> Result<(), String> {
+    let base = s.params.build();
+    let mut rng = Rng::new(s.seed);
+    let schedule = random_schedule(&base, &mut rng, s.n_events, 1, 5);
+    let cfg = ManagerConfig::default();
+    let mut seq = FabricManager::with_engine(base.clone(), cfg.clone(), engine(reduction));
+    for e in &schedule {
+        seq.apply(e);
+    }
+    let mut bat = FabricManager::with_engine(base, cfg, engine(reduction));
+    let mut split = Rng::new(s.split_seed);
+    let mut i = 0usize;
+    let mut batches = 0u64;
+    while i < schedule.len() {
+        let k = (1 + split.gen_range(5)).min(schedule.len() - i);
+        bat.apply_batch(&schedule[i..i + k]);
+        i += k;
+        batches += 1;
+    }
+    if bat.current().1.raw() != seq.current().1.raw() {
+        let diff = bat
+            .current()
+            .1
+            .raw()
+            .iter()
+            .zip(seq.current().1.raw())
+            .filter(|(a, b)| a != b)
+            .count();
+        return Err(format!(
+            "{reduction:?}: batched application diverged from sequential \
+             in {diff} entries over {} events / {batches} batches",
+            schedule.len()
+        ));
+    }
+    if bat.metrics.events != seq.metrics.events {
+        return Err(format!(
+            "{reduction:?}: event accounting drift (batched {} vs sequential {})",
+            bat.metrics.events, seq.metrics.events
+        ));
+    }
+    // One reroute per batch, plus the constructor's initial build.
+    if bat.metrics.reroutes != batches + 1 {
+        return Err(format!(
+            "{reduction:?}: {batches} batches must cost exactly {} reroutes, got {}",
+            batches + 1,
+            bat.metrics.reroutes
+        ));
+    }
+    // The published epoch is exactly the final committed tables.
+    let ep = bat.reader().tables();
+    ep.verify()
+        .map_err(|e| format!("{reduction:?}: published epoch failed verification: {e}"))?;
+    let (topo, lft) = bat.current();
+    let n = lft.num_nodes();
+    if ep.num_switches() != topo.switches.len() {
+        return Err(format!(
+            "{reduction:?}: epoch has {} switches, topology {}",
+            ep.num_switches(),
+            topo.switches.len()
+        ));
+    }
+    for (sidx, sw) in topo.switches.iter().enumerate() {
+        if ep.uuid(sidx) != sw.uuid || ep.row(sidx) != &lft.raw()[sidx * n..(sidx + 1) * n] {
+            return Err(format!(
+                "{reduction:?}: published epoch row {sidx} differs from committed tables"
+            ));
+        }
+    }
+    Ok(())
+}
+
+fn fuzz_at(threads: usize) {
+    let _g = lock();
+    par::set_threads(Some(threads));
+    for reduction in [DividerReduction::Max, DividerReduction::FirstPath] {
+        check(
+            &format!("coalesce-bit-identical-{reduction:?}-t{threads}"),
+            Config::default(),
+            gen_scenario,
+            shrink_scenario,
+            |s| match run_scenario(s, reduction) {
+                Ok(()) => Check::Pass,
+                Err(msg) => Check::Fail(msg),
+            },
+        );
+    }
+    par::set_threads(None);
+}
+
+#[test]
+fn coalesce_fuzz_bit_identical_single_thread() {
+    fuzz_at(1);
+}
+
+#[test]
+fn coalesce_fuzz_bit_identical_eight_threads() {
+    fuzz_at(8);
+}
+
+#[test]
+fn flap_within_one_batch_dirties_nothing() {
+    // A cable dies and recovers inside one coalescing window: the net
+    // state change is empty, so the delta tier's state-vs-state diff
+    // must find nothing dirty and the upload must be empty.
+    let t = PgftParams::small().build();
+    let cable = cable_ids(&t)[0].0;
+    let mut mgr = FabricManager::new(t, ManagerConfig::default());
+    let before = mgr.current().1.raw().to_vec();
+    let epoch_before = mgr.reader().epoch();
+    let r = mgr.apply_batch(&[
+        Event {
+            at_ms: 1,
+            kind: EventKind::LinkDown(cable),
+        },
+        Event {
+            at_ms: 2,
+            kind: EventKind::LinkUp(cable),
+        },
+    ]);
+    assert!(r.valid);
+    assert_eq!(r.tier, ReactionTier::Delta, "all-cable batch stays delta-eligible");
+    let st = r.delta.expect("delta stats");
+    assert_eq!(st.rows_full + st.rows_partial, 0, "cancelled flap must dirty nothing");
+    assert_eq!(r.upload.entries_changed, 0);
+    assert_eq!(mgr.current().1.raw(), &before[..]);
+    // Still a reaction: the epoch advances even when nothing changed
+    // (readers can tell "the manager looked" from "nothing happened").
+    assert_eq!(r.epoch, epoch_before + 1);
+}
+
+#[test]
+fn service_storm_with_concurrent_readers_is_torn_free_and_exact() {
+    let t = PgftParams::small().build();
+    let mut rng = Rng::new(77);
+    let schedule = random_schedule(&t, &mut rng, 40, 1, 9);
+    let svc = FabricService::spawn(
+        t.clone(),
+        ServiceConfig {
+            window_ms: 200,
+            ..Default::default()
+        },
+    )
+    .expect("spawn service");
+    let final_reader = svc.reader();
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut readers = Vec::new();
+    for r in 0..4 {
+        let reader = svc.reader();
+        let stop = Arc::clone(&stop);
+        readers.push(
+            spawn_named(&format!("svc-reader-{r}"), move || {
+                let mut last = 0u64;
+                let mut reads = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    let ep = reader.tables();
+                    ep.verify().expect("reader observed a torn epoch");
+                    assert!(
+                        ep.epoch() >= last,
+                        "epoch went backwards: {} < {last}",
+                        ep.epoch()
+                    );
+                    last = ep.epoch();
+                    reads += 1;
+                    std::thread::yield_now();
+                }
+                reads
+            })
+            .expect("spawn reader"),
+        );
+    }
+    let sender = svc.sender();
+    for e in &schedule {
+        sender.send(e.clone()).unwrap();
+    }
+    drop(sender);
+    let (mgr, stats) = svc.shutdown();
+    stop.store(true, Ordering::Relaxed);
+    let mut total_reads = 0u64;
+    for h in readers {
+        total_reads += h.join().expect("reader panicked");
+    }
+    assert!(total_reads > 0, "readers must actually have raced the reroutes");
+    assert_eq!(stats.events, 40, "every event consumed");
+    assert_eq!(mgr.metrics.events, 40);
+    assert_eq!(stats.reaction.count(), 40, "one reaction sample per event");
+    assert!(stats.batches >= 1);
+    // The whole schedule is blasted in while the first 200ms window is
+    // open: at least one batch must have coalesced several events.
+    assert!(
+        stats.batches < stats.events,
+        "a 40-event blast within 200ms windows must coalesce ({} batches)",
+        stats.batches
+    );
+    assert!(stats.coalesce_ratio() > 1.0);
+    // Final state equals a sequential manager's, and the published
+    // epoch equals the final tables.
+    let mut want = FabricManager::new(t, ManagerConfig::default());
+    for e in &schedule {
+        want.apply(e);
+    }
+    assert_eq!(mgr.current().1.raw(), want.current().1.raw());
+    let ep = final_reader.tables();
+    ep.verify().expect("final epoch checksums clean");
+    let (topo, lft) = mgr.current();
+    let n = lft.num_nodes();
+    assert_eq!(ep.num_switches(), topo.switches.len());
+    for s in 0..topo.switches.len() {
+        assert_eq!(ep.row(s), &lft.raw()[s * n..(s + 1) * n]);
+    }
+}
+
+#[test]
+fn stale_cable_lookup_refused_under_both_reductions() {
+    // Regression (both divider reductions): the sequence patch(X) →
+    // recovery of a different cable → patch(X) again. The recovery
+    // rematerializes without X, compacting the surviving parallel
+    // sibling's enumeration ordinal down to X's; a positional cable map
+    // would alias the dead cable's lookup onto the healthy sibling.
+    for reduction in [DividerReduction::Max, DividerReduction::FirstPath] {
+        let t = PgftParams::small().build();
+        let ids = cable_ids(&t);
+        let c0 = ids[0].0;
+        assert_eq!(c0.ordinal, 0);
+        let c1 = CableId { ordinal: 1, ..c0 };
+        assert!(
+            ids.iter().any(|(c, _)| *c == c1),
+            "small() must have a parallel pair"
+        );
+        let y = ids
+            .iter()
+            .map(|(c, _)| *c)
+            .find(|c| (c.a, c.b) != (c0.a, c0.b))
+            .expect("an unrelated cable");
+        let cfg = ManagerConfig::default();
+        let mut mgr = FabricManager::with_engine(t.clone(), cfg.clone(), engine(reduction));
+        mgr.apply(&Event {
+            at_ms: 1,
+            kind: EventKind::LinkDown(y),
+        });
+        assert!(
+            mgr.fast_patch(&c0).is_some(),
+            "{reduction:?}: c0 is alive here, the patch must work"
+        );
+        mgr.apply(&Event {
+            at_ms: 2,
+            kind: EventKind::LinkUp(y),
+        });
+        assert!(
+            mgr.fast_patch(&c0).is_none(),
+            "{reduction:?}: c0 died before this materialization — the \
+             lookup must miss, not alias the surviving sibling"
+        );
+        assert!(
+            mgr.fast_patch(&c1).is_some(),
+            "{reduction:?}: the surviving sibling keeps its reference id"
+        );
+        assert_eq!(mgr.metrics.fast_patches, 2);
+        // Rebalance and compare against a manager that saw both pair
+        // cables die as plain events: identical dead sets, identical
+        // tables.
+        mgr.reroute_now();
+        let mut want = FabricManager::with_engine(t, cfg, engine(reduction));
+        want.apply(&Event {
+            at_ms: 1,
+            kind: EventKind::LinkDown(c0),
+        });
+        want.apply(&Event {
+            at_ms: 2,
+            kind: EventKind::LinkDown(c1),
+        });
+        assert_eq!(
+            mgr.current().1.raw(),
+            want.current().1.raw(),
+            "{reduction:?}: post-patch rebalance drifted"
+        );
+    }
+}
