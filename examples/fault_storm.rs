@@ -14,11 +14,23 @@
 //! sustained events/s, coalesce ratio, and the p50/p99 of the true
 //! event→publication reaction latency (queue wait + window + reroute),
 //! one sample per event. With `BENCH_SERVICE_OUT=path` the same numbers
-//! are written as JSON (schema `bench_service/v1`) for the CI soak.
+//! are written as JSON (schema `bench_service/v2`) for the CI soak.
+//!
+//! `--chaos <seed>` arms the deterministic fault-injection plan
+//! ([`ChaosPlan::storm`]) inside the manager: injected reroute panics,
+//! corrupted candidates, and stalls (EXPERIMENTS.md §"Chaos soak"). The
+//! service must contain/quarantine every one — readers still never see
+//! a torn or invalid epoch, and quarantined batches are reported, not
+//! silently dropped. Requires a build with the chaos points compiled in
+//! (debug, or `--features chaos` in release).
 //!
 //!     cargo run --release --example fault_storm -- [--full | --preset huge]
+//!     cargo run --release --features chaos --example fault_storm -- --chaos 1
 
-use dmodc::fabric::{events, FabricManager, FabricService, ManagerConfig, ServiceConfig};
+use dmodc::fabric::{
+    events, FabricError, FabricManager, FabricService, ManagerConfig, QueuePolicy, ServiceConfig,
+};
+use dmodc::util::chaos::{self, ChaosPlan};
 use dmodc::prelude::*;
 use dmodc::util::cli::Args;
 use dmodc::util::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -46,6 +58,10 @@ fn main() {
         .flag("seed", "7", "seed")
         .flag("islet-every", "8", "islet reboot cadence")
         .flag("algo", "dmodc", "routing engine backing the manager")
+        .flag("queue-cap", "0", "event-queue capacity (0 = unbounded)")
+        .flag("policy", "block", "full-queue policy (block|coalesce|reject)")
+        .flag("watchdog-ms", "0", "reroute watchdog deadline (0 = off)")
+        .flag("chaos", "0", "chaos-plan seed (0 = off; needs chaos-enabled build)")
         .parse();
     let preset = p.get("preset");
     let (name, params) = if !preset.is_empty() {
@@ -73,17 +89,37 @@ fn main() {
         events::random_schedule(&topo, &mut rng, n_events, 50, p.get_usize("islet-every"));
 
     let algo: Algo = p.get_parsed("algo");
+    let chaos_seed = p.get_u64("chaos");
+    if chaos_seed != 0 && !chaos::ENABLED {
+        eprintln!(
+            "warning: --chaos {chaos_seed} ignored — this build compiled the chaos \
+             points out (rebuild with --features chaos)"
+        );
+    }
+    let policy: QueuePolicy = p.get_parsed("policy");
     let cfg = ServiceConfig {
         manager: ManagerConfig {
             algo,
+            // The storm always runs crash-safe: validate before publish,
+            // quarantine with rollback on failure.
+            gate: true,
+            watchdog_ms: p.get_u64("watchdog-ms"),
+            chaos: (chaos_seed != 0).then(|| ChaosPlan::storm(chaos_seed)),
             ..Default::default()
         },
         window_ms: p.get_u64("window-ms"),
         max_batch: p.get_usize("max-batch"),
+        queue_cap: p.get_usize("queue-cap"),
+        policy,
     };
     println!(
-        "engine: {algo}  window: {}ms  max_batch: {}  rate: {rate}/s  readers: {n_readers}",
-        cfg.window_ms, cfg.max_batch
+        "engine: {algo}  window: {}ms  max_batch: {}  rate: {rate}/s  readers: {n_readers}  \
+         queue_cap: {}  policy: {}  watchdog: {}ms  chaos: {chaos_seed}",
+        cfg.window_ms,
+        cfg.max_batch,
+        cfg.queue_cap,
+        policy.name(),
+        cfg.manager.watchdog_ms
     );
     let nodes = topo.nodes.len();
     let switches = topo.switches.len();
@@ -136,6 +172,7 @@ fn main() {
     };
     let t0 = time::now();
     let mut next_send = t0;
+    let mut shed = 0usize;
     for e in &schedule {
         if !gap.is_zero() {
             let now = time::now();
@@ -145,22 +182,36 @@ fn main() {
             }
             next_send += gap;
         }
-        sender.send(e.clone()).expect("service hung up early");
+        // A RejectNewest queue sheds under pressure: that's the policy
+        // doing its job — the producer learns exactly which event was
+        // dropped and accounts for it.
+        if let Err(err) = sender.send(e.clone()) {
+            match err {
+                FabricError::QueueFull { .. } => shed += 1,
+                other => panic!("service hung up early: {other}"),
+            }
+        }
     }
     drop(sender);
 
-    // Every sent event ends up in exactly one report; collect until the
-    // counts balance, then shut the loop down.
+    // Every non-shed event ends up in exactly one report (applied or
+    // quarantined — never silently dropped); collect until the counts
+    // balance, then shut the loop down.
     let mut tab = Table::new(&[
-        "batch", "events", "tier", "reaction", "valid", "entriesΔ", "alive",
+        "batch", "events", "tier", "reaction", "valid", "entriesΔ", "alive", "outcome",
     ]);
     let mut seen = 0usize;
     let mut invalid = 0usize;
+    let mut quarantined = 0usize;
     let mut elided = 0usize;
-    while seen < schedule.len() {
+    while seen + shed < schedule.len() {
         let br = svc.reports().recv().expect("service died mid-storm");
         seen += br.events;
-        if !br.report.valid {
+        // Quarantined batches carry a synthesized post-rollback report;
+        // only an *applied* invalid reaction is a harness failure.
+        if br.quarantined.is_some() {
+            quarantined += 1;
+        } else if !br.report.valid {
             invalid += 1;
         }
         if br.batch_idx < TABLE_ROWS {
@@ -172,6 +223,9 @@ fn main() {
                 br.report.valid.to_string(),
                 br.report.upload.entries_changed.to_string(),
                 br.report.switches_alive.to_string(),
+                br.quarantined
+                    .as_ref()
+                    .map_or_else(|| "applied".into(), |q| format!("quarantined:{}", q.tag())),
             ]);
         } else {
             elided += 1;
@@ -215,6 +269,19 @@ fn main() {
     println!(
         "readers: {n_readers} threads, {reader_reads} lookups ({reads_per_s:.0}/s), torn epochs: {torn}"
     );
+    println!(
+        "ladder: quarantined={quarantined} shed={shed} folded={} high_water={} \
+         panics_contained={} watchdog={} rejected={} rollbacks={}",
+        stats.events_folded,
+        stats.queue_high_water,
+        mgr.metrics.panics_contained,
+        mgr.metrics.watchdog_escalations,
+        mgr.metrics.epochs_rejected,
+        mgr.metrics.rollbacks
+    );
+    if stats.recovery.count() > 0 {
+        print!("{}", stats.recovery.render("recovery latency"));
+    }
     let p50 = stats.reaction.quantile(0.5);
     let p99 = stats.reaction.quantile(0.99);
     let bar = if stats.reaction.max() < 1000.0 {
@@ -237,10 +304,15 @@ fn main() {
             .unwrap_or_else(|| {
                 std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
             });
+        let shed_rate = if schedule.is_empty() {
+            0.0
+        } else {
+            shed as f64 / schedule.len() as f64
+        };
         let json = format!(
             concat!(
                 "{{\n",
-                "  \"schema\": \"bench_service/v1\",\n",
+                "  \"schema\": \"bench_service/v2\",\n",
                 "  \"status\": \"ok\",\n",
                 "  \"preset\": \"{name}\",\n",
                 "  \"topology\": \"PGFT({spec})\",\n",
@@ -250,6 +322,9 @@ fn main() {
                 "  \"window_ms\": {window},\n",
                 "  \"max_batch\": {max_batch},\n",
                 "  \"rate_target\": {rate:.1},\n",
+                "  \"queue_cap\": {queue_cap},\n",
+                "  \"policy\": \"{policy}\",\n",
+                "  \"chaos_seed\": {chaos_seed},\n",
                 "  \"events\": {events},\n",
                 "  \"batches\": {batches},\n",
                 "  \"events_per_s\": {eps:.2},\n",
@@ -259,6 +334,18 @@ fn main() {
                 "  \"reaction_p99_ms\": {p99:.4},\n",
                 "  \"reaction_max_ms\": {pmax:.4},\n",
                 "  \"reaction_mean_ms\": {pmean:.4},\n",
+                "  \"recovery_p50_ms\": {r50:.4},\n",
+                "  \"recovery_p99_ms\": {r99:.4},\n",
+                "  \"recovery_events\": {rn},\n",
+                "  \"quarantined_batches\": {quarantined},\n",
+                "  \"epochs_rejected\": {rejected},\n",
+                "  \"rollbacks\": {rollbacks},\n",
+                "  \"panics_contained\": {panics},\n",
+                "  \"watchdog_escalations\": {watchdog},\n",
+                "  \"events_shed\": {shed},\n",
+                "  \"shed_rate\": {shed_rate:.4},\n",
+                "  \"events_folded\": {folded},\n",
+                "  \"queue_high_water\": {high_water},\n",
                 "  \"delta_reroutes\": {dr},\n",
                 "  \"delta_fallbacks\": {df},\n",
                 "  \"delta_ineligible\": {di},\n",
@@ -277,6 +364,9 @@ fn main() {
             window = cfg.window_ms,
             max_batch = cfg.max_batch,
             rate = rate,
+            queue_cap = cfg.queue_cap,
+            policy = policy.name(),
+            chaos_seed = chaos_seed,
             events = stats.events,
             batches = stats.batches,
             eps = events_per_s,
@@ -286,6 +376,18 @@ fn main() {
             p99 = p99,
             pmax = stats.reaction.max(),
             pmean = stats.reaction.mean(),
+            r50 = stats.recovery.quantile(0.5),
+            r99 = stats.recovery.quantile(0.99),
+            rn = stats.recovery.count(),
+            quarantined = quarantined,
+            rejected = mgr.metrics.epochs_rejected,
+            rollbacks = mgr.metrics.rollbacks,
+            panics = mgr.metrics.panics_contained,
+            watchdog = mgr.metrics.watchdog_escalations,
+            shed = shed,
+            shed_rate = shed_rate,
+            folded = stats.events_folded,
+            high_water = stats.queue_high_water,
             dr = mgr.metrics.delta_reroutes,
             df = mgr.metrics.delta_fallbacks,
             di = mgr.metrics.delta_ineligible,

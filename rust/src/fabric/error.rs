@@ -1,0 +1,36 @@
+//! Typed errors for externally-triggerable fabric-service failures.
+//!
+//! The split follows the PR-9 unwrap audit: conditions a *caller* can
+//! provoke (queue full under `QueuePolicy::RejectNewest`, sending after
+//! shutdown) are typed errors; conditions only a bug can produce stay as
+//! panics whose message names the violated invariant.
+
+use std::fmt;
+
+/// An error surfaced to fabric-service callers (producers).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FabricError {
+    /// The bounded event queue is full and the configured policy is
+    /// [`QueuePolicy::RejectNewest`](crate::fabric::QueuePolicy) — the
+    /// event was shed, never enqueued.
+    QueueFull {
+        /// Configured queue capacity at the time of rejection.
+        capacity: usize,
+    },
+    /// The service loop has exited (shutdown or crash); no further
+    /// events can be delivered.
+    ServiceStopped,
+}
+
+impl fmt::Display for FabricError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FabricError::QueueFull { capacity } => {
+                write!(f, "event queue full (capacity {capacity}); event shed by RejectNewest policy")
+            }
+            FabricError::ServiceStopped => write!(f, "fabric service has stopped"),
+        }
+    }
+}
+
+impl std::error::Error for FabricError {}

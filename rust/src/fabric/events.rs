@@ -32,6 +32,32 @@ pub enum EventKind {
     IsletUp(Vec<u64>),
 }
 
+/// The piece of equipment a (non-islet) event is about — the coalescing
+/// key of `QueuePolicy::CoalesceOldest`: for one switch or cable, only
+/// the *latest* state transition matters to the final dead sets, so an
+/// overloaded queue may fold an older event into a newer one for the
+/// same key without changing where any reroute converges.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum EquipmentKey {
+    Switch(u64),
+    Cable(CableId),
+}
+
+impl EventKind {
+    /// The equipment this event targets, or `None` for islet events.
+    /// Islets fan out over many switches at once, so the queue never
+    /// merges them; they act as fold *barriers* — a per-equipment event
+    /// must not be merged across an islet entry, or replay order (and
+    /// therefore the final dead sets) could invert.
+    pub fn equipment(&self) -> Option<EquipmentKey> {
+        match self {
+            EventKind::SwitchDown(u) | EventKind::SwitchUp(u) => Some(EquipmentKey::Switch(*u)),
+            EventKind::LinkDown(c) | EventKind::LinkUp(c) => Some(EquipmentKey::Cable(*c)),
+            EventKind::IsletDown(_) | EventKind::IsletUp(_) => None,
+        }
+    }
+}
+
 /// A timestamped event.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Event {

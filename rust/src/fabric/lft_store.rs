@@ -362,6 +362,30 @@ impl LftStore {
         st
     }
 
+    /// Rewind `out` to the last-**committed** tables for every switch
+    /// alive in `topo` — the rollback half of the validate-before-publish
+    /// gate. Because the manager only commits epochs that passed the
+    /// gate, the store always holds the last-good state, and this
+    /// reconstructs it without recomputation. Returns `false` (leaving
+    /// `out` partially filled — the caller must reroute from scratch) if
+    /// any alive switch has no stored table of the right width, which
+    /// can happen when a quarantined batch brought a never-before-seen
+    /// switch back up.
+    #[must_use]
+    pub fn restore_into(&self, topo: &Topology, out: &mut Lft) -> bool {
+        let n = topo.nodes.len();
+        out.reset(topo.switches.len(), n);
+        for (s, sw) in topo.switches.iter().enumerate() {
+            match self.tables.get(&sw.uuid) {
+                Some(stored) if stored.ports.len() == n => {
+                    out.row_mut(s as u32).copy_from_slice(&stored.ports);
+                }
+                _ => return false,
+            }
+        }
+        true
+    }
+
     /// Change version of a switch's stored table (bumped on every
     /// content change), or `None` if the switch was never committed.
     pub fn version(&self, uuid: u64) -> Option<u64> {
@@ -531,6 +555,22 @@ mod tests {
         // exactly what a torn publication would look like.
         Arc::make_mut(&mut ep.rows[0])[0] ^= 1;
         assert!(ep.verify().is_err(), "corrupted row must fail verification");
+    }
+
+    #[test]
+    fn restore_into_rewinds_to_last_commit() {
+        let t = PgftParams::fig1().build();
+        let lft = route_unchecked(Algo::Dmodc, &t);
+        let mut store = LftStore::new();
+        store.commit(&t, &lft);
+        // A candidate the gate would reject never got committed; restore
+        // must reproduce the committed bytes exactly.
+        let mut out = Lft::new(1, 1);
+        assert!(store.restore_into(&t, &mut out));
+        assert_eq!(out.raw(), lft.raw());
+        // A switch the store has never seen makes the restore fail.
+        let empty = LftStore::new();
+        assert!(!empty.restore_into(&t, &mut out));
     }
 
     #[test]

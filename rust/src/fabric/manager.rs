@@ -44,12 +44,15 @@ use crate::analysis::paths::TensorUpdate;
 use crate::analysis::patterns::Pattern;
 use crate::analysis::RiskEvaluator;
 use crate::routing::{
-    registry, Algo, DeltaOutcome, DeltaStats, Lft, RerouteTimings, RoutingEngine,
+    registry, validity, Algo, DeltaOutcome, DeltaStats, Lft, RerouteTimings, RoutingEngine,
+    NO_ROUTE,
 };
 use crate::topology::degrade::{self, DegradeScratch};
 use crate::topology::{PortTarget, SwitchId, Topology};
+use crate::util::chaos::{ChaosPlan, ChaosPoint, ChaosState};
 use crate::util::{alloc_guard, time};
 use std::collections::{HashMap, HashSet};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{Receiver, Sender};
 
 /// Post-event congestion-risk probe configuration: which patterns to
@@ -91,6 +94,28 @@ pub struct ManagerConfig {
     /// rows come from the row versions [`LftStore`] already tracks, so a
     /// delta-tier cable event retraces only the paths it touched.
     pub probe: Option<ProbeConfig>,
+    /// Validate-before-publish gate (used by
+    /// [`FabricManager::try_apply_batch`] and the service loop): a
+    /// candidate table set that fails validation — or carries a
+    /// channel-dependency cycle — is **never committed or published**;
+    /// the manager rolls back to the last-good state and quarantines the
+    /// batch. Off by default: the ungated [`FabricManager::apply_batch`]
+    /// path keeps its historical semantics (publish everything, report
+    /// `valid`), which the equivalence/differential suites rely on.
+    pub gate: bool,
+    /// With the gate on, also run the Dally–Seitz channel-dependency
+    /// cycle search on fabrics whose port count is at most this bound
+    /// (the CDG search is quadratic-ish — cheap on test fabrics, not on
+    /// paper-scale ones). 0 disables the CDG stage.
+    pub gate_cdg_max_ports: usize,
+    /// Reroute watchdog deadline in milliseconds (0 = off). A gated
+    /// batch whose *delta* computation overruns is escalated to a forced
+    /// full reroute; a full computation that overruns quarantines the
+    /// batch (delta → full → quarantine).
+    pub watchdog_ms: u64,
+    /// Seeded fault-injection plan (tests / CI soak only; the points are
+    /// compiled out of default release builds — see [`crate::util::chaos`]).
+    pub chaos: Option<ChaosPlan>,
 }
 
 impl Default for ManagerConfig {
@@ -100,6 +125,10 @@ impl Default for ManagerConfig {
             validate: true,
             delta: true,
             probe: None,
+            gate: false,
+            gate_cdg_max_ports: 20_000,
+            watchdog_ms: 0,
+            chaos: None,
         }
     }
 }
@@ -142,6 +171,57 @@ pub struct ManagerReport {
     /// Publication epoch of the tables this reaction committed — what a
     /// [`FabricReader`] observes once it sees this (or a later) epoch.
     pub epoch: u64,
+}
+
+/// Why [`FabricManager::try_apply_batch`] refused to publish a batch.
+#[derive(Clone, Debug)]
+pub enum QuarantineReason {
+    /// The candidate tables failed the paper's validity pass
+    /// ([`validity::check_with`] through the engine); the message is the
+    /// checker's witness.
+    InvalidRouting(String),
+    /// The candidate tables passed validity but carry a
+    /// channel-dependency cycle ([`validity::deadlock_witness`]).
+    DeadlockCycle(String),
+    /// The reroute panicked twice (the contained retry panicked too);
+    /// the message is the second panic's payload.
+    ReroutePanic(String),
+    /// The reroute overran the watchdog deadline even on the full tier.
+    Watchdog {
+        /// Configured deadline ([`ManagerConfig::watchdog_ms`]).
+        deadline_ms: u64,
+        /// What the final (full-tier) computation actually took.
+        took_ms: u64,
+    },
+}
+
+impl QuarantineReason {
+    /// Stable snake_case tag for status lines and JSON.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            QuarantineReason::InvalidRouting(_) => "invalid_routing",
+            QuarantineReason::DeadlockCycle(_) => "deadlock_cycle",
+            QuarantineReason::ReroutePanic(_) => "reroute_panic",
+            QuarantineReason::Watchdog { .. } => "watchdog",
+        }
+    }
+}
+
+/// Outcome of a rejected batch: the events were **not** applied — the
+/// dead sets, tables, and published epoch all match the state before the
+/// batch — and the offending events ride along for operator audit (or
+/// selective replay).
+#[derive(Clone, Debug)]
+pub struct QuarantineReport {
+    pub reason: QuarantineReason,
+    /// The quarantined events, in arrival order.
+    pub events: Vec<Event>,
+    /// Wall-clock cost of the rollback (state restore, no reroute).
+    pub rollback_secs: f64,
+    /// Post-rollback state snapshot: `epoch` is the *unchanged* last-good
+    /// epoch readers still observe, `valid` is true (the restored tables
+    /// passed their own gate when first published), upload is empty.
+    pub report: ManagerReport,
 }
 
 /// One risk-probe evaluation (see [`ProbeConfig`]).
@@ -225,6 +305,25 @@ pub struct FabricManager {
     /// snapshot), present iff `cfg.probe` is set.
     probe: Option<RiskProbe>,
     events_seen: usize,
+    /// Live fault-injection state, present iff `cfg.chaos` is set (and
+    /// inert unless chaos is compiled in — [`crate::util::chaos::ENABLED`]).
+    chaos: Option<ChaosState>,
+    /// Dead-set snapshots taken at the top of every gated batch — the
+    /// rollback target. Reused buffers (`clone_from`), no steady-state
+    /// allocation once capacities converge.
+    rollback_switches: HashSet<SwitchId>,
+    rollback_cables: HashSet<(SwitchId, u16)>,
+}
+
+/// Result of the compute half of a reaction (degrade → route →
+/// validate), before anything is committed or published.
+struct Reaction {
+    reroute_secs: f64,
+    tier: ReactionTier,
+    delta: Option<DeltaStats>,
+    valid: bool,
+    /// The validity checker's witness when `valid` is false.
+    invalid: Option<String>,
 }
 
 impl FabricManager {
@@ -255,6 +354,7 @@ impl FabricManager {
             cable_ids(&reference).into_iter().collect();
         let port_to_cable = cable_to_port.iter().map(|(&c, &p)| (p, c)).collect();
         let probe = cfg.probe.clone().map(RiskProbe::new);
+        let chaos = cfg.chaos.clone().map(ChaosState::new);
         let mut mgr = Self {
             reference,
             cfg,
@@ -276,9 +376,24 @@ impl FabricManager {
             touched_rows: Vec::new(),
             probe,
             events_seen: 0,
+            chaos,
+            rollback_switches: HashSet::new(),
+            rollback_cables: HashSet::new(),
         };
         mgr.reroute(false);
         mgr
+    }
+
+    /// The manager's configuration (the service loop consults
+    /// [`ManagerConfig::gate`] to pick the gated entry point).
+    pub fn config(&self) -> &ManagerConfig {
+        &self.cfg
+    }
+
+    /// Install (or clear) a fault-injection plan at runtime. Inert in
+    /// builds where chaos is compiled out.
+    pub fn set_chaos(&mut self, plan: Option<ChaosPlan>) {
+        self.chaos = plan.map(ChaosState::new);
     }
 
     /// Current degraded topology + tables.
@@ -399,6 +514,17 @@ impl FabricManager {
     /// the engine may still fall back to a full row fill, which the
     /// report's [`ManagerReport::tier`] records.
     fn reroute(&mut self, try_delta: bool) -> ManagerReport {
+        let reaction = self.compute(try_delta);
+        self.commit_and_publish(reaction)
+    }
+
+    /// The compute half of a reaction: degrade → route → validate into
+    /// `current_topo`/`current_lft`, **without** committing or
+    /// publishing anything. The validate-before-publish gate
+    /// ([`FabricManager::try_apply_batch`]) inspects the [`Reaction`]
+    /// before deciding whether [`FabricManager::commit_and_publish`]
+    /// runs at all.
+    fn compute(&mut self, try_delta: bool) -> Reaction {
         // Guard region ends before the commit: the upload path may
         // legitimately allocate (block diffs), as may `run_probe`. The
         // zero-alloc contract covers degrade → route → validate.
@@ -442,15 +568,37 @@ impl FabricManager {
             Metrics::inc(&mut self.metrics.delta_ineligible);
         }
 
-        let valid = !self.cfg.validate
-            || self
-                .engine
-                .validate(&self.current_topo, &self.current_lft)
-                .is_ok();
+        let vres = if self.cfg.validate {
+            self.engine.validate(&self.current_topo, &self.current_lft)
+        } else {
+            Ok(())
+        };
+        let valid = vres.is_ok();
         if !valid {
             Metrics::inc(&mut self.metrics.invalid_states);
         }
         drop(event_guard);
+        Reaction {
+            reroute_secs,
+            tier,
+            delta,
+            valid,
+            invalid: vres.err(),
+        }
+    }
+
+    /// The commit half of a reaction: upload-diff the computed tables
+    /// into the store, publish the new epoch, account metrics, and build
+    /// the report. Once this runs, readers can observe the epoch — the
+    /// gate must make its accept/reject decision **before** this.
+    fn commit_and_publish(&mut self, reaction: Reaction) -> ManagerReport {
+        let Reaction {
+            reroute_secs,
+            tier,
+            delta,
+            valid,
+            invalid: _,
+        } = reaction;
         let tc = time::now();
         let upload = match tier {
             ReactionTier::Delta => {
@@ -581,6 +729,228 @@ impl FabricManager {
         report
     }
 
+    /// Gated batch application — the crash-safe service entry point
+    /// (DESIGN.md §"Failure domains & recovery ladder").
+    ///
+    /// Like [`FabricManager::apply_batch`], but the candidate tables
+    /// must pass the **validate-before-publish gate** before anything is
+    /// committed or published:
+    /// 1. the reroute runs under `catch_unwind` — a panic re-initializes
+    ///    the engine workspace and retries once on the full tier;
+    /// 2. a watchdog deadline ([`ManagerConfig::watchdog_ms`]) escalates
+    ///    an overrunning delta computation to a forced full reroute, and
+    ///    an overrunning full computation to quarantine;
+    /// 3. the candidate must pass the paper's validity check, plus the
+    ///    channel-dependency cycle search on small fabrics
+    ///    ([`ManagerConfig::gate_cdg_max_ports`]).
+    ///
+    /// On failure the batch is **quarantined**: the dead sets, current
+    /// tables, and published epoch are rolled back to the last-good
+    /// state (readers never saw the candidate), and the events come back
+    /// in the [`QuarantineReport`] instead of being applied. Because a
+    /// reroute is a pure function of (reference topology, dead sets),
+    /// the post-rollback manager is byte-identical to one that never saw
+    /// the quarantined events (`tests/service_chaos.rs`).
+    pub fn try_apply_batch(
+        &mut self,
+        events: &[Event],
+    ) -> Result<ManagerReport, Box<QuarantineReport>> {
+        // Snapshot the rollback target: dead sets and the equipment
+        // counters the marks below will move.
+        self.rollback_switches.clone_from(&self.dead_switches);
+        self.rollback_cables.clone_from(&self.dead_cables);
+        let equipment_down = self.metrics.equipment_down;
+        let equipment_up = self.metrics.equipment_up;
+        let all_cables = !events.is_empty()
+            && events
+                .iter()
+                .all(|e| matches!(e.kind, EventKind::LinkDown(_) | EventKind::LinkUp(_)));
+        let try_delta = self.cfg.delta
+            && all_cables
+            && self.patched_dead_ports.is_empty()
+            && self.engine.capabilities().incremental;
+        for e in events {
+            self.events_seen += 1;
+            Metrics::inc(&mut self.metrics.events);
+            self.mark(&e.kind);
+        }
+        let fail = |mgr: &mut Self, reason: QuarantineReason| {
+            let q = mgr.quarantine(reason, events);
+            mgr.metrics.equipment_down = equipment_down;
+            mgr.metrics.equipment_up = equipment_up;
+            Err(Box::new(q))
+        };
+
+        // Tier 1: panic containment (reinit + one full-tier retry).
+        let t_wd = time::now();
+        let mut reaction = match self.compute_contained(try_delta) {
+            Ok(r) => r,
+            Err(msg) => return fail(self, QuarantineReason::ReroutePanic(msg)),
+        };
+        // Tier 2: watchdog deadline — escalate delta → full → quarantine.
+        if self.cfg.watchdog_ms > 0 {
+            let mut took_ms = t_wd.elapsed().as_millis() as u64;
+            if took_ms > self.cfg.watchdog_ms && try_delta {
+                Metrics::inc(&mut self.metrics.watchdog_escalations);
+                let t_full = time::now();
+                reaction = match self.compute_contained(false) {
+                    Ok(r) => r,
+                    Err(msg) => return fail(self, QuarantineReason::ReroutePanic(msg)),
+                };
+                took_ms = t_full.elapsed().as_millis() as u64;
+            }
+            if took_ms > self.cfg.watchdog_ms {
+                Metrics::inc(&mut self.metrics.watchdog_escalations);
+                return fail(
+                    self,
+                    QuarantineReason::Watchdog {
+                        deadline_ms: self.cfg.watchdog_ms,
+                        took_ms,
+                    },
+                );
+            }
+        }
+        // Chaos: corrupt one candidate entry *after* the reroute — the
+        // gate below must catch it (a NO_ROUTE in a leaf row can never
+        // pass the validity trace).
+        if self.chaos.as_mut().is_some_and(|c| c.fire(ChaosPoint::ValidationCorrupt)) {
+            if let (Some(&leaf), false) = (
+                self.current_topo.leaf_switches().first(),
+                self.current_topo.nodes.is_empty(),
+            ) {
+                self.current_lft.set(leaf, 0, NO_ROUTE);
+                let v = self.engine.validate(&self.current_topo, &self.current_lft);
+                reaction.valid = v.is_ok();
+                reaction.invalid = v.err();
+            }
+        }
+        // Tier 3: the gate itself — validity, then the CDG witness.
+        if !reaction.valid {
+            Metrics::inc(&mut self.metrics.epochs_rejected);
+            let msg = reaction
+                .invalid
+                .take()
+                .unwrap_or_else(|| String::from("validity check failed (no witness)"));
+            return fail(self, QuarantineReason::InvalidRouting(msg));
+        }
+        if self.cfg.gate_cdg_max_ports > 0
+            && self.current_topo.num_ports() <= self.cfg.gate_cdg_max_ports
+        {
+            if let Some(w) = validity::deadlock_witness(&self.current_topo, &self.current_lft) {
+                Metrics::inc(&mut self.metrics.epochs_rejected);
+                return fail(self, QuarantineReason::DeadlockCycle(w));
+            }
+        }
+        let mut report = self.commit_and_publish(reaction);
+        report.events_coalesced = events.len();
+        Ok(report)
+    }
+
+    /// [`FabricManager::compute`] under `catch_unwind`: a panic anywhere
+    /// in degrade → route → validate is contained, the engine workspace
+    /// is re-initialized (a half-built delta history must never seed the
+    /// next diff), and the computation retries once on the full tier. A
+    /// second panic is returned as an error (→ quarantine).
+    ///
+    /// Chaos points fire *outside* the engine's alloc-guard regions: the
+    /// injected panic (whose payload allocates) is raised before
+    /// `compute` arms the region, and the injected stall is a plain
+    /// sleep before the stopwatch the watchdog reads.
+    fn compute_contained(&mut self, try_delta: bool) -> Result<Reaction, String> {
+        if self.chaos.as_mut().is_some_and(|c| c.fire(ChaosPoint::SlowReroute)) {
+            let ms = self.chaos.as_ref().map_or(0, |c| c.plan().slow_ms);
+            std::thread::sleep(std::time::Duration::from_millis(ms));
+        }
+        let inject_panic = self
+            .chaos
+            .as_mut()
+            .is_some_and(|c| c.fire(ChaosPoint::ReroutePanic));
+        let attempt = catch_unwind(AssertUnwindSafe(|| {
+            if inject_panic {
+                // Simulate a mid-pipeline crash: a partial scribble on
+                // the candidate tables, then die before the fill
+                // completes.
+                if self.current_lft.num_switches() > 0 && self.current_lft.num_nodes() > 0 {
+                    self.current_lft.set(0, 0, 0);
+                }
+                panic!("chaos: injected reroute panic");
+            }
+            self.compute(try_delta)
+        }));
+        match attempt {
+            Ok(r) => Ok(r),
+            Err(payload) => {
+                drop(payload);
+                Metrics::inc(&mut self.metrics.panics_contained);
+                self.engine.reinit();
+                if let Some(p) = &mut self.probe {
+                    // The tensor baseline may describe the poisoned
+                    // state; force a rebuild on the next probe.
+                    p.versions.clear();
+                }
+                catch_unwind(AssertUnwindSafe(|| self.compute(false))).map_err(panic_message)
+            }
+        }
+    }
+
+    /// Roll back to the last-good state after a gate failure: restore
+    /// the pre-batch dead sets, re-materialize the topology, rewind the
+    /// current tables to the last-**committed** bytes
+    /// ([`LftStore::restore_into`] — falling back to a fresh reroute if
+    /// the store cannot reproduce them), and drop all engine history.
+    /// Nothing is published: readers keep the epoch they already had.
+    fn quarantine(&mut self, reason: QuarantineReason, events: &[Event]) -> QuarantineReport {
+        Metrics::inc(&mut self.metrics.rollbacks);
+        let t0 = time::now();
+        self.dead_switches.clone_from(&self.rollback_switches);
+        self.dead_cables.clone_from(&self.rollback_cables);
+        degrade::apply_into(
+            &self.reference,
+            &self.dead_switches,
+            &self.dead_cables,
+            &mut self.current_topo,
+            &mut self.degrade_scratch,
+        );
+        self.cable_map_stale = true;
+        self.patched_dead_ports.clear();
+        if !self.store.restore_into(&self.current_topo, &mut self.current_lft) {
+            // The store has never committed one of these switches (the
+            // quarantined batch revived equipment unseen since before
+            // the first commit) — recompute the last-good tables; the
+            // dead sets are authoritative and the reroute is pure.
+            self.engine
+                .route_into(&self.current_topo, &mut self.current_lft);
+        }
+        // A delta diff must never run against the rejected candidate's
+        // products (or against tables the restore just rewound under
+        // the engine): drop all history.
+        self.engine.reinit();
+        if let Some(p) = &mut self.probe {
+            p.versions.clear();
+        }
+        let rollback_secs = t0.elapsed().as_secs_f64();
+        let report = ManagerReport {
+            event_idx: self.events_seen,
+            events_coalesced: events.len(),
+            reroute_secs: rollback_secs,
+            valid: true,
+            upload: UploadStats::default(),
+            switches_alive: self.current_topo.switches.len(),
+            cables_alive: self.current_topo.num_cables(),
+            tier: ReactionTier::Full,
+            delta: None,
+            timings: None,
+            risk: None,
+            epoch: self.store.epoch(),
+        };
+        QuarantineReport {
+            reason,
+            events: events.to_vec(),
+            rollback_secs,
+            report,
+        }
+    }
+
     /// Apply a whole scripted schedule, returning every report.
     pub fn process(&mut self, events: &[Event]) -> Vec<ManagerReport> {
         events.iter().map(|e| self.apply(e)).collect()
@@ -680,6 +1050,18 @@ impl FabricManager {
             upload,
             epoch,
         })
+    }
+}
+
+/// Best-effort extraction of a panic payload's message (for
+/// [`QuarantineReason::ReroutePanic`]).
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        String::from("non-string panic payload")
     }
 }
 
@@ -1128,5 +1510,220 @@ mod tests {
         assert_eq!(r.tier, ReactionTier::Full);
         assert_eq!(mgr.metrics.delta_reroutes, 0);
         assert_eq!(mgr.metrics.delta_fallbacks, 0);
+    }
+
+    // ---- the recovery ladder (gate / containment / watchdog) ----
+
+    #[test]
+    fn gated_batches_match_the_ungated_path_exactly() {
+        let t = PgftParams::small().build();
+        let victim = uuid_of_level(&t, 1);
+        let cable = cable_ids(&t)[0].0;
+        let schedule = [
+            Event { at_ms: 1, kind: EventKind::LinkDown(cable) },
+            Event { at_ms: 2, kind: EventKind::SwitchDown(victim) },
+            Event { at_ms: 3, kind: EventKind::SwitchUp(victim) },
+        ];
+        let mut gated = FabricManager::new(
+            t.clone(),
+            ManagerConfig {
+                gate: true,
+                ..Default::default()
+            },
+        );
+        let mut plain = FabricManager::new(t, ManagerConfig::default());
+        for e in &schedule {
+            let r = gated
+                .try_apply_batch(std::slice::from_ref(e))
+                .expect("clean events pass the gate");
+            assert!(r.valid);
+            plain.apply(e);
+        }
+        assert_eq!(gated.current().1.raw(), plain.current().1.raw());
+        assert_eq!(gated.metrics.epochs_rejected, 0);
+        assert_eq!(gated.metrics.rollbacks, 0);
+        assert_eq!(gated.metrics.panics_contained, 0);
+    }
+
+    #[test]
+    fn corrupted_candidate_is_quarantined_and_rolled_back() {
+        let t = PgftParams::small().build();
+        let victim = uuid_of_level(&t, 1);
+        let mut mgr = FabricManager::new(
+            t.clone(),
+            ManagerConfig {
+                gate: true,
+                chaos: Some(
+                    ChaosPlan::new(3).with_limited(ChaosPoint::ValidationCorrupt, 1.0, 1),
+                ),
+                ..Default::default()
+            },
+        );
+        let reader = mgr.reader();
+        let epoch_before = reader.epoch();
+        let tables_before = mgr.current().1.raw().to_vec();
+        let down_before = mgr.metrics.equipment_down;
+
+        let ev = Event { at_ms: 1, kind: EventKind::SwitchDown(victim) };
+        let q = mgr
+            .try_apply_batch(std::slice::from_ref(&ev))
+            .expect_err("the corrupted candidate must be quarantined");
+        assert!(
+            matches!(q.reason, QuarantineReason::InvalidRouting(_)),
+            "{:?}",
+            q.reason
+        );
+        assert_eq!(q.reason.tag(), "invalid_routing");
+        assert_eq!(q.events, vec![ev.clone()]);
+        // Rollback: readers kept the last-good epoch, the manager's
+        // tables rewound to the pre-batch bytes, state marks undone.
+        assert_eq!(reader.epoch(), epoch_before, "nothing published");
+        assert_eq!(q.report.epoch, epoch_before);
+        assert_eq!(mgr.current().1.raw(), &tables_before[..]);
+        assert_eq!(mgr.metrics.equipment_down, down_before);
+        assert_eq!(mgr.metrics.epochs_rejected, 1);
+        assert_eq!(mgr.metrics.rollbacks, 1);
+
+        // Chaos budget exhausted: the same event now applies cleanly and
+        // converges exactly where a never-faulted manager does.
+        let r = mgr.try_apply_batch(std::slice::from_ref(&ev)).expect("clean retry");
+        assert!(r.valid);
+        assert!(reader.epoch() > epoch_before);
+        let mut clean = FabricManager::new(t, ManagerConfig::default());
+        clean.apply(&ev);
+        assert_eq!(mgr.current().1.raw(), clean.current().1.raw());
+    }
+
+    #[test]
+    fn injected_panic_is_contained_with_a_full_tier_retry() {
+        let t = PgftParams::small().build();
+        let cable = cable_ids(&t)[0].0;
+        let mut mgr = FabricManager::new(
+            t.clone(),
+            ManagerConfig {
+                gate: true,
+                ..Default::default()
+            },
+        );
+        mgr.set_chaos(Some(
+            ChaosPlan::new(4).with_limited(ChaosPoint::ReroutePanic, 1.0, 1),
+        ));
+        let ev = Event { at_ms: 1, kind: EventKind::LinkDown(cable) };
+        let r = mgr
+            .try_apply_batch(std::slice::from_ref(&ev))
+            .expect("a single panic is contained, not quarantined");
+        assert!(r.valid);
+        assert_eq!(r.tier, ReactionTier::Full, "the retry is forced off the delta tier");
+        assert_eq!(mgr.metrics.panics_contained, 1);
+        assert_eq!(mgr.metrics.rollbacks, 0);
+        // The retry repaired the pre-panic scribble and the workspace
+        // reinit keeps later delta reroutes sound.
+        let up = Event { at_ms: 2, kind: EventKind::LinkUp(cable) };
+        mgr.try_apply_batch(std::slice::from_ref(&up)).expect("clean");
+        let mut clean = FabricManager::new(t, ManagerConfig::default());
+        clean.apply(&ev);
+        clean.apply(&up);
+        assert_eq!(mgr.current().1.raw(), clean.current().1.raw());
+    }
+
+    #[test]
+    fn watchdog_escalates_a_slow_delta_to_the_full_tier() {
+        let t = PgftParams::small().build();
+        let cable = cable_ids(&t)[0].0;
+        let mut mgr = FabricManager::new(
+            t,
+            ManagerConfig {
+                gate: true,
+                watchdog_ms: 40,
+                // One injected 120ms stall: the delta attempt overruns,
+                // the escalated full retry runs with the budget spent.
+                chaos: Some({
+                    let mut p =
+                        ChaosPlan::new(5).with_limited(ChaosPoint::SlowReroute, 1.0, 1);
+                    p.slow_ms = 120;
+                    p
+                }),
+                ..Default::default()
+            },
+        );
+        let ev = Event { at_ms: 1, kind: EventKind::LinkDown(cable) };
+        let r = mgr
+            .try_apply_batch(std::slice::from_ref(&ev))
+            .expect("the escalated full reroute meets the deadline");
+        assert!(r.valid);
+        assert_eq!(r.tier, ReactionTier::Full);
+        assert_eq!(mgr.metrics.watchdog_escalations, 1);
+        assert_eq!(mgr.metrics.rollbacks, 0);
+    }
+
+    #[test]
+    fn watchdog_quarantines_a_full_tier_overrun() {
+        let t = PgftParams::small().build();
+        let cable = cable_ids(&t)[0].0;
+        let mut mgr = FabricManager::new(
+            t.clone(),
+            ManagerConfig {
+                gate: true,
+                watchdog_ms: 10,
+                // Unlimited stalls: delta overruns, the escalated full
+                // overruns too → quarantine.
+                chaos: Some({
+                    let mut p = ChaosPlan::new(6).with(ChaosPoint::SlowReroute, 1.0);
+                    p.slow_ms = 60;
+                    p
+                }),
+                ..Default::default()
+            },
+        );
+        let reader = mgr.reader();
+        let epoch_before = reader.epoch();
+        let tables_before = mgr.current().1.raw().to_vec();
+        let ev = Event { at_ms: 1, kind: EventKind::LinkDown(cable) };
+        let q = mgr
+            .try_apply_batch(std::slice::from_ref(&ev))
+            .expect_err("a stalled full tier must quarantine");
+        match q.reason {
+            QuarantineReason::Watchdog { deadline_ms, took_ms } => {
+                assert_eq!(deadline_ms, 10);
+                assert!(took_ms > deadline_ms);
+            }
+            other => panic!("expected Watchdog, got {other:?}"),
+        }
+        assert_eq!(mgr.metrics.watchdog_escalations, 2, "delta→full, then full→quarantine");
+        assert_eq!(mgr.metrics.rollbacks, 1);
+        assert_eq!(reader.epoch(), epoch_before);
+        assert_eq!(mgr.current().1.raw(), &tables_before[..]);
+        // Dropping the chaos plan heals the manager in place.
+        mgr.set_chaos(None);
+        let r = mgr.try_apply_batch(std::slice::from_ref(&ev)).expect("clean");
+        assert!(r.valid);
+        let mut clean = FabricManager::new(t, ManagerConfig::default());
+        clean.apply(&ev);
+        assert_eq!(mgr.current().1.raw(), clean.current().1.raw());
+    }
+
+    #[test]
+    fn empty_chaos_plan_never_fires() {
+        let t = PgftParams::fig1().build();
+        let victim = uuid_of_level(&t, 1);
+        let mut mgr = FabricManager::new(
+            t,
+            ManagerConfig {
+                gate: true,
+                chaos: Some(ChaosPlan::new(9)), // all rates zero
+                ..Default::default()
+            },
+        );
+        for i in 0..4u64 {
+            let kind = if i % 2 == 0 {
+                EventKind::SwitchDown(victim)
+            } else {
+                EventKind::SwitchUp(victim)
+            };
+            mgr.try_apply_batch(&[Event { at_ms: i, kind }]).expect("clean");
+        }
+        assert_eq!(mgr.metrics.rollbacks, 0);
+        assert_eq!(mgr.metrics.panics_contained, 0);
+        assert_eq!(mgr.metrics.epochs_rejected, 0);
     }
 }

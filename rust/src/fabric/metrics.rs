@@ -152,6 +152,20 @@ pub struct Metrics {
     /// Probe evaluations whose tensor maintenance fell back to a full
     /// rebuild (first event, switch/islet shape changes).
     pub probe_rebuilds: u64,
+    /// Candidate epochs the validate-before-publish gate refused to
+    /// publish (failed validity or carried a CDG cycle). Only the gated
+    /// path (`try_apply_batch`) moves this; the ungated path counts
+    /// [`invalid_states`](Metrics::invalid_states) instead.
+    pub epochs_rejected: u64,
+    /// Rollbacks to the last-good state (one per quarantined batch,
+    /// whatever the reason).
+    pub rollbacks: u64,
+    /// Reroute panics trapped by `catch_unwind` (each followed by a
+    /// workspace re-initialization and a forced full-tier retry).
+    pub panics_contained: u64,
+    /// Watchdog deadline escalations: one per delta→full escalation and
+    /// one per full→quarantine step.
+    pub watchdog_escalations: u64,
 }
 
 impl Metrics {
@@ -173,7 +187,7 @@ impl Metrics {
     }
 
     pub fn render(&self) -> String {
-        format!(
+        let mut s = format!(
             "events={} reroutes={} delta={} delta_fallbacks={} delta_ineligible={} fast_patches={} invalid={} entries_changed={} blocks_uploaded={} down={} up={} probe={} probe_rebuilds={}",
             self.events,
             self.reroutes,
@@ -188,7 +202,23 @@ impl Metrics {
             self.equipment_up,
             self.probe_updates,
             self.probe_rebuilds
-        )
+        );
+        // Recovery-ladder counters only when the ladder ever fired, so
+        // the common status line stays scannable.
+        if self.epochs_rejected + self.rollbacks + self.panics_contained
+            + self.watchdog_escalations
+            > 0
+        {
+            let _ = write!(
+                s,
+                " rejected={} rollbacks={} panics_contained={} watchdog={}",
+                self.epochs_rejected,
+                self.rollbacks,
+                self.panics_contained,
+                self.watchdog_escalations
+            );
+        }
+        s
     }
 }
 
@@ -223,6 +253,15 @@ mod tests {
         };
         assert!(m.render().contains("events=2"));
         assert!(m.render().contains("delta_ineligible=3"));
+        // Recovery-ladder counters appear only once the ladder fired.
+        assert!(!m.render().contains("rollbacks="));
+        let m = Metrics {
+            rollbacks: 1,
+            panics_contained: 2,
+            ..Default::default()
+        };
+        assert!(m.render().contains("rollbacks=1"));
+        assert!(m.render().contains("panics_contained=2"));
     }
 
     #[test]

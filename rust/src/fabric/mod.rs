@@ -1,17 +1,23 @@
 //! Centralized fabric manager (L3 coordinator). See [`manager`] for the
 //! event-at-a-time core and [`service`] for the long-running coalescing
-//! service loop with epoch-published tables.
+//! service loop with epoch-published tables, back-pressure, and the
+//! validate-before-publish recovery ladder (DESIGN.md §"Failure domains
+//! & recovery ladder").
 
+pub mod error;
 pub mod events;
 pub mod lft_store;
 pub mod manager;
 pub mod metrics;
 pub mod service;
 
-pub use events::{Event, EventKind};
+pub use error::FabricError;
+pub use events::{EquipmentKey, Event, EventKind};
 pub use lft_store::{FabricEpoch, FabricReader};
 pub use manager::{
-    FabricManager, ManagerConfig, ManagerReport, PatchReport, ProbeConfig, ReactionTier,
-    RiskReport,
+    FabricManager, ManagerConfig, ManagerReport, PatchReport, ProbeConfig, QuarantineReason,
+    QuarantineReport, ReactionTier, RiskReport,
 };
-pub use service::{BatchReport, EventSender, FabricService, ServiceConfig, ServiceStats};
+pub use service::{
+    BatchReport, EventSender, FabricService, QueuePolicy, ServiceConfig, ServiceStats,
+};

@@ -21,6 +21,22 @@
 //! `window_ms = 0` still folds the already-queued backlog into one
 //! batch — a service that fell behind catches up in a single reaction.
 //!
+//! **Back-pressure** (DESIGN.md §"Failure domains & recovery ladder"):
+//! the event queue is bounded ([`ServiceConfig::queue_cap`]) and a full
+//! queue is resolved by [`QueuePolicy`] — block the producer, fold the
+//! oldest event into a per-equipment coalesced entry, or shed the newest
+//! with a typed [`FabricError::QueueFull`]. Folding is state-exact: for
+//! one piece of equipment only the latest transition matters to the dead
+//! sets, and islet events act as fold barriers, so the reroute converges
+//! on the same tables as the unfolded sequence.
+//!
+//! **Crash safety**: when the wrapped manager's
+//! [`ManagerConfig::gate`](super::manager::ManagerConfig) is on, batches
+//! go through [`FabricManager::try_apply_batch`] — candidate tables are
+//! validated *before* publication, reroute panics are contained, and a
+//! failed batch is quarantined (reported with
+//! [`BatchReport::quarantined`]) while readers keep the last-good epoch.
+//!
 //! **Reader side**: every committed generation is published through the
 //! store's [`FabricReader`] surface. Readers route queries from complete,
 //! checksummed [`FabricEpoch`](super::lft_store::FabricEpoch) snapshots
@@ -31,17 +47,63 @@
 //! applied, and (if the report receiver is alive) reported; a vanished
 //! report receiver stops reporting but never stops applying.
 
-use super::events::Event;
+use super::error::FabricError;
+use super::events::{EquipmentKey, Event};
 use super::lft_store::FabricReader;
-use super::manager::{FabricManager, ManagerConfig, ManagerReport};
+use super::manager::{FabricManager, ManagerConfig, ManagerReport, QuarantineReason};
 use super::metrics::Histogram;
 use crate::topology::Topology;
 use crate::util::sync::thread::{spawn_named, JoinHandle};
+use crate::util::sync::{lock, Arc, Condvar, Mutex};
 use crate::util::time;
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, SendError, Sender, TryRecvError};
+use std::collections::VecDeque;
+use std::sync::mpsc::{channel, Receiver, Sender};
 use std::time::{Duration, Instant};
 
-/// Service configuration: the wrapped manager's plus the coalescing knobs.
+/// What a full event queue does with the overflow.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum QueuePolicy {
+    /// Block the producer until the service drains a slot — lossless,
+    /// propagates back-pressure upstream.
+    #[default]
+    Block,
+    /// Fold the *oldest* queued event into a per-equipment coalesced
+    /// entry (newest transition wins, islets are barriers) — lossless in
+    /// final state, bounded in memory, producers never block.
+    CoalesceOldest,
+    /// Shed the *newest* event: the send returns
+    /// [`FabricError::QueueFull`] and the event is never enqueued —
+    /// the producer knows exactly what was dropped and can replay.
+    RejectNewest,
+}
+
+impl QueuePolicy {
+    /// Stable snake_case name (status lines, JSON).
+    pub fn name(self) -> &'static str {
+        match self {
+            QueuePolicy::Block => "block",
+            QueuePolicy::CoalesceOldest => "coalesce_oldest",
+            QueuePolicy::RejectNewest => "reject_newest",
+        }
+    }
+}
+
+impl std::str::FromStr for QueuePolicy {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "block" => Ok(QueuePolicy::Block),
+            "coalesce" | "coalesce_oldest" => Ok(QueuePolicy::CoalesceOldest),
+            "reject" | "reject_newest" => Ok(QueuePolicy::RejectNewest),
+            other => Err(format!(
+                "unknown queue policy '{other}' (expected block|coalesce|reject)"
+            )),
+        }
+    }
+}
+
+/// Service configuration: the wrapped manager's plus the coalescing and
+/// back-pressure knobs.
 #[derive(Clone, Debug)]
 pub struct ServiceConfig {
     pub manager: ManagerConfig,
@@ -49,8 +111,13 @@ pub struct ServiceConfig {
     /// of a burst (see the module docs). 0 = coalesce only the backlog
     /// already queued at dequeue time.
     pub window_ms: u64,
-    /// Maximum events folded into one reaction; 0 = unbounded.
+    /// Maximum queue entries folded into one reaction; 0 = unbounded.
     pub max_batch: usize,
+    /// Event-queue capacity (pending entries); 0 = unbounded (the
+    /// pre-PR-9 behaviour — [`QueuePolicy`] never fires).
+    pub queue_cap: usize,
+    /// What to do when the queue is full.
+    pub policy: QueuePolicy,
 }
 
 impl Default for ServiceConfig {
@@ -59,24 +126,265 @@ impl Default for ServiceConfig {
             manager: ManagerConfig::default(),
             window_ms: 2,
             max_batch: 0,
+            queue_cap: 0,
+            policy: QueuePolicy::Block,
         }
+    }
+}
+
+/// One queued (possibly coalesced) event: the enqueue stamp feeds the
+/// reaction-latency histogram; `count` is how many original events this
+/// entry represents (1 unless `CoalesceOldest` folded others into it).
+struct QueuedEvent {
+    event: Event,
+    at: Instant,
+    count: u64,
+}
+
+/// Mutex-protected queue state. `folded` holds entries evicted from the
+/// ring by `CoalesceOldest` — every ring entry is strictly newer than
+/// every folded entry (folds always evict the ring *front*), so draining
+/// folded-first preserves global arrival order.
+struct QueueInner {
+    ring: VecDeque<QueuedEvent>,
+    folded: VecDeque<(Option<EquipmentKey>, QueuedEvent)>,
+    senders: usize,
+    /// The service loop exited; further sends fail with `ServiceStopped`.
+    closed: bool,
+    shed: u64,
+    folded_events: u64,
+    high_water: usize,
+}
+
+impl QueueInner {
+    /// Pending entries (ring + folded).
+    fn depth(&self) -> usize {
+        self.ring.len() + self.folded.len()
+    }
+
+    fn pop(&mut self) -> Option<QueuedEvent> {
+        if let Some((_, q)) = self.folded.pop_front() {
+            return Some(q);
+        }
+        self.ring.pop_front()
+    }
+
+    /// Fold an evicted ring-front entry into the coalesced list: merge
+    /// into the newest same-equipment entry unless an islet entry (a
+    /// fold *barrier* — it touches many switches at once) was appended
+    /// since, in which case per-equipment replay order would invert.
+    fn fold(&mut self, q: QueuedEvent) {
+        let key = match q.event.kind.equipment() {
+            Some(k) => k,
+            None => {
+                self.folded.push_back((None, q));
+                return;
+            }
+        };
+        for (k, entry) in self.folded.iter_mut().rev() {
+            match k {
+                None => break, // islet barrier: no merging across it
+                Some(existing) if *existing == key => {
+                    // Newest transition wins; the oldest stamp is kept so
+                    // the latency histogram sees the worst waiter.
+                    entry.event = q.event;
+                    entry.count = entry.count.saturating_add(q.count);
+                    self.folded_events = self.folded_events.saturating_add(q.count);
+                    return;
+                }
+                Some(_) => {}
+            }
+        }
+        self.folded.push_back((Some(key), q));
+    }
+}
+
+/// Result of a non-blocking or deadline-bounded dequeue.
+enum TryPop {
+    Item(QueuedEvent),
+    /// Nothing pending right now (senders still attached).
+    Empty,
+    /// Nothing pending and the last sender is gone.
+    Closed,
+}
+
+/// The bounded MPSC event queue between producers and the service loop.
+/// Built on the `util::sync` facade (Mutex + two Condvars) instead of
+/// `std::sync::mpsc` because back-pressure needs to *inspect and edit*
+/// the pending queue (fold-oldest) — a channel only offers send/recv.
+struct EventQueue {
+    inner: Mutex<QueueInner>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    cap: usize,
+    policy: QueuePolicy,
+}
+
+impl EventQueue {
+    fn new(cap: usize, policy: QueuePolicy) -> Self {
+        Self {
+            inner: Mutex::new(QueueInner {
+                ring: VecDeque::new(),
+                folded: VecDeque::new(),
+                senders: 0,
+                closed: false,
+                shed: 0,
+                folded_events: 0,
+                high_water: 0,
+            }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            cap,
+            policy,
+        }
+    }
+
+    fn push(&self, event: Event) -> Result<(), FabricError> {
+        let at = time::now();
+        let mut g = lock(&self.inner);
+        loop {
+            if g.closed {
+                return Err(FabricError::ServiceStopped);
+            }
+            if self.cap == 0 || g.ring.len() < self.cap {
+                break;
+            }
+            match self.policy {
+                QueuePolicy::Block => {
+                    g = self
+                        .not_full
+                        .wait(g)
+                        .unwrap_or_else(|e| e.into_inner());
+                }
+                QueuePolicy::CoalesceOldest => {
+                    let oldest = g
+                        .ring
+                        .pop_front()
+                        .expect("full queue invariant: cap > 0 implies a non-empty ring");
+                    g.fold(oldest);
+                    break;
+                }
+                QueuePolicy::RejectNewest => {
+                    g.shed = g.shed.saturating_add(1);
+                    return Err(FabricError::QueueFull { capacity: self.cap });
+                }
+            }
+        }
+        g.ring.push_back(QueuedEvent {
+            event,
+            at,
+            count: 1,
+        });
+        g.high_water = g.high_water.max(g.depth());
+        drop(g);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking dequeue; `None` once the queue is empty and the last
+    /// sender is gone.
+    fn recv(&self) -> Option<QueuedEvent> {
+        let mut g = lock(&self.inner);
+        loop {
+            if let Some(q) = g.pop() {
+                drop(g);
+                self.not_full.notify_one();
+                return Some(q);
+            }
+            if g.senders == 0 {
+                return None;
+            }
+            g = self
+                .not_empty
+                .wait(g)
+                .unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    fn try_recv(&self) -> TryPop {
+        let mut g = lock(&self.inner);
+        match g.pop() {
+            Some(q) => {
+                drop(g);
+                self.not_full.notify_one();
+                TryPop::Item(q)
+            }
+            None if g.senders == 0 => TryPop::Closed,
+            None => TryPop::Empty,
+        }
+    }
+
+    /// Dequeue, waiting at most until `deadline`.
+    fn recv_deadline(&self, deadline: Instant) -> TryPop {
+        let mut g = lock(&self.inner);
+        loop {
+            if let Some(q) = g.pop() {
+                drop(g);
+                self.not_full.notify_one();
+                return TryPop::Item(q);
+            }
+            if g.senders == 0 {
+                return TryPop::Closed;
+            }
+            let now = time::now();
+            if now >= deadline {
+                return TryPop::Empty;
+            }
+            let (g2, _) = self
+                .not_empty
+                .wait_timeout(g, deadline.saturating_duration_since(now))
+                .unwrap_or_else(|e| e.into_inner());
+            g = g2;
+        }
+    }
+
+    /// Mark the receiving side gone: pending/blocked and future sends
+    /// fail with [`FabricError::ServiceStopped`].
+    fn close(&self) {
+        lock(&self.inner).closed = true;
+        self.not_full.notify_all();
     }
 }
 
 /// Cloneable event-ingestion handle. Each event is stamped with its
 /// enqueue time, so the service can report true event→publication
 /// reaction latency (queue wait included, not just reroute time).
-#[derive(Clone)]
 pub struct EventSender {
-    tx: Sender<(Event, Instant)>,
+    q: Arc<EventQueue>,
 }
 
 impl EventSender {
-    /// Enqueue an event; fails only after the service loop terminated.
-    pub fn send(&self, event: Event) -> Result<(), SendError<Event>> {
-        self.tx
-            .send((event, time::now()))
-            .map_err(|SendError((ev, _))| SendError(ev))
+    fn attach(q: &Arc<EventQueue>) -> Self {
+        lock(&q.inner).senders += 1;
+        Self { q: Arc::clone(q) }
+    }
+
+    /// Enqueue an event. Fails with [`FabricError::QueueFull`] when a
+    /// bounded queue under [`QueuePolicy::RejectNewest`] sheds it, or
+    /// [`FabricError::ServiceStopped`] after the service loop exited.
+    /// Under [`QueuePolicy::Block`] this call blocks while the queue is
+    /// full.
+    pub fn send(&self, event: Event) -> Result<(), FabricError> {
+        self.q.push(event)
+    }
+}
+
+impl Clone for EventSender {
+    fn clone(&self) -> Self {
+        Self::attach(&self.q)
+    }
+}
+
+impl Drop for EventSender {
+    fn drop(&mut self) {
+        let mut g = lock(&self.q.inner);
+        g.senders -= 1;
+        let last = g.senders == 0;
+        drop(g);
+        if last {
+            // Wake the loop so it can observe the hang-up and drain out.
+            self.q.not_empty.notify_all();
+        }
     }
 }
 
@@ -85,27 +393,49 @@ impl EventSender {
 pub struct BatchReport {
     /// Reaction sequence number (0-based).
     pub batch_idx: usize,
-    /// Events folded into this reaction.
+    /// Original events folded into this reaction (queue-coalesced
+    /// entries count every event merged into them).
     pub events: usize,
     /// Oldest-event reaction latency, seconds: first enqueue →
     /// publication of the tables that account for it.
     pub reaction_s: f64,
     /// The manager's report for the single coalesced reroute (carries
-    /// the publication epoch, tier, upload accounting, timings).
+    /// the publication epoch, tier, upload accounting, timings). For a
+    /// quarantined batch this describes the *post-rollback* state (the
+    /// unchanged last-good epoch).
     pub report: ManagerReport,
+    /// `Some` when the gate quarantined this batch instead of applying
+    /// it (see [`FabricManager::try_apply_batch`]).
+    pub quarantined: Option<QuarantineReason>,
 }
 
 /// Lifetime statistics of one service run.
 pub struct ServiceStats {
     /// Coalesced reactions issued.
     pub batches: u64,
-    /// Events consumed.
+    /// Original events consumed (applied or quarantined; shed events are
+    /// counted in [`events_shed`](ServiceStats::events_shed) instead).
     pub events: u64,
     /// Event→publication reaction latency (ms), one sample per event —
     /// the p50/p99 that EXPERIMENTS.md §"Fault-storm latency" reports.
     pub reaction: Histogram,
     /// Largest single batch (peak observed queue depth).
     pub max_batch: usize,
+    /// Batches the validate-before-publish gate refused (rolled back and
+    /// reported with [`BatchReport::quarantined`]).
+    pub quarantined_batches: u64,
+    /// Events shed by [`QueuePolicy::RejectNewest`] (the producer got
+    /// [`FabricError::QueueFull`] for each).
+    pub events_shed: u64,
+    /// Events merged away by [`QueuePolicy::CoalesceOldest`] (their
+    /// state transitions survive in the entries they merged into).
+    pub events_folded: u64,
+    /// Peak pending queue depth (entries) over the run.
+    pub queue_high_water: usize,
+    /// Wall time of every batch in which the recovery ladder fired
+    /// (contained panic, watchdog escalation, or rollback), ms — the
+    /// "recovery latency" columns of EXPERIMENTS.md §"Chaos soak".
+    pub recovery: Histogram,
 }
 
 impl ServiceStats {
@@ -115,6 +445,11 @@ impl ServiceStats {
             events: 0,
             reaction: Histogram::reaction_ms(),
             max_batch: 0,
+            quarantined_batches: 0,
+            events_shed: 0,
+            events_folded: 0,
+            queue_high_water: 0,
+            recovery: Histogram::reaction_ms(),
         }
     }
 
@@ -128,14 +463,22 @@ impl ServiceStats {
     }
 
     pub fn render(&self) -> String {
-        format!(
-            "batches={} events={} coalesce_ratio={:.2} max_batch={}\n{}",
+        let mut s = format!(
+            "batches={} events={} coalesce_ratio={:.2} max_batch={} shed={} folded={} high_water={} quarantined={}\n{}",
             self.batches,
             self.events,
             self.coalesce_ratio(),
             self.max_batch,
+            self.events_shed,
+            self.events_folded,
+            self.queue_high_water,
+            self.quarantined_batches,
             self.reaction.render("reaction")
-        )
+        );
+        if self.recovery.count() > 0 {
+            s.push_str(&self.recovery.render("recovery"));
+        }
+        s
     }
 }
 
@@ -162,11 +505,12 @@ impl FabricService {
     /// pre-applied fault state).
     pub fn spawn_with(mgr: FabricManager, cfg: ServiceConfig) -> std::io::Result<Self> {
         let reader = mgr.reader();
-        let (etx, erx) = channel();
+        let queue = Arc::new(EventQueue::new(cfg.queue_cap, cfg.policy));
+        let events = EventSender::attach(&queue);
         let (rtx, rrx) = channel();
-        let join = spawn_named("fabric-service", move || run(mgr, cfg, erx, rtx))?;
+        let join = spawn_named("fabric-service", move || run(mgr, cfg, queue, rtx))?;
         Ok(Self {
-            events: EventSender { tx: etx },
+            events,
             reports: rrx,
             reader,
             join,
@@ -202,7 +546,8 @@ impl FabricService {
         // Unread reports never block the drain (the loop tolerates a
         // dead report receiver), so dropping the channel here is safe.
         drop(reports);
-        join.join().expect("fabric-service thread panicked")
+        join.join().expect("invariant: fabric-service loop never panics \
+                            (reroute panics are contained by the manager)")
     }
 }
 
@@ -211,7 +556,7 @@ impl FabricService {
 fn run(
     mut mgr: FabricManager,
     cfg: ServiceConfig,
-    rx: Receiver<(Event, Instant)>,
+    queue: Arc<EventQueue>,
     tx: Sender<BatchReport>,
 ) -> (FabricManager, ServiceStats) {
     let mut stats = ServiceStats::new();
@@ -221,26 +566,29 @@ fn run(
     } else {
         cfg.max_batch
     };
+    // The manager's own config is authoritative (spawn_with may wrap a
+    // manager whose config differs from cfg.manager).
+    let gated = mgr.config().gate;
     let mut events: Vec<Event> = Vec::new();
-    let mut stamps: Vec<Instant> = Vec::new();
+    let mut stamps: Vec<(Instant, u64)> = Vec::new();
     let mut reports_alive = true;
     let mut batch_idx = 0usize;
-    while let Ok((first, at)) = rx.recv() {
+    while let Some(first) = queue.recv() {
         events.clear();
         stamps.clear();
-        events.push(first);
-        stamps.push(at);
+        stamps.push((first.at, first.count));
+        events.push(first.event);
         let deadline = time::now() + window;
         'fill: while events.len() < cap {
             // Drain the backlog without blocking first …
-            match rx.try_recv() {
-                Ok((ev, at)) => {
-                    events.push(ev);
-                    stamps.push(at);
+            match queue.try_recv() {
+                TryPop::Item(q) => {
+                    stamps.push((q.at, q.count));
+                    events.push(q.event);
                     continue 'fill;
                 }
-                Err(TryRecvError::Disconnected) => break 'fill,
-                Err(TryRecvError::Empty) => {}
+                TryPop::Closed => break 'fill,
+                TryPop::Empty => {}
             }
             // … then wait out the remainder of the window for stragglers.
             if cfg.window_ms == 0 {
@@ -250,32 +598,59 @@ fn run(
             if now >= deadline {
                 break;
             }
-            match rx.recv_timeout(deadline.saturating_duration_since(now)) {
-                Ok((ev, at)) => {
-                    events.push(ev);
-                    stamps.push(at);
+            match queue.recv_deadline(deadline) {
+                TryPop::Item(q) => {
+                    stamps.push((q.at, q.count));
+                    events.push(q.event);
                 }
-                Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => {
-                    break 'fill;
-                }
+                TryPop::Empty | TryPop::Closed => break 'fill,
             }
         }
-        let report = mgr.apply_batch(&events);
+        let ladder_before = mgr.metrics.rollbacks
+            + mgr.metrics.panics_contained
+            + mgr.metrics.watchdog_escalations;
+        let t_apply = time::now();
+        let (report, quarantined) = if gated {
+            match mgr.try_apply_batch(&events) {
+                Ok(r) => (r, None),
+                Err(q) => {
+                    stats.quarantined_batches = stats.quarantined_batches.saturating_add(1);
+                    (q.report, Some(q.reason))
+                }
+            }
+        } else {
+            (mgr.apply_batch(&events), None)
+        };
         let done = time::now();
-        for &at in &stamps {
+        let ladder_after = mgr.metrics.rollbacks
+            + mgr.metrics.panics_contained
+            + mgr.metrics.watchdog_escalations;
+        if ladder_after > ladder_before {
+            // A recovery rung fired inside this batch: its whole apply
+            // wall time is one recovery-latency sample.
             stats
-                .reaction
-                .record(done.saturating_duration_since(at).as_secs_f64() * 1e3);
+                .recovery
+                .record(done.saturating_duration_since(t_apply).as_secs_f64() * 1e3);
+        }
+        let mut batch_events = 0u64;
+        for &(at, count) in &stamps {
+            batch_events += count;
+            for _ in 0..count {
+                stats
+                    .reaction
+                    .record(done.saturating_duration_since(at).as_secs_f64() * 1e3);
+            }
         }
         stats.batches = stats.batches.saturating_add(1);
-        stats.events = stats.events.saturating_add(events.len() as u64);
-        stats.max_batch = stats.max_batch.max(events.len());
+        stats.events = stats.events.saturating_add(batch_events);
+        stats.max_batch = stats.max_batch.max(batch_events as usize);
         if reports_alive {
             let br = BatchReport {
                 batch_idx,
-                events: events.len(),
-                reaction_s: done.saturating_duration_since(stamps[0]).as_secs_f64(),
+                events: batch_events as usize,
+                reaction_s: done.saturating_duration_since(stamps[0].0).as_secs_f64(),
                 report,
+                quarantined,
             };
             // Same rule as run_stream: a vanished report consumer stops
             // reporting, never applying.
@@ -285,14 +660,24 @@ fn run(
         }
         batch_idx += 1;
     }
+    // Fold the queue's lifetime accounting into the stats, then mark it
+    // closed so a straggling sender gets `ServiceStopped`, not a hang.
+    {
+        let g = lock(&queue.inner);
+        stats.events_shed = g.shed;
+        stats.events_folded = g.folded_events;
+        stats.queue_high_water = g.high_water;
+    }
+    queue.close();
     (mgr, stats)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::fabric::events::EventKind;
+    use crate::fabric::events::{CableId, EventKind};
     use crate::topology::pgft::PgftParams;
+    use crate::util::sync::atomic::{AtomicBool, Ordering};
 
     fn uuid_of_level(t: &Topology, level: u8) -> u64 {
         t.switches
@@ -300,6 +685,20 @@ mod tests {
             .find(|s| s.level == level)
             .map(|s| s.uuid)
             .unwrap()
+    }
+
+    fn ev(at_ms: u64, kind: EventKind) -> Event {
+        Event { at_ms, kind }
+    }
+
+    fn drain(q: &EventQueue) -> Vec<(Event, u64)> {
+        let mut out = Vec::new();
+        loop {
+            match q.try_recv() {
+                TryPop::Item(i) => out.push((i.event, i.count)),
+                _ => return out,
+            }
+        }
     }
 
     #[test]
@@ -327,6 +726,9 @@ mod tests {
         assert!(stats.batches >= 1 && stats.batches <= 2);
         assert_eq!(stats.reaction.count(), 2, "one reaction sample per event");
         assert!(stats.coalesce_ratio() >= 1.0);
+        assert_eq!(stats.events_shed, 0);
+        assert_eq!(stats.events_folded, 0);
+        assert_eq!(stats.quarantined_batches, 0);
     }
 
     #[test]
@@ -378,5 +780,150 @@ mod tests {
         for s in 0..topo.switches.len() {
             assert_eq!(ep.row(s), &lft.raw()[s * n..(s + 1) * n]);
         }
+    }
+
+    // ---- back-pressure unit suite (one per QueuePolicy variant) ----
+
+    #[test]
+    fn reject_newest_sheds_with_typed_error() {
+        let q = EventQueue::new(2, QueuePolicy::RejectNewest);
+        let held = Arc::new(q);
+        let sender = EventSender::attach(&held);
+        sender.send(ev(1, EventKind::SwitchDown(10))).unwrap();
+        sender.send(ev(2, EventKind::SwitchDown(11))).unwrap();
+        let err = sender.send(ev(3, EventKind::SwitchDown(12))).unwrap_err();
+        assert_eq!(err, FabricError::QueueFull { capacity: 2 });
+        let got = drain(&held);
+        assert_eq!(got.len(), 2, "the shed event was never enqueued");
+        assert_eq!(got[0].0.at_ms, 1);
+        assert_eq!(got[1].0.at_ms, 2);
+        assert_eq!(lock(&held.inner).shed, 1);
+    }
+
+    #[test]
+    fn block_policy_blocks_until_the_queue_drains() {
+        let q = Arc::new(EventQueue::new(1, QueuePolicy::Block));
+        let sender = EventSender::attach(&q);
+        sender.send(ev(1, EventKind::SwitchDown(10))).unwrap();
+        let blocked_done = Arc::new(AtomicBool::new(false));
+        let h = {
+            let sender = sender.clone();
+            let done = Arc::clone(&blocked_done);
+            spawn_named("blocked-producer", move || {
+                sender.send(ev(2, EventKind::SwitchDown(11))).unwrap();
+                done.store(true, Ordering::SeqCst);
+            })
+            .expect("spawn")
+        };
+        // The producer can't finish while the queue is full …
+        std::thread::sleep(Duration::from_millis(20));
+        assert!(!blocked_done.load(Ordering::SeqCst), "send must block on a full queue");
+        // … and completes as soon as a slot frees up.
+        let first = match q.try_recv() {
+            TryPop::Item(i) => i,
+            _ => panic!("queued event missing"),
+        };
+        assert_eq!(first.event.at_ms, 1);
+        h.join().expect("producer");
+        assert!(blocked_done.load(Ordering::SeqCst));
+        let got = drain(&q);
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].0.at_ms, 2);
+        assert_eq!(lock(&q.inner).shed, 0, "Block is lossless");
+    }
+
+    #[test]
+    fn coalesce_oldest_folds_per_equipment_newest_wins() {
+        let c = CableId { a: 1, b: 2, ordinal: 0 };
+        let q = EventQueue::new(1, QueuePolicy::CoalesceOldest);
+        let held = Arc::new(q);
+        let sender = EventSender::attach(&held);
+        sender.send(ev(1, EventKind::LinkDown(c))).unwrap();
+        sender.send(ev(2, EventKind::LinkUp(c))).unwrap(); // folds LinkDown
+        sender.send(ev(3, EventKind::LinkDown(c))).unwrap(); // merges LinkUp into the folded entry
+        let got = drain(&held);
+        // Entry 1: the folded/merged cable entry (newest folded state =
+        // LinkUp at ms 2, representing 2 original events); entry 2: the
+        // ring survivor.
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0].0.kind, EventKind::LinkUp(c));
+        assert_eq!(got[0].1, 2, "the merged entry represents both originals");
+        assert_eq!(got[1].0.kind, EventKind::LinkDown(c));
+        let g = lock(&held.inner);
+        assert_eq!(g.folded_events, 1);
+        assert_eq!(g.shed, 0, "CoalesceOldest never drops state");
+        assert!(g.high_water >= 2);
+    }
+
+    #[test]
+    fn coalesce_islet_is_a_fold_barrier() {
+        // SwitchDown(x) · IsletUp([x]) · SwitchDown(x): the second down
+        // must NOT merge into the pre-islet entry, or replay order would
+        // invert and resurrect x.
+        let q = Arc::new(EventQueue::new(1, QueuePolicy::CoalesceOldest));
+        let sender = EventSender::attach(&q);
+        sender.send(ev(1, EventKind::SwitchDown(7))).unwrap();
+        sender.send(ev(2, EventKind::IsletUp(vec![7]))).unwrap();
+        sender.send(ev(3, EventKind::SwitchDown(7))).unwrap();
+        sender.send(ev(4, EventKind::SwitchUp(8))).unwrap();
+        let kinds: Vec<EventKind> = drain(&q).into_iter().map(|(e, _)| e.kind).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                EventKind::SwitchDown(7),
+                EventKind::IsletUp(vec![7]),
+                EventKind::SwitchDown(7),
+                EventKind::SwitchUp(8),
+            ],
+            "arrival order across the islet barrier must be preserved"
+        );
+    }
+
+    #[test]
+    fn send_after_close_fails_typed() {
+        let q = Arc::new(EventQueue::new(0, QueuePolicy::Block));
+        let sender = EventSender::attach(&q);
+        q.close();
+        let err = sender.send(ev(1, EventKind::SwitchDown(1))).unwrap_err();
+        assert_eq!(err, FabricError::ServiceStopped);
+    }
+
+    #[test]
+    fn bounded_service_with_coalesce_converges_exactly() {
+        // A tiny queue forces heavy folding; the final tables must still
+        // be byte-identical to a clean manager fed the full schedule.
+        let t = PgftParams::small().build();
+        let mut rng = crate::util::rng::Rng::new(11);
+        let schedule = crate::fabric::events::random_schedule(&t, &mut rng, 30, 1, 7);
+        let svc = FabricService::spawn(
+            t.clone(),
+            ServiceConfig {
+                queue_cap: 2,
+                policy: QueuePolicy::CoalesceOldest,
+                window_ms: 1,
+                ..Default::default()
+            },
+        )
+        .expect("spawn");
+        let sender = svc.sender();
+        for e in &schedule {
+            sender.send(e.clone()).unwrap();
+        }
+        drop(sender);
+        let (mgr, stats) = svc.shutdown();
+        assert_eq!(
+            stats.events,
+            schedule.len() as u64,
+            "every original event must be accounted (folded ones via count)"
+        );
+        let mut clean = FabricManager::new(t, ManagerConfig::default());
+        for e in &schedule {
+            clean.apply(e);
+        }
+        assert_eq!(
+            mgr.current().1.raw(),
+            clean.current().1.raw(),
+            "folding must preserve the final dead sets exactly"
+        );
     }
 }

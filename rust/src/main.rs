@@ -307,6 +307,10 @@ fn cmd_fabric() {
         .flag("window-ms", "2", "--stream: coalescing window (ms)")
         .flag("max-batch", "0", "--stream: max events per reaction (0 = unbounded)")
         .flag("rate", "0", "--stream: producer pace in events/s (0 = blast)")
+        .flag("queue-cap", "0", "--stream: event-queue capacity (0 = unbounded)")
+        .flag("policy", "block", "--stream: full-queue policy (block|coalesce|reject)")
+        .flag("watchdog-ms", "0", "--stream: reroute watchdog deadline (0 = off)")
+        .flag("chaos", "0", "--stream: chaos-plan seed, requires chaos support (0 = off)")
         .parse_skip(1);
     let t = build_topo(&p);
     let mut rng = Rng::new(p.get_u64("seed"));
@@ -348,19 +352,37 @@ fn cmd_fabric() {
 /// [`FabricService`] — burst coalescing, epoch publication, and true
 /// event→publication reaction latency (DESIGN.md §"Fabric service loop").
 fn cmd_fabric_stream(t: Topology, schedule: Vec<events::Event>, p: &dmodc::util::cli::Parsed) {
+    let chaos_seed = p.get_u64("chaos");
+    if chaos_seed != 0 && !dmodc::util::chaos::ENABLED {
+        eprintln!(
+            "warning: --chaos {chaos_seed} ignored — this build compiled the chaos \
+             points out (rebuild with --features chaos)"
+        );
+    }
     let cfg = ServiceConfig {
         manager: ManagerConfig {
             algo: p.get_parsed("algo"),
+            // The stream path always runs crash-safe: validate before
+            // publish, roll back and quarantine on failure.
+            gate: true,
+            watchdog_ms: p.get_u64("watchdog-ms"),
+            chaos: (chaos_seed != 0).then(|| dmodc::util::chaos::ChaosPlan::storm(chaos_seed)),
             ..Default::default()
         },
         window_ms: p.get_u64("window-ms"),
         max_batch: p.get_usize("max-batch"),
+        queue_cap: p.get_usize("queue-cap"),
+        policy: p.get_parsed("policy"),
     };
     println!(
-        "service: window={}ms max_batch={} rate={}/s",
+        "service: window={}ms max_batch={} rate={}/s queue_cap={} policy={} watchdog={}ms chaos={}",
         cfg.window_ms,
         cfg.max_batch,
-        p.get("rate")
+        p.get("rate"),
+        cfg.queue_cap,
+        cfg.policy.name(),
+        cfg.manager.watchdog_ms,
+        chaos_seed
     );
     let svc = FabricService::spawn(t, cfg).expect("spawn fabric service");
     let sender = svc.sender();
@@ -371,18 +393,26 @@ fn cmd_fabric_stream(t: Topology, schedule: Vec<events::Event>, p: &dmodc::util:
         std::time::Duration::ZERO
     };
     let total = schedule.len();
+    let mut shed = 0usize;
     for e in schedule {
-        sender.send(e).expect("service hung up early");
+        // A RejectNewest queue sheds under pressure — that's the policy
+        // working, not the service dying; account and move on.
+        if let Err(err) = sender.send(e) {
+            match err {
+                dmodc::fabric::FabricError::QueueFull { .. } => shed += 1,
+                other => panic!("service hung up early: {other}"),
+            }
+        }
         if !gap.is_zero() {
             std::thread::sleep(gap);
         }
     }
     drop(sender);
     let mut tab = Table::new(&[
-        "batch", "events", "tier", "reaction", "valid", "entries Δ", "alive sw",
+        "batch", "events", "tier", "reaction", "valid", "entries Δ", "alive sw", "outcome",
     ]);
     let mut seen = 0usize;
-    while seen < total {
+    while seen + shed < total {
         let br = svc.reports().recv().expect("service died mid-storm");
         seen += br.events;
         tab.row(vec![
@@ -393,6 +423,9 @@ fn cmd_fabric_stream(t: Topology, schedule: Vec<events::Event>, p: &dmodc::util:
             br.report.valid.to_string(),
             br.report.upload.entries_changed.to_string(),
             br.report.switches_alive.to_string(),
+            br.quarantined
+                .as_ref()
+                .map_or_else(|| "applied".into(), |q| format!("quarantined:{}", q.tag())),
         ]);
     }
     let (mgr, stats) = svc.shutdown();

@@ -537,6 +537,10 @@ impl RoutingEngine for Engine {
     fn last_timings(&self) -> Option<super::RerouteTimings> {
         Some(self.ws.timings())
     }
+
+    fn reinit(&mut self) {
+        self.ws.reinit();
+    }
 }
 
 #[cfg(test)]

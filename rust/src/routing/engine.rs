@@ -140,6 +140,18 @@ pub trait RoutingEngine: Send {
         None
     }
 
+    /// Discard all cross-call history, restoring the engine to
+    /// as-constructed behaviour (buffer capacities may be retained).
+    ///
+    /// The fabric manager's panic containment calls this after trapping
+    /// a reroute panic: any partially-built workspace state must not
+    /// leak into the retry. Engines whose `route_into` is a pure
+    /// function of `topo` (no cross-call state beyond capacity) can
+    /// keep the default no-op; engines with delta/fork history
+    /// ([`Capabilities::incremental`] / [`Capabilities::forkable`])
+    /// must override it.
+    fn reinit(&mut self) {}
+
     /// One-shot convenience: route `topo` into a fresh table.
     fn route_once(&mut self, topo: &Topology) -> Lft {
         let mut out = Lft::default();

@@ -320,6 +320,16 @@ pub fn channel_dependency_acyclic(topo: &Topology, lft: &Lft) -> bool {
     channel_dependency_cycle(topo, lft).is_none()
 }
 
+/// Human-readable witness of a channel-dependency cycle, or `None` when
+/// the routing is deadlock-free. The validate-before-publish gate
+/// (`FabricManager::try_apply_batch`) runs this on small fabrics as the
+/// second gate stage after [`check_with`]; the rendered cycle lands in
+/// the quarantine report so operators can audit the rejected epoch.
+pub fn deadlock_witness(topo: &Topology, lft: &Lft) -> Option<String> {
+    channel_dependency_cycle(topo, lft)
+        .map(|c| format!("channel-dependency cycle: {}", c.describe(topo)))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -130,6 +130,22 @@ impl RerouteWorkspace {
         self.timings
     }
 
+    /// Discard all cross-call history, as if no reroute had ever run.
+    ///
+    /// The panic-containment path calls this after `catch_unwind`
+    /// traps a reroute mid-pipeline: `prep`/`costs`/`nids` may then
+    /// describe a half-built state, and `routed`/`armed`/`prev` would
+    /// let the next delta call diff against that poison. Dropping the
+    /// history forces the next call onto the full path
+    /// (`FallbackReason::NoHistory`), which rebuilds every product from
+    /// the topology alone. Buffers keep their capacity — reinit costs
+    /// no allocation and no correctness.
+    pub fn reinit(&mut self) {
+        self.routed = false;
+        self.armed = None;
+        self.prev.invalidate();
+    }
+
     /// Rebuild the degraded topology in place (`degrade::apply_into`
     /// semantics — bit-identical to `degrade::apply`), reusing the
     /// workspace's degradation scratch.

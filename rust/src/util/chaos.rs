@@ -1,0 +1,245 @@
+//! Deterministic, seeded fault injection for the fabric-manager
+//! recovery ladder (DESIGN.md §"Failure domains & recovery ladder").
+//!
+//! A [`ChaosPlan`] names a set of injection points with per-point firing
+//! rates (and optional budgets); a [`ChaosState`] turns the plan into a
+//! reproducible decision stream: the same seed and the same sequence of
+//! [`ChaosState::fire`] calls yield the same injected faults on every
+//! run, which is what lets `tests/service_chaos.rs` shrink failing
+//! schedules and replay CI soak seeds locally.
+//!
+//! Injection is compiled out of default release builds: [`ENABLED`] is a
+//! `const false` there, so every `if state.fire(..)` branch folds away
+//! and the hot paths stay byte-identical to a chaos-free build. Debug
+//! and test builds always carry the points; `--features chaos` opts a
+//! release build in (used by the CI `chaos-soak` job).
+
+use crate::util::rng::Rng;
+
+/// True when the injection points are compiled in. `const`, so release
+/// builds without `--features chaos` fold every chaos branch away.
+pub const ENABLED: bool = cfg!(any(test, debug_assertions, feature = "chaos"));
+
+/// Number of distinct injection points (array sizing for alloc-free state).
+const N_POINTS: usize = 4;
+
+/// A named fault-injection point in the fabric manager / service.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ChaosPoint {
+    /// Panic inside the engine's reroute call, after scribbling on the
+    /// candidate LFT — exercises `catch_unwind` containment plus the
+    /// workspace re-initialization path.
+    ReroutePanic = 0,
+    /// Corrupt one candidate LFT entry (`NO_ROUTE` into a live leaf row)
+    /// after the reroute succeeds — exercises the validate-before-publish
+    /// gate and last-good rollback.
+    ValidationCorrupt = 1,
+    /// Stall the reroute long enough to trip the watchdog deadline —
+    /// exercises the delta→full→quarantine escalation.
+    SlowReroute = 2,
+    /// Producer-side flood: the harness bursts events far faster than
+    /// the service window drains them — exercises the bounded queue's
+    /// back-pressure policy. Queried by producers, not the service loop.
+    QueueFlood = 3,
+}
+
+impl ChaosPoint {
+    /// Every injection point, for plan/report iteration.
+    pub const ALL: [ChaosPoint; N_POINTS] = [
+        ChaosPoint::ReroutePanic,
+        ChaosPoint::ValidationCorrupt,
+        ChaosPoint::SlowReroute,
+        ChaosPoint::QueueFlood,
+    ];
+
+    /// Stable snake_case name (report columns, CLI plan parsing).
+    pub fn name(self) -> &'static str {
+        match self {
+            ChaosPoint::ReroutePanic => "reroute_panic",
+            ChaosPoint::ValidationCorrupt => "validation_corrupt",
+            ChaosPoint::SlowReroute => "slow_reroute",
+            ChaosPoint::QueueFlood => "queue_flood",
+        }
+    }
+
+    fn idx(self) -> usize {
+        self as usize
+    }
+}
+
+/// A seeded fault-injection plan: per-point firing rates in `[0, 1]`,
+/// optional per-point budgets, and the stall length for
+/// [`ChaosPoint::SlowReroute`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChaosPlan {
+    /// Seed for the decision stream (independent of the event schedule's
+    /// seed so faults and schedules vary independently).
+    pub seed: u64,
+    /// How long a fired `SlowReroute` stalls, in milliseconds.
+    pub slow_ms: u64,
+    rates: [f64; N_POINTS],
+    budgets: [u64; N_POINTS],
+}
+
+impl Default for ChaosPlan {
+    fn default() -> Self {
+        ChaosPlan::new(0)
+    }
+}
+
+impl ChaosPlan {
+    /// Empty plan (no point ever fires) with the given seed.
+    pub fn new(seed: u64) -> Self {
+        ChaosPlan {
+            seed,
+            slow_ms: 50,
+            rates: [0.0; N_POINTS],
+            budgets: [u64::MAX; N_POINTS],
+        }
+    }
+
+    /// Arm `point` with firing probability `rate` (unlimited budget).
+    pub fn with(mut self, point: ChaosPoint, rate: f64) -> Self {
+        self.rates[point.idx()] = rate.clamp(0.0, 1.0);
+        self.budgets[point.idx()] = u64::MAX;
+        self
+    }
+
+    /// Arm `point` with firing probability `rate`, firing at most
+    /// `budget` times over the state's lifetime.
+    pub fn with_limited(mut self, point: ChaosPoint, rate: f64, budget: u64) -> Self {
+        self.rates[point.idx()] = rate.clamp(0.0, 1.0);
+        self.budgets[point.idx()] = budget;
+        self
+    }
+
+    /// The canonical soak plan: every recovery rung gets exercised, but
+    /// rarely enough that most batches still take the happy path.
+    pub fn storm(seed: u64) -> Self {
+        ChaosPlan::new(seed)
+            .with(ChaosPoint::ReroutePanic, 0.10)
+            .with(ChaosPoint::ValidationCorrupt, 0.10)
+            .with(ChaosPoint::SlowReroute, 0.05)
+            .with(ChaosPoint::QueueFlood, 0.15)
+    }
+
+    /// Firing rate currently configured for `point`.
+    pub fn rate(&self, point: ChaosPoint) -> f64 {
+        self.rates[point.idx()]
+    }
+
+    /// True when no point can ever fire.
+    pub fn is_empty(&self) -> bool {
+        self.rates.iter().all(|&r| r == 0.0)
+    }
+}
+
+/// Live decision stream for one [`ChaosPlan`]: owns the RNG and the
+/// remaining budgets. [`fire`](ChaosState::fire) never allocates, so it
+/// is safe to consult inside alloc-guard regions (the injected *faults*
+/// themselves — panics, sleeps — must still happen outside armed
+/// regions; see `FabricManager::compute_contained`).
+#[derive(Clone, Debug)]
+pub struct ChaosState {
+    plan: ChaosPlan,
+    rng: Rng,
+    remaining: [u64; N_POINTS],
+    fired: [u64; N_POINTS],
+}
+
+impl ChaosState {
+    pub fn new(plan: ChaosPlan) -> Self {
+        let rng = Rng::new(plan.seed ^ 0xC4A0_5C4A_05C4_A05C);
+        let remaining = plan.budgets;
+        ChaosState {
+            plan,
+            rng,
+            remaining,
+            fired: [0; N_POINTS],
+        }
+    }
+
+    /// Should `point` fire now? Deterministic in (seed, call sequence);
+    /// `const false` when chaos is compiled out. Points with rate 0 (or
+    /// an exhausted budget) do not consume randomness, so arming one
+    /// point leaves every other point's decision stream unchanged.
+    pub fn fire(&mut self, point: ChaosPoint) -> bool {
+        if !ENABLED {
+            return false;
+        }
+        let i = point.idx();
+        if self.plan.rates[i] <= 0.0 || self.remaining[i] == 0 {
+            return false;
+        }
+        if self.rng.next_f64() >= self.plan.rates[i] {
+            return false;
+        }
+        self.remaining[i] -= 1;
+        self.fired[i] += 1;
+        true
+    }
+
+    /// How many times `point` has fired so far.
+    pub fn fired(&self, point: ChaosPoint) -> u64 {
+        self.fired[point.idx()]
+    }
+
+    /// Total fired faults across all points.
+    pub fn total_fired(&self) -> u64 {
+        self.fired.iter().sum()
+    }
+
+    pub fn plan(&self) -> &ChaosPlan {
+        &self.plan
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_seed_same_decisions() {
+        let plan = ChaosPlan::storm(42);
+        let mut a = ChaosState::new(plan.clone());
+        let mut b = ChaosState::new(plan);
+        for _ in 0..500 {
+            for p in ChaosPoint::ALL {
+                assert_eq!(a.fire(p), b.fire(p));
+            }
+        }
+        assert!(a.total_fired() > 0, "storm plan should fire in 500 rounds");
+    }
+
+    #[test]
+    fn budget_caps_firing() {
+        let plan = ChaosPlan::new(7).with_limited(ChaosPoint::ReroutePanic, 1.0, 3);
+        let mut st = ChaosState::new(plan);
+        let fired: u64 = (0..100).map(|_| st.fire(ChaosPoint::ReroutePanic) as u64).sum();
+        assert_eq!(fired, 3);
+        assert_eq!(st.fired(ChaosPoint::ReroutePanic), 3);
+    }
+
+    #[test]
+    fn unarmed_points_never_fire_and_do_not_consume_randomness() {
+        let plan = ChaosPlan::new(9).with(ChaosPoint::SlowReroute, 1.0);
+        let mut with_noise = ChaosState::new(plan.clone());
+        let mut quiet = ChaosState::new(plan);
+        // Interleave draws on an unarmed point; armed point's stream
+        // must be unaffected.
+        for _ in 0..64 {
+            assert!(!with_noise.fire(ChaosPoint::QueueFlood));
+            assert_eq!(
+                with_noise.fire(ChaosPoint::SlowReroute),
+                quiet.fire(ChaosPoint::SlowReroute)
+            );
+        }
+    }
+
+    #[test]
+    fn empty_plan_is_empty() {
+        assert!(ChaosPlan::new(1).is_empty());
+        assert!(!ChaosPlan::storm(1).is_empty());
+        assert_eq!(ChaosPlan::storm(1).rate(ChaosPoint::ReroutePanic), 0.10);
+    }
+}

@@ -5,6 +5,7 @@
 //! tooling".
 
 pub mod alloc_guard;
+pub mod chaos;
 pub mod cli;
 pub mod par;
 pub mod prop;

@@ -1,0 +1,390 @@
+//! Differential chaos suite for the crash-safe fabric service
+//! (DESIGN.md §"Failure domains & recovery ladder").
+//!
+//! The recovery promise: under seeded fault injection — reroute panics,
+//! corrupted candidates, stalls — the gated manager either applies a
+//! batch exactly or quarantines it exactly. No reader ever observes an
+//! invalid or torn epoch, no event is silently dropped (every one is
+//! applied, quarantined-and-reported, or shed-with-an-error), and the
+//! post-recovery tables are **byte-identical** to a clean manager fed
+//! only the surviving events. Enforced here by:
+//!
+//! * a property fuzz over random PGFT shapes × random schedules × random
+//!   batch partitions × seeded [`ChaosPlan`]s (shared `tests/common`
+//!   generator + the in-tree shrinking runner), both divider reductions,
+//!   swept at 1 and 8 worker threads;
+//! * an end-to-end chaos storm through [`FabricService`] with concurrent
+//!   readers: checksum-clean, epoch-monotonic snapshots throughout, and
+//!   the quarantine-aware differential rebuilt from the in-order report
+//!   stream;
+//! * a back-pressure integration test: a RejectNewest queue under a
+//!   stalled manager sheds with typed errors, and the survivors converge
+//!   exactly. (The per-policy unit suite lives in `fabric::service`.)
+//!
+//! Tests that sweep the global worker-count override serialize on one
+//! mutex (same discipline as `tests/equivalence.rs`).
+
+use dmodc::fabric::events::random_schedule;
+use dmodc::fabric::{
+    Event, FabricError, FabricManager, FabricService, ManagerConfig, QueuePolicy, ServiceConfig,
+};
+use dmodc::prelude::*;
+use dmodc::routing::common::DividerReduction;
+use dmodc::routing::dmodc::{Engine as DmodcEngine, NidOrder, Options};
+use dmodc::util::chaos::{ChaosPlan, ChaosPoint};
+use dmodc::util::par;
+use dmodc::util::prop::{check, Check, Config};
+use dmodc::util::sync::atomic::{AtomicBool, Ordering};
+use dmodc::util::sync::{thread::spawn_named, Arc};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+mod common;
+use common::gen_pgft;
+
+/// Serializes tests that override the global worker count.
+fn lock() -> MutexGuard<'static, ()> {
+    static M: OnceLock<Mutex<()>> = OnceLock::new();
+    M.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+}
+
+fn engine(reduction: DividerReduction) -> Box<DmodcEngine> {
+    Box::new(DmodcEngine::new(Options {
+        reduction,
+        nid_order: NidOrder::Topological,
+    }))
+}
+
+/// A chaos scenario: a topology shape, seeds driving the schedule, the
+/// batch partition, and the fault-injection plan.
+#[derive(Clone, Debug)]
+struct Scenario {
+    params: PgftParams,
+    seed: u64,
+    split_seed: u64,
+    chaos_seed: u64,
+    n_events: usize,
+}
+
+fn gen_scenario(rng: &mut Rng, size: f64) -> Scenario {
+    Scenario {
+        params: gen_pgft(rng, size),
+        seed: rng.next_u64(),
+        split_seed: rng.next_u64(),
+        chaos_seed: rng.next_u64(),
+        n_events: 2 + rng.gen_range(10),
+    }
+}
+
+fn shrink_scenario(s: &Scenario) -> Vec<Scenario> {
+    let mut out = Vec::new();
+    if s.n_events > 1 {
+        out.push(Scenario {
+            n_events: s.n_events - 1,
+            ..s.clone()
+        });
+    }
+    out
+}
+
+/// The fuzz plan arms only the time-independent points — panics and
+/// candidate corruption fire on seeded coin flips; the stall point and
+/// the watchdog stay off so the pass/fail decision never depends on
+/// scheduler timing.
+fn fuzz_plan(seed: u64) -> ChaosPlan {
+    ChaosPlan::new(seed)
+        .with(ChaosPoint::ReroutePanic, 0.15)
+        .with(ChaosPoint::ValidationCorrupt, 0.25)
+}
+
+/// Drive a gated, chaos-armed manager through random batch partitions;
+/// rebuild a clean ungated manager from the surviving (non-quarantined)
+/// events only. Tables, epochs, and accounting must agree.
+fn run_scenario(s: &Scenario, reduction: DividerReduction) -> Result<(), String> {
+    let base = s.params.build();
+    let mut rng = Rng::new(s.seed);
+    let schedule = random_schedule(&base, &mut rng, s.n_events, 1, 5);
+    let cfg = ManagerConfig {
+        gate: true,
+        chaos: Some(fuzz_plan(s.chaos_seed)),
+        ..Default::default()
+    };
+    let mut mgr = FabricManager::with_engine(base.clone(), cfg, engine(reduction));
+    let reader = mgr.reader();
+    let mut last_epoch = reader.epoch();
+    let mut split = Rng::new(s.split_seed);
+    let mut survivors: Vec<Event> = Vec::new();
+    let mut quarantined_events = 0usize;
+    let mut i = 0usize;
+    while i < schedule.len() {
+        let k = (1 + split.gen_range(5)).min(schedule.len() - i);
+        let batch = &schedule[i..i + k];
+        match mgr.try_apply_batch(batch) {
+            Ok(r) => {
+                if !r.valid {
+                    return Err(format!(
+                        "{reduction:?}: the gate published an invalid reaction"
+                    ));
+                }
+                if r.epoch <= last_epoch {
+                    return Err(format!(
+                        "{reduction:?}: applied batch did not advance the epoch \
+                         ({} after {last_epoch})",
+                        r.epoch
+                    ));
+                }
+                last_epoch = r.epoch;
+                survivors.extend_from_slice(batch);
+            }
+            Err(q) => {
+                // Quarantines must report exactly the batch they refused
+                // and leave the published epoch alone.
+                if q.events != batch {
+                    return Err(format!(
+                        "{reduction:?}: quarantine reported {} events for a {k}-event \
+                         batch",
+                        q.events.len()
+                    ));
+                }
+                if reader.epoch() != last_epoch {
+                    return Err(format!(
+                        "{reduction:?}: a quarantined batch moved the published epoch"
+                    ));
+                }
+                quarantined_events += k;
+            }
+        }
+        // Readers must find a complete, checksum-clean epoch after every
+        // outcome, applied or quarantined.
+        reader
+            .tables()
+            .verify()
+            .map_err(|e| format!("{reduction:?}: torn epoch after batch: {e}"))?;
+        i += k;
+    }
+    if survivors.len() + quarantined_events != schedule.len() {
+        return Err(format!(
+            "{reduction:?}: accounting hole — {} survivors + {} quarantined != {} sent",
+            survivors.len(),
+            quarantined_events,
+            schedule.len()
+        ));
+    }
+    // The differential: a clean manager fed only the survivors.
+    let mut clean =
+        FabricManager::with_engine(base, ManagerConfig::default(), engine(reduction));
+    for e in &survivors {
+        clean.apply(e);
+    }
+    if mgr.current().1.raw() != clean.current().1.raw() {
+        let diff = mgr
+            .current()
+            .1
+            .raw()
+            .iter()
+            .zip(clean.current().1.raw())
+            .filter(|(a, b)| a != b)
+            .count();
+        return Err(format!(
+            "{reduction:?}: post-recovery tables diverged from the clean replay \
+             in {diff} entries ({} survivors, {quarantined_events} quarantined, \
+             {} panics contained, {} rollbacks)",
+            survivors.len(),
+            mgr.metrics.panics_contained,
+            mgr.metrics.rollbacks
+        ));
+    }
+    // The published epoch carries exactly the recovered tables.
+    let ep = reader.tables();
+    ep.verify()
+        .map_err(|e| format!("{reduction:?}: final epoch failed verification: {e}"))?;
+    let (topo, lft) = mgr.current();
+    let n = lft.num_nodes();
+    for sidx in 0..topo.switches.len() {
+        if ep.row(sidx) != &lft.raw()[sidx * n..(sidx + 1) * n] {
+            return Err(format!(
+                "{reduction:?}: published epoch row {sidx} differs from recovered tables"
+            ));
+        }
+    }
+    Ok(())
+}
+
+fn fuzz_at(threads: usize) {
+    let _g = lock();
+    par::set_threads(Some(threads));
+    for reduction in [DividerReduction::Max, DividerReduction::FirstPath] {
+        check(
+            &format!("chaos-recovery-differential-{reduction:?}-t{threads}"),
+            Config::default(),
+            gen_scenario,
+            shrink_scenario,
+            |s| match run_scenario(s, reduction) {
+                Ok(()) => Check::Pass,
+                Err(msg) => Check::Fail(msg),
+            },
+        );
+    }
+    par::set_threads(None);
+}
+
+#[test]
+fn chaos_fuzz_recovery_differential_single_thread() {
+    fuzz_at(1);
+}
+
+#[test]
+fn chaos_fuzz_recovery_differential_eight_threads() {
+    fuzz_at(8);
+}
+
+#[test]
+fn chaos_storm_through_the_service_is_torn_free_and_exact() {
+    // End-to-end: the threaded service under seeded chaos with readers
+    // racing every publication. The quarantine-aware differential is
+    // rebuilt from the in-order report stream — under the Block policy
+    // events are consumed strictly in send order, so report event counts
+    // partition the schedule into contiguous batches.
+    let t = PgftParams::small().build();
+    let mut rng = Rng::new(0xC405);
+    let schedule = random_schedule(&t, &mut rng, 40, 1, 9);
+    let mut plan = fuzz_plan(0xC405_0001).with(ChaosPoint::SlowReroute, 0.1);
+    plan.slow_ms = 5; // stalls exercise the path without slowing the test
+    let svc = FabricService::spawn(
+        t.clone(),
+        ServiceConfig {
+            manager: ManagerConfig {
+                gate: true,
+                chaos: Some(plan),
+                ..Default::default()
+            },
+            window_ms: 5,
+            ..Default::default()
+        },
+    )
+    .expect("spawn service");
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut readers = Vec::new();
+    for r in 0..4 {
+        let reader = svc.reader();
+        let stop = Arc::clone(&stop);
+        readers.push(
+            spawn_named(&format!("chaos-reader-{r}"), move || {
+                let mut last = 0u64;
+                let mut reads = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    let ep = reader.tables();
+                    ep.verify().expect("reader observed a torn epoch");
+                    assert!(
+                        ep.epoch() >= last,
+                        "epoch went backwards: {} < {last}",
+                        ep.epoch()
+                    );
+                    last = ep.epoch();
+                    reads += 1;
+                    std::thread::yield_now();
+                }
+                reads
+            })
+            .expect("spawn reader"),
+        );
+    }
+    let sender = svc.sender();
+    for e in &schedule {
+        sender.send(e.clone()).unwrap();
+    }
+    drop(sender);
+    // Reconstruct each batch's slice of the schedule from the report
+    // stream; quarantined batches drop out of the survivor replay.
+    let mut survivors: Vec<Event> = Vec::new();
+    let mut consumed = 0usize;
+    let mut quarantined_batches = 0u64;
+    for br in svc.reports().iter() {
+        let batch = &schedule[consumed..consumed + br.events];
+        consumed += br.events;
+        if br.quarantined.is_some() {
+            quarantined_batches += 1;
+        } else {
+            assert!(br.report.valid, "applied batches must be valid");
+            survivors.extend_from_slice(batch);
+        }
+    }
+    let (mgr, stats) = svc.shutdown();
+    stop.store(true, Ordering::Relaxed);
+    for h in readers {
+        h.join().expect("reader panicked");
+    }
+    assert_eq!(consumed, schedule.len(), "no event may vanish silently");
+    assert_eq!(stats.events, schedule.len() as u64);
+    assert_eq!(stats.quarantined_batches, quarantined_batches);
+    assert_eq!(stats.events_shed, 0, "the Block policy never sheds");
+    let mut clean = FabricManager::new(t, ManagerConfig::default());
+    for e in &survivors {
+        clean.apply(e);
+    }
+    assert_eq!(
+        mgr.current().1.raw(),
+        clean.current().1.raw(),
+        "post-storm tables must equal a clean replay of the survivors \
+         ({} survivors, {} quarantined batches, {} panics contained)",
+        survivors.len(),
+        quarantined_batches,
+        mgr.metrics.panics_contained
+    );
+}
+
+#[test]
+fn reject_newest_under_a_stalled_manager_sheds_typed_and_converges() {
+    // A tiny queue in front of a manager stalled by injected slowdowns:
+    // the producer learns exactly which events were shed (typed
+    // QueueFull errors) and the service converges on a clean replay of
+    // the accepted events only.
+    let t = PgftParams::small().build();
+    let mut rng = Rng::new(0xFA11);
+    let schedule = random_schedule(&t, &mut rng, 30, 1, 7);
+    let mut plan = ChaosPlan::new(0xFA11_0001).with(ChaosPoint::SlowReroute, 1.0);
+    plan.slow_ms = 10;
+    let svc = FabricService::spawn(
+        t.clone(),
+        ServiceConfig {
+            manager: ManagerConfig {
+                gate: true,
+                chaos: Some(plan),
+                ..Default::default()
+            },
+            window_ms: 0,
+            queue_cap: 1,
+            policy: QueuePolicy::RejectNewest,
+            ..Default::default()
+        },
+    )
+    .expect("spawn service");
+    let sender = svc.sender();
+    let mut accepted: Vec<Event> = Vec::new();
+    let mut shed = 0u64;
+    for e in &schedule {
+        match sender.send(e.clone()) {
+            Ok(()) => accepted.push(e.clone()),
+            Err(FabricError::QueueFull { capacity }) => {
+                assert_eq!(capacity, 1);
+                shed += 1;
+            }
+            Err(other) => panic!("unexpected send error: {other}"),
+        }
+    }
+    drop(sender);
+    let (mgr, stats) = svc.shutdown();
+    assert_eq!(stats.events, accepted.len() as u64, "every accepted event consumed");
+    assert_eq!(stats.events_shed, shed, "queue and producer agree on the shed count");
+    assert_eq!(accepted.len() as u64 + shed, schedule.len() as u64);
+    let mut clean = FabricManager::new(t, ManagerConfig::default());
+    for e in &accepted {
+        clean.apply(e);
+    }
+    assert_eq!(
+        mgr.current().1.raw(),
+        clean.current().1.raw(),
+        "the service must converge on the accepted events exactly"
+    );
+}
