@@ -14,7 +14,16 @@
 //! sustained events/s, coalesce ratio, and the p50/p99 of the true
 //! event→publication reaction latency (queue wait + window + reroute),
 //! one sample per event. With `BENCH_SERVICE_OUT=path` the same numbers
-//! are written as JSON (schema `bench_service/v2`) for the CI soak.
+//! are written as JSON (schema `bench_service/v3`) for the CI soak.
+//!
+//! `--journal <dir>` makes the run durable: every applied batch is an
+//! fsynced journal record and the run ends with an in-process recovery
+//! differential (re-open the journal into a second manager, require
+//! byte-identical reconvergence). `--kill-every <n>` turns the harness
+//! into a crash loop: it `abort()`s after `n` applied events; rerunning
+//! the same command line warm-restarts from the journal and produces
+//! the remainder of the (deterministic) schedule, until an unkilled run
+//! exits 0 (EXPERIMENTS.md §"Crash recovery").
 //!
 //! `--chaos <seed>` arms the deterministic fault-injection plan
 //! ([`ChaosPlan::storm`]) inside the manager: injected reroute panics,
@@ -26,9 +35,11 @@
 //!
 //!     cargo run --release --example fault_storm -- [--full | --preset huge]
 //!     cargo run --release --features chaos --example fault_storm -- --chaos 1
+//!     cargo run --release --example fault_storm -- --journal /tmp/storm-j --kill-every 16
 
 use dmodc::fabric::{
-    events, FabricError, FabricManager, FabricService, ManagerConfig, QueuePolicy, ServiceConfig,
+    events, FabricError, FabricManager, FabricService, JournalConfig, ManagerConfig, QueuePolicy,
+    ServiceConfig,
 };
 use dmodc::util::chaos::{self, ChaosPlan};
 use dmodc::prelude::*;
@@ -62,10 +73,24 @@ fn main() {
         .flag("policy", "block", "full-queue policy (block|coalesce|reject)")
         .flag("watchdog-ms", "0", "reroute watchdog deadline (0 = off)")
         .flag("chaos", "0", "chaos-plan seed (0 = off; needs chaos-enabled build)")
+        .flag(
+            "journal",
+            "",
+            "durable-state directory; empty dir = cold start, else warm restart",
+        )
+        .flag(
+            "kill-every",
+            "0",
+            "with --journal: abort() after this many applied events (0 = run to completion); \
+             rerun the same command line until it exits 0",
+        )
         .parse();
     let preset = p.get("preset");
     let (name, params) = if !preset.is_empty() {
-        let prm = PgftParams::preset(preset).unwrap_or_else(|e| panic!("bad --preset: {e}"));
+        let prm = PgftParams::preset(preset).unwrap_or_else(|e| {
+            eprintln!("bad --preset: {e}");
+            std::process::exit(2);
+        });
         (preset.to_string(), prm)
     } else if p.get_bool("full") {
         ("paper_8640".to_string(), PgftParams::paper_8640())
@@ -97,6 +122,12 @@ fn main() {
         );
     }
     let policy: QueuePolicy = p.get_parsed("policy");
+    let journal_dir = p.get("journal").to_string();
+    let kill_every = p.get_u64("kill-every") as usize;
+    if kill_every > 0 && journal_dir.is_empty() {
+        eprintln!("--kill-every needs --journal (nothing survives an abort without one)");
+        std::process::exit(2);
+    }
     let cfg = ServiceConfig {
         manager: ManagerConfig {
             algo,
@@ -111,20 +142,44 @@ fn main() {
         max_batch: p.get_usize("max-batch"),
         queue_cap: p.get_usize("queue-cap"),
         policy,
+        journal: (!journal_dir.is_empty()).then(|| JournalConfig::new(&journal_dir)),
     };
     println!(
         "engine: {algo}  window: {}ms  max_batch: {}  rate: {rate}/s  readers: {n_readers}  \
-         queue_cap: {}  policy: {}  watchdog: {}ms  chaos: {chaos_seed}",
+         queue_cap: {}  policy: {}  watchdog: {}ms  chaos: {chaos_seed}  journal: {}",
         cfg.window_ms,
         cfg.max_batch,
         cfg.queue_cap,
         policy.name(),
-        cfg.manager.watchdog_ms
+        cfg.manager.watchdog_ms,
+        if journal_dir.is_empty() { "off" } else { &journal_dir }
     );
     let nodes = topo.nodes.len();
     let switches = topo.switches.len();
-    let mgr = FabricManager::new(topo, cfg.manager.clone());
-    let svc = FabricService::spawn_with(mgr, cfg.clone()).expect("spawn service");
+    // Keep a reference copy for the post-run recovery differential.
+    let reference = (!journal_dir.is_empty()).then(|| topo.clone());
+    let svc = if journal_dir.is_empty() {
+        let mgr = FabricManager::new(topo, cfg.manager.clone());
+        FabricService::spawn_with(mgr, cfg.clone()).unwrap_or_else(|e| {
+            eprintln!("could not start the fabric service: {e}");
+            std::process::exit(1);
+        })
+    } else {
+        // With a journal, always go through resume: an empty directory
+        // is a cold start, recoverable state is a warm restart — the
+        // kill/resume loop reruns one command line until it exits 0.
+        FabricService::resume(topo, cfg.clone()).unwrap_or_else(|e| {
+            eprintln!("could not resume the fabric service: {e}");
+            std::process::exit(1);
+        })
+    };
+    let start = (svc.events_recovered() as usize).min(schedule.len());
+    if start > 0 {
+        println!(
+            "warm restart: {start}/{} events already applied, producing the rest",
+            schedule.len()
+        );
+    }
 
     // Reader fleet: random route lookups against whatever epoch is
     // current, a full checksum verification every 256 reads, per-thread
@@ -173,7 +228,13 @@ fn main() {
     let t0 = time::now();
     let mut next_send = t0;
     let mut shed = 0usize;
-    for e in &schedule {
+    let mut produced = 0usize;
+    let mut killing = false;
+    for e in &schedule[start..] {
+        if kill_every > 0 && produced >= kill_every && start + produced < schedule.len() {
+            killing = true;
+            break;
+        }
         if !gap.is_zero() {
             let now = time::now();
             let wait = next_send.saturating_duration_since(now);
@@ -188,9 +249,13 @@ fn main() {
         if let Err(err) = sender.send(e.clone()) {
             match err {
                 FabricError::QueueFull { .. } => shed += 1,
-                other => panic!("service hung up early: {other}"),
+                other => {
+                    eprintln!("fabric service stopped while the storm was still feeding: {other}");
+                    std::process::exit(1);
+                }
             }
         }
+        produced += 1;
     }
     drop(sender);
 
@@ -204,8 +269,17 @@ fn main() {
     let mut invalid = 0usize;
     let mut quarantined = 0usize;
     let mut elided = 0usize;
-    while seen + shed < schedule.len() {
-        let br = svc.reports().recv().expect("service died mid-storm");
+    while seen + shed < produced {
+        let br = match svc.reports().recv() {
+            Ok(br) => br,
+            Err(_) => {
+                eprintln!(
+                    "fabric service stopped before the storm drained \
+                     ({seen}/{produced} events reported, {shed} shed)"
+                );
+                std::process::exit(1);
+            }
+        };
         seen += br.events;
         // Quarantined batches carry a synthesized post-rollback report;
         // only an *applied* invalid reaction is a harness failure.
@@ -231,6 +305,17 @@ fn main() {
             elided += 1;
         }
     }
+    if killing {
+        // Kill point: every journaled batch is fsynced (its report came
+        // back), no clean shutdown follows — the closest in-process
+        // stand-in for `kill -9`. The rerun resumes from the journal.
+        eprintln!(
+            "kill point: aborting after {} applied events ({} total on the schedule)",
+            start + produced,
+            schedule.len()
+        );
+        std::process::abort();
+    }
     let storm_s = time::now().saturating_duration_since(t0).as_secs_f64();
     let (mgr, stats) = svc.shutdown();
     stop.store(true, Ordering::Relaxed);
@@ -239,6 +324,41 @@ fn main() {
         reader_reads += h.join().expect("reader panicked");
     }
     let torn = torn.load(Ordering::Relaxed);
+
+    // Recovery differential: re-open the journal into a second manager
+    // and require byte-identical reconvergence with the live run. The
+    // epoch/LFT/dead-set comparison is quarantine-invariant (quarantined
+    // batches neither publish nor journal); events_seen only matches
+    // when nothing was quarantined.
+    let mut recovery_diverged = false;
+    if let Some(reference) = reference {
+        match FabricManager::resume_from_dir(
+            reference,
+            cfg.manager.clone(),
+            JournalConfig::new(&journal_dir),
+        ) {
+            Ok((mgr2, _journal, info)) => {
+                let identical = mgr2.current().1.raw() == mgr.current().1.raw()
+                    && mgr2.dead_equipment() == mgr.dead_equipment()
+                    && mgr2.reader().tables().epoch() == mgr.reader().tables().epoch()
+                    && (quarantined > 0 || mgr2.events_seen() == mgr.events_seen());
+                recovery_diverged = !identical;
+                println!(
+                    "recovery differential: {} (replayed {} events over {} snapshot state, \
+                     {} truncated tails, {:.2}ms)",
+                    if identical { "identical" } else { "DIVERGED" },
+                    info.replayed_events,
+                    if info.cold_start { "no" } else { "a" },
+                    info.tail_truncations,
+                    info.resume_ms
+                );
+            }
+            Err(e) => {
+                recovery_diverged = true;
+                eprintln!("recovery differential: resume failed: {e}");
+            }
+        }
+    }
 
     print!("{}", tab.render());
     if elided > 0 {
@@ -312,7 +432,7 @@ fn main() {
         let json = format!(
             concat!(
                 "{{\n",
-                "  \"schema\": \"bench_service/v2\",\n",
+                "  \"schema\": \"bench_service/v3\",\n",
                 "  \"status\": \"ok\",\n",
                 "  \"preset\": \"{name}\",\n",
                 "  \"topology\": \"PGFT({spec})\",\n",
@@ -353,7 +473,15 @@ fn main() {
                 "  \"reader_reads\": {reads},\n",
                 "  \"reader_reads_per_s\": {rps:.0},\n",
                 "  \"torn_reads\": {torn},\n",
-                "  \"invalid_reactions\": {invalid}\n",
+                "  \"invalid_reactions\": {invalid},\n",
+                "  \"journal_appends\": {j_appends},\n",
+                "  \"journal_bytes\": {j_bytes},\n",
+                "  \"snapshots_written\": {snaps},\n",
+                "  \"snapshot_bytes\": {snap_bytes},\n",
+                "  \"compactions\": {compactions},\n",
+                "  \"resume_ms\": {resume_ms:.4},\n",
+                "  \"replayed_events\": {replayed},\n",
+                "  \"tail_truncations\": {truncations}\n",
                 "}}\n"
             ),
             name = name,
@@ -396,13 +524,27 @@ fn main() {
             rps = reads_per_s,
             torn = torn,
             invalid = invalid,
+            j_appends = stats.journal_appends,
+            j_bytes = stats.journal_bytes,
+            snaps = stats.snapshots_written,
+            snap_bytes = stats.snapshot_bytes,
+            compactions = stats.compactions,
+            resume_ms = stats.resume_ms,
+            replayed = stats.resume_replayed,
+            truncations = stats.tail_truncations,
         );
-        std::fs::write(&out_path, &json).expect("write BENCH_service.json");
+        if let Err(e) = std::fs::write(&out_path, &json) {
+            eprintln!("could not write bench JSON {out_path}: {e}");
+            std::process::exit(1);
+        }
         println!("→ {out_path}");
     }
 
-    if torn > 0 || invalid > 0 {
-        eprintln!("FAIL: torn epochs {torn}, invalid reactions {invalid}");
+    if torn > 0 || invalid > 0 || recovery_diverged {
+        eprintln!(
+            "FAIL: torn epochs {torn}, invalid reactions {invalid}, recovery diverged: \
+             {recovery_diverged}"
+        );
         std::process::exit(1);
     }
 }

@@ -5,6 +5,7 @@
 //! shutdown) are typed errors; conditions only a bug can produce stay as
 //! panics whose message names the violated invariant.
 
+use super::journal::JournalError;
 use std::fmt;
 
 /// An error surfaced to fabric-service callers (producers).
@@ -20,6 +21,13 @@ pub enum FabricError {
     /// The service loop has exited (shutdown or crash); no further
     /// events can be delivered.
     ServiceStopped,
+    /// Durable-state failure: the journal directory could not be
+    /// created/read/recovered, or its contents belong to a different
+    /// fabric. Carries the typed journal error with the offending path.
+    Journal(JournalError),
+    /// The OS refused to start the service thread (resource exhaustion)
+    /// — operational, not a programmer error.
+    Spawn(String),
 }
 
 impl fmt::Display for FabricError {
@@ -29,8 +37,18 @@ impl fmt::Display for FabricError {
                 write!(f, "event queue full (capacity {capacity}); event shed by RejectNewest policy")
             }
             FabricError::ServiceStopped => write!(f, "fabric service has stopped"),
+            FabricError::Journal(e) => write!(f, "{e}"),
+            FabricError::Spawn(detail) => {
+                write!(f, "could not start the fabric service thread: {detail}")
+            }
         }
     }
 }
 
 impl std::error::Error for FabricError {}
+
+impl From<JournalError> for FabricError {
+    fn from(e: JournalError) -> Self {
+        FabricError::Journal(e)
+    }
+}

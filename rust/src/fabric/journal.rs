@@ -1,0 +1,1133 @@
+//! Crash-consistent durability for the fabric service: a write-ahead
+//! event journal plus checksummed snapshots, so a manager process can
+//! die at any instant and warm-restart into byte-identical state
+//! (DESIGN.md §"Durability & warm restart").
+//!
+//! **What is journaled**: one record per *gate-passed batch* — the
+//! append happens after the validate-before-publish gate accepts the
+//! batch and before [`commit_and_publish`] runs, so quarantined batches
+//! never reach the disk and a replay reproduces exactly the sequence of
+//! publications the live run made (same epochs, same counters). Because
+//! a reroute is a pure function of (reference topology, dead sets),
+//! replaying the journaled batches reconverges on LFT bytes identical
+//! to the uncrashed run — the journal persists *inputs*, never tables.
+//!
+//! **Record format** (all integers little-endian): a segment file
+//! `journal-<base_seq>.log` opens with a 24-byte header — magic
+//! `DMODCJL1`, the reference topology's
+//! [`fingerprint`](crate::topology::Topology::fingerprint), and the
+//! sequence number of its first record — followed by records
+//! `[u32 len][u32 crc32(payload)][payload]` where the payload is the
+//! batch sequence number, the event count, and the encoded events.
+//! Every append is flushed and fsynced before the batch commits: a
+//! record the manager acted on is durable, and a crash mid-write leaves
+//! at most one torn record at the tail, which recovery detects (length
+//! underrun, CRC mismatch, or sequence skew) and truncates instead of
+//! failing. The segment rotates past [`JournalConfig::segment_bytes`],
+//! and *always* rotates after an append error, so a damaged record is
+//! provably the last thing in its file.
+//!
+//! **Snapshots** `snapshot-<batches_applied>.snap` capture the published
+//! [`FabricEpoch`] (rows and their FNV sums verbatim — `verify()` on
+//! load genuinely cross-checks bytes against sums), the dead sets by
+//! stable hardware id, and the equipment counters, CRC-trailed and
+//! written temp-file → fsync → rename → directory fsync. The newest
+//! [`JournalConfig::keep_snapshots`] are retained; compaction then
+//! deletes every journal segment whose records are all older than the
+//! newest durable snapshot.
+//!
+//! **Recovery** ([`load`]): pick the newest snapshot that passes its CRC
+//! and fingerprint check, scan the segments in base-sequence order for
+//! the tail of batches at or past the snapshot, truncate any torn tail
+//! in place, and hand back an append-ready [`Journal`]. The fabric
+//! layer ([`FabricManager::resume`], [`FabricService::resume`]) then
+//! replays the tail through the gated apply path.
+//!
+//! [`commit_and_publish`]: crate::fabric::FabricManager
+//! [`FabricManager::resume`]: crate::fabric::FabricManager::resume
+//! [`FabricService::resume`]: crate::fabric::FabricService::resume
+
+use super::events::{CableId, Event, EventKind};
+use super::lft_store::FabricEpoch;
+use crate::util::sync::Arc;
+use std::fmt;
+use std::fs::{self, File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+/// Segment-file header magic ("DMODC JournaL v1").
+const MAGIC_SEGMENT: &[u8; 8] = b"DMODCJL1";
+/// Snapshot-file header magic.
+const MAGIC_SNAPSHOT: &[u8; 8] = b"DMODCSN1";
+/// Segment header: magic + reference fingerprint + base sequence.
+const SEGMENT_HEADER_LEN: u64 = 8 + 8 + 8;
+/// Hard ceiling on one record's payload — a length prefix beyond this
+/// is treated as tail corruption, not an allocation request.
+const MAX_RECORD_LEN: u32 = 64 << 20;
+
+// ---------------------------------------------------------------------
+// CRC-32 (IEEE 802.3, reflected): the same polynomial/conventions as
+// zlib's `crc32`, so the independent Python replay simulation
+// (`python/tests/test_journal_sim.py`) can pin the exact byte format
+// with the stdlib. Table-driven, built once at first use.
+// ---------------------------------------------------------------------
+
+fn crc32_table() -> &'static [u32; 256] {
+    use std::sync::OnceLock;
+    static TABLE: OnceLock<[u32; 256]> = OnceLock::new();
+    TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, e) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *e = c;
+        }
+        t
+    })
+}
+
+/// IEEE CRC-32 over `bytes` (identical to Python's `zlib.crc32`).
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let t = crc32_table();
+    let mut c = !0u32;
+    for &b in bytes {
+        c = t[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+// ---------------------------------------------------------------------
+// Errors
+// ---------------------------------------------------------------------
+
+/// A typed journal failure. Every variant carries the offending path
+/// (or a self-describing detail) — the PR-10 hardening contract: file
+/// errors must name the file.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum JournalError {
+    /// An OS-level I/O failure; `op` names the operation that failed.
+    Io {
+        path: String,
+        op: &'static str,
+        detail: String,
+    },
+    /// A file whose contents cannot be parsed (bad magic, truncated
+    /// header, impossible lengths) in a position where tail-truncation
+    /// is not a safe answer.
+    Corrupt { path: String, detail: String },
+    /// Structurally valid state that belongs to a different fabric or
+    /// contradicts the reference topology (fingerprint mismatch,
+    /// unknown equipment ids, sequence gaps past a compaction).
+    Mismatch { detail: String },
+}
+
+impl fmt::Display for JournalError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            JournalError::Io { path, op, detail } => {
+                write!(f, "journal I/O error: {op} {path}: {detail}")
+            }
+            JournalError::Corrupt { path, detail } => {
+                write!(f, "journal corrupt: {path}: {detail}")
+            }
+            JournalError::Mismatch { detail } => write!(f, "journal mismatch: {detail}"),
+        }
+    }
+}
+
+impl std::error::Error for JournalError {}
+
+fn io_err(path: &Path, op: &'static str, e: std::io::Error) -> JournalError {
+    JournalError::Io {
+        path: path.display().to_string(),
+        op,
+        detail: e.to_string(),
+    }
+}
+
+fn corrupt(path: &Path, detail: impl Into<String>) -> JournalError {
+    JournalError::Corrupt {
+        path: path.display().to_string(),
+        detail: detail.into(),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Event wire format
+// ---------------------------------------------------------------------
+
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Cursor-style reader over a decoded payload; every getter fails soft
+/// (recovery treats a short payload as tail corruption).
+struct Cur<'a> {
+    b: &'a [u8],
+    at: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn new(b: &'a [u8]) -> Self {
+        Self { b, at: 0 }
+    }
+    fn take(&mut self, n: usize) -> Option<&'a [u8]> {
+        let s = self.b.get(self.at..self.at + n)?;
+        self.at += n;
+        Some(s)
+    }
+    fn u16(&mut self) -> Option<u16> {
+        Some(u16::from_le_bytes(self.take(2)?.try_into().ok()?))
+    }
+    fn u32(&mut self) -> Option<u32> {
+        Some(u32::from_le_bytes(self.take(4)?.try_into().ok()?))
+    }
+    fn u64(&mut self) -> Option<u64> {
+        Some(u64::from_le_bytes(self.take(8)?.try_into().ok()?))
+    }
+    fn done(&self) -> bool {
+        self.at == self.b.len()
+    }
+}
+
+fn encode_event(out: &mut Vec<u8>, e: &Event) {
+    put_u64(out, e.at_ms);
+    match &e.kind {
+        EventKind::SwitchDown(u) => {
+            out.push(0);
+            put_u64(out, *u);
+        }
+        EventKind::SwitchUp(u) => {
+            out.push(1);
+            put_u64(out, *u);
+        }
+        EventKind::LinkDown(c) => {
+            out.push(2);
+            put_u64(out, c.a);
+            put_u64(out, c.b);
+            put_u16(out, c.ordinal);
+        }
+        EventKind::LinkUp(c) => {
+            out.push(3);
+            put_u64(out, c.a);
+            put_u64(out, c.b);
+            put_u16(out, c.ordinal);
+        }
+        EventKind::IsletDown(us) => {
+            out.push(4);
+            put_u32(out, us.len() as u32);
+            for u in us {
+                put_u64(out, *u);
+            }
+        }
+        EventKind::IsletUp(us) => {
+            out.push(5);
+            put_u32(out, us.len() as u32);
+            for u in us {
+                put_u64(out, *u);
+            }
+        }
+    }
+}
+
+fn decode_event(c: &mut Cur) -> Option<Event> {
+    let at_ms = c.u64()?;
+    let tag = *c.take(1)?.first()?;
+    let kind = match tag {
+        0 => EventKind::SwitchDown(c.u64()?),
+        1 => EventKind::SwitchUp(c.u64()?),
+        2 | 3 => {
+            let id = CableId {
+                a: c.u64()?,
+                b: c.u64()?,
+                ordinal: c.u16()?,
+            };
+            if tag == 2 {
+                EventKind::LinkDown(id)
+            } else {
+                EventKind::LinkUp(id)
+            }
+        }
+        4 | 5 => {
+            let n = c.u32()? as usize;
+            if n > MAX_RECORD_LEN as usize / 8 {
+                return None;
+            }
+            let mut us = Vec::with_capacity(n);
+            for _ in 0..n {
+                us.push(c.u64()?);
+            }
+            if tag == 4 {
+                EventKind::IsletDown(us)
+            } else {
+                EventKind::IsletUp(us)
+            }
+        }
+        _ => return None,
+    };
+    Some(Event { at_ms, kind })
+}
+
+fn encode_batch(seq: u64, events: &[Event]) -> Vec<u8> {
+    let mut p = Vec::with_capacity(16 + events.len() * 32);
+    put_u64(&mut p, seq);
+    put_u32(&mut p, events.len() as u32);
+    for e in events {
+        encode_event(&mut p, e);
+    }
+    p
+}
+
+fn decode_batch(payload: &[u8]) -> Option<(u64, Vec<Event>)> {
+    let mut c = Cur::new(payload);
+    let seq = c.u64()?;
+    let n = c.u32()? as usize;
+    let mut events = Vec::with_capacity(n.min(1024));
+    for _ in 0..n {
+        events.push(decode_event(&mut c)?);
+    }
+    if !c.done() {
+        return None; // trailing garbage: not a record we wrote
+    }
+    Some((seq, events))
+}
+
+// ---------------------------------------------------------------------
+// Snapshots
+// ---------------------------------------------------------------------
+
+/// Everything a warm restart needs, captured between batches so all
+/// fields are mutually consistent: the published epoch (tables + FNV
+/// sums verbatim), the dead sets as stable hardware ids, the equipment
+/// counters, and the journal sequence the snapshot covers.
+pub struct SnapshotState {
+    /// [`Topology::fingerprint`](crate::topology::Topology::fingerprint)
+    /// of the *reference* topology — resume refuses state from a
+    /// different fabric.
+    pub fingerprint: u64,
+    /// Journal records with `seq < batches_applied` are superseded by
+    /// this snapshot; replay starts here.
+    pub batches_applied: u64,
+    /// The manager's lifetime event counter at capture time.
+    pub events_seen: u64,
+    pub equipment_down: u64,
+    pub equipment_up: u64,
+    /// Dead switch UUIDs, sorted.
+    pub dead_switches: Vec<u64>,
+    /// Dead cables by stable id, sorted.
+    pub dead_cables: Vec<CableId>,
+    /// The published table generation at capture time.
+    pub epoch: Arc<FabricEpoch>,
+}
+
+fn encode_snapshot(s: &SnapshotState) -> Vec<u8> {
+    let ep = &s.epoch;
+    let mut b = Vec::new();
+    b.extend_from_slice(MAGIC_SNAPSHOT);
+    let body_at = b.len();
+    put_u64(&mut b, s.fingerprint);
+    put_u64(&mut b, s.batches_applied);
+    put_u64(&mut b, s.events_seen);
+    put_u64(&mut b, s.equipment_down);
+    put_u64(&mut b, s.equipment_up);
+    put_u32(&mut b, s.dead_switches.len() as u32);
+    for u in &s.dead_switches {
+        put_u64(&mut b, *u);
+    }
+    put_u32(&mut b, s.dead_cables.len() as u32);
+    for c in &s.dead_cables {
+        put_u64(&mut b, c.a);
+        put_u64(&mut b, c.b);
+        put_u16(&mut b, c.ordinal);
+    }
+    put_u64(&mut b, ep.epoch());
+    put_u64(&mut b, ep.num_nodes() as u64);
+    put_u32(&mut b, ep.num_switches() as u32);
+    for i in 0..ep.num_switches() {
+        put_u64(&mut b, ep.uuid(i));
+        // The recorded sum, NOT recomputed at load: FabricEpoch::verify
+        // on the reassembled epoch genuinely cross-checks rows vs sums.
+        put_u64(&mut b, ep.sum_of(i));
+        for &p in ep.row(i) {
+            put_u16(&mut b, p);
+        }
+    }
+    let crc = crc32(&b[body_at..]);
+    put_u32(&mut b, crc);
+    b
+}
+
+fn decode_snapshot(path: &Path, bytes: &[u8]) -> Result<SnapshotState, JournalError> {
+    if bytes.len() < 8 + 4 || &bytes[..8] != MAGIC_SNAPSHOT {
+        return Err(corrupt(path, "bad snapshot magic"));
+    }
+    let body = &bytes[8..bytes.len() - 4];
+    let want = u32::from_le_bytes(bytes[bytes.len() - 4..].try_into().unwrap());
+    if crc32(body) != want {
+        return Err(corrupt(path, "snapshot CRC mismatch"));
+    }
+    let short = || corrupt(path, "snapshot body truncated");
+    let mut c = Cur::new(body);
+    let fingerprint = c.u64().ok_or_else(short)?;
+    let batches_applied = c.u64().ok_or_else(short)?;
+    let events_seen = c.u64().ok_or_else(short)?;
+    let equipment_down = c.u64().ok_or_else(short)?;
+    let equipment_up = c.u64().ok_or_else(short)?;
+    let ns = c.u32().ok_or_else(short)? as usize;
+    let mut dead_switches = Vec::with_capacity(ns.min(1 << 20));
+    for _ in 0..ns {
+        dead_switches.push(c.u64().ok_or_else(short)?);
+    }
+    let nc = c.u32().ok_or_else(short)? as usize;
+    let mut dead_cables = Vec::with_capacity(nc.min(1 << 20));
+    for _ in 0..nc {
+        dead_cables.push(CableId {
+            a: c.u64().ok_or_else(short)?,
+            b: c.u64().ok_or_else(short)?,
+            ordinal: c.u16().ok_or_else(short)?,
+        });
+    }
+    let epoch_no = c.u64().ok_or_else(short)?;
+    let num_nodes = c.u64().ok_or_else(short)? as usize;
+    let nsw = c.u32().ok_or_else(short)? as usize;
+    let mut uuids = Vec::with_capacity(nsw.min(1 << 20));
+    let mut rows = Vec::with_capacity(nsw.min(1 << 20));
+    let mut sums = Vec::with_capacity(nsw.min(1 << 20));
+    for _ in 0..nsw {
+        uuids.push(c.u64().ok_or_else(short)?);
+        sums.push(c.u64().ok_or_else(short)?);
+        let mut row = Vec::with_capacity(num_nodes);
+        for _ in 0..num_nodes {
+            row.push(c.u16().ok_or_else(short)?);
+        }
+        rows.push(Arc::new(row));
+    }
+    if !c.done() {
+        return Err(corrupt(path, "snapshot has trailing bytes"));
+    }
+    let epoch = FabricEpoch::from_parts(epoch_no, num_nodes, uuids, rows, sums);
+    epoch
+        .verify()
+        .map_err(|e| corrupt(path, format!("snapshot epoch failed verification: {e}")))?;
+    Ok(SnapshotState {
+        fingerprint,
+        batches_applied,
+        events_seen,
+        equipment_down,
+        equipment_up,
+        dead_switches,
+        dead_cables,
+        epoch: Arc::new(epoch),
+    })
+}
+
+// ---------------------------------------------------------------------
+// The journal writer
+// ---------------------------------------------------------------------
+
+/// Durability knobs (lives in
+/// [`ServiceConfig::journal`](crate::fabric::ServiceConfig)).
+#[derive(Clone, Debug)]
+pub struct JournalConfig {
+    /// Directory holding segments and snapshots (created if absent).
+    pub dir: PathBuf,
+    /// Rotate the live segment once it grows past this (bytes).
+    pub segment_bytes: u64,
+    /// Write a snapshot every this many applied batches (0 = never —
+    /// the journal alone still recovers, from sequence 0).
+    pub snapshot_every: u64,
+    /// Verified snapshots retained; older ones (and the segments they
+    /// supersede) are deleted at compaction.
+    pub keep_snapshots: usize,
+}
+
+impl JournalConfig {
+    pub fn new(dir: impl Into<PathBuf>) -> Self {
+        Self {
+            dir: dir.into(),
+            segment_bytes: 1 << 20,
+            snapshot_every: 64,
+            keep_snapshots: 2,
+        }
+    }
+}
+
+/// Lifetime I/O accounting, mirrored into
+/// [`ServiceStats`](crate::fabric::ServiceStats) and the manager
+/// [`Metrics`](crate::fabric::metrics::Metrics) at loop exit.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct JournalCounters {
+    pub appends: u64,
+    pub append_bytes: u64,
+    pub snapshots_written: u64,
+    pub snapshot_bytes: u64,
+    /// Journal segments deleted by snapshot compaction.
+    pub compactions: u64,
+    pub segments_created: u64,
+}
+
+/// Chaos damage applied to a single append (see
+/// [`ChaosPoint::TornWrite`](crate::util::chaos::ChaosPoint) /
+/// [`SegmentCorrupt`](crate::util::chaos::ChaosPoint)): both leave
+/// provably-recoverable bytes behind and report the append as failed,
+/// so the batch quarantines and the differential stays exact.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Damage {
+    None,
+    /// Write only a prefix of the record (a crash mid-`write`).
+    Torn,
+    /// Write the whole record with one payload byte flipped (a bad
+    /// sector / firmware lie caught by the per-record CRC).
+    CorruptByte,
+}
+
+/// Append-side handle on a journal directory. Create with
+/// [`Journal::create`] (refuses a dir with existing state) or get one
+/// back from [`load`] (recovery).
+pub struct Journal {
+    cfg: JournalConfig,
+    fingerprint: u64,
+    /// Live segment, `None` until the next append opens one.
+    file: Option<File>,
+    segment_path: PathBuf,
+    segment_len: u64,
+    next_seq: u64,
+    counters: JournalCounters,
+}
+
+fn segment_name(base_seq: u64) -> String {
+    format!("journal-{base_seq:020}.log")
+}
+
+fn snapshot_name(batches_applied: u64) -> String {
+    format!("snapshot-{batches_applied:020}.snap")
+}
+
+/// Parse `<prefix>-<seq:020>.<ext>` back into the sequence number.
+fn parse_seq(name: &str, prefix: &str, ext: &str) -> Option<u64> {
+    let rest = name.strip_prefix(prefix)?.strip_suffix(ext)?;
+    if rest.len() != 20 || !rest.bytes().all(|b| b.is_ascii_digit()) {
+        return None;
+    }
+    rest.parse().ok()
+}
+
+fn fsync_dir(dir: &Path) -> Result<(), JournalError> {
+    // Directory fsync makes renames/creates durable on Linux; other
+    // platforms may refuse to open a directory — treat that as a no-op
+    // rather than a fatal error (the data files themselves are synced).
+    if let Ok(d) = File::open(dir) {
+        let _ = d.sync_all();
+    }
+    Ok(())
+}
+
+impl Journal {
+    /// Start journaling into `dir` from sequence 0. Fails with a typed
+    /// error if `dir` already holds journal or snapshot state — cold
+    /// starts must not silently shadow a recoverable history (resume
+    /// instead, which tolerates an empty dir).
+    pub fn create(cfg: JournalConfig, fingerprint: u64) -> Result<Self, JournalError> {
+        fs::create_dir_all(&cfg.dir).map_err(|e| io_err(&cfg.dir, "create dir", e))?;
+        let (segments, snapshots) = list_state(&cfg.dir)?;
+        if !segments.is_empty() || !snapshots.is_empty() {
+            return Err(JournalError::Mismatch {
+                detail: format!(
+                    "{} already holds journal state ({} segments, {} snapshots); \
+                     resume instead of creating",
+                    cfg.dir.display(),
+                    segments.len(),
+                    snapshots.len()
+                ),
+            });
+        }
+        Ok(Self {
+            segment_path: cfg.dir.join(segment_name(0)),
+            cfg,
+            fingerprint,
+            file: None,
+            segment_len: 0,
+            next_seq: 0,
+            counters: JournalCounters::default(),
+        })
+    }
+
+    /// The sequence number the next appended batch will get — also the
+    /// `batches_applied` horizon for a snapshot taken *now*.
+    pub fn next_seq(&self) -> u64 {
+        self.next_seq
+    }
+
+    pub fn counters(&self) -> JournalCounters {
+        self.counters
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.cfg.dir
+    }
+
+    /// Open a fresh segment whose base is `next_seq`.
+    fn open_segment(&mut self) -> Result<(), JournalError> {
+        let path = self.cfg.dir.join(segment_name(self.next_seq));
+        let mut f = OpenOptions::new()
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(&path)
+            .map_err(|e| io_err(&path, "create segment", e))?;
+        let mut h = Vec::with_capacity(SEGMENT_HEADER_LEN as usize);
+        h.extend_from_slice(MAGIC_SEGMENT);
+        put_u64(&mut h, self.fingerprint);
+        put_u64(&mut h, self.next_seq);
+        f.write_all(&h).map_err(|e| io_err(&path, "write header", e))?;
+        f.sync_all().map_err(|e| io_err(&path, "fsync header", e))?;
+        fsync_dir(&self.cfg.dir)?;
+        self.file = Some(f);
+        self.segment_path = path;
+        self.segment_len = SEGMENT_HEADER_LEN;
+        self.counters.segments_created += 1;
+        Ok(())
+    }
+
+    /// Append one gate-passed batch; on `Ok` the record is fsynced (the
+    /// caller may commit and publish). On `Err` nothing the recovery
+    /// scan would replay was persisted — damaged bytes are confined to
+    /// the tail of a segment that is immediately rotated away — so the
+    /// caller must quarantine the batch.
+    pub fn append_batch(&mut self, events: &[Event]) -> Result<u64, JournalError> {
+        self.append_damaged(events, Damage::None)
+    }
+
+    /// [`append_batch`](Journal::append_batch) with seeded fault
+    /// injection (the chaos harness; inert in production call sites,
+    /// which pass [`Damage::None`]). A damaged append leaves exactly
+    /// the bytes a real torn write / bad sector would and reports
+    /// failure, so recovery and the differential suites can exercise
+    /// the truncation path deterministically.
+    pub fn append_damaged(&mut self, events: &[Event], damage: Damage) -> Result<u64, JournalError> {
+        if self.file.is_none() {
+            self.open_segment()?;
+        }
+        let payload = encode_batch(self.next_seq, events);
+        let mut rec = Vec::with_capacity(8 + payload.len());
+        put_u32(&mut rec, payload.len() as u32);
+        put_u32(&mut rec, crc32(&payload));
+        rec.extend_from_slice(&payload);
+        let path = self.segment_path.clone();
+        let res: Result<u64, JournalError> = (|| {
+            let f = self.file.as_mut().expect("segment opened above");
+            match damage {
+                Damage::None => {}
+                Damage::Torn => {
+                    // A crash mid-write: persist an unambiguous prefix
+                    // (cut inside the payload) and fail the append.
+                    let cut = 8 + payload.len() / 2;
+                    f.write_all(&rec[..cut]).map_err(|e| io_err(&path, "append", e))?;
+                    let _ = f.sync_all();
+                    return Err(JournalError::Io {
+                        path: path.display().to_string(),
+                        op: "append",
+                        detail: "chaos: torn write".into(),
+                    });
+                }
+                Damage::CorruptByte => {
+                    let mut bad = rec.clone();
+                    let n = bad.len();
+                    bad[n - 1] ^= 0x40;
+                    f.write_all(&bad).map_err(|e| io_err(&path, "append", e))?;
+                    let _ = f.sync_all();
+                    return Err(JournalError::Io {
+                        path: path.display().to_string(),
+                        op: "append",
+                        detail: "chaos: corrupt record".into(),
+                    });
+                }
+            }
+            f.write_all(&rec).map_err(|e| io_err(&path, "append", e))?;
+            f.sync_all().map_err(|e| io_err(&path, "fsync append", e))?;
+            Ok(rec.len() as u64)
+        })();
+        match res {
+            Ok(bytes) => {
+                self.segment_len += bytes;
+                self.next_seq += 1;
+                self.counters.appends += 1;
+                self.counters.append_bytes += bytes;
+                if self.segment_len >= self.cfg.segment_bytes {
+                    self.file = None; // next append rotates
+                }
+                Ok(bytes)
+            }
+            Err(e) => {
+                // The segment tail is now unreliable: rotate so the bad
+                // bytes are provably the last record of a closed file,
+                // and the failed sequence number is reused by the next
+                // durable batch (recovery sees no gap).
+                self.file = None;
+                Err(e)
+            }
+        }
+    }
+
+    /// Persist a snapshot (temp → fsync → rename → dir fsync), retire
+    /// snapshots beyond [`JournalConfig::keep_snapshots`], and compact
+    /// journal segments the newest snapshot supersedes. Returns the
+    /// snapshot's size in bytes.
+    pub fn write_snapshot(&mut self, snap: &SnapshotState) -> Result<u64, JournalError> {
+        let bytes = encode_snapshot(snap);
+        let tmp = self.cfg.dir.join(format!(".snapshot-{}.tmp", snap.batches_applied));
+        let fin = self.cfg.dir.join(snapshot_name(snap.batches_applied));
+        {
+            let mut f = OpenOptions::new()
+                .write(true)
+                .create(true)
+                .truncate(true)
+                .open(&tmp)
+                .map_err(|e| io_err(&tmp, "create snapshot", e))?;
+            f.write_all(&bytes).map_err(|e| io_err(&tmp, "write snapshot", e))?;
+            f.sync_all().map_err(|e| io_err(&tmp, "fsync snapshot", e))?;
+        }
+        fs::rename(&tmp, &fin).map_err(|e| io_err(&fin, "rename snapshot", e))?;
+        fsync_dir(&self.cfg.dir)?;
+        self.counters.snapshots_written += 1;
+        self.counters.snapshot_bytes += bytes.len() as u64;
+        self.compact(snap.batches_applied)?;
+        Ok(bytes.len() as u64)
+    }
+
+    /// Delete snapshots beyond the retention count and every journal
+    /// segment whose records all precede the newest durable snapshot.
+    fn compact(&mut self, newest_snapshot_seq: u64) -> Result<(), JournalError> {
+        let (segments, snapshots) = list_state(&self.cfg.dir)?;
+        let keep = self.cfg.keep_snapshots.max(1);
+        if snapshots.len() > keep {
+            for (_, p) in &snapshots[..snapshots.len() - keep] {
+                let _ = fs::remove_file(p);
+            }
+        }
+        // A segment with base b is superseded iff the *next* segment's
+        // base (= one past this segment's last record) is within the
+        // snapshot horizon. The newest segment is always kept — it is
+        // (or may become) the live append target.
+        for w in segments.windows(2) {
+            let (base, path) = &w[0];
+            let (next_base, _) = &w[1];
+            if *next_base <= newest_snapshot_seq && path.as_path() != self.segment_path {
+                if fs::remove_file(path).is_ok() {
+                    self.counters.compactions += 1;
+                }
+                let _ = base;
+            }
+        }
+        fsync_dir(&self.cfg.dir)?;
+        Ok(())
+    }
+}
+
+/// Sorted `(seq, path)` listings of the segments and snapshots in `dir`.
+#[allow(clippy::type_complexity)]
+fn list_state(dir: &Path) -> Result<(Vec<(u64, PathBuf)>, Vec<(u64, PathBuf)>), JournalError> {
+    let mut segments = Vec::new();
+    let mut snapshots = Vec::new();
+    let rd = match fs::read_dir(dir) {
+        Ok(rd) => rd,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok((segments, snapshots)),
+        Err(e) => return Err(io_err(dir, "read dir", e)),
+    };
+    for entry in rd {
+        let entry = entry.map_err(|e| io_err(dir, "read dir entry", e))?;
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        if let Some(seq) = parse_seq(name, "journal-", ".log") {
+            segments.push((seq, entry.path()));
+        } else if let Some(seq) = parse_seq(name, "snapshot-", ".snap") {
+            snapshots.push((seq, entry.path()));
+        }
+    }
+    segments.sort_unstable_by_key(|(s, _)| *s);
+    snapshots.sort_unstable_by_key(|(s, _)| *s);
+    Ok((segments, snapshots))
+}
+
+// ---------------------------------------------------------------------
+// Recovery
+// ---------------------------------------------------------------------
+
+/// What [`load`] recovered from a journal directory.
+pub struct Recovered {
+    /// The newest snapshot that passed CRC + epoch verification (and
+    /// the fingerprint check), if any.
+    pub snapshot: Option<SnapshotState>,
+    /// Journaled batches at or past the snapshot horizon, in sequence
+    /// order: `(seq, events)` — replay these through the gated apply
+    /// path to reconverge.
+    pub tail: Vec<(u64, Vec<Event>)>,
+    /// Torn/corrupt record tails detected (and, on the live segment,
+    /// physically truncated) during the scan.
+    pub tail_truncations: u64,
+    /// Snapshot files that failed verification and were skipped.
+    pub snapshots_skipped: u64,
+    /// An append-ready journal positioned after the last durable record.
+    pub journal: Journal,
+}
+
+/// Scan one segment file. Returns `(base_seq, batches, clean)` where
+/// `clean` is false when the record stream ended in a torn/corrupt tail
+/// at `good_len` bytes (the offset of the first bad byte).
+fn scan_segment(
+    path: &Path,
+    fingerprint: u64,
+    last: bool,
+) -> Result<(u64, Vec<(u64, Vec<Event>)>, bool, u64), JournalError> {
+    let bytes = fs::read(path).map_err(|e| io_err(path, "read segment", e))?;
+    if bytes.len() < SEGMENT_HEADER_LEN as usize || &bytes[..8] != MAGIC_SEGMENT {
+        if last {
+            // A crash during rotation can leave a half-written header
+            // on the newest segment; it holds no durable records.
+            return Ok((u64::MAX, Vec::new(), false, 0));
+        }
+        return Err(corrupt(path, "bad segment header"));
+    }
+    let file_fp = u64::from_le_bytes(bytes[8..16].try_into().unwrap());
+    if file_fp != fingerprint {
+        return Err(JournalError::Mismatch {
+            detail: format!(
+                "{}: segment fingerprint {file_fp:#018x} does not match the reference \
+                 topology ({fingerprint:#018x})",
+                path.display()
+            ),
+        });
+    }
+    let base_seq = u64::from_le_bytes(bytes[16..24].try_into().unwrap());
+    let mut out = Vec::new();
+    let mut at = SEGMENT_HEADER_LEN as usize;
+    let mut expected = base_seq;
+    let mut clean = true;
+    while at < bytes.len() {
+        let good = at as u64;
+        let Some(head) = bytes.get(at..at + 8) else {
+            clean = false;
+            return Ok((base_seq, out, clean, good));
+        };
+        let len = u32::from_le_bytes(head[..4].try_into().unwrap());
+        let want_crc = u32::from_le_bytes(head[4..8].try_into().unwrap());
+        if len > MAX_RECORD_LEN {
+            return Ok((base_seq, out, false, good));
+        }
+        let Some(payload) = bytes.get(at + 8..at + 8 + len as usize) else {
+            return Ok((base_seq, out, false, good));
+        };
+        if crc32(payload) != want_crc {
+            return Ok((base_seq, out, false, good));
+        }
+        let Some((seq, events)) = decode_batch(payload) else {
+            return Ok((base_seq, out, false, good));
+        };
+        if seq != expected {
+            // A duplicated or replayed record (restored backup, tooling
+            // bug): everything from here on is untrustworthy tail.
+            return Ok((base_seq, out, false, good));
+        }
+        out.push((seq, events));
+        expected += 1;
+        at += 8 + len as usize;
+    }
+    Ok((base_seq, out, clean, at as u64))
+}
+
+/// Recover a journal directory: newest verifying snapshot, the batch
+/// tail past it, and an append-ready [`Journal`]. Torn tails are
+/// truncated (the live segment physically, earlier rotated-away tails
+/// logically); an empty or absent directory recovers to a cold start
+/// at sequence 0. Never panics on corrupt input — everything is a
+/// typed [`JournalError`] or a counted truncation.
+pub fn load(cfg: JournalConfig, fingerprint: u64) -> Result<Recovered, JournalError> {
+    fs::create_dir_all(&cfg.dir).map_err(|e| io_err(&cfg.dir, "create dir", e))?;
+    let (segments, snapshots) = list_state(&cfg.dir)?;
+
+    // Newest snapshot that verifies and belongs to this fabric. CRC or
+    // epoch-sum failures skip to the next-older snapshot (that is what
+    // keep_snapshots > 1 is for); a fingerprint mismatch on a snapshot
+    // that *verified* is a hard typed error — the operator pointed the
+    // service at another fabric's state, and silently cold-starting
+    // over it would be worse than stopping.
+    let mut snapshot = None;
+    let mut snapshots_skipped = 0u64;
+    for (_, path) in snapshots.iter().rev() {
+        let bytes = fs::read(path).map_err(|e| io_err(path, "read snapshot", e))?;
+        match decode_snapshot(path, &bytes) {
+            Ok(s) if s.fingerprint == fingerprint => {
+                snapshot = Some(s);
+                break;
+            }
+            Ok(s) => {
+                return Err(JournalError::Mismatch {
+                    detail: format!(
+                        "{}: snapshot fingerprint {:#018x} does not match the reference \
+                         topology ({fingerprint:#018x})",
+                        path.display(),
+                        s.fingerprint
+                    ),
+                });
+            }
+            Err(_) => snapshots_skipped += 1,
+        }
+    }
+    let horizon = snapshot.as_ref().map_or(0, |s| s.batches_applied);
+
+    let mut tail: Vec<(u64, Vec<Event>)> = Vec::new();
+    let mut tail_truncations = 0u64;
+    let mut next_seq = horizon;
+    let mut live_segment: Option<(PathBuf, u64, bool)> = None; // path, good_len, clean
+    let mut seen_any = false;
+    for (i, (_, path)) in segments.iter().enumerate() {
+        let last = i + 1 == segments.len();
+        let (base_seq, batches, clean, good_len) = scan_segment(path, fingerprint, last)?;
+        if base_seq == u64::MAX {
+            // Half-written header on the newest segment: no records.
+            tail_truncations += 1;
+            let _ = fs::remove_file(path);
+            continue;
+        }
+        if seen_any && base_seq != next_seq {
+            return Err(JournalError::Mismatch {
+                detail: format!(
+                    "{}: segment starts at sequence {base_seq}, expected {next_seq} \
+                     (gap or overlap in the journal)",
+                    path.display()
+                ),
+            });
+        }
+        if !seen_any && base_seq > horizon {
+            return Err(JournalError::Mismatch {
+                detail: format!(
+                    "{}: oldest segment starts at sequence {base_seq} but the newest \
+                     usable snapshot covers only up to {horizon} — replay gap",
+                    path.display()
+                ),
+            });
+        }
+        seen_any = true;
+        for (seq, events) in batches {
+            if seq >= horizon {
+                tail.push((seq, events));
+            }
+            next_seq = seq + 1;
+        }
+        if !clean {
+            tail_truncations += 1;
+        }
+        if last {
+            live_segment = Some((path.clone(), good_len, clean));
+        }
+    }
+
+    // Physically truncate a torn live tail so the next process sees a
+    // clean file even if *this* one crashes before its first append.
+    let mut journal = Journal {
+        segment_path: cfg.dir.join(segment_name(next_seq)),
+        cfg,
+        fingerprint,
+        file: None,
+        segment_len: 0,
+        next_seq,
+        counters: JournalCounters::default(),
+    };
+    if let Some((path, good_len, clean)) = live_segment {
+        if !clean {
+            let f = OpenOptions::new()
+                .write(true)
+                .open(&path)
+                .map_err(|e| io_err(&path, "open for truncate", e))?;
+            f.set_len(good_len).map_err(|e| io_err(&path, "truncate tail", e))?;
+            f.sync_all().map_err(|e| io_err(&path, "fsync truncate", e))?;
+        }
+        // Reuse the live segment as the append target while it has
+        // headroom; otherwise the next append rotates naturally.
+        if good_len < journal.cfg.segment_bytes {
+            let mut f = OpenOptions::new()
+                .write(true)
+                .open(&path)
+                .map_err(|e| io_err(&path, "open for append", e))?;
+            f.seek(SeekFrom::End(0)).map_err(|e| io_err(&path, "seek", e))?;
+            journal.file = Some(f);
+            journal.segment_path = path;
+            journal.segment_len = good_len;
+        }
+    }
+    Ok(Recovered {
+        snapshot,
+        tail,
+        tail_truncations,
+        snapshots_skipped,
+        journal,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "dmodc-journal-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn ev(at_ms: u64, kind: EventKind) -> Event {
+        Event { at_ms, kind }
+    }
+
+    fn sample_events() -> Vec<Vec<Event>> {
+        let c = CableId { a: 3, b: 9, ordinal: 1 };
+        vec![
+            vec![ev(1, EventKind::SwitchDown(7))],
+            vec![ev(2, EventKind::LinkDown(c)), ev(3, EventKind::LinkUp(c))],
+            vec![ev(4, EventKind::IsletDown(vec![1, 2, 3]))],
+            vec![ev(5, EventKind::IsletUp(vec![1, 2, 3])), ev(6, EventKind::SwitchUp(7))],
+        ]
+    }
+
+    #[test]
+    fn crc32_matches_zlib_convention() {
+        // Pinned against Python's zlib.crc32 — the cross-language
+        // format contract with python/tests/test_journal_sim.py.
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"dmodc"), 0xF57D_1B12);
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926); // the classic check value
+    }
+
+    #[test]
+    fn event_roundtrip_is_exact() {
+        for batch in sample_events() {
+            let p = encode_batch(42, &batch);
+            let (seq, got) = decode_batch(&p).expect("roundtrip");
+            assert_eq!(seq, 42);
+            assert_eq!(got, batch);
+        }
+        // Trailing garbage is rejected, not ignored.
+        let mut p = encode_batch(0, &sample_events()[0]);
+        p.push(0);
+        assert!(decode_batch(&p).is_none());
+    }
+
+    #[test]
+    fn append_load_roundtrip_and_counters() {
+        let dir = tmpdir("roundtrip");
+        let mut j = Journal::create(JournalConfig::new(&dir), 0xF00D).unwrap();
+        let batches = sample_events();
+        for b in &batches {
+            j.append_batch(b).unwrap();
+        }
+        assert_eq!(j.next_seq(), batches.len() as u64);
+        assert_eq!(j.counters().appends, batches.len() as u64);
+        assert!(j.counters().append_bytes > 0);
+        let rec = load(JournalConfig::new(&dir), 0xF00D).unwrap();
+        assert!(rec.snapshot.is_none());
+        assert_eq!(rec.tail_truncations, 0);
+        assert_eq!(rec.tail.len(), batches.len());
+        for (i, (seq, events)) in rec.tail.iter().enumerate() {
+            assert_eq!(*seq, i as u64);
+            assert_eq!(events, &batches[i]);
+        }
+        assert_eq!(rec.journal.next_seq(), batches.len() as u64);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn create_refuses_existing_state_and_wrong_fingerprint_is_typed() {
+        let dir = tmpdir("refuse");
+        let mut j = Journal::create(JournalConfig::new(&dir), 1).unwrap();
+        j.append_batch(&sample_events()[0]).unwrap();
+        let err = Journal::create(JournalConfig::new(&dir), 1).unwrap_err();
+        assert!(matches!(err, JournalError::Mismatch { .. }), "{err}");
+        let err = load(JournalConfig::new(&dir), 2).unwrap_err();
+        assert!(matches!(err, JournalError::Mismatch { .. }), "{err}");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn empty_dir_recovers_to_cold_start() {
+        let dir = tmpdir("empty");
+        let rec = load(JournalConfig::new(&dir), 5).unwrap();
+        assert!(rec.snapshot.is_none());
+        assert!(rec.tail.is_empty());
+        assert_eq!(rec.tail_truncations, 0);
+        assert_eq!(rec.journal.next_seq(), 0);
+        // And a dir that does not exist yet.
+        let dir2 = dir.join("nested/deeper");
+        let rec = load(JournalConfig::new(&dir2), 5).unwrap();
+        assert_eq!(rec.journal.next_seq(), 0);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn damaged_appends_fail_rotate_and_recover_cleanly() {
+        let dir = tmpdir("damage");
+        let mut j = Journal::create(JournalConfig::new(&dir), 7).unwrap();
+        let batches = sample_events();
+        j.append_batch(&batches[0]).unwrap();
+        assert!(j.append_damaged(&batches[1], Damage::Torn).is_err());
+        // The failed sequence is reused — recovery must see no gap.
+        j.append_batch(&batches[1]).unwrap();
+        assert!(j.append_damaged(&batches[2], Damage::CorruptByte).is_err());
+        j.append_batch(&batches[2]).unwrap();
+        let rec = load(JournalConfig::new(&dir), 7).unwrap();
+        assert_eq!(rec.tail.len(), 3);
+        for (i, (seq, events)) in rec.tail.iter().enumerate() {
+            assert_eq!(*seq, i as u64);
+            assert_eq!(events, &batches[i]);
+        }
+        assert_eq!(rec.tail_truncations, 2, "both damaged tails detected");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn segment_rotation_by_size() {
+        let dir = tmpdir("rotate");
+        let mut cfg = JournalConfig::new(&dir);
+        cfg.segment_bytes = 64; // every append overflows the segment
+        let mut j = Journal::create(cfg.clone(), 1).unwrap();
+        for b in sample_events() {
+            j.append_batch(&b).unwrap();
+        }
+        assert!(j.counters().segments_created >= 3, "{:?}", j.counters());
+        let rec = load(cfg, 1).unwrap();
+        assert_eq!(rec.tail.len(), 4);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn resume_appends_into_the_live_segment() {
+        let dir = tmpdir("reappend");
+        let batches = sample_events();
+        let mut j = Journal::create(JournalConfig::new(&dir), 3).unwrap();
+        j.append_batch(&batches[0]).unwrap();
+        drop(j);
+        let rec = load(JournalConfig::new(&dir), 3).unwrap();
+        let mut j = rec.journal;
+        assert_eq!(j.next_seq(), 1);
+        j.append_batch(&batches[1]).unwrap();
+        let rec = load(JournalConfig::new(&dir), 3).unwrap();
+        assert_eq!(rec.tail.len(), 2);
+        assert_eq!(rec.tail[1].1, batches[1]);
+        assert_eq!(
+            rec.journal.counters().segments_created,
+            0,
+            "no new segment was needed"
+        );
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

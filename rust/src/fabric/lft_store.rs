@@ -139,6 +139,39 @@ impl FabricEpoch {
         self.rows[sw][dst as usize]
     }
 
+    /// Reassemble an epoch from externally persisted parts (the journal
+    /// snapshot loader). `row_sums` are taken verbatim — NOT recomputed
+    /// — so a subsequent [`verify`](FabricEpoch::verify) genuinely
+    /// cross-checks the loaded row bytes against the sums recorded at
+    /// capture time.
+    pub(crate) fn from_parts(
+        epoch: u64,
+        num_nodes: usize,
+        uuids: Vec<u64>,
+        rows: Vec<Arc<Vec<u16>>>,
+        row_sums: Vec<u64>,
+    ) -> Self {
+        let checksum = fold_sums(&row_sums);
+        Self {
+            epoch,
+            num_nodes,
+            uuids,
+            rows,
+            row_sums,
+            checksum,
+        }
+    }
+
+    /// Recorded FNV sum of the `sw`-th switch's row (for persistence).
+    pub(crate) fn sum_of(&self, sw: usize) -> u64 {
+        self.row_sums[sw]
+    }
+
+    /// Shared handle on the `sw`-th switch's row (for seeding a store).
+    pub(crate) fn row_shared(&self, sw: usize) -> Arc<Vec<u16>> {
+        Arc::clone(&self.rows[sw])
+    }
+
     /// Re-derive every checksum from the row bytes and compare: a torn
     /// or half-published snapshot cannot pass. Readers in the stress
     /// harness and the TSan suite call this on every load.
@@ -384,6 +417,28 @@ impl LftStore {
             }
         }
         true
+    }
+
+    /// Warm-restart seeding: replace the store's contents with the rows
+    /// of a snapshot-recovered epoch and republish that epoch verbatim,
+    /// so readers see exactly the generation that was live at capture
+    /// time and the next [`publish`](LftStore::publish) continues the
+    /// durable epoch sequence. Rows stay `Arc`-shared with the epoch —
+    /// the first post-resume change detaches copy-on-write as usual.
+    pub(crate) fn resume_from(&mut self, ep: Arc<FabricEpoch>) {
+        self.tables.clear();
+        for i in 0..ep.num_switches() {
+            self.tables.insert(
+                ep.uuid(i),
+                StoredTable {
+                    ports: ep.row_shared(i),
+                    version: 1,
+                    sum: ep.sum_of(i),
+                },
+            );
+        }
+        self.epoch = ep.epoch();
+        self.published.publish(ep);
     }
 
     /// Change version of a switch's stored table (bumped on every

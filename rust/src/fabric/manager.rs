@@ -37,7 +37,9 @@
 //!   each committed table generation through the store's epoch surface
 //!   ([`FabricManager::reader`]) for concurrent readers.
 
+use super::error::FabricError;
 use super::events::{cable_ids, for_each_cable, CableId, Event, EventKind};
+use super::journal::{self, Damage, Journal, JournalConfig, JournalError, SnapshotState};
 use super::lft_store::{FabricReader, LftStore, UploadStats};
 use super::metrics::{Histogram, Metrics};
 use crate::analysis::paths::TensorUpdate;
@@ -50,6 +52,7 @@ use crate::routing::{
 use crate::topology::degrade::{self, DegradeScratch};
 use crate::topology::{PortTarget, SwitchId, Topology};
 use crate::util::chaos::{ChaosPlan, ChaosPoint, ChaosState};
+use crate::util::sync::Arc;
 use crate::util::{alloc_guard, time};
 use std::collections::{HashMap, HashSet};
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -193,6 +196,11 @@ pub enum QuarantineReason {
         /// What the final (full-tier) computation actually took.
         took_ms: u64,
     },
+    /// The journal append failed (I/O error or injected damage): the
+    /// batch passed every gate but could not be made durable, so it was
+    /// not applied — committing it would let a crash forget a reaction
+    /// the fabric already saw. The message is the journal error.
+    JournalAppend(String),
 }
 
 impl QuarantineReason {
@@ -203,6 +211,7 @@ impl QuarantineReason {
             QuarantineReason::DeadlockCycle(_) => "deadlock_cycle",
             QuarantineReason::ReroutePanic(_) => "reroute_panic",
             QuarantineReason::Watchdog { .. } => "watchdog",
+            QuarantineReason::JournalAppend(_) => "journal_append",
         }
     }
 }
@@ -394,6 +403,50 @@ impl FabricManager {
     /// builds where chaos is compiled out.
     pub fn set_chaos(&mut self, plan: Option<ChaosPlan>) {
         self.chaos = plan.map(ChaosState::new);
+    }
+
+    /// Consult the fault-injection stream for `point` (false without a
+    /// plan, or when chaos is compiled out). Public so the service loop
+    /// and journal wiring share the manager's single decision stream;
+    /// safe to call for any point — unarmed points consume no
+    /// randomness, so they cannot perturb other points' decisions.
+    pub fn chaos_fire(&mut self, point: ChaosPoint) -> bool {
+        self.chaos.as_mut().is_some_and(|c| c.fire(point))
+    }
+
+    /// Adjust the watchdog deadline at runtime (resume uses this to
+    /// disable the watchdog during replay and restore it after).
+    pub fn set_watchdog_ms(&mut self, ms: u64) {
+        self.cfg.watchdog_ms = ms;
+    }
+
+    /// Lifetime count of events this manager has marked.
+    pub fn events_seen(&self) -> usize {
+        self.events_seen
+    }
+
+    /// Fingerprint of the reference topology (journal/snapshot identity).
+    pub fn fingerprint(&self) -> u64 {
+        self.reference.fingerprint()
+    }
+
+    /// The dead sets by stable hardware id (sorted) — the durable
+    /// identity the snapshot persists; tests compare these across a
+    /// crash/resume boundary.
+    pub fn dead_equipment(&self) -> (Vec<u64>, Vec<CableId>) {
+        let mut switches: Vec<u64> = self
+            .dead_switches
+            .iter()
+            .map(|&s| self.reference.switches[s as usize].uuid)
+            .collect();
+        switches.sort_unstable();
+        let mut cables: Vec<CableId> = self
+            .dead_cables
+            .iter()
+            .filter_map(|p| self.port_to_cable.get(p).copied())
+            .collect();
+        cables.sort_unstable();
+        (switches, cables)
     }
 
     /// Current degraded topology + tables.
@@ -755,6 +808,24 @@ impl FabricManager {
         &mut self,
         events: &[Event],
     ) -> Result<ManagerReport, Box<QuarantineReport>> {
+        self.try_apply_batch_journaled(events, None)
+    }
+
+    /// [`FabricManager::try_apply_batch`] with durability: once the
+    /// candidate passes every gate, the batch is appended to `journal`
+    /// (fsynced) **before** [`FabricManager::commit_and_publish`] runs —
+    /// so every reaction a reader could ever observe is recoverable, and
+    /// a batch that cannot be made durable is quarantined instead of
+    /// applied (tag `journal_append`). Quarantined batches are never
+    /// journaled: replaying the journal reproduces exactly the applied
+    /// sequence. With `journal: None` this is byte-for-byte
+    /// [`FabricManager::try_apply_batch`] — no I/O, no allocation
+    /// difference on the hot path.
+    pub fn try_apply_batch_journaled(
+        &mut self,
+        events: &[Event],
+        journal: Option<&mut Journal>,
+    ) -> Result<ManagerReport, Box<QuarantineReport>> {
         // Snapshot the rollback target: dead sets and the equipment
         // counters the marks below will move.
         self.rollback_switches.clone_from(&self.dead_switches);
@@ -839,6 +910,31 @@ impl FabricManager {
             if let Some(w) = validity::deadlock_witness(&self.current_topo, &self.current_lft) {
                 Metrics::inc(&mut self.metrics.epochs_rejected);
                 return fail(self, QuarantineReason::DeadlockCycle(w));
+            }
+        }
+        // Durability point: gate passed → journal → commit. The append
+        // is fsynced before commit_and_publish, so a crash after this
+        // line replays the batch; a crash before it never published the
+        // batch either way. An append failure (real I/O error, or the
+        // TornWrite/SegmentCorrupt chaos points) quarantines — the
+        // damaged bytes are confined to a rotated-away segment tail
+        // that recovery truncates.
+        if let Some(j) = journal {
+            let damage = if self.chaos_fire(ChaosPoint::TornWrite) {
+                Damage::Torn
+            } else if self.chaos_fire(ChaosPoint::SegmentCorrupt) {
+                Damage::CorruptByte
+            } else {
+                Damage::None
+            };
+            match j.append_damaged(events, damage) {
+                Ok(bytes) => {
+                    Metrics::inc(&mut self.metrics.journal_appends);
+                    Metrics::add(&mut self.metrics.journal_bytes, bytes);
+                }
+                Err(e) => {
+                    return fail(self, QuarantineReason::JournalAppend(e.to_string()));
+                }
             }
         }
         let mut report = self.commit_and_publish(reaction);
@@ -1051,6 +1147,230 @@ impl FabricManager {
             epoch,
         })
     }
+
+    /// Capture the manager's durable state between batches: the
+    /// published epoch (shared, not copied), the dead sets by stable
+    /// hardware id, and the equipment counters. `batches_applied` is the
+    /// journal sequence the snapshot covers
+    /// ([`Journal::next_seq`]) — records below it are superseded.
+    pub fn snapshot_state(&self, batches_applied: u64) -> SnapshotState {
+        let (dead_switches, dead_cables) = self.dead_equipment();
+        SnapshotState {
+            fingerprint: self.reference.fingerprint(),
+            batches_applied,
+            events_seen: self.events_seen as u64,
+            equipment_down: self.metrics.equipment_down,
+            equipment_up: self.metrics.equipment_up,
+            dead_switches,
+            dead_cables,
+            epoch: self.store.reader().tables(),
+        }
+    }
+
+    /// Reconstruct a manager from a verified snapshot **without** the
+    /// initial from-scratch reroute: the store is seeded with the
+    /// snapshot's epoch (republished verbatim, so readers immediately
+    /// see the generation that was live at capture time), the dead sets
+    /// are translated back through the reference maps, and the current
+    /// topology/tables are materialized from them. The engine starts
+    /// fresh — its first delta attempt falls back to a full fill, the
+    /// same contract as after a quarantine reinit.
+    pub fn resume(
+        reference: Topology,
+        cfg: ManagerConfig,
+        snap: &SnapshotState,
+    ) -> Result<Self, FabricError> {
+        let engine = registry::create(cfg.algo);
+        Self::resume_with_engine(reference, cfg, engine, snap)
+    }
+
+    /// [`FabricManager::resume`] with a caller-constructed engine.
+    pub fn resume_with_engine(
+        reference: Topology,
+        cfg: ManagerConfig,
+        engine: Box<dyn RoutingEngine>,
+        snap: &SnapshotState,
+    ) -> Result<Self, FabricError> {
+        let fp = reference.fingerprint();
+        if fp != snap.fingerprint {
+            return Err(JournalError::Mismatch {
+                detail: format!(
+                    "snapshot fingerprint {:#018x} does not match the reference \
+                     topology ({fp:#018x})",
+                    snap.fingerprint
+                ),
+            }
+            .into());
+        }
+        // The loader verified this, but resume is also reachable with a
+        // caller-built snapshot; the check is O(tables) once per boot.
+        snap.epoch.verify().map_err(|e| JournalError::Mismatch {
+            detail: format!("snapshot epoch failed verification: {e}"),
+        })?;
+        let uuid_to_switch: HashMap<u64, SwitchId> = reference
+            .switches
+            .iter()
+            .enumerate()
+            .map(|(i, s)| (s.uuid, i as SwitchId))
+            .collect();
+        let cable_to_port: HashMap<CableId, (SwitchId, u16)> =
+            cable_ids(&reference).into_iter().collect();
+        let port_to_cable = cable_to_port.iter().map(|(&c, &p)| (p, c)).collect();
+        let mut dead_switches = HashSet::with_capacity(snap.dead_switches.len());
+        for u in &snap.dead_switches {
+            let &s = uuid_to_switch.get(u).ok_or_else(|| JournalError::Mismatch {
+                detail: format!("snapshot names unknown switch {u:#018x}"),
+            })?;
+            dead_switches.insert(s);
+        }
+        let mut dead_cables = HashSet::with_capacity(snap.dead_cables.len());
+        for c in &snap.dead_cables {
+            let &p = cable_to_port.get(c).ok_or_else(|| JournalError::Mismatch {
+                detail: format!("snapshot names unknown cable {c:?}"),
+            })?;
+            dead_cables.insert(p);
+        }
+        let mut store = LftStore::new();
+        store.resume_from(Arc::clone(&snap.epoch));
+        let probe = cfg.probe.clone().map(RiskProbe::new);
+        let chaos = cfg.chaos.clone().map(ChaosState::new);
+        let mut mgr = Self {
+            reference,
+            cfg,
+            dead_switches,
+            dead_cables,
+            uuid_to_switch,
+            cable_to_port,
+            port_to_cable,
+            store,
+            metrics: Metrics::default(),
+            reroute_hist: Histogram::latency_ms(),
+            engine,
+            degrade_scratch: DegradeScratch::default(),
+            current_topo: Topology::default(),
+            current_lft: Lft::default(),
+            current_cable_ports: HashMap::new(),
+            cable_map_stale: true,
+            patched_dead_ports: HashSet::new(),
+            touched_rows: Vec::new(),
+            probe,
+            events_seen: snap.events_seen as usize,
+            chaos,
+            rollback_switches: HashSet::new(),
+            rollback_cables: HashSet::new(),
+        };
+        mgr.metrics.equipment_down = snap.equipment_down;
+        mgr.metrics.equipment_up = snap.equipment_up;
+        degrade::apply_into(
+            &mgr.reference,
+            &mgr.dead_switches,
+            &mgr.dead_cables,
+            &mut mgr.current_topo,
+            &mut mgr.degrade_scratch,
+        );
+        if !mgr.store.restore_into(&mgr.current_topo, &mut mgr.current_lft) {
+            return Err(JournalError::Mismatch {
+                detail: String::from(
+                    "snapshot tables do not cover the topology its dead sets describe",
+                ),
+            }
+            .into());
+        }
+        Ok(mgr)
+    }
+
+    /// Warm restart from a journal directory: load the newest verifying
+    /// snapshot (or cold-start on an empty directory), replay the
+    /// journal tail through the gated apply path, and hand back the
+    /// reconverged manager plus the append-ready journal. Because
+    /// reroutes are pure functions of the dead sets and only
+    /// gate-passed batches were journaled, the recovered LFT bytes,
+    /// dead sets, and epoch counters are identical to a run that never
+    /// crashed (proven per write boundary in `tests/service_journal.rs`).
+    ///
+    /// Replay runs with chaos and the watchdog disabled — the tail
+    /// batches passed the gate once, and replay timing or injected
+    /// faults must not quarantine them — then restores both. A tail
+    /// batch that quarantines anyway means the journal does not belong
+    /// to this (topology, config) and is a typed error.
+    pub fn resume_from_dir(
+        reference: Topology,
+        cfg: ManagerConfig,
+        jcfg: JournalConfig,
+    ) -> Result<(Self, Journal, ResumeInfo), FabricError> {
+        let engine = registry::create(cfg.algo);
+        Self::resume_from_dir_with_engine(reference, cfg, engine, jcfg)
+    }
+
+    /// [`FabricManager::resume_from_dir`] with a caller-constructed
+    /// engine. Replay reconverges byte-identically only when the engine
+    /// (and its options) match the one that produced the journal.
+    pub fn resume_from_dir_with_engine(
+        reference: Topology,
+        cfg: ManagerConfig,
+        engine: Box<dyn RoutingEngine>,
+        jcfg: JournalConfig,
+    ) -> Result<(Self, Journal, ResumeInfo), FabricError> {
+        let t0 = time::now();
+        let fp = reference.fingerprint();
+        let rec = journal::load(jcfg, fp)?;
+        let cold_start = rec.snapshot.is_none();
+        let mut mgr = match &rec.snapshot {
+            Some(snap) => Self::resume_with_engine(reference, cfg, engine, snap)?,
+            None => Self::with_engine(reference, cfg, engine),
+        };
+        let saved_watchdog = mgr.cfg.watchdog_ms;
+        let saved_chaos = mgr.cfg.chaos.clone();
+        mgr.set_chaos(None);
+        mgr.cfg.watchdog_ms = 0;
+        let mut replayed_batches = 0u64;
+        let mut replayed_events = 0u64;
+        for (seq, events) in &rec.tail {
+            if let Err(q) = mgr.try_apply_batch(events) {
+                return Err(JournalError::Mismatch {
+                    detail: format!(
+                        "replayed batch {seq} quarantined ({}): journal does not \
+                         match this topology/config",
+                        q.reason.tag()
+                    ),
+                }
+                .into());
+            }
+            replayed_batches += 1;
+            replayed_events += events.len() as u64;
+        }
+        mgr.set_chaos(saved_chaos);
+        mgr.cfg.watchdog_ms = saved_watchdog;
+        Metrics::add(&mut mgr.metrics.resume_replayed, replayed_events);
+        Metrics::add(&mut mgr.metrics.tail_truncations, rec.tail_truncations);
+        Ok((
+            mgr,
+            rec.journal,
+            ResumeInfo {
+                replayed_batches,
+                replayed_events,
+                tail_truncations: rec.tail_truncations,
+                snapshots_skipped: rec.snapshots_skipped,
+                cold_start,
+                resume_ms: t0.elapsed().as_secs_f64() * 1e3,
+            },
+        ))
+    }
+}
+
+/// What a [`FabricManager::resume_from_dir`] recovery did (feeds
+/// [`ServiceStats`](crate::fabric::ServiceStats) and BENCH_service v3).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ResumeInfo {
+    pub replayed_batches: u64,
+    pub replayed_events: u64,
+    pub tail_truncations: u64,
+    /// Snapshot files skipped because they failed verification.
+    pub snapshots_skipped: u64,
+    /// True when no snapshot was usable (empty dir, or journal-only).
+    pub cold_start: bool,
+    /// Wall-clock of the whole recovery (load + replay), milliseconds.
+    pub resume_ms: f64,
 }
 
 /// Best-effort extraction of a panic payload's message (for

@@ -166,6 +166,19 @@ pub struct Metrics {
     /// Watchdog deadline escalations: one per delta→full escalation and
     /// one per full→quarantine step.
     pub watchdog_escalations: u64,
+    /// Batches made durable in the event journal (one fsynced record per
+    /// gate-passed batch; quarantined batches are never journaled).
+    pub journal_appends: u64,
+    /// Bytes appended to the journal (records only, headers excluded).
+    pub journal_bytes: u64,
+    /// Checksummed snapshots written (each followed by compaction).
+    pub snapshots_written: u64,
+    /// Journal segments deleted by snapshot compaction.
+    pub compactions: u64,
+    /// Events replayed from the journal tail during a warm restart.
+    pub resume_replayed: u64,
+    /// Torn/corrupt record tails detected and truncated during recovery.
+    pub tail_truncations: u64,
 }
 
 impl Metrics {
@@ -218,6 +231,26 @@ impl Metrics {
                 self.watchdog_escalations
             );
         }
+        // Durability counters only when a journal is in play (same
+        // scannability rule as the recovery-ladder group above).
+        if self.journal_appends
+            + self.snapshots_written
+            + self.compactions
+            + self.resume_replayed
+            + self.tail_truncations
+            > 0
+        {
+            let _ = write!(
+                s,
+                " journal_appends={} journal_bytes={} snapshots={} compactions={} resume_replayed={} tail_truncations={}",
+                self.journal_appends,
+                self.journal_bytes,
+                self.snapshots_written,
+                self.compactions,
+                self.resume_replayed,
+                self.tail_truncations
+            );
+        }
         s
     }
 }
@@ -262,6 +295,15 @@ mod tests {
         };
         assert!(m.render().contains("rollbacks=1"));
         assert!(m.render().contains("panics_contained=2"));
+        // Durability counters likewise appear only when a journal ran.
+        assert!(!m.render().contains("journal_appends="));
+        let m = Metrics {
+            journal_appends: 3,
+            snapshots_written: 1,
+            ..Default::default()
+        };
+        assert!(m.render().contains("journal_appends=3"));
+        assert!(m.render().contains("snapshots=1"));
     }
 
     #[test]

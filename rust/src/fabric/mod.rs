@@ -6,6 +6,7 @@
 
 pub mod error;
 pub mod events;
+pub mod journal;
 pub mod lft_store;
 pub mod manager;
 pub mod metrics;
@@ -13,6 +14,7 @@ pub mod service;
 
 pub use error::FabricError;
 pub use events::{EquipmentKey, Event, EventKind};
+pub use journal::{Journal, JournalConfig, JournalError, Recovered, SnapshotState};
 pub use lft_store::{FabricEpoch, FabricReader};
 pub use manager::{
     FabricManager, ManagerConfig, ManagerReport, PatchReport, ProbeConfig, QuarantineReason,

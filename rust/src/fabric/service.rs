@@ -49,10 +49,12 @@
 
 use super::error::FabricError;
 use super::events::{EquipmentKey, Event};
+use super::journal::{Journal, JournalConfig, JournalError};
 use super::lft_store::FabricReader;
-use super::manager::{FabricManager, ManagerConfig, ManagerReport, QuarantineReason};
+use super::manager::{FabricManager, ManagerConfig, ManagerReport, QuarantineReason, ResumeInfo};
 use super::metrics::Histogram;
 use crate::topology::Topology;
+use crate::util::chaos::ChaosPoint;
 use crate::util::sync::thread::{spawn_named, JoinHandle};
 use crate::util::sync::{lock, Arc, Condvar, Mutex};
 use crate::util::time;
@@ -118,6 +120,13 @@ pub struct ServiceConfig {
     pub queue_cap: usize,
     /// What to do when the queue is full.
     pub policy: QueuePolicy,
+    /// Durable-state configuration. `None` (the default) keeps the
+    /// service fully in-memory — zero I/O anywhere near the reroute hot
+    /// path. `Some` journals every gate-passed batch before it commits
+    /// and snapshots on the configured cadence; batches then always take
+    /// the gated apply path (durability implies the gate: only validated
+    /// state is worth persisting).
+    pub journal: Option<JournalConfig>,
 }
 
 impl Default for ServiceConfig {
@@ -128,6 +137,7 @@ impl Default for ServiceConfig {
             max_batch: 0,
             queue_cap: 0,
             policy: QueuePolicy::Block,
+            journal: None,
         }
     }
 }
@@ -436,6 +446,24 @@ pub struct ServiceStats {
     /// (contained panic, watchdog escalation, or rollback), ms — the
     /// "recovery latency" columns of EXPERIMENTS.md §"Chaos soak".
     pub recovery: Histogram,
+    /// Batches made durable in the journal (0 without one).
+    pub journal_appends: u64,
+    /// Record bytes appended to the journal.
+    pub journal_bytes: u64,
+    /// Checksummed snapshots written over the run.
+    pub snapshots_written: u64,
+    /// Snapshot bytes written over the run.
+    pub snapshot_bytes: u64,
+    /// Journal segments deleted by snapshot compaction.
+    pub compactions: u64,
+    /// Events replayed from the journal tail when this run resumed
+    /// (0 for a [`FabricService::spawn`] cold start).
+    pub resume_replayed: u64,
+    /// Torn/corrupt record tails truncated during the resume scan.
+    pub tail_truncations: u64,
+    /// Wall-clock of the warm restart (snapshot load + tail replay),
+    /// milliseconds; 0.0 without a resume.
+    pub resume_ms: f64,
 }
 
 impl ServiceStats {
@@ -450,6 +478,14 @@ impl ServiceStats {
             events_folded: 0,
             queue_high_water: 0,
             recovery: Histogram::reaction_ms(),
+            journal_appends: 0,
+            journal_bytes: 0,
+            snapshots_written: 0,
+            snapshot_bytes: 0,
+            compactions: 0,
+            resume_replayed: 0,
+            tail_truncations: 0,
+            resume_ms: 0.0,
         }
     }
 
@@ -478,6 +514,26 @@ impl ServiceStats {
         if self.recovery.count() > 0 {
             s.push_str(&self.recovery.render("recovery"));
         }
+        // The durability line appears only when a journal was in play
+        // (same scannability rule as the recovery group).
+        if self.journal_appends
+            + self.snapshots_written
+            + self.resume_replayed
+            + self.tail_truncations
+            > 0
+        {
+            s.push_str(&format!(
+                "journal: appends={} bytes={} snapshots={} snapshot_bytes={} compactions={} resume_replayed={} tail_truncations={} resume_ms={:.2}\n",
+                self.journal_appends,
+                self.journal_bytes,
+                self.snapshots_written,
+                self.snapshot_bytes,
+                self.compactions,
+                self.resume_replayed,
+                self.tail_truncations,
+                self.resume_ms
+            ));
+        }
         s
     }
 }
@@ -490,12 +546,20 @@ pub struct FabricService {
     reports: Receiver<BatchReport>,
     reader: FabricReader,
     join: JoinHandle<(FabricManager, ServiceStats)>,
+    events_recovered: u64,
 }
 
 impl FabricService {
     /// Build the manager over `reference` (computing the initial tables
     /// synchronously — the returned service is immediately routable) and
     /// start the service loop on a named thread.
+    ///
+    /// With [`ServiceConfig::journal`] set, this is a **cold start**: it
+    /// creates the journal and refuses (typed, via the `io::Error`
+    /// wrapper) a directory that already holds recoverable state —
+    /// silently shadowing a history is worse than stopping; use
+    /// [`FabricService::resume`] instead, which also handles an empty
+    /// directory.
     pub fn spawn(reference: Topology, cfg: ServiceConfig) -> std::io::Result<Self> {
         let mgr = FabricManager::new(reference, cfg.manager.clone());
         Self::spawn_with(mgr, cfg)
@@ -504,17 +568,61 @@ impl FabricService {
     /// Start the loop over a caller-built manager (custom engine,
     /// pre-applied fault state).
     pub fn spawn_with(mgr: FabricManager, cfg: ServiceConfig) -> std::io::Result<Self> {
+        let journal = match &cfg.journal {
+            Some(jc) => Some(
+                Journal::create(jc.clone(), mgr.fingerprint())
+                    .map_err(std::io::Error::other)?,
+            ),
+            None => None,
+        };
+        Self::launch(mgr, cfg, journal, ResumeInfo::default())
+    }
+
+    /// **Warm restart**: recover the newest verifying snapshot from the
+    /// journal directory ([`ServiceConfig::journal`], required), replay
+    /// the journal tail through the gated apply path, and start the loop
+    /// on the reconverged manager. An empty (or absent) directory is a
+    /// clean cold start — operators can always pass `--resume`. The
+    /// recovered LFT bytes, dead sets, and epoch counters are identical
+    /// to a run that never crashed (`tests/service_journal.rs`).
+    pub fn resume(reference: Topology, cfg: ServiceConfig) -> Result<Self, FabricError> {
+        let jcfg = cfg.journal.clone().ok_or(FabricError::Journal(JournalError::Mismatch {
+            detail: String::from("FabricService::resume requires ServiceConfig.journal"),
+        }))?;
+        let (mgr, journal, info) =
+            FabricManager::resume_from_dir(reference, cfg.manager.clone(), jcfg)?;
+        Self::launch(mgr, cfg, Some(journal), info)
+            .map_err(|e| FabricError::Spawn(e.to_string()))
+    }
+
+    fn launch(
+        mgr: FabricManager,
+        cfg: ServiceConfig,
+        journal: Option<Journal>,
+        resume: ResumeInfo,
+    ) -> std::io::Result<Self> {
         let reader = mgr.reader();
+        let events_recovered = mgr.events_seen() as u64;
         let queue = Arc::new(EventQueue::new(cfg.queue_cap, cfg.policy));
         let events = EventSender::attach(&queue);
         let (rtx, rrx) = channel();
-        let join = spawn_named("fabric-service", move || run(mgr, cfg, queue, rtx))?;
+        let join =
+            spawn_named("fabric-service", move || run(mgr, cfg, queue, rtx, journal, resume))?;
         Ok(Self {
             events,
             reports: rrx,
             reader,
             join,
+            events_recovered,
         })
+    }
+
+    /// Events already applied when the loop started: `0` on a cold
+    /// start, snapshot + replayed tail after [`FabricService::resume`].
+    /// A harness replaying a deterministic schedule uses this as its
+    /// restart position.
+    pub fn events_recovered(&self) -> u64 {
+        self.events_recovered
     }
 
     /// A fresh ingestion handle (cloneable; one per producer thread).
@@ -558,8 +666,13 @@ fn run(
     cfg: ServiceConfig,
     queue: Arc<EventQueue>,
     tx: Sender<BatchReport>,
+    mut journal: Option<Journal>,
+    resume: ResumeInfo,
 ) -> (FabricManager, ServiceStats) {
     let mut stats = ServiceStats::new();
+    stats.resume_replayed = resume.replayed_events;
+    stats.tail_truncations = resume.tail_truncations;
+    stats.resume_ms = resume.resume_ms;
     let window = Duration::from_millis(cfg.window_ms);
     let cap = if cfg.max_batch == 0 {
         usize::MAX
@@ -567,8 +680,11 @@ fn run(
         cfg.max_batch
     };
     // The manager's own config is authoritative (spawn_with may wrap a
-    // manager whose config differs from cfg.manager).
-    let gated = mgr.config().gate;
+    // manager whose config differs from cfg.manager). A journal implies
+    // the gate: only validated state is worth making durable.
+    let gated = mgr.config().gate || journal.is_some();
+    let snapshot_every = cfg.journal.as_ref().map_or(0, |j| j.snapshot_every);
+    let mut batches_since_snapshot = 0u64;
     let mut events: Vec<Event> = Vec::new();
     let mut stamps: Vec<(Instant, u64)> = Vec::new();
     let mut reports_alive = true;
@@ -611,7 +727,7 @@ fn run(
             + mgr.metrics.watchdog_escalations;
         let t_apply = time::now();
         let (report, quarantined) = if gated {
-            match mgr.try_apply_batch(&events) {
+            match mgr.try_apply_batch_journaled(&events, journal.as_mut()) {
                 Ok(r) => (r, None),
                 Err(q) => {
                     stats.quarantined_batches = stats.quarantined_batches.saturating_add(1);
@@ -621,6 +737,24 @@ fn run(
         } else {
             (mgr.apply_batch(&events), None)
         };
+        // Snapshot cadence: every `snapshot_every` *applied* batches
+        // (quarantined ones moved no durable state). The snapshot covers
+        // everything up to the journal's next sequence, so compaction
+        // can truncate the segments behind it. `SnapshotStale` chaos
+        // skips a due snapshot — recovery then replays a longer tail —
+        // and a write failure is non-fatal: the journal alone recovers.
+        if quarantined.is_none() && journal.is_some() {
+            batches_since_snapshot += 1;
+            if snapshot_every > 0 && batches_since_snapshot >= snapshot_every {
+                batches_since_snapshot = 0;
+                if !mgr.chaos_fire(ChaosPoint::SnapshotStale) {
+                    if let Some(j) = journal.as_mut() {
+                        let snap = mgr.snapshot_state(j.next_seq());
+                        let _ = j.write_snapshot(&snap);
+                    }
+                }
+            }
+        }
         let done = time::now();
         let ladder_after = mgr.metrics.rollbacks
             + mgr.metrics.panics_contained
@@ -667,6 +801,18 @@ fn run(
         stats.events_shed = g.shed;
         stats.events_folded = g.folded_events;
         stats.queue_high_water = g.high_water;
+    }
+    // And the journal's lifetime I/O accounting — into both the service
+    // stats and the manager's metrics line.
+    if let Some(j) = &journal {
+        let c = j.counters();
+        stats.journal_appends = c.appends;
+        stats.journal_bytes = c.append_bytes;
+        stats.snapshots_written = c.snapshots_written;
+        stats.snapshot_bytes = c.snapshot_bytes;
+        stats.compactions = c.compactions;
+        crate::fabric::metrics::Metrics::add(&mut mgr.metrics.snapshots_written, c.snapshots_written);
+        crate::fabric::metrics::Metrics::add(&mut mgr.metrics.compactions, c.compactions);
     }
     queue.close();
     (mgr, stats)
@@ -886,6 +1032,49 @@ mod tests {
         q.close();
         let err = sender.send(ev(1, EventKind::SwitchDown(1))).unwrap_err();
         assert_eq!(err, FabricError::ServiceStopped);
+    }
+
+    #[test]
+    fn journaled_service_survives_a_crash_and_resumes_identically() {
+        let t = PgftParams::fig1().build();
+        let victim = uuid_of_level(&t, 1);
+        let dir = std::env::temp_dir().join(format!(
+            "dmodc-svc-journal-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut jc = JournalConfig::new(&dir);
+        jc.snapshot_every = 2;
+        let cfg = ServiceConfig {
+            journal: Some(jc),
+            ..Default::default()
+        };
+        let svc = FabricService::spawn(t.clone(), cfg.clone()).expect("spawn");
+        let sender = svc.sender();
+        sender.send(ev(1, EventKind::SwitchDown(victim))).unwrap();
+        drop(sender);
+        let (mgr, stats) = svc.shutdown();
+        assert!(stats.journal_appends >= 1, "batch must be journaled");
+        assert_eq!(stats.quarantined_batches, 0);
+        // A cold start over recoverable state must be refused …
+        assert!(
+            FabricService::spawn(t.clone(), cfg.clone()).is_err(),
+            "spawn must refuse a dir holding journal state"
+        );
+        // … while resume reconverges to byte-identical state (there was
+        // no clean shutdown marker — the journal alone carries it).
+        let svc2 = FabricService::resume(t, cfg).expect("resume");
+        let (mgr2, stats2) = svc2.shutdown();
+        assert_eq!(mgr2.current().1.raw(), mgr.current().1.raw());
+        assert_eq!(mgr2.events_seen(), mgr.events_seen());
+        assert_eq!(mgr2.dead_equipment(), mgr.dead_equipment());
+        assert_eq!(
+            mgr2.reader().tables().epoch(),
+            mgr.reader().tables().epoch(),
+            "durable epoch sequence must continue across the crash"
+        );
+        assert_eq!(stats2.resume_replayed, 1, "the one batch replays");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

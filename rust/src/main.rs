@@ -19,7 +19,9 @@
 //!   dmodc-fm fabric --nodes 648 --events 40
 
 use dmodc::analysis::{campaign, CongestionAnalyzer};
-use dmodc::fabric::{events, FabricManager, FabricService, ManagerConfig, ServiceConfig};
+use dmodc::fabric::{
+    events, FabricManager, FabricService, JournalConfig, ManagerConfig, ServiceConfig,
+};
 use dmodc::prelude::*;
 use dmodc::routing::{registry, validity};
 use dmodc::util::cli::Args;
@@ -97,7 +99,10 @@ fn cmd_route() {
     let lft = engine.route_once(&t);
     let dt = t0.elapsed().as_secs_f64();
     if !p.get("dump").is_empty() {
-        dmodc::routing::dump::dump_to_file(&t, &lft, p.get("dump")).expect("write dump");
+        if let Err(e) = dmodc::routing::dump::dump_to_file(&t, &lft, p.get("dump")) {
+            eprintln!("{e}");
+            std::process::exit(1);
+        }
         println!("wrote LFT dump to {}", p.get("dump"));
     }
     // Engine-level validation reuses just-computed costs where available.
@@ -157,7 +162,10 @@ fn cmd_degrade() {
         .parse_skip(1);
     let t = build_topo(&p);
     let algo: Algo = p.get_parsed("algo");
-    let kind = Equipment::parse(p.get("kind")).unwrap();
+    let kind = Equipment::parse(p.get("kind")).unwrap_or_else(|e| {
+        eprintln!("bad --kind: {e}");
+        std::process::exit(2);
+    });
     let mut rng = Rng::new(p.get_u64("seed"));
     let (amount, dt) = degrade::log_uniform_throw(&t, &mut rng, kind);
     let lft = registry::create(algo).route_once(&dt);
@@ -259,7 +267,10 @@ fn cmd_campaign() {
         }
     }
     if !p.get("csv").is_empty() {
-        campaign::write_csv(&rows, p.get("csv")).expect("write campaign CSV");
+        if let Err(e) = campaign::write_csv(&rows, p.get("csv")) {
+            eprintln!("could not write campaign CSV {}: {e}", p.get("csv"));
+            std::process::exit(1);
+        }
         println!("wrote {} rows to {}", rows.len(), p.get("csv"));
     }
     // Summary: median value over throws per (engine, level, pattern).
@@ -311,8 +322,14 @@ fn cmd_fabric() {
         .flag("policy", "block", "--stream: full-queue policy (block|coalesce|reject)")
         .flag("watchdog-ms", "0", "--stream: reroute watchdog deadline (0 = off)")
         .flag("chaos", "0", "--stream: chaos-plan seed, requires chaos support (0 = off)")
+        .flag("journal", "", "--stream: durable-state directory (crash-consistent journal)")
+        .switch("resume", "--stream: warm-restart from --journal state instead of cold start")
         .parse_skip(1);
     let t = build_topo(&p);
+    if !p.get_bool("stream") && (!p.get("journal").is_empty() || p.get_bool("resume")) {
+        eprintln!("--journal/--resume require --stream (the one-shot path keeps no durable state)");
+        std::process::exit(2);
+    }
     let mut rng = Rng::new(p.get_u64("seed"));
     let schedule = events::random_schedule(
         &t,
@@ -373,18 +390,34 @@ fn cmd_fabric_stream(t: Topology, schedule: Vec<events::Event>, p: &dmodc::util:
         max_batch: p.get_usize("max-batch"),
         queue_cap: p.get_usize("queue-cap"),
         policy: p.get_parsed("policy"),
+        journal: {
+            let dir = p.get("journal");
+            (!dir.is_empty()).then(|| JournalConfig::new(dir))
+        },
     };
     println!(
-        "service: window={}ms max_batch={} rate={}/s queue_cap={} policy={} watchdog={}ms chaos={}",
+        "service: window={}ms max_batch={} rate={}/s queue_cap={} policy={} watchdog={}ms \
+         chaos={} journal={}",
         cfg.window_ms,
         cfg.max_batch,
         p.get("rate"),
         cfg.queue_cap,
         cfg.policy.name(),
         cfg.manager.watchdog_ms,
-        chaos_seed
+        chaos_seed,
+        if p.get("journal").is_empty() { "off" } else { p.get("journal") }
     );
-    let svc = FabricService::spawn(t, cfg).expect("spawn fabric service");
+    let svc = if p.get_bool("resume") {
+        FabricService::resume(t, cfg).unwrap_or_else(|e| {
+            eprintln!("could not resume the fabric service: {e}");
+            std::process::exit(1);
+        })
+    } else {
+        FabricService::spawn(t, cfg).unwrap_or_else(|e| {
+            eprintln!("could not start the fabric service: {e}");
+            std::process::exit(1);
+        })
+    };
     let sender = svc.sender();
     let rate = p.get_f64("rate");
     let gap = if rate > 0.0 {
@@ -400,7 +433,13 @@ fn cmd_fabric_stream(t: Topology, schedule: Vec<events::Event>, p: &dmodc::util:
         if let Err(err) = sender.send(e) {
             match err {
                 dmodc::fabric::FabricError::QueueFull { .. } => shed += 1,
-                other => panic!("service hung up early: {other}"),
+                // The service loop exited under us (crash or premature
+                // shutdown) — an operational failure, not a bug: report
+                // it and exit nonzero without a panic backtrace.
+                other => {
+                    eprintln!("fabric service stopped while the storm was still feeding: {other}");
+                    std::process::exit(1);
+                }
             }
         }
         if !gap.is_zero() {
@@ -413,7 +452,16 @@ fn cmd_fabric_stream(t: Topology, schedule: Vec<events::Event>, p: &dmodc::util:
     ]);
     let mut seen = 0usize;
     while seen + shed < total {
-        let br = svc.reports().recv().expect("service died mid-storm");
+        let br = match svc.reports().recv() {
+            Ok(br) => br,
+            Err(_) => {
+                eprintln!(
+                    "fabric service stopped before the storm drained \
+                     ({seen}/{total} events reported, {shed} shed)"
+                );
+                std::process::exit(1);
+            }
+        };
         seen += br.events;
         tab.row(vec![
             br.batch_idx.to_string(),

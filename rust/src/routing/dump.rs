@@ -17,6 +17,35 @@ use crate::topology::Topology;
 use std::fmt::Write as _;
 use std::io::{BufRead, BufReader, Read};
 
+/// A dump-file I/O or parse failure, always naming the offending path —
+/// operators hand these files between tools, so "No such file or
+/// directory" without the path is useless.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DumpError {
+    /// The file the operation was aimed at.
+    pub path: String,
+    /// What was being attempted (`"write"`, `"read"`, `"parse"`, …).
+    pub op: &'static str,
+    /// Underlying OS error or parse diagnostic.
+    pub detail: String,
+}
+
+impl std::fmt::Display for DumpError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "LFT dump: could not {} {}: {}", self.op, self.path, self.detail)
+    }
+}
+
+impl std::error::Error for DumpError {}
+
+fn dump_err(path: &str, op: &'static str, detail: impl std::fmt::Display) -> DumpError {
+    DumpError {
+        path: path.to_string(),
+        op,
+        detail: detail.to_string(),
+    }
+}
+
 /// Serialize tables (with enough topology identity to re-bind them).
 pub fn dump(topo: &Topology, lft: &Lft) -> String {
     let mut out = String::new();
@@ -47,15 +76,20 @@ pub fn dump(topo: &Topology, lft: &Lft) -> String {
 }
 
 /// Write a dump to a file, creating parent directories.
-pub fn dump_to_file(
-    topo: &Topology,
-    lft: &Lft,
-    path: &str,
-) -> std::io::Result<()> {
+pub fn dump_to_file(topo: &Topology, lft: &Lft, path: &str) -> Result<(), DumpError> {
     if let Some(parent) = std::path::Path::new(path).parent() {
-        std::fs::create_dir_all(parent)?;
+        std::fs::create_dir_all(parent)
+            .map_err(|e| dump_err(path, "create the parent directory of", e))?;
     }
-    std::fs::write(path, dump(topo, lft))
+    std::fs::write(path, dump(topo, lft)).map_err(|e| dump_err(path, "write", e))
+}
+
+/// Open and parse a dump file, binding parse errors to the path (the
+/// reader-based [`load`] keeps its path-free signature for in-memory
+/// callers and the existing tests).
+pub fn load_from_file(topo: &Topology, path: &str) -> Result<Lft, DumpError> {
+    let file = std::fs::File::open(path).map_err(|e| dump_err(path, "read", e))?;
+    load(topo, BufReader::new(file)).map_err(|e| dump_err(path, "parse", e))
 }
 
 /// Parse a dump back into an [`Lft`], validating the header against the
@@ -182,6 +216,33 @@ mod tests {
             t.switches[0].ports.len()
         );
         assert!(load(&t, bad.as_bytes()).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip_and_errors_name_the_path() {
+        let t = PgftParams::fig1().build();
+        let lft = route_unchecked(Algo::Dmodc, &t);
+        let dir = std::env::temp_dir().join(format!("dmodc-dump-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("nested/tables.lft");
+        let path = path.to_str().unwrap().to_string();
+        dump_to_file(&t, &lft, &path).unwrap();
+        assert_eq!(load_from_file(&t, &path).unwrap().raw(), lft.raw());
+        // A missing file and a parse failure both carry the path.
+        let missing = dir.join("absent.lft");
+        let missing = missing.to_str().unwrap();
+        let e = load_from_file(&t, missing).unwrap_err();
+        assert_eq!(e.op, "read");
+        assert!(e.to_string().contains(missing), "{e}");
+        std::fs::write(&path, "switch zero uuid xx\n").unwrap();
+        let e = load_from_file(&t, &path).unwrap_err();
+        assert_eq!(e.op, "parse");
+        assert!(e.to_string().contains(&path), "{e}");
+        // Writing below a regular file fails typed, naming the target.
+        let under = format!("{path}/cant/happen.lft");
+        let e = dump_to_file(&t, &lft, &under).unwrap_err();
+        assert!(e.to_string().contains(&under), "{e}");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

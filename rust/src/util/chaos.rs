@@ -21,7 +21,7 @@ use crate::util::rng::Rng;
 pub const ENABLED: bool = cfg!(any(test, debug_assertions, feature = "chaos"));
 
 /// Number of distinct injection points (array sizing for alloc-free state).
-const N_POINTS: usize = 4;
+const N_POINTS: usize = 7;
 
 /// A named fault-injection point in the fabric manager / service.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -41,6 +41,16 @@ pub enum ChaosPoint {
     /// the service window drains them — exercises the bounded queue's
     /// back-pressure policy. Queried by producers, not the service loop.
     QueueFlood = 3,
+    /// Tear the journal append mid-record (a crash inside `write`) —
+    /// exercises the recovery scan's tail-truncation path and the
+    /// append-failure quarantine.
+    TornWrite = 4,
+    /// Skip a due snapshot so recovery must replay a longer journal
+    /// tail from an older snapshot (or from sequence 0).
+    SnapshotStale = 5,
+    /// Flip a byte inside an appended record (bad sector) — exercises
+    /// the per-record CRC rejection during recovery.
+    SegmentCorrupt = 6,
 }
 
 impl ChaosPoint {
@@ -50,6 +60,9 @@ impl ChaosPoint {
         ChaosPoint::ValidationCorrupt,
         ChaosPoint::SlowReroute,
         ChaosPoint::QueueFlood,
+        ChaosPoint::TornWrite,
+        ChaosPoint::SnapshotStale,
+        ChaosPoint::SegmentCorrupt,
     ];
 
     /// Stable snake_case name (report columns, CLI plan parsing).
@@ -59,6 +72,9 @@ impl ChaosPoint {
             ChaosPoint::ValidationCorrupt => "validation_corrupt",
             ChaosPoint::SlowReroute => "slow_reroute",
             ChaosPoint::QueueFlood => "queue_flood",
+            ChaosPoint::TornWrite => "torn_write",
+            ChaosPoint::SnapshotStale => "snapshot_stale",
+            ChaosPoint::SegmentCorrupt => "segment_corrupt",
         }
     }
 
@@ -114,13 +130,18 @@ impl ChaosPlan {
     }
 
     /// The canonical soak plan: every recovery rung gets exercised, but
-    /// rarely enough that most batches still take the happy path.
+    /// rarely enough that most batches still take the happy path. The
+    /// durability points are armed too — harmless without a journal,
+    /// since unconsulted points consume no randomness (tested below).
     pub fn storm(seed: u64) -> Self {
         ChaosPlan::new(seed)
             .with(ChaosPoint::ReroutePanic, 0.10)
             .with(ChaosPoint::ValidationCorrupt, 0.10)
             .with(ChaosPoint::SlowReroute, 0.05)
             .with(ChaosPoint::QueueFlood, 0.15)
+            .with(ChaosPoint::TornWrite, 0.05)
+            .with(ChaosPoint::SnapshotStale, 0.05)
+            .with(ChaosPoint::SegmentCorrupt, 0.05)
     }
 
     /// Firing rate currently configured for `point`.

@@ -153,46 +153,74 @@ pub struct Parsed {
     positionals: Vec<String>,
 }
 
+/// Bad operator input: print the message like a usage error and exit 2 —
+/// a typo in `--events` must not produce a panic backtrace.
+fn die(msg: String) -> ! {
+    eprintln!("{msg}");
+    std::process::exit(2);
+}
+
 impl Parsed {
     pub fn get(&self, name: &str) -> &str {
+        // An undeclared flag is a programmer error (the binary never
+        // declared it), not operator input — that one stays a panic.
         self.values
             .get(name)
             .unwrap_or_else(|| panic!("flag --{name} was not declared"))
     }
 
-    pub fn get_usize(&self, name: &str) -> usize {
+    /// Fallible integer accessor; `Err` carries the operator-facing message.
+    pub fn try_get_usize(&self, name: &str) -> Result<usize, String> {
         self.get(name)
             .parse()
-            .unwrap_or_else(|_| {
-                panic!("flag --{name} expects an integer, got {:?}", self.get(name))
-            })
+            .map_err(|_| format!("flag --{name} expects an integer, got {:?}", self.get(name)))
+    }
+
+    pub fn get_usize(&self, name: &str) -> usize {
+        self.try_get_usize(name).unwrap_or_else(|m| die(m))
+    }
+
+    pub fn try_get_u64(&self, name: &str) -> Result<u64, String> {
+        self.get(name)
+            .parse()
+            .map_err(|_| format!("flag --{name} expects an integer, got {:?}", self.get(name)))
     }
 
     pub fn get_u64(&self, name: &str) -> u64 {
-        self.get(name)
-            .parse()
-            .unwrap_or_else(|_| {
-                panic!("flag --{name} expects an integer, got {:?}", self.get(name))
-            })
+        self.try_get_u64(name).unwrap_or_else(|m| die(m))
     }
 
-    /// Parse a flag through its [`std::str::FromStr`] impl (e.g.
-    /// `p.get_parsed::<Algo>("algo")`), panicking with the parse error on
-    /// bad operator input — consistent with the `get_usize` family.
-    pub fn get_parsed<T>(&self, name: &str) -> T
+    /// Fallible [`std::str::FromStr`] accessor (e.g.
+    /// `p.try_get_parsed::<Algo>("algo")`).
+    pub fn try_get_parsed<T>(&self, name: &str) -> Result<T, String>
     where
         T: std::str::FromStr,
         T::Err: std::fmt::Display,
     {
         self.get(name)
             .parse()
-            .unwrap_or_else(|e| panic!("flag --{name}: {e}"))
+            .map_err(|e| format!("flag --{name}: {e}"))
+    }
+
+    /// Parse a flag through its [`std::str::FromStr`] impl, printing the
+    /// parse error and exiting 2 on bad operator input — consistent with
+    /// the `get_usize` family.
+    pub fn get_parsed<T>(&self, name: &str) -> T
+    where
+        T: std::str::FromStr,
+        T::Err: std::fmt::Display,
+    {
+        self.try_get_parsed(name).unwrap_or_else(|m| die(m))
+    }
+
+    pub fn try_get_f64(&self, name: &str) -> Result<f64, String> {
+        self.get(name)
+            .parse()
+            .map_err(|_| format!("flag --{name} expects a float, got {:?}", self.get(name)))
     }
 
     pub fn get_f64(&self, name: &str) -> f64 {
-        self.get(name)
-            .parse()
-            .unwrap_or_else(|_| panic!("flag --{name} expects a float, got {:?}", self.get(name)))
+        self.try_get_f64(name).unwrap_or_else(|m| die(m))
     }
 
     pub fn get_bool(&self, name: &str) -> bool {
@@ -259,6 +287,24 @@ mod tests {
         let msg = r.err().unwrap();
         assert!(msg.contains("USAGE"));
         assert!(msg.contains("--x"));
+    }
+
+    #[test]
+    fn bad_operator_input_yields_typed_messages() {
+        let p = Args::new("t", "test")
+            .flag("nodes", "100", "node count")
+            .flag("rate", "0", "pace")
+            .parse_from(&toks(&["--nodes", "many", "--rate", "fast"]))
+            .unwrap();
+        let e = p.try_get_usize("nodes").unwrap_err();
+        assert!(e.contains("--nodes") && e.contains("many"), "{e}");
+        let e = p.try_get_u64("nodes").unwrap_err();
+        assert!(e.contains("integer"), "{e}");
+        let e = p.try_get_f64("rate").unwrap_err();
+        assert!(e.contains("--rate") && e.contains("float"), "{e}");
+        let e = p.try_get_parsed::<usize>("nodes").unwrap_err();
+        assert!(e.contains("--nodes"), "{e}");
+        assert_eq!(p.try_get_usize("rate"), Ok(0));
     }
 
     #[test]

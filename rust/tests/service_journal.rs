@@ -1,0 +1,546 @@
+//! Kill-point differential suite for the durable fabric state
+//! (DESIGN.md §"Durability & warm restart").
+//!
+//! The durability promise: crash the process after **any** journal write
+//! boundary — or mid-record — and a warm restart reconverges to state
+//! byte-identical to a clean run of the surviving prefix. Reroutes are
+//! pure functions of the dead sets and only gate-passed batches are
+//! journaled, so replay is deterministic reconvergence, not best-effort
+//! repair. Enforced here by:
+//!
+//! * a property fuzz over random PGFT shapes × random schedules × random
+//!   batch partitions × tiny segment/snapshot knobs: the writer's journal
+//!   directory is copied after every fsync boundary (append and
+//!   snapshot), each copy is resumed and compared against an incrementally
+//!   grown clean manager — LFT bytes, dead sets, durable epoch, and the
+//!   journal's append position must all match; every append boundary is
+//!   additionally re-checked with its last record torn mid-write;
+//! * a corrupt-file corpus for `journal::load`: truncated length prefix,
+//!   flipped CRC byte, duplicated record, fingerprint mismatches, corrupt
+//!   snapshot — typed errors or counted tail-truncations, never a panic;
+//! * a parity check that the unjournaled apply path is byte-identical to
+//!   the plain gate (no durability tax without `ServiceConfig::journal`).
+//!
+//! Tests that sweep the global worker-count override serialize on one
+//! mutex (same discipline as `tests/service_chaos.rs`).
+
+use dmodc::fabric::events::random_schedule;
+use dmodc::fabric::journal::{self, Journal, JournalConfig, JournalError};
+use dmodc::fabric::{Event, FabricManager, ManagerConfig};
+use dmodc::prelude::*;
+use dmodc::routing::common::DividerReduction;
+use dmodc::routing::dmodc::{Engine as DmodcEngine, NidOrder, Options};
+use dmodc::util::par;
+use dmodc::util::prop::{check, Check, Config};
+use dmodc::util::sync::atomic::{AtomicU64, Ordering};
+use std::path::{Path, PathBuf};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+mod common;
+use common::gen_pgft;
+
+/// Serializes tests that override the global worker count.
+fn lock() -> MutexGuard<'static, ()> {
+    static M: OnceLock<Mutex<()>> = OnceLock::new();
+    M.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+}
+
+fn engine(reduction: DividerReduction) -> Box<DmodcEngine> {
+    Box::new(DmodcEngine::new(Options {
+        reduction,
+        nid_order: NidOrder::Topological,
+    }))
+}
+
+/// Fresh unique temp directory (removed first if a previous run leaked it).
+fn fresh_dir(tag: &str) -> PathBuf {
+    static N: AtomicU64 = AtomicU64::new(0);
+    let n = N.fetch_add(1, Ordering::Relaxed);
+    let d = std::env::temp_dir().join(format!(
+        "dmodc-journal-{tag}-{}-{n}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// Copy a flat journal directory (segments + snapshots) — one saved
+/// crash state per fsync boundary.
+fn copy_dir(src: &Path, dst: &Path) {
+    std::fs::create_dir_all(dst).expect("create crash-point dir");
+    for e in std::fs::read_dir(src).expect("read journal dir") {
+        let e = e.expect("dir entry");
+        std::fs::copy(e.path(), dst.join(e.file_name())).expect("copy journal file");
+    }
+}
+
+/// Path of the newest (highest base-sequence) segment in a directory.
+fn newest_segment(dir: &Path) -> PathBuf {
+    let mut segs: Vec<PathBuf> = std::fs::read_dir(dir)
+        .expect("read journal dir")
+        .map(|e| e.expect("dir entry").path())
+        .filter(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .is_some_and(|n| n.starts_with("journal-") && n.ends_with(".log"))
+        })
+        .collect();
+    segs.sort();
+    segs.pop().expect("no journal segment present")
+}
+
+// ---------------------------------------------------------------------
+// Kill-point differential fuzz
+// ---------------------------------------------------------------------
+
+/// One saved fsync boundary of the writer run.
+struct CrashPoint {
+    dir: PathBuf,
+    /// Survivor events applied when the copy was taken.
+    applied: usize,
+    /// Size of the batch the last append wrote (0 = snapshot boundary).
+    last_batch: usize,
+    /// Writer's durable epoch at this point (and one boundary earlier).
+    epoch: u64,
+    prev_epoch: u64,
+    /// Writer's journal position (next sequence) at this point.
+    seq: u64,
+}
+
+#[derive(Clone, Debug)]
+struct Scenario {
+    params: PgftParams,
+    seed: u64,
+    split_seed: u64,
+    n_events: usize,
+    /// Tiny segment budget so the fuzz crosses rotation boundaries.
+    segment_bytes: u64,
+    /// Snapshot every this many applied batches.
+    snapshot_every: u64,
+}
+
+fn gen_scenario(rng: &mut Rng, size: f64) -> Scenario {
+    Scenario {
+        params: gen_pgft(rng, size),
+        seed: rng.next_u64(),
+        split_seed: rng.next_u64(),
+        n_events: 2 + rng.gen_range(8),
+        segment_bytes: 64 + rng.gen_range(256) as u64,
+        snapshot_every: 1 + rng.gen_range(3) as u64,
+    }
+}
+
+fn shrink_scenario(s: &Scenario) -> Vec<Scenario> {
+    let mut out = Vec::new();
+    if s.n_events > 1 {
+        out.push(Scenario {
+            n_events: s.n_events - 1,
+            ..s.clone()
+        });
+    }
+    out
+}
+
+/// Advance the clean reference manager to `upto` survivor events.
+fn advance(clean: &mut FabricManager, survivors: &[Event], fed: &mut usize, upto: usize) {
+    while *fed < upto {
+        clean.apply(&survivors[*fed]);
+        *fed += 1;
+    }
+}
+
+/// Resume one crash-point directory and compare against the clean
+/// reference: LFT bytes, dead sets, durable epoch.
+fn check_point(
+    base: &Topology,
+    cfg: &ManagerConfig,
+    jcfg: &JournalConfig,
+    reduction: DividerReduction,
+    dir: &Path,
+    clean: &FabricManager,
+    want_epoch: u64,
+    want_seq: Option<u64>,
+    label: &str,
+) -> Result<(), String> {
+    let (mgr, journal, _info) = FabricManager::resume_from_dir_with_engine(
+        base.clone(),
+        cfg.clone(),
+        engine(reduction),
+        JournalConfig {
+            dir: dir.to_path_buf(),
+            ..jcfg.clone()
+        },
+    )
+    .map_err(|e| format!("{reduction:?}: {label}: resume failed: {e}"))?;
+    if mgr.current().1.raw() != clean.current().1.raw() {
+        let diff = mgr
+            .current()
+            .1
+            .raw()
+            .iter()
+            .zip(clean.current().1.raw())
+            .filter(|(a, b)| a != b)
+            .count();
+        return Err(format!(
+            "{reduction:?}: {label}: recovered LFT diverged from the clean \
+             prefix replay in {diff} entries"
+        ));
+    }
+    if mgr.dead_equipment() != clean.dead_equipment() {
+        return Err(format!(
+            "{reduction:?}: {label}: recovered dead sets diverged from the \
+             clean prefix replay"
+        ));
+    }
+    let got_epoch = mgr.reader().tables().epoch();
+    if got_epoch != want_epoch {
+        return Err(format!(
+            "{reduction:?}: {label}: durable epoch {got_epoch} after resume, \
+             writer had {want_epoch}"
+        ));
+    }
+    if let Some(seq) = want_seq {
+        if journal.next_seq() != seq {
+            return Err(format!(
+                "{reduction:?}: {label}: journal resumed at sequence {}, \
+                 writer was at {seq}",
+                journal.next_seq()
+            ));
+        }
+    }
+    mgr.reader()
+        .tables()
+        .verify()
+        .map_err(|e| format!("{reduction:?}: {label}: recovered epoch failed verification: {e}"))
+}
+
+/// The fuzz body: write a journaled run, snapshotting on a small cadence
+/// and copying the directory at every fsync boundary; then resume every
+/// copy (plus a torn-tail variant of every append boundary) and require
+/// exact reconvergence with a clean manager fed the surviving prefix.
+fn run_scenario(s: &Scenario, reduction: DividerReduction) -> Result<(), String> {
+    let base = s.params.build();
+    let mut rng = Rng::new(s.seed);
+    let schedule = random_schedule(&base, &mut rng, s.n_events, 1, 5);
+    let dir = fresh_dir("fuzz");
+    let save_root = fresh_dir("fuzz-save");
+    let mut jcfg = JournalConfig::new(&dir);
+    jcfg.segment_bytes = s.segment_bytes;
+    jcfg.snapshot_every = s.snapshot_every;
+    let mut journal = Journal::create(jcfg.clone(), base.fingerprint())
+        .map_err(|e| format!("{reduction:?}: create: {e}"))?;
+    let cfg = ManagerConfig {
+        gate: true,
+        ..Default::default()
+    };
+    let mut mgr = FabricManager::with_engine(base.clone(), cfg.clone(), engine(reduction));
+    let mut survivors: Vec<Event> = Vec::new();
+    let mut points: Vec<CrashPoint> = Vec::new();
+    let mut prev_epoch = mgr.reader().tables().epoch();
+    let mut split = Rng::new(s.split_seed);
+    let mut batches = 0u64;
+    let mut op = 0usize;
+    let mut save = |op: &mut usize, dir: &Path| -> PathBuf {
+        let p = save_root.join(format!("op{op:04}"));
+        *op += 1;
+        copy_dir(dir, &p);
+        p
+    };
+    let mut i = 0usize;
+    while i < schedule.len() {
+        let k = (1 + split.gen_range(4)).min(schedule.len() - i);
+        let batch = &schedule[i..i + k];
+        i += k;
+        // A (rare) gate quarantine is not journaled and drops out of the
+        // surviving prefix — exactly like the chaos differential.
+        if mgr.try_apply_batch_journaled(batch, Some(&mut journal)).is_err() {
+            continue;
+        }
+        survivors.extend_from_slice(batch);
+        batches += 1;
+        let epoch = mgr.reader().tables().epoch();
+        points.push(CrashPoint {
+            dir: save(&mut op, &dir),
+            applied: survivors.len(),
+            last_batch: k,
+            epoch,
+            prev_epoch,
+            seq: journal.next_seq(),
+        });
+        if batches % s.snapshot_every == 0 {
+            journal
+                .write_snapshot(&mgr.snapshot_state(journal.next_seq()))
+                .map_err(|e| format!("{reduction:?}: snapshot: {e}"))?;
+            points.push(CrashPoint {
+                dir: save(&mut op, &dir),
+                applied: survivors.len(),
+                last_batch: 0,
+                epoch,
+                prev_epoch,
+                seq: journal.next_seq(),
+            });
+        }
+        prev_epoch = epoch;
+    }
+
+    // Clean reference, grown incrementally (crash points are monotone).
+    let mut clean =
+        FabricManager::with_engine(base.clone(), ManagerConfig::default(), engine(reduction));
+    let mut fed = 0usize;
+    for pt in &points {
+        if pt.last_batch > 0 {
+            // Mid-record crash: tear the last record of the newest
+            // segment; the recovered state must drop exactly that batch.
+            advance(&mut clean, &survivors, &mut fed, pt.applied - pt.last_batch);
+            let torn_dir = PathBuf::from(format!("{}-torn", pt.dir.display()));
+            copy_dir(&pt.dir, &torn_dir);
+            let seg = newest_segment(&torn_dir);
+            let len = std::fs::metadata(&seg).expect("segment metadata").len();
+            let f = std::fs::OpenOptions::new()
+                .write(true)
+                .open(&seg)
+                .expect("open segment for tearing");
+            f.set_len(len - 3).expect("tear segment tail");
+            check_point(
+                &base,
+                &cfg,
+                &jcfg,
+                reduction,
+                &torn_dir,
+                &clean,
+                pt.prev_epoch,
+                Some(pt.seq - 1),
+                &format!("torn tail at {} events", pt.applied),
+            )?;
+        }
+        advance(&mut clean, &survivors, &mut fed, pt.applied);
+        check_point(
+            &base,
+            &cfg,
+            &jcfg,
+            reduction,
+            &pt.dir,
+            &clean,
+            pt.epoch,
+            Some(pt.seq),
+            &format!(
+                "{} boundary at {} events",
+                if pt.last_batch > 0 { "append" } else { "snapshot" },
+                pt.applied
+            ),
+        )?;
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+    let _ = std::fs::remove_dir_all(&save_root);
+    Ok(())
+}
+
+fn fuzz_at(threads: usize) {
+    let _g = lock();
+    par::set_threads(Some(threads));
+    for reduction in [DividerReduction::Max, DividerReduction::FirstPath] {
+        check(
+            &format!("journal-killpoint-differential-{reduction:?}-t{threads}"),
+            Config::default(),
+            gen_scenario,
+            shrink_scenario,
+            |s| match run_scenario(s, reduction) {
+                Ok(()) => Check::Pass,
+                Err(msg) => Check::Fail(msg),
+            },
+        );
+    }
+    par::set_threads(None);
+}
+
+#[test]
+fn killpoint_fuzz_recovery_differential_single_thread() {
+    fuzz_at(1);
+}
+
+#[test]
+fn killpoint_fuzz_recovery_differential_eight_threads() {
+    fuzz_at(8);
+}
+
+// ---------------------------------------------------------------------
+// Corrupt-file corpus
+// ---------------------------------------------------------------------
+
+/// Write `n` single-event batches into a journal at `dir`; returns the
+/// topology, the schedule, and the byte offsets of each record boundary
+/// in the (single) live segment.
+fn seed_journal(dir: &Path, n: usize, snapshot_after: Option<usize>) -> (Topology, Vec<Event>, Vec<u64>) {
+    let t = PgftParams::fig1().build();
+    let mut rng = Rng::new(0x10AD);
+    let schedule = random_schedule(&t, &mut rng, n, 1, 0);
+    let jcfg = JournalConfig::new(dir);
+    let mut j = Journal::create(jcfg, t.fingerprint()).expect("create journal");
+    let mut mgr = FabricManager::new(
+        t.clone(),
+        ManagerConfig {
+            gate: true,
+            ..Default::default()
+        },
+    );
+    let mut offsets = Vec::new();
+    for (i, e) in schedule.iter().enumerate() {
+        mgr.try_apply_batch_journaled(std::slice::from_ref(e), Some(&mut j))
+            .unwrap_or_else(|q| panic!("seed batch quarantined: {}", q.reason.tag()));
+        offsets.push(
+            std::fs::metadata(newest_segment(dir)).expect("segment metadata").len(),
+        );
+        if snapshot_after == Some(i + 1) {
+            j.write_snapshot(&mgr.snapshot_state(j.next_seq())).expect("snapshot");
+        }
+    }
+    (t, schedule, offsets)
+}
+
+#[test]
+fn corpus_truncated_length_prefix_is_a_counted_truncation() {
+    let dir = fresh_dir("corpus-lenprefix");
+    let (t, _schedule, _offsets) = seed_journal(&dir, 3, None);
+    // A crash mid-header: 4 of the 8 length/CRC bytes made it to disk.
+    let seg = newest_segment(&dir);
+    let mut bytes = std::fs::read(&seg).expect("read segment");
+    bytes.extend_from_slice(&[0x05, 0, 0, 0]);
+    std::fs::write(&seg, &bytes).expect("write segment");
+    let rec = journal::load(JournalConfig::new(&dir), t.fingerprint()).expect("load");
+    assert_eq!(rec.tail.len(), 3, "all full records survive");
+    assert_eq!(rec.tail_truncations, 1);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corpus_flipped_crc_byte_drops_exactly_the_damaged_record() {
+    let dir = fresh_dir("corpus-crc");
+    let (t, _schedule, offsets) = seed_journal(&dir, 3, None);
+    let seg = newest_segment(&dir);
+    let mut bytes = std::fs::read(&seg).expect("read segment");
+    // Flip one payload byte inside the last record.
+    let at = offsets[1] as usize + 12;
+    bytes[at] ^= 0x40;
+    std::fs::write(&seg, &bytes).expect("write segment");
+    let rec = journal::load(JournalConfig::new(&dir), t.fingerprint()).expect("load");
+    assert_eq!(rec.tail.len(), 2, "the damaged record and nothing before it is dropped");
+    assert_eq!(rec.tail_truncations, 1);
+    // The torn tail was physically truncated: a second load is clean.
+    let rec = journal::load(JournalConfig::new(&dir), t.fingerprint()).expect("reload");
+    assert_eq!(rec.tail.len(), 2);
+    assert_eq!(rec.tail_truncations, 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corpus_duplicated_record_is_untrusted_tail_not_a_panic() {
+    let dir = fresh_dir("corpus-dup");
+    let (t, _schedule, offsets) = seed_journal(&dir, 3, None);
+    let seg = newest_segment(&dir);
+    let mut bytes = std::fs::read(&seg).expect("read segment");
+    // Re-append the last record verbatim (restored backup, tooling bug):
+    // its sequence number repeats, so it must be dropped as tail.
+    let dup = bytes[offsets[1] as usize..offsets[2] as usize].to_vec();
+    bytes.extend_from_slice(&dup);
+    std::fs::write(&seg, &bytes).expect("write segment");
+    let rec = journal::load(JournalConfig::new(&dir), t.fingerprint()).expect("load");
+    assert_eq!(rec.tail.len(), 3, "the original records all survive");
+    assert_eq!(rec.tail_truncations, 1);
+    assert_eq!(rec.journal.next_seq(), 3);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corpus_fingerprint_mismatches_are_hard_typed_errors() {
+    // Segment from another fabric.
+    let dir = fresh_dir("corpus-fp-seg");
+    let (_t, _schedule, _offsets) = seed_journal(&dir, 2, None);
+    let other = PgftParams::small().build();
+    let err = journal::load(JournalConfig::new(&dir), other.fingerprint())
+        .expect_err("foreign segment must not load");
+    assert!(matches!(err, JournalError::Mismatch { .. }), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+    // Snapshot from another fabric (checked before any segment).
+    let dir = fresh_dir("corpus-fp-snap");
+    let (_t, _schedule, _offsets) = seed_journal(&dir, 2, Some(2));
+    let err = journal::load(JournalConfig::new(&dir), other.fingerprint())
+        .expect_err("foreign snapshot must not load");
+    assert!(matches!(err, JournalError::Mismatch { .. }), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corpus_corrupt_snapshot_falls_back_to_journal_replay() {
+    let dir = fresh_dir("corpus-snapcrc");
+    let (t, schedule, _offsets) = seed_journal(&dir, 4, Some(2));
+    // Damage the snapshot body: its CRC fails, it is skipped, and the
+    // journal alone reconverges from sequence 0.
+    let snap = std::fs::read_dir(&dir)
+        .expect("read dir")
+        .map(|e| e.expect("entry").path())
+        .find(|p| p.extension().is_some_and(|x| x == "snap"))
+        .expect("snapshot present");
+    let mut bytes = std::fs::read(&snap).expect("read snapshot");
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x01;
+    std::fs::write(&snap, &bytes).expect("write snapshot");
+    let cfg = ManagerConfig {
+        gate: true,
+        ..Default::default()
+    };
+    let (mgr, _j, info) =
+        FabricManager::resume_from_dir(t.clone(), cfg, JournalConfig::new(&dir))
+            .expect("resume past the bad snapshot");
+    assert!(info.cold_start, "no usable snapshot remains");
+    assert_eq!(info.snapshots_skipped, 1);
+    assert_eq!(info.replayed_events, schedule.len() as u64);
+    let mut clean = FabricManager::new(t, ManagerConfig::default());
+    for e in &schedule {
+        clean.apply(e);
+    }
+    assert_eq!(mgr.current().1.raw(), clean.current().1.raw());
+    assert_eq!(mgr.dead_equipment(), clean.dead_equipment());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corpus_empty_dir_is_a_cold_start() {
+    let dir = fresh_dir("corpus-empty");
+    let t = PgftParams::fig1().build();
+    let rec = journal::load(JournalConfig::new(&dir), t.fingerprint()).expect("load empty");
+    assert!(rec.snapshot.is_none());
+    assert!(rec.tail.is_empty());
+    assert_eq!(rec.journal.next_seq(), 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------
+// No durability tax without a journal
+// ---------------------------------------------------------------------
+
+#[test]
+fn unjournaled_apply_path_is_byte_identical_to_the_plain_gate() {
+    let t = PgftParams::fig1().build();
+    let mut rng = Rng::new(0x0F0F);
+    let schedule = random_schedule(&t, &mut rng, 12, 1, 4);
+    let cfg = ManagerConfig {
+        gate: true,
+        ..Default::default()
+    };
+    let mut a = FabricManager::new(t.clone(), cfg.clone());
+    let mut b = FabricManager::new(t, cfg);
+    for batch in schedule.chunks(3) {
+        let ra = a.try_apply_batch(batch).map(|r| r.epoch).map_err(|q| q.reason.tag());
+        let rb = b
+            .try_apply_batch_journaled(batch, None)
+            .map(|r| r.epoch)
+            .map_err(|q| q.reason.tag());
+        assert_eq!(ra, rb, "journal=None must not change the gate's outcome");
+        assert_eq!(a.current().1.raw(), b.current().1.raw());
+    }
+    assert_eq!(a.metrics.journal_appends, 0);
+    assert_eq!(b.metrics.journal_appends, 0);
+    assert_eq!(b.metrics.journal_bytes, 0);
+}
